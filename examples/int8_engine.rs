@@ -1,0 +1,88 @@
+//! **int8 engine study**: the deployment simulator in isolation —
+//! latency/throughput of integer-only inference vs the PJRT f32 forward,
+//! model-size accounting, and fake-quant agreement.
+//!
+//!   cargo run --release --example int8_engine -- [--model M] [--mode MODE]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use fat::coordinator::Pipeline;
+use fat::data::{Batcher, Split};
+use fat::quant::export::QuantMode;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&[]);
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(fat::artifacts_dir);
+    let model = args.get_or("model", "mobilenet_v2_mini");
+    let mode = QuantMode::parse(args.get_or("mode", "sym_vector"))?;
+    let val = args.usize_or("val", 300);
+
+    let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu()?)));
+    let p = Pipeline::new(reg, &artifacts, model)?;
+
+    println!("=== int8 engine: {model} [{}] ===", mode.name());
+    let stats = p.calibrate(100)?;
+    let trained = p.identity_trained(mode);
+    let qm = p.export_int8(mode, &stats, &trained)?;
+
+    // model size: int8 weights + int32 biases vs f32 weights
+    let f32_bytes: usize =
+        p.weights.values().map(|t| t.len() * 4).sum();
+    println!(
+        "model size: f32 {:.1} KiB → int8 {:.1} KiB ({:.2}x smaller)",
+        f32_bytes as f64 / 1024.0,
+        qm.param_bytes as f64 / 1024.0,
+        f32_bytes as f64 / qm.param_bytes as f64
+    );
+
+    // agreement with the fake-quant AOT path
+    let tr0 = p.identity_trainables(mode)?;
+    let fake = p.quant_accuracy(mode, &stats, &tr0, val)?;
+    let engine = fat::coordinator::experiments::int8_accuracy(&qm, val)?;
+    println!(
+        "accuracy: fake-quant (XLA) {:.2}%  vs int8 engine {:.2}%",
+        fake * 100.0,
+        engine * 100.0
+    );
+
+    // throughput: integer engine vs PJRT f32 forward
+    let batcher = Batcher::new(Split::Val, (0..200u64).collect(), 50);
+    let batches: Vec<_> = batcher.epoch(0);
+
+    let t = Instant::now();
+    for (x, _) in &batches {
+        let _ = qm.run_batch(x)?;
+    }
+    let int8_ips = 200.0 / t.elapsed().as_secs_f64();
+
+    let art = p.artifact("fp_forward")?;
+    // fp_forward expects batch 100; re-batch accordingly
+    let b100 = Batcher::new(Split::Val, (0..200u64).collect(), 100);
+    let t = Instant::now();
+    for (x, _) in b100.epoch_iter(0) {
+        let inputs = fat::coordinator::marshal::build_inputs(
+            &art.manifest,
+            &[
+                fat::coordinator::marshal::Group::Map(&p.weights),
+                fat::coordinator::marshal::Group::Single(&x),
+            ],
+        )?;
+        let _ = art.execute(&inputs)?;
+    }
+    let f32_ips = 200.0 / t.elapsed().as_secs_f64();
+
+    println!(
+        "throughput: int8 engine {int8_ips:.1} img/s  |  PJRT f32 {f32_ips:.1} img/s"
+    );
+    println!("(XLA fuses + vectorises the f32 path; the int8 engine models a \
+              mobile integer-only target — compare its accuracy, size and \
+              integer-arithmetic properties, not absolute CPU speed)");
+    Ok(())
+}

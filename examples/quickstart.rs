@@ -1,0 +1,121 @@
+//! **Quickstart — the end-to-end driver** (DESIGN.md §5).
+//!
+//! Runs the complete FAT system on a real small workload, proving all
+//! three layers compose:
+//!
+//!   1. load the pretrained FP model + AOT artifacts (L2/L1 products)
+//!   2. evaluate FP accuracy through the PJRT runtime
+//!   3. calibrate on the paper's 100 training images
+//!   4. quantize (vector, asymmetric) without fine-tuning
+//!   5. FAT fine-tune: RMSE distillation on the unlabeled 10% subset,
+//!      Adam on threshold scales, cosine annealing with optimizer reset
+//!   6. re-evaluate, export the int8 model, run it on the integer-only
+//!      engine (the mobile-deployment simulator), report the ladder.
+//!
+//!   cargo run --release --example quickstart -- [--full]
+//!
+//! `--full` uses the paper's schedule (6 epochs); the default is a
+//! shortened schedule sized for the single-core CI box. Results land in
+//! EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::quant::export::QuantMode;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["full"]);
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(fat::artifacts_dir);
+    let model = args.get_or("model", "mnas_mini_10");
+    let mode = QuantMode::parse(args.get_or("mode", "asym_vector"))?;
+
+    let mut cfg = PipelineConfig::default();
+    cfg.model = model.to_string();
+    cfg.mode = mode.name().to_string();
+    if !args.flag("full") {
+        cfg = cfg.fast();
+        cfg.max_steps = args.usize_or("max-steps", 60);
+    }
+    cfg.val_images = args.usize_or("val", cfg.val_images);
+
+    println!("=== FAT quickstart: {model} [{}] ===", mode.name());
+    let rt = Arc::new(Runtime::cpu()?);
+    println!(
+        "PJRT platform: {} ({} device)",
+        rt.platform(),
+        rt.device_count()
+    );
+    let reg = Arc::new(Registry::new(rt));
+    let p = Pipeline::new(reg, &artifacts, model)?;
+
+    // 1-2: FP baseline through the AOT fp_forward artifact
+    let t = Instant::now();
+    let fp = p.fp_accuracy(cfg.val_images)?;
+    println!(
+        "[1] FP accuracy        {:.2}%   ({:.1}s)",
+        fp * 100.0,
+        t.elapsed().as_secs_f64()
+    );
+
+    // 3: calibration (paper: 100 images from the train set, unlabeled)
+    let t = Instant::now();
+    let stats = p.calibrate(cfg.calib_images)?;
+    println!(
+        "[2] calibrated {} images → {} sites ({:.1}s)",
+        cfg.calib_images,
+        stats.site_minmax.len(),
+        t.elapsed().as_secs_f64()
+    );
+
+    // 4: quantization without fine-tuning
+    let tr0 = p.identity_trainables(mode)?;
+    let q0 = p.quant_accuracy(mode, &stats, &tr0, cfg.val_images)?;
+    println!("[3] quant, no finetune {:.2}%", q0 * 100.0);
+
+    // 5: FAT fine-tuning (RMSE distillation, unlabeled)
+    let t = Instant::now();
+    let (tr, losses) = p.finetune(mode, &stats, &cfg, |step, loss, _lr| {
+        if step % 20 == 0 {
+            println!("      step {step:>4}  rmse {loss:.4}");
+        }
+    })?;
+    println!(
+        "[4] FAT fine-tune: {} steps, rmse {:.4} → {:.4} ({:.1}s)",
+        losses.len(),
+        losses.first().unwrap_or(&0.0),
+        losses.last().unwrap_or(&0.0),
+        t.elapsed().as_secs_f64()
+    );
+
+    // 6: re-evaluate + int8 deployment
+    let q1 = p.quant_accuracy(mode, &stats, &tr, cfg.val_images)?;
+    println!("[5] quant, FAT         {:.2}%", q1 * 100.0);
+
+    let trained = p.trained_of_map(mode, &tr)?;
+    let qm = p.export_int8(mode, &stats, &trained)?;
+    let t = Instant::now();
+    let val8 = cfg.val_images.clamp(100, 500);
+    let a8 = fat::coordinator::experiments::int8_accuracy(&qm, val8)?;
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "[6] int8 engine        {:.2}%  ({} int8 param bytes, {:.1} img/s)",
+        a8 * 100.0,
+        qm.param_bytes,
+        val8 as f64 / dt
+    );
+
+    println!("\nladder: FP {:.2} → no-FT {:.2} → FAT {:.2} → int8 {:.2}",
+        fp * 100.0, q0 * 100.0, q1 * 100.0, a8 * 100.0);
+    println!(
+        "accuracy drop after FAT: {:.2}% (paper target: < 0.5% at full schedule)",
+        (fp - q1) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,387 @@
+"""AOT artifact builder: the only entry point of the Python build path.
+
+``python -m compile.aot --outdir ../artifacts`` produces everything the Rust
+runtime consumes; after this, Python is never on the request path.
+
+Per model (artifacts/models/<name>/):
+  raw.fatw / folded.fatw      raw and BN-folded weights
+  graph.json / folded.json    graph IR (raw / folded, Rust cross-checks fold)
+  sites.json                  quant sites, channel-stat nodes, orders
+  fp_forward.hlo.txt          teacher/eval forward        (+ .manifest.json)
+  calib_stats.hlo.txt         calibration statistics
+  quant_fwd_<mode>.hlo.txt    fake-quant eval forward, 4 modes
+  train_step_<mode>.hlo.txt   FAT fine-tune step, 4 modes
+  quant_fwd_pw.hlo.txt / train_step_pw.hlo.txt  (§4.2, mobilenet only)
+
+Shared (artifacts/):
+  dataset/{train,val}_{x,y}.npy      cached SynthShapes tensors
+  goldens/*.fatw                     cross-language test vectors
+  manifest.json                      global index of all of the above
+
+HLO *text* is the interchange format (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset as ds
+from . import fatw, graph, interp, models, quantize, train
+
+B_TRAIN = 32
+B_EVAL = 100
+B_CALIB = 25
+
+PW_MODEL = "mobilenet_v2_mini"  # §4.2 experiment target
+
+# Per-model pretraining epochs: tuned for the single-core build box.
+# resnet_mini only feeds the Fig. 1-2 weight histograms, so it trains least.
+EPOCHS = {
+    "mobilenet_v2_mini": 5,
+    "mnas_mini_10": 4,
+    "mnas_mini_13": 4,
+    "resnet_mini": 2,
+}
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _render_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "int8": "i8", "uint8": "u8"}[
+        np.dtype(dt).name
+    ]
+
+
+def _flat_spec(tree) -> list:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [
+        {
+            "name": _render_path(path),
+            "shape": list(leaf.shape),
+            "dtype": _dtype_name(leaf.dtype),
+        }
+        for path, leaf in leaves
+    ]
+
+
+def lower_artifact(outdir: str, name: str, fn, example_args) -> None:
+    """Lower fn(*example_args) to HLO text + a marshalling manifest."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_shape = jax.eval_shape(fn, *example_args)
+    manifest = {
+        "name": name,
+        "inputs": _flat_spec(example_args),
+        "outputs": _flat_spec(out_shape),
+    }
+    with open(os.path.join(outdir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(outdir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"    lowered {name}: {len(text) / 1e6:.2f} MB HLO, "
+        f"{len(manifest['inputs'])} in / {len(manifest['outputs'])} out "
+        f"({time.time() - t0:.1f}s)"
+    )
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def weights_spec(folded_params: dict) -> dict:
+    return {k: sds(v.shape) for k, v in folded_params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Dataset cache
+# ---------------------------------------------------------------------------
+
+def build_dataset(outdir: str):
+    dsdir = os.path.join(outdir, "dataset")
+    os.makedirs(dsdir, exist_ok=True)
+    paths = {
+        "train_x": os.path.join(dsdir, "train_x.npy"),
+        "train_y": os.path.join(dsdir, "train_y.npy"),
+        "val_x": os.path.join(dsdir, "val_x.npy"),
+        "val_y": os.path.join(dsdir, "val_y.npy"),
+    }
+    if all(os.path.exists(p) for p in paths.values()):
+        return {k: np.load(p) for k, p in paths.items()}
+    print("  generating SynthShapes dataset ...")
+    chunks_x, chunks_y = [], []
+    for lo in range(0, ds.TRAIN_SIZE, 512):
+        x, y = ds.train_batch(np.arange(lo, min(lo + 512, ds.TRAIN_SIZE)))
+        chunks_x.append(x)
+        chunks_y.append(y)
+    tx, ty = np.concatenate(chunks_x), np.concatenate(chunks_y)
+    chunks_x, chunks_y = [], []
+    for lo in range(0, ds.VAL_SIZE, 512):
+        x, y = ds.val_batch(np.arange(lo, min(lo + 512, ds.VAL_SIZE)))
+        chunks_x.append(x)
+        chunks_y.append(y)
+    vx, vy = np.concatenate(chunks_x), np.concatenate(chunks_y)
+    np.save(paths["train_x"], tx)
+    np.save(paths["train_y"], ty)
+    np.save(paths["val_x"], vx)
+    np.save(paths["val_y"], vy)
+    return {"train_x": tx, "train_y": ty, "val_x": vx, "val_y": vy}
+
+
+# ---------------------------------------------------------------------------
+# Per-model build
+# ---------------------------------------------------------------------------
+
+def build_model(outdir: str, name: str, data, epochs: int) -> dict:
+    mdir = os.path.join(outdir, "models", name)
+    os.makedirs(mdir, exist_ok=True)
+    g = models.ZOO[name]()
+
+    ck = os.path.join(mdir, "pretrained.npz")
+    if os.path.exists(ck):
+        z = np.load(ck)
+        params = {k: z[k] for k in z.files if k != "__acc__"}
+        acc = float(z["__acc__"]) if "__acc__" in z.files else -1.0
+        print(f"  [{name}] cached pretrained model (val_acc={acc:.4f})")
+    else:
+        ep = epochs if epochs > 0 else EPOCHS.get(name, 4)
+        print(f"  [{name}] pretraining ({ep} epochs) ...")
+        params = graph.init_params(g, seed=abs(hash(name)) % (2**31))
+        params, acc = train.pretrain(
+            g,
+            params,
+            (data["train_x"], data["train_y"]),
+            (data["val_x"], data["val_y"]),
+            epochs=ep,
+        )
+        np.savez(ck, __acc__=np.float32(acc), **params)
+
+    fg, fparams = graph.fold_bn(g, params)
+    fatw.write(os.path.join(mdir, "raw.fatw"), params)
+    fatw.write(os.path.join(mdir, "folded.fatw"), fparams)
+    with open(os.path.join(mdir, "graph.json"), "w") as f:
+        f.write(g.to_json())
+    with open(os.path.join(mdir, "folded.json"), "w") as f:
+        f.write(fg.to_json())
+
+    sites = interp.enumerate_sites(fg)
+    ch_nodes = interp.channel_stat_nodes(fg)
+    with open(os.path.join(mdir, "sites.json"), "w") as f:
+        json.dump(
+            {
+                "sites": [{"id": s, "unsigned": u} for s, u in sites],
+                "channel_stats": [
+                    {"id": nid, "channels": c} for nid, c in ch_nodes
+                ],
+                "weight_order": graph.folded_weight_order(fg),
+                "trainable_order": {
+                    cfg.name: sorted(quantize.trainable_init(fg, cfg))
+                    for cfg in quantize.MODES.values()
+                },
+                "val_acc_fp_pretrain": acc,
+            },
+            f,
+            indent=1,
+        )
+
+    wspec = weights_spec(fparams)
+    xs_train = sds((B_TRAIN, ds.IMG, ds.IMG, ds.CHANNELS))
+    xs_eval = sds((B_EVAL, ds.IMG, ds.IMG, ds.CHANNELS))
+    xs_calib = sds((B_CALIB, ds.IMG, ds.IMG, ds.CHANNELS))
+    act_t = sds((len(sites), 2))
+    scalar = sds(())
+
+    lower_artifact(
+        mdir,
+        "fp_forward",
+        lambda w, x: interp.forward(fg, w, x),
+        (wspec, xs_eval),
+    )
+    lower_artifact(
+        mdir, "calib_stats", train.make_calib_stats(fg), (wspec, xs_calib)
+    )
+    lower_artifact(
+        mdir,
+        "calib_hist",
+        train.make_calib_hist(fg),
+        (wspec, act_t, xs_calib),
+    )
+
+    for cfg in quantize.MODES.values():
+        tr0 = quantize.trainable_init(fg, cfg)
+        trs = jax.tree_util.tree_map(lambda a: sds(a.shape), tr0)
+        lower_artifact(
+            mdir,
+            f"quant_fwd_{cfg.name}",
+            lambda w, t, tr, x, cfg=cfg: quantize.quant_forward(
+                fg, cfg, w, t, tr, x
+            ),
+            (wspec, act_t, trs, xs_eval),
+        )
+        lower_artifact(
+            mdir,
+            f"train_step_{cfg.name}",
+            train.make_fat_step(fg, cfg),
+            (wspec, act_t, trs, trs, trs, scalar, scalar, xs_train),
+        )
+
+    if name == PW_MODEL:
+        cfg = quantize.MODES["sym_scalar"]
+        pw0 = quantize.pointwise_init(fg, fparams)
+        pws = jax.tree_util.tree_map(lambda a: sds(a.shape), pw0)
+        lower_artifact(
+            mdir,
+            "quant_fwd_pw",
+            lambda w, t, pw, x: quantize.quant_forward_pointwise(
+                fg, cfg, w, t, pw, x
+            ),
+            (wspec, act_t, pws, xs_eval),
+        )
+        lower_artifact(
+            mdir,
+            "train_step_pw",
+            train.make_pointwise_step(fg, cfg),
+            (wspec, act_t, pws, pws, pws, scalar, scalar, xs_train),
+        )
+
+    return {"graph": fg, "folded": fparams, "sites": sites, "acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Cross-language goldens
+# ---------------------------------------------------------------------------
+
+def build_goldens(outdir: str, built: dict, data) -> None:
+    gdir = os.path.join(outdir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+
+    # 1. dataset bit-exactness
+    gx, gy = ds.train_batch(np.arange(4))
+    vx4, _ = ds.val_batch(np.arange(4))
+    fatw.write(
+        os.path.join(gdir, "dataset.fatw"),
+        {"train4_x": gx, "train4_y": gy.astype(np.int32), "val4_x": vx4},
+    )
+
+    # 2. fake-quant kernel goldens (for the Rust quant module)
+    from .kernels import ref
+
+    rs = np.random.RandomState(7)
+    x = rs.normal(0, 1.2, (64, 32)).astype(np.float32)
+    tch = np.abs(rs.normal(1.0, 0.3, (32,))).astype(np.float32) + 0.2
+    fatw.write(
+        os.path.join(gdir, "fq.fatw"),
+        {
+            "x": x,
+            "t_ch": tch,
+            "sym_127_y": np.asarray(ref.fq_sym(x, 1.7)),
+            "sym_u8_y": np.asarray(ref.fq_sym(np.abs(x), 2.1, unsigned=True)),
+            "sym_ch_y": np.asarray(ref.fq_sym_ch(x, tch)),
+            "asym_y": np.asarray(ref.fq_asym(x, -0.9, 3.3)),
+        },
+    )
+
+    # 3. per-model: fp logits + calib stats + quant logits on fixed batches
+    for name, info in built.items():
+        fg, fparams = info["graph"], info["folded"]
+        xb = data["val_x"][:B_EVAL]
+        logits = np.asarray(interp.forward(fg, fparams, xb))
+        cb = data["train_x"][:B_CALIB]
+        site_mm, ch = train.make_calib_stats(fg)(fparams, cb)
+        tens = {
+            "x": xb,
+            "fp_logits": logits,
+            "calib_x": cb,
+            "site_minmax": np.asarray(site_mm),
+        }
+        for k, v in ch.items():
+            tens[k.replace(":", "_")] = np.asarray(v)
+        for cfg_name in ("sym_scalar", "asym_vector"):
+            cfg = quantize.MODES[cfg_name]
+            tr0 = quantize.trainable_init(fg, cfg)
+            ql = quantize.quant_forward(fg, cfg, fparams, site_mm, tr0, xb)
+            tens[f"quant_logits_{cfg_name}"] = np.asarray(ql)
+        fatw.write(os.path.join(gdir, f"model_{name}.fatw"), tens)
+        print(f"    goldens for {name} written")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--epochs", type=int, default=0, help="override per-model EPOCHS"
+    )
+    ap.add_argument(
+        "--models", default=",".join(models.ZOO), help="comma-separated subset"
+    )
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    t0 = time.time()
+    data = build_dataset(args.outdir)
+    built = {}
+    for name in args.models.split(","):
+        built[name] = build_model(args.outdir, name, data, args.epochs)
+    if not args.skip_goldens:
+        build_goldens(args.outdir, built, data)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "models": {
+                    n: {"val_acc_fp": b["acc"], "num_sites": len(b["sites"])}
+                    for n, b in built.items()
+                },
+                "batch_sizes": {
+                    "train": B_TRAIN,
+                    "eval": B_EVAL,
+                    "calib": B_CALIB,
+                },
+                "dataset": {
+                    "train_size": ds.TRAIN_SIZE,
+                    "val_size": ds.VAL_SIZE,
+                    "calib_size": ds.CALIB_SIZE,
+                    "img": ds.IMG,
+                    "num_classes": ds.NUM_CLASSES,
+                },
+            },
+            f,
+            indent=1,
+        )
+    print(f"artifacts built in {time.time() - t0:.1f}s -> {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""SynthShapes: deterministic procedural image-classification dataset.
+
+Stands in for ImageNet-2012 in the FAT reproduction (see DESIGN.md §2).
+10 classes of procedural 32x32x3 images: per-sample background gradient,
+one class-determined foreground pattern, per-pixel noise, and sparse x3
+"outlier" pixels that induce the activation/weight outliers the paper's
+threshold-training targets (paper Fig. 1).
+
+Bit-exactly mirrored by ``rust/src/data/synth.rs``: identical hash keys,
+identical f32 formula order, no transcendental functions (only + - * /,
+floor, abs, min/max, comparisons — all IEEE-exact).
+
+Dataset regions (by seed): train=0x5EED_0001, val=0x5EED_0002. The paper's
+"~10% of ImageNet" becomes a 10% index-stride subset of train; its "100
+calibration images" are train indices 0..100.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import prng
+
+IMG = 32
+CHANNELS = 3
+NUM_CLASSES = 10
+
+SEED_TRAIN = 0x5EED0001
+SEED_VAL = 0x5EED0002
+
+TRAIN_SIZE = 12000
+VAL_SIZE = 2000
+CALIB_SIZE = 100
+FINETUNE_FRACTION = 10  # every 10th train image => the paper's "~10%"
+
+# Parameter slots (must match rust/src/data/synth.rs)
+S_BG = 0  # 9 consecutive slots: background plane coefficients
+S_CX, S_CY, S_R = 9, 10, 11
+S_FG = 12  # 3 consecutive slots: foreground colour
+S_FREQ = 15
+S_EDGE = 16
+
+
+def _params(seed: int, idx: np.ndarray):
+    """Draw all scalar per-sample parameters. idx: (B,) u64."""
+    bg = np.stack(
+        [prng.uniform(seed, idx, S_BG + k) for k in range(9)], axis=-1
+    )  # (B, 9)
+    cx = prng.uniform_range(0.30, 0.70, seed, idx, S_CX)
+    cy = prng.uniform_range(0.30, 0.70, seed, idx, S_CY)
+    r = prng.uniform_range(0.12, 0.30, seed, idx, S_R)
+    fg = np.stack(
+        [
+            prng.uniform_range(0.35, 1.0, seed, idx, S_FG + k)
+            for k in range(CHANNELS)
+        ],
+        axis=-1,
+    )  # (B, 3)
+    freq = np.float32(3.0) + np.floor(
+        prng.uniform(seed, idx, S_FREQ) * np.float32(3.0)
+    )  # 3, 4 or 5
+    edge = prng.uniform_range(0.55, 0.95, seed, idx, S_EDGE)
+    return bg, cx, cy, r, fg, freq, edge
+
+
+def _frac(x: np.ndarray) -> np.ndarray:
+    return x - np.floor(x)
+
+
+def _mask(label, u, v, cx, cy, r, freq, edge):
+    """Class-conditional foreground mask. All inputs f32, broadcast (B,H,W)."""
+    du = u - cx
+    dv = v - cy
+    adu = np.abs(du)
+    adv = np.abs(dv)
+    d2 = du * du + dv * dv
+    r2 = r * r
+    half = np.float32(0.5)
+
+    box = np.maximum(adu, adv) < r * np.float32(1.1)
+    m0 = d2 < r2  # circle
+    m1 = np.maximum(adu, adv) < r * np.float32(0.9)  # square
+    m2 = (adu + adv) < r * np.float32(1.2)  # diamond
+    m3 = (d2 < r2) & (d2 > r2 * np.float32(0.3))  # ring
+    m4 = ((adu < r * np.float32(0.32)) | (adv < r * np.float32(0.32))) & (
+        np.maximum(adu, adv) < r
+    )  # cross
+    m5 = (_frac(v * freq) < half) & box  # h-stripes
+    m6 = (_frac(u * freq) < half) & box  # v-stripes
+    m7 = (_frac((np.floor(u * freq) + np.floor(v * freq)) * half) < np.float32(0.25)) & box  # checker
+    gx = _frac(u * freq) - half
+    gy = _frac(v * freq) - half
+    m8 = ((gx * gx + gy * gy) < np.float32(0.06)) & box  # dot grid
+    m9 = (
+        (dv > -r)
+        & (dv < r)
+        & (adu < (dv + r) * edge * half)
+    )  # triangle (widening downward)
+
+    masks = [m0, m1, m2, m3, m4, m5, m6, m7, m8, m9]
+    out = np.zeros_like(m0)
+    for k in range(NUM_CLASSES):
+        out = np.where(label == k, masks[k], out)
+    return out
+
+
+def generate(seed: int, indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Render images for `indices` (u64 array). Returns (B,H,W,C) f32, (B,) i32.
+
+    Labels are `index % 10` (balanced classes under any contiguous range).
+    """
+    idx = np.asarray(indices, dtype=np.uint64)
+    B = idx.shape[0]
+    labels = (idx % np.uint64(NUM_CLASSES)).astype(np.int32)
+
+    bg, cx, cy, r, fg, freq, edge = _params(seed, idx)
+
+    xs = np.arange(IMG, dtype=np.uint64)
+    ys = np.arange(IMG, dtype=np.uint64)
+    # pixel centre coordinates, f32-exact: (k + 0.5) * (1/32)
+    u = (xs.astype(np.float32) + np.float32(0.5)) * np.float32(1.0 / IMG)
+    v = (ys.astype(np.float32) + np.float32(0.5)) * np.float32(1.0 / IMG)
+    u = u[None, None, :]  # (1,1,W)
+    v = v[None, :, None]  # (1,H,1)
+
+    def bc(a):  # (B,) -> (B,1,1)
+        return a[:, None, None]
+
+    lab_b = bc(labels)
+    mask = _mask(
+        lab_b, u, v, bc(cx), bc(cy), bc(r), bc(freq), bc(edge)
+    )  # (B,H,W)
+
+    img = np.empty((B, IMG, IMG, CHANNELS), dtype=np.float32)
+    for ch in range(CHANNELS):
+        a = bc(bg[:, 3 * ch + 0])
+        b = bc(bg[:, 3 * ch + 1])
+        c = bc(bg[:, 3 * ch + 2])
+        base = np.float32(0.15) + np.float32(0.5) * (a * u + b * v + c * (u * v))
+        f = bc(fg[:, ch])
+        pix = np.where(mask, f, base)
+        img[..., ch] = pix
+
+    # Per-pixel noise + sparse outliers (slots keyed by pixel coordinate).
+    xg = xs[None, None, :, None]
+    yg = ys[None, :, None, None]
+    cg = np.arange(CHANNELS, dtype=np.uint64)[None, None, None, :]
+    ib = idx[:, None, None, None]
+    noise = prng.uniform(seed, ib, prng.SLOT_NOISE, xg, yg, cg)
+    img += (noise - np.float32(0.5)) * np.float32(0.12)
+
+    out_draw = prng.uniform(seed, ib, prng.SLOT_OUTLIER, xg, yg, np.uint64(0))
+    outlier = out_draw < np.float32(1.0 / 96.0)
+    img = np.where(outlier, img * np.float32(3.0), img)
+    img = np.minimum(np.maximum(img, np.float32(0.0)), np.float32(3.0))
+    return img, labels
+
+
+def train_batch(indices) -> tuple[np.ndarray, np.ndarray]:
+    return generate(SEED_TRAIN, np.asarray(indices, dtype=np.uint64))
+
+
+def val_batch(indices) -> tuple[np.ndarray, np.ndarray]:
+    return generate(SEED_VAL, np.asarray(indices, dtype=np.uint64))
+
+
+def calib_indices() -> np.ndarray:
+    """The paper's '100 images from the training set used as calibration'."""
+    return np.arange(CALIB_SIZE, dtype=np.uint64)
+
+
+def finetune_indices() -> np.ndarray:
+    """~10% unlabeled subset of train (paper §4.1.2)."""
+    return np.arange(0, TRAIN_SIZE, FINETUNE_FRACTION, dtype=np.uint64)

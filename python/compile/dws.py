@@ -1,0 +1,125 @@
+"""§3.3 reference: mutual rescaling of DWS -> [ReLU/ReLU6] -> Conv weights.
+
+Equalises per-filter quantization thresholds of a depth-wise layer by
+scaling filter k by s_k and dividing input channel k of the following 1x1
+convolution by s_k. With ReLU6 the scaling must respect the saturation
+plateau (paper eq. 26-27): channels whose calibrated pre-activation max
+approaches 6.0 are *locked* (LOCK_LIMIT = 5.9), and scale factors of free
+channels are capped so scaled outputs stay below 6.0.
+
+This is the build-time/test reference; the runtime implementation is
+``rust/src/quant/dws.rs`` (golden-tested against this one).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import GraphDef
+from .interp import consumers
+
+LOCK_LIMIT = 5.9
+RELU6_CAP = 6.0
+SCALE_MIN = 1.0 / 64.0
+SCALE_MAX = 64.0
+
+
+def find_patterns(g: GraphDef) -> list:
+    """Return [(dw_id, act_id, conv_id, act_op)] for DWS->act->1x1-conv
+    chains where the act output feeds only that conv (folded graph)."""
+    cons = consumers(g)
+    out = []
+    for n in g.nodes:
+        if n.op != "dwconv":
+            continue
+        cs = cons[n.id]
+        if len(cs) != 1 or cs[0].op not in ("relu", "relu6"):
+            continue
+        act = cs[0]
+        cs2 = cons[act.id]
+        if len(cs2) != 1 or cs2[0].op != "conv" or cs2[0].attrs["k"] != 1:
+            continue
+        out.append((n.id, act.id, cs2[0].id, act.op))
+    return out
+
+
+def rescale_pattern(
+    w_dw: np.ndarray,
+    b_dw: np.ndarray,
+    w_conv: np.ndarray,
+    ch_max: np.ndarray,
+    relu6: bool,
+) -> tuple:
+    """Compute and apply per-channel scales for one pattern.
+
+    w_dw: (k,k,C), b_dw: (C,), w_conv: (1,1,C,Cout), ch_max: (C,) calibrated
+    per-channel pre-activation maxima of the DWS output.
+    Returns (w_dw', b_dw', w_conv', scales, locked_mask).
+    """
+    c = w_dw.shape[-1]
+    t_k = np.abs(w_dw).reshape(-1, c).max(axis=0)  # paper step 1
+    t_k = np.maximum(t_k, 1e-12)
+
+    if relu6:
+        locked = ch_max >= LOCK_LIMIT  # steps 2-3
+    else:
+        locked = np.zeros(c, dtype=bool)  # ReLU is scale-equivariant
+
+    if locked.any():
+        t0 = float(t_k[locked].mean())  # step 4
+    else:
+        t0 = float(t_k.mean())
+
+    s = np.where(locked, 1.0, t0 / t_k)  # step 5
+    if relu6:
+        cap = RELU6_CAP / np.maximum(ch_max, 1e-12)  # step 6
+        s = np.where(locked, 1.0, np.minimum(s, cap))
+    s = np.clip(s, SCALE_MIN, SCALE_MAX).astype(np.float32)
+    s = np.where(locked, np.float32(1.0), s)
+
+    w_dw2 = (w_dw * s).astype(np.float32)
+    b_dw2 = (b_dw * s).astype(np.float32)
+    w_conv2 = (w_conv / s[None, None, :, None]).astype(np.float32)
+    return w_dw2, b_dw2, w_conv2, s, locked
+
+
+def rescale_model(g: GraphDef, params: dict, ch_max: dict) -> tuple:
+    """Apply §3.3 to every pattern. ch_max: {dw_node_id: (C,) max}.
+
+    Returns (new_params, report) where report lists per-pattern stats.
+    """
+    p = dict(params)
+    report = []
+    for dw_id, _act, conv_id, act_op in find_patterns(g):
+        w_dw, b_dw, w_conv, s, locked = rescale_pattern(
+            p[f"{dw_id}.w"],
+            p[f"{dw_id}.b"],
+            p[f"{conv_id}.w"],
+            np.asarray(ch_max[dw_id]),
+            relu6=(act_op == "relu6"),
+        )
+        p[f"{dw_id}.w"] = w_dw
+        p[f"{dw_id}.b"] = b_dw
+        p[f"{conv_id}.w"] = w_conv
+        spread_before = _spread(params[f"{dw_id}.w"])
+        spread_after = _spread(w_dw)
+        report.append(
+            {
+                "dw": dw_id,
+                "conv": conv_id,
+                "act": act_op,
+                "locked": int(locked.sum()),
+                "channels": len(s),
+                "spread_before": spread_before,
+                "spread_after": spread_after,
+            }
+        )
+    return p, report
+
+
+def _spread(w: np.ndarray) -> float:
+    """max/min ratio of per-filter thresholds — the quantity §3.3 shrinks."""
+    c = w.shape[-1]
+    t = np.abs(w).reshape(-1, c).max(axis=0)
+    t = np.maximum(t, 1e-12)
+    return float(t.max() / t.min())

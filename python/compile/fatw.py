@@ -1,0 +1,56 @@
+"""FATW: tiny named-tensor container shared with Rust (rust/src/model/fatw.rs).
+
+Layout (little-endian):
+  magic  8 bytes  b"FATW0001"
+  count  u32
+  per tensor:
+    name_len u32, name bytes (utf-8)
+    dtype    u8   (0=f32, 1=i8, 2=i32, 3=u8)
+    ndim     u8
+    dims     u32 * ndim
+    data     raw bytes (row-major)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"FATW0001"
+_DTYPES = {np.dtype("float32"): 0, np.dtype("int8"): 1, np.dtype("int32"): 2, np.dtype("uint8"): 3}
+_RDTYPES = {v: k for k, v in _DTYPES.items()}
+
+
+def write(path: str, tensors: dict):
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read(path: str) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = _RDTYPES[dt]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(
+                f.read(n * dtype.itemsize), dtype=dtype
+            ).reshape(dims)
+            out[name] = data
+    return out

@@ -1,0 +1,219 @@
+"""Graph IR: the single source of truth for model topology.
+
+A ``GraphDef`` is a topologically-ordered list of SSA nodes. The same IR is
+
+  * interpreted forward in JAX (``interp.py``) for pretraining, fake-quant
+    fine-tuning and AOT lowering, and
+  * exported as ``graph.json`` and interpreted by the Rust int8 engine
+    (``rust/src/int8/``) and the Rust quant substrate (BN fold, DWS rescale).
+
+Ops: input, conv (k,s, same-pad), dwconv (k,s, depth multiplier 1), dense,
+bn, relu, relu6, add, gap (global average pool). Layout is NHWC; conv
+weights HWIO; dwconv weights HWC (I=1 implied); dense weights IO.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+EPS = 1e-3  # BN epsilon (paper eq. 10-11); shared with Rust
+
+
+@dataclass
+class Node:
+    id: str
+    op: str
+    inputs: list
+    attrs: dict = field(default_factory=dict)
+
+
+@dataclass
+class GraphDef:
+    name: str
+    nodes: list  # topo order; nodes[0].op == 'input'
+    num_classes: int = 10
+
+    def node(self, nid: str) -> Node:
+        return next(n for n in self.nodes if n.id == nid)
+
+    def conv_like(self) -> list:
+        return [n for n in self.nodes if n.op in ("conv", "dwconv", "dense")]
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "name": self.name,
+                "num_classes": self.num_classes,
+                "nodes": [
+                    {"id": n.id, "op": n.op, "inputs": n.inputs, **n.attrs}
+                    for n in self.nodes
+                ],
+            },
+            indent=1,
+        )
+
+
+class Builder:
+    """Small fluent helper for writing model definitions."""
+
+    def __init__(self, name: str):
+        self.nodes = [Node("input", "input", [], {"shape": [32, 32, 3]})]
+        self.name = name
+        self._ctr = {}
+
+    def _nid(self, op: str, hint: str) -> str:
+        if hint is None:
+            k = self._ctr.get(op, 0)
+            self._ctr[op] = k + 1
+            return f"{op}{k}"
+        key = (hint, op)
+        k = self._ctr.get(key, 0)
+        self._ctr[key] = k + 1
+        return f"{hint}_{op}" if k == 0 else f"{hint}_{op}{k}"
+
+    def add_node(self, op, inputs, hint=None, **attrs) -> str:
+        nid = self._nid(op, hint)
+        self.nodes.append(Node(nid, op, list(inputs), attrs))
+        return nid
+
+    def conv(self, x, cin, cout, k=3, stride=1, bn=True, act="relu6", hint=None):
+        h = hint or f"c{len(self.nodes)}"
+        x = self.add_node(
+            "conv", [x], hint=h, k=k, stride=stride, cin=cin, cout=cout
+        )
+        if bn:
+            x = self.add_node("bn", [x], hint=h, ch=cout)
+        if act:
+            x = self.add_node(act, [x], hint=h)
+        return x
+
+    def dwconv(self, x, ch, k=3, stride=1, bn=True, act="relu6", hint=None):
+        h = hint or f"d{len(self.nodes)}"
+        x = self.add_node("dwconv", [x], hint=h, k=k, stride=stride, ch=ch)
+        if bn:
+            x = self.add_node("bn", [x], hint=h, ch=ch)
+        if act:
+            x = self.add_node(act, [x], hint=h)
+        return x
+
+    def add(self, a, b, hint=None):
+        return self.add_node("add", [a, b], hint=hint or f"a{len(self.nodes)}")
+
+    def head(self, x, cin, num_classes=10):
+        x = self.add_node("gap", [x], hint="head")
+        x = self.add_node(
+            "dense", [x], hint="head", cin=cin, cout=num_classes
+        )
+        return x
+
+    def build(self, num_classes=10) -> GraphDef:
+        return GraphDef(self.name, self.nodes, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (build-time only; numpy RandomState, not portable)
+# ---------------------------------------------------------------------------
+
+def weight_names(n: Node) -> list:
+    if n.op in ("conv", "dwconv", "dense"):
+        names = [f"{n.id}.w"]
+        if n.attrs.get("bias", False):
+            names.append(f"{n.id}.b")
+        return names
+    if n.op == "bn":
+        return [f"{n.id}.gamma", f"{n.id}.beta", f"{n.id}.mean", f"{n.id}.var"]
+    return []
+
+
+def weight_shape(n: Node, name: str):
+    a = n.attrs
+    if n.op == "conv":
+        return (a["k"], a["k"], a["cin"], a["cout"]) if name.endswith(".w") else (a["cout"],)
+    if n.op == "dwconv":
+        return (a["k"], a["k"], a["ch"]) if name.endswith(".w") else (a["ch"],)
+    if n.op == "dense":
+        return (a["cin"], a["cout"]) if name.endswith(".w") else (a["cout"],)
+    if n.op == "bn":
+        return (a["ch"],)
+    raise ValueError(n.op)
+
+
+def init_params(g: GraphDef, seed: int = 0) -> dict:
+    rs = np.random.RandomState(seed)
+    p = {}
+    for n in g.nodes:
+        for name in weight_names(n):
+            shape = weight_shape(n, name)
+            if name.endswith(".w"):
+                fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+                if n.op == "dwconv":
+                    fan_in = n.attrs["k"] ** 2
+                std = np.sqrt(2.0 / fan_in)
+                p[name] = rs.normal(0, std, shape).astype(np.float32)
+            elif name.endswith((".b", ".beta", ".mean")):
+                p[name] = np.zeros(shape, np.float32)
+            else:  # gamma, var
+                p[name] = np.ones(shape, np.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Batch-norm folding (paper eq. 10-11). Mirrored by rust/src/quant/fold.rs.
+# ---------------------------------------------------------------------------
+
+def fold_bn(g: GraphDef, params: dict):
+    """Return (folded_graph, folded_params).
+
+    Every conv/dwconv followed by a bn absorbs it: W' = gamma*W/sqrt(var+eps),
+    b' = beta - gamma*mean/sqrt(var+eps). Folded conv nodes gain bias=True;
+    bn nodes are removed and their consumers re-wired.
+    """
+    followers = {}
+    for n in g.nodes:
+        if n.op == "bn":
+            followers[n.inputs[0]] = n
+    rewrite = {}
+    new_nodes, new_params = [], {}
+    for n in g.nodes:
+        if n.op == "bn":
+            src = g.node(n.inputs[0])
+            if src.op in ("conv", "dwconv"):
+                rewrite[n.id] = rewrite.get(src.id, src.id)
+                continue  # folded away
+            raise ValueError(f"bn after {src.op} unsupported")
+        inputs = [rewrite.get(i, i) for i in n.inputs]
+        attrs = dict(n.attrs)
+        if n.op in ("conv", "dwconv") and n.id in followers:
+            bn = followers[n.id]
+            gamma = params[f"{bn.id}.gamma"]
+            beta = params[f"{bn.id}.beta"]
+            mean = params[f"{bn.id}.mean"]
+            var = params[f"{bn.id}.var"]
+            scale = gamma / np.sqrt(var + np.float32(EPS))
+            w = params[f"{n.id}.w"]
+            neww = w * scale  # broadcast over last (output-channel) axis
+            newb = beta - gamma * mean / np.sqrt(var + np.float32(EPS))
+            attrs["bias"] = True
+            new_params[f"{n.id}.w"] = neww.astype(np.float32)
+            new_params[f"{n.id}.b"] = newb.astype(np.float32)
+        elif n.op in ("conv", "dwconv", "dense"):
+            attrs["bias"] = True
+            new_params[f"{n.id}.w"] = params[f"{n.id}.w"]
+            new_params[f"{n.id}.b"] = params.get(
+                f"{n.id}.b", np.zeros(weight_shape(n, f"{n.id}.b"), np.float32)
+            )
+        new_nodes.append(Node(n.id, n.op, inputs, attrs))
+    return GraphDef(g.name, new_nodes, g.num_classes), new_params
+
+
+def folded_weight_order(g: GraphDef) -> list:
+    """Canonical (name, ...) order for marshalling folded weights to HLO."""
+    out = []
+    for n in g.nodes:
+        if n.op in ("conv", "dwconv", "dense"):
+            out.append(f"{n.id}.w")
+            out.append(f"{n.id}.b")
+    return out

@@ -1,0 +1,156 @@
+"""Forward interpreter over the Graph IR, with quantization hooks.
+
+One interpreter serves all paths:
+  * FP inference / the distillation teacher (no hooks),
+  * pretraining (bn_mode="train": batch-stats BN, returns new running stats),
+  * the fake-quantized student (weight_hook + act_hook from quantize.py),
+  * calibration statistics (capture dict).
+
+Activation-quantization *sites* follow standard int8 placement (Jacob et
+al., mirrored by the Rust int8 engine): a node output is a site unless it
+is consumed solely by an immediately-following bn/relu/relu6 (the engine
+fuses conv→requant→clamp, so no tensor is materialised between them).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import nn
+from .graph import GraphDef
+
+
+def consumers(g: GraphDef) -> dict:
+    out = {n.id: [] for n in g.nodes}
+    for n in g.nodes:
+        for i in n.inputs:
+            out[i].append(n)
+    return out
+
+
+def enumerate_sites(g: GraphDef) -> list:
+    """Activation quant sites of a *folded* graph: [(node_id, unsigned)]."""
+    cons = consumers(g)
+    sites = []
+    for n in g.nodes:
+        cs = cons[n.id]
+        if len(cs) == 1 and cs[0].op in ("bn", "relu", "relu6"):
+            continue  # fused into the consumer's requant clamp
+        if n.op == "bn":
+            continue
+        unsigned = n.op in ("relu", "relu6", "input") or (
+            n.op == "gap" and _unsigned_src(g, n)
+        )
+        sites.append((n.id, bool(unsigned)))
+    return sites
+
+
+def _unsigned_src(g: GraphDef, n) -> bool:
+    src = g.node(n.inputs[0])
+    return src.op in ("relu", "relu6", "input")
+
+
+def channel_stat_nodes(g: GraphDef) -> list:
+    """Conv-like nodes whose per-channel pre-activation ranges are captured
+    during calibration (needed by §3.3 DWS rescaling and vector-quant
+    diagnostics): [(node_id, channels)]."""
+    out = []
+    for n in g.nodes:
+        if n.op in ("conv", "dwconv"):
+            ch = n.attrs.get("cout", n.attrs.get("ch"))
+            out.append((n.id, int(ch)))
+    return out
+
+
+def forward(
+    g: GraphDef,
+    params: dict,
+    x,
+    *,
+    bn_mode: str = "infer",
+    weight_hook=None,
+    act_hook=None,
+    capture: dict | None = None,
+):
+    """Interpret the graph. Returns logits (and bn stats dict in train mode).
+
+    weight_hook(node, w) -> w' fake-quantizes conv/dwconv/dense weights.
+    act_hook(node_id, t) -> t' fake-quantizes site tensors (only called on
+    sites as defined by enumerate_sites).
+    capture, if given, records per-node statistics for calibration.
+    """
+    site_ids = {s for s, _ in enumerate_sites(g)} if act_hook else set()
+    bn_stats = {}
+
+    def site(nid, t):
+        if capture is not None:
+            _capture(capture, g, nid, t)
+        if nid in site_ids:
+            t = act_hook(nid, t)
+        return t
+
+    vals = {}
+    for n in g.nodes:
+        if n.op == "input":
+            vals[n.id] = site(n.id, x)
+            continue
+        a = vals[n.inputs[0]]
+        if n.op == "conv" or n.op == "dwconv":
+            w = params[f"{n.id}.w"]
+            if weight_hook is not None:
+                w = weight_hook(n, w)
+            y = (
+                nn.conv2d(a, w, n.attrs["stride"])
+                if n.op == "conv"
+                else nn.dwconv2d(a, w, n.attrs["stride"])
+            )
+            if n.attrs.get("bias"):
+                y = y + params[f"{n.id}.b"]
+        elif n.op == "dense":
+            w = params[f"{n.id}.w"]
+            if weight_hook is not None:
+                w = weight_hook(n, w)
+            y = nn.dense(a, w)
+            if n.attrs.get("bias"):
+                y = y + params[f"{n.id}.b"]
+        elif n.op == "bn":
+            if bn_mode == "train":
+                y, m, v = nn.bn_train(
+                    a, params[f"{n.id}.gamma"], params[f"{n.id}.beta"]
+                )
+                bn_stats[n.id] = (m, v)
+            else:
+                y = nn.bn_infer(
+                    a,
+                    params[f"{n.id}.gamma"],
+                    params[f"{n.id}.beta"],
+                    params[f"{n.id}.mean"],
+                    params[f"{n.id}.var"],
+                )
+        elif n.op == "relu":
+            y = nn.relu(a)
+        elif n.op == "relu6":
+            y = nn.relu6(a)
+        elif n.op == "add":
+            y = a + vals[n.inputs[1]]
+        elif n.op == "gap":
+            y = nn.gap(a)
+        else:
+            raise ValueError(f"unknown op {n.op}")
+        vals[n.id] = site(n.id, y)
+
+    logits = vals[g.nodes[-1].id]
+    if bn_mode == "train":
+        return logits, bn_stats
+    return logits
+
+
+def _capture(capture: dict, g: GraphDef, nid: str, t):
+    node = g.node(nid)
+    entry = {}
+    entry["min"] = jnp.min(t)
+    entry["max"] = jnp.max(t)
+    if node.op in ("conv", "dwconv") and t.ndim == 4:
+        entry["ch_min"] = jnp.min(t, axis=(0, 1, 2))
+        entry["ch_max"] = jnp.max(t, axis=(0, 1, 2))
+    capture[nid] = entry

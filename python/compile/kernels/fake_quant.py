@@ -1,0 +1,118 @@
+"""L1 Pallas fake-quantization kernels (forward paths).
+
+These are the hot-spot ops of the FAT training graph: every weight tensor
+and every activation site runs a quantize→clip→dequantize per step. The
+kernels run under ``interpret=True`` (CPU PJRT); on TPU the same BlockSpecs
+tile (rows, lanes) VMEM blocks — see DESIGN.md §Hardware-Adaptation.
+
+Gradient (STE) wrappers live in ``quantize.py``; pure-jnp oracles in
+``ref.py``; pytest/hypothesis compare the two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row tile for the gridded kernels. 256 rows x C lanes keeps each VMEM
+# block ≤ 128 KiB for C ≤ 128 at f32.
+ROWS = 256
+
+
+def _sym_kernel(x_ref, t_ref, o_ref, *, qmax, qmin):
+    t = t_ref[0, 0]
+    s = qmax / t
+    y = jnp.clip(jnp.round(x_ref[...] * s), qmin, qmax) / s
+    o_ref[...] = y
+
+
+def _sym_ch_kernel(x_ref, t_ref, o_ref, *, qmax, qmin):
+    s = qmax / t_ref[0, :]  # (C,) broadcast along rows
+    y = jnp.clip(jnp.round(x_ref[...] * s), qmin, qmax) / s
+    o_ref[...] = y
+
+
+def _asym_kernel(x_ref, l_ref, w_ref, o_ref, *, qspan):
+    left = l_ref[0, 0]
+    width = w_ref[0, 0]
+    s = qspan / width
+    y = jnp.clip(jnp.round((x_ref[...] - left) * s), 0.0, qspan) / s + left
+    o_ref[...] = y
+
+
+def _rows2d(x):
+    """Collapse x to (rows, lastdim) for tiling; remember original shape."""
+    shape = x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+@functools.partial(jax.jit, static_argnames=("unsigned",))
+def fq_sym(x, t, unsigned=False):
+    """Symmetric per-tensor fake-quant. t: scalar threshold (>0)."""
+    qmax = 255.0 if unsigned else 127.0
+    qmin = 0.0 if unsigned else -127.0
+    x2, shape = _rows2d(x)
+    n = x2.shape[0]
+    grid = (pl.cdiv(n, ROWS),)
+    y = pl.pallas_call(
+        functools.partial(_sym_kernel, qmax=qmax, qmin=qmin),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, x2.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, x2.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        interpret=True,
+    )(x2, t.reshape(1, 1).astype(x.dtype))
+    return y.reshape(shape)
+
+
+@jax.jit
+def fq_sym_ch(x, t):
+    """Symmetric per-channel (last axis) fake-quant. t: (C,) thresholds."""
+    x2, shape = _rows2d(x)
+    n, c = x2.shape
+    grid = (pl.cdiv(n, ROWS),)
+    y = pl.pallas_call(
+        functools.partial(_sym_ch_kernel, qmax=127.0, qmin=-127.0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        interpret=True,
+    )(x2, t.reshape(1, -1).astype(x.dtype))
+    return y.reshape(shape)
+
+
+@jax.jit
+def fq_asym(x, left, width):
+    """Affine uint8 fake-quant over [left, left+width]."""
+    x2, shape = _rows2d(x)
+    n = x2.shape[0]
+    grid = (pl.cdiv(n, ROWS),)
+    y = pl.pallas_call(
+        functools.partial(_asym_kernel, qspan=255.0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, x2.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, x2.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        interpret=True,
+    )(
+        x2,
+        left.reshape(1, 1).astype(x.dtype),
+        width.reshape(1, 1).astype(x.dtype),
+    )
+    return y.reshape(shape)

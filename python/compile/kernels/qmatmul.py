@@ -1,0 +1,67 @@
+"""L1 Pallas int8 GEMM simulation kernel.
+
+int8 x int8 -> int32 with MXU-shaped 128x128 tiles (DESIGN.md §9). Used by
+the int8-simulation artifacts and the kernel benches; the deployed integer
+GEMM lives in the Rust engine (rust/src/int8/gemm.rs) and is tested against
+this kernel's goldens.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM = 128
+TN = 128
+
+
+def _qmm_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        a,
+        b,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@jax.jit
+def qmatmul(a, b):
+    """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32."""
+    m, k = a.shape
+    _, n = b.shape
+    grid = (pl.cdiv(m, TM), pl.cdiv(n, TN))
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _hist_kernel(x_ref, o_ref, *, lo, hi, bins):
+    x = x_ref[...].reshape(-1)
+    w = (hi - lo) / bins
+    idx = jnp.clip(jnp.floor((x - lo) / w), 0, bins - 1).astype(jnp.int32)
+    onehot = idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, bins), 1)
+    o_ref[...] = jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "bins"))
+def histogram(x, lo, hi, bins=101):
+    """Fixed-range histogram kernel (weight-distribution figures F1/F2)."""
+    x2 = x.reshape(1, -1)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, lo=lo, hi=hi, bins=bins),
+        out_shape=jax.ShapeDtypeStruct((bins,), jnp.int32),
+        interpret=True,
+    )(x2)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness standard).
+
+pytest + hypothesis assert kernels == oracles across shape/param sweeps.
+The Rust quant module and int8 engine are additionally tested against
+goldens produced by these oracles at artifact-build time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fq_sym(x, t, unsigned=False):
+    qmax = 255.0 if unsigned else 127.0
+    qmin = 0.0 if unsigned else -127.0
+    s = qmax / t
+    return jnp.clip(jnp.round(x * s), qmin, qmax) / s
+
+
+def fq_sym_ch(x, t):
+    """Per-channel symmetric fake-quant over the last axis. t: (C,)."""
+    s = 127.0 / t
+    return jnp.clip(jnp.round(x * s), -127.0, 127.0) / s
+
+
+def fq_asym(x, left, width):
+    s = 255.0 / width
+    return jnp.clip(jnp.round((x - left) * s), 0.0, 255.0) / s + left
+
+
+def qmatmul(a_i8, b_i8):
+    """int8 x int8 -> int32 matmul."""
+    return jnp.matmul(a_i8.astype(jnp.int32), b_i8.astype(jnp.int32))
+
+
+def histogram(x, lo, hi, bins):
+    """Fixed-range histogram; values outside [lo, hi) clamp to edge bins."""
+    w = (hi - lo) / bins
+    idx = jnp.clip(jnp.floor((x.reshape(-1) - lo) / w), 0, bins - 1).astype(
+        jnp.int32
+    )
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(1)

@@ -1,0 +1,115 @@
+"""Model zoo: mini mobile architectures for the FAT reproduction.
+
+DESIGN.md §2 maps these to the paper's nets:
+
+  * ``mobilenet_v2_mini`` — inverted residual bottlenecks, ReLU6, DWS layers
+    (the net whose *scalar* quantization collapses in the paper's Table 1).
+  * ``mnas_mini_10`` / ``mnas_mini_13`` — MBConv-style blocks at width
+    multipliers 1.0 / 1.3 with ReLU (paper's MNas-1.0 / MNas-1.3).
+  * ``resnet_mini`` — plain residual net used for the Fig. 1-2 weight
+    histograms.
+"""
+
+from __future__ import annotations
+
+from .graph import Builder, GraphDef
+
+
+def _inverted_residual(b: Builder, x, cin, cout, stride, t, act, hint):
+    mid = cin * t
+    y = b.conv(x, cin, mid, k=1, stride=1, act=act, hint=f"{hint}_exp")
+    y = b.dwconv(y, mid, k=3, stride=stride, act=act, hint=f"{hint}_dw")
+    y = b.conv(y, mid, cout, k=1, stride=1, act=None, hint=f"{hint}_proj")
+    if stride == 1 and cin == cout:
+        y = b.add(x, y, hint=f"{hint}_res")
+    return y
+
+
+def mobilenet_v2_mini() -> GraphDef:
+    b = Builder("mobilenet_v2_mini")
+    x = "input"
+    x = b.conv(x, 3, 16, k=3, stride=1, act="relu6", hint="stem")
+    cfg = [  # (t, cout, stride)
+        (1, 16, 1),
+        (4, 24, 2),
+        (4, 24, 1),
+        (4, 32, 2),
+        (4, 32, 1),
+        (4, 64, 2),
+        (4, 64, 1),
+    ]
+    cin = 16
+    for i, (t, cout, s) in enumerate(cfg):
+        x = _inverted_residual(b, x, cin, cout, s, t, "relu6", f"b{i}")
+        cin = cout
+    x = b.conv(x, cin, 128, k=1, stride=1, act="relu6", hint="headconv")
+    x = b.head(x, 128)
+    return b.build()
+
+
+def _mnas(width: float, name: str) -> GraphDef:
+    def c(ch):
+        return max(8, int(ch * width + 0.5))
+
+    b = Builder(name)
+    x = "input"
+    x = b.conv(x, 3, c(16), k=3, stride=1, act="relu", hint="stem")
+    # SepConv block (dw3x3 + pw linear), as in MNasNet's first block
+    x = b.dwconv(x, c(16), k=3, stride=1, act="relu", hint="sep_dw")
+    x = b.conv(x, c(16), c(16), k=1, stride=1, act=None, hint="sep_pw")
+    cfg = [  # (t, cout, stride, n)
+        (3, 24, 2, 2),
+        (3, 40, 2, 2),
+        (6, 64, 2, 2),
+    ]
+    cin = c(16)
+    for bi, (t, cout, s, n) in enumerate(cfg):
+        for j in range(n):
+            x = _inverted_residual(
+                b, x, cin, c(cout), s if j == 0 else 1, t, "relu", f"m{bi}_{j}"
+            )
+            cin = c(cout)
+    x = b.conv(x, cin, c(128), k=1, stride=1, act="relu", hint="headconv")
+    x = b.head(x, c(128))
+    return b.build()
+
+
+def mnas_mini_10() -> GraphDef:
+    return _mnas(1.0, "mnas_mini_10")
+
+
+def mnas_mini_13() -> GraphDef:
+    return _mnas(1.3, "mnas_mini_13")
+
+
+def resnet_mini() -> GraphDef:
+    b = Builder("resnet_mini")
+    x = "input"
+    x = b.conv(x, 3, 16, k=3, stride=1, act="relu", hint="stem")
+    cin = 16
+    for si, (cout, s) in enumerate([(16, 1), (32, 2), (64, 2)]):
+        for j in range(2):
+            stride = s if j == 0 else 1
+            y = b.conv(
+                x, cin, cout, k=3, stride=stride, act="relu", hint=f"r{si}_{j}a"
+            )
+            y = b.conv(y, cout, cout, k=3, stride=1, act=None, hint=f"r{si}_{j}b")
+            if stride == 1 and cin == cout:
+                y = b.add(x, y, hint=f"r{si}_{j}")
+            else:
+                sc = b.conv(
+                    x, cin, cout, k=1, stride=stride, act=None, hint=f"r{si}_{j}s"
+                )
+                y = b.add(sc, y, hint=f"r{si}_{j}")
+            x = b.add_node("relu", [y], hint=f"r{si}_{j}o")
+            cin = cout
+    x = b.head(x, 64)
+    return b.build()
+
+
+ZOO = {
+    "mobilenet_v2_mini": mobilenet_v2_mini,
+    "mnas_mini_10": mnas_mini_10,
+    "mnas_mini_13": mnas_mini_13,
+    "resnet_mini": resnet_mini,
+}

@@ -1,0 +1,66 @@
+"""JAX NN primitives used by the graph interpreter (NHWC / HWIO)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .graph import EPS
+
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def conv2d(x, w, stride: int):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=DN
+    )
+
+
+def dwconv2d(x, w, stride: int):
+    # w: (k, k, C) -> HWIO (k, k, 1, C) with feature_group_count = C
+    c = w.shape[-1]
+    return lax.conv_general_dilated(
+        x,
+        w[:, :, None, :],
+        (stride, stride),
+        "SAME",
+        dimension_numbers=DN,
+        feature_group_count=c,
+    )
+
+
+def dense(x, w):
+    return jnp.dot(x, w)
+
+
+def bn_infer(x, gamma, beta, mean, var):
+    inv = gamma * lax.rsqrt(var + EPS)
+    return x * inv + (beta - mean * inv)
+
+
+def bn_train(x, gamma, beta):
+    """Batch-stats BN for pretraining. Returns (y, batch_mean, batch_var)."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    inv = gamma * lax.rsqrt(var + EPS)
+    return x * inv + (beta - mean * inv), mean, var
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def gap(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def softmax_xent(logits, labels, num_classes):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))

@@ -1,0 +1,71 @@
+"""Stateless, portable PRNG shared (bit-exactly) with the Rust data layer.
+
+The SynthShapes generator must produce *identical* float32 images in Python
+(build-time: pretraining, goldens) and Rust (run-time: calibration and
+fine-tuning batches). Sequential-stream PRNGs are hostile to vectorisation,
+so everything is derived from a stateless splitmix64-style hash of
+``(seed, index, slot, x, y, c)``. All integer ops are wrapping u64; floats
+are produced from the top 24 bits, so every value is exactly representable
+and the float path is pure IEEE-754 f32 arithmetic on both sides.
+
+Rust mirror: ``rust/src/data/prng.rs`` (golden vectors in both test suites).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_M1 = np.uint64(0x9E3779B97F4A7C15)
+_M2 = np.uint64(0xC2B2AE3D27D4EB4F)
+_M3 = np.uint64(0x165667B19E3779F9)
+_S1 = np.uint64(0xBF58476D1CE4E5B9)
+_S2 = np.uint64(0x94D049BB133111EB)
+
+# Hash "slots" partition the key space per sample. Slots 0..63 are scalar
+# sample parameters; pixel-indexed draws use the slots below.
+SLOT_NOISE = 64
+SLOT_OUTLIER = 65
+
+_INV24 = np.float32(1.0 / 16777216.0)  # 2^-24, exact
+
+
+def splitmix64(z: np.ndarray) -> np.ndarray:
+    """Finalising mix of splitmix64 over u64 (vectorised, wrapping)."""
+    z = np.asarray(z, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = (z ^ (z >> np.uint64(30))) * _S1
+        z = (z ^ (z >> np.uint64(27))) * _S2
+        return z ^ (z >> np.uint64(31))
+
+
+def hash_u64(seed, index, slot, x=0, y=0, c=0) -> np.ndarray:
+    """Stateless u64 hash of the full key tuple (all args broadcastable)."""
+    seed = np.asarray(seed, dtype=np.uint64)
+    index = np.asarray(index, dtype=np.uint64)
+    slot = np.asarray(slot, dtype=np.uint64)
+    x = np.asarray(x, dtype=np.uint64)
+    y = np.asarray(y, dtype=np.uint64)
+    c = np.asarray(c, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = (
+            seed * _M1
+            ^ index * _M2
+            ^ slot * _M3
+            ^ (x << np.uint64(40))
+            ^ (y << np.uint64(20))
+            ^ c
+        )
+        # A second avalanche pass decorrelates the xor-of-products key.
+        return splitmix64(splitmix64(z) + _M1)
+
+
+def uniform(seed, index, slot, x=0, y=0, c=0) -> np.ndarray:
+    """Uniform f32 in [0, 1) with 24-bit resolution (exact on both sides)."""
+    h = hash_u64(seed, index, slot, x, y, c)
+    return (h >> np.uint64(40)).astype(np.float32) * _INV24
+
+
+def uniform_range(lo: float, hi: float, *key) -> np.ndarray:
+    """lo + u*(hi-lo) with f32 constants — formula order mirrored in Rust."""
+    u = uniform(*key)
+    return np.float32(lo) + u * np.float32(hi - lo)

@@ -1,0 +1,245 @@
+"""FAT fake-quantization: STE gradients + the quantized forward graph.
+
+Implements the paper's §3.1:
+  * symmetric trained thresholds  T_adj = clip(α, 0.5, 1.0) · T_cal   (eq.13)
+  * asymmetric trained thresholds (left limit + width, eq. 21-23) with
+    empiric clip ranges α_T ∈ [-0.2, 0.4] signed / [0, 0.4] unsigned and
+    α_R ∈ [0.5, 1.0]
+  * scalar (per-tensor) and vector (per-filter, §3.1.5) weight thresholds
+  * STE derivatives for round (eq. 16-17) and clip (eq. 18-19)
+
+The forward computation runs the L1 Pallas kernels; backward passes are the
+exact STE expressions the kernels' forwards imply. ``jnp.clip`` on α already
+has the eq.-19 derivative, so threshold adjustment stays plain jnp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import interp
+from .graph import GraphDef, folded_weight_order
+from .kernels import fake_quant as K
+
+# Empiric clip ranges (paper §3.1.3-3.1.4).
+ALPHA_MIN, ALPHA_MAX = 0.5, 1.0
+AT_MIN_SIGNED, AT_MAX = -0.2, 0.4
+AT_MIN_UNSIGNED = 0.0
+AR_MIN, AR_MAX = 0.5, 1.0
+
+
+# ---------------------------------------------------------------------------
+# STE-differentiable fake-quant primitives
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fq_sym(x, t, unsigned=False):
+    return K.fq_sym(x, t, unsigned=unsigned)
+
+
+def _fq_sym_fwd(x, t, unsigned):
+    y = K.fq_sym(x, t, unsigned=unsigned)
+    return y, (x, t, y)
+
+
+def _fq_sym_bwd(unsigned, res, gy):
+    """Exact STE (round' = 1, clip' = eq. 19, quotient rule kept):
+    in-range dy/dT = (y - x)/T (round residual); saturated dy/dT = ±1."""
+    x, t, y = res
+    if unsigned:
+        in_range = (x >= 0.0) & (x <= t)
+        sat = jnp.where(x > t, 1.0, 0.0)
+    else:
+        in_range = jnp.abs(x) <= t
+        sat = jnp.sign(x) * (~in_range)
+    dt = jnp.where(in_range, (y - x) / t, sat)
+    gt = jnp.sum(gy * dt)
+    return gy * in_range, gt.reshape(t.shape)
+
+
+fq_sym.defvjp(_fq_sym_fwd, _fq_sym_bwd)
+
+
+@jax.custom_vjp
+def fq_sym_ch(x, t):
+    return K.fq_sym_ch(x, t)
+
+
+def _fq_sym_ch_fwd(x, t):
+    y = K.fq_sym_ch(x, t)
+    return y, (x, t, y)
+
+
+def _fq_sym_ch_bwd(res, gy):
+    x, t, y = res
+    in_range = jnp.abs(x) <= t  # t broadcasts over the last axis
+    dt = jnp.where(in_range, (y - x) / t, jnp.sign(x) * (~in_range))
+    axes = tuple(range(x.ndim - 1))
+    gt = jnp.sum(gy * dt, axis=axes)
+    return gy * in_range, gt.reshape(t.shape)
+
+
+fq_sym_ch.defvjp(_fq_sym_ch_fwd, _fq_sym_ch_bwd)
+
+
+@jax.custom_vjp
+def fq_asym(x, left, width):
+    return K.fq_asym(x, left, width)
+
+
+def _fq_asym_fwd(x, left, width):
+    y = K.fq_asym(x, left, width)
+    return y, (x, left, width, y)
+
+
+def _fq_asym_bwd(res, gy):
+    """Exact STE: in-range dy/dleft = 0, dy/dwidth = (y - x)/width;
+    saturated plateaus track left (both) and width (upper only)."""
+    x, left, width, y = res
+    right = left + width
+    in_range = (x >= left) & (x <= right)
+    sat_hi = x > right
+    gx = gy * in_range
+    gl = jnp.sum(gy * (~in_range))
+    dw = jnp.where(in_range, (y - x) / width, jnp.where(sat_hi, 1.0, 0.0))
+    gw = jnp.sum(gy * dw)
+    return gx, gl.reshape(left.shape), gw.reshape(width.shape)
+
+
+fq_asym.defvjp(_fq_asym_fwd, _fq_asym_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Threshold adjustment (differentiable through jnp.clip == eq. 19)
+# ---------------------------------------------------------------------------
+
+def adjust_sym(alpha, t_cal):
+    return jnp.clip(alpha, ALPHA_MIN, ALPHA_MAX) * t_cal
+
+
+def adjust_asym(alpha_t, alpha_r, t_l, t_r, unsigned: bool):
+    at_min = AT_MIN_UNSIGNED if unsigned else AT_MIN_SIGNED
+    r = t_r - t_l
+    left = t_l + jnp.clip(alpha_t, at_min, AT_MAX) * r
+    width = jnp.clip(alpha_r, AR_MIN, AR_MAX) * r
+    return left, width
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward over a folded graph
+# ---------------------------------------------------------------------------
+
+class QuantConfig:
+    """Static quantization mode: (symmetric|asymmetric) x (scalar|vector)."""
+
+    def __init__(self, asym: bool, vector: bool):
+        self.asym = asym
+        self.vector = vector
+
+    @property
+    def name(self) -> str:
+        return ("asym" if self.asym else "sym") + (
+            "_vector" if self.vector else "_scalar"
+        )
+
+
+MODES = {
+    m.name: m
+    for m in (
+        QuantConfig(False, False),
+        QuantConfig(False, True),
+        QuantConfig(True, False),
+        QuantConfig(True, True),
+    )
+}
+
+
+def trainable_init(g: GraphDef, cfg: QuantConfig) -> dict:
+    """Initial trainable pytree: α=1 (sym), α_T=0, α_R=1 (asym).
+
+    Keys are strings; jax tree flattening sorts dict keys, which fixes the
+    marshalling order recorded in the artifact manifest.
+    """
+    sites = interp.enumerate_sites(g)
+    tr = {}
+    if cfg.asym:
+        tr["act_at"] = jnp.zeros((len(sites),), jnp.float32)
+        tr["act_ar"] = jnp.ones((len(sites),), jnp.float32)
+    else:
+        tr["act_a"] = jnp.ones((len(sites),), jnp.float32)
+    for n in g.conv_like():
+        if cfg.vector and n.op != "dense":
+            ch = n.attrs.get("cout", n.attrs.get("ch"))
+            tr[f"w_a:{n.id}"] = jnp.ones((ch,), jnp.float32)
+        else:
+            tr[f"w_a:{n.id}"] = jnp.ones((), jnp.float32)
+    return tr
+
+
+def quant_forward(
+    g: GraphDef, cfg: QuantConfig, weights: dict, act_t, trainable: dict, x
+):
+    """Fake-quantized forward.
+
+    weights: folded param dict. act_t: (S, 2) per-site calibration (min, max)
+    stacked in site order. trainable: see trainable_init.
+    """
+    sites = interp.enumerate_sites(g)
+    site_idx = {nid: i for i, (nid, _) in enumerate(sites)}
+    site_unsigned = {nid: u for nid, u in sites}
+
+    def weight_hook(n, w):
+        a = trainable[f"w_a:{n.id}"]
+        if a.ndim == 1:
+            t_max = jax.lax.stop_gradient(
+                jnp.max(jnp.abs(w.reshape(-1, w.shape[-1])), axis=0)
+            )
+            # Guard: an all-zero filter would give t=0 => S=inf.
+            t = adjust_sym(a, jnp.maximum(t_max, 1e-8))
+            return fq_sym_ch(w, t)
+        t_max = jax.lax.stop_gradient(jnp.max(jnp.abs(w)))
+        t = adjust_sym(a, jnp.maximum(t_max, 1e-8))
+        return fq_sym(w, t, False)
+
+    def act_hook(nid, v):
+        i = site_idx[nid]
+        unsigned = site_unsigned[nid]
+        t_l, t_r = act_t[i, 0], act_t[i, 1]
+        if cfg.asym:
+            at = trainable["act_at"][i]
+            ar = trainable["act_ar"][i]
+            left, width = adjust_asym(at, ar, t_l, t_r, unsigned)
+            width = jnp.maximum(width, 1e-8)
+            return fq_asym(v, left, width)
+        a = trainable["act_a"][i]
+        t_cal = jnp.maximum(jnp.maximum(jnp.abs(t_l), jnp.abs(t_r)), 1e-8)
+        t = adjust_sym(a, t_cal)
+        return fq_sym(v, t, unsigned)
+
+    return interp.forward(
+        g, weights, x, weight_hook=weight_hook, act_hook=act_hook
+    )
+
+
+def quant_forward_pointwise(
+    g: GraphDef, cfg: QuantConfig, weights: dict, act_t, pw: dict, x
+):
+    """§4.2 variant: fixed thresholds (α=1), trainable point-wise weight and
+    bias scales clipped to [0.75, 1.25]."""
+    eff = dict(weights)
+    for name in folded_weight_order(g):
+        eff[name] = weights[name] * jnp.clip(pw[f"pw:{name}"], 0.75, 1.25)
+    frozen = jax.tree_util.tree_map(
+        jax.lax.stop_gradient, trainable_init(g, cfg)
+    )
+    return quant_forward(g, cfg, eff, act_t, frozen, x)
+
+
+def pointwise_init(g: GraphDef, weights: dict) -> dict:
+    return {
+        f"pw:{name}": jnp.ones_like(weights[name])
+        for name in folded_weight_order(g)
+    }

@@ -1,0 +1,257 @@
+"""Build-time training: FP pretraining and the FAT fine-tune step.
+
+Pretraining (cross-entropy, batch-stats BN with EMA running stats) happens
+once inside ``make artifacts`` to stand in for the paper's pretrained
+TF-slim checkpoints (DESIGN.md §2).
+
+The FAT fine-tune step (paper §3.2 + §4.1.2) is what gets AOT-lowered and
+driven from Rust: RMSE distillation between the FP teacher and the
+fake-quant student, Adam on threshold-scale parameters only. The cosine
+annealing schedule with optimizer reset lives in the Rust coordinator — the
+step consumes (lr, step_in_cycle) as runtime scalars.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import interp, quantize
+from .graph import GraphDef
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step over arbitrary pytrees. step: 1-based f32 scalar."""
+    b1, b2 = jnp.float32(ADAM_B1), jnp.float32(ADAM_B2)
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(
+        lambda a, g: b2 * a + (1 - b2) * g * g, v, grads
+    )
+    bc1 = 1.0 - jnp.power(b1, step)
+    bc2 = 1.0 - jnp.power(b2, step)
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p
+        - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS),
+        params,
+        m,
+        v,
+    )
+    return params, m, v
+
+
+def rmse_loss(z_teacher, z_student):
+    """Paper eq. 25: H(z^T, z^A) = sqrt(sum_i (z_i^T - z_i^A)^2 / N)."""
+    n = z_teacher.shape[0]
+    return jnp.sqrt(jnp.sum((z_teacher - z_student) ** 2) / n)
+
+
+# ---------------------------------------------------------------------------
+# FAT fine-tune step (AOT-lowered; Python never runs this at runtime)
+# ---------------------------------------------------------------------------
+
+def make_fat_step(g: GraphDef, cfg: quantize.QuantConfig):
+    def loss_fn(trainable, weights, act_t, x):
+        z_t = interp.forward(g, weights, x)
+        z_a = quantize.quant_forward(g, cfg, weights, act_t, trainable, x)
+        return rmse_loss(jax.lax.stop_gradient(z_t), z_a)
+
+    def step_fn(weights, act_t, trainable, m, v, step, lr, x):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            trainable, weights, act_t, x
+        )
+        trainable, m, v = adam_update(trainable, grads, m, v, step, lr)
+        return loss, trainable, m, v
+
+    return step_fn
+
+
+def make_pointwise_step(g: GraphDef, cfg: quantize.QuantConfig):
+    """§4.2: train point-wise weight/bias scales in [0.75, 1.25]."""
+
+    def loss_fn(pw, weights, act_t, x):
+        z_t = interp.forward(g, weights, x)
+        z_a = quantize.quant_forward_pointwise(
+            g, cfg, weights, act_t, pw, x
+        )
+        return rmse_loss(jax.lax.stop_gradient(z_t), z_a)
+
+    def step_fn(weights, act_t, pw, m, v, step, lr, x):
+        loss, grads = jax.value_and_grad(loss_fn)(pw, weights, act_t, x)
+        pw, m, v = adam_update(pw, grads, m, v, step, lr)
+        return loss, pw, m, v
+
+    return step_fn
+
+
+def make_calib_stats(g: GraphDef):
+    """Per-site (min, max) + per conv-like per-channel (min, max)."""
+    sites = interp.enumerate_sites(g)
+    ch_nodes = interp.channel_stat_nodes(g)
+
+    def fn(weights, x):
+        cap = {}
+        interp.forward(g, weights, x, capture=cap)
+        site_minmax = jnp.stack(
+            [
+                jnp.stack([cap[nid]["min"], cap[nid]["max"]])
+                for nid, _ in sites
+            ]
+        )  # (S, 2)
+        ch = {
+            f"ch:{nid}": jnp.stack(
+                [cap[nid]["ch_min"], cap[nid]["ch_max"]]
+            )  # (2, C)
+            for nid, _ in ch_nodes
+        }
+        return site_minmax, ch
+
+    return fn
+
+
+def make_calib_hist(g: GraphDef, bins: int = 64):
+    """Second calibration pass: per-site histograms over [min, max] ranges
+    from the first pass. Feeds the percentile/KL baseline calibrators in
+    the Rust ablation study (A1)."""
+    sites = interp.enumerate_sites(g)
+
+    def fn(weights, act_t, x):
+        rec = {}
+
+        def hook(nid, t):
+            rec[nid] = t
+            return t
+
+        interp.forward(g, weights, x, act_hook=hook)
+        outs = []
+        for i, (nid, _) in enumerate(sites):
+            lo, hi = act_t[i, 0], act_t[i, 1]
+            w = jnp.maximum(hi - lo, 1e-8) / bins
+            idx = jnp.clip(
+                jnp.floor((rec[nid].reshape(-1) - lo) / w), 0, bins - 1
+            ).astype(jnp.int32)
+            outs.append(jnp.zeros((bins,), jnp.int32).at[idx].add(1))
+        return jnp.stack(outs)  # (S, bins)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# FP pretraining (build-time only)
+# ---------------------------------------------------------------------------
+
+def pretrain(
+    g: GraphDef,
+    params: dict,
+    train_xy,
+    val_xy,
+    *,
+    epochs: int = 3,
+    bs: int = 64,
+    lr: float = 3e-3,
+    bn_momentum: float = 0.9,
+    subset: int = 5000,
+    log=print,
+):
+    """Train the FP model with Adam + cosine LR. Returns trained params.
+
+    `subset` bounds the train set: this box is single-core, so the build
+    keeps pretraining to a few minutes per model (accuracy on SynthShapes
+    saturates quickly; see EXPERIMENTS.md).
+    """
+    tx, ty = train_xy
+    if subset and subset < tx.shape[0]:
+        tx, ty = tx[:subset], ty[:subset]
+    vx, vy = val_xy
+    num_classes = g.num_classes
+
+    trainable_keys = [
+        k for k in params if not (k.endswith(".mean") or k.endswith(".var"))
+    ]
+    running = {
+        k: jnp.asarray(v)
+        for k, v in params.items()
+        if k.endswith(".mean") or k.endswith(".var")
+    }
+    tr = {k: jnp.asarray(params[k]) for k in trainable_keys}
+
+    from . import nn
+
+    def loss_fn(tr, x, y):
+        p = dict(tr)
+        p.update(running)  # bn_train ignores running stats
+        logits, bn_stats = interp.forward(g, p, x, bn_mode="train")
+        return nn.softmax_xent(logits, y, num_classes), bn_stats
+
+    @jax.jit
+    def train_step(tr, m, v, running, step, lr_now, x, y):
+        (loss, bn_stats), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(tr, x, y)
+        tr, m, v = adam_update(tr, grads, m, v, step, lr_now)
+        mom = jnp.float32(bn_momentum)
+        new_running = dict(running)
+        for nid, (bm, bv) in bn_stats.items():
+            new_running[f"{nid}.mean"] = (
+                mom * running[f"{nid}.mean"] + (1 - mom) * bm
+            )
+            new_running[f"{nid}.var"] = (
+                mom * running[f"{nid}.var"] + (1 - mom) * bv
+            )
+        return loss, tr, m, v, new_running
+
+    @jax.jit
+    def eval_logits(p, x):
+        return interp.forward(g, p, x)
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tr)
+    m, v = zeros, jax.tree_util.tree_map(jnp.zeros_like, tr)
+    n = tx.shape[0]
+    steps_per_epoch = n // bs
+    total = epochs * steps_per_epoch
+    rs = np.random.RandomState(1234)
+    step = 0
+    for ep in range(epochs):
+        perm = rs.permutation(n)
+        ep_loss = 0.0
+        for i in range(steps_per_epoch):
+            idx = perm[i * bs : (i + 1) * bs]
+            step += 1
+            lr_now = jnp.float32(
+                0.5 * lr * (1.0 + np.cos(np.pi * step / total))
+            )
+            loss, tr, m, v, running = train_step(
+                tr,
+                m,
+                v,
+                running,
+                jnp.float32(step),
+                lr_now,
+                tx[idx],
+                ty[idx],
+            )
+            ep_loss += float(loss)
+        p = dict(tr)
+        p.update(running)
+        acc = evaluate(eval_logits, p, vx, vy, bs=200)
+        log(
+            f"  [{g.name}] epoch {ep + 1}/{epochs} "
+            f"loss={ep_loss / steps_per_epoch:.4f} val_acc={acc:.4f}"
+        )
+    out = {k: np.asarray(val) for k, val in tr.items()}
+    out.update({k: np.asarray(val) for k, val in running.items()})
+    return out, acc
+
+
+def evaluate(eval_logits, params, x, y, bs=200) -> float:
+    correct = 0
+    for i in range(0, x.shape[0], bs):
+        logits = eval_logits(params, x[i : i + bs])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + bs]))
+    return correct / x.shape[0]

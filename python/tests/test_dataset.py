@@ -1,0 +1,71 @@
+"""SynthShapes generator tests (shape, determinism, statistics)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import dataset as ds
+
+
+def test_shapes_and_dtypes():
+    x, y = ds.train_batch(np.arange(8))
+    assert x.shape == (8, ds.IMG, ds.IMG, ds.CHANNELS)
+    assert x.dtype == np.float32
+    assert y.dtype == np.int32
+    assert list(y) == [0, 1, 2, 3, 4, 5, 6, 7]
+
+
+def test_deterministic():
+    a, _ = ds.train_batch(np.arange(16))
+    b, _ = ds.train_batch(np.arange(16))
+    assert np.array_equal(a, b)
+
+
+def test_train_val_differ():
+    a, _ = ds.train_batch(np.arange(4))
+    b, _ = ds.val_batch(np.arange(4))
+    assert not np.array_equal(a, b)
+
+
+def test_value_range_and_outliers():
+    x, _ = ds.train_batch(np.arange(64))
+    assert float(x.min()) >= 0.0
+    assert float(x.max()) <= 3.0
+    frac = float((x > 1.25).mean())
+    assert 0.001 < frac < 0.05  # sparse outliers exist (paper Fig. 1 driver)
+
+
+def test_classes_visually_distinct():
+    """Mean intra-class distance must be well below inter-class distance."""
+    x, y = ds.train_batch(np.arange(200))
+    flat = x.reshape(len(x), -1)
+    cents = np.stack([flat[y == k].mean(axis=0) for k in range(10)])
+    intra = np.mean(
+        [np.linalg.norm(flat[y == k] - cents[k], axis=1).mean() for k in range(10)]
+    )
+    inter = np.mean(
+        [
+            np.linalg.norm(cents[i] - cents[j])
+            for i in range(10)
+            for j in range(10)
+            if i != j
+        ]
+    )
+    assert inter > 0.3 * intra  # separable enough to train on
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 7))
+def test_any_index_valid(idx, cnt):
+    x, y = ds.train_batch(np.arange(idx, idx + cnt + 1))
+    assert np.all(np.isfinite(x))
+    assert x.shape[0] == cnt + 1
+    assert np.all((y >= 0) & (y < 10))
+
+
+def test_subset_helpers():
+    ci = ds.calib_indices()
+    assert len(ci) == 100
+    fi = ds.finetune_indices()
+    assert len(fi) == ds.TRAIN_SIZE // 10
+    assert fi[1] - fi[0] == 10

@@ -1,0 +1,102 @@
+"""§3.3 DWS rescaling: pattern matching, FP-invariance, threshold equalisation."""
+
+import numpy as np
+
+from compile import dws, graph, interp, models, train
+
+
+def _folded(model, seed=4):
+    g0 = models.ZOO[model]()
+    return graph.fold_bn(g0, graph.init_params(g0, seed=seed))
+
+
+def test_pattern_matching_mobilenet():
+    g, _ = _folded("mobilenet_v2_mini")
+    pats = dws.find_patterns(g)
+    # every inverted-residual block has a dw -> relu6 -> 1x1 proj conv chain
+    assert len(pats) == 7
+    for dw_id, act_id, conv_id, act_op in pats:
+        assert act_op == "relu6"
+        assert g.node(dw_id).op == "dwconv"
+        assert g.node(conv_id).attrs["k"] == 1
+
+
+def test_pattern_matching_mnas_uses_relu():
+    g, _ = _folded("mnas_mini_10")
+    pats = dws.find_patterns(g)
+    assert len(pats) >= 5
+    assert all(op == "relu" for *_, op in pats)
+
+
+def test_rescale_preserves_fp_outputs_relu():
+    """For ReLU patterns the rescale is exactly output-preserving."""
+    g, p = _folded("mnas_mini_10")
+    x = np.random.RandomState(0).rand(4, 32, 32, 3).astype(np.float32)
+    _, ch = train.make_calib_stats(g)(p, x)
+    ch_max = {k.split(":")[1]: np.asarray(v)[1] for k, v in ch.items()}
+    before = np.asarray(interp.forward(g, p, x))
+    p2, report = dws.rescale_model(g, p, ch_max)
+    after = np.asarray(interp.forward(g, p2, x))
+    np.testing.assert_allclose(before, after, rtol=2e-3, atol=2e-4)
+    assert len(report) >= 5
+
+
+def test_rescale_preserves_fp_outputs_relu6_on_calib_data():
+    g, p = _folded("mobilenet_v2_mini")
+    x = np.random.RandomState(1).rand(8, 32, 32, 3).astype(np.float32)
+    _, ch = train.make_calib_stats(g)(p, x)
+    ch_max = {k.split(":")[1]: np.asarray(v)[1] for k, v in ch.items()}
+    before = np.asarray(interp.forward(g, p, x))
+    p2, report = dws.rescale_model(g, p, ch_max)
+    after = np.asarray(interp.forward(g, p2, x))
+    # exact on the calibration data (scale caps enforce X*s <= 6)
+    np.testing.assert_allclose(before, after, rtol=5e-3, atol=5e-4)
+
+
+def test_rescale_shrinks_threshold_spread():
+    g, p = _folded("mobilenet_v2_mini")
+    x = np.random.RandomState(2).rand(8, 32, 32, 3).astype(np.float32)
+    _, ch = train.make_calib_stats(g)(p, x)
+    ch_max = {k.split(":")[1]: np.asarray(v)[1] for k, v in ch.items()}
+    _, report = dws.rescale_model(g, p, ch_max)
+    improved = sum(
+        1 for r in report if r["spread_after"] <= r["spread_before"] * 1.01
+    )
+    assert improved >= len(report) * 0.7, report
+
+
+def test_locked_channels_unchanged():
+    k, c, cout = 3, 8, 6
+    rs = np.random.RandomState(3)
+    w_dw = rs.normal(0, 1, (k, k, c)).astype(np.float32)
+    b_dw = rs.normal(0, 0.1, (c,)).astype(np.float32)
+    w_conv = rs.normal(0, 1, (1, 1, c, cout)).astype(np.float32)
+    ch_max = np.float32([1.0, 5.95, 2.0, 6.5, 0.5, 1.5, 3.0, 5.89])
+    w2, b2, wc2, s, locked = dws.rescale_pattern(
+        w_dw, b_dw, w_conv, ch_max, relu6=True
+    )
+    assert locked.tolist() == [False, True, False, True, False, False, False, False]
+    np.testing.assert_array_equal(w2[..., 1], w_dw[..., 1])
+    np.testing.assert_array_equal(wc2[:, :, 3, :], w_conv[:, :, 3, :])
+    assert np.all(s[locked] == 1.0)
+
+
+def test_scale_cap_respects_relu6():
+    """Scaled activations must not exceed 6.0 (paper eq. 26 precondition)."""
+    k, c, cout = 3, 4, 4
+    rs = np.random.RandomState(4)
+    w_dw = rs.normal(0, 1, (k, k, c)).astype(np.float32) * np.float32(
+        [0.1, 1.0, 2.0, 0.5]
+    )
+    b_dw = np.zeros(c, np.float32)
+    w_conv = rs.normal(0, 1, (1, 1, c, cout)).astype(np.float32)
+    ch_max = np.float32([2.0, 3.0, 4.0, 5.0])
+    _, _, _, s, locked = dws.rescale_pattern(
+        w_dw, b_dw, w_conv, ch_max, relu6=True
+    )
+    assert np.all(ch_max * s <= 6.0 + 1e-4)
+
+
+def test_resnet_has_no_patterns():
+    g, _ = _folded("resnet_mini")
+    assert dws.find_patterns(g) == []

@@ -1,0 +1,84 @@
+"""FATW container + AOT manifest round-trip tests."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import fatw
+
+
+def test_fatw_roundtrip(tmp_path):
+    tensors = {
+        "a.w": np.random.RandomState(0).randn(3, 4).astype(np.float32),
+        "b": np.array([1, -7, 2**30], dtype=np.int32),
+        "c": np.array([-128, 127], dtype=np.int8),
+        "scalar": np.float32(3.5).reshape(()),
+    }
+    p = tmp_path / "t.fatw"
+    fatw.write(str(p), tensors)
+    back = fatw.read(str(p))
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == np.asarray(tensors[k]).dtype
+
+
+def test_fatw_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.fatw"
+    p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        fatw.read(str(p))
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../../artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "models")),
+    reason="artifacts not built",
+)
+def test_manifests_are_self_consistent():
+    """Every artifact manifest's inputs/outputs must carry valid shapes and
+    every referenced .hlo.txt must exist (the Rust marshalling contract)."""
+    mdir = os.path.join(ARTIFACTS, "models")
+    checked = 0
+    for model in os.listdir(mdir):
+        d = os.path.join(mdir, model)
+        for f in os.listdir(d):
+            if not f.endswith(".manifest.json"):
+                continue
+            m = json.load(open(os.path.join(d, f)))
+            assert os.path.exists(
+                os.path.join(d, f.replace(".manifest.json", ".hlo.txt"))
+            )
+            for spec in m["inputs"] + m["outputs"]:
+                assert spec["dtype"] in ("f32", "i32", "i8", "u8")
+                assert all(
+                    isinstance(dim, int) and dim > 0 for dim in spec["shape"]
+                )
+            checked += 1
+    assert checked >= 10
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "models")),
+    reason="artifacts not built",
+)
+def test_weight_order_matches_manifest():
+    """Weights group of each artifact must equal sites.json weight_order
+    sorted — the order jax flattens dict pytrees."""
+    mdir = os.path.join(ARTIFACTS, "models")
+    for model in os.listdir(mdir):
+        d = os.path.join(mdir, model)
+        if not os.path.exists(os.path.join(d, "sites.json")):
+            continue  # model still being built
+        sites = json.load(open(os.path.join(d, "sites.json")))
+        man = json.load(open(os.path.join(d, "fp_forward.manifest.json")))
+        wnames = [
+            s["name"].split("/", 1)[1]
+            for s in man["inputs"]
+            if s["name"].startswith("0/")
+        ]
+        assert wnames == sorted(sites["weight_order"])

@@ -1,0 +1,113 @@
+"""Graph IR, folding and site-enumeration tests."""
+
+import json
+
+import numpy as np
+
+from compile import graph, interp, models, nn
+
+
+def test_all_models_build_and_are_topo_ordered():
+    for name, f in models.ZOO.items():
+        g = f()
+        seen = set()
+        for n in g.nodes:
+            for i in n.inputs:
+                assert i in seen, f"{name}: {n.id} uses {i} before def"
+            seen.add(n.id)
+        assert g.nodes[0].op == "input"
+        assert g.nodes[-1].op == "dense"
+
+
+def test_json_round_trip():
+    g = models.mnas_mini_10()
+    d = json.loads(g.to_json())
+    assert d["name"] == "mnas_mini_10"
+    assert len(d["nodes"]) == len(g.nodes)
+    assert d["nodes"][0]["op"] == "input"
+
+
+def test_fold_bn_equivalence_all_models():
+    rng = np.random.RandomState(0)
+    x = rng.rand(2, 32, 32, 3).astype(np.float32)
+    for name, f in models.ZOO.items():
+        g = f()
+        p = graph.init_params(g, seed=11)
+        # randomise bn params so folding is non-trivial
+        for k in p:
+            if k.endswith(".mean"):
+                p[k] = rng.normal(0, 0.4, p[k].shape).astype(np.float32)
+            if k.endswith(".var"):
+                p[k] = np.abs(rng.normal(1, 0.3, p[k].shape)).astype(np.float32) + 0.1
+            if k.endswith(".gamma"):
+                p[k] = rng.normal(1, 0.2, p[k].shape).astype(np.float32)
+            if k.endswith(".beta"):
+                p[k] = rng.normal(0, 0.2, p[k].shape).astype(np.float32)
+        a = interp.forward(g, p, x)
+        fg, fp = graph.fold_bn(g, p)
+        b = interp.forward(fg, fp, x)
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=1e-3)
+        assert not any(n.op == "bn" for n in fg.nodes)
+
+
+def test_folded_graph_has_biases():
+    g = models.mobilenet_v2_mini()
+    fg, fp = graph.fold_bn(g, graph.init_params(g))
+    for n in fg.conv_like():
+        assert n.attrs.get("bias"), n.id
+        assert f"{n.id}.b" in fp
+
+
+def test_sites_skip_pre_activation_tensors():
+    g = models.mobilenet_v2_mini()
+    fg, _ = graph.fold_bn(g, graph.init_params(g))
+    sites = dict(interp.enumerate_sites(fg))
+    # expand convs feed relu6 directly -> not sites; relu6 outputs are.
+    assert "b0_exp_conv" not in sites
+    assert "b0_exp_relu6" in sites and sites["b0_exp_relu6"] is True
+    # projection convs (linear) are sites and signed
+    assert "b0_proj_conv" in sites and sites["b0_proj_conv"] is False
+    assert "input" in sites and sites["input"] is True
+    # logits site
+    assert "head_dense" in sites
+
+
+def test_site_order_matches_topo_order():
+    g = models.resnet_mini()
+    fg, _ = graph.fold_bn(g, graph.init_params(g))
+    order = [n.id for n in fg.nodes]
+    sites = [s for s, _ in interp.enumerate_sites(fg)]
+    assert sites == [i for i in order if i in set(sites)]
+
+
+def test_channel_stat_nodes_cover_all_convs():
+    g = models.mnas_mini_13()
+    fg, _ = graph.fold_bn(g, graph.init_params(g))
+    ch = dict(interp.channel_stat_nodes(fg))
+    for n in fg.nodes:
+        if n.op in ("conv", "dwconv"):
+            assert n.id in ch
+            assert ch[n.id] == n.attrs.get("cout", n.attrs.get("ch"))
+
+
+def test_weight_order_deterministic_and_complete():
+    g = models.mnas_mini_10()
+    fg, fp = graph.fold_bn(g, graph.init_params(g))
+    order = graph.folded_weight_order(fg)
+    assert order == graph.folded_weight_order(fg)
+    assert set(order) == set(fp.keys())
+
+
+def test_mnas_width_scaling():
+    g10 = models.mnas_mini_10()
+    g13 = models.mnas_mini_13()
+    w10 = g10.node("stem_conv").attrs["cout"]
+    w13 = g13.node("stem_conv").attrs["cout"]
+    assert w13 > w10
+
+
+def test_relu6_saturates():
+    import jax.numpy as jnp
+
+    assert float(nn.relu6(jnp.float32(9.0))) == 6.0
+    assert float(nn.relu6(jnp.float32(-2.0))) == 0.0

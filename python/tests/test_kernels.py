@@ -1,0 +1,118 @@
+"""L1 Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fake_quant as K
+from compile.kernels import qmatmul as Q
+from compile.kernels import ref
+
+SHAPES = st.sampled_from(
+    [(4,), (3, 5), (17, 9), (2, 7, 11), (2, 3, 3, 8), (300, 33), (1, 1)]
+)
+
+
+def _rand(shape, seed, scale=2.0):
+    rs = np.random.RandomState(seed)
+    return rs.normal(0, scale, shape).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(SHAPES, st.integers(0, 99), st.floats(0.1, 8.0), st.booleans())
+def test_fq_sym_matches_ref(shape, seed, t, unsigned):
+    x = _rand(shape, seed)
+    if unsigned:
+        x = np.abs(x)
+    t = jnp.float32(t)
+    got = K.fq_sym(jnp.asarray(x), t, unsigned=unsigned)
+    want = ref.fq_sym(x, t, unsigned=unsigned)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.sampled_from([(3, 4), (17, 8), (2, 3, 16), (5, 5, 2, 12), (257, 7)]),
+    st.integers(0, 99),
+)
+def test_fq_sym_ch_matches_ref(shape, seed):
+    x = _rand(shape, seed)
+    c = shape[-1]
+    rs = np.random.RandomState(seed + 1)
+    t = (np.abs(rs.normal(1, 0.5, c)) + 0.1).astype(np.float32)
+    got = K.fq_sym_ch(jnp.asarray(x), jnp.asarray(t))
+    want = ref.fq_sym_ch(x, t)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    SHAPES,
+    st.integers(0, 99),
+    st.floats(-4.0, 1.0),
+    st.floats(0.2, 8.0),
+)
+def test_fq_asym_matches_ref(shape, seed, left, width):
+    x = _rand(shape, seed)
+    left = jnp.float32(left)
+    width = jnp.float32(width)
+    got = K.fq_asym(jnp.asarray(x), left, width)
+    want = ref.fq_asym(x, left, width)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+def test_fq_sym_roundtrip_bound():
+    """|x - fq(x)| <= step/2 for in-range x (quantization error bound)."""
+    x = np.linspace(-1.5, 1.5, 1001).astype(np.float32)
+    t = jnp.float32(1.5)
+    y = np.asarray(K.fq_sym(jnp.asarray(x), t))
+    step = 1.5 / 127.0
+    assert np.max(np.abs(y - x)) <= step / 2 + 1e-6
+
+
+def test_fq_sym_idempotent():
+    x = _rand((64, 32), 3)
+    t = jnp.float32(2.0)
+    y1 = np.asarray(K.fq_sym(jnp.asarray(x), t))
+    y2 = np.asarray(K.fq_sym(jnp.asarray(y1), t))
+    np.testing.assert_allclose(y1, y2, atol=1e-6)
+
+
+def test_fq_asym_grid_contains_left_edge():
+    x = np.float32([-10.0, 10.0])
+    y = np.asarray(K.fq_asym(jnp.asarray(x), jnp.float32(-1.0), jnp.float32(3.0)))
+    assert y[0] == np.float32(-1.0)
+    assert abs(y[1] - 2.0) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([(4, 8, 4), (16, 16, 16), (128, 64, 128), (130, 32, 257), (1, 1, 1)]),
+    st.integers(0, 99),
+)
+def test_qmatmul_matches_ref(dims, seed):
+    m, k, n = dims
+    rs = np.random.RandomState(seed)
+    a = rs.randint(-127, 128, (m, k), dtype=np.int8)
+    b = rs.randint(-127, 128, (k, n), dtype=np.int8)
+    got = Q.qmatmul(jnp.asarray(a), jnp.asarray(b))
+    want = ref.qmatmul(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qmatmul_saturating_inputs_accumulate_in_i32():
+    a = np.full((8, 512), 127, dtype=np.int8)
+    b = np.full((512, 8), 127, dtype=np.int8)
+    got = np.asarray(Q.qmatmul(jnp.asarray(a), jnp.asarray(b)))
+    assert got[0, 0] == 127 * 127 * 512  # > i16 range: accumulator is i32
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 99), st.integers(2, 64))
+def test_histogram_matches_ref(seed, bins):
+    x = _rand((1000,), seed, scale=1.0)
+    got = Q.histogram(jnp.asarray(x), -3.0, 3.0, bins=bins)
+    want = ref.histogram(x, -3.0, 3.0, bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(got).sum()) == 1000

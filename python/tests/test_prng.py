@@ -1,0 +1,56 @@
+"""Portable-PRNG unit tests. Golden values are duplicated in
+rust/src/data/prng.rs tests — if you change one side, change both."""
+
+import numpy as np
+
+from compile import prng
+
+
+def test_splitmix_golden():
+    # Goldens mirrored in rust/src/data/prng.rs tests.
+    assert int(prng.splitmix64(np.uint64(0))) == 0
+    assert int(prng.splitmix64(np.uint64(1))) == 0x5692161D100B05E5
+    assert int(prng.splitmix64(np.uint64(0xDEADBEEF))) == 0x4E062702EC929EEA
+    assert int(prng.hash_u64(1, 2, 3, 4, 5, 6)) == 0x472D0DD1FD5C3C80
+    assert int(prng.hash_u64(42, 7, 0)) == 0x66E2C29779EF6A7B
+    assert float(prng.uniform(42, 7, 0)) == np.float32(0.40189755)
+    assert float(
+        prng.uniform(1, 0, prng.SLOT_NOISE, 3, 5, 2)
+    ) == np.float32(0.103233337)
+
+
+def test_hash_changes_with_every_key_component():
+    base = int(prng.hash_u64(1, 2, 3, 4, 5, 6))
+    assert base != int(prng.hash_u64(2, 2, 3, 4, 5, 6))
+    assert base != int(prng.hash_u64(1, 3, 3, 4, 5, 6))
+    assert base != int(prng.hash_u64(1, 2, 4, 4, 5, 6))
+    assert base != int(prng.hash_u64(1, 2, 3, 5, 5, 6))
+    assert base != int(prng.hash_u64(1, 2, 3, 4, 6, 6))
+    assert base != int(prng.hash_u64(1, 2, 3, 4, 5, 7))
+
+
+def test_uniform_range_and_resolution():
+    idx = np.arange(100000, dtype=np.uint64)
+    u = prng.uniform(42, idx, 0)
+    assert u.dtype == np.float32
+    assert float(u.min()) >= 0.0
+    assert float(u.max()) < 1.0
+    assert abs(float(u.mean()) - 0.5) < 0.01
+    # exact representability: u * 2^24 must be integral
+    scaled = u.astype(np.float64) * 16777216.0
+    assert np.all(scaled == np.floor(scaled))
+
+
+def test_uniform_vectorised_matches_scalar():
+    idx = np.arange(16, dtype=np.uint64)
+    vec = prng.uniform(7, idx, 3)
+    for i in range(16):
+        assert vec[i] == prng.uniform(7, np.uint64(i), 3)
+
+
+def test_uniform_decorrelated_across_slots():
+    idx = np.arange(4096, dtype=np.uint64)
+    a = prng.uniform(1, idx, 0)
+    b = prng.uniform(1, idx, 1)
+    corr = np.corrcoef(a, b)[0, 1]
+    assert abs(corr) < 0.05

@@ -1,0 +1,156 @@
+"""STE gradients and threshold-adjustment semantics (paper §3.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quantize as qz
+
+
+def test_fq_sym_ste_grad_x():
+    # In-range elements pass gradient through; saturated elements block it.
+    x = jnp.float32([-3.0, -0.5, 0.0, 0.5, 3.0])
+    t = jnp.float32(1.0)
+    g = jax.grad(lambda x: jnp.sum(qz.fq_sym(x, t, False) * 2.0))(x)
+    np.testing.assert_allclose(g, [0.0, 2.0, 2.0, 2.0, 0.0])
+
+
+def test_fq_sym_ste_grad_t():
+    # dy/dT = sign(x) on saturated elements; (y-x)/T round residual in range
+    # (exact STE with the quotient rule kept, paper eq. 16-19).
+    x = jnp.float32([-3.0, 0.5, 3.0, 4.0])
+    f = lambda t: jnp.sum(qz.fq_sym(x, t, False))
+    g = jax.grad(f)(jnp.float32(1.0))
+    y05 = float(np.round(0.5 * 127.0) / 127.0)
+    want = -1.0 + (y05 - 0.5) + 1.0 + 1.0
+    assert abs(float(g) - want) < 1e-6
+
+
+def test_fq_sym_grad_nonzero_at_alpha_one():
+    """The round-residual term makes T trainable even with no saturation —
+    the property FAT training relies on at α=1 init."""
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.normal(0, 0.3, (256,)).astype(np.float32))
+    t = jnp.float32(float(jnp.max(jnp.abs(x))))  # exactly max|x|: no sat
+    g = jax.grad(lambda t: jnp.sum(qz.fq_sym(x, t, False) ** 2))(t)
+    assert float(jnp.abs(g)) > 0.0
+
+
+def test_fq_sym_unsigned_grad():
+    x = jnp.float32([-1.0, 0.5, 3.0])
+    f = lambda t: jnp.sum(qz.fq_sym(x, t, True))
+    g = jax.grad(f)(jnp.float32(1.0))
+    y05 = float(np.round(0.5 * 255.0) / 255.0)
+    # low clip plateau (x=-1) has zero T-derivative; x=0.5 residual; x=3 sat.
+    assert abs(float(g) - ((y05 - 0.5) + 1.0)) < 1e-6
+    gx = jax.grad(lambda x: jnp.sum(qz.fq_sym(x, jnp.float32(1.0), True)))(x)
+    np.testing.assert_allclose(gx, [0.0, 1.0, 0.0])
+
+
+def test_fq_sym_ch_grad_t_per_channel():
+    x = jnp.float32([[0.5, 3.0], [-2.0, 0.1]])
+    t = jnp.float32([1.0, 1.0])
+    g = jax.grad(lambda t: jnp.sum(qz.fq_sym_ch(x, t)))(t)
+    res = lambda v: float(np.round(v * 127.0) / 127.0) - v
+    np.testing.assert_allclose(
+        g, [res(0.5) - 1.0, 1.0 + res(0.1)], atol=1e-6
+    )
+
+
+def test_fq_asym_grads():
+    x = jnp.float32([-5.0, 0.0, 5.0])
+    left = jnp.float32(-1.0)
+    width = jnp.float32(2.0)
+
+    gl = jax.grad(lambda l: jnp.sum(qz.fq_asym(x, l, width)))(left)
+    gw = jax.grad(lambda w: jnp.sum(qz.fq_asym(x, left, w)))(width)
+    # low saturation + high saturation track left; only high tracks width
+    # (plus the x=0 round residual).
+    assert float(gl) == 2.0
+    y0 = float(np.round(1.0 * 255.0 / 2.0) / (255.0 / 2.0) - 1.0)
+    assert abs(float(gw) - (1.0 + (y0 - 0.0) / 2.0)) < 1e-6
+    gx = jax.grad(lambda x: jnp.sum(qz.fq_asym(x, left, width)))(x)
+    np.testing.assert_allclose(gx, [0.0, 1.0, 0.0])
+
+
+def test_adjust_sym_clip_range():
+    t = jnp.float32(10.0)
+    assert float(qz.adjust_sym(jnp.float32(0.2), t)) == 5.0  # clipped at 0.5
+    assert float(qz.adjust_sym(jnp.float32(2.0), t)) == 10.0  # clipped at 1.0
+    assert abs(float(qz.adjust_sym(jnp.float32(0.75), t)) - 7.5) < 1e-6
+
+
+def test_adjust_sym_grad_zero_outside_clip():
+    t = jnp.float32(10.0)
+    g_in = jax.grad(lambda a: qz.adjust_sym(a, t))(jnp.float32(0.75))
+    g_out = jax.grad(lambda a: qz.adjust_sym(a, t))(jnp.float32(1.5))
+    assert float(g_in) == 10.0
+    assert float(g_out) == 0.0
+
+
+def test_adjust_asym_empiric_ranges():
+    t_l, t_r = jnp.float32(-2.0), jnp.float32(6.0)  # R = 8
+    # signed: alpha_t clips to [-0.2, 0.4]
+    left, width = qz.adjust_asym(
+        jnp.float32(-1.0), jnp.float32(1.0), t_l, t_r, unsigned=False
+    )
+    assert abs(float(left) - (-2.0 + (-0.2) * 8.0)) < 1e-5
+    assert float(width) == 8.0
+    # unsigned: alpha_t clips to [0, 0.4]; alpha_r to [0.5, 1]
+    left, width = qz.adjust_asym(
+        jnp.float32(-1.0), jnp.float32(0.1), t_l, t_r, unsigned=True
+    )
+    assert float(left) == -2.0
+    assert float(width) == 4.0
+
+
+def test_trainable_init_shapes():
+    from compile import graph, models
+
+    g, _ = graph.fold_bn(
+        models.mobilenet_v2_mini(),
+        graph.init_params(models.mobilenet_v2_mini()),
+    )
+    tr = qz.trainable_init(g, qz.MODES["sym_vector"])
+    # vector mode: conv/dwconv get per-channel alphas, dense scalar
+    assert tr["w_a:head_dense"].shape == ()
+    assert tr["w_a:stem_conv"].shape == (16,)
+    tr2 = qz.trainable_init(g, qz.MODES["asym_scalar"])
+    assert "act_at" in tr2 and "act_ar" in tr2 and "act_a" not in tr2
+    assert all(v.ndim == 0 for k, v in tr2.items() if k.startswith("w_a:"))
+
+
+def test_quant_forward_alpha_one_close_to_fp():
+    """With α=1 and exact-max calibration, fake-quant ≈ FP (8-bit error)."""
+    import numpy as np
+
+    from compile import graph, interp, models, train
+
+    g0 = models.resnet_mini()
+    p0 = graph.init_params(g0, seed=3)
+    g, p = graph.fold_bn(g0, p0)
+    x = np.random.RandomState(0).rand(4, 32, 32, 3).astype(np.float32)
+    mm, _ = train.make_calib_stats(g)(p, x)
+    fp_logits = interp.forward(g, p, x)
+    for mode in ("sym_scalar", "sym_vector", "asym_scalar", "asym_vector"):
+        cfg = qz.MODES[mode]
+        tr = qz.trainable_init(g, cfg)
+        ql = qz.quant_forward(g, cfg, p, mm, tr, x)
+        rel = float(
+            jnp.linalg.norm(ql - fp_logits) / jnp.linalg.norm(fp_logits)
+        )
+        assert rel < 0.35, (mode, rel)
+
+
+def test_pointwise_identity_at_one():
+    from compile import graph, models, train
+
+    g0 = models.mobilenet_v2_mini()
+    g, p = graph.fold_bn(g0, graph.init_params(g0, seed=1))
+    x = np.random.RandomState(1).rand(2, 32, 32, 3).astype(np.float32)
+    mm, _ = train.make_calib_stats(g)(p, x)
+    cfg = qz.MODES["sym_scalar"]
+    pw = qz.pointwise_init(g, p)
+    a = qz.quant_forward_pointwise(g, cfg, p, mm, pw, x)
+    b = qz.quant_forward(g, cfg, p, mm, qz.trainable_init(g, cfg), x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,29 @@
+//! Data-substrate benchmarks: SynthShapes generation + batcher throughput.
+//! (Plain-binary harness; criterion is unavailable on this offline box.)
+
+use fat::data::{loader, synth, Split};
+use fat::util::bench::{bench_throughput, BenchOpts};
+
+fn main() {
+    let opts = BenchOpts { warmup: 1, iters: 5, max_secs: 20.0 };
+
+    let idx: Vec<u64> = (0..256).collect();
+    bench_throughput("synth_generate_256", &opts, 256, || {
+        let (img, _) = synth::generate(synth::SEED_TRAIN, &idx);
+        std::hint::black_box(img.len());
+    });
+
+    let batcher = loader::Batcher::new(Split::Train, (0..320).collect(), 32)
+        .shuffled(7);
+    bench_throughput("batcher_epoch_320", &opts, 320, || {
+        for (x, _) in batcher.epoch_iter(0) {
+            std::hint::black_box(x.len());
+        }
+    });
+
+    bench_throughput("shuffle_12k", &opts, 12_000, || {
+        let mut v: Vec<u64> = (0..12_000).collect();
+        loader::shuffle(&mut v, 3, 1);
+        std::hint::black_box(v[0]);
+    });
+}

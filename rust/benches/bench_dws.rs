@@ -1,0 +1,66 @@
+//! §4.2 / §3.3 bench: DWS pattern matching, scale computation, full
+//! rescale, spread injection and the point-wise fine-tune step — the
+//! moving parts behind the dws_ladder experiment.
+
+use std::sync::Arc;
+
+use fat::coordinator::experiments::{MOBILENET_SPREAD_LOG2, SPREAD_SEED};
+use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::quant::dws;
+use fat::runtime::{Registry, Runtime};
+use fat::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models/mobilenet_v2_mini").exists() {
+        println!("SKIP dws bench (run `make artifacts`)");
+        return;
+    }
+    let opts = BenchOpts { warmup: 1, iters: 10, max_secs: 60.0 };
+    let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu().unwrap())));
+    let p = Pipeline::new(reg.clone(), &artifacts, "mobilenet_v2_mini").unwrap();
+
+    bench("dws_find_patterns", &opts, || {
+        std::hint::black_box(dws::find_patterns(&p.graph).len());
+    });
+
+    let stats = p.calibrate(50).unwrap();
+    let ch_max: std::collections::BTreeMap<String, Vec<f32>> = stats
+        .channel_minmax
+        .iter()
+        .map(|(k, v)| (k.clone(), v.iter().map(|m| m.max).collect()))
+        .collect();
+    bench("dws_rescale_model", &opts, || {
+        let mut w = p.weights.clone();
+        std::hint::black_box(
+            dws::rescale_model(&p.graph, &mut w, &ch_max).unwrap().len(),
+        );
+    });
+
+    bench("dws_inject_spread", &opts, || {
+        let mut w = p.weights.clone();
+        std::hint::black_box(
+            dws::inject_spread(
+                &p.graph,
+                &mut w,
+                SPREAD_SEED,
+                MOBILENET_SPREAD_LOG2,
+            )
+            .unwrap(),
+        );
+    });
+
+    // point-wise fine-tune step (the §4.2 rung-2 unit of work)
+    let mut cfg = PipelineConfig::default();
+    cfg.max_steps = 1;
+    cfg.epochs = 1;
+    let sopts = BenchOpts { warmup: 1, iters: 3, max_secs: 60.0 };
+    bench("pointwise_finetune_step", &sopts, || {
+        std::hint::black_box(
+            p.finetune_pointwise(&stats, &cfg, |_, _, _| {})
+                .unwrap()
+                .1
+                .len(),
+        );
+    });
+}

@@ -1,0 +1,78 @@
+//! int8 engine benchmarks (deployment simulator hot path): GEMM, im2col,
+//! per-op kernels and whole-model throughput. The §Perf optimization log
+//! in EXPERIMENTS.md tracks these numbers.
+
+use std::sync::Arc;
+
+use fat::int8::{gemm, im2col, qtensor::QTensor};
+use fat::quant::export::QuantMode;
+use fat::quant::scale::QParams;
+use fat::util::bench::{bench, bench_throughput, BenchOpts};
+use fat::util::prop;
+
+fn main() {
+    let opts = BenchOpts { warmup: 1, iters: 10, max_secs: 30.0 };
+
+    // raw GEMM: (1024, 144) x (144, 64) — a typical conv layer shape
+    let (m, k, n) = (1024, 144, 64);
+    let a = prop::i8s(1, m * k);
+    let b = prop::i8s(2, k * n);
+    let sums = gemm::col_sums(&b, k, n);
+    let mut out = vec![0i32; m * n];
+    let macs = m * k * n;
+    bench_throughput("gemm_i8_1024x144x64_macs", &opts, macs, || {
+        gemm::gemm_i8(&a, -3, &b, &sums, m, k, n, &mut out);
+        std::hint::black_box(out[0]);
+    });
+
+    // im2col for a 32x32x16 image, 3x3
+    let x = prop::i8s(3, 32 * 32 * 16);
+    bench("im2col_32x32x16_k3", &opts, || {
+        let (p, _, _) = im2col::im2col_i8(&x, 1, 32, 32, 16, 3, 1, 0);
+        std::hint::black_box(p.len());
+    });
+
+    // dwconv 3x3 over 32x32x64
+    let qp = QParams::symmetric_signed(1.0);
+    let xq = QTensor {
+        shape: vec![1, 32, 32, 64],
+        data: prop::i8s(4, 32 * 32 * 64),
+        qp,
+    };
+    let wq = prop::i8s(5, 9 * 64);
+    let bias = vec![0i32; 64];
+    let req = vec![fat::quant::scale::quantize_multiplier(0.001); 64];
+    bench("dwconv_32x32x64_k3", &opts, || {
+        let y = fat::int8::ops::dwconv2d(
+            &xq, &wq, &bias, &req, qp, (-127, 127), 3, 1,
+        );
+        std::hint::black_box(y.data[0]);
+    });
+
+    // whole-model throughput (needs artifacts)
+    let artifacts = fat::artifacts_dir();
+    if artifacts.join("models/mobilenet_v2_mini").exists() {
+        let rt = fat::runtime::Runtime::cpu().unwrap();
+        let reg = Arc::new(fat::runtime::Registry::new(Arc::new(rt)));
+        let p = fat::coordinator::Pipeline::new(
+            reg,
+            &artifacts,
+            "mobilenet_v2_mini",
+        )
+        .unwrap();
+        let stats = p.calibrate(25).unwrap();
+        let trained = p.identity_trained(QuantMode::SymVector);
+        let qm = p
+            .export_int8(QuantMode::SymVector, &stats, &trained)
+            .unwrap();
+        let (x, _) = fat::data::loader::batch(
+            fat::data::Split::Val,
+            &(0..50).collect::<Vec<_>>(),
+        );
+        bench_throughput("int8_mobilenet_batch50", &opts, 50, || {
+            std::hint::black_box(qm.run_batch(&x).unwrap().len());
+        });
+    } else {
+        println!("SKIP int8 whole-model bench (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,86 @@
+//! Quant-substrate benchmarks: BN fold, weight quantization, fake-quant
+//! hot loop, §3.3 rescale, calibrators.
+
+use fat::model::ModelStore;
+use fat::quant::calibrate::{kl_threshold, percentile_threshold};
+use fat::quant::scale::QParams;
+use fat::quant::{dws, fold};
+use fat::tensor::Tensor;
+use fat::util::bench::{bench, bench_throughput, BenchOpts};
+use fat::util::prop;
+
+fn main() {
+    let opts = BenchOpts { warmup: 1, iters: 10, max_secs: 20.0 };
+
+    // fake-quant hot loop over 1M values
+    let xs = prop::f32s(1, 1 << 20, -3.0, 3.0);
+    let qp = QParams::symmetric_signed(2.5);
+    bench_throughput("fake_quant_1M", &opts, xs.len(), || {
+        let mut acc = 0f32;
+        for &v in &xs {
+            acc += qp.fake_quant(v);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // weight quantization per mode
+    let w = Tensor::f32(vec![3, 3, 64, 128], prop::f32s(2, 3 * 3 * 64 * 128, -1.0, 1.0));
+    bench("quantize_weights_scalar_74k", &opts, || {
+        let r = fat::quant::export::quantize_weights(&w, 128, false, &[1.0]);
+        std::hint::black_box(r.unwrap().0.len());
+    });
+    bench("quantize_weights_vector_74k", &opts, || {
+        let r = fat::quant::export::quantize_weights(
+            &w,
+            128,
+            true,
+            &vec![1.0; 128],
+        );
+        std::hint::black_box(r.unwrap().0.len());
+    });
+
+    // calibrators on a 128-bin histogram
+    let hist: Vec<u32> = (0..128)
+        .map(|i| {
+            let x = -4.0 + 8.0 * (i as f32 + 0.5) / 128.0;
+            (1e5 * (-x * x / 2.0).exp()) as u32
+        })
+        .collect();
+    bench("calibrator_percentile", &opts, || {
+        std::hint::black_box(percentile_threshold(&hist, -4.0, 4.0, 9990));
+    });
+    bench("calibrator_kl", &opts, || {
+        std::hint::black_box(kl_threshold(&hist, -4.0, 4.0));
+    });
+
+    // artifact-dependent: BN fold + §3.3 over the real model
+    let artifacts = fat::artifacts_dir();
+    if artifacts.join("models/mobilenet_v2_mini").exists() {
+        let store =
+            ModelStore::open(&artifacts, "mobilenet_v2_mini").unwrap();
+        let g = store.graph().unwrap();
+        let raw = store.raw_weights().unwrap();
+        bench("bn_fold_mobilenet", &opts, || {
+            std::hint::black_box(fold::fold_bn(&g, &raw).unwrap().len());
+        });
+
+        let fg = store.folded_graph().unwrap();
+        let folded = fold::fold_bn(&g, &raw).unwrap();
+        let ch_max: std::collections::BTreeMap<String, Vec<f32>> =
+            fat::quant::dws::find_patterns(&fg)
+                .iter()
+                .map(|p| {
+                    let c = fg.node(&p.dw).unwrap().ch;
+                    (p.dw.clone(), vec![3.0; c])
+                })
+                .collect();
+        bench("dws_rescale_mobilenet", &opts, || {
+            let mut w = folded.clone();
+            std::hint::black_box(
+                dws::rescale_model(&fg, &mut w, &ch_max).unwrap().len(),
+            );
+        });
+    } else {
+        println!("SKIP artifact-dependent quant benches (run `make artifacts`)");
+    }
+}

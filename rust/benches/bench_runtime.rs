@@ -1,0 +1,113 @@
+//! PJRT runtime benchmarks: artifact dispatch overhead, marshalling cost,
+//! fp_forward/quant_fwd/train_step latency. These bound the L3 hot loop —
+//! the fine-tune step time is the paper-pipeline's unit of work.
+
+use std::sync::Arc;
+
+use fat::coordinator::finetune::init_trainables;
+use fat::coordinator::marshal::{build_inputs, Group};
+use fat::model::ModelStore;
+use fat::runtime::{Registry, Runtime};
+use fat::util::bench::{bench, bench_throughput, BenchOpts};
+
+fn main() {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models/mobilenet_v2_mini").exists() {
+        println!("SKIP runtime benches (run `make artifacts`)");
+        return;
+    }
+    let opts = BenchOpts { warmup: 1, iters: 8, max_secs: 60.0 };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let reg = Arc::new(Registry::new(rt));
+    let model = "mobilenet_v2_mini";
+    let store = ModelStore::open(&artifacts, model).unwrap();
+    let raw_graph = store.graph().unwrap();
+    let weights =
+        fat::quant::fold::fold_bn(&raw_graph, &store.raw_weights().unwrap())
+            .unwrap();
+
+    // fp_forward (batch 100)
+    let art = reg.get(store.artifact_path("fp_forward")).unwrap();
+    let (x, _) = fat::data::loader::batch(
+        fat::data::Split::Val,
+        &(0..100).collect::<Vec<_>>(),
+    );
+    let inputs =
+        build_inputs(&art.manifest, &[Group::Map(&weights), Group::Single(&x)])
+            .unwrap();
+    bench_throughput("fp_forward_b100", &opts, 100, || {
+        std::hint::black_box(art.execute(&inputs).unwrap().len());
+    });
+
+    // marshalling alone (literal creation dominates dispatch overhead)
+    bench("marshal_build_inputs_fp", &opts, || {
+        std::hint::black_box(
+            build_inputs(
+                &art.manifest,
+                &[Group::Map(&weights), Group::Single(&x)],
+            )
+            .unwrap()
+            .len(),
+        );
+    });
+
+    // quant forward (sym_vector, batch 100)
+    let qart = reg.get(store.artifact_path("quant_fwd_sym_vector")).unwrap();
+    let ts = reg.get(store.artifact_path("train_step_sym_vector")).unwrap();
+    let tr = init_trainables(&ts);
+    let act_t = fat::tensor::Tensor::f32(
+        vec![store.sites().unwrap().sites.len(), 2],
+        store
+            .sites()
+            .unwrap()
+            .sites
+            .iter()
+            .flat_map(|_| [0.0f32, 3.0])
+            .collect(),
+    );
+    let qinputs = build_inputs(
+        &qart.manifest,
+        &[
+            Group::Map(&weights),
+            Group::Single(&act_t),
+            Group::Map(&tr),
+            Group::Single(&x),
+        ],
+    )
+    .unwrap();
+    bench_throughput("quant_fwd_sym_vector_b100", &opts, 100, || {
+        std::hint::black_box(qart.execute(&qinputs).unwrap().len());
+    });
+
+    // train step (batch 32) — the fine-tune unit of work
+    let (xb, _) = fat::data::loader::batch(
+        fat::data::Split::Train,
+        &(0..32).collect::<Vec<_>>(),
+    );
+    let m: std::collections::BTreeMap<_, _> = tr
+        .iter()
+        .map(|(k, t)| {
+            (k.clone(), fat::tensor::Tensor::zeros_f32(t.shape.clone()))
+        })
+        .collect();
+    let step = fat::tensor::Tensor::scalar_f32(1.0);
+    let lr = fat::tensor::Tensor::scalar_f32(0.01);
+    let tinputs = build_inputs(
+        &ts.manifest,
+        &[
+            Group::Map(&weights),
+            Group::Single(&act_t),
+            Group::Map(&tr),
+            Group::Map(&m),
+            Group::Map(&m),
+            Group::Single(&step),
+            Group::Single(&lr),
+            Group::Single(&xb),
+        ],
+    )
+    .unwrap();
+    let topts = BenchOpts { warmup: 1, iters: 5, max_secs: 60.0 };
+    bench("train_step_sym_vector_b32", &topts, || {
+        std::hint::black_box(ts.execute(&tinputs).unwrap().len());
+    });
+}

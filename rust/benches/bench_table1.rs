@@ -1,0 +1,50 @@
+//! Table-1 pipeline bench: times each stage of the scalar-mode experiment
+//! (calibration, no-finetune eval, one fine-tune step, final eval) per
+//! architecture. The accuracy regeneration itself is the `table1` binary;
+//! this harness tracks the *cost* of producing the table.
+
+use std::sync::Arc;
+
+use fat::coordinator::experiments::{Ctx, TABLE_MODELS};
+use fat::coordinator::PipelineConfig;
+use fat::quant::export::QuantMode;
+use fat::runtime::{Registry, Runtime};
+use fat::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models/mobilenet_v2_mini").exists() {
+        println!("SKIP table1 bench (run `make artifacts`)");
+        return;
+    }
+    let ctx = Ctx::new(
+        Arc::new(Registry::new(Arc::new(Runtime::cpu().unwrap()))),
+        &artifacts,
+    );
+    let opts = BenchOpts { warmup: 0, iters: 3, max_secs: 120.0 };
+    for model in TABLE_MODELS {
+        let p = ctx.pipeline(model).unwrap();
+        bench(&format!("t1_calibrate_100_{model}"), &opts, || {
+            std::hint::black_box(p.calibrate(100).unwrap().batches);
+        });
+        let stats = p.calibrate(100).unwrap();
+        let tr = p.identity_trainables(QuantMode::SymScalar).unwrap();
+        bench(&format!("t1_eval_500_{model}"), &opts, || {
+            std::hint::black_box(
+                p.quant_accuracy(QuantMode::SymScalar, &stats, &tr, 500)
+                    .unwrap(),
+            );
+        });
+        let mut cfg = PipelineConfig::default();
+        cfg.max_steps = 1;
+        cfg.epochs = 1;
+        bench(&format!("t1_finetune_step_{model}"), &opts, || {
+            std::hint::black_box(
+                p.finetune(QuantMode::SymScalar, &stats, &cfg, |_, _, _| {})
+                    .unwrap()
+                    .1
+                    .len(),
+            );
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! Table-2 pipeline bench: vector-mode stage costs (per-channel weight
+//! thresholds make the train step marginally heavier than Table 1's
+//! scalar mode — this harness quantifies that overhead).
+
+use std::sync::Arc;
+
+use fat::coordinator::experiments::{Ctx, TABLE_MODELS};
+use fat::coordinator::PipelineConfig;
+use fat::quant::export::QuantMode;
+use fat::runtime::{Registry, Runtime};
+use fat::util::bench::{bench, BenchOpts};
+
+fn main() {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models/mobilenet_v2_mini").exists() {
+        println!("SKIP table2 bench (run `make artifacts`)");
+        return;
+    }
+    let ctx = Ctx::new(
+        Arc::new(Registry::new(Arc::new(Runtime::cpu().unwrap()))),
+        &artifacts,
+    );
+    let opts = BenchOpts { warmup: 0, iters: 3, max_secs: 120.0 };
+    for model in TABLE_MODELS {
+        let p = ctx.pipeline(model).unwrap();
+        let stats = p.calibrate(100).unwrap();
+        for mode in [QuantMode::SymVector, QuantMode::AsymVector] {
+            let tr = p.identity_trainables(mode).unwrap();
+            bench(
+                &format!("t2_eval_500_{model}_{}", mode.name()),
+                &opts,
+                || {
+                    std::hint::black_box(
+                        p.quant_accuracy(mode, &stats, &tr, 500).unwrap(),
+                    );
+                },
+            );
+            let mut cfg = PipelineConfig::default();
+            cfg.max_steps = 1;
+            cfg.epochs = 1;
+            bench(
+                &format!("t2_finetune_step_{model}_{}", mode.name()),
+                &opts,
+                || {
+                    std::hint::black_box(
+                        p.finetune(mode, &stats, &cfg, |_, _, _| {})
+                            .unwrap()
+                            .1
+                            .len(),
+                    );
+                },
+            );
+        }
+    }
+}

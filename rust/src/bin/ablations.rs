@@ -1,0 +1,34 @@
+//! **A1 ablations** (ours, DESIGN.md §4): calibration-set size sweep and
+//! baseline threshold calibrators (max / percentile / KL) compared without
+//! fine-tuning — quantifies how much of FAT's gain comes from the trained
+//! scales rather than better static calibration.
+//!
+//!   cargo run --release --bin ablations -- [--model mnas_mini_10] [--val N]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fat::coordinator::experiments::{ablations, Ctx};
+use fat::coordinator::PipelineConfig;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["fast"]);
+    let ctx = Ctx::new(
+        Arc::new(Registry::new(Arc::new(Runtime::cpu()?))),
+        args.get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(fat::artifacts_dir),
+    );
+    let model = args.get_or("model", "mnas_mini_10");
+    let mut cfg = PipelineConfig::default();
+    cfg.val_images = args.usize_or("val", 1000);
+
+    let rep = ablations(&ctx, model, &cfg, |s| println!("{s}"))?;
+    print!("{}", rep.markdown());
+    let csv = ctx.results_dir().join("ablations.csv");
+    rep.write_csv(&csv)?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

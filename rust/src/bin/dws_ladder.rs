@@ -1,0 +1,38 @@
+//! Regenerates the **§4.2 experiment**: the accuracy ladder of scalar-
+//! quantized MobileNet-v2 — plain scalar quantization collapses, §3.3
+//! DWS weight rescaling recovers most of it, point-wise weight fine-tuning
+//! (scales in [0.75, 1.25]) recovers the rest.
+//!
+//!   cargo run --release --bin dws_ladder -- [--fast] [--val N]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fat::coordinator::experiments::{dws_ladder, Ctx};
+use fat::coordinator::PipelineConfig;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["fast"]);
+    let ctx = Ctx::new(
+        Arc::new(Registry::new(Arc::new(Runtime::cpu()?))),
+        args.get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(fat::artifacts_dir),
+    );
+    let mut cfg = PipelineConfig::default();
+    if args.flag("fast") {
+        cfg = cfg.fast();
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs);
+    cfg.val_images = args.usize_or("val", cfg.val_images);
+    cfg.max_steps = args.usize_or("max-steps", cfg.max_steps);
+
+    let rep = dws_ladder(&ctx, &cfg, |s| println!("{s}"))?;
+    print!("{}", rep.markdown());
+    let csv = ctx.results_dir().join("dws_ladder.csv");
+    rep.write_csv(&csv)?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Regenerates **Table 1** of the paper: 8-bit *scalar* quantization,
+//! symmetric vs asymmetric trained thresholds vs original accuracy, for
+//! the three mobile architectures.
+//!
+//!   cargo run --release --bin table1 -- [--fast] [--epochs N] [--val N]
+//!
+//! Writes `artifacts/results/table1.csv` and prints the markdown table.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fat::coordinator::experiments::{accuracy_table, Ctx};
+use fat::coordinator::PipelineConfig;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["fast"]);
+    let ctx = Ctx::new(
+        Arc::new(Registry::new(Arc::new(Runtime::cpu()?))),
+        args.get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(fat::artifacts_dir),
+    );
+    let mut cfg = PipelineConfig::default();
+    if args.flag("fast") {
+        cfg = cfg.fast();
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs);
+    cfg.val_images = args.usize_or("val", cfg.val_images);
+    cfg.max_steps = args.usize_or("max-steps", cfg.max_steps);
+
+    let rep = accuracy_table(&ctx, false, &cfg, |s| println!("{s}"))?;
+    print!("{}", rep.markdown());
+    let csv = ctx.results_dir().join("table1.csv");
+    rep.write_csv(&csv)?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

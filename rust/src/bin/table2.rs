@@ -1,0 +1,37 @@
+//! Regenerates **Table 2** of the paper: 8-bit *vector* (per-filter)
+//! quantization — the mode where all three nets recover to within a
+//! fraction of a percent of FP accuracy.
+//!
+//!   cargo run --release --bin table2 -- [--fast] [--epochs N] [--val N]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fat::coordinator::experiments::{accuracy_table, Ctx};
+use fat::coordinator::PipelineConfig;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["fast"]);
+    let ctx = Ctx::new(
+        Arc::new(Registry::new(Arc::new(Runtime::cpu()?))),
+        args.get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(fat::artifacts_dir),
+    );
+    let mut cfg = PipelineConfig::default();
+    if args.flag("fast") {
+        cfg = cfg.fast();
+    }
+    cfg.epochs = args.usize_or("epochs", cfg.epochs);
+    cfg.val_images = args.usize_or("val", cfg.val_images);
+    cfg.max_steps = args.usize_or("max-steps", cfg.max_steps);
+
+    let rep = accuracy_table(&ctx, true, &cfg, |s| println!("{s}"))?;
+    print!("{}", rep.markdown());
+    let csv = ctx.results_dir().join("table2.csv");
+    rep.write_csv(&csv)?;
+    println!("wrote {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Pipeline configuration — the launcher's contract.
+//!
+//! Loaded from a flat `key = value` TOML-subset file (full TOML is not
+//! needed: all settings are scalars).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Full configuration of one FAT pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// model name under `artifacts/models/`
+    pub model: String,
+    /// quantization mode: sym_scalar | sym_vector | asym_scalar | asym_vector
+    pub mode: String,
+    /// calibration images (paper: 100)
+    pub calib_images: usize,
+    /// fine-tune epochs over the unlabeled subset (paper: 6-8)
+    pub epochs: usize,
+    /// every `finetune_stride`-th train image is used (paper: 10 => ~10%)
+    pub finetune_stride: usize,
+    /// Adam peak learning rate for threshold scales
+    pub lr: f32,
+    /// Adam peak learning rate for §4.2 point-wise weight scales (much
+    /// smaller: it perturbs every weight element)
+    pub pw_lr: f32,
+    /// cosine-annealing cycle in steps (0 = one cycle per epoch)
+    pub cycle: usize,
+    /// cap on fine-tune steps (0 = no cap) — useful on slow boxes
+    pub max_steps: usize,
+    /// validation images for accuracy reporting (0 = full split)
+    pub val_images: usize,
+    /// apply §3.3 DWS rescaling before quantization
+    pub dws_rescale: bool,
+    /// deterministic shuffle seed
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            model: "mobilenet_v2_mini".into(),
+            mode: "sym_scalar".into(),
+            calib_images: 100,
+            epochs: 6,
+            finetune_stride: 10,
+            lr: 2e-2,
+            pw_lr: 5e-4,
+            cycle: 0,
+            max_steps: 0,
+            val_images: 0,
+            dws_rescale: false,
+            seed: 0xFA7,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Parse a flat `key = value` config (strings may be quoted; `#`
+    /// starts a comment).
+    pub fn from_str(s: &str) -> Result<Self> {
+        let mut c = PipelineConfig::default();
+        for (lineno, line) in s.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("config line {}: expected key = value", lineno + 1)
+            })?;
+            let k = k.trim();
+            let v = v.trim().trim_matches('"').trim_matches('\'');
+            match k {
+                "model" => c.model = v.to_string(),
+                "mode" => c.mode = v.to_string(),
+                "calib_images" => c.calib_images = v.parse()?,
+                "epochs" => c.epochs = v.parse()?,
+                "finetune_stride" => c.finetune_stride = v.parse()?,
+                "lr" => c.lr = v.parse()?,
+                "pw_lr" => c.pw_lr = v.parse()?,
+                "cycle" => c.cycle = v.parse()?,
+                "max_steps" => c.max_steps = v.parse()?,
+                "val_images" => c.val_images = v.parse()?,
+                "dws_rescale" => c.dws_rescale = v.parse()?,
+                "seed" => c.seed = v.parse()?,
+                other => anyhow::bail!("unknown config key {other}"),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let s = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_str(&s)
+    }
+
+    /// Quick-run override used by examples/benches on slow machines.
+    pub fn fast(mut self) -> Self {
+        self.epochs = 2;
+        self.max_steps = 40;
+        self.val_images = 500;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.calib_images, 100);
+        assert_eq!(c.finetune_stride, 10);
+        assert!(c.epochs >= 6);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let c = PipelineConfig::from_str(
+            "model = 'mnas_mini_10'\nmode = \"asym_vector\"\nepochs = 2\n# comment\ndws_rescale = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.model, "mnas_mini_10");
+        assert_eq!(c.mode, "asym_vector");
+        assert_eq!(c.epochs, 2);
+        assert!(c.dws_rescale);
+        assert_eq!(c.calib_images, 100); // default preserved
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(PipelineConfig::from_str("nope = 3").is_err());
+    }
+}

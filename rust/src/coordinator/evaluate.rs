@@ -1,0 +1,98 @@
+//! Accuracy evaluation through the AOT forward artifacts.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Split};
+use crate::runtime::Artifact;
+use crate::tensor::Tensor;
+
+/// Argmax accuracy of `logits` (n, classes) against labels.
+pub fn argmax_accuracy(logits: &Tensor, labels: &[i32]) -> Result<(usize, usize)> {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    let d = logits.as_f32()?;
+    let mut correct = 0;
+    for i in 0..n {
+        let row = &d[i * c..(i + 1) * c];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        if arg as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    Ok((correct, n))
+}
+
+/// Evaluate accuracy over the validation split. `forward` maps an input
+/// batch to logits through some artifact; `val_images` of 0 = full split.
+pub fn accuracy_with(
+    batch_size: usize,
+    val_images: usize,
+    mut forward: impl FnMut(&Tensor) -> Result<Tensor>,
+) -> Result<f64> {
+    let total = if val_images == 0 {
+        crate::data::synth::VAL_SIZE
+    } else {
+        val_images.min(crate::data::synth::VAL_SIZE)
+    };
+    let batcher =
+        Batcher::new(Split::Val, (0..total as u64).collect(), batch_size);
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    for (x, labels) in batcher.epoch_iter(0) {
+        let logits = forward(&x)?;
+        let (c, n) = argmax_accuracy(&logits, &labels)?;
+        correct += c;
+        seen += n;
+    }
+    anyhow::ensure!(seen > 0, "no evaluation batches (batch {batch_size})");
+    Ok(correct as f64 / seen as f64)
+}
+
+/// Batch size of an artifact's designated input-batch argument.
+pub fn batch_size_of(art: &Arc<Artifact>, arg_name: &str) -> Result<usize> {
+    art.manifest
+        .inputs
+        .iter()
+        .find(|s| s.name == arg_name)
+        .map(|s| s.shape[0])
+        .ok_or_else(|| {
+            anyhow::anyhow!("{}: no input {arg_name}", art.manifest.name)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_counts() {
+        let l = Tensor::f32(vec![2, 3], vec![0.1, 0.9, 0.0, 1.0, 0.2, 0.3]);
+        let (c, n) = argmax_accuracy(&l, &[1, 0]).unwrap();
+        assert_eq!((c, n), (2, 2));
+        let (c, _) = argmax_accuracy(&l, &[0, 0]).unwrap();
+        assert_eq!(c, 1);
+    }
+
+    #[test]
+    fn accuracy_with_synthetic_forward() {
+        // forward that always predicts class = label via peeking batches
+        let acc = accuracy_with(50, 200, |x| {
+            let n = x.shape[0];
+            // labels for val indices are idx % 10 in batch order
+            let mut data = vec![0f32; n * 10];
+            for i in 0..n {
+                data[i * 10 + (i % 10)] = 1.0;
+            }
+            Ok(Tensor::f32(vec![n, 10], data))
+        })
+        .unwrap();
+        assert_eq!(acc, 1.0);
+    }
+}

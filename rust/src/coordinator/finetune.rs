@@ -1,0 +1,141 @@
+//! The FAT fine-tune loop: drives the `train_step_<mode>` artifact with
+//! RMSE-distillation batches (unlabeled — labels are generated but unused,
+//! exactly as the paper discards them), Adam on threshold scales only,
+//! cosine annealing with optimizer reset.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Split};
+use crate::runtime::Artifact;
+use crate::tensor::Tensor;
+
+use super::marshal::{build_inputs, split_outputs, Group};
+use super::schedule::CosineRestarts;
+
+/// Build the initial trainable map straight from the artifact manifest
+/// (group 2 of `train_step_*`): α=1, α_T=0, α_R=1.
+pub fn init_trainables(art: &Artifact) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for spec in &art.manifest.inputs {
+        if let Some(key) = spec.name.strip_prefix("2/") {
+            let n: usize = spec.shape.iter().product();
+            let v = if key == "act_at" { 0.0 } else { 1.0 };
+            out.insert(
+                key.to_string(),
+                Tensor::f32(spec.shape.clone(), vec![v; n]),
+            );
+        }
+    }
+    out
+}
+
+fn zeros_like(m: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+    m.iter()
+        .map(|(k, t)| (k.clone(), Tensor::zeros_f32(t.shape.clone())))
+        .collect()
+}
+
+/// Fine-tuning hyper-parameters (resolved from `PipelineConfig`).
+#[derive(Debug, Clone)]
+pub struct FinetuneOpts {
+    pub epochs: usize,
+    pub stride: usize,
+    pub lr: f32,
+    pub cycle: usize,
+    pub max_steps: usize,
+    pub seed: u64,
+}
+
+/// Run fine-tuning. Returns (trained map, per-step losses).
+pub fn run(
+    art: &Arc<Artifact>,
+    weights: &BTreeMap<String, Tensor>,
+    act_t: &Tensor,
+    opts: &FinetuneOpts,
+    mut progress: impl FnMut(usize, f32, f32),
+) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+    let batch_size = art
+        .manifest
+        .inputs
+        .iter()
+        .find(|s| s.name == "7")
+        .map(|s| s.shape[0])
+        .ok_or_else(|| anyhow::anyhow!("train_step: no batch input"))?;
+
+    let indices: Vec<u64> = (0..crate::data::synth::TRAIN_SIZE as u64)
+        .step_by(opts.stride.max(1))
+        .collect();
+    let batcher =
+        Batcher::new(Split::Train, indices, batch_size).shuffled(opts.seed);
+    let steps_per_epoch = batcher.batches_per_epoch().max(1);
+    let cycle = if opts.cycle == 0 { steps_per_epoch } else { opts.cycle };
+    let sched = CosineRestarts::new(opts.lr, cycle);
+
+    let mut tr = init_trainables(art);
+    let mut m = zeros_like(&tr);
+    let mut v = zeros_like(&tr);
+    let mut adam_step = 0f32; // resets with the optimizer (paper §4.1.2)
+    let mut losses = vec![];
+    let mut global = 0usize;
+
+    'outer: for epoch in 0..opts.epochs {
+        for (x, _unused_labels) in batcher.epoch_iter(epoch as u64) {
+            let (lr, restart) = sched.at(global);
+            if restart && global > 0 {
+                m = zeros_like(&tr);
+                v = zeros_like(&tr);
+                adam_step = 0.0;
+            }
+            adam_step += 1.0;
+            let step_t = Tensor::scalar_f32(adam_step);
+            let lr_t = Tensor::scalar_f32(lr);
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(weights),
+                    Group::Single(act_t),
+                    Group::Map(&tr),
+                    Group::Map(&m),
+                    Group::Map(&v),
+                    Group::Single(&step_t),
+                    Group::Single(&lr_t),
+                    Group::Single(&x),
+                ],
+            )?;
+            let outs = art.execute(&inputs)?;
+            let o = split_outputs(&art.manifest, outs)?;
+            let loss = o.singles[&0].as_f32()?[0];
+            tr = o.maps[&1].clone();
+            m = o.maps[&2].clone();
+            v = o.maps[&3].clone();
+            losses.push(loss);
+            progress(global, loss, lr);
+            global += 1;
+            if opts.max_steps > 0 && global >= opts.max_steps {
+                break 'outer;
+            }
+        }
+    }
+    Ok((tr, losses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finetune_opts_defaults_sane() {
+        let o = FinetuneOpts {
+            epochs: 6,
+            stride: 10,
+            lr: 2e-2,
+            cycle: 0,
+            max_steps: 0,
+            seed: 1,
+        };
+        assert_eq!(o.epochs, 6);
+    }
+}

@@ -1,0 +1,144 @@
+//! Manifest-driven marshalling: maps named tensor groups onto the flat
+//! positional argument lists of the AOT executables.
+//!
+//! Artifact input names look like `"<argpos>/<key>"` (pytree leaves) or
+//! `"<argpos>"` (scalars/arrays); outputs likewise. The coordinator never
+//! hard-codes an argument order — everything flows through the manifest.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::ArtifactManifest;
+use crate::tensor::Tensor;
+
+/// One positional argument group.
+pub enum Group<'a> {
+    /// A single tensor (e.g. the batch, a scalar).
+    Single(&'a Tensor),
+    /// A dict-of-tensors pytree (weights, trainables, optimizer state).
+    Map(&'a BTreeMap<String, Tensor>),
+}
+
+/// Assemble the positional input list in manifest order.
+pub fn build_inputs(
+    man: &ArtifactManifest,
+    groups: &[Group],
+) -> Result<Vec<Tensor>> {
+    let mut out = Vec::with_capacity(man.inputs.len());
+    for spec in &man.inputs {
+        let (pos, key) = split_name(&spec.name);
+        anyhow::ensure!(
+            pos < groups.len(),
+            "{}: input {} references arg {} but only {} groups given",
+            man.name,
+            spec.name,
+            pos,
+            groups.len()
+        );
+        let t = match (&groups[pos], key) {
+            (Group::Single(t), None) => (*t).clone(),
+            (Group::Map(m), Some(k)) => m
+                .get(k)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{}: missing key {k} in arg {pos}", man.name)
+                })?
+                .clone(),
+            (Group::Single(_), Some(k)) => {
+                anyhow::bail!("{}: arg {pos} is single but key {k} given", man.name)
+            }
+            (Group::Map(_), None) => {
+                anyhow::bail!("{}: arg {pos} is a map but no key", man.name)
+            }
+        };
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Split outputs back into groups: scalar outputs keyed `"<pos>"`,
+/// map outputs keyed `"<pos>/<key>"`.
+pub struct Outputs {
+    pub singles: BTreeMap<usize, Tensor>,
+    pub maps: BTreeMap<usize, BTreeMap<String, Tensor>>,
+}
+
+pub fn split_outputs(
+    man: &ArtifactManifest,
+    outs: Vec<Tensor>,
+) -> Result<Outputs> {
+    anyhow::ensure!(outs.len() == man.outputs.len(), "output arity mismatch");
+    let mut res = Outputs { singles: BTreeMap::new(), maps: BTreeMap::new() };
+    for (t, spec) in outs.into_iter().zip(&man.outputs) {
+        let (pos, key) = split_name(&spec.name);
+        match key {
+            None => {
+                res.singles.insert(pos, t);
+            }
+            Some(k) => {
+                res.maps.entry(pos).or_default().insert(k.to_string(), t);
+            }
+        }
+    }
+    Ok(res)
+}
+
+fn split_name(name: &str) -> (usize, Option<&str>) {
+    match name.split_once('/') {
+        Some((pos, key)) => (pos.parse().unwrap_or(0), Some(key)),
+        None => (name.parse().unwrap_or(0), None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn man() -> ArtifactManifest {
+        ArtifactManifest::from_json(
+            r#"{"name":"t","inputs":[
+                {"name":"0/b.w","shape":[2],"dtype":"f32"},
+                {"name":"0/a.w","shape":[1],"dtype":"f32"},
+                {"name":"1","shape":[],"dtype":"f32"}],
+              "outputs":[
+                {"name":"0","shape":[],"dtype":"f32"},
+                {"name":"1/x","shape":[2],"dtype":"f32"}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_in_manifest_order() {
+        let mut w = BTreeMap::new();
+        w.insert("a.w".to_string(), Tensor::f32(vec![1], vec![1.0]));
+        w.insert("b.w".to_string(), Tensor::f32(vec![2], vec![2.0, 3.0]));
+        let s = Tensor::scalar_f32(7.0);
+        let ins =
+            build_inputs(&man(), &[Group::Map(&w), Group::Single(&s)]).unwrap();
+        assert_eq!(ins.len(), 3);
+        assert_eq!(ins[0].shape, vec![2]); // b.w first (manifest order)
+        assert_eq!(ins[1].shape, vec![1]);
+        assert_eq!(ins[2].as_f32().unwrap(), &[7.0]);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let w = BTreeMap::new();
+        let s = Tensor::scalar_f32(0.0);
+        assert!(
+            build_inputs(&man(), &[Group::Map(&w), Group::Single(&s)])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn outputs_split() {
+        let outs = vec![
+            Tensor::scalar_f32(0.5),
+            Tensor::f32(vec![2], vec![1.0, 2.0]),
+        ];
+        let o = split_outputs(&man(), outs).unwrap();
+        assert_eq!(o.singles[&0].as_f32().unwrap(), &[0.5]);
+        assert_eq!(o.maps[&1]["x"].as_f32().unwrap(), &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the FAT quantization pipeline.
+//!
+//! Orchestrates the paper's end-to-end flow with Python long gone:
+//! calibrate → (optional §3.3 DWS rescale) → init α → fine-tune thresholds
+//! (RMSE distillation via the `train_step_*` artifacts, Adam + cosine
+//! annealing with optimizer reset) → evaluate → export int8.
+
+pub mod config;
+pub mod evaluate;
+pub mod experiments;
+pub mod finetune;
+pub mod marshal;
+pub mod pipeline;
+pub mod report;
+pub mod schedule;
+
+pub use config::PipelineConfig;
+pub use pipeline::Pipeline;
+pub use report::Report;

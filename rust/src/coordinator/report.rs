@@ -1,0 +1,125 @@
+//! Experiment reporting: paper-shaped tables + CSV artifacts.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One row of a paper-style accuracy table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub arch: String,
+    pub cells: Vec<(String, f64)>,
+}
+
+/// A named table (mirrors a table/figure of the paper).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), rows: vec![] }
+    }
+
+    pub fn add(&mut self, arch: &str, cells: Vec<(String, f64)>) {
+        self.rows.push(Row { arch: arch.to_string(), cells });
+    }
+
+    /// Render as a GitHub-flavoured markdown table (accuracies in %).
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}", self.title);
+        if self.rows.is_empty() {
+            return s;
+        }
+        let headers: Vec<&str> = self.rows[0]
+            .cells
+            .iter()
+            .map(|(h, _)| h.as_str())
+            .collect();
+        let _ = writeln!(s, "| Architecture | {} |", headers.join(" | "));
+        let _ = writeln!(
+            s,
+            "|---|{}|",
+            headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let cells: Vec<String> = r
+                .cells
+                .iter()
+                .map(|(_, v)| format!("{:.2}", v * 100.0))
+                .collect();
+            let _ = writeln!(s, "| {} | {} |", r.arch, cells.join(" | "));
+        }
+        s
+    }
+
+    /// Write rows as CSV to `artifacts/results/<name>.csv`.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = String::new();
+        if let Some(r0) = self.rows.first() {
+            let heads: Vec<&str> =
+                r0.cells.iter().map(|(h, _)| h.as_str()).collect();
+            let _ = writeln!(s, "arch,{}", heads.join(","));
+        }
+        for r in &self.rows {
+            let vals: Vec<String> =
+                r.cells.iter().map(|(_, v)| format!("{v:.6}")).collect();
+            let _ = writeln!(s, "{},{}", r.arch, vals.join(","));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// Write a simple two-column CSV (e.g. histograms, loss curves).
+pub fn write_series_csv<P: AsRef<Path>>(
+    path: P,
+    header: &str,
+    rows: impl IntoIterator<Item = (f64, f64)>,
+) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut s = format!("{header}\n");
+    for (a, b) in rows {
+        let _ = writeln!(s, "{a},{b}");
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_render() {
+        let mut r = Report::new("Table 1");
+        r.add(
+            "net",
+            vec![("Symmetric".into(), 0.7242), ("Original".into(), 0.7434)],
+        );
+        let md = r.markdown();
+        assert!(md.contains("Table 1"));
+        assert!(md.contains("72.42"));
+        assert!(md.contains("74.34"));
+    }
+
+    #[test]
+    fn csv_write() {
+        let mut r = Report::new("t");
+        r.add("a", vec![("x".into(), 0.5)]);
+        let p = std::env::temp_dir().join("fat_report_test.csv");
+        r.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("arch,x"));
+        assert!(s.contains("a,0.5"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Cosine annealing with warm restarts + optimizer reset (paper §4.1.2:
+//! "cosine annealing with the reset of optimizer parameters").
+
+/// Learning-rate schedule over fine-tuning.
+#[derive(Debug, Clone)]
+pub struct CosineRestarts {
+    pub lr_max: f32,
+    pub lr_min: f32,
+    /// steps per annealing cycle (a restart happens after each)
+    pub cycle: usize,
+    /// cycle-length multiplier after each restart (1 = fixed cycles)
+    pub t_mult: usize,
+}
+
+impl CosineRestarts {
+    pub fn new(lr_max: f32, cycle: usize) -> Self {
+        CosineRestarts { lr_max, lr_min: lr_max * 0.01, cycle, t_mult: 1 }
+    }
+
+    /// (lr, is_restart) at global step `t` (0-based). `is_restart` is true
+    /// on the first step of each cycle (optimizer state must be reset,
+    /// including the Adam step counter).
+    pub fn at(&self, t: usize) -> (f32, bool) {
+        let (pos, len) = self.cycle_pos(t);
+        let x = pos as f32 / len.max(1) as f32;
+        let lr = self.lr_min
+            + 0.5 * (self.lr_max - self.lr_min)
+                * (1.0 + (std::f32::consts::PI * x).cos());
+        (lr, pos == 0)
+    }
+
+    /// (step within cycle, cycle length) at global step t.
+    fn cycle_pos(&self, mut t: usize) -> (usize, usize) {
+        let mut len = self.cycle.max(1);
+        loop {
+            if t < len {
+                return (t, len);
+            }
+            t -= len;
+            len *= self.t_mult.max(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_max_and_decays() {
+        let s = CosineRestarts::new(1.0, 10);
+        let (lr0, r0) = s.at(0);
+        assert!(r0);
+        assert!((lr0 - 1.0).abs() < 1e-6);
+        let (lr5, _) = s.at(5);
+        assert!(lr5 < lr0);
+        let (lr9, r9) = s.at(9);
+        assert!(!r9);
+        assert!(lr9 < lr5);
+    }
+
+    #[test]
+    fn restarts_reset_lr() {
+        let s = CosineRestarts::new(1.0, 10);
+        let (lr10, r10) = s.at(10);
+        assert!(r10);
+        assert!((lr10 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn t_mult_grows_cycles() {
+        let s = CosineRestarts { lr_max: 1.0, lr_min: 0.0, cycle: 4, t_mult: 2 };
+        // cycles: [0..4), [4..12), [12..28)
+        assert!(s.at(4).1);
+        assert!(!s.at(8).1);
+        assert!(s.at(12).1);
+    }
+
+    #[test]
+    fn lr_bounded() {
+        let s = CosineRestarts::new(0.01, 7);
+        for t in 0..100 {
+            let (lr, _) = s.at(t);
+            assert!(lr >= s.lr_min - 1e-9 && lr <= s.lr_max + 1e-9);
+        }
+    }
+}

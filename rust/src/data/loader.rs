@@ -1,0 +1,158 @@
+//! Batch iteration over SynthShapes splits: deterministic shuffling,
+//! calibration subsets, and the paper's 10% unlabeled fine-tune stream.
+
+use crate::tensor::Tensor;
+
+use super::{prng, synth};
+
+/// A dataset split (seed region).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+impl Split {
+    pub fn seed(self) -> u64 {
+        match self {
+            Split::Train => synth::SEED_TRAIN,
+            Split::Val => synth::SEED_VAL,
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Split::Train => synth::TRAIN_SIZE,
+            Split::Val => synth::VAL_SIZE,
+        }
+    }
+}
+
+/// Render a batch as an NHWC f32 tensor + labels.
+pub fn batch(split: Split, indices: &[u64]) -> (Tensor, Vec<i32>) {
+    let (data, labels) = synth::generate(split.seed(), indices);
+    (
+        Tensor::f32(
+            vec![indices.len(), synth::IMG, synth::IMG, synth::CHANNELS],
+            data,
+        ),
+        labels,
+    )
+}
+
+/// Deterministic Fisher-Yates shuffle driven by the portable PRNG, so a
+/// fine-tune run is reproducible across machines and languages.
+pub fn shuffle(indices: &mut [u64], seed: u64, epoch: u64) {
+    let n = indices.len();
+    for i in (1..n).rev() {
+        let r = prng::hash_u64(seed, epoch, 1000 + i as u64, 0, 0, 0);
+        let j = (r % (i as u64 + 1)) as usize;
+        indices.swap(i, j);
+    }
+}
+
+/// Epoch-based batcher over a fixed index set. Partial trailing batches are
+/// dropped (fixed-shape AOT executables need a constant batch size).
+pub struct Batcher {
+    split: Split,
+    indices: Vec<u64>,
+    batch_size: usize,
+    shuffle_seed: Option<u64>,
+}
+
+impl Batcher {
+    pub fn new(split: Split, indices: Vec<u64>, batch_size: usize) -> Self {
+        Batcher { split, indices, batch_size, shuffle_seed: None }
+    }
+
+    /// Enable per-epoch deterministic shuffling.
+    pub fn shuffled(mut self, seed: u64) -> Self {
+        self.shuffle_seed = Some(seed);
+        self
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.indices.len() / self.batch_size
+    }
+
+    /// Iterate one epoch of batches.
+    pub fn epoch(&self, epoch: u64) -> Vec<(Tensor, Vec<i32>)> {
+        let mut idx = self.indices.clone();
+        if let Some(seed) = self.shuffle_seed {
+            shuffle(&mut idx, seed, epoch);
+        }
+        idx.chunks_exact(self.batch_size)
+            .map(|chunk| batch(self.split, chunk))
+            .collect()
+    }
+
+    /// Lazily iterate one epoch (generation happens per batch).
+    pub fn epoch_iter(
+        &self,
+        epoch: u64,
+    ) -> impl Iterator<Item = (Tensor, Vec<i32>)> + '_ {
+        let mut idx = self.indices.clone();
+        if let Some(seed) = self.shuffle_seed {
+            shuffle(&mut idx, seed, epoch);
+        }
+        (0..idx.len() / self.batch_size).map(move |i| {
+            let chunk =
+                &idx[i * self.batch_size..(i + 1) * self.batch_size];
+            batch(self.split, chunk)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let (t, y) = batch(Split::Val, &[0, 1, 2]);
+        assert_eq!(t.shape, vec![3, 32, 32, 3]);
+        assert_eq!(y, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_permutes() {
+        let mut a: Vec<u64> = (0..100).collect();
+        let mut b: Vec<u64> = (0..100).collect();
+        shuffle(&mut a, 7, 0);
+        shuffle(&mut b, 7, 0);
+        assert_eq!(a, b);
+        let mut c: Vec<u64> = (0..100).collect();
+        shuffle(&mut c, 7, 1);
+        assert_ne!(a, c);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batcher_drops_partial_batches() {
+        let b = Batcher::new(Split::Val, (0..10).collect(), 4);
+        assert_eq!(b.batches_per_epoch(), 2);
+        let e = b.epoch(0);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0].0.shape[0], 4);
+    }
+
+    #[test]
+    fn shuffled_batcher_changes_across_epochs() {
+        let b = Batcher::new(Split::Train, (0..32).collect(), 8).shuffled(3);
+        let e0 = b.epoch(0);
+        let e1 = b.epoch(1);
+        assert_ne!(e0[0].1, e1[0].1);
+    }
+
+    #[test]
+    fn epoch_iter_matches_epoch() {
+        let b = Batcher::new(Split::Val, (0..12).collect(), 4).shuffled(9);
+        let a = b.epoch(2);
+        let c: Vec<_> = b.epoch_iter(2).collect();
+        assert_eq!(a.len(), c.len());
+        assert_eq!(a[0].1, c[0].1);
+        assert_eq!(a[2].0.as_f32().unwrap(), c[2].0.as_f32().unwrap());
+    }
+}

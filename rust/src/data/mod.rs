@@ -1,0 +1,11 @@
+//! SynthShapes data substrate: portable PRNG, procedural generator, batcher.
+//!
+//! Bit-exact mirror of `python/compile/{prng,dataset}.py` — golden-tested
+//! in both suites and cross-checked against `artifacts/goldens/dataset.fatw`.
+
+pub mod loader;
+pub mod prng;
+pub mod synth;
+
+pub use loader::{Batcher, Split};
+pub use synth::{generate, IMG, CHANNELS, NUM_CLASSES};

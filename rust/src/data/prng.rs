@@ -1,0 +1,102 @@
+//! Stateless splitmix64-style PRNG, bit-exact with `python/compile/prng.py`.
+//!
+//! All integer ops are wrapping u64; uniforms come from the top 24 bits so
+//! every float is exactly representable. Do not "improve" the formulas —
+//! both language sides must stay identical (golden tests enforce this).
+
+const M1: u64 = 0x9E3779B97F4A7C15;
+const M2: u64 = 0xC2B2AE3D27D4EB4F;
+const M3: u64 = 0x165667B19E3779F9;
+const S1: u64 = 0xBF58476D1CE4E5B9;
+const S2: u64 = 0x94D049BB133111EB;
+
+/// Pixel-noise slot (scalar per-sample parameters use slots 0..63).
+pub const SLOT_NOISE: u64 = 64;
+/// Outlier-pixel slot.
+pub const SLOT_OUTLIER: u64 = 65;
+
+const INV24: f32 = 1.0 / 16777216.0;
+
+/// splitmix64 finalising mix.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(S1);
+    z = (z ^ (z >> 27)).wrapping_mul(S2);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of the full key tuple.
+#[inline]
+pub fn hash_u64(seed: u64, index: u64, slot: u64, x: u64, y: u64, c: u64) -> u64 {
+    let z = seed
+        .wrapping_mul(M1)
+        ^ index.wrapping_mul(M2)
+        ^ slot.wrapping_mul(M3)
+        ^ (x << 40)
+        ^ (y << 20)
+        ^ c;
+    // second avalanche pass (python: splitmix64(splitmix64(z) + M1))
+    splitmix64(splitmix64(z).wrapping_add(M1))
+}
+
+/// Uniform f32 in [0, 1) with 24-bit resolution.
+#[inline]
+pub fn uniform(seed: u64, index: u64, slot: u64, x: u64, y: u64, c: u64) -> f32 {
+    (hash_u64(seed, index, slot, x, y, c) >> 40) as f32 * INV24
+}
+
+/// `lo + u * (hi - lo)`, matching the Python formula order exactly.
+#[inline]
+pub fn uniform_range(
+    lo: f64,
+    hi: f64,
+    seed: u64,
+    index: u64,
+    slot: u64,
+) -> f32 {
+    lo as f32 + uniform(seed, index, slot, 0, 0, 0) * ((hi - lo) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Goldens mirrored in python/tests/test_prng.py.
+    #[test]
+    fn splitmix_goldens() {
+        assert_eq!(splitmix64(0), 0);
+        assert_eq!(splitmix64(1), 0x5692161D100B05E5);
+        assert_eq!(splitmix64(0xDEADBEEF), 0x4E062702EC929EEA);
+    }
+
+    #[test]
+    fn hash_goldens() {
+        assert_eq!(hash_u64(1, 2, 3, 4, 5, 6), 0x472D0DD1FD5C3C80);
+        assert_eq!(hash_u64(42, 7, 0, 0, 0, 0), 0x66E2C29779EF6A7B);
+    }
+
+    #[test]
+    fn uniform_goldens() {
+        assert_eq!(uniform(42, 7, 0, 0, 0, 0), 0.40189755_f32);
+        assert_eq!(uniform(1, 0, SLOT_NOISE, 3, 5, 2), 0.103233337_f32);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        for i in 0..10_000u64 {
+            let u = uniform(9, i, 1, 0, 0, 0);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn hash_sensitive_to_all_components() {
+        let base = hash_u64(1, 2, 3, 4, 5, 6);
+        assert_ne!(base, hash_u64(2, 2, 3, 4, 5, 6));
+        assert_ne!(base, hash_u64(1, 3, 3, 4, 5, 6));
+        assert_ne!(base, hash_u64(1, 2, 4, 4, 5, 6));
+        assert_ne!(base, hash_u64(1, 2, 3, 5, 5, 6));
+        assert_ne!(base, hash_u64(1, 2, 3, 4, 6, 6));
+        assert_ne!(base, hash_u64(1, 2, 3, 4, 5, 7));
+    }
+}

@@ -1,0 +1,201 @@
+//! SynthShapes procedural image generator — bit-exact mirror of
+//! `python/compile/dataset.py` (see that file for the dataset design).
+//!
+//! Every arithmetic expression mirrors the numpy formula *order* exactly;
+//! only IEEE-exact f32 ops are used (+ - * /, floor, abs, min/max, cmp).
+
+use super::prng;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+
+pub const SEED_TRAIN: u64 = 0x5EED_0001;
+pub const SEED_VAL: u64 = 0x5EED_0002;
+
+pub const TRAIN_SIZE: usize = 12_000;
+pub const VAL_SIZE: usize = 2_000;
+pub const CALIB_SIZE: usize = 100;
+pub const FINETUNE_FRACTION: usize = 10;
+
+// Parameter slots (must match python/compile/dataset.py)
+const S_BG: u64 = 0;
+const S_CX: u64 = 9;
+const S_CY: u64 = 10;
+const S_R: u64 = 11;
+const S_FG: u64 = 12;
+const S_FREQ: u64 = 15;
+const S_EDGE: u64 = 16;
+
+struct Params {
+    bg: [f32; 9],
+    cx: f32,
+    cy: f32,
+    r: f32,
+    fg: [f32; 3],
+    freq: f32,
+    edge: f32,
+}
+
+fn params(seed: u64, idx: u64) -> Params {
+    let mut bg = [0f32; 9];
+    for (k, b) in bg.iter_mut().enumerate() {
+        *b = prng::uniform(seed, idx, S_BG + k as u64, 0, 0, 0);
+    }
+    let mut fg = [0f32; 3];
+    for (k, f) in fg.iter_mut().enumerate() {
+        *f = prng::uniform_range(0.35, 1.0, seed, idx, S_FG + k as u64);
+    }
+    Params {
+        bg,
+        cx: prng::uniform_range(0.30, 0.70, seed, idx, S_CX),
+        cy: prng::uniform_range(0.30, 0.70, seed, idx, S_CY),
+        r: prng::uniform_range(0.12, 0.30, seed, idx, S_R),
+        fg,
+        freq: 3.0f32 + (prng::uniform(seed, idx, S_FREQ, 0, 0, 0) * 3.0f32).floor(),
+        edge: prng::uniform_range(0.55, 0.95, seed, idx, S_EDGE),
+    }
+}
+
+#[inline]
+fn frac(x: f32) -> f32 {
+    x - x.floor()
+}
+
+#[inline]
+fn mask(label: u32, u: f32, v: f32, p: &Params) -> bool {
+    let du = u - p.cx;
+    let dv = v - p.cy;
+    let adu = du.abs();
+    let adv = dv.abs();
+    let d2 = du * du + dv * dv;
+    let r2 = p.r * p.r;
+    let boxed = adu.max(adv) < p.r * 1.1f32;
+    match label {
+        0 => d2 < r2,
+        1 => adu.max(adv) < p.r * 0.9f32,
+        2 => (adu + adv) < p.r * 1.2f32,
+        3 => d2 < r2 && d2 > r2 * 0.3f32,
+        4 => (adu < p.r * 0.32f32 || adv < p.r * 0.32f32) && adu.max(adv) < p.r,
+        5 => frac(v * p.freq) < 0.5f32 && boxed,
+        6 => frac(u * p.freq) < 0.5f32 && boxed,
+        7 => {
+            frac(((u * p.freq).floor() + (v * p.freq).floor()) * 0.5f32)
+                < 0.25f32
+                && boxed
+        }
+        8 => {
+            let gx = frac(u * p.freq) - 0.5f32;
+            let gy = frac(v * p.freq) - 0.5f32;
+            (gx * gx + gy * gy) < 0.06f32 && boxed
+        }
+        9 => dv > -p.r && dv < p.r && adu < (dv + p.r) * p.edge * 0.5f32,
+        _ => unreachable!(),
+    }
+}
+
+/// Render images for `indices`. Returns (NHWC f32 data, labels).
+pub fn generate(seed: u64, indices: &[u64]) -> (Vec<f32>, Vec<i32>) {
+    let b = indices.len();
+    let mut img = vec![0f32; b * IMG * IMG * CHANNELS];
+    let mut labels = vec![0i32; b];
+    for (bi, &idx) in indices.iter().enumerate() {
+        let label = (idx % NUM_CLASSES as u64) as u32;
+        labels[bi] = label as i32;
+        let p = params(seed, idx);
+        let base_off = bi * IMG * IMG * CHANNELS;
+        for y in 0..IMG {
+            // pixel centre coords (match python: (k + 0.5) * (1/32))
+            let vv = (y as f32 + 0.5f32) * (1.0f32 / IMG as f32);
+            for x in 0..IMG {
+                let uu = (x as f32 + 0.5f32) * (1.0f32 / IMG as f32);
+                let m = mask(label, uu, vv, &p);
+                let off = base_off + (y * IMG + x) * CHANNELS;
+                let outlier = prng::uniform(
+                    seed,
+                    idx,
+                    prng::SLOT_OUTLIER,
+                    x as u64,
+                    y as u64,
+                    0,
+                ) < (1.0f32 / 96.0f32);
+                for ch in 0..CHANNELS {
+                    let a = p.bg[3 * ch];
+                    let bcoef = p.bg[3 * ch + 1];
+                    let c = p.bg[3 * ch + 2];
+                    let base = 0.15f32
+                        + 0.5f32 * (a * uu + bcoef * vv + c * (uu * vv));
+                    let mut pix = if m { p.fg[ch] } else { base };
+                    let noise = prng::uniform(
+                        seed,
+                        idx,
+                        prng::SLOT_NOISE,
+                        x as u64,
+                        y as u64,
+                        ch as u64,
+                    );
+                    pix += (noise - 0.5f32) * 0.12f32;
+                    if outlier {
+                        pix *= 3.0f32;
+                    }
+                    img[off + ch] = pix.max(0.0f32).min(3.0f32);
+                }
+            }
+        }
+    }
+    (img, labels)
+}
+
+/// The paper's "100 images from the training set" calibration subset.
+pub fn calib_indices() -> Vec<u64> {
+    (0..CALIB_SIZE as u64).collect()
+}
+
+/// The paper's "~10% of the train set" unlabeled fine-tuning subset.
+pub fn finetune_indices() -> Vec<u64> {
+    (0..TRAIN_SIZE as u64)
+        .step_by(FINETUNE_FRACTION)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Goldens from python/compile/dataset.py (see test_prng.py session).
+    #[test]
+    fn pixel_goldens() {
+        let (img, labels) = generate(SEED_TRAIN, &[0, 1]);
+        assert_eq!(labels, vec![0, 1]);
+        // img[0, 0, 0, :]
+        assert_eq!(img[0], 0.12980656325817108_f32);
+        assert_eq!(img[1], 0.13350321352481842_f32);
+        assert_eq!(img[2], 0.21155627071857452_f32);
+        // img[1, 16, 16, :]
+        let off = IMG * IMG * CHANNELS + (16 * IMG + 16) * CHANNELS;
+        assert_eq!(img[off], 0.6571217775344849_f32);
+        assert_eq!(img[off + 1], 0.4670751392841339_f32);
+        assert_eq!(img[off + 2], 0.5961712002754211_f32);
+    }
+
+    #[test]
+    fn image_sum_golden() {
+        let (img, _) = generate(SEED_TRAIN, &[0]);
+        let sum: f64 = img.iter().map(|&v| v as f64).sum();
+        assert!((sum - 1804.62514).abs() < 5e-3, "sum={sum}");
+    }
+
+    #[test]
+    fn deterministic_and_range() {
+        let (a, _) = generate(SEED_VAL, &[3, 17]);
+        let (b, _) = generate(SEED_VAL, &[3, 17]);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| (0.0..=3.0).contains(&v)));
+    }
+
+    #[test]
+    fn subset_helpers() {
+        assert_eq!(calib_indices().len(), 100);
+        assert_eq!(finetune_indices().len(), TRAIN_SIZE / 10);
+    }
+}

@@ -1,0 +1,140 @@
+//! Quantized-graph executor: walks the folded GraphDef with integer-only
+//! kernels. Built by `quant::export::build_qmodel`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::{GraphDef, Op};
+use crate::quant::scale::QParams;
+use crate::tensor::Tensor;
+
+use super::ops;
+use super::qtensor::QTensor;
+
+/// Parameters of one conv-like quantized layer.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    /// conv: (k*k*cin, cout) row-major; dwconv: (k,k,ch); dense: (cin, cout)
+    pub w_q: Vec<i8>,
+    pub w_sums: Vec<i32>,
+    pub bias_q: Vec<i32>,
+    /// Per output channel (m0, shift): s_in * s_w[c] / s_out.
+    pub requant: Vec<(i32, i32)>,
+    pub out_qp: QParams,
+    pub clamp: (i32, i32),
+    /// Per-channel weight scales (len 1 in scalar mode).
+    pub w_scales: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AddParams {
+    pub ma: (i32, i32),
+    pub mb: (i32, i32),
+    pub out_qp: QParams,
+    pub clamp: (i32, i32),
+}
+
+#[derive(Debug, Clone)]
+pub struct GapParams {
+    pub m: (i32, i32),
+    pub out_qp: QParams,
+}
+
+#[derive(Debug, Clone)]
+pub enum QNode {
+    Layer(QLayer),
+    Add(AddParams),
+    Gap(GapParams),
+    /// relu/relu6 whose clamp was fused into the producer.
+    Passthrough,
+}
+
+/// A fully-quantized model, ready for integer-only inference.
+#[derive(Debug, Clone)]
+pub struct QModel {
+    pub graph: GraphDef,
+    pub nodes: BTreeMap<String, QNode>,
+    pub input_qp: QParams,
+    /// total int8 parameter bytes (for the size report)
+    pub param_bytes: usize,
+}
+
+impl QModel {
+    /// Run a float NHWC batch through the integer engine; returns f32
+    /// logits (dequantized from the final site).
+    pub fn run_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let q = QTensor::quantize(
+            x.shape.clone(),
+            x.as_f32()?,
+            self.input_qp,
+        );
+        let logits = self.run_quant(q)?;
+        let n = logits.shape[0];
+        let c = logits.shape[1];
+        Ok(Tensor::f32(vec![n, c], logits.dequantize()))
+    }
+
+    /// Integer-only path: quantized input to quantized logits.
+    pub fn run_quant(&self, input: QTensor) -> Result<QTensor> {
+        let mut vals: BTreeMap<&str, QTensor> = BTreeMap::new();
+        let mut last = "input";
+        for n in &self.graph.nodes {
+            if n.op == Op::Input {
+                vals.insert(n.id.as_str(), input.clone());
+                continue;
+            }
+            let a = &vals[self.graph.node(&n.inputs[0])?.id.as_str()];
+            let out = match (&n.op, self.nodes.get(&n.id)) {
+                (Op::Conv, Some(QNode::Layer(l))) => ops::conv2d(
+                    a, &l.w_q, &l.w_sums, &l.bias_q, &l.requant, l.out_qp,
+                    l.clamp, n.k, n.stride, n.cout,
+                ),
+                (Op::DwConv, Some(QNode::Layer(l))) => ops::dwconv2d(
+                    a, &l.w_q, &l.bias_q, &l.requant, l.out_qp, l.clamp,
+                    n.k, n.stride,
+                ),
+                (Op::Dense, Some(QNode::Layer(l))) => ops::dense(
+                    a, &l.w_q, &l.w_sums, &l.bias_q, &l.requant, l.out_qp,
+                    l.clamp, n.cout,
+                ),
+                (Op::Add, Some(QNode::Add(p))) => {
+                    let b = &vals[self.graph.node(&n.inputs[1])?.id.as_str()];
+                    ops::add(a, b, p.ma, p.mb, p.out_qp, p.clamp)
+                }
+                (Op::Gap, Some(QNode::Gap(p))) => ops::gap(a, p.m, p.out_qp),
+                (Op::Relu | Op::Relu6, _) => a.clone(),
+                (op, entry) => anyhow::bail!(
+                    "node {} ({op:?}): missing/invalid qparams ({})",
+                    n.id,
+                    entry.is_some()
+                ),
+            };
+            vals.insert(n.id.as_str(), out);
+            last = n.id.as_str();
+        }
+        Ok(vals.remove(last).unwrap())
+    }
+
+    /// Classification accuracy over (x, labels).
+    pub fn accuracy(&self, x: &Tensor, labels: &[i32]) -> Result<f64> {
+        let logits = self.run_batch(x)?;
+        let n = logits.shape[0];
+        let c = logits.shape[1];
+        let d = logits.as_f32()?;
+        let mut correct = 0usize;
+        for i in 0..n {
+            let row = &d[i * c..(i + 1) * c];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            if arg as i32 == labels[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / n as f64)
+    }
+}

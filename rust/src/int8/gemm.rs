@@ -1,0 +1,121 @@
+//! int8 × int8 → int32 GEMM with zero-point handling.
+//!
+//! `acc[m,n] = Σ_k (a[m,k] - a_zp) * b[k,n]` computed as
+//! `Σ a*b - a_zp * colsum(b)` (gemmlowp trick: weights are symmetric,
+//! b_zp = 0). This is the hot path of the deployment simulator; see
+//! EXPERIMENTS.md §Perf for the blocking/iteration log.
+
+/// Precomputed column sums of the weight matrix (for the zero-point term).
+pub fn col_sums(b: &[i8], k: usize, n: usize) -> Vec<i32> {
+    let mut s = vec![0i32; n];
+    for ki in 0..k {
+        let row = &b[ki * n..(ki + 1) * n];
+        for (ni, &v) in row.iter().enumerate() {
+            s[ni] += v as i32;
+        }
+    }
+    s
+}
+
+/// Dense GEMM: a (m,k) row-major i8, b (k,n) row-major i8, out (m,n) i32.
+pub fn gemm_i8(
+    a: &[i8],
+    a_zp: i32,
+    b: &[i8],
+    bsums: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    // i16-friendly blocked kernel: accumulate in i32, iterate k-inner.
+    for mi in 0..m {
+        let arow = &a[mi * k..(mi + 1) * k];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        orow.fill(0);
+        for (ki, &av) in arow.iter().enumerate() {
+            let av = av as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[ki * n..(ki + 1) * n];
+            for (ni, &bv) in brow.iter().enumerate() {
+                orow[ni] += av * bv as i32;
+            }
+        }
+        if a_zp != 0 {
+            for (ni, o) in orow.iter_mut().enumerate() {
+                *o -= a_zp * bsums[ni];
+            }
+        }
+    }
+}
+
+/// Reference (naive) GEMM for property tests.
+pub fn gemm_ref(
+    a: &[i8],
+    a_zp: i32,
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0i32;
+            for ki in 0..k {
+                acc += (a[mi * k + ki] as i32 - a_zp) * b[ki * n + ni] as i32;
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_i8(n: usize, seed: u64) -> Vec<i8> {
+        (0..n)
+            .map(|i| {
+                (crate::data::prng::hash_u64(seed, i as u64, 0, 0, 0, 0)
+                    % 255) as i64 as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_reference() {
+        for &(m, k, n, zp) in
+            &[(1, 1, 1, 0), (3, 5, 7, -3), (8, 16, 4, 12), (17, 9, 33, -128)]
+        {
+            let a = rand_i8(m * k, 1);
+            let b = rand_i8(k * n, 2);
+            let sums = col_sums(&b, k, n);
+            let mut out = vec![0i32; m * n];
+            gemm_i8(&a, zp, &b, &sums, m, k, n, &mut out);
+            assert_eq!(out, gemm_ref(&a, zp, &b, m, k, n), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn col_sums_correct() {
+        let b = vec![1i8, 2, 3, 4, 5, 6]; // (3,2)
+        assert_eq!(col_sums(&b, 3, 2), vec![9, 12]);
+    }
+
+    #[test]
+    fn accumulates_beyond_i16() {
+        let a = vec![127i8; 512];
+        let b = vec![127i8; 512];
+        let sums = col_sums(&b, 512, 1);
+        let mut out = vec![0i32; 1];
+        gemm_i8(&a, 0, &b, &sums, 1, 512, 1, &mut out);
+        assert_eq!(out[0], 127 * 127 * 512);
+    }
+}

@@ -1,0 +1,94 @@
+//! NHWC im2col for SAME-padded k×k convolutions over i8 activations.
+//! Out-of-image taps are filled with the input zero-point (= real 0.0).
+
+/// im2col: input (n, h, w, c) i8 → patches ((n*oh*ow), (k*k*c)) i8.
+/// Returns (patches, oh, ow).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_i8(
+    x: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    zp: i8,
+) -> (Vec<i8>, usize, usize) {
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    // SAME padding (matches XLA): pad_total = (o-1)*s + k - h
+    let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
+    let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
+    let cols = k * k * c;
+    let mut out = vec![zp; n * oh * ow * cols];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst0 = ((ni * oh + oy) * ow + ox) * cols;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix =
+                            (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src =
+                            ((ni * h + iy as usize) * w + ix as usize) * c;
+                        let dst = dst0 + (ky * k + kx) * c;
+                        out[dst..dst + c]
+                            .copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1() {
+        let x: Vec<i8> = (0..2 * 2 * 3).map(|i| i as i8).collect();
+        let (p, oh, ow) = im2col_i8(&x, 1, 2, 2, 3, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(p, x);
+    }
+
+    #[test]
+    fn same_padding_3x3() {
+        // 1x1 image, 3x3 kernel: the single patch has 8 padded taps.
+        let x = vec![5i8, 6];
+        let (p, oh, ow) = im2col_i8(&x, 1, 1, 1, 2, 3, 1, -7);
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(p.len(), 9 * 2);
+        // centre tap is the real pixel
+        assert_eq!(&p[4 * 2..4 * 2 + 2], &[5, 6]);
+        assert_eq!(p.iter().filter(|&&v| v == -7).count(), 16);
+    }
+
+    #[test]
+    fn stride_two_output_shape() {
+        let x = vec![1i8; 4 * 4];
+        let (p, oh, ow) = im2col_i8(&x, 1, 4, 4, 1, 3, 2, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(p.len(), 4 * 9);
+    }
+
+    #[test]
+    fn batch_independent() {
+        let x0 = vec![1i8; 9];
+        let x1 = vec![2i8; 9];
+        let mut x = x0.clone();
+        x.extend(&x1);
+        let (p, _, _) = im2col_i8(&x, 2, 3, 3, 1, 1, 1, 0);
+        assert_eq!(&p[..9], &x0[..]);
+        assert_eq!(&p[9..], &x1[..]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Integer-only int8 inference engine — the mobile-deployment simulator
+//! (DESIGN.md §2). Consumes the quantized model exported by
+//! `quant::export` and executes it with int8 storage, int32 accumulators
+//! and fixed-point requantization, exactly as the paper's target devices
+//! (and TFLite) do.
+
+pub mod engine;
+pub mod gemm;
+pub mod im2col;
+pub mod ops;
+pub mod qtensor;
+
+pub use engine::{QLayer, QModel};
+pub use qtensor::QTensor;

@@ -1,0 +1,307 @@
+//! Integer-only layer kernels: conv (im2col+GEMM), depthwise conv, dense,
+//! residual add, global average pool — all with fixed-point requantization.
+
+use crate::quant::scale::{apply_multiplier, QParams};
+
+use super::gemm::gemm_i8;
+use super::im2col::im2col_i8;
+use super::qtensor::QTensor;
+
+/// Requantize an int32 accumulator row into the output domain.
+///
+/// `acc` holds (n_pix, cout) accumulators at scale `s_in * s_w[c]`;
+/// bias is already int32 at the same scale (paper eq. 20).
+pub fn requant_store(
+    acc: &[i32],
+    bias: &[i32],
+    requant: &[(i32, i32)],
+    out_qp: QParams,
+    clamp: (i32, i32),
+    cout: usize,
+    out: &mut Vec<i8>,
+) {
+    out.clear();
+    out.reserve(acc.len());
+    for (i, &a) in acc.iter().enumerate() {
+        let c = i % cout;
+        let (m0, shift) = requant[c];
+        let v = apply_multiplier(a + bias[c], m0, shift)
+            + out_qp.zero_point;
+        out.push(v.clamp(clamp.0, clamp.1) as i8);
+    }
+}
+
+/// SAME-padded conv via im2col + int8 GEMM.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    x: &QTensor,
+    w_q: &[i8],
+    w_sums: &[i32],
+    bias: &[i32],
+    requant: &[(i32, i32)],
+    out_qp: QParams,
+    clamp: (i32, i32),
+    k: usize,
+    stride: usize,
+    cout: usize,
+) -> QTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (patches, oh, ow) =
+        im2col_i8(&x.data, n, h, w, c, k, stride, x.qp.zero_point as i8);
+    let m = n * oh * ow;
+    let kk = k * k * c;
+    let mut acc = vec![0i32; m * cout];
+    gemm_i8(
+        &patches,
+        x.qp.zero_point,
+        w_q,
+        w_sums,
+        m,
+        kk,
+        cout,
+        &mut acc,
+    );
+    let mut data = Vec::new();
+    requant_store(&acc, bias, requant, out_qp, clamp, cout, &mut data);
+    QTensor { shape: vec![n, oh, ow, cout], data, qp: out_qp }
+}
+
+/// Depthwise SAME-padded conv (multiplier 1). `w_q` is (k,k,ch) row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d(
+    x: &QTensor,
+    w_q: &[i8],
+    bias: &[i32],
+    requant: &[(i32, i32)],
+    out_qp: QParams,
+    clamp: (i32, i32),
+    k: usize,
+    stride: usize,
+) -> QTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
+    let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
+    let zp = x.qp.zero_point;
+    let mut data = Vec::with_capacity(n * oh * ow * c);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut acc = 0i32;
+                    for ky in 0..k {
+                        let iy =
+                            (oy * stride + ky) as isize - pad_top as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // pad tap: (zp - zp) * w = 0
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize
+                                - pad_left as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xi = ((ni * h + iy as usize) * w
+                                + ix as usize)
+                                * c
+                                + ci;
+                            let wi = (ky * k + kx) * c + ci;
+                            acc += (x.data[xi] as i32 - zp)
+                                * w_q[wi] as i32;
+                        }
+                    }
+                    let (m0, shift) = requant[ci];
+                    let v = apply_multiplier(acc + bias[ci], m0, shift)
+                        + out_qp.zero_point;
+                    data.push(v.clamp(clamp.0, clamp.1) as i8);
+                }
+            }
+        }
+    }
+    QTensor { shape: vec![n, oh, ow, c], data, qp: out_qp }
+}
+
+/// Dense layer over (n, cin) input.
+#[allow(clippy::too_many_arguments)]
+pub fn dense(
+    x: &QTensor,
+    w_q: &[i8],
+    w_sums: &[i32],
+    bias: &[i32],
+    requant: &[(i32, i32)],
+    out_qp: QParams,
+    clamp: (i32, i32),
+    cout: usize,
+) -> QTensor {
+    let n = x.shape[0];
+    let cin = x.shape[1];
+    let mut acc = vec![0i32; n * cout];
+    gemm_i8(&x.data, x.qp.zero_point, w_q, w_sums, n, cin, cout, &mut acc);
+    let mut data = Vec::new();
+    requant_store(&acc, bias, requant, out_qp, clamp, cout, &mut data);
+    QTensor { shape: vec![n, cout], data, qp: out_qp }
+}
+
+/// Residual add: rescale both operands into the output domain.
+pub fn add(
+    a: &QTensor,
+    b: &QTensor,
+    ma: (i32, i32),
+    mb: (i32, i32),
+    out_qp: QParams,
+    clamp: (i32, i32),
+) -> QTensor {
+    debug_assert_eq!(a.shape, b.shape);
+    // Pre-scale by 2^20 for precision (TFLite-style left shift).
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&qa, &qb)| {
+            let va = apply_multiplier(
+                ((qa as i32) - a.qp.zero_point) << 20,
+                ma.0,
+                ma.1,
+            );
+            let vb = apply_multiplier(
+                ((qb as i32) - b.qp.zero_point) << 20,
+                mb.0,
+                mb.1,
+            );
+            let v = crate::quant::scale::rounding_rshift(va + vb, 20)
+                + out_qp.zero_point;
+            v.clamp(clamp.0, clamp.1) as i8
+        })
+        .collect();
+    QTensor { shape: a.shape.clone(), data, qp: out_qp }
+}
+
+/// Global average pool over H,W.
+pub fn gap(x: &QTensor, m: (i32, i32), out_qp: QParams) -> QTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let hw = (h * w) as i32;
+    let zp = x.qp.zero_point;
+    let mut data = Vec::with_capacity(n * c);
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut acc = 0i32;
+            for p in 0..(h * w) {
+                acc += x.data[(ni * h * w + p) * c + ci] as i32 - zp;
+            }
+            // multiplier m already folds the 1/(h*w)
+            let v = apply_multiplier(acc, m.0, m.1) + out_qp.zero_point;
+            data.push(v.clamp(out_qp.qmin, out_qp.qmax) as i8);
+        }
+    }
+    let _ = hw;
+    QTensor { shape: vec![n, c], data, qp: out_qp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scale::{quantize_multiplier, QParams};
+
+    fn qp_sym(t: f32) -> QParams {
+        super::super::qtensor::to_i8_domain(QParams::symmetric_signed(t))
+    }
+
+    /// Build requant params mapping acc scale (s_in*s_w) to s_out.
+    fn rq(s_in: f32, s_w: f32, s_out: f32) -> (i32, i32) {
+        quantize_multiplier((s_in as f64 * s_w as f64) / s_out as f64)
+    }
+
+    #[test]
+    fn conv_1x1_identity_approx() {
+        // y = 1.0 * x through a 1x1 conv with unit weight
+        let in_qp = qp_sym(1.0);
+        let x = QTensor::quantize(vec![1, 2, 2, 1], &[0.5, -0.25, 1.0, 0.0], in_qp);
+        let w_t = 1.0f32;
+        let w_qp = QParams::symmetric_signed(w_t);
+        let w_q = vec![w_qp.quantize(1.0) as i8];
+        let sums = vec![w_q[0] as i32];
+        let out_qp = qp_sym(1.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale)];
+        let y = conv2d(
+            &x, &w_q, &sums, &[0], &req, out_qp,
+            (out_qp.qmin, out_qp.qmax), 1, 1, 1,
+        );
+        let d = y.dequantize();
+        for (a, b) in [0.5, -0.25, 1.0, 0.0].iter().zip(&d) {
+            assert!((a - b).abs() < 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dwconv_matches_float_reference() {
+        // 3x3 depthwise over a 4x4 single-channel ramp
+        let xs: Vec<f32> = (0..16).map(|i| i as f32 / 8.0).collect();
+        let in_qp = qp_sym(2.0);
+        let x = QTensor::quantize(vec![1, 4, 4, 1], &xs, in_qp);
+        let wf = [0.1f32, 0.2, 0.1, 0.0, 0.5, 0.0, -0.1, 0.0, -0.2];
+        let w_qp = QParams::symmetric_signed(0.5);
+        let w_q: Vec<i8> = wf.iter().map(|&v| w_qp.quantize(v) as i8).collect();
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale)];
+        let y = dwconv2d(&x, &w_q, &[0], &req, out_qp, (-127, 127), 3, 1);
+        assert_eq!(y.shape, vec![1, 4, 4, 1]);
+        // float reference at centre pixel (1,1): full 3x3 support
+        let xr = |r: usize, c: usize| xs[r * 4 + c];
+        let mut want = 0.0;
+        for ky in 0..3 {
+            for kx in 0..3 {
+                want += wf[ky * 3 + kx] * xr(ky, kx);
+            }
+        }
+        let got = y.dequantize()[4 * 1 + 1];
+        assert!((got - want).abs() < 0.05, "{got} vs {want}");
+    }
+
+    #[test]
+    fn add_rescales_operands() {
+        let qa = qp_sym(1.0);
+        let qb = qp_sym(2.0);
+        let qo = qp_sym(3.0);
+        let a = QTensor::quantize(vec![4], &[0.5, -0.5, 1.0, 0.0], qa);
+        let b = QTensor::quantize(vec![4], &[1.5, 0.5, -1.0, 2.0], qb);
+        let ma = quantize_multiplier(qa.scale as f64 / qo.scale as f64);
+        let mb = quantize_multiplier(qb.scale as f64 / qo.scale as f64);
+        let y = add(&a, &b, ma, mb, qo, (qo.qmin, qo.qmax));
+        let d = y.dequantize();
+        for (want, got) in [2.0f32, 0.0, 0.0, 2.0].iter().zip(&d) {
+            assert!((want - got).abs() < 0.06, "{want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn gap_averages() {
+        let qi = qp_sym(4.0);
+        let qo = qp_sym(4.0);
+        let xs = vec![1.0f32, 2.0, 3.0, 4.0];
+        let x = QTensor::quantize(vec![1, 2, 2, 1], &xs, qi);
+        let m = quantize_multiplier(qi.scale as f64 / qo.scale as f64 / 4.0);
+        let y = gap(&x, m, qo);
+        let d = y.dequantize();
+        assert!((d[0] - 2.5).abs() < 0.05, "{}", d[0]);
+    }
+
+    #[test]
+    fn relu6_clamp_fused() {
+        // conv output clamped at quantized 6.0
+        let in_qp = qp_sym(10.0);
+        let x = QTensor::quantize(vec![1, 1, 1, 1], &[8.0], in_qp);
+        let w_qp = QParams::symmetric_signed(1.0);
+        let w_q = vec![w_qp.quantize(1.0) as i8];
+        let out_qp =
+            super::super::qtensor::to_i8_domain(QParams::symmetric_unsigned(8.0));
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale)];
+        let hi = out_qp.zero_point + (6.0 / out_qp.scale).round() as i32;
+        let y = conv2d(
+            &x, &w_q, &[w_q[0] as i32], &[0], &req, out_qp,
+            (out_qp.zero_point, hi), 1, 1, 1,
+        );
+        let d = y.dequantize()[0];
+        assert!((d - 6.0).abs() < 0.05, "{d}");
+    }
+}

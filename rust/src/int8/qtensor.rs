@@ -1,0 +1,99 @@
+//! Quantized activation tensor: i8 storage + quantization parameters.
+//!
+//! Unsigned (u8) sites are stored shifted into the i8 domain
+//! (`q_i8 = q_u8 - 128`, `zp_i8 = zp_u8 - 128`) so the whole engine runs
+//! on one storage type.
+
+use crate::quant::scale::QParams;
+
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub qp: QParams,
+}
+
+/// Shift u8-domain params into the i8 domain (no-op for signed params).
+pub fn to_i8_domain(qp: QParams) -> QParams {
+    if qp.qmin == 0 && qp.qmax == 255 {
+        QParams {
+            scale: qp.scale,
+            zero_point: qp.zero_point - 128,
+            qmin: -128,
+            qmax: 127,
+        }
+    } else {
+        qp
+    }
+}
+
+impl QTensor {
+    /// Quantize a float tensor under (u8/i8-domain) params.
+    pub fn quantize(shape: Vec<usize>, x: &[f32], qp: QParams) -> Self {
+        let qp = to_i8_domain(qp);
+        let data = x
+            .iter()
+            .map(|&v| {
+                ((v / qp.scale).round_ties_even() as i32 + qp.zero_point)
+                    .clamp(qp.qmin, qp.qmax) as i8
+            })
+            .collect();
+        QTensor { shape, data, qp }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .map(|&q| self.qp.scale * (q as i32 - self.qp.zero_point) as f32)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsigned_params_shift_to_i8() {
+        let qp = QParams::symmetric_unsigned(2.55);
+        let s = to_i8_domain(qp);
+        assert_eq!(s.zero_point, -128);
+        assert_eq!(s.qmin, -128);
+        assert_eq!(s.qmax, 127);
+        assert_eq!(s.scale, qp.scale);
+    }
+
+    #[test]
+    fn signed_params_unchanged() {
+        let qp = QParams::symmetric_signed(1.0);
+        assert_eq!(to_i8_domain(qp), qp);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let qp = QParams::symmetric_unsigned(2.0);
+        let x = vec![0.0, 0.5, 1.0, 2.0, 3.0];
+        let q = QTensor::quantize(vec![5], &x, qp);
+        let d = q.dequantize();
+        for (a, b) in x.iter().zip(&d) {
+            let want = a.min(2.0);
+            assert!((want - b).abs() <= qp.scale, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn quantize_clips_negative_for_unsigned() {
+        let qp = QParams::symmetric_unsigned(1.0);
+        let q = QTensor::quantize(vec![1], &[-5.0], qp);
+        assert_eq!(q.data[0], -128); // u8 0 shifted
+        assert_eq!(q.dequantize()[0], 0.0);
+    }
+}

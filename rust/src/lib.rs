@@ -1,0 +1,37 @@
+//! # FAT: Fast Adjustable Threshold uniform NN quantization
+//!
+//! Rust + JAX + Pallas reproduction of Goncharenko et al., *FAT: Fast
+//! Adjustable Threshold for Uniform Neural Network Quantization* (2018),
+//! the winning solution of LPIRC-II.
+//!
+//! Three layers (see `DESIGN.md`):
+//!  * **L1** Pallas fake-quant / int8-GEMM kernels (`python/compile/kernels`)
+//!  * **L2** JAX model graphs + FAT fine-tune step (`python/compile`),
+//!    AOT-lowered to HLO-text artifacts at build time
+//!  * **L3** this crate: the quantization pipeline coordinator, PJRT
+//!    runtime, calibration, BN folding, §3.3 DWS rescaling, and an
+//!    integer-only int8 inference engine (the mobile-deployment simulator).
+//!
+//! Python never runs at runtime; the Rust binary drives everything from
+//! the AOT artifacts in `artifacts/`.
+
+pub mod coordinator;
+pub mod data;
+pub mod int8;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::{DType, Tensor};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory: `$FAT_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FAT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,230 @@
+//! `fat` — the FAT quantization pipeline launcher.
+//!
+//! Usage:
+//!   fat info
+//!   fat quantize --model mnas_mini_10 --mode asym_vector [--dws] [--val N]
+//!   fat pipeline [--config run.toml] [--model M] [--mode MODE]
+//!                [--epochs N] [--max-steps N] [--val N] [--dws]
+//!   fat eval-int8 --model mnas_mini_10 --mode sym_vector [--val N]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::model::ModelStore;
+use fat::quant::export::QuantMode;
+use fat::runtime::{Registry, Runtime};
+use fat::util::cli::Args;
+
+const USAGE: &str = "\
+fat — FAT: fast adjustable threshold quantization
+
+Commands:
+  info                         list models + FP accuracies
+  quantize                     calibration-only quantization + accuracy
+    --model M --mode MODE --calib N --val N [--dws]
+  pipeline                     full FAT pipeline (calibrate→finetune→int8)
+    [--config F] [--model M] [--mode MODE] [--epochs N]
+    [--max-steps N] [--val N] [--lr F] [--dws]
+  eval-int8                    int8 engine vs fake-quant agreement
+    --model M --mode MODE [--val N]
+
+Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["dws", "help"]);
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(fat::artifacts_dir);
+    if args.flag("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::cpu()?);
+    let reg = Arc::new(Registry::new(rt));
+
+    match args.subcommand.as_deref().unwrap() {
+        "info" => {
+            for name in ModelStore::list(&artifacts)? {
+                let store = ModelStore::open(&artifacts, &name)?;
+                let sites = store.sites()?;
+                println!(
+                    "{name}: {} quant sites, FP pretrain acc {:.2}%",
+                    sites.sites.len(),
+                    sites.val_acc_fp_pretrain * 100.0
+                );
+            }
+        }
+        "quantize" => {
+            let model = args.get_or("model", "mobilenet_v2_mini");
+            let mode = QuantMode::parse(args.get_or("mode", "sym_scalar"))?;
+            let calib = args.usize_or("calib", 100);
+            let val = args.usize_or("val", 0);
+            let mut p = Pipeline::new(reg, &artifacts, model)?;
+            let stats = p.calibrate(calib)?;
+            if args.flag("dws") {
+                for r in p.dws_rescale(&stats)? {
+                    println!(
+                        "  dws {}→{}: spread {:.1}→{:.1} ({} locked/{})",
+                        r.dw, r.conv, r.spread_before, r.spread_after,
+                        r.locked, r.channels
+                    );
+                }
+            }
+            let fp = p.fp_accuracy(val)?;
+            let tr = p.identity_trainables(mode)?;
+            let q = p.quant_accuracy(mode, &stats, &tr, val)?;
+            println!(
+                "{model} [{}] no-finetune: FP {:.2}%  quant {:.2}%  (drop {:.2})",
+                mode.name(),
+                fp * 100.0,
+                q * 100.0,
+                (fp - q) * 100.0
+            );
+        }
+        "pipeline" => {
+            let mut cfg = match args.get("config") {
+                Some(p) => PipelineConfig::load(p)?,
+                None => PipelineConfig::default(),
+            };
+            if let Some(m) = args.get("model") {
+                cfg.model = m.to_string();
+            }
+            if let Some(m) = args.get("mode") {
+                cfg.mode = m.to_string();
+            }
+            if let Some(e) = args.get("epochs") {
+                cfg.epochs = e.parse()?;
+            }
+            if let Some(s) = args.get("max-steps") {
+                cfg.max_steps = s.parse()?;
+            }
+            if let Some(v) = args.get("val") {
+                cfg.val_images = v.parse()?;
+            }
+            if let Some(lr) = args.get("lr") {
+                cfg.lr = lr.parse()?;
+            }
+            cfg.dws_rescale |= args.flag("dws");
+            run_pipeline(&reg, &artifacts, &cfg)?;
+        }
+        "eval-int8" => {
+            let model = args.get_or("model", "mnas_mini_10");
+            let mode = QuantMode::parse(args.get_or("mode", "sym_vector"))?;
+            let val = args.usize_or("val", 500);
+            let p = Pipeline::new(reg, &artifacts, model)?;
+            let stats = p.calibrate(100)?;
+            let trained = p.identity_trained(mode);
+            let qm = p.export_int8(mode, &stats, &trained)?;
+            let tr = p.identity_trainables(mode)?;
+            let fake = p.quant_accuracy(mode, &stats, &tr, val)?;
+            let t0 = std::time::Instant::now();
+            let engine_acc = int8_accuracy(&qm, val)?;
+            let dt = t0.elapsed();
+            println!(
+                "{model} [{}]: fake-quant {:.2}%  int8-engine {:.2}%  \
+                 ({} int8 param bytes, {:.1} img/s)",
+                mode.name(),
+                fake * 100.0,
+                engine_acc * 100.0,
+                qm.param_bytes,
+                val as f64 / dt.as_secs_f64()
+            );
+        }
+        other => {
+            eprintln!("unknown command {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn run_pipeline(
+    reg: &Arc<Registry>,
+    artifacts: &std::path::Path,
+    cfg: &PipelineConfig,
+) -> Result<()> {
+    let mode = QuantMode::parse(&cfg.mode)?;
+    println!("== FAT pipeline: {} [{}] ==", cfg.model, cfg.mode);
+    let mut p = Pipeline::new(reg.clone(), artifacts, &cfg.model)?;
+
+    let t0 = std::time::Instant::now();
+    let stats = p.calibrate(cfg.calib_images)?;
+    println!(
+        "calibrated on {} images ({} batches) in {:.1}s",
+        cfg.calib_images,
+        stats.batches,
+        t0.elapsed().as_secs_f64()
+    );
+
+    if cfg.dws_rescale {
+        for r in p.dws_rescale(&stats)? {
+            println!(
+                "  dws {}→{}: threshold spread {:.1}→{:.1} ({} locked / {})",
+                r.dw, r.conv, r.spread_before, r.spread_after, r.locked,
+                r.channels
+            );
+        }
+    }
+
+    let fp = p.fp_accuracy(cfg.val_images)?;
+    let tr0 = p.identity_trainables(mode)?;
+    let q0 = p.quant_accuracy(mode, &stats, &tr0, cfg.val_images)?;
+    println!(
+        "FP acc {:.2}%   quant (no finetune) {:.2}%",
+        fp * 100.0,
+        q0 * 100.0
+    );
+
+    let t1 = std::time::Instant::now();
+    let (tr, losses) = p.finetune(mode, &stats, cfg, |step, loss, lr| {
+        if step % 10 == 0 {
+            println!("  step {step}: rmse {loss:.4} lr {lr:.4}");
+        }
+    })?;
+    println!(
+        "fine-tuned {} steps in {:.1}s (rmse {:.4} → {:.4})",
+        losses.len(),
+        t1.elapsed().as_secs_f64(),
+        losses.first().unwrap_or(&0.0),
+        losses.last().unwrap_or(&0.0)
+    );
+
+    let q1 = p.quant_accuracy(mode, &stats, &tr, cfg.val_images)?;
+    let trained = p.trained_of_map(mode, &tr)?;
+    let qm = p.export_int8(mode, &stats, &trained)?;
+    let int8_acc = int8_accuracy(&qm, cfg.val_images.clamp(100, 500))?;
+    println!("quant (FAT)     {:.2}%", q1 * 100.0);
+    println!(
+        "int8 engine     {:.2}%  ({} param bytes)",
+        int8_acc * 100.0,
+        qm.param_bytes
+    );
+    println!(
+        "ladder: FP {:.2} → no-ft {:.2} → FAT {:.2} (drop {:.2}%)",
+        fp * 100.0,
+        q0 * 100.0,
+        q1 * 100.0,
+        (fp - q1) * 100.0
+    );
+    Ok(())
+}
+
+/// Accuracy of the integer engine over the val split.
+fn int8_accuracy(qm: &fat::int8::QModel, val: usize) -> Result<f64> {
+    use fat::data::{Batcher, Split};
+    let total = if val == 0 { fat::data::synth::VAL_SIZE } else { val };
+    let batcher = Batcher::new(Split::Val, (0..total as u64).collect(), 50);
+    let mut correct = 0usize;
+    let mut n = 0usize;
+    for (x, labels) in batcher.epoch_iter(0) {
+        let logits = qm.run_batch(&x)?;
+        let (c, b) =
+            fat::coordinator::evaluate::argmax_accuracy(&logits, &labels)?;
+        correct += c;
+        n += b;
+    }
+    Ok(correct as f64 / n as f64)
+}

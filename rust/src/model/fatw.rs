@@ -1,0 +1,147 @@
+//! FATW named-tensor container (mirror of `python/compile/fatw.py`).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{Data, Tensor};
+
+const MAGIC: &[u8; 8] = b"FATW0001";
+
+/// Read all tensors from a `.fatw` file.
+pub fn read_fatw<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    parse(&bytes)
+}
+
+fn parse(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut cur = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 8];
+    cur.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad FATW magic");
+    }
+    let count = read_u32(&mut cur)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u32(&mut cur)? as usize;
+        let mut name = vec![0u8; nlen];
+        cur.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        cur.read_exact(&mut hdr)?;
+        let (dt, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut cur)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let data = match dt {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                cur.read_exact(&mut buf)?;
+                Data::F32(
+                    buf.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut buf = vec![0u8; n];
+                cur.read_exact(&mut buf)?;
+                Data::I8(buf.into_iter().map(|b| b as i8).collect())
+            }
+            2 => {
+                let mut buf = vec![0u8; n * 4];
+                cur.read_exact(&mut buf)?;
+                Data::I32(
+                    buf.chunks_exact(4)
+                        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            3 => {
+                let mut buf = vec![0u8; n];
+                cur.read_exact(&mut buf)?;
+                Data::U8(buf)
+            }
+            other => bail!("unknown dtype tag {other}"),
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors to a `.fatw` file (sorted by name for determinism).
+pub fn write_fatw<P: AsRef<Path>>(
+    path: P,
+    tensors: &BTreeMap<String, Tensor>,
+) -> Result<()> {
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let dt = match t.data {
+            Data::F32(_) => 0u8,
+            Data::I8(_) => 1,
+            Data::I32(_) => 2,
+            Data::U8(_) => 3,
+        };
+        f.write_all(&[dt, t.shape.len() as u8])?;
+        for d in &t.shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        f.write_all(t.raw_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "a.w".to_string(),
+            Tensor::f32(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]),
+        );
+        m.insert("b".to_string(), Tensor::i32(vec![3], vec![1, -7, 42]));
+        m.insert("c".to_string(), Tensor::i8(vec![2], vec![-128, 127]));
+        let dir = std::env::temp_dir().join("fatw_test.fatw");
+        write_fatw(&dir, &m).unwrap();
+        let back = read_fatw(&dir).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join("fatw_bad.fatw");
+        std::fs::write(&p, b"NOTMAGIC....").unwrap();
+        assert!(read_fatw(&p).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("s".to_string(), Tensor::f32(vec![], vec![3.5]));
+        let p = std::env::temp_dir().join("fatw_scalar.fatw");
+        write_fatw(&p, &m).unwrap();
+        let back = read_fatw(&p).unwrap();
+        assert_eq!(back["s"].shape, Vec::<usize>::new());
+        assert_eq!(back["s"].as_f32().unwrap(), &[3.5]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Graph IR mirror of `python/compile/graph.py` (`graph.json` /
+//! `folded.json`). Interpreted by the quant substrate (BN fold, §3.3
+//! rescale) and the int8 engine.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Input,
+    Conv,
+    DwConv,
+    Dense,
+    Bn,
+    Relu,
+    Relu6,
+    Add,
+    Gap,
+}
+
+impl Op {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "input" => Op::Input,
+            "conv" => Op::Conv,
+            "dwconv" => Op::DwConv,
+            "dense" => Op::Dense,
+            "bn" => Op::Bn,
+            "relu" => Op::Relu,
+            "relu6" => Op::Relu6,
+            "add" => Op::Add,
+            "gap" => Op::Gap,
+            other => bail!("unknown op {other}"),
+        })
+    }
+
+    pub fn is_conv_like(self) -> bool {
+        matches!(self, Op::Conv | Op::DwConv | Op::Dense)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub ch: usize,
+    pub bias: bool,
+    pub input_shape: Option<Vec<usize>>,
+}
+
+impl Node {
+    /// Output channel count of a conv-like node.
+    pub fn out_channels(&self) -> usize {
+        match self.op {
+            Op::Conv | Op::Dense => self.cout,
+            Op::DwConv => self.ch,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphDef {
+    pub name: String,
+    pub num_classes: usize,
+    pub nodes: Vec<Node>,
+    index: HashMap<String, usize>,
+}
+
+impl GraphDef {
+    pub fn from_json(json: &str) -> Result<Self> {
+        let j = Json::parse(json)?;
+        let name = j.req("name")?.as_str()?.to_string();
+        let num_classes = j.usize_or("num_classes", 10);
+        let nodes: Vec<Node> = j
+            .req("nodes")?
+            .as_arr()?
+            .iter()
+            .map(|n| {
+                let inputs = n
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|i| Ok(i.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?;
+                let input_shape = match n.get("shape") {
+                    Some(s) => Some(
+                        s.as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                    ),
+                    None => None,
+                };
+                Ok(Node {
+                    op: Op::parse(n.req("op")?.as_str()?)?,
+                    id: n.req("id")?.as_str()?.to_string(),
+                    inputs,
+                    k: n.usize_or("k", 0),
+                    stride: n.usize_or("stride", 0),
+                    cin: n.usize_or("cin", 0),
+                    cout: n.usize_or("cout", 0),
+                    ch: n.usize_or("ch", 0),
+                    bias: n.bool_or("bias", false),
+                    input_shape,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let index = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.id.clone(), i))
+            .collect();
+        Ok(GraphDef { name, num_classes, nodes, index })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let s = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json(&s)
+    }
+
+    pub fn node(&self, id: &str) -> Result<&Node> {
+        self.index
+            .get(id)
+            .map(|&i| &self.nodes[i])
+            .ok_or_else(|| anyhow::anyhow!("no node {id}"))
+    }
+
+    /// Consumers of each node output.
+    pub fn consumers(&self) -> HashMap<&str, Vec<&Node>> {
+        let mut out: HashMap<&str, Vec<&Node>> =
+            self.nodes.iter().map(|n| (n.id.as_str(), vec![])).collect();
+        for n in &self.nodes {
+            for i in &n.inputs {
+                out.get_mut(i.as_str()).unwrap().push(n);
+            }
+        }
+        out
+    }
+
+    pub fn conv_like(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.op.is_conv_like())
+    }
+
+    /// Canonical folded-weight marshalling order (w then b per conv-like
+    /// node, topo order) — mirror of `graph.folded_weight_order`.
+    pub fn folded_weight_order(&self) -> Vec<String> {
+        let mut out = vec![];
+        for n in self.conv_like() {
+            out.push(format!("{}.w", n.id));
+            out.push(format!("{}.b", n.id));
+        }
+        out
+    }
+
+    /// Activation-quant sites of a folded graph (mirror of
+    /// `interp.enumerate_sites`): (node id, unsigned).
+    pub fn sites(&self) -> Vec<(String, bool)> {
+        let cons = self.consumers();
+        let mut sites = vec![];
+        for n in &self.nodes {
+            let cs = &cons[n.id.as_str()];
+            if cs.len() == 1
+                && matches!(cs[0].op, Op::Bn | Op::Relu | Op::Relu6)
+            {
+                continue;
+            }
+            if n.op == Op::Bn {
+                continue;
+            }
+            let unsigned = match n.op {
+                Op::Relu | Op::Relu6 | Op::Input => true,
+                Op::Gap => {
+                    let src = self.node(&n.inputs[0]).unwrap();
+                    matches!(src.op, Op::Relu | Op::Relu6 | Op::Input)
+                }
+                _ => false,
+            };
+            sites.push((n.id.clone(), unsigned));
+        }
+        sites
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "tiny", "num_classes": 10,
+      "nodes": [
+        {"id": "input", "op": "input", "inputs": [], "shape": [32,32,3]},
+        {"id": "c0", "op": "conv", "inputs": ["input"], "k":3, "stride":1, "cin":3, "cout":8, "bias": true},
+        {"id": "r0", "op": "relu6", "inputs": ["c0"]},
+        {"id": "g", "op": "gap", "inputs": ["r0"]},
+        {"id": "d", "op": "dense", "inputs": ["g"], "cin":8, "cout":10, "bias": true}
+      ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let g = GraphDef::from_json(SAMPLE).unwrap();
+        assert_eq!(g.name, "tiny");
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(g.node("c0").unwrap().cout, 8);
+        assert_eq!(g.node("c0").unwrap().out_channels(), 8);
+    }
+
+    #[test]
+    fn weight_order() {
+        let g = GraphDef::from_json(SAMPLE).unwrap();
+        assert_eq!(
+            g.folded_weight_order(),
+            vec!["c0.w", "c0.b", "d.w", "d.b"]
+        );
+    }
+
+    #[test]
+    fn sites_skip_pre_activation() {
+        let g = GraphDef::from_json(SAMPLE).unwrap();
+        let sites = g.sites();
+        let ids: Vec<&str> = sites.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(ids, vec!["input", "r0", "g", "d"]);
+        let uns: Vec<bool> = sites.iter().map(|&(_, u)| u).collect();
+        assert_eq!(uns, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let bad = SAMPLE.replace("relu6", "gelu");
+        assert!(GraphDef::from_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Artifact manifests: the marshalling contract between the AOT HLO
+//! executables and the Rust runtime (`<artifact>.manifest.json`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::DType;
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn dtype(&self) -> Result<DType> {
+        DType::from_str(&self.dtype)
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+fn specs(j: &Json, key: &str) -> Result<Vec<IoSpec>> {
+    j.req(key)?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(IoSpec {
+                name: s.req("name")?.as_str()?.to_string(),
+                shape: s
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                dtype: s.req("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    pub fn from_json(s: &str) -> Result<Self> {
+        let j = Json::parse(s)?;
+        Ok(ArtifactManifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            inputs: specs(&j, "inputs")?,
+            outputs: specs(&j, "outputs")?,
+        })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let s = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json(&s)
+    }
+
+    /// Index of an input by its manifest name.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("{}: no input {name}", self.name))
+    }
+
+    /// Indices of inputs whose name starts with `prefix`, in manifest order.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("{}: no output {name}", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = ArtifactManifest::from_json(
+            r#"{"name":"t","inputs":[
+                {"name":"0/a.w","shape":[2,3],"dtype":"f32"},
+                {"name":"1","shape":[],"dtype":"f32"}],
+               "outputs":[{"name":"0","shape":[4],"dtype":"i32"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.input_index("1").unwrap(), 1);
+        assert_eq!(m.inputs_with_prefix("0/"), vec![0]);
+        assert_eq!(m.inputs[0].elems(), 6);
+        assert_eq!(m.outputs[0].dtype().unwrap(), DType::I32);
+        assert!(m.input_index("nope").is_err());
+    }
+}

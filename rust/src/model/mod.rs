@@ -1,0 +1,12 @@
+//! Model substrate: weight containers, graph IR, artifact manifests and
+//! the on-disk model directory produced by `make artifacts`.
+
+pub mod fatw;
+pub mod graphdef;
+pub mod manifest;
+pub mod store;
+
+pub use fatw::{read_fatw, write_fatw};
+pub use graphdef::{GraphDef, Node, Op};
+pub use manifest::{ArtifactManifest, IoSpec};
+pub use store::ModelStore;

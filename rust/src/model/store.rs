@@ -1,0 +1,133 @@
+//! On-disk model directory (`artifacts/models/<name>/`) produced by
+//! `make artifacts`: weights, graph IR, quant-site metadata, HLO artifacts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+use super::{fatw, GraphDef};
+
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub id: String,
+    pub unsigned: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ChannelStat {
+    pub id: String,
+    pub channels: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SitesJson {
+    pub sites: Vec<Site>,
+    pub channel_stats: Vec<ChannelStat>,
+    pub weight_order: Vec<String>,
+    pub val_acc_fp_pretrain: f64,
+}
+
+impl SitesJson {
+    pub fn from_json(s: &str) -> Result<Self> {
+        let j = Json::parse(s)?;
+        let sites = j
+            .req("sites")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(Site {
+                    id: s.req("id")?.as_str()?.to_string(),
+                    unsigned: s.bool_or("unsigned", false),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let channel_stats = j
+            .req("channel_stats")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(ChannelStat {
+                    id: s.req("id")?.as_str()?.to_string(),
+                    channels: s.usize_or("channels", 0),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let weight_order = j
+            .req("weight_order")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let val_acc_fp_pretrain = j
+            .get("val_acc_fp_pretrain")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(-1.0);
+        Ok(SitesJson { sites, channel_stats, weight_order, val_acc_fp_pretrain })
+    }
+}
+
+/// Handle on one model's artifact directory.
+#[derive(Debug, Clone)]
+pub struct ModelStore {
+    pub name: String,
+    pub dir: PathBuf,
+}
+
+impl ModelStore {
+    pub fn open<P: AsRef<Path>>(artifacts: P, name: &str) -> Result<Self> {
+        let dir = artifacts.as_ref().join("models").join(name);
+        if !dir.exists() {
+            anyhow::bail!(
+                "model dir {:?} missing — run `make artifacts` first",
+                dir
+            );
+        }
+        Ok(ModelStore { name: name.to_string(), dir })
+    }
+
+    pub fn list<P: AsRef<Path>>(artifacts: P) -> Result<Vec<String>> {
+        let mut names = vec![];
+        let dir = artifacts.as_ref().join("models");
+        for e in std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {dir:?}"))?
+        {
+            let e = e?;
+            if e.file_type()?.is_dir() {
+                names.push(e.file_name().to_string_lossy().into_owned());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    pub fn raw_weights(&self) -> Result<BTreeMap<String, Tensor>> {
+        fatw::read_fatw(self.dir.join("raw.fatw"))
+    }
+
+    /// Python-folded weights (golden reference for the Rust fold).
+    pub fn folded_weights_golden(&self) -> Result<BTreeMap<String, Tensor>> {
+        fatw::read_fatw(self.dir.join("folded.fatw"))
+    }
+
+    pub fn graph(&self) -> Result<GraphDef> {
+        GraphDef::load(self.dir.join("graph.json"))
+    }
+
+    pub fn folded_graph(&self) -> Result<GraphDef> {
+        GraphDef::load(self.dir.join("folded.json"))
+    }
+
+    pub fn sites(&self) -> Result<SitesJson> {
+        let s = std::fs::read_to_string(self.dir.join("sites.json"))?;
+        SitesJson::from_json(&s)
+    }
+
+    /// Path prefix for an artifact (append `.hlo.txt` / `.manifest.json`).
+    pub fn artifact_path(&self, artifact: &str) -> PathBuf {
+        self.dir.join(artifact)
+    }
+}

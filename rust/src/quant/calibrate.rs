@@ -1,0 +1,247 @@
+//! Calibration: aggregation of per-site statistics over calibration
+//! batches, plus baseline threshold calibrators (max / percentile / KL)
+//! used by the A1 ablation and the `calibration_study` example.
+
+/// Running (min, max) aggregate per site.
+#[derive(Debug, Clone)]
+pub struct MinMax {
+    pub min: f32,
+    pub max: f32,
+}
+
+impl Default for MinMax {
+    fn default() -> Self {
+        MinMax { min: f32::INFINITY, max: f32::NEG_INFINITY }
+    }
+}
+
+impl MinMax {
+    pub fn update(&mut self, min: f32, max: f32) {
+        self.min = self.min.min(min);
+        self.max = self.max.max(max);
+    }
+}
+
+/// Aggregated calibration statistics for a model.
+#[derive(Debug, Clone, Default)]
+pub struct CalibStats {
+    /// Per activation site, in site order: (min, max).
+    pub site_minmax: Vec<MinMax>,
+    /// Per conv-like node: per-channel (min, max) of pre-activation output.
+    pub channel_minmax: std::collections::BTreeMap<String, Vec<MinMax>>,
+    /// Per-site histograms (counts over 128 bins spanning site min..max),
+    /// filled by the optional second calibration pass.
+    pub site_hist: Vec<Vec<u32>>,
+    pub batches: usize,
+}
+
+impl CalibStats {
+    pub fn new(num_sites: usize) -> Self {
+        CalibStats {
+            site_minmax: vec![MinMax::default(); num_sites],
+            channel_minmax: Default::default(),
+            site_hist: vec![],
+            batches: 0,
+        }
+    }
+
+    /// Stacked (S, 2) tensor of (min, max) in site order — the `act_t`
+    /// input of the quantized artifacts.
+    pub fn act_t_tensor(&self) -> crate::tensor::Tensor {
+        let mut v = Vec::with_capacity(self.site_minmax.len() * 2);
+        for mm in &self.site_minmax {
+            v.push(mm.min);
+            v.push(mm.max);
+        }
+        crate::tensor::Tensor::f32(vec![self.site_minmax.len(), 2], v)
+    }
+}
+
+/// Baseline calibrator selection (A1 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Calibrator {
+    /// Paper default: exact max (eq. 2/6).
+    Max,
+    /// Percentile of the distribution (e.g. 99.99).
+    Percentile(u32), // in basis points: 9999 = 99.99%
+    /// TensorRT-style KL-divergence minimisation over the histogram.
+    Kl,
+}
+
+/// Reduce a histogram over [lo, hi] to a threshold per the calibrator.
+pub fn threshold_from_hist(
+    cal: Calibrator,
+    hist: &[u32],
+    lo: f32,
+    hi: f32,
+) -> f32 {
+    match cal {
+        Calibrator::Max => hi.abs().max(lo.abs()),
+        Calibrator::Percentile(bp) => percentile_threshold(hist, lo, hi, bp),
+        Calibrator::Kl => kl_threshold(hist, lo, hi),
+    }
+}
+
+fn bin_upper(lo: f32, hi: f32, bins: usize, i: usize) -> f32 {
+    lo + (hi - lo) * ((i + 1) as f32 / bins as f32)
+}
+
+/// Smallest upper edge covering `bp/10000` of the mass (by |value|; the
+/// histogram is assumed to span [lo, hi] densely).
+pub fn percentile_threshold(hist: &[u32], lo: f32, hi: f32, bp: u32) -> f32 {
+    let total: u64 = hist.iter().map(|&c| c as u64).sum();
+    if total == 0 {
+        return hi.abs().max(lo.abs());
+    }
+    let bins = hist.len();
+    // Accumulate bins by ascending |upper-edge| magnitude.
+    let mut order: Vec<usize> = (0..bins).collect();
+    let mag = |i: usize| -> f32 {
+        let u = bin_upper(lo, hi, bins, i);
+        let l = lo + (hi - lo) * (i as f32 / bins as f32);
+        u.abs().max(l.abs())
+    };
+    order.sort_by(|&a, &b| mag(a).total_cmp(&mag(b)));
+    let target = (total as f64 * bp as f64 / 10_000.0).ceil() as u64;
+    let mut acc = 0u64;
+    for &i in &order {
+        acc += hist[i] as u64;
+        if acc >= target {
+            return mag(i).max(1e-8);
+        }
+    }
+    hi.abs().max(lo.abs())
+}
+
+/// TensorRT-flavoured KL calibrator: choose the clip threshold whose
+/// 255-level quantized distribution minimises KL(P||Q).
+pub fn kl_threshold(hist: &[u32], lo: f32, hi: f32) -> f32 {
+    let bins = hist.len();
+    let tmax = hi.abs().max(lo.abs()).max(1e-8);
+    // Work on the magnitude distribution re-binned over [0, tmax].
+    let mut mags = vec![0f64; bins];
+    for (i, &c) in hist.iter().enumerate() {
+        let l = lo + (hi - lo) * (i as f32 / bins as f32);
+        let u = bin_upper(lo, hi, bins, i);
+        let m = u.abs().max(l.abs());
+        let bi = ((m / tmax) * (bins as f32 - 1.0)) as usize;
+        mags[bi.min(bins - 1)] += c as f64;
+    }
+    let mut best_t = tmax;
+    let mut best_kl = f64::INFINITY;
+    // candidate thresholds: from 25% of range upward
+    for cut in (bins / 4)..=bins {
+        let t = tmax * cut as f32 / bins as f32;
+        let kl = kl_for_cut(&mags, cut);
+        if kl < best_kl {
+            best_kl = kl;
+            best_t = t;
+        }
+    }
+    best_t.max(1e-8)
+}
+
+fn kl_for_cut(mags: &[f64], cut: usize) -> f64 {
+    let bins = mags.len();
+    // P: clipped reference distribution
+    let mut p: Vec<f64> = mags[..cut.min(bins)].to_vec();
+    let clipped: f64 = mags[cut.min(bins)..].iter().sum();
+    if let Some(last) = p.last_mut() {
+        *last += clipped;
+    }
+    let psum: f64 = p.iter().sum();
+    if psum <= 0.0 {
+        return f64::INFINITY;
+    }
+    // Q: P re-quantized to 255 levels then expanded back
+    let levels = 255usize.min(cut.max(1));
+    let mut q = vec![0f64; p.len()];
+    let chunk = p.len() as f64 / levels as f64;
+    for lv in 0..levels {
+        let a = (lv as f64 * chunk) as usize;
+        let b = (((lv + 1) as f64 * chunk) as usize).min(p.len()).max(a + 1);
+        let mass: f64 = p[a..b].iter().sum();
+        let nz = p[a..b].iter().filter(|&&v| v > 0.0).count().max(1);
+        for i in a..b {
+            if p[i] > 0.0 {
+                q[i] = mass / nz as f64;
+            }
+        }
+    }
+    let qsum: f64 = q.iter().sum();
+    let mut kl = 0.0;
+    for i in 0..p.len() {
+        if p[i] > 0.0 && q[i] > 0.0 {
+            kl += (p[i] / psum) * ((p[i] / psum) / (q[i] / qsum)).ln();
+        } else if p[i] > 0.0 {
+            kl += 1e3; // heavy penalty for zero-mass bins
+        }
+    }
+    kl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_aggregates() {
+        let mut mm = MinMax::default();
+        mm.update(-1.0, 2.0);
+        mm.update(-0.5, 3.0);
+        assert_eq!(mm.min, -1.0);
+        assert_eq!(mm.max, 3.0);
+    }
+
+    fn gaussian_hist(bins: usize, outlier: bool) -> (Vec<u32>, f32, f32) {
+        // symmetric pseudo-gaussian histogram over [-4, 4]
+        let mut h = vec![0u32; bins];
+        for i in 0..bins {
+            let x = -4.0 + 8.0 * (i as f32 + 0.5) / bins as f32;
+            h[i] = (1e5 * (-x * x / 2.0).exp()) as u32;
+        }
+        if outlier {
+            h[bins - 1] += 3; // a couple of far outliers
+        }
+        (h, -4.0, 4.0)
+    }
+
+    #[test]
+    fn percentile_below_max_with_outliers() {
+        let (h, lo, hi) = gaussian_hist(128, true);
+        let p = percentile_threshold(&h, lo, hi, 9990);
+        assert!(p < 4.0);
+        assert!(p > 1.5);
+    }
+
+    #[test]
+    fn percentile_10000_is_max() {
+        let (h, lo, hi) = gaussian_hist(128, false);
+        let p = percentile_threshold(&h, lo, hi, 10_000);
+        assert!(p >= 3.9);
+    }
+
+    #[test]
+    fn kl_clips_outliers() {
+        let (h, lo, hi) = gaussian_hist(128, true);
+        let t = kl_threshold(&h, lo, hi);
+        assert!(t <= 4.0);
+        assert!(t >= 1.0);
+    }
+
+    #[test]
+    fn max_calibrator_is_identity() {
+        let (h, lo, hi) = gaussian_hist(64, false);
+        assert_eq!(threshold_from_hist(Calibrator::Max, &h, lo, hi), 4.0);
+    }
+
+    #[test]
+    fn act_t_tensor_layout() {
+        let mut cs = CalibStats::new(2);
+        cs.site_minmax[0].update(-1.0, 2.0);
+        cs.site_minmax[1].update(0.0, 5.0);
+        let t = cs.act_t_tensor();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[-1.0, 2.0, 0.0, 5.0]);
+    }
+}

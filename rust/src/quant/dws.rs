@@ -1,0 +1,289 @@
+//! §3.3 — mutual rescaling of DWS → [ReLU/ReLU6] → Conv weights.
+//!
+//! Runtime mirror of `python/compile/dws.py` (same constants, same six
+//! steps; cross-checked by the `crosslang` integration test).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::{GraphDef, Op};
+use crate::tensor::Tensor;
+
+pub const LOCK_LIMIT: f32 = 5.9;
+pub const RELU6_CAP: f32 = 6.0;
+pub const SCALE_MIN: f32 = 1.0 / 64.0;
+pub const SCALE_MAX: f32 = 64.0;
+
+/// One rescalable chain in the folded graph.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    pub dw: String,
+    pub act: String,
+    pub conv: String,
+    pub relu6: bool,
+}
+
+/// Per-pattern rescale report (threshold spread is what §3.3 shrinks).
+#[derive(Debug, Clone)]
+pub struct PatternReport {
+    pub dw: String,
+    pub conv: String,
+    pub locked: usize,
+    pub channels: usize,
+    pub spread_before: f32,
+    pub spread_after: f32,
+}
+
+/// Find DWS→act→1x1-conv chains where the act feeds only that conv.
+pub fn find_patterns(g: &GraphDef) -> Vec<Pattern> {
+    let cons = g.consumers();
+    let mut out = vec![];
+    for n in &g.nodes {
+        if n.op != Op::DwConv {
+            continue;
+        }
+        let cs = &cons[n.id.as_str()];
+        if cs.len() != 1 || !matches!(cs[0].op, Op::Relu | Op::Relu6) {
+            continue;
+        }
+        let act = cs[0];
+        let cs2 = &cons[act.id.as_str()];
+        if cs2.len() != 1 || cs2[0].op != Op::Conv || cs2[0].k != 1 {
+            continue;
+        }
+        out.push(Pattern {
+            dw: n.id.clone(),
+            act: act.id.clone(),
+            conv: cs2[0].id.clone(),
+            relu6: act.op == Op::Relu6,
+        });
+    }
+    out
+}
+
+fn spread(w: &[f32], c: usize) -> f32 {
+    let t = crate::quant::thresholds::per_channel_w_thresholds(w, c);
+    let mx = t.iter().fold(0f32, |m, &v| m.max(v));
+    let mn = t.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+    mx / mn.max(1e-12)
+}
+
+/// Compute per-channel scales for one pattern (paper steps 1-6).
+pub fn pattern_scales(
+    w_dw: &[f32],
+    ch_max: &[f32],
+    channels: usize,
+    relu6: bool,
+) -> (Vec<f32>, Vec<bool>) {
+    let t_k: Vec<f32> =
+        crate::quant::thresholds::per_channel_w_thresholds(w_dw, channels);
+
+    let locked: Vec<bool> = if relu6 {
+        ch_max.iter().map(|&m| m >= LOCK_LIMIT).collect()
+    } else {
+        vec![false; channels]
+    };
+
+    let n_locked = locked.iter().filter(|&&l| l).count();
+    let t0 = if n_locked > 0 {
+        t_k.iter()
+            .zip(&locked)
+            .filter(|(_, &l)| l)
+            .map(|(&t, _)| t)
+            .sum::<f32>()
+            / n_locked as f32
+    } else {
+        t_k.iter().sum::<f32>() / channels as f32
+    };
+
+    let mut s = vec![1f32; channels];
+    for k in 0..channels {
+        if locked[k] {
+            continue;
+        }
+        let mut sk = t0 / t_k[k];
+        if relu6 {
+            sk = sk.min(RELU6_CAP / ch_max[k].max(1e-12));
+        }
+        s[k] = sk.clamp(SCALE_MIN, SCALE_MAX);
+    }
+    (s, locked)
+}
+
+/// Inject per-filter range disparity into every DWS pattern —
+/// function-preserving emulation of the disparity real ImageNet
+/// MobileNet-v2 checkpoints exhibit (DESIGN.md §2: our briefly-trained
+/// mini nets have per-filter spreads of only ~3-7x vs >100x in TF-slim
+/// checkpoints, which is what makes the paper's scalar mode collapse).
+///
+/// Filter k is scaled by `s_k = 2^-(span·u)`, u ∈ [0,1) deterministic;
+/// the following conv's input channel is scaled by `1/s_k`. Because
+/// `s_k ≤ 1`, scaled pre-activations stay below the ReLU6 plateau
+/// (paper eq. 26), so the FP function is exactly preserved.
+pub fn inject_spread(
+    g: &GraphDef,
+    params: &mut BTreeMap<String, Tensor>,
+    seed: u64,
+    span_log2: f32,
+) -> Result<usize> {
+    let mut touched = 0;
+    for (pi, pat) in find_patterns(g).iter().enumerate() {
+        let channels = g.node(&pat.dw)?.ch;
+        let s: Vec<f32> = (0..channels)
+            .map(|k| {
+                let u = crate::data::prng::uniform(
+                    seed,
+                    pi as u64,
+                    200 + k as u64,
+                    0,
+                    0,
+                    0,
+                );
+                (-(span_log2 * u)).exp2()
+            })
+            .collect();
+        let wkey = format!("{}.w", pat.dw);
+        let bkey = format!("{}.b", pat.dw);
+        let ckey = format!("{}.w", pat.conv);
+        {
+            let w = params.get_mut(&wkey).unwrap().as_f32_mut()?;
+            for (i, v) in w.iter_mut().enumerate() {
+                *v *= s[i % channels];
+            }
+        }
+        {
+            let b = params.get_mut(&bkey).unwrap().as_f32_mut()?;
+            for (k, v) in b.iter_mut().enumerate() {
+                *v *= s[k];
+            }
+        }
+        {
+            let t = params.get_mut(&ckey).unwrap();
+            let cout = *t.shape.last().unwrap();
+            let w = t.as_f32_mut()?;
+            for (i, v) in w.iter_mut().enumerate() {
+                let cin = (i / cout) % channels;
+                *v /= s[cin];
+            }
+        }
+        touched += 1;
+    }
+    Ok(touched)
+}
+
+/// Apply §3.3 to all patterns in the folded graph. `ch_max[node]` holds
+/// calibrated per-channel pre-activation maxima of each dwconv output.
+/// Weights are modified in place; reports returned per pattern.
+pub fn rescale_model(
+    g: &GraphDef,
+    params: &mut BTreeMap<String, Tensor>,
+    ch_max: &BTreeMap<String, Vec<f32>>,
+) -> Result<Vec<PatternReport>> {
+    let mut reports = vec![];
+    for pat in find_patterns(g) {
+        let channels = g.node(&pat.dw)?.ch;
+        let cm = ch_max
+            .get(&pat.dw)
+            .ok_or_else(|| anyhow::anyhow!("no channel stats for {}", pat.dw))?;
+        let wkey = format!("{}.w", pat.dw);
+        let bkey = format!("{}.b", pat.dw);
+        let ckey = format!("{}.w", pat.conv);
+
+        let spread_before;
+        let spread_after;
+        let (s, locked) = {
+            let w_dw = params[&wkey].as_f32()?;
+            spread_before = spread(w_dw, channels);
+            pattern_scales(w_dw, cm, channels, pat.relu6)
+        };
+        // scale dw filters + bias
+        {
+            let w = params.get_mut(&wkey).unwrap().as_f32_mut()?;
+            for (i, v) in w.iter_mut().enumerate() {
+                *v *= s[i % channels];
+            }
+            spread_after = spread(w, channels);
+        }
+        {
+            let b = params.get_mut(&bkey).unwrap().as_f32_mut()?;
+            for (k, v) in b.iter_mut().enumerate() {
+                *v *= s[k];
+            }
+        }
+        // divide following conv's input channels: w_conv (1,1,C,Cout)
+        {
+            let t = params.get_mut(&ckey).unwrap();
+            let cout = *t.shape.last().unwrap();
+            let w = t.as_f32_mut()?;
+            for (i, v) in w.iter_mut().enumerate() {
+                let cin = (i / cout) % channels;
+                *v /= s[cin];
+            }
+        }
+        reports.push(PatternReport {
+            dw: pat.dw,
+            conv: pat.conv,
+            locked: locked.iter().filter(|&&l| l).count(),
+            channels,
+            spread_before,
+            spread_after,
+        });
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locked_channels_scale_one() {
+        let w: Vec<f32> = (0..9 * 4)
+            .map(|i| ((i % 7) as f32 - 3.0) * 0.1 * ((i % 4) as f32 + 0.5))
+            .collect();
+        let ch_max = [1.0, 5.95, 2.0, 6.2];
+        let (s, locked) = pattern_scales(&w, &ch_max, 4, true);
+        assert_eq!(locked, vec![false, true, false, true]);
+        assert_eq!(s[1], 1.0);
+        assert_eq!(s[3], 1.0);
+    }
+
+    #[test]
+    fn relu6_cap_respected() {
+        let w: Vec<f32> = (0..9 * 4)
+            .map(|i| [0.1f32, 1.0, 2.0, 0.5][i % 4] * (1.0 - (i / 4) as f32 * 0.01))
+            .collect();
+        let ch_max = [2.0, 3.0, 4.0, 5.0];
+        let (s, _) = pattern_scales(&w, &ch_max, 4, true);
+        for k in 0..4 {
+            assert!(ch_max[k] * s[k] <= RELU6_CAP + 1e-4);
+        }
+    }
+
+    #[test]
+    fn relu_unbounded_equalises() {
+        // with ReLU (no cap), scales equalise thresholds exactly (up to clip)
+        let mut w = vec![0f32; 9 * 3];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = [0.5f32, 1.0, 2.0][i % 3];
+        }
+        let ch_max = [1.0, 1.0, 1.0];
+        let (s, _) = pattern_scales(&w, &ch_max, 3, false);
+        let t0 = (0.5 + 1.0 + 2.0) / 3.0;
+        assert!((s[0] - t0 / 0.5).abs() < 1e-5);
+        assert!((s[1] - t0 / 1.0).abs() < 1e-5);
+        assert!((s[2] - t0 / 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn scales_clamped() {
+        let mut w = vec![0f32; 9 * 2];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = [1e-6f32, 100.0][i % 2];
+        }
+        let (s, _) = pattern_scales(&w, &[1.0, 1.0], 2, false);
+        assert!(s[0] <= SCALE_MAX);
+        assert!(s[1] >= SCALE_MIN);
+    }
+}

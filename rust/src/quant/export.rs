@@ -1,0 +1,437 @@
+//! Build a fully-quantized [`QModel`] for the int8 engine from folded
+//! weights + calibration stats + (optionally fine-tuned) FAT thresholds.
+//!
+//! This is the "convert for mobile" step of the paper's pipeline: weights
+//! become int8 (per-tensor or per-filter, §3.1.5), biases int32 (eq. 20),
+//! activations get per-site scale/zero-point from the adjusted thresholds,
+//! and every conv→relu(6) pair is fused into a requant clamp.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::int8::engine::{AddParams, GapParams, QLayer, QModel, QNode};
+use crate::int8::qtensor::to_i8_domain;
+use crate::model::store::SitesJson;
+use crate::model::{GraphDef, Op};
+use crate::tensor::Tensor;
+
+use super::calibrate::CalibStats;
+use super::scale::{quantize_bias, quantize_multiplier, QParams};
+use super::thresholds as th;
+
+/// Quantization mode grid of Tables 1-2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    SymScalar,
+    SymVector,
+    AsymScalar,
+    AsymVector,
+}
+
+impl QuantMode {
+    pub fn asym(self) -> bool {
+        matches!(self, QuantMode::AsymScalar | QuantMode::AsymVector)
+    }
+
+    pub fn vector(self) -> bool {
+        matches!(self, QuantMode::SymVector | QuantMode::AsymVector)
+    }
+
+    /// Artifact suffix, e.g. `sym_scalar` in `train_step_sym_scalar`.
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::SymScalar => "sym_scalar",
+            QuantMode::SymVector => "sym_vector",
+            QuantMode::AsymScalar => "asym_scalar",
+            QuantMode::AsymVector => "asym_vector",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sym_scalar" => QuantMode::SymScalar,
+            "sym_vector" => QuantMode::SymVector,
+            "asym_scalar" => QuantMode::AsymScalar,
+            "asym_vector" => QuantMode::AsymVector,
+            other => anyhow::bail!("unknown mode {other}"),
+        })
+    }
+
+    pub fn all() -> [QuantMode; 4] {
+        [
+            QuantMode::SymScalar,
+            QuantMode::SymVector,
+            QuantMode::AsymScalar,
+            QuantMode::AsymVector,
+        ]
+    }
+}
+
+/// Rounding mode marker (the engine uses round-half-even at quantize time,
+/// gemmlowp rounding in requant — kept for API clarity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Rounding {
+    #[default]
+    TiesEven,
+}
+
+/// Fine-tuned threshold scales, keyed like the artifact trainables:
+/// `act_a` / (`act_at`, `act_ar`) per site and `w_a:<node>` per layer.
+#[derive(Debug, Clone, Default)]
+pub struct Trained {
+    pub act_a: Vec<f32>,
+    pub act_at: Vec<f32>,
+    pub act_ar: Vec<f32>,
+    pub w_a: BTreeMap<String, Vec<f32>>,
+}
+
+impl Trained {
+    /// α = 1 defaults (pure calibration, "quantization without training").
+    pub fn identity(g: &GraphDef, mode: QuantMode, num_sites: usize) -> Self {
+        let mut w_a = BTreeMap::new();
+        for n in g.conv_like() {
+            let len = if mode.vector() && n.op != Op::Dense {
+                n.out_channels()
+            } else {
+                1
+            };
+            w_a.insert(n.id.clone(), vec![1.0; len]);
+        }
+        Trained {
+            act_a: vec![1.0; num_sites],
+            act_at: vec![0.0; num_sites],
+            act_ar: vec![1.0; num_sites],
+            w_a,
+        }
+    }
+}
+
+/// Per-site activation QParams (i8 domain) from calibration + trained α.
+pub fn site_qparams(
+    sites: &SitesJson,
+    stats: &CalibStats,
+    mode: QuantMode,
+    tr: &Trained,
+) -> BTreeMap<String, QParams> {
+    let mut out = BTreeMap::new();
+    for (i, site) in sites.sites.iter().enumerate() {
+        let mm = &stats.site_minmax[i];
+        let qp = if mode.asym() {
+            let (left, width) = th::adjust_asym(
+                tr.act_at[i],
+                tr.act_ar[i],
+                mm.min,
+                mm.max,
+                site.unsigned,
+            );
+            QParams::asymmetric(left, width)
+        } else {
+            let t = th::adjust_sym(
+                tr.act_a[i],
+                th::sym_t_from_minmax(mm.min, mm.max),
+            );
+            if site.unsigned {
+                QParams::symmetric_unsigned(t)
+            } else {
+                QParams::symmetric_signed(t)
+            }
+        };
+        out.insert(site.id.clone(), to_i8_domain(qp));
+    }
+    out
+}
+
+/// Weight quantization: per-tensor or per-filter symmetric int8.
+/// Returns (w_q, per-channel scales — len 1 in scalar mode).
+pub fn quantize_weights(
+    w: &Tensor,
+    cout: usize,
+    vector: bool,
+    w_alpha: &[f32],
+) -> Result<(Vec<i8>, Vec<f32>)> {
+    let data = w.as_f32()?;
+    if vector {
+        let t = th::per_channel_w_thresholds(data, cout);
+        let scales: Vec<f32> = t
+            .iter()
+            .enumerate()
+            .map(|(c, &tc)| {
+                th::adjust_sym(w_alpha[c.min(w_alpha.len() - 1)], tc) / 127.0
+            })
+            .collect();
+        let q = data
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let s = scales[i % cout];
+                ((v / s).round_ties_even() as i32).clamp(-127, 127) as i8
+            })
+            .collect();
+        Ok((q, scales))
+    } else {
+        let t = th::adjust_sym(w_alpha[0], th::per_tensor_w_threshold(data));
+        let s = t / 127.0;
+        let q = data
+            .iter()
+            .map(|&v| ((v / s).round_ties_even() as i32).clamp(-127, 127) as i8)
+            .collect();
+        Ok((q, vec![s]))
+    }
+}
+
+/// For each node, its *effective* output site: the relu/relu6 consumer if
+/// that is the sole consumer (the engine fuses the clamp), else itself.
+fn effective_site(g: &GraphDef, id: &str) -> String {
+    let cons = g.consumers();
+    let cs = &cons[id];
+    if cs.len() == 1 && matches!(cs[0].op, Op::Relu | Op::Relu6) {
+        cs[0].id.clone()
+    } else {
+        id.to_string()
+    }
+}
+
+/// Activation clamp for a producer writing into `site` (fusing relu/relu6).
+fn clamp_for(g: &GraphDef, id: &str, qp: QParams) -> (i32, i32) {
+    let cons = g.consumers();
+    let cs = &cons[id];
+    if cs.len() == 1 {
+        match cs[0].op {
+            Op::Relu => return (qp.zero_point.max(qp.qmin), qp.qmax),
+            Op::Relu6 => {
+                let hi = qp.zero_point
+                    + (6.0 / qp.scale).round_ties_even() as i32;
+                return (
+                    qp.zero_point.max(qp.qmin),
+                    hi.min(qp.qmax),
+                );
+            }
+            _ => {}
+        }
+    }
+    (qp.qmin, qp.qmax)
+}
+
+/// Input-site id feeding a node (resolving through fused relu nodes).
+fn input_site(g: &GraphDef, node_input: &str) -> String {
+    // the producer tensor's own effective site IS node_input unless the
+    // producer was fused; but since fused relu nodes carry the producer's
+    // tensor, the site id is simply the input node id when it is a site,
+    // or the relu it was fused into. Because the engine stores tensors
+    // under every node id (passthrough), the qparams of `node_input` are
+    // those of its effective site.
+    effective_site_of_tensor(g, node_input)
+}
+
+fn effective_site_of_tensor(g: &GraphDef, id: &str) -> String {
+    // if `id` is a relu that was fused, its tensor carries its own site id;
+    // if `id` is a producer whose sole consumer is a relu, its tensor was
+    // produced directly into the relu's site.
+    let n = g.node(id).unwrap();
+    if matches!(n.op, Op::Relu | Op::Relu6) {
+        return id.to_string();
+    }
+    effective_site(g, id)
+}
+
+/// Build the full quantized model.
+pub fn build_qmodel(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    sites: &SitesJson,
+    stats: &CalibStats,
+    mode: QuantMode,
+    tr: &Trained,
+) -> Result<QModel> {
+    let site_qp = site_qparams(sites, stats, mode, tr);
+    let qp_of = |sid: &str| -> Result<QParams> {
+        site_qp
+            .get(sid)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no site params for {sid}"))
+    };
+
+    let mut nodes = BTreeMap::new();
+    let mut param_bytes = 0usize;
+    for n in &g.nodes {
+        match n.op {
+            Op::Conv | Op::DwConv | Op::Dense => {
+                let in_site = input_site(g, &n.inputs[0]);
+                let out_site = effective_site(g, &n.id);
+                let in_qp = qp_of(&in_site)?;
+                let out_qp = qp_of(&out_site)?;
+                let cout = n.out_channels();
+                let w = &weights[&format!("{}.w", n.id)];
+                let b = weights[&format!("{}.b", n.id)].as_f32()?;
+                let ones = vec![1.0f32];
+                let wa = tr.w_a.get(&n.id).unwrap_or(&ones);
+                let vector = mode.vector() && n.op != Op::Dense;
+                let (w_q, w_scales) =
+                    quantize_weights(w, cout, vector, wa)?;
+                let bias_q: Vec<i32> = b
+                    .iter()
+                    .enumerate()
+                    .map(|(c, &bv)| {
+                        quantize_bias(
+                            bv,
+                            in_qp.scale,
+                            w_scales[c % w_scales.len()],
+                        )
+                    })
+                    .collect();
+                let requant: Vec<(i32, i32)> = (0..cout)
+                    .map(|c| {
+                        quantize_multiplier(
+                            in_qp.scale as f64
+                                * w_scales[c % w_scales.len()] as f64
+                                / out_qp.scale as f64,
+                        )
+                    })
+                    .collect();
+                let w_sums = if n.op == Op::DwConv {
+                    vec![]
+                } else {
+                    let k = w_q.len() / cout;
+                    crate::int8::gemm::col_sums(&w_q, k, cout)
+                };
+                param_bytes += w_q.len() + bias_q.len() * 4;
+                nodes.insert(
+                    n.id.clone(),
+                    QNode::Layer(QLayer {
+                        w_q,
+                        w_sums,
+                        bias_q,
+                        requant,
+                        out_qp,
+                        clamp: clamp_for(g, &n.id, out_qp),
+                        w_scales,
+                    }),
+                );
+            }
+            Op::Add => {
+                let sa = input_site(g, &n.inputs[0]);
+                let sb = input_site(g, &n.inputs[1]);
+                let so = effective_site(g, &n.id);
+                let qa = qp_of(&sa)?;
+                let qb = qp_of(&sb)?;
+                let qo = qp_of(&so)?;
+                nodes.insert(
+                    n.id.clone(),
+                    QNode::Add(AddParams {
+                        ma: quantize_multiplier(
+                            qa.scale as f64 / qo.scale as f64,
+                        ),
+                        mb: quantize_multiplier(
+                            qb.scale as f64 / qo.scale as f64,
+                        ),
+                        out_qp: qo,
+                        clamp: clamp_for(g, &n.id, qo),
+                    }),
+                );
+            }
+            Op::Gap => {
+                let si = input_site(g, &n.inputs[0]);
+                let so = effective_site(g, &n.id);
+                let qi = qp_of(&si)?;
+                let qo = qp_of(&so)?;
+                // fold 1/(h*w) into the multiplier; spatial dims from the
+                // input image shape walked through strides
+                let hw = spatial_elems(g, &n.inputs[0])?;
+                nodes.insert(
+                    n.id.clone(),
+                    QNode::Gap(GapParams {
+                        m: quantize_multiplier(
+                            qi.scale as f64
+                                / qo.scale as f64
+                                / hw as f64,
+                        ),
+                        out_qp: qo,
+                    }),
+                );
+            }
+            Op::Relu | Op::Relu6 => {
+                nodes.insert(n.id.clone(), QNode::Passthrough);
+            }
+            Op::Input | Op::Bn => {}
+        }
+    }
+
+    Ok(QModel {
+        graph: g.clone(),
+        nodes,
+        input_qp: qp_of("input")?,
+        param_bytes,
+    })
+}
+
+/// H*W of the tensor produced by `id` (input 32x32, halved per stride-2).
+fn spatial_elems(g: &GraphDef, id: &str) -> Result<usize> {
+    // walk back to input accumulating strides
+    let mut cur = id.to_string();
+    let mut factor = 1usize;
+    loop {
+        let n = g.node(&cur)?;
+        match n.op {
+            Op::Input => {
+                let sh = n.input_shape.clone().unwrap_or(vec![32, 32, 3]);
+                let h = sh[0].div_ceil(factor);
+                let w = sh[1].div_ceil(factor);
+                return Ok(h * w);
+            }
+            _ => {
+                if n.stride > 1 {
+                    factor *= n.stride;
+                }
+                cur = n.inputs[0].clone();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_grid() {
+        assert!(QuantMode::AsymVector.asym());
+        assert!(QuantMode::AsymVector.vector());
+        assert!(!QuantMode::SymScalar.asym());
+        assert_eq!(QuantMode::parse("sym_vector").unwrap(), QuantMode::SymVector);
+        assert!(QuantMode::parse("nope").is_err());
+        assert_eq!(QuantMode::all().len(), 4);
+    }
+
+    #[test]
+    fn quantize_weights_scalar_vs_vector() {
+        let w = Tensor::f32(vec![1, 1, 1, 2], vec![0.5, 4.0]);
+        let (q_s, s_s) = quantize_weights(&w, 2, false, &[1.0]).unwrap();
+        assert_eq!(s_s.len(), 1);
+        // scalar: channel 0 poorly resolved (0.5 / (4/127) ≈ 16)
+        assert_eq!(q_s[0], 16);
+        assert_eq!(q_s[1], 127);
+        let (q_v, s_v) = quantize_weights(&w, 2, true, &[1.0, 1.0]).unwrap();
+        assert_eq!(s_v.len(), 2);
+        // vector: both channels use their full range
+        assert_eq!(q_v[0], 127);
+        assert_eq!(q_v[1], 127);
+    }
+
+    #[test]
+    fn trained_identity_shapes() {
+        let g = GraphDef::from_json(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[8,8,3]},
+             {"id":"c","op":"conv","inputs":["input"],"k":1,"stride":1,"cin":3,"cout":4,"bias":true},
+             {"id":"g","op":"gap","inputs":["c"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":4,"cout":2,"bias":true}]}"#,
+        )
+        .unwrap();
+        let t = Trained::identity(&g, QuantMode::SymVector, 4);
+        assert_eq!(t.w_a["c"].len(), 4);
+        assert_eq!(t.w_a["d"].len(), 1);
+        let t2 = Trained::identity(&g, QuantMode::SymScalar, 4);
+        assert_eq!(t2.w_a["c"].len(), 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! Batch-norm folding (paper eq. 10-11), operating on the raw graph +
+//! weights loaded from `raw.fatw`. Mirrors `python/compile/graph.fold_bn`
+//! and is golden-tested against `folded.fatw`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::{GraphDef, Op};
+use crate::tensor::Tensor;
+
+/// BN epsilon — must match `python/compile/graph.EPS`.
+pub const EPS: f32 = 1e-3;
+
+/// Fold every conv/dwconv→bn pair: `W' = γW/√(σ²+ε)`, `b' = β − γμ/√(σ²+ε)`.
+///
+/// Returns the folded weight map keyed like the folded graph expects
+/// (`<node>.w` / `<node>.b` for every conv-like node). The folded *graph*
+/// itself ships as `folded.json`; this reproduces the weights.
+pub fn fold_bn(
+    g: &GraphDef,
+    params: &BTreeMap<String, Tensor>,
+) -> Result<BTreeMap<String, Tensor>> {
+    // map conv node id -> bn node id
+    let mut bn_after: BTreeMap<&str, &str> = BTreeMap::new();
+    for n in &g.nodes {
+        if n.op == Op::Bn {
+            let src = g.node(&n.inputs[0])?;
+            if !matches!(src.op, Op::Conv | Op::DwConv) {
+                anyhow::bail!("bn after {:?} unsupported", src.op);
+            }
+            bn_after.insert(src.id.as_str(), n.id.as_str());
+        }
+    }
+
+    let mut out = BTreeMap::new();
+    for n in &g.nodes {
+        if !n.op.is_conv_like() {
+            continue;
+        }
+        let w = params
+            .get(&format!("{}.w", n.id))
+            .ok_or_else(|| anyhow::anyhow!("missing {}.w", n.id))?;
+        let cout = n.out_channels();
+        if let Some(bn) = bn_after.get(n.id.as_str()) {
+            let gamma = params[&format!("{bn}.gamma")].as_f32()?;
+            let beta = params[&format!("{bn}.beta")].as_f32()?;
+            let mean = params[&format!("{bn}.mean")].as_f32()?;
+            let var = params[&format!("{bn}.var")].as_f32()?;
+            // scale over the last (output-channel) axis
+            let wsrc = w.as_f32()?;
+            let mut wf = vec![0f32; wsrc.len()];
+            for (i, &v) in wsrc.iter().enumerate() {
+                let c = i % cout;
+                let scale = gamma[c] / (var[c] + EPS).sqrt();
+                wf[i] = v * scale;
+            }
+            let mut bf = vec![0f32; cout];
+            for c in 0..cout {
+                bf[c] = beta[c] - gamma[c] * mean[c] / (var[c] + EPS).sqrt();
+            }
+            out.insert(format!("{}.w", n.id), Tensor::f32(w.shape.clone(), wf));
+            out.insert(format!("{}.b", n.id), Tensor::f32(vec![cout], bf));
+        } else {
+            out.insert(format!("{}.w", n.id), w.clone());
+            let bias = params
+                .get(&format!("{}.b", n.id))
+                .cloned()
+                .unwrap_or_else(|| Tensor::zeros_f32(vec![cout]));
+            out.insert(format!("{}.b", n.id), bias);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GraphDef;
+
+    fn tiny_graph() -> GraphDef {
+        GraphDef::from_json(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[4,4,1]},
+             {"id":"c","op":"conv","inputs":["input"],"k":1,"stride":1,"cin":1,"cout":2},
+             {"id":"c_bn","op":"bn","inputs":["c"],"ch":2},
+             {"id":"r","op":"relu","inputs":["c_bn"]},
+             {"id":"g","op":"gap","inputs":["r"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":2,"cout":2}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fold_formula() {
+        let g = tiny_graph();
+        let mut p = BTreeMap::new();
+        p.insert(
+            "c.w".into(),
+            Tensor::f32(vec![1, 1, 1, 2], vec![1.0, 2.0]),
+        );
+        p.insert("c_bn.gamma".into(), Tensor::f32(vec![2], vec![2.0, 0.5]));
+        p.insert("c_bn.beta".into(), Tensor::f32(vec![2], vec![0.1, -0.1]));
+        p.insert("c_bn.mean".into(), Tensor::f32(vec![2], vec![1.0, -1.0]));
+        p.insert("c_bn.var".into(), Tensor::f32(vec![2], vec![4.0, 1.0]));
+        p.insert("d.w".into(), Tensor::f32(vec![2, 2], vec![1.0; 4]));
+        let f = fold_bn(&g, &p).unwrap();
+        let w = f["c.w"].as_f32().unwrap();
+        let s0 = 2.0 / (4.0f32 + EPS).sqrt();
+        let s1 = 0.5 / (1.0f32 + EPS).sqrt();
+        assert!((w[0] - 1.0 * s0).abs() < 1e-6);
+        assert!((w[1] - 2.0 * s1).abs() < 1e-6);
+        let b = f["c.b"].as_f32().unwrap();
+        assert!((b[0] - (0.1 - 2.0 * 1.0 / (4.0f32 + EPS).sqrt())).abs() < 1e-6);
+        assert!((b[1] - (-0.1 - 0.5 * -1.0 / (1.0f32 + EPS).sqrt())).abs() < 1e-6);
+        // dense without bn gets a zero bias
+        assert_eq!(f["d.b"].as_f32().unwrap(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn fold_covers_all_conv_like() {
+        let g = tiny_graph();
+        let mut p = BTreeMap::new();
+        p.insert("c.w".into(), Tensor::f32(vec![1, 1, 1, 2], vec![1.0, 2.0]));
+        p.insert("c_bn.gamma".into(), Tensor::ones_f32(vec![2]));
+        p.insert("c_bn.beta".into(), Tensor::zeros_f32(vec![2]));
+        p.insert("c_bn.mean".into(), Tensor::zeros_f32(vec![2]));
+        p.insert("c_bn.var".into(), Tensor::ones_f32(vec![2]));
+        p.insert("d.w".into(), Tensor::f32(vec![2, 2], vec![1.0; 4]));
+        let f = fold_bn(&g, &p).unwrap();
+        for key in ["c.w", "c.b", "d.w", "d.b"] {
+            assert!(f.contains_key(key), "{key}");
+        }
+    }
+}

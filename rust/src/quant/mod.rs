@@ -1,0 +1,20 @@
+//! Quantization substrate: the paper's math on the Rust side.
+//!
+//! * [`scale`] — eq. 1-9 scale/zero-point math, eq. 20 bias quantization,
+//!   gemmlowp-style fixed-point requantization multipliers.
+//! * [`fold`] — BN folding (eq. 10-11), mirror of the Python fold.
+//! * [`thresholds`] — threshold adjustment (eq. 12-13, 21-23).
+//! * [`calibrate`] — calibration aggregation + baseline calibrators
+//!   (max / percentile / KL) for the A1 ablation.
+//! * [`dws`] — §3.3 DWS→Conv weight rescaling.
+//! * [`export`] — quantized-model builder for the int8 engine.
+
+pub mod calibrate;
+pub mod dws;
+pub mod export;
+pub mod fold;
+pub mod scale;
+pub mod thresholds;
+
+pub use export::{QuantMode, Rounding};
+pub use scale::QParams;

@@ -1,0 +1,192 @@
+//! Scale / zero-point math (paper §2 eq. 1-9, eq. 20) and fixed-point
+//! requantization multipliers (gemmlowp style, as in Jacob et al.).
+
+/// Quantization parameters of one tensor: `real = scale * (q - zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+    pub qmin: i32,
+    pub qmax: i32,
+}
+
+impl QParams {
+    /// Symmetric signed int8 (paper eq. 1-4): q in [-127, 127], zp = 0.
+    pub fn symmetric_signed(t: f32) -> Self {
+        let t = t.max(1e-12);
+        QParams { scale: t / 127.0, zero_point: 0, qmin: -127, qmax: 127 }
+    }
+
+    /// Symmetric unsigned (eq. 9): q in [0, 255], zp = 0 (for x >= 0).
+    pub fn symmetric_unsigned(t: f32) -> Self {
+        let t = t.max(1e-12);
+        QParams { scale: t / 255.0, zero_point: 0, qmin: 0, qmax: 255 }
+    }
+
+    /// Affine over [left, left+width] mapped to [0, 255], zero-point
+    /// nudged to an exact integer (Jacob et al. §3).
+    pub fn asymmetric(left: f32, width: f32) -> Self {
+        let width = width.max(1e-12);
+        let scale = width / 255.0;
+        let zp = (-left / scale).round_ties_even();
+        let zero_point = zp.clamp(0.0, 255.0) as i32;
+        QParams { scale, zero_point, qmin: 0, qmax: 255 }
+    }
+
+    /// Quantize one value (round to nearest even, clip — eq. 3-4).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round_ties_even() as i32 + self.zero_point;
+        q.clamp(self.qmin, self.qmax)
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        self.scale * (q - self.zero_point) as f32
+    }
+
+    /// Fake-quantize (quantize → dequantize), the reference the Pallas
+    /// kernels implement.
+    #[inline]
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// The real-value range representable under these parameters.
+    pub fn range(&self) -> (f32, f32) {
+        (self.dequantize(self.qmin), self.dequantize(self.qmax))
+    }
+}
+
+/// Bias quantization (paper eq. 20): int32 at scale `s_in * s_w`,
+/// clipped to ±(2^31 - 1).
+pub fn quantize_bias(b: f32, s_in: f32, s_w: f32) -> i32 {
+    let q = (b as f64 / (s_in as f64 * s_w as f64)).round_ties_even();
+    q.clamp(-(i32::MAX as f64), i32::MAX as f64) as i32
+}
+
+/// Decompose a positive real multiplier into (mantissa m0 in Q31, right
+/// shift) such that `m ≈ m0 * 2^-31 * 2^-shift` (gemmlowp convention).
+pub fn quantize_multiplier(m: f64) -> (i32, i32) {
+    assert!(m > 0.0, "multiplier must be positive, got {m}");
+    let mut shift = 0i32;
+    let mut q = m;
+    while q < 0.5 {
+        q *= 2.0;
+        shift += 1;
+    }
+    while q >= 1.0 {
+        q /= 2.0;
+        shift -= 1;
+    }
+    let mut m0 = (q * (1i64 << 31) as f64).round() as i64;
+    if m0 == (1i64 << 31) {
+        m0 /= 2;
+        shift -= 1;
+    }
+    (m0 as i32, shift)
+}
+
+/// Saturating rounding doubling high multiply (gemmlowp
+/// `SaturatingRoundingDoublingHighMul`).
+#[inline]
+pub fn sat_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = a as i64 * b as i64;
+    let nudge = if ab >= 0 { 1i64 << 30 } else { 1 - (1i64 << 30) };
+    ((ab + nudge) >> 31) as i32
+}
+
+/// Rounding arithmetic right shift (round half away from zero).
+#[inline]
+pub fn rounding_rshift(x: i32, shift: i32) -> i32 {
+    if shift <= 0 {
+        return x << (-shift);
+    }
+    let mask = (1i64 << shift) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + if x < 0 { 1 } else { 0 };
+    let mut r = x >> shift;
+    if remainder > threshold {
+        r += 1;
+    }
+    r
+}
+
+/// Apply a fixed-point multiplier: `x * m0 * 2^-31 * 2^-shift`.
+#[inline]
+pub fn apply_multiplier(x: i32, m0: i32, shift: i32) -> i32 {
+    rounding_rshift(sat_rounding_doubling_high_mul(x, m0), shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_signed_roundtrip() {
+        let q = QParams::symmetric_signed(2.0);
+        assert_eq!(q.zero_point, 0);
+        assert_eq!(q.quantize(2.0), 127);
+        assert_eq!(q.quantize(-5.0), -127);
+        assert!((q.fake_quant(1.0) - 1.0).abs() <= q.scale / 2.0);
+    }
+
+    #[test]
+    fn asymmetric_zero_point_exact() {
+        let q = QParams::asymmetric(-1.0, 4.0);
+        // zero must be exactly representable after nudging
+        let z = q.quantize(0.0);
+        assert_eq!(q.dequantize(z), 0.0);
+        assert_eq!(z, q.zero_point);
+    }
+
+    #[test]
+    fn asymmetric_covers_range() {
+        let q = QParams::asymmetric(-0.5, 2.0);
+        let (lo, hi) = q.range();
+        assert!(lo <= -0.45 && hi >= 1.45, "({lo},{hi})");
+    }
+
+    #[test]
+    fn bias_eq20() {
+        let b = quantize_bias(0.05, 0.01, 0.002);
+        assert_eq!(b, 2500);
+        assert_eq!(quantize_bias(-0.05, 0.01, 0.002), -2500);
+    }
+
+    #[test]
+    fn multiplier_decomposition_accuracy() {
+        for &m in &[0.7, 0.123, 0.00391, 0.9999, 1.7, 1e-6] {
+            let (m0, shift) = quantize_multiplier(m);
+            let recon = m0 as f64 / (1u64 << 31) as f64 / 2f64.powi(shift);
+            assert!(
+                (recon - m).abs() / m < 1e-6,
+                "m={m} recon={recon} m0={m0} shift={shift}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_point_matches_float_requant() {
+        // requantizing int32 accumulators by a real multiplier: fixed-point
+        // path must agree with float within 1 ulp of the int8 grid.
+        let m = 0.0007234;
+        let (m0, shift) = quantize_multiplier(m);
+        for acc in [-1_000_000, -12_345, -1, 0, 1, 9_999, 2_000_000] {
+            let fx = apply_multiplier(acc, m0, shift);
+            let fl = (acc as f64 * m).round() as i32;
+            assert!((fx - fl).abs() <= 1, "acc={acc} fx={fx} fl={fl}");
+        }
+    }
+
+    #[test]
+    fn rounding_rshift_halfway() {
+        assert_eq!(rounding_rshift(5, 1), 3); // 2.5 -> 3 (away from zero)
+        assert_eq!(rounding_rshift(-5, 1), -3); // -2.5 -> -3 (gemmlowp)
+        assert_eq!(rounding_rshift(4, 2), 1);
+        assert_eq!(rounding_rshift(8, 0), 8);
+    }
+}

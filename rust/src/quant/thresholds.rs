@@ -1,0 +1,93 @@
+//! Threshold adjustment (paper §3.1.3-3.1.4): the Rust mirror of
+//! `python/compile/quantize.py`'s `adjust_sym` / `adjust_asym`, used when
+//! exporting the fine-tuned thresholds into int8 engine parameters.
+
+/// Empiric clip ranges (paper).
+pub const ALPHA_MIN: f32 = 0.5;
+pub const ALPHA_MAX: f32 = 1.0;
+pub const AT_MIN_SIGNED: f32 = -0.2;
+pub const AT_MIN_UNSIGNED: f32 = 0.0;
+pub const AT_MAX: f32 = 0.4;
+pub const AR_MIN: f32 = 0.5;
+pub const AR_MAX: f32 = 1.0;
+
+/// Symmetric: `T_adj = clip(α, 0.5, 1.0) · T_cal` (eq. 12-13).
+#[inline]
+pub fn adjust_sym(alpha: f32, t_cal: f32) -> f32 {
+    alpha.clamp(ALPHA_MIN, ALPHA_MAX) * t_cal
+}
+
+/// Asymmetric (eq. 21-23): returns (left, width) of the adjusted range.
+#[inline]
+pub fn adjust_asym(
+    alpha_t: f32,
+    alpha_r: f32,
+    t_l: f32,
+    t_r: f32,
+    unsigned: bool,
+) -> (f32, f32) {
+    let at_min = if unsigned { AT_MIN_UNSIGNED } else { AT_MIN_SIGNED };
+    let r = t_r - t_l;
+    let left = t_l + alpha_t.clamp(at_min, AT_MAX) * r;
+    let width = alpha_r.clamp(AR_MIN, AR_MAX) * r;
+    (left, width.max(1e-8))
+}
+
+/// Symmetric calibration threshold from a (min, max) pair.
+#[inline]
+pub fn sym_t_from_minmax(t_l: f32, t_r: f32) -> f32 {
+    t_l.abs().max(t_r.abs()).max(1e-8)
+}
+
+/// Per-filter weight thresholds (max |w| over all but the last axis).
+pub fn per_channel_w_thresholds(w: &[f32], cout: usize) -> Vec<f32> {
+    let mut t = vec![0f32; cout];
+    for (i, &v) in w.iter().enumerate() {
+        let c = i % cout;
+        t[c] = t[c].max(v.abs());
+    }
+    for v in &mut t {
+        *v = v.max(1e-8);
+    }
+    t
+}
+
+/// Per-tensor weight threshold (eq. 2).
+pub fn per_tensor_w_threshold(w: &[f32]) -> f32 {
+    w.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sym_clip() {
+        assert_eq!(adjust_sym(0.2, 10.0), 5.0);
+        assert_eq!(adjust_sym(2.0, 10.0), 10.0);
+        assert!((adjust_sym(0.75, 10.0) - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn asym_empirics() {
+        let (l, w) = adjust_asym(-1.0, 1.0, -2.0, 6.0, false);
+        assert!((l - (-2.0 + (-0.2) * 8.0)).abs() < 1e-5);
+        assert_eq!(w, 8.0);
+        let (l, w) = adjust_asym(-1.0, 0.1, -2.0, 6.0, true);
+        assert_eq!(l, -2.0);
+        assert_eq!(w, 4.0);
+    }
+
+    #[test]
+    fn weight_thresholds() {
+        let w = vec![0.5, -2.0, 1.0, 0.25]; // 2 channels interleaved
+        assert_eq!(per_tensor_w_threshold(&w), 2.0);
+        assert_eq!(per_channel_w_thresholds(&w, 2), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn sym_from_minmax() {
+        assert_eq!(sym_t_from_minmax(-3.0, 1.0), 3.0);
+        assert_eq!(sym_t_from_minmax(0.0, 2.5), 2.5);
+    }
+}

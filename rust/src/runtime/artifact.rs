@@ -1,0 +1,163 @@
+//! One compiled AOT artifact: HLO text + manifest + PJRT executable.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::{ArtifactManifest, IoSpec};
+use crate::tensor::{Data, DType, Tensor};
+
+use super::client::Runtime;
+
+/// A compiled executable with its marshalling manifest.
+pub struct Artifact {
+    pub manifest: ArtifactManifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load `<prefix>.hlo.txt` + `<prefix>.manifest.json` and compile.
+    pub fn load<P: AsRef<Path>>(rt: &Runtime, prefix: P) -> Result<Self> {
+        let prefix = prefix.as_ref();
+        let hlo = prefix.with_extension("hlo.txt");
+        let man = prefix.with_extension("manifest.json");
+        let manifest = ArtifactManifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .map_err(|e| anyhow::anyhow!("parsing {hlo:?}: {e}"))
+            .context("HLO text load")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {hlo:?}: {e}"))?;
+        Ok(Artifact { manifest, exe })
+    }
+
+    /// Upload a host tensor as a device buffer (for arguments reused
+    /// across many calls, e.g. the frozen weights).
+    pub fn upload(&self, rt: &Runtime, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let ty = to_elem_ty(t.dtype());
+        rt.client
+            .buffer_from_host_raw_bytes(ty, t.raw_bytes(), &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e}"))
+    }
+
+    /// Validate + upload all inputs in manifest order.
+    pub fn upload_inputs(
+        &self,
+        rt: &Runtime,
+        inputs: &[Tensor],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.check_inputs(inputs)?;
+        inputs.iter().map(|t| self.upload(rt, t)).collect()
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.manifest.name,
+            self.manifest.inputs.len(),
+            inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            anyhow::ensure!(
+                t.shape == spec.shape && t.dtype() == spec.dtype()?,
+                "{}: input {} expects {:?}/{}, got {:?}/{:?}",
+                self.manifest.name,
+                spec.name,
+                spec.shape,
+                spec.dtype,
+                t.shape,
+                t.dtype()
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors (uploads everything each call).
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let ty = to_elem_ty(t.dtype());
+                xla::Literal::create_from_shape_and_untyped_data(
+                    ty,
+                    &t.shape,
+                    t.raw_bytes(),
+                )
+                .map_err(|e| anyhow::anyhow!("literal: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.manifest.name))?;
+        self.unpack(&out[0][0])
+    }
+
+    /// Execute with pre-uploaded device buffers (hot path).
+    pub fn execute_buffers(
+        &self,
+        bufs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let out = self
+            .exe
+            .execute_b(bufs)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e}", self.manifest.name))?;
+        self.unpack(&out[0][0])
+    }
+
+    fn unpack(&self, buf: &xla::PjRtBuffer) -> Result<Vec<Tensor>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        // artifacts are lowered with return_tuple=True
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == self.manifest.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.manifest.name,
+            self.manifest.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.manifest.outputs)
+            .map(|(l, spec)| literal_to_tensor(&l, spec))
+            .collect()
+    }
+}
+
+fn to_elem_ty(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::I8 => xla::ElementType::S8,
+        DType::I32 => xla::ElementType::S32,
+        DType::U8 => xla::ElementType::U8,
+    }
+}
+
+
+fn literal_to_tensor(l: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+    let data = match spec.dtype()? {
+        DType::F32 => Data::F32(
+            l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?,
+        ),
+        DType::I32 => Data::I32(
+            l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?,
+        ),
+        DType::U8 => Data::U8(
+            l.to_vec::<u8>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?,
+        ),
+        DType::I8 => {
+            let v =
+                l.to_vec::<u8>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+            Data::I8(v.into_iter().map(|b| b as i8).collect())
+        }
+    };
+    Ok(Tensor { shape: spec.shape.clone(), data })
+}

@@ -1,0 +1,25 @@
+//! PJRT client wrapper.
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client. Cheap to clone (the underlying client is
+/// reference-counted by the xla crate).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}

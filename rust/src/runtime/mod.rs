@@ -1,0 +1,13 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them on the CPU
+//! PJRT client, and marshals host tensors in manifest order.
+//!
+//! Python is never involved: the HLO text in `artifacts/` is the entire
+//! interchange (see /opt/xla-example/README.md for why text, not proto).
+
+pub mod artifact;
+pub mod client;
+pub mod registry;
+
+pub use artifact::Artifact;
+pub use client::Runtime;
+pub use registry::Registry;

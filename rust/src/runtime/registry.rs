@@ -1,0 +1,49 @@
+//! Lazily-compiled artifact cache: each HLO module is compiled at most
+//! once per process, keyed by path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::{Artifact, Runtime};
+
+/// Thread-safe artifact registry.
+pub struct Registry {
+    rt: Arc<Runtime>,
+    cache: Mutex<HashMap<PathBuf, Arc<Artifact>>>,
+}
+
+impl Registry {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        Registry { rt, cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Get (compiling on first use) the artifact at `prefix`.
+    pub fn get<P: AsRef<Path>>(&self, prefix: P) -> Result<Arc<Artifact>> {
+        let key = prefix.as_ref().to_path_buf();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(a) = cache.get(&key) {
+                return Ok(a.clone());
+            }
+        }
+        // compile outside the lock (can take seconds)
+        let art = Arc::new(Artifact::load(&self.rt, &key)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| art.clone());
+        Ok(art)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal dense host tensor shared by the runtime, quant and int8 layers.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+/// A host tensor: shape + typed row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I8(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::U8(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn ones_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![1.0; n])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I8(_) => DType::I8,
+            Data::I32(_) => DType::I32,
+            Data::U8(_) => DType::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Data::I8(v) => Ok(v),
+            _ => bail!("tensor is not i8"),
+        }
+    }
+
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            Data::F32(v) => bytemuck_cast(v),
+            Data::I32(v) => bytemuck_cast(v),
+            Data::I8(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+            },
+            Data::U8(v) => v,
+        }
+    }
+
+    /// Flat index helper for NHWC tensors.
+    pub fn idx4(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        let s = &self.shape;
+        ((n * s[1] + h) * s[2] + w) * s[3] + c
+    }
+}
+
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn raw_bytes_roundtrip() {
+        let t = Tensor::i32(vec![2], vec![1, -1]);
+        assert_eq!(t.raw_bytes().len(), 8);
+        assert_eq!(&t.raw_bytes()[0..4], &1i32.to_le_bytes());
+    }
+
+    #[test]
+    fn idx4_nhwc() {
+        let t = Tensor::zeros_f32(vec![2, 4, 4, 3]);
+        assert_eq!(t.idx4(0, 0, 0, 0), 0);
+        assert_eq!(t.idx4(0, 0, 0, 2), 2);
+        assert_eq!(t.idx4(0, 0, 1, 0), 3);
+        assert_eq!(t.idx4(1, 0, 0, 0), 48);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::from_str("f32").unwrap(), DType::F32);
+        assert!(DType::from_str("f64").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Cargo benches with `harness = false` are plain binaries; this module
+//! gives them warmup + repeated timing + simple statistics, printed in a
+//! stable, grep-friendly format:
+//!
+//! `BENCH <name> mean_ms=<..> min_ms=<..> p50_ms=<..> iters=<..>`
+
+use std::time::Instant;
+
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub iters: usize,
+    /// stop early once this much wall time was spent (seconds)
+    pub max_secs: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 1, iters: 10, max_secs: 30.0 }
+    }
+}
+
+/// Time `f` and print a stable summary line. Returns mean seconds.
+pub fn bench(name: &str, opts: &BenchOpts, mut f: impl FnMut()) -> f64 {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = vec![];
+    let start = Instant::now();
+    for _ in 0..opts.iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > opts.max_secs {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    println!(
+        "BENCH {name} mean_ms={:.3} min_ms={:.3} p50_ms={:.3} iters={}",
+        mean * 1e3,
+        min * 1e3,
+        p50 * 1e3,
+        samples.len()
+    );
+    mean
+}
+
+/// Throughput variant: prints items/sec too.
+pub fn bench_throughput(
+    name: &str,
+    opts: &BenchOpts,
+    items: usize,
+    mut f: impl FnMut(),
+) -> f64 {
+    let mean = bench(name, opts, &mut f);
+    println!(
+        "BENCH {name} items_per_sec={:.1}",
+        items as f64 / mean.max(1e-12)
+    );
+    mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_returns_mean() {
+        let m = bench(
+            "noop",
+            &BenchOpts { warmup: 0, iters: 3, max_secs: 5.0 },
+            || {
+                std::hint::black_box(1 + 1);
+            },
+        );
+        assert!(m >= 0.0);
+    }
+}

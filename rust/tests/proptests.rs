@@ -1,0 +1,213 @@
+//! Seeded property tests over the pure substrates (in-tree `util::prop`
+//! replaces proptest on this offline box). Each case is deterministic and
+//! reproducible from its printed index.
+
+use fat::int8::qtensor::{to_i8_domain, QTensor};
+use fat::int8::{gemm, im2col};
+use fat::quant::scale::{
+    apply_multiplier, quantize_multiplier, QParams,
+};
+use fat::quant::thresholds as th;
+use fat::util::prop;
+
+#[test]
+fn prop_fake_quant_error_bounded() {
+    // |x - fq(x)| <= step/2 inside the representable range, for any T.
+    prop::for_cases(11, 200, |case| {
+        let t = 0.05 + prop::f32s(case, 1, 0.0, 8.0)[0];
+        let qp = QParams::symmetric_signed(t);
+        for &x in &prop::f32s(case + 1000, 64, -t, t) {
+            let err = (x - qp.fake_quant(x)).abs();
+            assert!(
+                err <= qp.scale / 2.0 + 1e-6,
+                "case {case}: x={x} t={t} err={err}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fake_quant_idempotent_and_monotone() {
+    prop::for_cases(13, 100, |case| {
+        let t = 0.1 + prop::f32s(case, 1, 0.0, 4.0)[0];
+        let qp = QParams::symmetric_signed(t);
+        let mut xs = prop::f32s(case + 500, 32, -2.0 * t, 2.0 * t);
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let mut prev = f32::NEG_INFINITY;
+        for &x in &xs {
+            let y = qp.fake_quant(x);
+            assert!((qp.fake_quant(y) - y).abs() <= 1e-6, "idempotent");
+            assert!(y >= prev - 1e-6, "monotone: {y} < {prev}");
+            prev = y;
+        }
+    });
+}
+
+#[test]
+fn prop_asym_zero_exactly_representable() {
+    // After zero-point nudging, real 0.0 must round-trip exactly
+    // whenever 0 lies within the range (Jacob et al. requirement).
+    prop::for_cases(17, 200, |case| {
+        let left = prop::f32s(case, 1, -4.0, -0.01)[0];
+        let width = 0.1 + prop::f32s(case + 1, 1, 0.0, 8.0)[0];
+        let qp = QParams::asymmetric(left, width);
+        if left <= 0.0 && left + width >= 0.0 {
+            assert_eq!(
+                qp.fake_quant(0.0),
+                0.0,
+                "case {case}: left={left} width={width} zp={}",
+                qp.zero_point
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_multiplier_roundtrip_accuracy() {
+    prop::for_cases(19, 300, |case| {
+        let m = (prop::f32s(case, 1, -14.0, 1.5)[0] as f64).exp2();
+        let (m0, shift) = quantize_multiplier(m);
+        let recon = m0 as f64 / (1u64 << 31) as f64 / 2f64.powi(shift);
+        assert!(
+            ((recon - m) / m).abs() < 1e-6,
+            "case {case}: m={m} recon={recon}"
+        );
+    });
+}
+
+#[test]
+fn prop_fixed_point_requant_close_to_float() {
+    prop::for_cases(23, 100, |case| {
+        let m = (prop::f32s(case, 1, -12.0, -2.0)[0] as f64).exp2();
+        let (m0, shift) = quantize_multiplier(m);
+        for i in 0..50 {
+            let acc = (prop::usize_in(case, i, 0, 4_000_000) as i64
+                - 2_000_000) as i32;
+            let fx = apply_multiplier(acc, m0, shift);
+            let fl = (acc as f64 * m).round() as i32;
+            assert!(
+                (fx - fl).abs() <= 1,
+                "case {case}: acc={acc} m={m} fx={fx} fl={fl}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gemm_matches_reference() {
+    prop::for_cases(29, 40, |case| {
+        let m = prop::usize_in(case, 0, 1, 17);
+        let k = prop::usize_in(case, 1, 1, 40);
+        let n = prop::usize_in(case, 2, 1, 23);
+        let zp = prop::usize_in(case, 3, 0, 33) as i32 - 16;
+        let a = prop::i8s(case + 100, m * k);
+        let b = prop::i8s(case + 200, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let mut out = vec![0i32; m * n];
+        gemm::gemm_i8(&a, zp, &b, &sums, m, k, n, &mut out);
+        assert_eq!(
+            out,
+            gemm::gemm_ref(&a, zp, &b, m, k, n),
+            "case {case}: ({m},{k},{n}) zp={zp}"
+        );
+    });
+}
+
+#[test]
+fn prop_im2col_patches_contain_input_values_or_zp() {
+    prop::for_cases(31, 30, |case| {
+        let h = prop::usize_in(case, 0, 3, 12);
+        let w = prop::usize_in(case, 1, 3, 12);
+        let c = prop::usize_in(case, 2, 1, 5);
+        let k = [1usize, 3, 5][prop::usize_in(case, 3, 0, 3)];
+        let stride = 1 + prop::usize_in(case, 4, 0, 2);
+        let zp = -7i8;
+        let x = prop::i8s(case + 50, h * w * c);
+        let (p, oh, ow) = im2col::im2col_i8(&x, 1, h, w, c, k, stride, zp);
+        assert_eq!(p.len(), oh * ow * k * k * c);
+        assert_eq!(oh, h.div_ceil(stride));
+        use std::collections::HashSet;
+        let valid: HashSet<i8> = x.iter().copied().chain([zp]).collect();
+        assert!(p.iter().all(|v| valid.contains(v)), "case {case}");
+    });
+}
+
+#[test]
+fn prop_quantize_dequantize_within_one_step_under_i8_domain() {
+    prop::for_cases(37, 100, |case| {
+        let t = 0.2 + prop::f32s(case, 1, 0.0, 5.0)[0];
+        let qp = to_i8_domain(QParams::symmetric_unsigned(t));
+        let xs = prop::f32s(case + 10, 64, 0.0, t);
+        let q = QTensor::quantize(vec![64], &xs, qp);
+        for (a, b) in xs.iter().zip(q.dequantize()) {
+            assert!((a - b).abs() <= qp.scale, "case {case}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_per_channel_thresholds_dominate_values() {
+    prop::for_cases(41, 60, |case| {
+        let c = prop::usize_in(case, 0, 1, 9);
+        let rows = prop::usize_in(case, 1, 1, 30);
+        let w = prop::f32s(case + 5, rows * c, -3.0, 3.0);
+        let t = th::per_channel_w_thresholds(&w, c);
+        for (i, &v) in w.iter().enumerate() {
+            assert!(v.abs() <= t[i % c] + 1e-6);
+        }
+        let tt = th::per_tensor_w_threshold(&w);
+        assert!(t.iter().all(|&x| x <= tt + 1e-6));
+    });
+}
+
+#[test]
+fn prop_cosine_schedule_bounded_and_periodic() {
+    use fat::coordinator::schedule::CosineRestarts;
+    prop::for_cases(43, 50, |case| {
+        let cycle = prop::usize_in(case, 0, 1, 50);
+        let s = CosineRestarts::new(0.1, cycle);
+        for t in 0..200 {
+            let (lr, restart) = s.at(t);
+            assert!(lr >= s.lr_min - 1e-9 && lr <= s.lr_max + 1e-9);
+            assert_eq!(restart, t % cycle.max(1) == 0);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_strings() {
+    use fat::util::Json;
+    prop::for_cases(47, 80, |case| {
+        let v = prop::f32s(case, 1, -1e6, 1e6)[0] as f64;
+        let j = Json::parse(&format!("{v}")).unwrap();
+        assert!((j.as_f64().unwrap() - v).abs() <= v.abs() * 1e-12);
+        let s = format!("k{}", prop::usize_in(case, 1, 0, 1000));
+        let j = Json::parse(&format!("{{\"a\": \"{s}\"}}")).unwrap();
+        assert_eq!(j.get("a").unwrap().as_str().unwrap(), s);
+    });
+}
+
+#[test]
+fn prop_dws_pattern_scales_respect_relu6_cap() {
+    prop::for_cases(53, 60, |case| {
+        let c = prop::usize_in(case, 0, 2, 12);
+        let w = prop::f32s(case + 3, 9 * c, -2.0, 2.0);
+        let ch_max: Vec<f32> = prop::f32s(case + 7, c, 0.1, 7.0);
+        let (s, locked) =
+            fat::quant::dws::pattern_scales(&w, &ch_max, c, true);
+        for k in 0..c {
+            if locked[k] {
+                assert_eq!(s[k], 1.0);
+                assert!(ch_max[k] >= fat::quant::dws::LOCK_LIMIT);
+            } else {
+                assert!(
+                    ch_max[k] * s[k] <= fat::quant::dws::RELU6_CAP + 1e-3
+                        || s[k] == fat::quant::dws::SCALE_MIN,
+                    "case {case}: ch_max={} s={}",
+                    ch_max[k],
+                    s[k]
+                );
+            }
+        }
+    });
+}
