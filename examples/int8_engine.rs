@@ -13,6 +13,7 @@ use fat::data::{Batcher, Split};
 use fat::quant::export::QuantMode;
 use fat::runtime::{Registry, Runtime};
 use fat::util::cli::Args;
+use fat::util::threads::fat_threads;
 
 fn main() -> Result<()> {
     let args = Args::parse(&[]);
@@ -52,15 +53,27 @@ fn main() -> Result<()> {
         engine * 100.0
     );
 
-    // throughput: integer engine vs PJRT f32 forward
+    // throughput: integer engine (thread sweep) vs PJRT f32 forward
     let batcher = Batcher::new(Split::Val, (0..200u64).collect(), 50);
     let batches: Vec<_> = batcher.epoch(0);
 
-    let t = Instant::now();
-    for (x, _) in &batches {
-        let _ = qm.run_batch(x)?;
+    println!("FAT_THREADS = {} (set FAT_THREADS=<n> to override)", fat_threads());
+    let mut int8_ips = 0.0;
+    let mut sweep = vec![1usize, 2, 4];
+    if !sweep.contains(&fat_threads()) {
+        sweep.push(fat_threads());
     }
-    let int8_ips = 200.0 / t.elapsed().as_secs_f64();
+    for &workers in &sweep {
+        let t = Instant::now();
+        for (x, _) in &batches {
+            let _ = qm.run_batch_with(x, workers)?;
+        }
+        let ips = 200.0 / t.elapsed().as_secs_f64();
+        println!("  int8 engine @ {workers} worker(s): {ips:.1} img/s");
+        if workers == fat_threads() {
+            int8_ips = ips; // the summary reports the configured count
+        }
+    }
 
     let art = p.artifact("fp_forward")?;
     // fp_forward expects batch 100; re-batch accordingly

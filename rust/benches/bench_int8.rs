@@ -1,58 +1,98 @@
-//! int8 engine benchmarks (deployment simulator hot path): GEMM, im2col,
-//! per-op kernels and whole-model throughput. The §Perf optimization log
-//! in EXPERIMENTS.md tracks these numbers.
+//! int8 engine benchmarks (deployment simulator hot path): reference vs
+//! cache-blocked GEMM, thread-scaling at FAT_THREADS ∈ {1,2,4,8}, im2col,
+//! depthwise conv, and whole-model batch throughput. The §Perf
+//! optimization log in EXPERIMENTS.md tracks these numbers; raise
+//! FAT_BENCH_ITERS for tighter timings.
 
 use std::sync::Arc;
 
-use fat::int8::{gemm, im2col, qtensor::QTensor};
+use fat::int8::engine::QLayer;
+use fat::int8::{gemm, im2col, ops, qtensor::QTensor};
 use fat::quant::export::QuantMode;
 use fat::quant::scale::QParams;
-use fat::util::bench::{bench, bench_throughput, BenchOpts};
+use fat::util::bench::{bench, bench_throughput, report_speedup, BenchOpts};
 use fat::util::prop;
+use fat::util::threads::fat_threads;
 
 fn main() {
-    let opts = BenchOpts { warmup: 1, iters: 10, max_secs: 30.0 };
+    let opts = BenchOpts::from_env();
+    println!("FAT_THREADS default = {}", fat_threads());
 
-    // raw GEMM: (1024, 144) x (144, 64) — a typical conv layer shape
-    let (m, k, n) = (1024, 144, 64);
-    let a = prop::i8s(1, m * k);
-    let b = prop::i8s(2, k * n);
-    let sums = gemm::col_sums(&b, k, n);
-    let mut out = vec![0i32; m * n];
-    let macs = m * k * n;
-    bench_throughput("gemm_i8_1024x144x64_macs", &opts, macs, || {
-        gemm::gemm_i8(&a, -3, &b, &sums, m, k, n, &mut out);
-        std::hint::black_box(out[0]);
-    });
+    // raw GEMM: a typical early-conv shape and a late, deeper one
+    for &(m, k, n) in &[(1024usize, 144usize, 64usize), (512, 1152, 128)] {
+        let a = prop::i8s(1, m * k);
+        let b = prop::i8s(2, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let mut out = vec![0i32; m * n];
+        let macs = m * k * n;
+        let name = format!("gemm_i8_{m}x{k}x{n}");
+        bench_throughput(&format!("{name}_ref_macs"), &opts, macs, || {
+            std::hint::black_box(gemm::gemm_ref(&a, -3, &b, m, k, n).len());
+        });
+        let base =
+            bench_throughput(&format!("{name}_t1_macs"), &opts, macs, || {
+                gemm::gemm_i8(&a, -3, &b, &sums, m, k, n, &mut out);
+                std::hint::black_box(out[0]);
+            });
+        for t in [2usize, 4, 8] {
+            let mean = bench_throughput(
+                &format!("{name}_t{t}_macs"),
+                &opts,
+                macs,
+                || {
+                    gemm::gemm_i8_parallel(
+                        &a, -3, &b, &sums, m, k, n, &mut out, t,
+                    );
+                    std::hint::black_box(out[0]);
+                },
+            );
+            report_speedup(&format!("{name}_t{t}_vs_t1"), base, mean);
+        }
+    }
 
-    // im2col for a 32x32x16 image, 3x3
+    // im2col for a 32x32x16 image, 3x3 (with scratch reuse)
     let x = prop::i8s(3, 32 * 32 * 16);
+    let mut patches = Vec::new();
     bench("im2col_32x32x16_k3", &opts, || {
-        let (p, _, _) = im2col::im2col_i8(&x, 1, 32, 32, 16, 3, 1, 0);
-        std::hint::black_box(p.len());
+        let (oh, _) =
+            im2col::im2col_into(&x, 1, 32, 32, 16, 3, 1, 0, &mut patches);
+        std::hint::black_box(oh);
     });
 
-    // dwconv 3x3 over 32x32x64
+    // dwconv 3x3 over 32x32x64, serial vs row-sharded
     let qp = QParams::symmetric_signed(1.0);
     let xq = QTensor {
         shape: vec![1, 32, 32, 64],
         data: prop::i8s(4, 32 * 32 * 64),
         qp,
     };
-    let wq = prop::i8s(5, 9 * 64);
-    let bias = vec![0i32; 64];
-    let req = vec![fat::quant::scale::quantize_multiplier(0.001); 64];
-    bench("dwconv_32x32x64_k3", &opts, || {
-        let y = fat::int8::ops::dwconv2d(
-            &xq, &wq, &bias, &req, qp, (-127, 127), 3, 1,
-        );
-        std::hint::black_box(y.data[0]);
-    });
+    let l = QLayer {
+        w_q: prop::i8s(5, 9 * 64),
+        w_sums: vec![],
+        bias_q: vec![0i32; 64],
+        requant: vec![fat::quant::scale::quantize_multiplier(0.001); 64],
+        out_qp: qp,
+        clamp: (-127, 127),
+        w_scales: vec![1.0],
+    };
+    for t in [1usize, 4] {
+        let mut ctx = ops::OpCtx::with_threads(t);
+        bench(&format!("dwconv_32x32x64_k3_t{t}"), &opts, || {
+            let y = ops::dwconv2d(&xq, &l, 3, 1, &mut ctx, Vec::new());
+            std::hint::black_box(y.data[0]);
+        });
+    }
 
-    // whole-model throughput (needs artifacts)
+    // whole-model throughput (needs artifacts + the pjrt feature)
     let artifacts = fat::artifacts_dir();
     if artifacts.join("models/mobilenet_v2_mini").exists() {
-        let rt = fat::runtime::Runtime::cpu().unwrap();
+        let rt = match fat::runtime::Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                println!("SKIP int8 whole-model bench ({e})");
+                return;
+            }
+        };
         let reg = Arc::new(fat::runtime::Registry::new(Arc::new(rt)));
         let p = fat::coordinator::Pipeline::new(
             reg,
@@ -69,9 +109,28 @@ fn main() {
             fat::data::Split::Val,
             &(0..50).collect::<Vec<_>>(),
         );
-        bench_throughput("int8_mobilenet_batch50", &opts, 50, || {
-            std::hint::black_box(qm.run_batch(&x).unwrap().len());
-        });
+        let mut base = 0.0;
+        for t in [1usize, 2, 4] {
+            let mean = bench_throughput(
+                &format!("int8_mobilenet_batch50_t{t}"),
+                &opts,
+                50,
+                || {
+                    std::hint::black_box(
+                        qm.run_batch_with(&x, t).unwrap().len(),
+                    );
+                },
+            );
+            if t == 1 {
+                base = mean;
+            } else {
+                report_speedup(
+                    &format!("int8_mobilenet_batch50_t{t}_vs_t1"),
+                    base,
+                    mean,
+                );
+            }
+        }
     } else {
         println!("SKIP int8 whole-model bench (run `make artifacts`)");
     }

@@ -55,6 +55,33 @@ pub fn accuracy_with(
     Ok(correct as f64 / seen as f64)
 }
 
+/// Accuracy of the integer-only int8 engine over the val split
+/// (`val_images` of 0 = full split). The engine batch-shards each
+/// 50-image batch across `$FAT_THREADS` workers internally, so this is
+/// the canonical (and parallel) int8 evaluation used by the launcher,
+/// the experiment drivers and the benches.
+pub fn int8_accuracy(
+    qm: &crate::int8::QModel,
+    val_images: usize,
+) -> Result<f64> {
+    let total = if val_images == 0 {
+        crate::data::synth::VAL_SIZE
+    } else {
+        val_images.min(crate::data::synth::VAL_SIZE)
+    };
+    let batcher = Batcher::new(Split::Val, (0..total as u64).collect(), 50);
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    for (x, labels) in batcher.epoch_iter(0) {
+        let logits = qm.run_batch(&x)?;
+        let (c, b) = argmax_accuracy(&logits, &labels)?;
+        correct += c;
+        seen += b;
+    }
+    anyhow::ensure!(seen > 0, "no int8 evaluation batches (val {val_images})");
+    Ok(correct as f64 / seen as f64)
+}
+
 /// Batch size of an artifact's designated input-batch argument.
 pub fn batch_size_of(art: &Arc<Artifact>, arg_name: &str) -> Result<usize> {
     art.manifest

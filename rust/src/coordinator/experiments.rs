@@ -289,20 +289,11 @@ pub fn int8_agreement(
     Ok((fake, engine))
 }
 
-/// Accuracy of the integer engine over the val split.
+/// Accuracy of the integer engine over the val split (the canonical
+/// implementation lives in `evaluate`; re-exported here for the bins,
+/// benches and examples that import it from the experiments module).
 pub fn int8_accuracy(qm: &crate::int8::QModel, val: usize) -> Result<f64> {
-    use crate::data::{Batcher, Split};
-    let total = if val == 0 { crate::data::synth::VAL_SIZE } else { val };
-    let batcher = Batcher::new(Split::Val, (0..total as u64).collect(), 50);
-    let mut correct = 0usize;
-    let mut n = 0usize;
-    for (x, labels) in batcher.epoch_iter(0) {
-        let logits = qm.run_batch(&x)?;
-        let (c, b) = super::evaluate::argmax_accuracy(&logits, &labels)?;
-        correct += c;
-        n += b;
-    }
-    Ok(correct as f64 / n as f64)
+    super::evaluate::int8_accuracy(qm, val)
 }
 
 /// Map a trainable tensor-map to loss-free defaults if empty — utility

@@ -284,7 +284,11 @@ impl Pipeline {
         Ok(out)
     }
 
-    /// Build the integer-only deployment model.
+    /// Build the integer-only deployment model. This also compiles the
+    /// engine's execution plan once (topological schedule, dense param
+    /// indices, liveness-based buffer slots — `int8::plan`); the
+    /// returned [`QModel`] then serves any number of `run_batch` calls,
+    /// batch-sharded across `$FAT_THREADS` workers.
     pub fn export_int8(
         &self,
         mode: QuantMode,

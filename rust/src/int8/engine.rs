@@ -1,15 +1,23 @@
-//! Quantized-graph executor: walks the folded GraphDef with integer-only
-//! kernels. Built by `quant::export::build_qmodel`.
-
-use std::collections::BTreeMap;
+//! Quantized-model executor. `quant::export::build_qmodel` compiles the
+//! folded graph into an [`ExecPlan`] once (topological schedule, dense
+//! parameter table, liveness-based buffer slots — see `int8::plan`);
+//! this module executes that plan with integer-only kernels, an i8
+//! buffer arena and two axes of parallelism: independent images of a
+//! batch are sharded across workers in [`QModel::run_batch`], and
+//! single-image runs shard GEMM/depthwise rows inside the kernels. The
+//! worker count defaults to `$FAT_THREADS` (see `util::threads`); every
+//! thread count is bit-exact with the sequential reference interpreter
+//! [`QModel::run_quant_ref`].
 
 use anyhow::Result;
 
 use crate::model::{GraphDef, Op};
 use crate::quant::scale::QParams;
 use crate::tensor::Tensor;
+use crate::util::threads::fat_threads;
 
-use super::ops;
+use super::ops::{self, OpCtx};
+use super::plan::{Arena, ExecPlan};
 use super::qtensor::QTensor;
 
 /// Parameters of one conv-like quantized layer.
@@ -54,66 +62,205 @@ pub enum QNode {
 #[derive(Debug, Clone)]
 pub struct QModel {
     pub graph: GraphDef,
-    pub nodes: BTreeMap<String, QNode>,
+    /// Precompiled schedule + parameters (built once at export).
+    pub plan: ExecPlan,
     pub input_qp: QParams,
     /// total int8 parameter bytes (for the size report)
     pub param_bytes: usize,
 }
 
 impl QModel {
+    /// Quantized parameters of a compute node, if it has any.
+    pub fn node(&self, id: &str) -> Option<&QNode> {
+        self.plan.node(id)
+    }
+
     /// Run a float NHWC batch through the integer engine; returns f32
-    /// logits (dequantized from the final site).
+    /// logits (dequantized from the final site). Uses `$FAT_THREADS`
+    /// workers (batch-sharded across independent images).
     pub fn run_batch(&self, x: &Tensor) -> Result<Tensor> {
-        let q = QTensor::quantize(
-            x.shape.clone(),
-            x.as_f32()?,
-            self.input_qp,
-        );
-        let logits = self.run_quant(q)?;
+        self.run_batch_with(x, fat_threads())
+    }
+
+    /// [`QModel::run_batch`] with an explicit worker count.
+    pub fn run_batch_with(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
+        let q = QTensor::quantize(x.shape.clone(), x.as_f32()?, self.input_qp);
+        let batch = q.shape[0];
+        let per_img: usize = q.shape[1..].iter().product();
+        let shards = threads.max(1).min(batch.max(1));
+        let logits = if shards <= 1 || per_img == 0 {
+            self.run_quant_with(q, threads.max(1))?
+        } else {
+            // leftover capacity row-shards the kernels inside each worker
+            // (ceil keeps all requested workers busy when batch < threads,
+            // at the cost of mild oversubscription)
+            let kernel_threads = threads.max(1).div_ceil(shards);
+            self.run_sharded(q, shards, kernel_threads)?
+        };
         let n = logits.shape[0];
         let c = logits.shape[1];
         Ok(Tensor::f32(vec![n, c], logits.dequantize()))
     }
 
-    /// Integer-only path: quantized input to quantized logits.
+    /// Split the batch into `shards` contiguous image groups and run them
+    /// on scoped workers. Images are independent through every kernel, so
+    /// the concatenated logits are bit-exact with the unsharded run.
+    fn run_sharded(
+        &self,
+        q: QTensor,
+        shards: usize,
+        kernel_threads: usize,
+    ) -> Result<QTensor> {
+        let batch = q.shape[0];
+        let per_img: usize = q.shape[1..].iter().product();
+        let rows = batch.div_ceil(shards);
+        let mut parts: Vec<Result<QTensor>> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for chunk in q.data.chunks(rows * per_img) {
+                let mut shape = q.shape.clone();
+                shape[0] = chunk.len() / per_img;
+                let sub = QTensor { shape, data: chunk.to_vec(), qp: q.qp };
+                handles.push(
+                    s.spawn(move || self.run_quant_with(sub, kernel_threads)),
+                );
+            }
+            parts = handles
+                .into_iter()
+                .map(|h| h.join().expect("int8 worker panicked"))
+                .collect();
+        });
+        let mut data = Vec::new();
+        let mut classes = 0usize;
+        let mut total = 0usize;
+        let mut qp = q.qp;
+        for part in parts {
+            let t = part?;
+            classes = t.shape[1];
+            qp = t.qp;
+            total += t.shape[0];
+            data.extend_from_slice(&t.data);
+        }
+        Ok(QTensor { shape: vec![total, classes], data, qp })
+    }
+
+    /// Integer-only path: quantized input to quantized logits, with
+    /// `$FAT_THREADS` workers row-sharding the kernels.
     pub fn run_quant(&self, input: QTensor) -> Result<QTensor> {
+        self.run_quant_with(input, fat_threads())
+    }
+
+    /// Execute the precompiled plan. Activation buffers recycle through
+    /// an [`Arena`]; im2col/accumulator scratch is reused across nodes.
+    pub fn run_quant_with(
+        &self,
+        input: QTensor,
+        threads: usize,
+    ) -> Result<QTensor> {
+        let plan = &self.plan;
+        let mut slots: Vec<Option<QTensor>> = Vec::new();
+        slots.resize_with(plan.num_slots, || None);
+        let mut arena = Arena::default();
+        let mut ctx = OpCtx::with_threads(threads);
+        slots[plan.input_slot] = Some(input);
+        for step in &plan.steps {
+            let out_buf = arena.take();
+            let out = {
+                let a = slots[step.a].as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("{}: input slot {} empty", step.id, step.a)
+                })?;
+                match &plan.params[step.param] {
+                    QNode::Layer(l) => match step.op {
+                        Op::Conv => ops::conv2d(
+                            a, l, step.k, step.stride, step.cout, &mut ctx,
+                            out_buf,
+                        ),
+                        Op::DwConv => ops::dwconv2d(
+                            a, l, step.k, step.stride, &mut ctx, out_buf,
+                        ),
+                        Op::Dense => {
+                            ops::dense(a, l, step.cout, &mut ctx, out_buf)
+                        }
+                        op => anyhow::bail!(
+                            "{}: op {op:?} scheduled with layer params",
+                            step.id
+                        ),
+                    },
+                    QNode::Add(p) => {
+                        let bs = step.b.ok_or_else(|| {
+                            anyhow::anyhow!("{}: add without 2nd input", step.id)
+                        })?;
+                        let b = slots[bs].as_ref().ok_or_else(|| {
+                            anyhow::anyhow!("{}: input slot {bs} empty", step.id)
+                        })?;
+                        ops::add(a, b, p, out_buf)
+                    }
+                    QNode::Gap(p) => ops::gap(a, p, out_buf),
+                    QNode::Passthrough => anyhow::bail!(
+                        "{}: passthrough compiled as a step",
+                        step.id
+                    ),
+                }
+            };
+            for &f in &step.frees {
+                if let Some(dead) = slots[f].take() {
+                    arena.put(dead.data);
+                }
+            }
+            slots[step.dst] = Some(out);
+        }
+        slots[plan.output_slot]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("plan produced no output"))
+    }
+
+    /// Reference interpreter: the pre-plan sequential `BTreeMap` walk
+    /// with per-node allocations, kept as the bit-exactness oracle for
+    /// the planned/parallel engine (see `rust/tests/engine_equiv.rs`).
+    pub fn run_quant_ref(&self, input: QTensor) -> Result<QTensor> {
+        use std::collections::BTreeMap;
         let mut vals: BTreeMap<&str, QTensor> = BTreeMap::new();
         let mut last = "input";
+        let mut ctx = OpCtx::default();
         for n in &self.graph.nodes {
             if n.op == Op::Input {
                 vals.insert(n.id.as_str(), input.clone());
+                last = n.id.as_str();
                 continue;
             }
-            let a = &vals[self.graph.node(&n.inputs[0])?.id.as_str()];
-            let out = match (&n.op, self.nodes.get(&n.id)) {
-                (Op::Conv, Some(QNode::Layer(l))) => ops::conv2d(
-                    a, &l.w_q, &l.w_sums, &l.bias_q, &l.requant, l.out_qp,
-                    l.clamp, n.k, n.stride, n.cout,
-                ),
-                (Op::DwConv, Some(QNode::Layer(l))) => ops::dwconv2d(
-                    a, &l.w_q, &l.bias_q, &l.requant, l.out_qp, l.clamp,
-                    n.k, n.stride,
-                ),
-                (Op::Dense, Some(QNode::Layer(l))) => ops::dense(
-                    a, &l.w_q, &l.w_sums, &l.bias_q, &l.requant, l.out_qp,
-                    l.clamp, n.cout,
-                ),
-                (Op::Add, Some(QNode::Add(p))) => {
-                    let b = &vals[self.graph.node(&n.inputs[1])?.id.as_str()];
-                    ops::add(a, b, p.ma, p.mb, p.out_qp, p.clamp)
+            let out = {
+                let a = &vals[self.graph.node(&n.inputs[0])?.id.as_str()];
+                match (&n.op, self.node(&n.id)) {
+                    (Op::Conv, Some(QNode::Layer(l))) => ops::conv2d(
+                        a, l, n.k, n.stride, n.cout, &mut ctx, Vec::new(),
+                    ),
+                    (Op::DwConv, Some(QNode::Layer(l))) => ops::dwconv2d(
+                        a, l, n.k, n.stride, &mut ctx, Vec::new(),
+                    ),
+                    (Op::Dense, Some(QNode::Layer(l))) => {
+                        ops::dense(a, l, n.cout, &mut ctx, Vec::new())
+                    }
+                    (Op::Add, Some(QNode::Add(p))) => {
+                        let b =
+                            &vals[self.graph.node(&n.inputs[1])?.id.as_str()];
+                        ops::add(a, b, p, Vec::new())
+                    }
+                    (Op::Gap, Some(QNode::Gap(p))) => {
+                        ops::gap(a, p, Vec::new())
+                    }
+                    (Op::Relu | Op::Relu6, _) => a.clone(),
+                    (op, entry) => anyhow::bail!(
+                        "node {} ({op:?}): missing/invalid qparams ({})",
+                        n.id,
+                        entry.is_some()
+                    ),
                 }
-                (Op::Gap, Some(QNode::Gap(p))) => ops::gap(a, p.m, p.out_qp),
-                (Op::Relu | Op::Relu6, _) => a.clone(),
-                (op, entry) => anyhow::bail!(
-                    "node {} ({op:?}): missing/invalid qparams ({})",
-                    n.id,
-                    entry.is_some()
-                ),
             };
             vals.insert(n.id.as_str(), out);
             last = n.id.as_str();
         }
-        Ok(vals.remove(last).unwrap())
+        vals.remove(last)
+            .ok_or_else(|| anyhow::anyhow!("empty graph"))
     }
 
     /// Classification accuracy over (x, labels).

@@ -4,6 +4,23 @@
 //! `Σ a*b - a_zp * colsum(b)` (gemmlowp trick: weights are symmetric,
 //! b_zp = 0). This is the hot path of the deployment simulator; see
 //! EXPERIMENTS.md §Perf for the blocking/iteration log.
+//!
+//! The kernel is cache-blocked: `k` is split into [`KC`]-row panels and
+//! `n` into [`NR`]-column strips so one `(KC, NR)` panel of `b` (~8 KiB)
+//! stays L1-resident while every row of `a` streams over it, and each
+//! `(MR, NR)` micro-tile accumulates into a stack-resident i32 block so
+//! a loaded `b` row is reused across [`MR`] rows of `a`. Multi-threading
+//! is row-sharded in [`gemm_i8_parallel`]: workers own disjoint row
+//! slabs of `out`, so no synchronisation is needed and — i32 addition
+//! being associative — every blocking and thread count is bit-exact
+//! with [`gemm_ref`].
+
+/// Rows of `a` per micro-tile (register-block height).
+const MR: usize = 4;
+/// Columns of `b` per micro-tile (register-block width).
+const NR: usize = 64;
+/// Depth of one cache panel of `b` (`KC * NR` i8 ≈ 8 KiB).
+const KC: usize = 128;
 
 /// Precomputed column sums of the weight matrix (for the zero-point term).
 pub fn col_sums(b: &[i8], k: usize, n: usize) -> Vec<i32> {
@@ -18,6 +35,8 @@ pub fn col_sums(b: &[i8], k: usize, n: usize) -> Vec<i32> {
 }
 
 /// Dense GEMM: a (m,k) row-major i8, b (k,n) row-major i8, out (m,n) i32.
+/// Cache-blocked single-threaded kernel; see the module docs.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_i8(
     a: &[i8],
     a_zp: i32,
@@ -31,27 +50,79 @@ pub fn gemm_i8(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    // i16-friendly blocked kernel: accumulate in i32, iterate k-inner.
-    for mi in 0..m {
-        let arow = &a[mi * k..(mi + 1) * k];
-        let orow = &mut out[mi * n..(mi + 1) * n];
-        orow.fill(0);
-        for (ki, &av) in arow.iter().enumerate() {
-            let av = av as i32;
-            if av == 0 {
-                continue;
-            }
-            let brow = &b[ki * n..(ki + 1) * n];
-            for (ni, &bv) in brow.iter().enumerate() {
-                orow[ni] += av * bv as i32;
+    out.fill(0);
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for n0 in (0..n).step_by(NR) {
+            let nr = NR.min(n - n0);
+            let mut m0 = 0;
+            while m0 < m {
+                let mr = MR.min(m - m0);
+                // (MR, NR) i32 accumulator block on the stack.
+                let mut acc = [[0i32; NR]; MR];
+                for ki in 0..kc {
+                    let brow =
+                        &b[(k0 + ki) * n + n0..(k0 + ki) * n + n0 + nr];
+                    for (r, arow) in acc.iter_mut().take(mr).enumerate() {
+                        let av = a[(m0 + r) * k + k0 + ki] as i32;
+                        if av == 0 {
+                            continue;
+                        }
+                        for (j, &bv) in brow.iter().enumerate() {
+                            arow[j] += av * bv as i32;
+                        }
+                    }
+                }
+                for (r, arow) in acc.iter().take(mr).enumerate() {
+                    let o0 = (m0 + r) * n + n0;
+                    let orow = &mut out[o0..o0 + nr];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o += arow[j];
+                    }
+                }
+                m0 += MR;
             }
         }
-        if a_zp != 0 {
+    }
+    if a_zp != 0 {
+        for mi in 0..m {
+            let orow = &mut out[mi * n..(mi + 1) * n];
             for (ni, o) in orow.iter_mut().enumerate() {
                 *o -= a_zp * bsums[ni];
             }
         }
     }
+}
+
+/// Row-sharded parallel GEMM: `threads` scoped workers, each owning a
+/// disjoint slab of `out` rows. Bit-exact with [`gemm_i8`] for every
+/// thread count (workers never share accumulators).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_parallel(
+    a: &[i8],
+    a_zp: i32,
+    b: &[i8],
+    bsums: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+    threads: usize,
+) {
+    let t = threads.max(1).min(m.max(1));
+    if t <= 1 || n == 0 {
+        return gemm_i8(a, a_zp, b, bsums, m, k, n, out);
+    }
+    let rows = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (i, out_slab) in out.chunks_mut(rows * n).enumerate() {
+            let mc = out_slab.len() / n;
+            let a_slab = &a[i * rows * k..i * rows * k + mc * k];
+            s.spawn(move || {
+                gemm_i8(a_slab, a_zp, b, bsums, mc, k, n, out_slab);
+            });
+        }
+    });
 }
 
 /// Reference (naive) GEMM for property tests.
@@ -89,17 +160,45 @@ mod tests {
             .collect()
     }
 
+    // Shapes chosen to hit every blocking edge: single element, odd
+    // everything, exact tile multiples, and remainders in m, n and k.
+    const SHAPES: &[(usize, usize, usize, i32)] = &[
+        (1, 1, 1, 0),
+        (3, 5, 7, -3),
+        (8, 16, 4, 12),
+        (17, 9, 33, -128),
+        (4, 128, 64, 5),   // exactly one (KC, NR) panel, one MR block
+        (5, 129, 65, -7),  // +1 remainder in every dimension
+        (2, 300, 100, 11), // multiple k panels
+        (65, 7, 130, -1),  // many row blocks, two n strips
+    ];
+
     #[test]
     fn matches_reference() {
-        for &(m, k, n, zp) in
-            &[(1, 1, 1, 0), (3, 5, 7, -3), (8, 16, 4, 12), (17, 9, 33, -128)]
-        {
+        for &(m, k, n, zp) in SHAPES {
             let a = rand_i8(m * k, 1);
             let b = rand_i8(k * n, 2);
             let sums = col_sums(&b, k, n);
             let mut out = vec![0i32; m * n];
             gemm_i8(&a, zp, &b, &sums, m, k, n, &mut out);
             assert_eq!(out, gemm_ref(&a, zp, &b, m, k, n), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_reference_across_thread_counts() {
+        for &(m, k, n, zp) in SHAPES {
+            let a = rand_i8(m * k, 3);
+            let b = rand_i8(k * n, 4);
+            let sums = col_sums(&b, k, n);
+            let want = gemm_ref(&a, zp, &b, m, k, n);
+            for threads in [1usize, 2, 3, 8, 64] {
+                let mut out = vec![0i32; m * n];
+                gemm_i8_parallel(
+                    &a, zp, &b, &sums, m, k, n, &mut out, threads,
+                );
+                assert_eq!(out, want, "({m},{k},{n}) t={threads}");
+            }
         }
     }
 
@@ -117,5 +216,18 @@ mod tests {
         let mut out = vec![0i32; 1];
         gemm_i8(&a, 0, &b, &sums, 1, 512, 1, &mut out);
         assert_eq!(out[0], 127 * 127 * 512);
+    }
+
+    #[test]
+    fn stale_output_is_overwritten() {
+        // the planned engine recycles buffers; the kernel must not
+        // accumulate into stale contents
+        let (m, k, n) = (3, 4, 5);
+        let a = rand_i8(m * k, 9);
+        let b = rand_i8(k * n, 10);
+        let sums = col_sums(&b, k, n);
+        let mut out = vec![i32::MAX; m * n];
+        gemm_i8(&a, 2, &b, &sums, m, k, n, &mut out);
+        assert_eq!(out, gemm_ref(&a, 2, &b, m, k, n));
     }
 }

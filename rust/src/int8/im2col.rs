@@ -14,13 +14,33 @@ pub fn im2col_i8(
     stride: usize,
     zp: i8,
 ) -> (Vec<i8>, usize, usize) {
+    let mut out = Vec::new();
+    let (oh, ow) = im2col_into(x, n, h, w, c, k, stride, zp, &mut out);
+    (out, oh, ow)
+}
+
+/// [`im2col_i8`] into a caller-provided buffer (cleared and refilled) so
+/// the engine can reuse one patch buffer across nodes. Returns (oh, ow).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    x: &[i8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    zp: i8,
+    out: &mut Vec<i8>,
+) -> (usize, usize) {
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
     // SAME padding (matches XLA): pad_total = (o-1)*s + k - h
     let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
     let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
     let cols = k * k * c;
-    let mut out = vec![zp; n * oh * ow * cols];
+    out.clear();
+    out.resize(n * oh * ow * cols, zp);
     for ni in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -46,7 +66,7 @@ pub fn im2col_i8(
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
 #[cfg(test)]
@@ -79,6 +99,16 @@ mod tests {
         let (p, oh, ow) = im2col_i8(&x, 1, 4, 4, 1, 3, 2, 0);
         assert_eq!((oh, ow), (2, 2));
         assert_eq!(p.len(), 4 * 9);
+    }
+
+    #[test]
+    fn into_reuses_stale_buffers_correctly() {
+        let x: Vec<i8> = (0..4 * 4).map(|i| i as i8).collect();
+        let (want, oh, ow) = im2col_i8(&x, 1, 4, 4, 1, 3, 2, -9);
+        let mut buf = vec![42i8; 7]; // stale, wrong-sized scratch
+        let (oh2, ow2) = im2col_into(&x, 1, 4, 4, 1, 3, 2, -9, &mut buf);
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(want, buf);
     }
 
     #[test]

@@ -1,14 +1,22 @@
 //! Integer-only int8 inference engine — the mobile-deployment simulator
-//! (DESIGN.md §2). Consumes the quantized model exported by
-//! `quant::export` and executes it with int8 storage, int32 accumulators
-//! and fixed-point requantization, exactly as the paper's target devices
-//! (and TFLite) do.
+//! (DESIGN.md §2 methodology, §5 architecture). Consumes the quantized
+//! model exported by `quant::export` and executes it with int8 storage,
+//! int32 accumulators and fixed-point requantization, exactly as the
+//! paper's target devices (and TFLite) do.
+//!
+//! Execution is plan-driven: `quant::export::build_qmodel` compiles a
+//! [`plan::ExecPlan`] once (topological schedule, dense indices,
+//! liveness-based buffer reuse) and [`engine::QModel`] runs it with
+//! cache-blocked GEMM kernels and `FAT_THREADS`-way parallelism —
+//! batch-sharded across images, row-sharded inside kernels.
 
 pub mod engine;
 pub mod gemm;
 pub mod im2col;
 pub mod ops;
+pub mod plan;
 pub mod qtensor;
 
 pub use engine::{QLayer, QModel};
+pub use plan::ExecPlan;
 pub use qtensor::QTensor;

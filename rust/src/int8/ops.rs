@@ -1,11 +1,40 @@
 //! Integer-only layer kernels: conv (im2col+GEMM), depthwise conv, dense,
 //! residual add, global average pool — all with fixed-point requantization.
+//!
+//! Kernels are written for the planned engine (`int8::plan`): each takes
+//! its layer parameters as a [`QLayer`]/[`AddParams`]/[`GapParams`]
+//! bundle, writes its activation into a caller-provided buffer (recycled
+//! through the engine's arena) and reuses im2col/accumulator scratch from
+//! an [`OpCtx`] across nodes. `OpCtx::threads` drives row-sharded
+//! parallelism inside the GEMM and the depthwise loop; every thread
+//! count produces bit-identical activations.
 
 use crate::quant::scale::{apply_multiplier, QParams};
 
-use super::gemm::gemm_i8;
-use super::im2col::im2col_i8;
+use super::engine::{AddParams, GapParams, QLayer};
+use super::gemm::gemm_i8_parallel;
+use super::im2col::im2col_into;
 use super::qtensor::QTensor;
+
+/// Reusable per-run execution context: worker count plus im2col /
+/// accumulator scratch shared by all nodes of one inference.
+pub struct OpCtx {
+    pub threads: usize,
+    pub patches: Vec<i8>,
+    pub acc: Vec<i32>,
+}
+
+impl Default for OpCtx {
+    fn default() -> Self {
+        OpCtx { threads: 1, patches: Vec::new(), acc: Vec::new() }
+    }
+}
+
+impl OpCtx {
+    pub fn with_threads(threads: usize) -> Self {
+        OpCtx { threads: threads.max(1), ..Default::default() }
+    }
+}
 
 /// Requantize an int32 accumulator row into the output domain.
 ///
@@ -32,170 +61,215 @@ pub fn requant_store(
 }
 
 /// SAME-padded conv via im2col + int8 GEMM.
-#[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     x: &QTensor,
-    w_q: &[i8],
-    w_sums: &[i32],
-    bias: &[i32],
-    requant: &[(i32, i32)],
-    out_qp: QParams,
-    clamp: (i32, i32),
+    l: &QLayer,
     k: usize,
     stride: usize,
     cout: usize,
+    ctx: &mut OpCtx,
+    out: Vec<i8>,
 ) -> QTensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let (patches, oh, ow) =
-        im2col_i8(&x.data, n, h, w, c, k, stride, x.qp.zero_point as i8);
+    let (oh, ow) = im2col_into(
+        &x.data,
+        n,
+        h,
+        w,
+        c,
+        k,
+        stride,
+        x.qp.zero_point as i8,
+        &mut ctx.patches,
+    );
     let m = n * oh * ow;
     let kk = k * k * c;
-    let mut acc = vec![0i32; m * cout];
-    gemm_i8(
-        &patches,
+    ctx.acc.clear();
+    ctx.acc.resize(m * cout, 0);
+    gemm_i8_parallel(
+        &ctx.patches,
         x.qp.zero_point,
-        w_q,
-        w_sums,
+        &l.w_q,
+        &l.w_sums,
         m,
         kk,
         cout,
-        &mut acc,
+        &mut ctx.acc,
+        ctx.threads,
     );
-    let mut data = Vec::new();
-    requant_store(&acc, bias, requant, out_qp, clamp, cout, &mut data);
-    QTensor { shape: vec![n, oh, ow, cout], data, qp: out_qp }
+    let mut data = out;
+    requant_store(
+        &ctx.acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, &mut data,
+    );
+    QTensor { shape: vec![n, oh, ow, cout], data, qp: l.out_qp }
 }
 
-/// Depthwise SAME-padded conv (multiplier 1). `w_q` is (k,k,ch) row-major.
-#[allow(clippy::too_many_arguments)]
+/// Depthwise SAME-padded conv (multiplier 1). `l.w_q` is (k,k,ch)
+/// row-major. Output rows are sharded over `ctx.threads` workers.
 pub fn dwconv2d(
     x: &QTensor,
-    w_q: &[i8],
-    bias: &[i32],
-    requant: &[(i32, i32)],
-    out_qp: QParams,
-    clamp: (i32, i32),
+    l: &QLayer,
     k: usize,
     stride: usize,
+    ctx: &mut OpCtx,
+    out: Vec<i8>,
 ) -> QTensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
     let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
     let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
+    let mut data = out;
+    data.clear();
+    data.resize(n * oh * ow * c, 0);
+    let rows = n * oh;
+    let row_len = ow * c;
+    let t = ctx.threads.max(1).min(rows.max(1));
+    if row_len == 0 || rows == 0 {
+        // degenerate empty output; nothing to compute
+    } else if t <= 1 {
+        dw_rows(x, l, k, stride, oh, ow, pad_top, pad_left, 0, &mut data);
+    } else {
+        let per = rows.div_ceil(t);
+        std::thread::scope(|s| {
+            for (i, slab) in data.chunks_mut(per * row_len).enumerate() {
+                let r0 = i * per;
+                s.spawn(move || {
+                    dw_rows(x, l, k, stride, oh, ow, pad_top, pad_left, r0, slab);
+                });
+            }
+        });
+    }
+    QTensor { shape: vec![n, oh, ow, c], data, qp: l.out_qp }
+}
+
+/// Compute a contiguous range of depthwise output rows (one row =
+/// one (image, oy) scanline of ow*c values) into `out`.
+#[allow(clippy::too_many_arguments)]
+fn dw_rows(
+    x: &QTensor,
+    l: &QLayer,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    pad_top: usize,
+    pad_left: usize,
+    r0: usize,
+    out: &mut [i8],
+) {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
     let zp = x.qp.zero_point;
-    let mut data = Vec::with_capacity(n * oh * ow * c);
-    for ni in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                for ci in 0..c {
-                    let mut acc = 0i32;
-                    for ky in 0..k {
-                        let iy =
-                            (oy * stride + ky) as isize - pad_top as isize;
-                        if iy < 0 || iy >= h as isize {
-                            continue; // pad tap: (zp - zp) * w = 0
-                        }
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize
-                                - pad_left as isize;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            let xi = ((ni * h + iy as usize) * w
-                                + ix as usize)
-                                * c
-                                + ci;
-                            let wi = (ky * k + kx) * c + ci;
-                            acc += (x.data[xi] as i32 - zp)
-                                * w_q[wi] as i32;
-                        }
+    for (ri, orow) in out.chunks_mut(ow * c).enumerate() {
+        let r = r0 + ri;
+        let ni = r / oh;
+        let oy = r % oh;
+        for ox in 0..ow {
+            for ci in 0..c {
+                let mut acc = 0i32;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // pad tap: (zp - zp) * w = 0
                     }
-                    let (m0, shift) = requant[ci];
-                    let v = apply_multiplier(acc + bias[ci], m0, shift)
-                        + out_qp.zero_point;
-                    data.push(v.clamp(clamp.0, clamp.1) as i8);
+                    for kx in 0..k {
+                        let ix =
+                            (ox * stride + kx) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xi = ((ni * h + iy as usize) * w + ix as usize)
+                            * c
+                            + ci;
+                        let wi = (ky * k + kx) * c + ci;
+                        acc += (x.data[xi] as i32 - zp)
+                            * l.w_q[wi] as i32;
+                    }
                 }
+                let (m0, shift) = l.requant[ci];
+                let v = apply_multiplier(acc + l.bias_q[ci], m0, shift)
+                    + l.out_qp.zero_point;
+                orow[ox * c + ci] = v.clamp(l.clamp.0, l.clamp.1) as i8;
             }
         }
     }
-    QTensor { shape: vec![n, oh, ow, c], data, qp: out_qp }
 }
 
 /// Dense layer over (n, cin) input.
-#[allow(clippy::too_many_arguments)]
 pub fn dense(
     x: &QTensor,
-    w_q: &[i8],
-    w_sums: &[i32],
-    bias: &[i32],
-    requant: &[(i32, i32)],
-    out_qp: QParams,
-    clamp: (i32, i32),
+    l: &QLayer,
     cout: usize,
+    ctx: &mut OpCtx,
+    out: Vec<i8>,
 ) -> QTensor {
     let n = x.shape[0];
     let cin = x.shape[1];
-    let mut acc = vec![0i32; n * cout];
-    gemm_i8(&x.data, x.qp.zero_point, w_q, w_sums, n, cin, cout, &mut acc);
-    let mut data = Vec::new();
-    requant_store(&acc, bias, requant, out_qp, clamp, cout, &mut data);
-    QTensor { shape: vec![n, cout], data, qp: out_qp }
+    ctx.acc.clear();
+    ctx.acc.resize(n * cout, 0);
+    gemm_i8_parallel(
+        &x.data,
+        x.qp.zero_point,
+        &l.w_q,
+        &l.w_sums,
+        n,
+        cin,
+        cout,
+        &mut ctx.acc,
+        ctx.threads,
+    );
+    let mut data = out;
+    requant_store(
+        &ctx.acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, &mut data,
+    );
+    QTensor { shape: vec![n, cout], data, qp: l.out_qp }
 }
 
 /// Residual add: rescale both operands into the output domain.
-pub fn add(
-    a: &QTensor,
-    b: &QTensor,
-    ma: (i32, i32),
-    mb: (i32, i32),
-    out_qp: QParams,
-    clamp: (i32, i32),
-) -> QTensor {
+pub fn add(a: &QTensor, b: &QTensor, p: &AddParams, out: Vec<i8>) -> QTensor {
     debug_assert_eq!(a.shape, b.shape);
+    let mut data = out;
+    data.clear();
+    data.reserve(a.data.len());
     // Pre-scale by 2^20 for precision (TFLite-style left shift).
-    let data = a
-        .data
-        .iter()
-        .zip(&b.data)
-        .map(|(&qa, &qb)| {
-            let va = apply_multiplier(
-                ((qa as i32) - a.qp.zero_point) << 20,
-                ma.0,
-                ma.1,
-            );
-            let vb = apply_multiplier(
-                ((qb as i32) - b.qp.zero_point) << 20,
-                mb.0,
-                mb.1,
-            );
-            let v = crate::quant::scale::rounding_rshift(va + vb, 20)
-                + out_qp.zero_point;
-            v.clamp(clamp.0, clamp.1) as i8
-        })
-        .collect();
-    QTensor { shape: a.shape.clone(), data, qp: out_qp }
+    for (&qa, &qb) in a.data.iter().zip(&b.data) {
+        let va = apply_multiplier(
+            ((qa as i32) - a.qp.zero_point) << 20,
+            p.ma.0,
+            p.ma.1,
+        );
+        let vb = apply_multiplier(
+            ((qb as i32) - b.qp.zero_point) << 20,
+            p.mb.0,
+            p.mb.1,
+        );
+        let v = crate::quant::scale::rounding_rshift(va + vb, 20)
+            + p.out_qp.zero_point;
+        data.push(v.clamp(p.clamp.0, p.clamp.1) as i8);
+    }
+    QTensor { shape: a.shape.clone(), data, qp: p.out_qp }
 }
 
 /// Global average pool over H,W.
-pub fn gap(x: &QTensor, m: (i32, i32), out_qp: QParams) -> QTensor {
+pub fn gap(x: &QTensor, p: &GapParams, out: Vec<i8>) -> QTensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let hw = (h * w) as i32;
     let zp = x.qp.zero_point;
-    let mut data = Vec::with_capacity(n * c);
+    let mut data = out;
+    data.clear();
+    data.reserve(n * c);
     for ni in 0..n {
         for ci in 0..c {
             let mut acc = 0i32;
-            for p in 0..(h * w) {
-                acc += x.data[(ni * h * w + p) * c + ci] as i32 - zp;
+            for pix in 0..(h * w) {
+                acc += x.data[(ni * h * w + pix) * c + ci] as i32 - zp;
             }
             // multiplier m already folds the 1/(h*w)
-            let v = apply_multiplier(acc, m.0, m.1) + out_qp.zero_point;
-            data.push(v.clamp(out_qp.qmin, out_qp.qmax) as i8);
+            let v = apply_multiplier(acc, p.m.0, p.m.1)
+                + p.out_qp.zero_point;
+            data.push(v.clamp(p.out_qp.qmin, p.out_qp.qmax) as i8);
         }
     }
-    let _ = hw;
-    QTensor { shape: vec![n, c], data, qp: out_qp }
+    QTensor { shape: vec![n, c], data, qp: p.out_qp }
 }
 
 #[cfg(test)]
@@ -212,21 +286,31 @@ mod tests {
         quantize_multiplier((s_in as f64 * s_w as f64) / s_out as f64)
     }
 
+    fn layer(
+        w_q: Vec<i8>,
+        w_sums: Vec<i32>,
+        bias_q: Vec<i32>,
+        requant: Vec<(i32, i32)>,
+        out_qp: QParams,
+        clamp: (i32, i32),
+    ) -> QLayer {
+        QLayer { w_q, w_sums, bias_q, requant, out_qp, clamp, w_scales: vec![1.0] }
+    }
+
     #[test]
     fn conv_1x1_identity_approx() {
         // y = 1.0 * x through a 1x1 conv with unit weight
         let in_qp = qp_sym(1.0);
-        let x = QTensor::quantize(vec![1, 2, 2, 1], &[0.5, -0.25, 1.0, 0.0], in_qp);
+        let x =
+            QTensor::quantize(vec![1, 2, 2, 1], &[0.5, -0.25, 1.0, 0.0], in_qp);
         let w_t = 1.0f32;
         let w_qp = QParams::symmetric_signed(w_t);
         let w_q = vec![w_qp.quantize(1.0) as i8];
         let sums = vec![w_q[0] as i32];
         let out_qp = qp_sym(1.0);
         let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale)];
-        let y = conv2d(
-            &x, &w_q, &sums, &[0], &req, out_qp,
-            (out_qp.qmin, out_qp.qmax), 1, 1, 1,
-        );
+        let l = layer(w_q, sums, vec![0], req, out_qp, (out_qp.qmin, out_qp.qmax));
+        let y = conv2d(&x, &l, 1, 1, 1, &mut OpCtx::default(), Vec::new());
         let d = y.dequantize();
         for (a, b) in [0.5, -0.25, 1.0, 0.0].iter().zip(&d) {
             assert!((a - b).abs() < 0.02, "{a} vs {b}");
@@ -241,10 +325,12 @@ mod tests {
         let x = QTensor::quantize(vec![1, 4, 4, 1], &xs, in_qp);
         let wf = [0.1f32, 0.2, 0.1, 0.0, 0.5, 0.0, -0.1, 0.0, -0.2];
         let w_qp = QParams::symmetric_signed(0.5);
-        let w_q: Vec<i8> = wf.iter().map(|&v| w_qp.quantize(v) as i8).collect();
+        let w_q: Vec<i8> =
+            wf.iter().map(|&v| w_qp.quantize(v) as i8).collect();
         let out_qp = qp_sym(2.0);
         let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale)];
-        let y = dwconv2d(&x, &w_q, &[0], &req, out_qp, (-127, 127), 3, 1);
+        let l = layer(w_q, vec![], vec![0], req, out_qp, (-127, 127));
+        let y = dwconv2d(&x, &l, 3, 1, &mut OpCtx::default(), Vec::new());
         assert_eq!(y.shape, vec![1, 4, 4, 1]);
         // float reference at centre pixel (1,1): full 3x3 support
         let xr = |r: usize, c: usize| xs[r * 4 + c];
@@ -254,8 +340,30 @@ mod tests {
                 want += wf[ky * 3 + kx] * xr(ky, kx);
             }
         }
-        let got = y.dequantize()[4 * 1 + 1];
+        let got = y.dequantize()[4 + 1];
         assert!((got - want).abs() < 0.05, "{got} vs {want}");
+    }
+
+    #[test]
+    fn dwconv_threaded_matches_serial() {
+        let in_qp = qp_sym(2.0);
+        let xs = crate::util::prop::f32s(5, 2 * 7 * 7 * 3, -2.0, 2.0);
+        let x = QTensor::quantize(vec![2, 7, 7, 3], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.5);
+        let w_q: Vec<i8> = crate::util::prop::f32s(6, 9 * 3, -0.5, 0.5)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 3];
+        let l = layer(w_q, vec![], vec![3, -2, 0], req, out_qp, (-127, 127));
+        let base =
+            dwconv2d(&x, &l, 3, 2, &mut OpCtx::default(), Vec::new());
+        for t in [2usize, 5, 16] {
+            let y = dwconv2d(&x, &l, 3, 2, &mut OpCtx::with_threads(t), Vec::new());
+            assert_eq!(base.shape, y.shape, "t={t}");
+            assert_eq!(base.data, y.data, "t={t}");
+        }
     }
 
     #[test]
@@ -265,9 +373,13 @@ mod tests {
         let qo = qp_sym(3.0);
         let a = QTensor::quantize(vec![4], &[0.5, -0.5, 1.0, 0.0], qa);
         let b = QTensor::quantize(vec![4], &[1.5, 0.5, -1.0, 2.0], qb);
-        let ma = quantize_multiplier(qa.scale as f64 / qo.scale as f64);
-        let mb = quantize_multiplier(qb.scale as f64 / qo.scale as f64);
-        let y = add(&a, &b, ma, mb, qo, (qo.qmin, qo.qmax));
+        let p = AddParams {
+            ma: quantize_multiplier(qa.scale as f64 / qo.scale as f64),
+            mb: quantize_multiplier(qb.scale as f64 / qo.scale as f64),
+            out_qp: qo,
+            clamp: (qo.qmin, qo.qmax),
+        };
+        let y = add(&a, &b, &p, Vec::new());
         let d = y.dequantize();
         for (want, got) in [2.0f32, 0.0, 0.0, 2.0].iter().zip(&d) {
             assert!((want - got).abs() < 0.06, "{want} vs {got}");
@@ -280,8 +392,11 @@ mod tests {
         let qo = qp_sym(4.0);
         let xs = vec![1.0f32, 2.0, 3.0, 4.0];
         let x = QTensor::quantize(vec![1, 2, 2, 1], &xs, qi);
-        let m = quantize_multiplier(qi.scale as f64 / qo.scale as f64 / 4.0);
-        let y = gap(&x, m, qo);
+        let p = GapParams {
+            m: quantize_multiplier(qi.scale as f64 / qo.scale as f64 / 4.0),
+            out_qp: qo,
+        };
+        let y = gap(&x, &p, Vec::new());
         let d = y.dequantize();
         assert!((d[0] - 2.5).abs() < 0.05, "{}", d[0]);
     }
@@ -293,15 +408,38 @@ mod tests {
         let x = QTensor::quantize(vec![1, 1, 1, 1], &[8.0], in_qp);
         let w_qp = QParams::symmetric_signed(1.0);
         let w_q = vec![w_qp.quantize(1.0) as i8];
-        let out_qp =
-            super::super::qtensor::to_i8_domain(QParams::symmetric_unsigned(8.0));
+        let out_qp = super::super::qtensor::to_i8_domain(
+            QParams::symmetric_unsigned(8.0),
+        );
         let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale)];
         let hi = out_qp.zero_point + (6.0 / out_qp.scale).round() as i32;
-        let y = conv2d(
-            &x, &w_q, &[w_q[0] as i32], &[0], &req, out_qp,
-            (out_qp.zero_point, hi), 1, 1, 1,
-        );
+        let sums = vec![w_q[0] as i32];
+        let l = layer(w_q, sums, vec![0], req, out_qp, (out_qp.zero_point, hi));
+        let y = conv2d(&x, &l, 1, 1, 1, &mut OpCtx::default(), Vec::new());
         let d = y.dequantize()[0];
         assert!((d - 6.0).abs() < 0.05, "{d}");
+    }
+
+    #[test]
+    fn conv_reuses_stale_scratch_and_out() {
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(11, 2 * 5 * 5 * 2, -1.0, 1.0);
+        let x = QTensor::quantize(vec![2, 5, 5, 2], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.7);
+        let w_q: Vec<i8> = crate::util::prop::f32s(12, 9 * 2 * 3, -0.7, 0.7)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 18, 3);
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 3];
+        let l = layer(w_q, sums, vec![1, 2, 3], req, out_qp, (-127, 127));
+        let mut ctx = OpCtx::with_threads(2);
+        let first = conv2d(&x, &l, 3, 1, &mut ctx, Vec::new());
+        // second call reuses ctx scratch and a dirty recycled buffer
+        let dirty = vec![77i8; 3];
+        let second = conv2d(&x, &l, 3, 1, &mut ctx, dirty);
+        assert_eq!(first.shape, second.shape);
+        assert_eq!(first.data, second.data);
     }
 }

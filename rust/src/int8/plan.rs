@@ -1,0 +1,355 @@
+//! Execution planning for the int8 engine (DESIGN.md §5).
+//!
+//! `quant::export::build_qmodel` compiles the folded graph into an
+//! [`ExecPlan`] exactly once: a topological schedule of compute steps
+//! with **dense indices** (no name lookups on the hot path), a dense
+//! parameter table, and **liveness-based buffer slots** so activations
+//! recycle a small [`Arena`] of i8 buffers instead of cloning `QTensor`s
+//! through a per-call `BTreeMap`. Relu/relu6 nodes whose clamp was fused
+//! into their producer compile to nothing: their value aliases the
+//! producer's slot.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::{GraphDef, Op};
+
+use super::engine::QNode;
+
+/// Recycled i8 buffer pool: freed activation buffers are handed to later
+/// steps instead of allocating per node.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<i8>>,
+}
+
+impl Arena {
+    /// Pop a recycled buffer (empty but with retained capacity), or a
+    /// fresh one.
+    pub fn take(&mut self) -> Vec<i8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a dead activation's buffer to the pool.
+    pub fn put(&mut self, mut buf: Vec<i8>) {
+        buf.clear();
+        self.free.push(buf);
+    }
+
+    /// Number of pooled buffers (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// One scheduled compute node.
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    /// Graph node id (diagnostics only — execution is index-based).
+    pub id: String,
+    pub op: Op,
+    /// Index into [`ExecPlan::params`].
+    pub param: usize,
+    /// First input's buffer slot.
+    pub a: usize,
+    /// Second input's buffer slot (residual add).
+    pub b: Option<usize>,
+    /// Output buffer slot; never aliases a live input slot.
+    pub dst: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub cout: usize,
+    /// Slots whose values die after this step (buffers go to the arena).
+    pub frees: Vec<usize>,
+}
+
+/// A compiled schedule: steps + dense params + slot count.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub steps: Vec<PlanStep>,
+    /// Dense parameter table in schedule order.
+    pub params: Vec<QNode>,
+    /// Total buffer slots needed for one inference (incl. the input).
+    pub num_slots: usize,
+    /// Slot the (quantized) input tensor is placed in before step 0.
+    pub input_slot: usize,
+    /// Slot holding the model output after the last step.
+    pub output_slot: usize,
+    index: BTreeMap<String, usize>,
+}
+
+impl ExecPlan {
+    /// Quantized parameters of a compute node, if it has any.
+    pub fn node(&self, id: &str) -> Option<&QNode> {
+        self.index.get(id).map(|&i| &self.params[i])
+    }
+
+    /// Compile schedule + slot assignment from the folded graph and the
+    /// per-node quantized parameters built by `quant::export`.
+    pub fn compile(
+        g: &GraphDef,
+        mut qnodes: BTreeMap<String, QNode>,
+    ) -> Result<ExecPlan> {
+        let pos: BTreeMap<&str, usize> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.id.as_str(), i))
+            .collect();
+        let order = topo_order(g, &pos)?;
+
+        // Value ids per node output; passthrough relu aliases its input.
+        let mut val_of = vec![usize::MAX; g.nodes.len()];
+        let mut n_vals = 0usize;
+        for &ni in &order {
+            let node = &g.nodes[ni];
+            let v = match node.op {
+                Op::Relu | Op::Relu6 => {
+                    let src = node.inputs.first().ok_or_else(|| {
+                        anyhow::anyhow!("{}: relu without input", node.id)
+                    })?;
+                    val_of[pos[src.as_str()]]
+                }
+                _ => {
+                    n_vals += 1;
+                    n_vals - 1
+                }
+            };
+            val_of[ni] = v;
+        }
+
+        // Remaining-use counts per value: compute-step reads + the output.
+        let mut uses = vec![0usize; n_vals];
+        for &ni in &order {
+            let node = &g.nodes[ni];
+            if matches!(node.op, Op::Input | Op::Relu | Op::Relu6) {
+                continue;
+            }
+            for inp in &node.inputs {
+                uses[val_of[pos[inp.as_str()]]] += 1;
+            }
+        }
+        let out_node =
+            *order.last().ok_or_else(|| anyhow::anyhow!("empty graph"))?;
+        let output_val = val_of[out_node];
+        uses[output_val] += 1; // the caller reads the output
+
+        // Slot assignment with a LIFO free list; allocate a step's dst
+        // before releasing its inputs so dst never aliases a live operand.
+        let mut slot_of_val = vec![usize::MAX; n_vals];
+        let mut free_slots: Vec<usize> = Vec::new();
+        let mut num_slots = 0usize;
+        let mut steps = Vec::new();
+        let mut params: Vec<QNode> = Vec::new();
+        let mut index = BTreeMap::new();
+        let mut input_slot = usize::MAX;
+
+        for &ni in &order {
+            let node = &g.nodes[ni];
+            match node.op {
+                Op::Input => {
+                    let s = free_slots.pop().unwrap_or_else(|| {
+                        num_slots += 1;
+                        num_slots - 1
+                    });
+                    slot_of_val[val_of[ni]] = s;
+                    input_slot = s;
+                }
+                Op::Relu | Op::Relu6 => {} // aliased; no step
+                Op::Bn => {
+                    anyhow::bail!("{}: bn survived graph folding", node.id)
+                }
+                _ => {
+                    let qn = qnodes.remove(&node.id).ok_or_else(|| {
+                        anyhow::anyhow!("no quant params for node {}", node.id)
+                    })?;
+                    let a_in = node.inputs.first().ok_or_else(|| {
+                        anyhow::anyhow!("{}: node without input", node.id)
+                    })?;
+                    let a_val = val_of[pos[a_in.as_str()]];
+                    let b_val =
+                        node.inputs.get(1).map(|i| val_of[pos[i.as_str()]]);
+                    let dst = free_slots.pop().unwrap_or_else(|| {
+                        num_slots += 1;
+                        num_slots - 1
+                    });
+                    slot_of_val[val_of[ni]] = dst;
+                    let a_slot = slot_of_val[a_val];
+                    let b_slot = b_val.map(|v| slot_of_val[v]);
+                    let mut frees = Vec::new();
+                    for v in std::iter::once(a_val).chain(b_val) {
+                        uses[v] -= 1;
+                        if uses[v] == 0 {
+                            let s = slot_of_val[v];
+                            free_slots.push(s);
+                            frees.push(s);
+                        }
+                    }
+                    let param = params.len();
+                    params.push(qn);
+                    index.insert(node.id.clone(), param);
+                    steps.push(PlanStep {
+                        id: node.id.clone(),
+                        op: node.op,
+                        param,
+                        a: a_slot,
+                        b: b_slot,
+                        dst,
+                        k: node.k,
+                        stride: node.stride,
+                        cout: node.out_channels(),
+                        frees,
+                    });
+                }
+            }
+        }
+        anyhow::ensure!(input_slot != usize::MAX, "graph has no input node");
+        Ok(ExecPlan {
+            steps,
+            params,
+            num_slots,
+            input_slot,
+            output_slot: slot_of_val[output_val],
+            index,
+        })
+    }
+}
+
+/// Stable Kahn topological sort: among ready nodes the smallest original
+/// index runs first, so an already-topological graph keeps its order
+/// (and therefore the engine's output node matches the old interpreter's
+/// "last node wins" semantics).
+fn topo_order(
+    g: &GraphDef,
+    pos: &BTreeMap<&str, usize>,
+) -> Result<Vec<usize>> {
+    let n = g.nodes.len();
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        for inp in &node.inputs {
+            let p = *pos.get(inp.as_str()).ok_or_else(|| {
+                anyhow::anyhow!("{}: unknown input {inp}", node.id)
+            })?;
+            succs[p].push(i);
+            indeg[i] += 1;
+        }
+    }
+    let mut ready: std::collections::BTreeSet<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(i) = ready.pop_first() {
+        order.push(i);
+        for &s in &succs[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.insert(s);
+            }
+        }
+    }
+    anyhow::ensure!(order.len() == n, "graph has a cycle");
+    Ok(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::int8::engine::GapParams;
+    use crate::quant::scale::QParams;
+
+    fn qp() -> QParams {
+        QParams::symmetric_signed(1.0)
+    }
+
+    fn gap_node() -> QNode {
+        QNode::Gap(GapParams { m: (1 << 30, 0), out_qp: qp() })
+    }
+
+    const CHAIN: &str = r#"{
+      "name": "chain", "num_classes": 2,
+      "nodes": [
+        {"id": "input", "op": "input", "inputs": [], "shape": [4,4,1]},
+        {"id": "g0", "op": "gap", "inputs": ["input"]},
+        {"id": "r0", "op": "relu", "inputs": ["g0"]}
+      ]}"#;
+
+    #[test]
+    fn chain_plan_aliases_relu_and_reuses_slots() {
+        let g = GraphDef::from_json(CHAIN).unwrap();
+        let mut qn = BTreeMap::new();
+        qn.insert("g0".to_string(), gap_node());
+        qn.insert("r0".to_string(), QNode::Passthrough);
+        let plan = ExecPlan::compile(&g, qn).unwrap();
+        // relu compiles to nothing; one step for the gap
+        assert_eq!(plan.steps.len(), 1);
+        assert_eq!(plan.steps[0].id, "g0");
+        // input dies after the gap reads it
+        assert_eq!(plan.steps[0].frees, vec![plan.input_slot]);
+        // output is the relu's alias of the gap value
+        assert_eq!(plan.output_slot, plan.steps[0].dst);
+        assert_eq!(plan.num_slots, 2);
+        assert!(plan.node("g0").is_some());
+        assert!(plan.node("r0").is_none());
+    }
+
+    #[test]
+    fn dst_never_aliases_live_input() {
+        let g = GraphDef::from_json(CHAIN).unwrap();
+        let mut qn = BTreeMap::new();
+        qn.insert("g0".to_string(), gap_node());
+        qn.insert("r0".to_string(), QNode::Passthrough);
+        let plan = ExecPlan::compile(&g, qn).unwrap();
+        for s in &plan.steps {
+            assert_ne!(s.dst, s.a, "{}", s.id);
+            if let Some(b) = s.b {
+                assert_ne!(s.dst, b, "{}", s.id);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_params_rejected() {
+        let g = GraphDef::from_json(CHAIN).unwrap();
+        assert!(ExecPlan::compile(&g, BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut a = Arena::default();
+        let mut v = a.take();
+        assert!(v.is_empty());
+        v.extend_from_slice(&[1, 2, 3]);
+        let cap = v.capacity();
+        a.put(v);
+        assert_eq!(a.pooled(), 1);
+        let v2 = a.take();
+        assert!(v2.is_empty());
+        assert!(v2.capacity() >= cap.min(3));
+        assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn topo_handles_out_of_order_nodes() {
+        // g0 listed before its producer's producer would break a naive
+        // in-order walk; the planner re-sorts
+        let g = GraphDef::from_json(
+            r#"{"name": "ooo", "num_classes": 2,
+                "nodes": [
+                  {"id": "input", "op": "input", "inputs": [], "shape": [4,4,1]},
+                  {"id": "g1", "op": "gap", "inputs": ["r0"]},
+                  {"id": "g0", "op": "gap", "inputs": ["input"]},
+                  {"id": "r0", "op": "relu", "inputs": ["g0"]}
+                ]}"#,
+        )
+        .unwrap();
+        let mut qn = BTreeMap::new();
+        qn.insert("g0".to_string(), gap_node());
+        qn.insert("g1".to_string(), gap_node());
+        qn.insert("r0".to_string(), QNode::Passthrough);
+        let plan = ExecPlan::compile(&g, qn).unwrap();
+        assert_eq!(plan.steps.len(), 2);
+        assert_eq!(plan.steps[0].id, "g0");
+        assert_eq!(plan.steps[1].id, "g1");
+    }
+}

@@ -4,16 +4,23 @@
 //! Adjustable Threshold for Uniform Neural Network Quantization* (2018),
 //! the winning solution of LPIRC-II.
 //!
-//! Three layers (see `DESIGN.md`):
+//! Three layers (see `DESIGN.md` at the repo root):
 //!  * **L1** Pallas fake-quant / int8-GEMM kernels (`python/compile/kernels`)
 //!  * **L2** JAX model graphs + FAT fine-tune step (`python/compile`),
 //!    AOT-lowered to HLO-text artifacts at build time
 //!  * **L3** this crate: the quantization pipeline coordinator, PJRT
-//!    runtime, calibration, BN folding, §3.3 DWS rescaling, and an
-//!    integer-only int8 inference engine (the mobile-deployment simulator).
+//!    runtime (behind the `pjrt` feature), calibration, BN folding, §3.3
+//!    DWS rescaling, and an integer-only int8 inference engine (the
+//!    mobile-deployment simulator) driven by a precompiled execution
+//!    plan with `FAT_THREADS`-way parallelism.
 //!
 //! Python never runs at runtime; the Rust binary drives everything from
 //! the AOT artifacts in `artifacts/`.
+//!
+//! Environment knobs: `FAT_ARTIFACTS` (artifact dir, default
+//! `./artifacts`), `FAT_THREADS` (engine worker count, default = machine
+//! parallelism), `FAT_BENCH_ITERS` / `FAT_BENCH_MAX_SECS` (bench
+//! harness).
 
 pub mod coordinator;
 pub mod data;

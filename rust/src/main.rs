@@ -10,6 +10,7 @@
 use std::sync::Arc;
 
 use anyhow::Result;
+use fat::coordinator::evaluate::int8_accuracy;
 use fat::coordinator::{Pipeline, PipelineConfig};
 use fat::model::ModelStore;
 use fat::quant::export::QuantMode;
@@ -210,21 +211,4 @@ fn run_pipeline(
         (fp - q1) * 100.0
     );
     Ok(())
-}
-
-/// Accuracy of the integer engine over the val split.
-fn int8_accuracy(qm: &fat::int8::QModel, val: usize) -> Result<f64> {
-    use fat::data::{Batcher, Split};
-    let total = if val == 0 { fat::data::synth::VAL_SIZE } else { val };
-    let batcher = Batcher::new(Split::Val, (0..total as u64).collect(), 50);
-    let mut correct = 0usize;
-    let mut n = 0usize;
-    for (x, labels) in batcher.epoch_iter(0) {
-        let logits = qm.run_batch(&x)?;
-        let (c, b) =
-            fat::coordinator::evaluate::argmax_accuracy(&logits, &labels)?;
-        correct += c;
-        n += b;
-    }
-    Ok(correct as f64 / n as f64)
 }

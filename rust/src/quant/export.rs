@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::int8::engine::{AddParams, GapParams, QLayer, QModel, QNode};
+use crate::int8::plan::ExecPlan;
 use crate::int8::qtensor::to_i8_domain;
 use crate::model::store::SitesJson;
 use crate::model::{GraphDef, Op};
@@ -357,9 +358,13 @@ pub fn build_qmodel(
         }
     }
 
+    // Compile the execution plan once: topological schedule, dense
+    // parameter indices, liveness-based buffer slots (int8::plan).
+    let plan = ExecPlan::compile(g, nodes)?;
+
     Ok(QModel {
         graph: g.clone(),
-        nodes,
+        plan,
         input_qp: qp_of("input")?,
         param_bytes,
     })

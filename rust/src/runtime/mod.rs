@@ -3,11 +3,26 @@
 //!
 //! Python is never involved: the HLO text in `artifacts/` is the entire
 //! interchange (see /opt/xla-example/README.md for why text, not proto).
+//!
+//! The PJRT backing (the external `xla` crate) is gated behind the
+//! `pjrt` cargo feature so the crate builds on boxes without the PJRT
+//! C library. Without the feature, [`Runtime`] and [`Artifact`] are
+//! API-identical stubs that report a clear error at runtime; everything
+//! artifact-free (the int8 engine, quant math, data substrate) is
+//! unaffected.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod registry;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::Artifact;
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
 pub use registry::Registry;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Artifact, Runtime};

@@ -1,0 +1,55 @@
+//! No-PJRT stand-ins for the `client::Runtime` / `artifact::Artifact`
+//! pair (compiled when the `pjrt` feature is off). They keep the same
+//! API surface so every binary, bench and test
+//! builds unchanged; constructing the runtime reports a clear error, and
+//! artifact-gated code paths (which check for `artifacts/` first) skip
+//! exactly as they do before `make artifacts`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::ArtifactManifest;
+use crate::tensor::Tensor;
+
+const NO_PJRT: &str = "fat was built without the `pjrt` feature: the PJRT \
+runtime (and the AOT artifact paths) are unavailable. To enable it, add \
+the `xla` crate (PJRT CPU bindings) to rust/Cargo.toml [dependencies] \
+(e.g. a vendored checkout: xla = { path = \"vendor/xla\" }) and build \
+with `--features pjrt`; the int8 engine, quantization math and data \
+substrate work without it.";
+
+/// Stub PJRT client.
+pub struct Runtime;
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(NO_PJRT)
+    }
+
+    pub fn platform(&self) -> String {
+        "none (built without `pjrt`)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// Stub compiled artifact: carries the manifest, errors on execution.
+pub struct Artifact {
+    pub manifest: ArtifactManifest,
+}
+
+impl Artifact {
+    /// Load `<prefix>.manifest.json`; compilation is unavailable, so any
+    /// later [`Artifact::execute`] fails with a clear message.
+    pub fn load<P: AsRef<Path>>(_rt: &Runtime, prefix: P) -> Result<Self> {
+        let man = prefix.as_ref().with_extension("manifest.json");
+        Ok(Artifact { manifest: ArtifactManifest::load(&man)? })
+    }
+
+    pub fn execute(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::bail!("{}: {NO_PJRT}", self.manifest.name)
+    }
+}

@@ -21,6 +21,27 @@ impl Default for BenchOpts {
     }
 }
 
+impl BenchOpts {
+    /// Defaults with `FAT_BENCH_ITERS` / `FAT_BENCH_MAX_SECS` env
+    /// overrides, so thread-scaling runs (EXPERIMENTS.md §Perf) can be
+    /// lengthened without recompiling.
+    pub fn from_env() -> Self {
+        let mut o = BenchOpts::default();
+        if let Some(n) =
+            std::env::var("FAT_BENCH_ITERS").ok().and_then(|v| v.parse().ok())
+        {
+            o.iters = n;
+        }
+        if let Some(s) = std::env::var("FAT_BENCH_MAX_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+        {
+            o.max_secs = s;
+        }
+        o
+    }
+}
+
 /// Time `f` and print a stable summary line. Returns mean seconds.
 pub fn bench(name: &str, opts: &BenchOpts, mut f: impl FnMut()) -> f64 {
     for _ in 0..opts.warmup {
@@ -65,9 +86,23 @@ pub fn bench_throughput(
     mean
 }
 
+/// Print a stable `speedup=` line relating a baseline to a variant
+/// (used by the thread-scaling sweeps in `bench_int8`).
+pub fn report_speedup(name: &str, base_secs: f64, variant_secs: f64) -> f64 {
+    let s = base_secs / variant_secs.max(1e-12);
+    println!("BENCH {name} speedup={s:.2}x");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn speedup_ratio() {
+        assert!((report_speedup("x", 2.0, 1.0) - 2.0).abs() < 1e-9);
+        assert!(report_speedup("y", 1.0, 0.0) > 1.0);
+    }
 
     #[test]
     fn bench_runs_and_returns_mean() {

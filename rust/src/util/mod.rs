@@ -6,5 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;
+pub mod threads;
 
 pub use json::Json;
+pub use threads::fat_threads;

@@ -1,0 +1,69 @@
+//! Worker-count knob for the int8 engine (and any future parallel stage).
+//!
+//! `FAT_THREADS=<n>` pins the worker count; unset or invalid values fall
+//! back to the machine's available parallelism. The engine also accepts
+//! explicit counts through the `*_with` entry points
+//! (`QModel::run_batch_with`, `run_quant_with`, `gemm_i8_parallel`) — the
+//! env knob only feeds the default paths, so tests can sweep thread
+//! counts deterministically without touching the environment.
+
+use std::sync::OnceLock;
+
+/// Hard cap: more workers than this never helps the engine's shard sizes.
+pub const MAX_THREADS: usize = 256;
+
+/// Parse a `FAT_THREADS`-style value: positive integers only, capped.
+pub fn parse_threads(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .map(|n| n.min(MAX_THREADS))
+}
+
+/// Machine default when `FAT_THREADS` is unset.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// The engine's worker count: `$FAT_THREADS`, else available parallelism.
+/// Resolved once per process (the env var is read a single time).
+pub fn fat_threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        parse_threads(std::env::var("FAT_THREADS").ok().as_deref())
+            .unwrap_or_else(default_threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_positive_integers() {
+        assert_eq!(parse_threads(Some("4")), Some(4));
+        assert_eq!(parse_threads(Some(" 2 ")), Some(2));
+        assert_eq!(parse_threads(Some("1")), Some(1));
+    }
+
+    #[test]
+    fn parse_rejects_invalid() {
+        assert_eq!(parse_threads(Some("0")), None);
+        assert_eq!(parse_threads(Some("-3")), None);
+        assert_eq!(parse_threads(Some("many")), None);
+        assert_eq!(parse_threads(None), None);
+    }
+
+    #[test]
+    fn parse_caps_huge_values() {
+        assert_eq!(parse_threads(Some("100000")), Some(MAX_THREADS));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        assert!(default_threads() >= 1);
+        assert!(fat_threads() >= 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Equivalence tests for the planned/parallel int8 engine: the compiled
+//! plan + buffer arena + threaded kernels must be bit-exact with the
+//! sequential reference interpreter (`QModel::run_quant_ref`) and with
+//! themselves across thread counts {1, 2, 8}, for all four quantization
+//! modes and odd shapes. No artifacts are needed: the model is built
+//! synthetically through the real `quant::export::build_qmodel` path.
+
+use std::collections::BTreeMap;
+
+use fat::int8::{QModel, QTensor};
+use fat::model::store::{Site, SitesJson};
+use fat::model::{GraphDef, Op};
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::tensor::Tensor;
+use fat::util::prop;
+
+/// Residual branch + DWS chain + dense head; odd channel counts, odd
+/// input size, a stride-2 dwconv, and both relu flavours.
+const GRAPH: &str = r#"{
+  "name": "equiv", "num_classes": 4,
+  "nodes": [
+    {"id": "input", "op": "input", "inputs": [], "shape": [9, 9, 3]},
+    {"id": "c0", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1, "cin": 3, "cout": 5, "bias": true},
+    {"id": "r0", "op": "relu6", "inputs": ["c0"]},
+    {"id": "dw", "op": "dwconv", "inputs": ["r0"], "k": 3, "stride": 2, "ch": 5, "bias": true},
+    {"id": "r1", "op": "relu", "inputs": ["dw"]},
+    {"id": "c1", "op": "conv", "inputs": ["r1"], "k": 1, "stride": 1, "cin": 5, "cout": 7, "bias": true},
+    {"id": "c2", "op": "conv", "inputs": ["r1"], "k": 1, "stride": 1, "cin": 5, "cout": 7, "bias": true},
+    {"id": "ad", "op": "add", "inputs": ["c1", "c2"]},
+    {"id": "g", "op": "gap", "inputs": ["ad"]},
+    {"id": "d", "op": "dense", "inputs": ["g"], "cin": 7, "cout": 4, "bias": true}
+  ]}"#;
+
+/// Small stride-2 conv net over a 7x7x2 input (odd spatial remainders).
+const GRAPH_ODD: &str = r#"{
+  "name": "odd", "num_classes": 5,
+  "nodes": [
+    {"id": "input", "op": "input", "inputs": [], "shape": [7, 7, 2]},
+    {"id": "c0", "op": "conv", "inputs": ["input"], "k": 3, "stride": 2, "cin": 2, "cout": 3, "bias": true},
+    {"id": "r0", "op": "relu6", "inputs": ["c0"]},
+    {"id": "dw", "op": "dwconv", "inputs": ["r0"], "k": 3, "stride": 1, "ch": 3, "bias": true},
+    {"id": "r1", "op": "relu", "inputs": ["dw"]},
+    {"id": "g", "op": "gap", "inputs": ["r1"]},
+    {"id": "d", "op": "dense", "inputs": ["g"], "cin": 3, "cout": 5, "bias": true}
+  ]}"#;
+
+fn weights_for(g: &GraphDef) -> BTreeMap<String, Tensor> {
+    let mut w = BTreeMap::new();
+    let mut seed = 100u64;
+    for n in g.conv_like() {
+        let (wlen, cout) = match n.op {
+            Op::Conv => (n.k * n.k * n.cin * n.cout, n.cout),
+            Op::DwConv => (n.k * n.k * n.ch, n.ch),
+            Op::Dense => (n.cin * n.cout, n.cout),
+            _ => unreachable!(),
+        };
+        w.insert(
+            format!("{}.w", n.id),
+            Tensor::f32(vec![wlen], prop::f32s(seed, wlen, -0.6, 0.6)),
+        );
+        w.insert(
+            format!("{}.b", n.id),
+            Tensor::f32(vec![cout], prop::f32s(seed + 1, cout, -0.2, 0.2)),
+        );
+        seed += 2;
+    }
+    w
+}
+
+fn sites_for(g: &GraphDef) -> SitesJson {
+    SitesJson {
+        sites: g
+            .sites()
+            .into_iter()
+            .map(|(id, unsigned)| Site { id, unsigned })
+            .collect(),
+        channel_stats: vec![],
+        weight_order: g.folded_weight_order(),
+        val_acc_fp_pretrain: -1.0,
+    }
+}
+
+fn stats_for(s: &SitesJson) -> CalibStats {
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.5 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 3.0 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    st
+}
+
+fn build(graph: &str, mode: QuantMode) -> QModel {
+    let g = GraphDef::from_json(graph).unwrap();
+    let w = weights_for(&g);
+    let s = sites_for(&g);
+    let st = stats_for(&s);
+    let tr = Trained::identity(&g, mode, s.sites.len());
+    build_qmodel(&g, &w, &s, &st, mode, &tr).unwrap()
+}
+
+fn input_for(g: &GraphDef, batch: usize, seed: u64) -> Tensor {
+    let sh = g.node("input").unwrap().input_shape.clone().unwrap();
+    let len = batch * sh[0] * sh[1] * sh[2];
+    Tensor::f32(
+        vec![batch, sh[0], sh[1], sh[2]],
+        prop::f32s(seed, len, -0.5, 3.0),
+    )
+}
+
+fn quantized_input(qm: &QModel, x: &Tensor) -> QTensor {
+    QTensor::quantize(x.shape.clone(), x.as_f32().unwrap(), qm.input_qp)
+}
+
+#[test]
+fn planned_engine_matches_reference_all_modes() {
+    for mode in QuantMode::all() {
+        let qm = build(GRAPH, mode);
+        let x = input_for(&qm.graph, 5, 7);
+        let q = quantized_input(&qm, &x);
+        let want = qm.run_quant_ref(q.clone()).unwrap();
+        assert_eq!(want.shape, vec![5, 4]);
+        for t in [1usize, 2, 8] {
+            let got = qm.run_quant_with(q.clone(), t).unwrap();
+            assert_eq!(got.shape, want.shape, "{mode:?} t={t}");
+            assert_eq!(got.data, want.data, "{mode:?} t={t}");
+            assert_eq!(got.qp, want.qp, "{mode:?} t={t}");
+        }
+    }
+}
+
+#[test]
+fn planned_engine_matches_reference_odd_shapes() {
+    for mode in [QuantMode::SymScalar, QuantMode::AsymVector] {
+        let qm = build(GRAPH_ODD, mode);
+        for batch in [1usize, 3] {
+            let x = input_for(&qm.graph, batch, 11 + batch as u64);
+            let q = quantized_input(&qm, &x);
+            let want = qm.run_quant_ref(q.clone()).unwrap();
+            for t in [1usize, 2, 8] {
+                let got = qm.run_quant_with(q.clone(), t).unwrap();
+                assert_eq!(got.data, want.data, "{mode:?} b={batch} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_sharding_bit_exact_across_thread_counts() {
+    let qm = build(GRAPH, QuantMode::SymVector);
+    let x = input_for(&qm.graph, 7, 21); // odd batch vs every shard count
+    let base = qm.run_batch_with(&x, 1).unwrap();
+    assert_eq!(base.shape, vec![7, 4]);
+    for t in [2usize, 3, 8, 16] {
+        let got = qm.run_batch_with(&x, t).unwrap();
+        assert_eq!(got.shape, base.shape, "t={t}");
+        let a = base.as_f32().unwrap();
+        let b = got.as_f32().unwrap();
+        for i in 0..a.len() {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "t={t} i={i}");
+        }
+    }
+}
+
+#[test]
+fn run_batch_agrees_with_reference_interpreter() {
+    let qm = build(GRAPH, QuantMode::AsymScalar);
+    let x = input_for(&qm.graph, 4, 33);
+    let want = qm
+        .run_quant_ref(quantized_input(&qm, &x))
+        .unwrap()
+        .dequantize();
+    let got = qm.run_batch(&x).unwrap(); // env-default worker count
+    let g = got.as_f32().unwrap();
+    assert_eq!(g.len(), want.len());
+    for i in 0..want.len() {
+        assert_eq!(g[i].to_bits(), want[i].to_bits(), "logit {i}");
+    }
+}
+
+#[test]
+fn plan_reuses_buffers_and_skips_fused_relus() {
+    let qm = build(GRAPH, QuantMode::SymScalar);
+    // 7 compute nodes (c0, dw, c1, c2, ad, g, d); relus compile away
+    assert_eq!(qm.plan.steps.len(), 7);
+    assert!(qm.plan.steps.iter().all(|s| s.id != "r0" && s.id != "r1"));
+    // liveness reuse keeps the working set far below one-slot-per-node
+    assert!(
+        qm.plan.num_slots <= 4,
+        "expected <= 4 slots, got {}",
+        qm.plan.num_slots
+    );
+    assert!(qm.plan.steps.iter().any(|s| !s.frees.is_empty()));
+    // repeated runs over recycled buffers stay deterministic
+    let x = input_for(&qm.graph, 2, 5);
+    let q = quantized_input(&qm, &x);
+    let first = qm.run_quant_with(q.clone(), 2).unwrap();
+    let second = qm.run_quant_with(q, 2).unwrap();
+    assert_eq!(first.data, second.data);
+}

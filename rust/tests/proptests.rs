@@ -114,6 +114,27 @@ fn prop_gemm_matches_reference() {
 }
 
 #[test]
+fn prop_gemm_parallel_matches_reference_across_threads() {
+    prop::for_cases(59, 30, |case| {
+        let m = prop::usize_in(case, 0, 1, 33);
+        let k = prop::usize_in(case, 1, 1, 70);
+        let n = prop::usize_in(case, 2, 1, 40);
+        let zp = prop::usize_in(case, 3, 0, 33) as i32 - 16;
+        let a = prop::i8s(case + 300, m * k);
+        let b = prop::i8s(case + 400, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let want = gemm::gemm_ref(&a, zp, &b, m, k, n);
+        for threads in [1usize, 2, 8] {
+            let mut out = vec![0i32; m * n];
+            gemm::gemm_i8_parallel(
+                &a, zp, &b, &sums, m, k, n, &mut out, threads,
+            );
+            assert_eq!(out, want, "case {case}: ({m},{k},{n}) t={threads}");
+        }
+    });
+}
+
+#[test]
 fn prop_im2col_patches_contain_input_values_or_zp() {
     prop::for_cases(31, 30, |case| {
         let h = prop::usize_in(case, 0, 3, 12);

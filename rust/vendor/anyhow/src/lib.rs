@@ -1,0 +1,170 @@
+//! Minimal in-tree stand-in for the `anyhow` crate (this build box is
+//! offline — same policy as `fat::util`'s json/cli/bench shims).
+//!
+//! Implements exactly the API subset the `fat` crate uses: [`Result`],
+//! [`Error`], [`anyhow!`], [`bail!`], [`ensure!`] and the [`Context`]
+//! extension trait. Error values are formatted messages with a flat
+//! `context: cause` chain; backtraces and downcasting are not provided.
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A formatted, context-chained error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the error with higher-level context.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` —
+// exactly like the real anyhow — so this blanket conversion cannot
+// overlap the reflexive `From<Error> for Error` that `?` relies on.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Attach context to a fallible value (`Result` or `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn question_mark_passes_through_own_error() {
+        fn inner() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let v = 7;
+        let e = anyhow!("inline {v}");
+        assert_eq!(e.to_string(), "inline 7");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_and_context() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "need positive, got {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "need positive, got -1");
+        let r: Result<()> = io_fail().with_context(|| format!("loading {}", "cfg"));
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("loading cfg: "), "{msg}");
+        let o: Option<i32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
