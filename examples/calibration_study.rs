@@ -1,16 +1,17 @@
 //! **Calibration study**: compares static threshold calibrators (max /
 //! percentile / KL over activation histograms) against FAT's trained
 //! thresholds — the motivation for training α rather than picking a
-//! better static rule (paper §3.1).
+//! better static rule (paper §3.1). Each static calibrator runs through
+//! the same `QuantSpec` path the launcher's `--calibrator` flag uses.
 //!
 //!   cargo run --release --example calibration_study -- [--model M]
 
 use std::sync::Arc;
 
 use anyhow::Result;
-use fat::coordinator::{Pipeline, PipelineConfig};
-use fat::quant::calibrate::{threshold_from_hist, Calibrator};
-use fat::quant::export::QuantMode;
+use fat::coordinator::PipelineConfig;
+use fat::quant::calibrate::Calibrator;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 use fat::util::cli::Args;
 
@@ -22,52 +23,50 @@ fn main() -> Result<()> {
         .unwrap_or_else(fat::artifacts_dir);
     let model = args.get_or("model", "mnas_mini_10");
     let val = args.usize_or("val", 500);
-    let mode = QuantMode::parse(args.get_or("mode", "sym_scalar"))?;
+    let spec = QuantSpec::parse(args.get_or("mode", "sym_scalar"), "max")?;
 
     let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu()?)));
-    let p = Pipeline::new(reg, &artifacts, model)?;
+    let session = QuantSession::open(reg, &artifacts, model)?;
 
-    println!("=== calibration study: {model} [{}] ===", mode.name());
-    let fp = p.fp_accuracy(val)?;
+    println!("=== calibration study: {model} [{}] ===", spec.mode().name());
+    let fp = session.fp_accuracy(val)?;
     println!("FP: {:.2}%", fp * 100.0);
 
-    let stats = p.calibrate(100)?;
-    let tr0 = p.identity_trainables(mode)?;
-    let max_acc = p.quant_accuracy(mode, &stats, &tr0, val)?;
+    let cal = session.calibrate(CalibOpts::images(100))?;
+    let max_acc = cal.identity(&spec)?.quant_accuracy(val)?;
     println!("max calibrator (paper default): {:.2}%", max_acc * 100.0);
 
-    match p.calibrate_hist(&stats, 100) {
-        Ok(hists) => {
-            for (name, cal) in [
-                ("p99.99", Calibrator::Percentile(9999)),
-                ("p99.9", Calibrator::Percentile(9990)),
-                ("p99", Calibrator::Percentile(9900)),
-                ("KL", Calibrator::Kl),
-            ] {
-                let mut adj = stats.clone();
-                for (i, mm) in adj.site_minmax.iter_mut().enumerate() {
-                    let t = threshold_from_hist(cal, &hists[i], mm.min, mm.max);
-                    mm.min = mm.min.max(-t);
-                    mm.max = mm.max.min(t);
-                }
-                let acc = p.quant_accuracy(mode, &adj, &tr0, val)?;
-                println!("{name:>8} calibrator: {:.2}%", acc * 100.0);
+    for c in [
+        Calibrator::Percentile(9999),
+        Calibrator::Percentile(9990),
+        Calibrator::Percentile(9900),
+        Calibrator::Kl,
+    ] {
+        match cal.identity(&spec.with_calibrator(c)) {
+            Ok(th) => println!(
+                "{:>8} calibrator: {:.2}%",
+                c.name(),
+                th.quant_accuracy(val)? * 100.0
+            ),
+            Err(e) => {
+                println!("(calibrator {} unavailable: {e})", c.name());
+                break;
             }
         }
-        Err(e) => println!("(calib_hist artifact unavailable: {e})"),
     }
 
     // FAT: trained thresholds (short schedule)
     let cfg = PipelineConfig {
         model: model.to_string(),
-        mode: mode.name().to_string(),
+        mode: spec.mode().name().to_string(),
         val_images: val,
         max_steps: args.usize_or("max-steps", 60),
         epochs: 2,
         ..Default::default()
     };
-    let (tr, _) = p.finetune(mode, &stats, &cfg, |_, _, _| {})?;
-    let fat_acc = p.quant_accuracy(mode, &stats, &tr, val)?;
+    let fat_acc = cal
+        .finetune(&spec, &cfg.finetune_opts(false), |_, _, _| {})?
+        .quant_accuracy(val)?;
     println!("FAT trained thresholds: {:.2}%", fat_acc * 100.0);
     println!(
         "\nFAT vs best-static gap is the paper's core claim: trained scales \

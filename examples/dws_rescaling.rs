@@ -1,15 +1,16 @@
 //! **§3.3 walk-through**: mutual rescaling of DWS → ReLU6 → Conv weights
 //! on MobileNet-v2, showing per-pattern threshold spreads, locked
 //! channels, and FP-output preservation — the machinery behind the §4.2
-//! ladder.
+//! ladder. Runs as a staged session: the `dws_rescale` stage transition
+//! mutates the weights and re-calibrates automatically.
 //!
 //!   cargo run --release --example dws_rescaling
 
 use std::sync::Arc;
 
 use anyhow::Result;
-use fat::coordinator::Pipeline;
 use fat::quant::dws;
+use fat::quant::session::{CalibOpts, QuantSession};
 use fat::runtime::{Registry, Runtime};
 use fat::util::cli::Args;
 
@@ -23,10 +24,10 @@ fn main() -> Result<()> {
     let val = args.usize_or("val", 300);
 
     let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu()?)));
-    let mut p = Pipeline::new(reg, &artifacts, model)?;
+    let session = QuantSession::open(reg, &artifacts, model)?;
 
     println!("=== §3.3 DWS rescaling on {model} ===");
-    let patterns = dws::find_patterns(&p.graph);
+    let patterns = dws::find_patterns(&session.core().graph);
     println!("found {} DWS→act→1x1-conv chains:", patterns.len());
     for pat in &patterns {
         println!(
@@ -36,13 +37,14 @@ fn main() -> Result<()> {
     }
 
     // FP reference before rescaling
-    let fp_before = p.fp_accuracy(val)?;
+    let fp_before = session.fp_accuracy(val)?;
 
-    let stats = p.calibrate(100)?;
-    let reports = p.dws_rescale(&stats)?;
+    let cal = session.calibrate(CalibOpts::images(100))?;
+    drop(session); // rescale below then mutates the weights in place
+    let cal = cal.dws_rescale()?;
     println!("\nper-pattern rescale report:");
     println!("  {:<22} {:>8} {:>14} {:>13}", "dw layer", "locked", "spread before", "spread after");
-    for r in &reports {
+    for r in cal.rescale_reports() {
         println!(
             "  {:<22} {:>4}/{:<3} {:>14.2} {:>13.2}",
             r.dw, r.locked, r.channels, r.spread_before, r.spread_after
@@ -51,13 +53,14 @@ fn main() -> Result<()> {
 
     // FP must be (near-)preserved: the rescale is function-preserving on
     // calibration-covered ranges (exactly so for ReLU patterns).
-    let fp_after = p.fp_accuracy(val)?;
+    let fp_after = cal.fp_accuracy(val)?;
     println!(
         "\nFP accuracy before/after rescale: {:.2}% / {:.2}%  (must match)",
         fp_before * 100.0,
         fp_after * 100.0
     );
 
+    let reports = cal.rescale_reports();
     let mean_spread_before: f32 =
         reports.iter().map(|r| r.spread_before).sum::<f32>() / reports.len() as f32;
     let mean_spread_after: f32 =

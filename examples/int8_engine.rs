@@ -1,6 +1,7 @@
 //! **int8 engine study**: the deployment simulator in isolation —
-//! latency/throughput of integer-only inference vs the PJRT f32 forward,
-//! model-size accounting, and fake-quant agreement.
+//! latency/throughput of the `Int8Engine` serving handle vs the PJRT
+//! f32 forward, model-size accounting, fake-quant agreement, and the
+//! raw-bytes `infer` path.
 //!
 //!   cargo run --release --example int8_engine -- [--model M] [--mode MODE]
 
@@ -8,9 +9,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use fat::coordinator::Pipeline;
 use fat::data::{Batcher, Split};
-use fat::quant::export::QuantMode;
+use fat::int8::serve::EngineOptions;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 use fat::util::cli::Args;
 use fat::util::threads::fat_threads;
@@ -22,38 +23,59 @@ fn main() -> Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(fat::artifacts_dir);
     let model = args.get_or("model", "mobilenet_v2_mini");
-    let mode = QuantMode::parse(args.get_or("mode", "sym_vector"))?;
+    let spec = QuantSpec::parse(
+        args.get_or("mode", "sym_vector"),
+        args.get_or("calibrator", "max"),
+    )?;
     let val = args.usize_or("val", 300);
 
     let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu()?)));
-    let p = Pipeline::new(reg, &artifacts, model)?;
+    let session = QuantSession::open(reg, &artifacts, model)?;
 
-    println!("=== int8 engine: {model} [{}] ===", mode.name());
-    let stats = p.calibrate(100)?;
-    let trained = p.identity_trained(mode);
-    let qm = p.export_int8(mode, &stats, &trained)?;
+    println!("=== int8 engine: {model} [{}] ===", spec.mode().name());
+    let cal = session.calibrate(CalibOpts::images(100))?;
+    let th = cal.identity(&spec)?;
+    let engine = th.serve(EngineOptions::default())?;
 
     // model size: int8 weights + int32 biases vs f32 weights
     let f32_bytes: usize =
-        p.weights.values().map(|t| t.len() * 4).sum();
+        session.core().weights.values().map(|t| t.len() * 4).sum();
     println!(
         "model size: f32 {:.1} KiB → int8 {:.1} KiB ({:.2}x smaller)",
         f32_bytes as f64 / 1024.0,
-        qm.param_bytes as f64 / 1024.0,
-        f32_bytes as f64 / qm.param_bytes as f64
+        engine.param_bytes() as f64 / 1024.0,
+        f32_bytes as f64 / engine.param_bytes() as f64
     );
 
     // agreement with the fake-quant AOT path
-    let tr0 = p.identity_trainables(mode)?;
-    let fake = p.quant_accuracy(mode, &stats, &tr0, val)?;
-    let engine = fat::coordinator::experiments::int8_accuracy(&qm, val)?;
+    let fake = th.quant_accuracy(val)?;
+    let acc = fat::coordinator::evaluate::int8_accuracy(&engine, val)?;
     println!(
         "accuracy: fake-quant (XLA) {:.2}%  vs int8 engine {:.2}%",
         fake * 100.0,
-        engine * 100.0
+        acc * 100.0
     );
 
-    // throughput: integer engine (thread sweep) vs PJRT f32 forward
+    // single-image serving path: raw u8 pixels through Int8Engine::infer
+    let (x0, _) = fat::data::loader::batch(Split::Val, &[0]);
+    let bytes: Vec<u8> = x0
+        .as_f32()?
+        .iter()
+        .map(|&v| (v * 255.0).round().clamp(0.0, 255.0) as u8)
+        .collect();
+    let logits = engine.infer(&bytes)?;
+    println!(
+        "infer(&[u8]): {} logits, argmax {}",
+        logits.len(),
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    );
+
+    // throughput: serving handle (thread sweep) vs PJRT f32 forward
     let batcher = Batcher::new(Split::Val, (0..200u64).collect(), 50);
     let batches: Vec<_> = batcher.epoch(0);
 
@@ -66,7 +88,7 @@ fn main() -> Result<()> {
     for &workers in &sweep {
         let t = Instant::now();
         for (x, _) in &batches {
-            let _ = qm.run_batch_with(x, workers)?;
+            let _ = engine.infer_batch_with(x, workers)?;
         }
         let ips = 200.0 / t.elapsed().as_secs_f64();
         println!("  int8 engine @ {workers} worker(s): {ips:.1} img/s");
@@ -75,7 +97,8 @@ fn main() -> Result<()> {
         }
     }
 
-    let art = p.artifact("fp_forward")?;
+    let core = session.core();
+    let art = core.artifact("fp_forward")?;
     // fp_forward expects batch 100; re-batch accordingly
     let b100 = Batcher::new(Split::Val, (0..200u64).collect(), 100);
     let t = Instant::now();
@@ -83,7 +106,7 @@ fn main() -> Result<()> {
         let inputs = fat::coordinator::marshal::build_inputs(
             &art.manifest,
             &[
-                fat::coordinator::marshal::Group::Map(&p.weights),
+                fat::coordinator::marshal::Group::Map(&core.weights),
                 fat::coordinator::marshal::Group::Single(&x),
             ],
         )?;

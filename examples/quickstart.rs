@@ -1,16 +1,16 @@
-//! **Quickstart — the end-to-end driver** (DESIGN.md §5).
+//! **Quickstart — the end-to-end driver** (DESIGN.md §5–§6).
 //!
-//! Runs the complete FAT system on a real small workload, proving all
-//! three layers compose:
+//! Runs the complete FAT system on a real small workload through the
+//! staged `QuantSession` API, proving all three layers compose:
 //!
-//!   1. load the pretrained FP model + AOT artifacts (L2/L1 products)
+//!   1. open the pretrained FP model + AOT artifacts (L2/L1 products)
 //!   2. evaluate FP accuracy through the PJRT runtime
 //!   3. calibrate on the paper's 100 training images
-//!   4. quantize (vector, asymmetric) without fine-tuning
+//!   4. quantize (vector, asymmetric) without fine-tuning (`identity`)
 //!   5. FAT fine-tune: RMSE distillation on the unlabeled 10% subset,
 //!      Adam on threshold scales, cosine annealing with optimizer reset
-//!   6. re-evaluate, export the int8 model, run it on the integer-only
-//!      engine (the mobile-deployment simulator), report the ladder.
+//!   6. re-evaluate, export the int8 model into an `Int8Engine` serving
+//!      handle (the mobile-deployment simulator), report the ladder.
 //!
 //!   cargo run --release --example quickstart -- [--full]
 //!
@@ -22,8 +22,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use fat::coordinator::{Pipeline, PipelineConfig};
-use fat::quant::export::QuantMode;
+use fat::coordinator::PipelineConfig;
+use fat::int8::serve::EngineOptions;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 use fat::util::cli::Args;
 
@@ -34,18 +35,21 @@ fn main() -> Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(fat::artifacts_dir);
     let model = args.get_or("model", "mnas_mini_10");
-    let mode = QuantMode::parse(args.get_or("mode", "asym_vector"))?;
+    let spec = QuantSpec::parse(
+        args.get_or("mode", "asym_vector"),
+        args.get_or("calibrator", "max"),
+    )?;
 
     let mut cfg = PipelineConfig::default();
     cfg.model = model.to_string();
-    cfg.mode = mode.name().to_string();
+    cfg.mode = spec.mode().name().to_string();
     if !args.flag("full") {
         cfg = cfg.fast();
         cfg.max_steps = args.usize_or("max-steps", 60);
     }
     cfg.val_images = args.usize_or("val", cfg.val_images);
 
-    println!("=== FAT quickstart: {model} [{}] ===", mode.name());
+    println!("=== FAT quickstart: {model} [{}] ===", spec.mode().name());
     let rt = Arc::new(Runtime::cpu()?);
     println!(
         "PJRT platform: {} ({} device)",
@@ -53,11 +57,13 @@ fn main() -> Result<()> {
         rt.device_count()
     );
     let reg = Arc::new(Registry::new(rt));
-    let p = Pipeline::new(reg, &artifacts, model)?;
+
+    // stage 0: open (loads + BN-folds the model)
+    let session = QuantSession::open(reg, &artifacts, model)?;
 
     // 1-2: FP baseline through the AOT fp_forward artifact
     let t = Instant::now();
-    let fp = p.fp_accuracy(cfg.val_images)?;
+    let fp = session.fp_accuracy(cfg.val_images)?;
     println!(
         "[1] FP accuracy        {:.2}%   ({:.1}s)",
         fp * 100.0,
@@ -66,26 +72,26 @@ fn main() -> Result<()> {
 
     // 3: calibration (paper: 100 images from the train set, unlabeled)
     let t = Instant::now();
-    let stats = p.calibrate(cfg.calib_images)?;
+    let cal = session.calibrate(CalibOpts::images(cfg.calib_images))?;
     println!(
         "[2] calibrated {} images → {} sites ({:.1}s)",
         cfg.calib_images,
-        stats.site_minmax.len(),
+        cal.stats().site_minmax.len(),
         t.elapsed().as_secs_f64()
     );
 
-    // 4: quantization without fine-tuning
-    let tr0 = p.identity_trainables(mode)?;
-    let q0 = p.quant_accuracy(mode, &stats, &tr0, cfg.val_images)?;
+    // 4: quantization without fine-tuning (identity thresholds, α = 1)
+    let q0 = cal.identity(&spec)?.quant_accuracy(cfg.val_images)?;
     println!("[3] quant, no finetune {:.2}%", q0 * 100.0);
 
     // 5: FAT fine-tuning (RMSE distillation, unlabeled)
     let t = Instant::now();
-    let (tr, losses) = p.finetune(mode, &stats, &cfg, |step, loss, _lr| {
+    let th = cal.finetune(&spec, &cfg.finetune_opts(false), |step, loss, _lr| {
         if step % 20 == 0 {
             println!("      step {step:>4}  rmse {loss:.4}");
         }
     })?;
+    let losses = th.losses();
     println!(
         "[4] FAT fine-tune: {} steps, rmse {:.4} → {:.4} ({:.1}s)",
         losses.len(),
@@ -94,20 +100,19 @@ fn main() -> Result<()> {
         t.elapsed().as_secs_f64()
     );
 
-    // 6: re-evaluate + int8 deployment
-    let q1 = p.quant_accuracy(mode, &stats, &tr, cfg.val_images)?;
+    // 6: re-evaluate + int8 deployment behind the serving handle
+    let q1 = th.quant_accuracy(cfg.val_images)?;
     println!("[5] quant, FAT         {:.2}%", q1 * 100.0);
 
-    let trained = p.trained_of_map(mode, &tr)?;
-    let qm = p.export_int8(mode, &stats, &trained)?;
+    let engine = th.serve(EngineOptions::default())?;
     let t = Instant::now();
     let val8 = cfg.val_images.clamp(100, 500);
-    let a8 = fat::coordinator::experiments::int8_accuracy(&qm, val8)?;
+    let a8 = fat::coordinator::evaluate::int8_accuracy(&engine, val8)?;
     let dt = t.elapsed().as_secs_f64();
     println!(
         "[6] int8 engine        {:.2}%  ({} int8 param bytes, {:.1} img/s)",
         a8 * 100.0,
-        qm.param_bytes,
+        engine.param_bytes(),
         val8 as f64 / dt
     );
 

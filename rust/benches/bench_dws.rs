@@ -5,8 +5,9 @@
 use std::sync::Arc;
 
 use fat::coordinator::experiments::{MOBILENET_SPREAD_LOG2, SPREAD_SEED};
-use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::coordinator::PipelineConfig;
 use fat::quant::dws;
+use fat::quant::session::{CalibOpts, QuantSession};
 use fat::runtime::{Registry, Runtime};
 use fat::util::bench::{bench, BenchOpts};
 
@@ -18,30 +19,33 @@ fn main() {
     }
     let opts = BenchOpts { warmup: 1, iters: 10, max_secs: 60.0 };
     let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu().unwrap())));
-    let p = Pipeline::new(reg.clone(), &artifacts, "mobilenet_v2_mini").unwrap();
+    let session =
+        QuantSession::open(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let core = session.core();
 
     bench("dws_find_patterns", &opts, || {
-        std::hint::black_box(dws::find_patterns(&p.graph).len());
+        std::hint::black_box(dws::find_patterns(&core.graph).len());
     });
 
-    let stats = p.calibrate(50).unwrap();
-    let ch_max: std::collections::BTreeMap<String, Vec<f32>> = stats
+    let cal = session.calibrate(CalibOpts::images(50)).unwrap();
+    let ch_max: std::collections::BTreeMap<String, Vec<f32>> = cal
+        .stats()
         .channel_minmax
         .iter()
         .map(|(k, v)| (k.clone(), v.iter().map(|m| m.max).collect()))
         .collect();
     bench("dws_rescale_model", &opts, || {
-        let mut w = p.weights.clone();
+        let mut w = core.weights.clone();
         std::hint::black_box(
-            dws::rescale_model(&p.graph, &mut w, &ch_max).unwrap().len(),
+            dws::rescale_model(&core.graph, &mut w, &ch_max).unwrap().len(),
         );
     });
 
     bench("dws_inject_spread", &opts, || {
-        let mut w = p.weights.clone();
+        let mut w = core.weights.clone();
         std::hint::black_box(
             dws::inject_spread(
-                &p.graph,
+                &core.graph,
                 &mut w,
                 SPREAD_SEED,
                 MOBILENET_SPREAD_LOG2,
@@ -54,10 +58,12 @@ fn main() {
     let mut cfg = PipelineConfig::default();
     cfg.max_steps = 1;
     cfg.epochs = 1;
+    let fopts = cfg.finetune_opts(true);
+    let spec = fat::quant::QuantSpec::default(); // max calibrator
     let sopts = BenchOpts { warmup: 1, iters: 3, max_secs: 60.0 };
     bench("pointwise_finetune_step", &sopts, || {
         std::hint::black_box(
-            p.finetune_pointwise(&stats, &cfg, |_, _, _| {})
+            cal.finetune_pointwise(&spec, &fopts, |_, _, _| {})
                 .unwrap()
                 .1
                 .len(),

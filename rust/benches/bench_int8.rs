@@ -7,9 +7,11 @@
 use std::sync::Arc;
 
 use fat::int8::engine::QLayer;
+use fat::int8::serve::EngineOptions;
 use fat::int8::{gemm, im2col, ops, qtensor::QTensor};
 use fat::quant::export::QuantMode;
 use fat::quant::scale::QParams;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::util::bench::{bench, bench_throughput, report_speedup, BenchOpts};
 use fat::util::prop;
 use fat::util::threads::fat_threads;
@@ -94,17 +96,17 @@ fn main() {
             }
         };
         let reg = Arc::new(fat::runtime::Registry::new(Arc::new(rt)));
-        let p = fat::coordinator::Pipeline::new(
-            reg,
-            &artifacts,
-            "mobilenet_v2_mini",
-        )
-        .unwrap();
-        let stats = p.calibrate(25).unwrap();
-        let trained = p.identity_trained(QuantMode::SymVector);
-        let qm = p
-            .export_int8(QuantMode::SymVector, &stats, &trained)
+        let th = QuantSession::open(reg, &artifacts, "mobilenet_v2_mini")
+            .unwrap()
+            .calibrate(CalibOpts::images(25))
+            .unwrap()
+            .identity(&QuantSpec::from_mode(QuantMode::SymVector))
             .unwrap();
+        let qm = th.export().unwrap();
+        // wrap the same compiled model (don't export twice) so the
+        // fresh-vs-pooled comparison below runs identical plans
+        let engine =
+            fat::int8::Int8Engine::new(qm.clone(), EngineOptions::default());
         let (x, _) = fat::data::loader::batch(
             fat::data::Split::Val,
             &(0..50).collect::<Vec<_>>(),
@@ -117,7 +119,7 @@ fn main() {
                 50,
                 || {
                     std::hint::black_box(
-                        qm.run_batch_with(&x, t).unwrap().len(),
+                        engine.infer_batch_with(&x, t).unwrap().len(),
                     );
                 },
             );
@@ -131,6 +133,41 @@ fn main() {
                 );
             }
         }
+
+        // engine-handle overhead: a fresh ExecState per call (bare
+        // QModel::run_batch_with) vs the handle's pooled per-worker
+        // states (Int8Engine::infer_batch_with)
+        for t in [1usize, 4] {
+            let fresh = bench_throughput(
+                &format!("int8_mobilenet_fresh_state_t{t}"),
+                &opts,
+                50,
+                || {
+                    std::hint::black_box(
+                        qm.run_batch_with(&x, t).unwrap().len(),
+                    );
+                },
+            );
+            let pooled = bench_throughput(
+                &format!("int8_mobilenet_pooled_state_t{t}"),
+                &opts,
+                50,
+                || {
+                    std::hint::black_box(
+                        engine.infer_batch_with(&x, t).unwrap().len(),
+                    );
+                },
+            );
+            report_speedup(
+                &format!("int8_mobilenet_pooled_vs_fresh_t{t}"),
+                fresh,
+                pooled,
+            );
+        }
+        println!(
+            "engine pool: {} resting state(s) after the sweep",
+            engine.pooled_states()
+        );
     } else {
         println!("SKIP int8 whole-model bench (run `make artifacts`)");
     }

@@ -8,6 +8,7 @@ use std::sync::Arc;
 use fat::coordinator::experiments::{Ctx, TABLE_MODELS};
 use fat::coordinator::PipelineConfig;
 use fat::quant::export::QuantMode;
+use fat::quant::session::{CalibOpts, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 use fat::util::bench::{bench, BenchOpts};
 
@@ -22,27 +23,32 @@ fn main() {
         &artifacts,
     );
     let opts = BenchOpts { warmup: 0, iters: 3, max_secs: 120.0 };
+    let spec = QuantSpec::from_mode(QuantMode::SymScalar);
     for model in TABLE_MODELS {
-        let p = ctx.pipeline(model).unwrap();
+        let session = ctx.session(model).unwrap();
         bench(&format!("t1_calibrate_100_{model}"), &opts, || {
-            std::hint::black_box(p.calibrate(100).unwrap().batches);
-        });
-        let stats = p.calibrate(100).unwrap();
-        let tr = p.identity_trainables(QuantMode::SymScalar).unwrap();
-        bench(&format!("t1_eval_500_{model}"), &opts, || {
             std::hint::black_box(
-                p.quant_accuracy(QuantMode::SymScalar, &stats, &tr, 500)
-                    .unwrap(),
+                session
+                    .calibrate(CalibOpts::images(100))
+                    .unwrap()
+                    .stats()
+                    .batches,
             );
+        });
+        let cal = session.calibrate(CalibOpts::images(100)).unwrap();
+        let th = cal.identity(&spec).unwrap();
+        bench(&format!("t1_eval_500_{model}"), &opts, || {
+            std::hint::black_box(th.quant_accuracy(500).unwrap());
         });
         let mut cfg = PipelineConfig::default();
         cfg.max_steps = 1;
         cfg.epochs = 1;
+        let fopts = cfg.finetune_opts(false);
         bench(&format!("t1_finetune_step_{model}"), &opts, || {
             std::hint::black_box(
-                p.finetune(QuantMode::SymScalar, &stats, &cfg, |_, _, _| {})
+                cal.finetune(&spec, &fopts, |_, _, _| {})
                     .unwrap()
-                    .1
+                    .losses()
                     .len(),
             );
         });

@@ -7,6 +7,7 @@ use std::sync::Arc;
 use fat::coordinator::experiments::{Ctx, TABLE_MODELS};
 use fat::coordinator::PipelineConfig;
 use fat::quant::export::QuantMode;
+use fat::quant::session::{CalibOpts, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 use fat::util::bench::{bench, BenchOpts};
 
@@ -22,30 +23,33 @@ fn main() {
     );
     let opts = BenchOpts { warmup: 0, iters: 3, max_secs: 120.0 };
     for model in TABLE_MODELS {
-        let p = ctx.pipeline(model).unwrap();
-        let stats = p.calibrate(100).unwrap();
+        let cal = ctx
+            .session(model)
+            .unwrap()
+            .calibrate(CalibOpts::images(100))
+            .unwrap();
         for mode in [QuantMode::SymVector, QuantMode::AsymVector] {
-            let tr = p.identity_trainables(mode).unwrap();
+            let spec = QuantSpec::from_mode(mode);
+            let th = cal.identity(&spec).unwrap();
             bench(
                 &format!("t2_eval_500_{model}_{}", mode.name()),
                 &opts,
                 || {
-                    std::hint::black_box(
-                        p.quant_accuracy(mode, &stats, &tr, 500).unwrap(),
-                    );
+                    std::hint::black_box(th.quant_accuracy(500).unwrap());
                 },
             );
             let mut cfg = PipelineConfig::default();
             cfg.max_steps = 1;
             cfg.epochs = 1;
+            let fopts = cfg.finetune_opts(false);
             bench(
                 &format!("t2_finetune_step_{model}_{}", mode.name()),
                 &opts,
                 || {
                     std::hint::black_box(
-                        p.finetune(mode, &stats, &cfg, |_, _, _| {})
+                        cal.finetune(&spec, &fopts, |_, _, _| {})
                             .unwrap()
-                            .1
+                            .losses()
                             .len(),
                     );
                 },

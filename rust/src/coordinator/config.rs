@@ -7,6 +7,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::finetune::FinetuneOpts;
+
 /// Full configuration of one FAT pipeline run.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -14,6 +16,9 @@ pub struct PipelineConfig {
     pub model: String,
     /// quantization mode: sym_scalar | sym_vector | asym_scalar | asym_vector
     pub mode: String,
+    /// static threshold calibrator: max | p99 | p999 | p9999 | kl
+    /// (paper default: max; others need the `calib_hist` artifact)
+    pub calibrator: String,
     /// calibration images (paper: 100)
     pub calib_images: usize,
     /// fine-tune epochs over the unlabeled subset (paper: 6-8)
@@ -42,6 +47,7 @@ impl Default for PipelineConfig {
         PipelineConfig {
             model: "mobilenet_v2_mini".into(),
             mode: "sym_scalar".into(),
+            calibrator: "max".into(),
             calib_images: 100,
             epochs: 6,
             finetune_stride: 10,
@@ -74,6 +80,7 @@ impl PipelineConfig {
             match k {
                 "model" => c.model = v.to_string(),
                 "mode" => c.mode = v.to_string(),
+                "calibrator" => c.calibrator = v.to_string(),
                 "calib_images" => c.calib_images = v.parse()?,
                 "epochs" => c.epochs = v.parse()?,
                 "finetune_stride" => c.finetune_stride = v.parse()?,
@@ -102,6 +109,24 @@ impl PipelineConfig {
         self.max_steps = 40;
         self.val_images = 500;
         self
+    }
+
+    /// The fine-tune stage's options (`pointwise` switches to the much
+    /// smaller §4.2 point-wise learning rate).
+    pub fn finetune_opts(&self, pointwise: bool) -> FinetuneOpts {
+        FinetuneOpts {
+            epochs: self.epochs,
+            stride: self.finetune_stride,
+            lr: if pointwise { self.pw_lr } else { self.lr },
+            cycle: self.cycle,
+            max_steps: self.max_steps,
+            seed: self.seed,
+        }
+    }
+
+    /// The quantization spec encoded by `mode` + `calibrator`.
+    pub fn quant_spec(&self) -> Result<crate::quant::QuantSpec> {
+        crate::quant::QuantSpec::parse(&self.mode, &self.calibrator)
     }
 }
 
@@ -133,5 +158,30 @@ mod tests {
     #[test]
     fn rejects_unknown_keys() {
         assert!(PipelineConfig::from_str("nope = 3").is_err());
+    }
+
+    #[test]
+    fn calibrator_key_flows_into_spec() {
+        let c = PipelineConfig::from_str(
+            "mode = \"asym_vector\"\ncalibrator = \"p999\"\n",
+        )
+        .unwrap();
+        let spec = c.quant_spec().unwrap();
+        assert_eq!(spec.mode(), crate::quant::QuantMode::AsymVector);
+        assert_eq!(
+            spec.calibrator,
+            crate::quant::calibrate::Calibrator::Percentile(9990)
+        );
+        // default is the paper's max calibrator
+        let spec = PipelineConfig::default().quant_spec().unwrap();
+        assert_eq!(spec.calibrator, crate::quant::calibrate::Calibrator::Max);
+    }
+
+    #[test]
+    fn finetune_opts_pick_lr() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.finetune_opts(false).lr, c.lr);
+        assert_eq!(c.finetune_opts(true).lr, c.pw_lr);
+        assert_eq!(c.finetune_opts(false).max_steps, c.max_steps);
     }
 }

@@ -57,11 +57,12 @@ pub fn accuracy_with(
 
 /// Accuracy of the integer-only int8 engine over the val split
 /// (`val_images` of 0 = full split). The engine batch-shards each
-/// 50-image batch across `$FAT_THREADS` workers internally, so this is
-/// the canonical (and parallel) int8 evaluation used by the launcher,
-/// the experiment drivers and the benches.
+/// 50-image batch across its configured workers and reuses its pooled
+/// execution states, so this is the canonical (and parallel) int8
+/// evaluation used by the launcher, the experiment drivers and the
+/// benches.
 pub fn int8_accuracy(
-    qm: &crate::int8::QModel,
+    engine: &crate::int8::Int8Engine,
     val_images: usize,
 ) -> Result<f64> {
     let total = if val_images == 0 {
@@ -73,7 +74,7 @@ pub fn int8_accuracy(
     let mut correct = 0usize;
     let mut seen = 0usize;
     for (x, labels) in batcher.epoch_iter(0) {
-        let logits = qm.run_batch(&x)?;
+        let logits = engine.infer_batch(&x)?;
         let (c, b) = argmax_accuracy(&logits, &labels)?;
         correct += c;
         seen += b;

@@ -1,20 +1,20 @@
 //! Experiment drivers regenerating every table and figure of the paper
 //! (DESIGN.md §4): shared by the `table1`/`table2`/`fig12`/`dws_ladder`/
-//! `ablations` binaries and the bench harnesses.
+//! `ablations` binaries and the bench harnesses. All drivers run on the
+//! staged `quant::session` API.
 
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::quant::calibrate::{threshold_from_hist, Calibrator};
+use crate::int8::serve::EngineOptions;
+use crate::quant::calibrate::Calibrator;
 use crate::quant::export::QuantMode;
+use crate::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use crate::runtime::Registry;
-use crate::tensor::Tensor;
 
 use super::config::PipelineConfig;
-use super::pipeline::Pipeline;
 use super::report::Report;
 
 pub struct Ctx {
@@ -27,8 +27,9 @@ impl Ctx {
         Ctx { reg, artifacts: artifacts.as_ref().to_path_buf() }
     }
 
-    pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
-        Pipeline::new(self.reg.clone(), &self.artifacts, model)
+    /// Open a staged quantization session for `model`.
+    pub fn session(&self, model: &str) -> Result<QuantSession> {
+        QuantSession::open(self.reg.clone(), &self.artifacts, model)
     }
 
     pub fn results_dir(&self) -> PathBuf {
@@ -46,12 +47,12 @@ pub const TABLE_MODELS: [&str; 3] =
 pub const MOBILENET_SPREAD_LOG2: f32 = 7.0;
 pub const SPREAD_SEED: u64 = 0xD15;
 
-fn prepare(ctx: &Ctx, model: &str) -> Result<Pipeline> {
-    let mut p = ctx.pipeline(model)?;
+fn prepare(ctx: &Ctx, model: &str) -> Result<QuantSession> {
+    let mut s = ctx.session(model)?;
     if model == "mobilenet_v2_mini" {
-        p.inject_spread(SPREAD_SEED, MOBILENET_SPREAD_LOG2)?;
+        s.inject_spread(SPREAD_SEED, MOBILENET_SPREAD_LOG2)?;
     }
-    Ok(p)
+    Ok(s)
 }
 
 /// Tables 1 & 2: FAT-fine-tuned accuracy under symmetric vs asymmetric
@@ -69,16 +70,20 @@ pub fn accuracy_table(
         (QuantMode::SymScalar, QuantMode::AsymScalar, "Table 1: 8-bit scalar mode")
     };
     let mut rep = Report::new(title);
+    let opts = cfg.finetune_opts(false);
+    let calibrator = cfg.quant_spec()?.calibrator;
     for model in TABLE_MODELS {
-        let p = prepare(ctx, model)?;
-        let stats = p.calibrate(cfg.calib_images)?;
-        let fp = p.fp_accuracy(cfg.val_images)?;
+        let session = prepare(ctx, model)?;
+        let cal = session.calibrate(CalibOpts::images(cfg.calib_images))?;
+        let fp = cal.fp_accuracy(cfg.val_images)?;
         log(&format!("[{model}] FP {:.2}%", fp * 100.0));
         let mut cells = vec![];
         for mode in [m_sym, m_asym] {
-            let (tr, losses) =
-                p.finetune(mode, &stats, cfg, |_, _, _| {})?;
-            let acc = p.quant_accuracy(mode, &stats, &tr, cfg.val_images)?;
+            let spec =
+                QuantSpec::from_mode(mode).with_calibrator(calibrator);
+            let th = cal.finetune(&spec, &opts, |_, _, _| {})?;
+            let acc = th.quant_accuracy(cfg.val_images)?;
+            let losses = th.losses();
             log(&format!(
                 "[{model}] {} fine-tuned {} steps (rmse {:.4}→{:.4}): {:.2}%",
                 mode.name(),
@@ -107,11 +112,12 @@ pub fn weight_histograms(
     model: &str,
     bins: usize,
 ) -> Result<WeightHists> {
-    let p = ctx.pipeline(model)?;
+    let s = ctx.session(model)?;
+    let core = s.core();
     let mut all: Vec<f32> = vec![];
     let mut all_q: Vec<f32> = vec![];
-    for n in p.graph.conv_like() {
-        let w = p.weights[&format!("{}.w", n.id)].as_f32()?;
+    for n in core.graph.conv_like() {
+        let w = core.weights[&format!("{}.w", n.id)].as_f32()?;
         all.extend_from_slice(w);
         // per-tensor symmetric fake-quant at T = max|w| (paper's Fig. 2)
         let t = crate::quant::thresholds::per_tensor_w_threshold(w);
@@ -163,36 +169,37 @@ pub fn dws_ladder(
     log: impl Fn(&str),
 ) -> Result<Report> {
     let model = "mobilenet_v2_mini";
-    let mode = QuantMode::SymScalar;
+    let spec = QuantSpec::from_mode(QuantMode::SymScalar)
+        .with_calibrator(cfg.quant_spec()?.calibrator);
     let mut rep = Report::new("§4.2 ladder: MobileNet-v2, 8-bit scalar");
 
     // rung 0: plain scalar quantization (paper: ~1.6%)
-    let p0 = prepare(ctx, model)?;
-    let stats0 = p0.calibrate(cfg.calib_images)?;
-    let fp = p0.fp_accuracy(cfg.val_images)?;
-    let tr0 = p0.identity_trainables(mode)?;
-    let plain = p0.quant_accuracy(mode, &stats0, &tr0, cfg.val_images)?;
+    let cal0 = prepare(ctx, model)?
+        .calibrate(CalibOpts::images(cfg.calib_images))?;
+    let fp = cal0.fp_accuracy(cfg.val_images)?;
+    let plain = cal0.identity(&spec)?.quant_accuracy(cfg.val_images)?;
     log(&format!("plain scalar: {:.2}%", plain * 100.0));
 
-    // rung 1: + §3.3 weight rescaling (paper: ~67%)
-    let mut p1 = prepare(ctx, model)?;
-    let stats1 = p1.calibrate(cfg.calib_images)?;
-    let reports = p1.dws_rescale(&stats1)?;
-    for r in &reports {
+    // rung 1: + §3.3 weight rescaling (paper: ~67%); the stage
+    // transition re-calibrates the thresholds after the weights move.
+    // The session is scoped to its statement so dws_rescale holds the
+    // only reference to the model state (mutates in place, no copy).
+    let cal1 = prepare(ctx, model)?
+        .calibrate(CalibOpts::images(cfg.calib_images))?;
+    let cal1 = cal1.dws_rescale()?;
+    for r in cal1.rescale_reports() {
         log(&format!(
             "  rescale {}: spread {:.1}→{:.1} ({} locked/{})",
             r.dw, r.spread_before, r.spread_after, r.locked, r.channels
         ));
     }
-    // thresholds must be re-calibrated after rescaling
-    let stats1b = p1.calibrate(cfg.calib_images)?;
-    let rescaled =
-        p1.quant_accuracy(mode, &stats1b, &tr0, cfg.val_images)?;
+    let rescaled = cal1.identity(&spec)?.quant_accuracy(cfg.val_images)?;
     log(&format!("+ rescale: {:.2}%", rescaled * 100.0));
 
     // rung 2: + point-wise weight fine-tuning (paper: ~71%)
-    let (pw, losses) = p1.finetune_pointwise(&stats1b, cfg, |_, _, _| {})?;
-    let pw_acc = p1.pointwise_accuracy(&stats1b, &pw, cfg.val_images)?;
+    let (pw, losses) =
+        cal1.finetune_pointwise(&spec, &cfg.finetune_opts(true), |_, _, _| {})?;
+    let pw_acc = cal1.pointwise_accuracy(&spec, &pw, cfg.val_images)?;
     log(&format!(
         "+ pointwise ft ({} steps, rmse {:.4}→{:.4}): {:.2}%",
         losses.len(),
@@ -202,8 +209,9 @@ pub fn dws_ladder(
     ));
 
     // reference rung: FAT threshold fine-tuning on the rescaled model
-    let (tr, _) = p1.finetune(mode, &stats1b, cfg, |_, _, _| {})?;
-    let fat_acc = p1.quant_accuracy(mode, &stats1b, &tr, cfg.val_images)?;
+    let fat_acc = cal1
+        .finetune(&spec, &cfg.finetune_opts(false), |_, _, _| {})?
+        .quant_accuracy(cfg.val_images)?;
     log(&format!("+ FAT thresholds: {:.2}%", fat_acc * 100.0));
 
     rep.add(
@@ -227,51 +235,38 @@ pub fn ablations(
     cfg: &PipelineConfig,
     log: impl Fn(&str),
 ) -> Result<Report> {
-    let mode = QuantMode::SymVector;
+    let spec = QuantSpec::from_mode(QuantMode::SymVector);
     let mut rep = Report::new("A1 ablations (no fine-tune, sym vector)");
-    let p = ctx.pipeline(model)?;
-    let fp = p.fp_accuracy(cfg.val_images)?;
-    let tr = p.identity_trainables(mode)?;
+    let session = ctx.session(model)?;
+    let fp = session.fp_accuracy(cfg.val_images)?;
 
-    // calibration-size sweep
+    // calibration-size sweep (the open stage is reusable)
     let mut cells = vec![("FP".to_string(), fp)];
     for n in [25usize, 100, 500] {
-        let stats = p.calibrate(n)?;
-        let acc = p.quant_accuracy(mode, &stats, &tr, cfg.val_images)?;
+        let cal = session.calibrate(CalibOpts::images(n))?;
+        let acc = cal.identity(&spec)?.quant_accuracy(cfg.val_images)?;
         log(&format!("calib {n}: {:.2}%", acc * 100.0));
         cells.push((format!("calib={n}"), acc));
     }
 
-    // baseline calibrators over activation histograms
-    let stats = p.calibrate(cfg.calib_images)?;
-    match p.calibrate_hist(&stats, cfg.calib_images) {
-        Ok(hists) => {
-            for (name, cal) in [
-                ("p99.9", Calibrator::Percentile(9990)),
-                ("KL", Calibrator::Kl),
-            ] {
-                let mut adj = stats.clone();
-                for (i, mm) in adj.site_minmax.iter_mut().enumerate() {
-                    let t = threshold_from_hist(
-                        cal, &hists[i], mm.min, mm.max,
-                    );
-                    // shrink the range to the calibrated threshold
-                    mm.min = mm.min.max(-t);
-                    mm.max = mm.max.min(t);
-                }
-                let acc =
-                    p.quant_accuracy(mode, &adj, &tr, cfg.val_images)?;
-                log(&format!("calibrator {name}: {:.2}%", acc * 100.0));
-                cells.push((format!("cal={name}"), acc));
+    // baseline calibrators, through the same spec-driven path the
+    // launcher's `--calibrator` flag uses
+    let cal = session.calibrate(CalibOpts::images(cfg.calib_images))?;
+    for c in [Calibrator::Percentile(9990), Calibrator::Kl] {
+        match cal.identity(&spec.with_calibrator(c)) {
+            Ok(th) => {
+                let acc = th.quant_accuracy(cfg.val_images)?;
+                log(&format!("calibrator {}: {:.2}%", c.name(), acc * 100.0));
+                cells.push((format!("cal={}", c.name()), acc));
             }
+            Err(e) => log(&format!("calibrator {} unavailable: {e}", c.name())),
         }
-        Err(e) => log(&format!("calib_hist unavailable: {e}")),
     }
     rep.add(model, cells);
     Ok(rep)
 }
 
-/// Helper shared by bins: trained-map → accuracy row with both int8-engine
+/// Helper shared by bins: no-finetune accuracy row with both int8-engine
 /// and fake-quant numbers.
 pub fn int8_agreement(
     ctx: &Ctx,
@@ -279,28 +274,27 @@ pub fn int8_agreement(
     mode: QuantMode,
     val: usize,
 ) -> Result<(f64, f64)> {
-    let p = ctx.pipeline(model)?;
-    let stats = p.calibrate(100)?;
-    let tr = p.identity_trainables(mode)?;
-    let fake = p.quant_accuracy(mode, &stats, &tr, val)?;
-    let trained = p.trained_of_map(mode, &tr)?;
-    let qm = p.export_int8(mode, &stats, &trained)?;
-    let engine = int8_accuracy(&qm, val)?;
-    Ok((fake, engine))
+    let th = ctx
+        .session(model)?
+        .calibrate(CalibOpts::images(100))?
+        .identity(&QuantSpec::from_mode(mode))?;
+    let fake = th.quant_accuracy(val)?;
+    let engine = th.serve(EngineOptions::default())?;
+    let acc = super::evaluate::int8_accuracy(&engine, val)?;
+    Ok((fake, acc))
 }
 
 /// Accuracy of the integer engine over the val split (the canonical
 /// implementation lives in `evaluate`; re-exported here for the bins,
 /// benches and examples that import it from the experiments module).
-pub fn int8_accuracy(qm: &crate::int8::QModel, val: usize) -> Result<f64> {
-    super::evaluate::int8_accuracy(qm, val)
+pub fn int8_accuracy(
+    engine: &crate::int8::Int8Engine,
+    val: usize,
+) -> Result<f64> {
+    super::evaluate::int8_accuracy(engine, val)
 }
 
-/// Map a trainable tensor-map to loss-free defaults if empty — utility
-/// for benches.
+/// Quick-run configuration for benches.
 pub fn default_cfg_fast() -> PipelineConfig {
     PipelineConfig::default().fast()
 }
-
-#[allow(dead_code)]
-fn unused(_: &BTreeMap<String, Tensor>) {}

@@ -4,6 +4,11 @@
 //! calibrate → (optional §3.3 DWS rescale) → init α → fine-tune thresholds
 //! (RMSE distillation via the `train_step_*` artifacts, Adam + cosine
 //! annealing with optimizer reset) → evaluate → export int8.
+//!
+//! The staged public API lives in [`crate::quant::session`]
+//! ([`crate::quant::QuantSession`] → `Calibrated` → `Thresholded` →
+//! [`crate::int8::Int8Engine`]); the loose [`Pipeline`] handle here is a
+//! deprecated shim kept for one release.
 
 pub mod config;
 pub mod evaluate;
@@ -15,5 +20,6 @@ pub mod report;
 pub mod schedule;
 
 pub use config::PipelineConfig;
+#[allow(deprecated)]
 pub use pipeline::Pipeline;
 pub use report::Report;

@@ -1,147 +1,94 @@
-//! The FAT pipeline: one struct that owns a model's artifacts + weights
-//! and exposes every stage of the paper's flow.
+//! Legacy [`Pipeline`] — a thin, deprecated shim over
+//! [`SessionCore`](crate::quant::session::SessionCore).
+//!
+//! The loose per-stage methods here let callers thread `(mode, stats,
+//! trained)` by hand and silently skip or reorder the paper's dataflow;
+//! new code should drive the staged
+//! [`QuantSession`](crate::quant::session::QuantSession) API instead,
+//! which encodes calibrate → rescale → threshold → export in the type
+//! system and serves inference through
+//! [`Int8Engine`](crate::int8::serve::Int8Engine). The shim is kept for
+//! one release; every method simply delegates to the session core.
 
 use std::collections::BTreeMap;
+use std::ops::{Deref, DerefMut};
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::data::{Batcher, Split};
 use crate::int8::QModel;
-use crate::model::{GraphDef, ModelStore};
 use crate::quant::calibrate::CalibStats;
-use crate::quant::dws::{self, PatternReport};
-use crate::quant::export::{self, QuantMode, Trained};
-use crate::quant::fold;
+use crate::quant::dws::PatternReport;
+use crate::quant::export::{QuantMode, Trained};
+use crate::quant::session::{export_with, QuantSpec, SessionCore, ThresholdSet};
 use crate::runtime::{Artifact, Registry};
 use crate::tensor::Tensor;
 
 use super::config::PipelineConfig;
-use super::evaluate::{accuracy_with, batch_size_of};
-use super::finetune::{self, FinetuneOpts};
-use super::marshal::{build_inputs, split_outputs, Group};
 
+/// Deprecated pre-session pipeline handle. Field access (`.graph`,
+/// `.weights`, …) still works through `Deref` to the session core.
+#[deprecated(
+    since = "0.2.0",
+    note = "use quant::session::QuantSession (staged API) and \
+            int8::serve::Int8Engine (serving handle) instead"
+)]
 pub struct Pipeline {
-    pub reg: Arc<Registry>,
-    pub store: ModelStore,
-    pub graph: GraphDef,
-    pub sites: crate::model::store::SitesJson,
-    /// Rust-folded weights (mutated in place by §3.3 rescaling).
-    pub weights: BTreeMap<String, Tensor>,
+    /// The shared session core this shim delegates to.
+    pub core: SessionCore,
 }
 
+#[allow(deprecated)]
+impl Deref for Pipeline {
+    type Target = SessionCore;
+
+    fn deref(&self) -> &SessionCore {
+        &self.core
+    }
+}
+
+#[allow(deprecated)]
+impl DerefMut for Pipeline {
+    fn deref_mut(&mut self) -> &mut SessionCore {
+        &mut self.core
+    }
+}
+
+#[allow(deprecated)]
 impl Pipeline {
     pub fn new<P: AsRef<Path>>(
         reg: Arc<Registry>,
         artifacts: P,
         model: &str,
     ) -> Result<Self> {
-        let store = ModelStore::open(&artifacts, model)?;
-        let raw_graph = store.graph()?;
-        let graph = store.folded_graph()?;
-        let sites = store.sites()?;
-        let raw = store.raw_weights()?;
-        // BN folding happens here, in Rust (eq. 10-11); the Python-folded
-        // weights only serve as a golden cross-check in tests.
-        let weights = fold::fold_bn(&raw_graph, &raw)?;
-        Ok(Pipeline { reg, store, graph, sites, weights })
+        Ok(Pipeline { core: SessionCore::open(reg, artifacts, model)? })
     }
 
     pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
-        self.reg.get(self.store.artifact_path(name))
+        self.core.artifact(name)
     }
 
     // -- calibration --------------------------------------------------
 
     /// Run the calibration pass over `images` training images (paper: 100).
     pub fn calibrate(&self, images: usize) -> Result<CalibStats> {
-        let art = self.artifact("calib_stats")?;
-        let bs = batch_size_of(&art, "1")?;
-        let mut stats = CalibStats::new(self.sites.sites.len());
-        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
-        let batcher = Batcher::new(Split::Train, indices, bs);
-        for (x, _) in batcher.epoch_iter(0) {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[Group::Map(&self.weights), Group::Single(&x)],
-            )?;
-            let outs = art.execute(&inputs)?;
-            let o = split_outputs(&art.manifest, outs)?;
-            let mm = o.singles[&0].as_f32()?;
-            for (i, s) in stats.site_minmax.iter_mut().enumerate() {
-                s.update(mm[i * 2], mm[i * 2 + 1]);
-            }
-            for (key, t) in &o.maps[&1] {
-                let nid = key.trim_start_matches("ch:").to_string();
-                let d = t.as_f32()?;
-                let c = t.shape[1];
-                let entry = stats
-                    .channel_minmax
-                    .entry(nid)
-                    .or_insert_with(|| {
-                        vec![Default::default(); c]
-                    });
-                for (ci, e) in entry.iter_mut().enumerate() {
-                    e.update(d[ci], d[c + ci]);
-                }
-            }
-            stats.batches += 1;
-        }
-        Ok(stats)
+        self.core.calibrate(images)
     }
 
-    /// Second pass: per-site histograms over the calibrated ranges
-    /// (used by the baseline-calibrator ablation).
+    /// Second pass: per-site histograms over the calibrated ranges.
     pub fn calibrate_hist(
         &self,
         stats: &CalibStats,
         images: usize,
     ) -> Result<Vec<Vec<u32>>> {
-        let art = self.artifact("calib_hist")?;
-        let bs = batch_size_of(&art, "2")?;
-        let act_t = stats.act_t_tensor();
-        let nsites = self.sites.sites.len();
-        let mut hists: Vec<Vec<u32>> = vec![];
-        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
-        let batcher = Batcher::new(Split::Train, indices, bs);
-        for (x, _) in batcher.epoch_iter(0) {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(&self.weights),
-                    Group::Single(&act_t),
-                    Group::Single(&x),
-                ],
-            )?;
-            let outs = art.execute(&inputs)?;
-            let o = split_outputs(&art.manifest, outs)?;
-            let h = o.singles[&0].as_i32()?;
-            let bins = h.len() / nsites;
-            if hists.is_empty() {
-                hists = vec![vec![0u32; bins]; nsites];
-            }
-            for s in 0..nsites {
-                for b in 0..bins {
-                    hists[s][b] += h[s * bins + b] as u32;
-                }
-            }
-        }
-        Ok(hists)
+        self.core.calibrate_hist(stats, images)
     }
 
     // -- evaluation ---------------------------------------------------
 
     pub fn fp_accuracy(&self, val_images: usize) -> Result<f64> {
-        let art = self.artifact("fp_forward")?;
-        let bs = batch_size_of(&art, "1")?;
-        accuracy_with(bs, val_images, |x| {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[Group::Map(&self.weights), Group::Single(x)],
-            )?;
-            Ok(art.execute(&inputs)?.remove(0))
-        })
+        self.core.fp_accuracy(val_images)
     }
 
     /// Accuracy of the fake-quant forward under `trained` thresholds.
@@ -152,21 +99,7 @@ impl Pipeline {
         trained: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64> {
-        let art = self.artifact(&format!("quant_fwd_{}", mode.name()))?;
-        let bs = batch_size_of(&art, "3")?;
-        let act_t = stats.act_t_tensor();
-        accuracy_with(bs, val_images, |x| {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(&self.weights),
-                    Group::Single(&act_t),
-                    Group::Map(trained),
-                    Group::Single(x),
-                ],
-            )?;
-            Ok(art.execute(&inputs)?.remove(0))
-        })
+        self.core.quant_accuracy(mode, stats, trained, val_images)
     }
 
     /// §4.2 point-wise variant (mobilenet only).
@@ -176,21 +109,7 @@ impl Pipeline {
         pw: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64> {
-        let art = self.artifact("quant_fwd_pw")?;
-        let bs = batch_size_of(&art, "3")?;
-        let act_t = stats.act_t_tensor();
-        accuracy_with(bs, val_images, |x| {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(&self.weights),
-                    Group::Single(&act_t),
-                    Group::Map(pw),
-                    Group::Single(x),
-                ],
-            )?;
-            Ok(art.execute(&inputs)?.remove(0))
-        })
+        self.core.pointwise_accuracy(stats, pw, val_images)
     }
 
     // -- fine-tuning ----------------------------------------------------
@@ -202,16 +121,7 @@ impl Pipeline {
         cfg: &PipelineConfig,
         progress: impl FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
-        let opts = FinetuneOpts {
-            epochs: cfg.epochs,
-            stride: cfg.finetune_stride,
-            lr: cfg.lr,
-            cycle: cfg.cycle,
-            max_steps: cfg.max_steps,
-            seed: cfg.seed,
-        };
-        finetune::run(&art, &self.weights, &stats.act_t_tensor(), &opts, progress)
+        self.core.finetune(mode, stats, &cfg.finetune_opts(false), progress)
     }
 
     /// §4.2 point-wise fine-tuning (same loop, `train_step_pw` artifact).
@@ -221,22 +131,12 @@ impl Pipeline {
         cfg: &PipelineConfig,
         progress: impl FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-        let art = self.artifact("train_step_pw")?;
-        let opts = FinetuneOpts {
-            epochs: cfg.epochs,
-            stride: cfg.finetune_stride,
-            lr: cfg.pw_lr,
-            cycle: cfg.cycle,
-            max_steps: cfg.max_steps,
-            seed: cfg.seed,
-        };
-        finetune::run(&art, &self.weights, &stats.act_t_tensor(), &opts, progress)
+        self.core.finetune_pointwise(stats, &cfg.finetune_opts(true), progress)
     }
 
-    /// Inject per-filter range disparity (DESIGN.md §2 substitution for
-    /// the disparity of real ImageNet checkpoints). Function-preserving.
+    /// Inject per-filter range disparity (DESIGN.md §2). Function-preserving.
     pub fn inject_spread(&mut self, seed: u64, span_log2: f32) -> Result<usize> {
-        dws::inject_spread(&self.graph, &mut self.weights, seed, span_log2)
+        self.core.inject_spread(seed, span_log2)
     }
 
     // -- §3.3 DWS rescaling -------------------------------------------
@@ -246,68 +146,48 @@ impl Pipeline {
         &mut self,
         stats: &CalibStats,
     ) -> Result<Vec<PatternReport>> {
-        let ch_max: BTreeMap<String, Vec<f32>> = stats
-            .channel_minmax
-            .iter()
-            .map(|(k, v)| {
-                (k.clone(), v.iter().map(|mm| mm.max).collect())
-            })
-            .collect();
-        dws::rescale_model(&self.graph, &mut self.weights, &ch_max)
+        self.core.dws_rescale(stats)
     }
 
     // -- export ---------------------------------------------------------
 
     /// Convert trainable-map thresholds into the exporter's form.
+    /// Unknown keys are an error (see [`ThresholdSet::from_trainables`]).
     pub fn trained_of_map(
         &self,
         mode: QuantMode,
         tr: &BTreeMap<String, Tensor>,
     ) -> Result<Trained> {
-        let mut out = Trained::identity(
-            &self.graph,
+        Ok(ThresholdSet::from_trainables(
+            &self.core.graph,
             mode,
-            self.sites.sites.len(),
-        );
-        for (k, t) in tr {
-            let v = t.as_f32()?.to_vec();
-            if k == "act_a" {
-                out.act_a = v;
-            } else if k == "act_at" {
-                out.act_at = v;
-            } else if k == "act_ar" {
-                out.act_ar = v;
-            } else if let Some(node) = k.strip_prefix("w_a:") {
-                out.w_a.insert(node.to_string(), v);
-            }
-        }
-        Ok(out)
+            self.core.sites.sites.len(),
+            tr,
+        )?
+        .into_trained())
     }
 
-    /// Build the integer-only deployment model. This also compiles the
-    /// engine's execution plan once (topological schedule, dense param
-    /// indices, liveness-based buffer slots — `int8::plan`); the
-    /// returned [`QModel`] then serves any number of `run_batch` calls,
-    /// batch-sharded across `$FAT_THREADS` workers.
+    /// Build the integer-only deployment model (compiles the engine's
+    /// execution plan once — `int8::plan`).
     pub fn export_int8(
         &self,
         mode: QuantMode,
         stats: &CalibStats,
         trained: &Trained,
     ) -> Result<QModel> {
-        export::build_qmodel(
-            &self.graph,
-            &self.weights,
-            &self.sites,
+        export_with(
+            &self.core.graph,
+            &self.core.weights,
+            &self.core.sites,
             stats,
-            mode,
-            trained,
+            &QuantSpec::from_mode(mode),
+            &ThresholdSet::from_parts(mode, trained.clone()),
         )
     }
 
     /// Identity thresholds (α=1): "quantization without fine-tuning".
     pub fn identity_trained(&self, mode: QuantMode) -> Trained {
-        Trained::identity(&self.graph, mode, self.sites.sites.len())
+        Trained::identity(&self.core.graph, mode, self.core.sites.sites.len())
     }
 
     /// Identity trainable map shaped from the artifact manifest.
@@ -315,7 +195,6 @@ impl Pipeline {
         &self,
         mode: QuantMode,
     ) -> Result<BTreeMap<String, Tensor>> {
-        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
-        Ok(finetune::init_trainables(&art))
+        self.core.identity_trainables(mode)
     }
 }

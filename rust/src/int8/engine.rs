@@ -58,6 +58,65 @@ pub enum QNode {
     Passthrough,
 }
 
+/// Batch-shard geometry shared by [`QModel::run_batch_with`] and the
+/// serving handle (`int8::serve`): `(shards, kernel_threads, rows)` —
+/// worker count clamped to the batch, leftover capacity row-sharding
+/// the kernels inside each worker, and images per shard. Keeping this
+/// in one place is what makes the pooled serving path bit-exact with
+/// the bare engine by construction.
+pub(crate) fn shard_geometry(
+    threads: usize,
+    batch: usize,
+) -> (usize, usize, usize) {
+    let t = threads.max(1);
+    let shards = t.min(batch.max(1));
+    (shards, t.div_ceil(shards), batch.div_ceil(shards))
+}
+
+/// Reusable per-worker execution state: the plan's slot table, the
+/// activation-buffer [`Arena`] and the kernels' im2col/accumulator
+/// scratch ([`OpCtx`]). One state serves one inference at a time;
+/// keeping it alive across [`QModel::run_quant_state`] calls removes
+/// the per-call allocations. [`crate::int8::serve::Int8Engine`] pools
+/// these per worker.
+#[derive(Default)]
+pub struct ExecState {
+    slots: Vec<Option<QTensor>>,
+    arena: Arena,
+    ctx: OpCtx,
+}
+
+impl ExecState {
+    /// Empty state with a kernel worker count.
+    pub fn with_threads(threads: usize) -> Self {
+        ExecState {
+            slots: Vec::new(),
+            arena: Arena::default(),
+            ctx: OpCtx::with_threads(threads),
+        }
+    }
+
+    /// Change the kernel worker count for subsequent runs.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.ctx.threads = threads.max(1);
+    }
+
+    /// Kernel worker count used by runs through this state.
+    pub fn threads(&self) -> usize {
+        self.ctx.threads
+    }
+
+    /// Hand a dead i8 buffer (e.g. a consumed output) back to the arena.
+    pub fn recycle(&mut self, buf: Vec<i8>) {
+        self.arena.put(buf);
+    }
+
+    /// Number of pooled arena buffers (diagnostics).
+    pub fn pooled_buffers(&self) -> usize {
+        self.arena.pooled()
+    }
+}
+
 /// A fully-quantized model, ready for integer-only inference.
 #[derive(Debug, Clone)]
 pub struct QModel {
@@ -87,15 +146,11 @@ impl QModel {
         let q = QTensor::quantize(x.shape.clone(), x.as_f32()?, self.input_qp);
         let batch = q.shape[0];
         let per_img: usize = q.shape[1..].iter().product();
-        let shards = threads.max(1).min(batch.max(1));
+        let (shards, kernel_threads, rows) = shard_geometry(threads, batch);
         let logits = if shards <= 1 || per_img == 0 {
             self.run_quant_with(q, threads.max(1))?
         } else {
-            // leftover capacity row-shards the kernels inside each worker
-            // (ceil keeps all requested workers busy when batch < threads,
-            // at the cost of mild oversubscription)
-            let kernel_threads = threads.max(1).div_ceil(shards);
-            self.run_sharded(q, shards, kernel_threads)?
+            self.run_sharded(q, shards, kernel_threads, rows)?
         };
         let n = logits.shape[0];
         let c = logits.shape[1];
@@ -103,27 +158,51 @@ impl QModel {
     }
 
     /// Split the batch into `shards` contiguous image groups and run them
-    /// on scoped workers. Images are independent through every kernel, so
-    /// the concatenated logits are bit-exact with the unsharded run.
+    /// on scoped workers with fresh per-worker states. Images are
+    /// independent through every kernel, so the concatenated logits are
+    /// bit-exact with the unsharded run.
     fn run_sharded(
         &self,
         q: QTensor,
         shards: usize,
         kernel_threads: usize,
+        rows: usize,
     ) -> Result<QTensor> {
-        let batch = q.shape[0];
+        let mut states: Vec<ExecState> = (0..shards)
+            .map(|_| ExecState::with_threads(kernel_threads))
+            .collect();
+        self.run_sharded_states(q, rows, &mut states)
+    }
+
+    /// Shared sharded executor: split the batch into `rows`-image chunks,
+    /// run chunk *i* on `states[i]`, and stitch the logits in order
+    /// (chunk count never exceeds the shard count the rows were derived
+    /// from, so `states` is always long enough). Consumed output buffers
+    /// are recycled into their worker's arena. Both [`QModel::run_batch_with`]
+    /// (fresh states) and the pooled `int8::serve::Int8Engine` call this,
+    /// so their outputs are identical by construction.
+    pub(crate) fn run_sharded_states(
+        &self,
+        q: QTensor,
+        rows: usize,
+        states: &mut [ExecState],
+    ) -> Result<QTensor> {
         let per_img: usize = q.shape[1..].iter().product();
-        let rows = batch.div_ceil(shards);
+        debug_assert!(rows * per_img > 0, "degenerate shard geometry");
+        debug_assert!(
+            q.shape[0].div_ceil(rows.max(1)) <= states.len(),
+            "fewer worker states than chunks"
+        );
         let mut parts: Vec<Result<QTensor>> = Vec::new();
         std::thread::scope(|s| {
             let mut handles = Vec::new();
-            for chunk in q.data.chunks(rows * per_img) {
+            for (chunk, st) in
+                q.data.chunks(rows * per_img).zip(states.iter_mut())
+            {
                 let mut shape = q.shape.clone();
                 shape[0] = chunk.len() / per_img;
                 let sub = QTensor { shape, data: chunk.to_vec(), qp: q.qp };
-                handles.push(
-                    s.spawn(move || self.run_quant_with(sub, kernel_threads)),
-                );
+                handles.push(s.spawn(move || self.run_quant_state(sub, st)));
             }
             parts = handles
                 .into_iter()
@@ -134,12 +213,25 @@ impl QModel {
         let mut classes = 0usize;
         let mut total = 0usize;
         let mut qp = q.qp;
-        for part in parts {
-            let t = part?;
-            classes = t.shape[1];
-            qp = t.qp;
-            total += t.shape[0];
-            data.extend_from_slice(&t.data);
+        let mut first_err = None;
+        for (part, st) in parts.into_iter().zip(states.iter_mut()) {
+            match part {
+                Ok(t) => {
+                    classes = t.shape[1];
+                    qp = t.qp;
+                    total += t.shape[0];
+                    data.extend_from_slice(&t.data);
+                    st.recycle(t.data);
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         Ok(QTensor { shape: vec![total, classes], data, qp })
     }
@@ -150,36 +242,58 @@ impl QModel {
         self.run_quant_with(input, fat_threads())
     }
 
-    /// Execute the precompiled plan. Activation buffers recycle through
-    /// an [`Arena`]; im2col/accumulator scratch is reused across nodes.
+    /// [`QModel::run_quant_state`] with a fresh throwaway [`ExecState`].
+    /// Serving callers should prefer [`crate::int8::serve::Int8Engine`],
+    /// which pools states across calls instead of re-allocating them.
     pub fn run_quant_with(
         &self,
         input: QTensor,
         threads: usize,
     ) -> Result<QTensor> {
+        let mut state = ExecState::with_threads(threads);
+        self.run_quant_state(input, &mut state)
+    }
+
+    /// Execute the precompiled plan using caller-owned, reusable state.
+    /// Activation buffers recycle through the state's [`Arena`], and
+    /// im2col/accumulator scratch is reused across nodes *and across
+    /// calls* — repeated inference through one state performs no
+    /// steady-state allocation beyond the output tensor. Bit-exact with
+    /// a fresh state for any state history (buffers are fully
+    /// overwritten before use).
+    pub fn run_quant_state(
+        &self,
+        input: QTensor,
+        state: &mut ExecState,
+    ) -> Result<QTensor> {
         let plan = &self.plan;
-        let mut slots: Vec<Option<QTensor>> = Vec::new();
-        slots.resize_with(plan.num_slots, || None);
-        let mut arena = Arena::default();
-        let mut ctx = OpCtx::with_threads(threads);
-        slots[plan.input_slot] = Some(input);
+        // Drop stale values (possible after an earlier mid-plan error)
+        // and fit the slot table to this model's plan.
+        for s in state.slots.iter_mut() {
+            if let Some(dead) = s.take() {
+                state.arena.put(dead.data);
+            }
+        }
+        state.slots.resize_with(plan.num_slots, || None);
+        state.slots[plan.input_slot] = Some(input);
         for step in &plan.steps {
-            let out_buf = arena.take();
+            let out_buf = state.arena.take();
             let out = {
-                let a = slots[step.a].as_ref().ok_or_else(|| {
+                let a = state.slots[step.a].as_ref().ok_or_else(|| {
                     anyhow::anyhow!("{}: input slot {} empty", step.id, step.a)
                 })?;
                 match &plan.params[step.param] {
                     QNode::Layer(l) => match step.op {
                         Op::Conv => ops::conv2d(
-                            a, l, step.k, step.stride, step.cout, &mut ctx,
-                            out_buf,
+                            a, l, step.k, step.stride, step.cout,
+                            &mut state.ctx, out_buf,
                         ),
                         Op::DwConv => ops::dwconv2d(
-                            a, l, step.k, step.stride, &mut ctx, out_buf,
+                            a, l, step.k, step.stride, &mut state.ctx,
+                            out_buf,
                         ),
                         Op::Dense => {
-                            ops::dense(a, l, step.cout, &mut ctx, out_buf)
+                            ops::dense(a, l, step.cout, &mut state.ctx, out_buf)
                         }
                         op => anyhow::bail!(
                             "{}: op {op:?} scheduled with layer params",
@@ -190,7 +304,7 @@ impl QModel {
                         let bs = step.b.ok_or_else(|| {
                             anyhow::anyhow!("{}: add without 2nd input", step.id)
                         })?;
-                        let b = slots[bs].as_ref().ok_or_else(|| {
+                        let b = state.slots[bs].as_ref().ok_or_else(|| {
                             anyhow::anyhow!("{}: input slot {bs} empty", step.id)
                         })?;
                         ops::add(a, b, p, out_buf)
@@ -203,13 +317,13 @@ impl QModel {
                 }
             };
             for &f in &step.frees {
-                if let Some(dead) = slots[f].take() {
-                    arena.put(dead.data);
+                if let Some(dead) = state.slots[f].take() {
+                    state.arena.put(dead.data);
                 }
             }
-            slots[step.dst] = Some(out);
+            state.slots[step.dst] = Some(out);
         }
-        slots[plan.output_slot]
+        state.slots[plan.output_slot]
             .take()
             .ok_or_else(|| anyhow::anyhow!("plan produced no output"))
     }

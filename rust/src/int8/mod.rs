@@ -10,13 +10,20 @@
 //! cache-blocked GEMM kernels and `FAT_THREADS`-way parallelism —
 //! batch-sharded across images, row-sharded inside kernels.
 
+//!
+//! Serving traffic should go through [`serve::Int8Engine`] — an
+//! `Arc`-clone handle with pooled per-worker execution state — rather
+//! than calling the bare [`engine::QModel`] run methods.
+
 pub mod engine;
 pub mod gemm;
 pub mod im2col;
 pub mod ops;
 pub mod plan;
 pub mod qtensor;
+pub mod serve;
 
-pub use engine::{QLayer, QModel};
+pub use engine::{ExecState, QLayer, QModel};
 pub use plan::ExecPlan;
 pub use qtensor::QTensor;
+pub use serve::{EngineOptions, Int8Engine};

@@ -1,0 +1,175 @@
+//! Serving handle for the int8 engine — the one blessed entry point for
+//! inference traffic (DESIGN.md §6).
+//!
+//! [`Int8Engine`] wraps a compiled [`QModel`] (weights + execution plan)
+//! behind a cheaply clonable `Arc` handle, so one exported model can be
+//! shared across request threads without copying parameters. Worker
+//! count is an explicit [`EngineOptions`] knob (the `$FAT_THREADS`
+//! environment default still applies when unset), and every call runs
+//! on pooled per-worker [`ExecState`]s: slot tables, activation arenas
+//! and im2col/accumulator scratch persist across calls instead of being
+//! re-allocated per batch. All entry points are bit-exact with the bare
+//! [`QModel::run_batch_with`] path for every thread count and any pool
+//! history (see `rust/tests/session_equiv.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::model::Op;
+use crate::tensor::Tensor;
+use crate::util::threads::fat_threads;
+
+use super::engine::{shard_geometry, ExecState, QModel};
+use super::qtensor::QTensor;
+
+/// Engine construction options.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineOptions {
+    /// Worker count for batch sharding and kernel row sharding.
+    /// `None` falls back to `$FAT_THREADS` (or machine parallelism).
+    pub threads: Option<usize>,
+}
+
+impl EngineOptions {
+    /// Pin the worker count explicitly.
+    pub fn threads(threads: usize) -> Self {
+        EngineOptions { threads: Some(threads) }
+    }
+}
+
+struct EngineInner {
+    model: QModel,
+    threads: usize,
+    /// Reusable per-worker execution states; grows up to the shard
+    /// count actually used and is then recycled call after call.
+    pool: Mutex<Vec<ExecState>>,
+}
+
+/// A cheap-to-clone serving handle over a compiled quantized model.
+///
+/// Cloning shares the model and the state pool (`Arc` internally), so a
+/// server can hand one engine to many request workers. Produced by
+/// [`crate::quant::session::Thresholded::serve`]; [`Int8Engine::infer`]
+/// and [`Int8Engine::infer_batch`] are the supported inference paths.
+#[derive(Clone)]
+pub struct Int8Engine {
+    inner: Arc<EngineInner>,
+}
+
+impl Int8Engine {
+    /// Wrap a compiled model. `opts.threads` pins the worker count;
+    /// unset, it follows `$FAT_THREADS` / machine parallelism.
+    pub fn new(model: QModel, opts: EngineOptions) -> Self {
+        let threads = opts.threads.unwrap_or_else(fat_threads).max(1);
+        Int8Engine {
+            inner: Arc::new(EngineInner {
+                model,
+                threads,
+                pool: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// The wrapped quantized model.
+    pub fn model(&self) -> &QModel {
+        &self.inner.model
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    /// Total int8 parameter bytes of the served model.
+    pub fn param_bytes(&self) -> usize {
+        self.inner.model.param_bytes
+    }
+
+    /// Execution states currently resting in the pool (diagnostics).
+    pub fn pooled_states(&self) -> usize {
+        self.inner.pool.lock().unwrap().len()
+    }
+
+    fn take_state(&self, threads: usize) -> ExecState {
+        let mut st =
+            self.inner.pool.lock().unwrap().pop().unwrap_or_default();
+        st.set_threads(threads);
+        st
+    }
+
+    fn put_state(&self, st: ExecState) {
+        self.inner.pool.lock().unwrap().push(st);
+    }
+
+    /// Classify one raw image: `pixels` is HWC u8 data matching the
+    /// model's input shape, mapped to floats in `[0, 1]` (`p / 255`).
+    /// Returns the logits row.
+    pub fn infer(&self, pixels: &[u8]) -> Result<Vec<f32>> {
+        let sh = self
+            .inner
+            .model
+            .graph
+            .nodes
+            .iter()
+            .find(|n| n.op == Op::Input)
+            .ok_or_else(|| anyhow::anyhow!("model has no input node"))?
+            .input_shape
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("model input has no shape"))?;
+        let want: usize = sh.iter().product();
+        anyhow::ensure!(
+            pixels.len() == want && sh.len() == 3,
+            "infer: expected {want} bytes for input shape {sh:?}, got {}",
+            pixels.len()
+        );
+        let x: Vec<f32> = pixels.iter().map(|&p| p as f32 / 255.0).collect();
+        let t = Tensor::f32(vec![1, sh[0], sh[1], sh[2]], x);
+        Ok(self.infer_batch(&t)?.as_f32()?.to_vec())
+    }
+
+    /// Run a float NHWC batch; returns f32 logits `(n, classes)`.
+    /// Batch-shards across the configured worker count.
+    pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        self.infer_batch_with(x, self.inner.threads)
+    }
+
+    /// [`Int8Engine::infer_batch`] with an explicit worker count (thread
+    /// sweeps); still uses the shared state pool.
+    pub fn infer_batch_with(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
+        let model = &self.inner.model;
+        let q = QTensor::quantize(x.shape.clone(), x.as_f32()?, model.input_qp);
+        let batch = q.shape[0];
+        let per_img: usize = q.shape[1..].iter().product();
+        // Shard geometry comes from the same helper as
+        // QModel::run_batch_with, so the pooled path is bit-exact with
+        // the bare engine by construction.
+        let (shards, kernel_threads, rows) = shard_geometry(threads, batch);
+        if shards <= 1 || per_img == 0 {
+            let mut st = self.take_state(threads.max(1));
+            let out = match model.run_quant_state(q, &mut st) {
+                Ok(out) => out,
+                Err(e) => {
+                    self.put_state(st);
+                    return Err(e);
+                }
+            };
+            let (n, c) = (out.shape[0], out.shape[1]);
+            let logits = out.dequantize();
+            st.recycle(out.data);
+            self.put_state(st);
+            return Ok(Tensor::f32(vec![n, c], logits));
+        }
+
+        let mut states: Vec<ExecState> =
+            (0..shards).map(|_| self.take_state(kernel_threads)).collect();
+        let result = model.run_sharded_states(q, rows, &mut states);
+        for st in states {
+            self.put_state(st);
+        }
+        let logits = result?;
+        let (n, c) = (logits.shape[0], logits.shape[1]);
+        Ok(Tensor::f32(vec![n, c], logits.dequantize()))
+    }
+
+}

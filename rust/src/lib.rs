@@ -14,6 +14,14 @@
 //!    mobile-deployment simulator) driven by a precompiled execution
 //!    plan with `FAT_THREADS`-way parallelism.
 //!
+//! The public API is staged (DESIGN.md §6): a
+//! [`quant::session::QuantSession`] walks the paper's dataflow —
+//! calibrate → optional §3.3 rescale → fine-tune or identity thresholds
+//! → export — with each stage a distinct type, and serving traffic goes
+//! through the [`int8::serve::Int8Engine`] handle (`Arc`-clone, pooled
+//! per-worker execution state). The loose [`coordinator::Pipeline`] is
+//! a deprecated shim kept for one release.
+//!
 //! Python never runs at runtime; the Rust binary drives everything from
 //! the AOT artifacts in `artifacts/`.
 //!

@@ -1,19 +1,24 @@
-//! `fat` — the FAT quantization pipeline launcher.
+//! `fat` — the FAT quantization pipeline launcher, on the staged
+//! `QuantSession` → `Int8Engine` API.
 //!
 //! Usage:
 //!   fat info
-//!   fat quantize --model mnas_mini_10 --mode asym_vector [--dws] [--val N]
+//!   fat quantize --model mnas_mini_10 --mode asym_vector [--dws]
+//!                [--calibrator max|p9999|kl] [--val N]
 //!   fat pipeline [--config run.toml] [--model M] [--mode MODE]
-//!                [--epochs N] [--max-steps N] [--val N] [--dws]
+//!                [--calibrator C] [--epochs N] [--max-steps N]
+//!                [--val N] [--dws]
 //!   fat eval-int8 --model mnas_mini_10 --mode sym_vector [--val N]
+//!                 [--threads N]
 
 use std::sync::Arc;
 
 use anyhow::Result;
 use fat::coordinator::evaluate::int8_accuracy;
-use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::coordinator::PipelineConfig;
+use fat::int8::serve::EngineOptions;
 use fat::model::ModelStore;
-use fat::quant::export::QuantMode;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 use fat::util::cli::Args;
 
@@ -23,13 +28,15 @@ fat — FAT: fast adjustable threshold quantization
 Commands:
   info                         list models + FP accuracies
   quantize                     calibration-only quantization + accuracy
-    --model M --mode MODE --calib N --val N [--dws]
+    --model M --mode MODE --calib N --val N [--dws] [--calibrator C]
   pipeline                     full FAT pipeline (calibrate→finetune→int8)
-    [--config F] [--model M] [--mode MODE] [--epochs N]
+    [--config F] [--model M] [--mode MODE] [--calibrator C] [--epochs N]
     [--max-steps N] [--val N] [--lr F] [--dws]
   eval-int8                    int8 engine vs fake-quant agreement
-    --model M --mode MODE [--val N]
+    --model M --mode MODE [--val N] [--threads N]
 
+Modes: sym_scalar | sym_vector | asym_scalar | asym_vector
+Calibrators: max (default) | p99 | p999 | p9999 | kl
 Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
 ";
 
@@ -60,13 +67,19 @@ fn main() -> Result<()> {
         }
         "quantize" => {
             let model = args.get_or("model", "mobilenet_v2_mini");
-            let mode = QuantMode::parse(args.get_or("mode", "sym_scalar"))?;
+            let spec = QuantSpec::parse(
+                args.get_or("mode", "sym_scalar"),
+                args.get_or("calibrator", "max"),
+            )?;
             let calib = args.usize_or("calib", 100);
             let val = args.usize_or("val", 0);
-            let mut p = Pipeline::new(reg, &artifacts, model)?;
-            let stats = p.calibrate(calib)?;
+            // scope the session so mutating stage transitions below hold
+            // the only reference to the model state (no copy-on-write)
+            let mut cal = QuantSession::open(reg, &artifacts, model)?
+                .calibrate(CalibOpts::images(calib))?;
             if args.flag("dws") {
-                for r in p.dws_rescale(&stats)? {
+                cal = cal.dws_rescale()?;
+                for r in cal.rescale_reports() {
                     println!(
                         "  dws {}→{}: spread {:.1}→{:.1} ({} locked/{})",
                         r.dw, r.conv, r.spread_before, r.spread_after,
@@ -74,12 +87,12 @@ fn main() -> Result<()> {
                     );
                 }
             }
-            let fp = p.fp_accuracy(val)?;
-            let tr = p.identity_trainables(mode)?;
-            let q = p.quant_accuracy(mode, &stats, &tr, val)?;
+            let fp = cal.fp_accuracy(val)?;
+            let q = cal.identity(&spec)?.quant_accuracy(val)?;
             println!(
-                "{model} [{}] no-finetune: FP {:.2}%  quant {:.2}%  (drop {:.2})",
-                mode.name(),
+                "{model} [{}/{}] no-finetune: FP {:.2}%  quant {:.2}%  (drop {:.2})",
+                spec.mode().name(),
+                spec.calibrator.name(),
                 fp * 100.0,
                 q * 100.0,
                 (fp - q) * 100.0
@@ -95,6 +108,9 @@ fn main() -> Result<()> {
             }
             if let Some(m) = args.get("mode") {
                 cfg.mode = m.to_string();
+            }
+            if let Some(c) = args.get("calibrator") {
+                cfg.calibrator = c.to_string();
             }
             if let Some(e) = args.get("epochs") {
                 cfg.epochs = e.parse()?;
@@ -113,24 +129,31 @@ fn main() -> Result<()> {
         }
         "eval-int8" => {
             let model = args.get_or("model", "mnas_mini_10");
-            let mode = QuantMode::parse(args.get_or("mode", "sym_vector"))?;
+            let spec = QuantSpec::parse(
+                args.get_or("mode", "sym_vector"),
+                args.get_or("calibrator", "max"),
+            )?;
             let val = args.usize_or("val", 500);
-            let p = Pipeline::new(reg, &artifacts, model)?;
-            let stats = p.calibrate(100)?;
-            let trained = p.identity_trained(mode);
-            let qm = p.export_int8(mode, &stats, &trained)?;
-            let tr = p.identity_trainables(mode)?;
-            let fake = p.quant_accuracy(mode, &stats, &tr, val)?;
+            let opts = match args.get("threads") {
+                Some(t) => EngineOptions::threads(t.parse()?),
+                None => EngineOptions::default(),
+            };
+            let th = QuantSession::open(reg, &artifacts, model)?
+                .calibrate(CalibOpts::images(100))?
+                .identity(&spec)?;
+            let fake = th.quant_accuracy(val)?;
+            let engine = th.serve(opts)?;
             let t0 = std::time::Instant::now();
-            let engine_acc = int8_accuracy(&qm, val)?;
+            let engine_acc = int8_accuracy(&engine, val)?;
             let dt = t0.elapsed();
             println!(
                 "{model} [{}]: fake-quant {:.2}%  int8-engine {:.2}%  \
-                 ({} int8 param bytes, {:.1} img/s)",
-                mode.name(),
+                 ({} int8 param bytes, {} worker(s), {:.1} img/s)",
+                spec.mode().name(),
                 fake * 100.0,
                 engine_acc * 100.0,
-                qm.param_bytes,
+                engine.param_bytes(),
+                engine.threads(),
                 val as f64 / dt.as_secs_f64()
             );
         }
@@ -147,21 +170,28 @@ fn run_pipeline(
     artifacts: &std::path::Path,
     cfg: &PipelineConfig,
 ) -> Result<()> {
-    let mode = QuantMode::parse(&cfg.mode)?;
-    println!("== FAT pipeline: {} [{}] ==", cfg.model, cfg.mode);
-    let mut p = Pipeline::new(reg.clone(), artifacts, &cfg.model)?;
-
+    let spec = cfg.quant_spec()?;
+    println!(
+        "== FAT pipeline: {} [{}] calibrator={} ==",
+        cfg.model,
+        cfg.mode,
+        spec.calibrator.name()
+    );
+    // scope the session so a later dws_rescale holds the only reference
+    // to the model state (no copy-on-write)
     let t0 = std::time::Instant::now();
-    let stats = p.calibrate(cfg.calib_images)?;
+    let mut cal = QuantSession::open(reg.clone(), artifacts, &cfg.model)?
+        .calibrate(CalibOpts::images(cfg.calib_images))?;
     println!(
         "calibrated on {} images ({} batches) in {:.1}s",
         cfg.calib_images,
-        stats.batches,
+        cal.stats().batches,
         t0.elapsed().as_secs_f64()
     );
 
     if cfg.dws_rescale {
-        for r in p.dws_rescale(&stats)? {
+        cal = cal.dws_rescale()?;
+        for r in cal.rescale_reports() {
             println!(
                 "  dws {}→{}: threshold spread {:.1}→{:.1} ({} locked / {})",
                 r.dw, r.conv, r.spread_before, r.spread_after, r.locked,
@@ -170,9 +200,8 @@ fn run_pipeline(
         }
     }
 
-    let fp = p.fp_accuracy(cfg.val_images)?;
-    let tr0 = p.identity_trainables(mode)?;
-    let q0 = p.quant_accuracy(mode, &stats, &tr0, cfg.val_images)?;
+    let fp = cal.fp_accuracy(cfg.val_images)?;
+    let q0 = cal.identity(&spec)?.quant_accuracy(cfg.val_images)?;
     println!(
         "FP acc {:.2}%   quant (no finetune) {:.2}%",
         fp * 100.0,
@@ -180,11 +209,12 @@ fn run_pipeline(
     );
 
     let t1 = std::time::Instant::now();
-    let (tr, losses) = p.finetune(mode, &stats, cfg, |step, loss, lr| {
+    let th = cal.finetune(&spec, &cfg.finetune_opts(false), |step, loss, lr| {
         if step % 10 == 0 {
             println!("  step {step}: rmse {loss:.4} lr {lr:.4}");
         }
     })?;
+    let losses = th.losses();
     println!(
         "fine-tuned {} steps in {:.1}s (rmse {:.4} → {:.4})",
         losses.len(),
@@ -193,15 +223,14 @@ fn run_pipeline(
         losses.last().unwrap_or(&0.0)
     );
 
-    let q1 = p.quant_accuracy(mode, &stats, &tr, cfg.val_images)?;
-    let trained = p.trained_of_map(mode, &tr)?;
-    let qm = p.export_int8(mode, &stats, &trained)?;
-    let int8_acc = int8_accuracy(&qm, cfg.val_images.clamp(100, 500))?;
+    let q1 = th.quant_accuracy(cfg.val_images)?;
+    let engine = th.serve(EngineOptions::default())?;
+    let int8_acc = int8_accuracy(&engine, cfg.val_images.clamp(100, 500))?;
     println!("quant (FAT)     {:.2}%", q1 * 100.0);
     println!(
         "int8 engine     {:.2}%  ({} param bytes)",
         int8_acc * 100.0,
-        qm.param_bytes
+        engine.param_bytes()
     );
     println!(
         "ladder: FP {:.2} → no-ft {:.2} → FAT {:.2} (drop {:.2}%)",

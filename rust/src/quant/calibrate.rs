@@ -55,9 +55,38 @@ impl CalibStats {
         }
         crate::tensor::Tensor::f32(vec![self.site_minmax.len(), 2], v)
     }
+
+    /// Shrink every site range to the calibrator's threshold derived
+    /// from its histogram (`hists[i]` spans `site_minmax[i]`). A no-op
+    /// for [`Calibrator::Max`]; this is how percentile/KL calibrators
+    /// reach the fine-tune and int8-export paths (`quant::session`).
+    /// A histogram-count mismatch is a hard error — silently leaving
+    /// tail sites unclipped would corrupt results undetectably.
+    pub fn apply_calibrator(
+        &mut self,
+        cal: Calibrator,
+        hists: &[Vec<u32>],
+    ) -> anyhow::Result<()> {
+        if cal == Calibrator::Max {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            hists.len() == self.site_minmax.len(),
+            "apply_calibrator: {} histograms for {} sites",
+            hists.len(),
+            self.site_minmax.len()
+        );
+        for (i, mm) in self.site_minmax.iter_mut().enumerate() {
+            let t = threshold_from_hist(cal, &hists[i], mm.min, mm.max);
+            mm.min = mm.min.max(-t);
+            mm.max = mm.max.min(t);
+        }
+        Ok(())
+    }
 }
 
-/// Baseline calibrator selection (A1 ablation).
+/// Baseline calibrator selection (A1 ablation; reachable in the real
+/// export path through `quant::session::QuantSpec`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Calibrator {
     /// Paper default: exact max (eq. 2/6).
@@ -66,6 +95,62 @@ pub enum Calibrator {
     Percentile(u32), // in basis points: 9999 = 99.99%
     /// TensorRT-style KL-divergence minimisation over the histogram.
     Kl,
+}
+
+impl Calibrator {
+    /// Parse a CLI-style name: `max`, `kl`, or `p<digits>` read as a
+    /// percentage with implied decimals — `p99` = 99%, `p999` = 99.9%,
+    /// `p9999` = 99.99%. Percentiles below 50% are rejected: they are
+    /// never meaningful as clip thresholds, and the implied-decimal
+    /// grammar would otherwise silently misread inputs like `p100` or
+    /// `p1` (10% / 10%) that were probably meant as whole percentages.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        match s {
+            "max" => return Ok(Calibrator::Max),
+            "kl" => return Ok(Calibrator::Kl),
+            _ => {}
+        }
+        if let Some(digits) = s.strip_prefix('p') {
+            anyhow::ensure!(
+                !digits.is_empty()
+                    && digits.len() <= 4
+                    && digits.chars().all(|c| c.is_ascii_digit()),
+                "bad percentile calibrator `{s}` (use e.g. p99, p999, p9999)"
+            );
+            let n: u32 = digits.parse()?;
+            let bp = n * 10u32.pow(4 - digits.len() as u32);
+            anyhow::ensure!(
+                (5_000..=10_000).contains(&bp),
+                "percentile calibrator `{s}` reads as {}.{:02}%, outside \
+                 the supported [50, 100]% (digits after `p` carry implied \
+                 decimals: p99 = 99%, p999 = 99.9%, p9999 = 99.99%)",
+                bp / 100,
+                bp % 100
+            );
+            return Ok(Calibrator::Percentile(bp));
+        }
+        anyhow::bail!("unknown calibrator `{s}` (expected max, p<digits> or kl)")
+    }
+
+    /// Canonical CLI/report name (inverse of [`Calibrator::parse`] for
+    /// the named variants).
+    pub fn name(self) -> String {
+        match self {
+            Calibrator::Max => "max".to_string(),
+            Calibrator::Kl => "kl".to_string(),
+            Calibrator::Percentile(bp) => {
+                // strip trailing zeros from the basis-point form
+                let mut n = bp;
+                let mut digits = 4;
+                while digits > 2 && n % 10 == 0 {
+                    n /= 10;
+                    digits -= 1;
+                }
+                format!("p{n}")
+            }
+        }
+    }
 }
 
 /// Reduce a histogram over [lo, hi] to a threshold per the calibrator.
@@ -233,6 +318,65 @@ mod tests {
     fn max_calibrator_is_identity() {
         let (h, lo, hi) = gaussian_hist(64, false);
         assert_eq!(threshold_from_hist(Calibrator::Max, &h, lo, hi), 4.0);
+    }
+
+    #[test]
+    fn calibrator_parse_names() {
+        assert_eq!(Calibrator::parse("max").unwrap(), Calibrator::Max);
+        assert_eq!(Calibrator::parse("kl").unwrap(), Calibrator::Kl);
+        assert_eq!(
+            Calibrator::parse("p9999").unwrap(),
+            Calibrator::Percentile(9999)
+        );
+        assert_eq!(
+            Calibrator::parse("p999").unwrap(),
+            Calibrator::Percentile(9990)
+        );
+        assert_eq!(
+            Calibrator::parse("p99").unwrap(),
+            Calibrator::Percentile(9900)
+        );
+        assert!(Calibrator::parse("p").is_err());
+        assert!(Calibrator::parse("p99999").is_err());
+        assert!(Calibrator::parse("median").is_err());
+        // sub-50% readings are rejected, not silently misread:
+        // p100 would otherwise parse as 10.0%, p1 as 10%
+        assert!(Calibrator::parse("p100").is_err());
+        assert!(Calibrator::parse("p1").is_err());
+        assert_eq!(
+            Calibrator::parse("p50").unwrap(),
+            Calibrator::Percentile(5000)
+        );
+        // round-trip through the canonical name
+        for c in [
+            Calibrator::Max,
+            Calibrator::Kl,
+            Calibrator::Percentile(9999),
+            Calibrator::Percentile(9990),
+            Calibrator::Percentile(9900),
+        ] {
+            assert_eq!(Calibrator::parse(&c.name()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn apply_calibrator_shrinks_ranges() {
+        let (h, lo, hi) = gaussian_hist(128, true);
+        let mut cs = CalibStats::new(1);
+        cs.site_minmax[0].update(lo, hi);
+        let untouched = cs.clone();
+        cs.apply_calibrator(Calibrator::Max, &[h.clone()]).unwrap();
+        assert_eq!(cs.site_minmax[0].max, untouched.site_minmax[0].max);
+        cs.apply_calibrator(Calibrator::Percentile(9990), &[h.clone()])
+            .unwrap();
+        assert!(cs.site_minmax[0].max < hi);
+        assert!(cs.site_minmax[0].min > lo);
+        assert!(cs.site_minmax[0].min <= cs.site_minmax[0].max);
+        // histogram-count mismatch is a hard error, not a silent skip
+        let mut two = CalibStats::new(2);
+        two.site_minmax[0].update(lo, hi);
+        two.site_minmax[1].update(lo, hi);
+        assert!(two.apply_calibrator(Calibrator::Kl, &[h]).is_err());
     }
 
     #[test]

@@ -8,13 +8,17 @@
 //!   (max / percentile / KL) for the A1 ablation.
 //! * [`dws`] — §3.3 DWS→Conv weight rescaling.
 //! * [`export`] — quantized-model builder for the int8 engine.
+//! * [`session`] — the staged public API: [`session::QuantSession`] →
+//!   `Calibrated` → `Thresholded` → [`crate::int8::serve::Int8Engine`].
 
 pub mod calibrate;
 pub mod dws;
 pub mod export;
 pub mod fold;
 pub mod scale;
+pub mod session;
 pub mod thresholds;
 
 pub use export::{QuantMode, Rounding};
 pub use scale::QParams;
+pub use session::{CalibOpts, QuantSession, QuantSpec, ThresholdSet};

@@ -1,0 +1,956 @@
+//! Staged quantization sessions — the crate's public API for the paper's
+//! pipeline (DESIGN.md §6).
+//!
+//! The paper's flow is a strict dataflow: **calibrate → (optional §3.3
+//! rescale) → fine-tune thresholds → export an integer-only model**.
+//! This module encodes that order in the type system so callers cannot
+//! skip or reorder stages:
+//!
+//! ```text
+//! QuantSession::open(reg, artifacts, model)        // stage 0: opened
+//!     .calibrate(CalibOpts::images(100))?          // stage 1: Calibrated
+//!     .dws_rescale()?                              //   optional §3.3 (re-calibrates)
+//!     .finetune(&spec, &opts, progress)?           // stage 2: Thresholded
+//!     // or .identity(&spec)?                      //   (α = 1, no fine-tune)
+//!     .serve(EngineOptions::default())?            // stage 3: Int8Engine
+//! ```
+//!
+//! [`QuantSpec`] gathers every quantization knob (threshold symmetry,
+//! per-filter weight scales, static calibrator, rounding) into one value,
+//! and [`ThresholdSet`] is the single typed representation of adjusted
+//! thresholds — replacing the old split between [`Trained`] and a
+//! stringly-keyed trainable map (unknown keys are now a hard error, see
+//! [`ThresholdSet::from_trainables`]).
+//!
+//! The legacy [`crate::coordinator::Pipeline`] is kept for one release as
+//! a thin deprecated shim over [`SessionCore`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::evaluate::{accuracy_with, batch_size_of};
+use crate::coordinator::finetune::{self, FinetuneOpts};
+use crate::coordinator::marshal::{build_inputs, split_outputs, Group};
+use crate::data::{Batcher, Split};
+use crate::int8::serve::{EngineOptions, Int8Engine};
+use crate::int8::QModel;
+use crate::model::store::SitesJson;
+use crate::model::{GraphDef, ModelStore};
+use crate::runtime::{Artifact, Registry};
+use crate::tensor::Tensor;
+
+use super::calibrate::{CalibStats, Calibrator};
+use super::dws::{self, PatternReport};
+use super::export::{self, QuantMode, Rounding, Trained};
+use super::fold;
+
+// ---------------------------------------------------------------------
+// QuantSpec
+// ---------------------------------------------------------------------
+
+/// One value holding every quantization knob of the paper's grid: the
+/// threshold symmetry (Tables 1–2 rows), per-filter weight scales
+/// (§3.1.5, Table 1 vs Table 2), the static threshold [`Calibrator`]
+/// (A1 ablation; `Max` is the paper default) and the [`Rounding`] mode.
+///
+/// The legacy [`QuantMode`] is the (symmetry × per-filter) projection of
+/// this spec; [`QuantSpec::mode`] / [`QuantSpec::from_mode`] convert.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSpec {
+    /// Asymmetric activation thresholds (eq. 21–23) instead of symmetric.
+    pub asymmetric: bool,
+    /// Per-filter (vector) weight thresholds instead of per-tensor.
+    pub per_filter: bool,
+    /// Static calibrator applied to the calibrated ranges before the
+    /// threshold stage. `Max` (the paper default) is a no-op; percentile
+    /// and KL calibrators shrink the ranges from activation histograms
+    /// (requires the `calib_hist` artifact).
+    pub calibrator: Calibrator,
+    /// Rounding mode marker (the engine rounds ties-to-even at quantize
+    /// time and uses gemmlowp rounding in requantization).
+    pub rounding: Rounding,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec {
+            asymmetric: false,
+            per_filter: false,
+            calibrator: Calibrator::Max,
+            rounding: Rounding::TiesEven,
+        }
+    }
+}
+
+impl QuantSpec {
+    /// Spec equivalent to a legacy [`QuantMode`], with default calibrator
+    /// and rounding.
+    pub fn from_mode(mode: QuantMode) -> Self {
+        QuantSpec {
+            asymmetric: mode.asym(),
+            per_filter: mode.vector(),
+            ..Default::default()
+        }
+    }
+
+    /// The (symmetry × per-filter) projection of this spec.
+    pub fn mode(self) -> QuantMode {
+        match (self.asymmetric, self.per_filter) {
+            (false, false) => QuantMode::SymScalar,
+            (false, true) => QuantMode::SymVector,
+            (true, false) => QuantMode::AsymScalar,
+            (true, true) => QuantMode::AsymVector,
+        }
+    }
+
+    /// Replace the static calibrator.
+    pub fn with_calibrator(mut self, cal: Calibrator) -> Self {
+        self.calibrator = cal;
+        self
+    }
+
+    /// Parse a spec from CLI-style strings: a [`QuantMode`] name
+    /// (`sym_scalar` | `sym_vector` | `asym_scalar` | `asym_vector`) and
+    /// a [`Calibrator`] name (`max` | `p99`/`p999`/`p9999` | `kl`).
+    pub fn parse(mode: &str, calibrator: &str) -> Result<Self> {
+        Ok(QuantSpec::from_mode(QuantMode::parse(mode)?)
+            .with_calibrator(Calibrator::parse(calibrator)?))
+    }
+}
+
+// ---------------------------------------------------------------------
+// CalibOpts
+// ---------------------------------------------------------------------
+
+/// Options for the calibration stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CalibOpts {
+    /// Calibration images from the train split (paper: 100). Values
+    /// below one calibration batch are rounded up to a full batch by
+    /// the pass itself.
+    pub images: usize,
+}
+
+impl Default for CalibOpts {
+    fn default() -> Self {
+        CalibOpts { images: 100 }
+    }
+}
+
+impl CalibOpts {
+    /// Calibrate on `images` training images.
+    pub fn images(images: usize) -> Self {
+        CalibOpts { images }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ThresholdSet
+// ---------------------------------------------------------------------
+
+/// The single typed representation of adjusted FAT thresholds: per-site
+/// activation scales (α, or α_T/α_R in asymmetric mode) plus per-layer
+/// weight scales, always tagged with the [`QuantMode`] they were built
+/// for.
+///
+/// This replaces the old split between the exporter's [`Trained`] struct
+/// and the stringly-keyed trainable map returned by the fine-tune
+/// artifacts: [`ThresholdSet::from_trainables`] performs explicit key
+/// parsing and rejects unknown keys and shape mismatches instead of
+/// silently ignoring them.
+#[derive(Debug, Clone)]
+pub struct ThresholdSet {
+    mode: QuantMode,
+    trained: Trained,
+}
+
+impl ThresholdSet {
+    /// Identity thresholds (α = 1): "quantization without fine-tuning".
+    pub fn identity(g: &GraphDef, mode: QuantMode, num_sites: usize) -> Self {
+        ThresholdSet { mode, trained: Trained::identity(g, mode, num_sites) }
+    }
+
+    /// Wrap an exporter-form [`Trained`] that is already known to match
+    /// `mode` (legacy interop; prefer [`ThresholdSet::from_trainables`]).
+    pub fn from_parts(mode: QuantMode, trained: Trained) -> Self {
+        ThresholdSet { mode, trained }
+    }
+
+    /// Parse a trainable map (as produced by the `train_step_*`
+    /// artifacts) into a typed threshold set.
+    ///
+    /// Accepted keys are exactly `act_a`, `act_at`, `act_ar` (length =
+    /// number of quantization sites) and `w_a:<node>` where `<node>` is
+    /// a conv-like node of `g`. Any other key — and any length mismatch —
+    /// is an error, so a renamed or misrouted trainable can no longer be
+    /// silently dropped.
+    pub fn from_trainables(
+        g: &GraphDef,
+        mode: QuantMode,
+        num_sites: usize,
+        tr: &BTreeMap<String, Tensor>,
+    ) -> Result<Self> {
+        let mut out = Trained::identity(g, mode, num_sites);
+        for (k, t) in tr {
+            let v = t.as_f32()?.to_vec();
+            let check_sites = |name: &str, len: usize| -> Result<()> {
+                anyhow::ensure!(
+                    len == num_sites,
+                    "trainable {name}: expected {num_sites} per-site \
+                     values, got {len}"
+                );
+                Ok(())
+            };
+            match k.as_str() {
+                "act_a" => {
+                    check_sites("act_a", v.len())?;
+                    out.act_a = v;
+                }
+                "act_at" => {
+                    check_sites("act_at", v.len())?;
+                    out.act_at = v;
+                }
+                "act_ar" => {
+                    check_sites("act_ar", v.len())?;
+                    out.act_ar = v;
+                }
+                _ => {
+                    let Some(node) = k.strip_prefix("w_a:") else {
+                        anyhow::bail!(
+                            "unknown trainable key `{k}` (expected act_a, \
+                             act_at, act_ar or w_a:<node>)"
+                        );
+                    };
+                    let expect = out.w_a.get(node).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "trainable `{k}` names `{node}`, which is not \
+                             a conv-like node of graph `{}`",
+                            g.name
+                        )
+                    })?;
+                    anyhow::ensure!(
+                        v.len() == expect.len(),
+                        "trainable `{k}`: expected {} weight scales for \
+                         {mode:?}, got {}",
+                        expect.len(),
+                        v.len()
+                    );
+                    out.w_a.insert(node.to_string(), v);
+                }
+            }
+        }
+        Ok(ThresholdSet { mode, trained: out })
+    }
+
+    /// The quantization mode these thresholds were built for.
+    pub fn mode(&self) -> QuantMode {
+        self.mode
+    }
+
+    /// Exporter-facing view of the thresholds.
+    pub fn trained(&self) -> &Trained {
+        &self.trained
+    }
+
+    /// Consume into the exporter's representation.
+    pub fn into_trained(self) -> Trained {
+        self.trained
+    }
+}
+
+// ---------------------------------------------------------------------
+// SessionCore
+// ---------------------------------------------------------------------
+
+/// Shared state + primitive operations behind every session stage: the
+/// model's artifacts, folded graph, quant-site metadata and (mutable)
+/// folded weights.
+///
+/// Most callers should drive the staged [`QuantSession`] API instead;
+/// the core is public so studies and the legacy
+/// [`crate::coordinator::Pipeline`] shim can reach the primitives.
+#[derive(Clone)]
+pub struct SessionCore {
+    /// Artifact registry (lazily compiles each HLO module once).
+    pub reg: Arc<Registry>,
+    /// On-disk model directory handle.
+    pub store: ModelStore,
+    /// BN-folded graph IR.
+    pub graph: GraphDef,
+    /// Quantization-site metadata.
+    pub sites: SitesJson,
+    /// Rust-folded weights (mutated in place by §3.3 rescaling).
+    pub weights: BTreeMap<String, Tensor>,
+}
+
+impl SessionCore {
+    /// Open a model's artifact directory and fold its weights (eq. 10–11).
+    pub fn open<P: AsRef<Path>>(
+        reg: Arc<Registry>,
+        artifacts: P,
+        model: &str,
+    ) -> Result<Self> {
+        let store = ModelStore::open(&artifacts, model)?;
+        let raw_graph = store.graph()?;
+        let graph = store.folded_graph()?;
+        let sites = store.sites()?;
+        let raw = store.raw_weights()?;
+        // BN folding happens here, in Rust (eq. 10-11); the Python-folded
+        // weights only serve as a golden cross-check in tests.
+        let weights = fold::fold_bn(&raw_graph, &raw)?;
+        Ok(SessionCore { reg, store, graph, sites, weights })
+    }
+
+    /// Compiled artifact handle by name.
+    pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
+        self.reg.get(self.store.artifact_path(name))
+    }
+
+    /// Run the calibration pass over `images` training images.
+    pub fn calibrate(&self, images: usize) -> Result<CalibStats> {
+        let art = self.artifact("calib_stats")?;
+        let bs = batch_size_of(&art, "1")?;
+        let mut stats = CalibStats::new(self.sites.sites.len());
+        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
+        let batcher = Batcher::new(Split::Train, indices, bs);
+        for (x, _) in batcher.epoch_iter(0) {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[Group::Map(&self.weights), Group::Single(&x)],
+            )?;
+            let outs = art.execute(&inputs)?;
+            let o = split_outputs(&art.manifest, outs)?;
+            let mm = o.singles[&0].as_f32()?;
+            for (i, s) in stats.site_minmax.iter_mut().enumerate() {
+                s.update(mm[i * 2], mm[i * 2 + 1]);
+            }
+            for (key, t) in &o.maps[&1] {
+                let nid = key.trim_start_matches("ch:").to_string();
+                let d = t.as_f32()?;
+                let c = t.shape[1];
+                let entry = stats
+                    .channel_minmax
+                    .entry(nid)
+                    .or_insert_with(|| vec![Default::default(); c]);
+                for (ci, e) in entry.iter_mut().enumerate() {
+                    e.update(d[ci], d[c + ci]);
+                }
+            }
+            stats.batches += 1;
+        }
+        Ok(stats)
+    }
+
+    /// Second pass: per-site histograms over the calibrated ranges (used
+    /// by the percentile/KL calibrators and the A1 ablation).
+    pub fn calibrate_hist(
+        &self,
+        stats: &CalibStats,
+        images: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        let art = self.artifact("calib_hist")?;
+        let bs = batch_size_of(&art, "2")?;
+        let act_t = stats.act_t_tensor();
+        let nsites = self.sites.sites.len();
+        let mut hists: Vec<Vec<u32>> = vec![];
+        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
+        let batcher = Batcher::new(Split::Train, indices, bs);
+        for (x, _) in batcher.epoch_iter(0) {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(&self.weights),
+                    Group::Single(&act_t),
+                    Group::Single(&x),
+                ],
+            )?;
+            let outs = art.execute(&inputs)?;
+            let o = split_outputs(&art.manifest, outs)?;
+            let h = o.singles[&0].as_i32()?;
+            let bins = h.len() / nsites;
+            if hists.is_empty() {
+                hists = vec![vec![0u32; bins]; nsites];
+            }
+            for s in 0..nsites {
+                for b in 0..bins {
+                    hists[s][b] += h[s * bins + b] as u32;
+                }
+            }
+        }
+        Ok(hists)
+    }
+
+    /// FP32 accuracy through the AOT `fp_forward` artifact.
+    pub fn fp_accuracy(&self, val_images: usize) -> Result<f64> {
+        let art = self.artifact("fp_forward")?;
+        let bs = batch_size_of(&art, "1")?;
+        accuracy_with(bs, val_images, |x| {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[Group::Map(&self.weights), Group::Single(x)],
+            )?;
+            Ok(art.execute(&inputs)?.remove(0))
+        })
+    }
+
+    /// Accuracy of the fake-quant forward under a trainable map.
+    pub fn quant_accuracy(
+        &self,
+        mode: QuantMode,
+        stats: &CalibStats,
+        trained: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        let art = self.artifact(&format!("quant_fwd_{}", mode.name()))?;
+        let bs = batch_size_of(&art, "3")?;
+        let act_t = stats.act_t_tensor();
+        accuracy_with(bs, val_images, |x| {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(&self.weights),
+                    Group::Single(&act_t),
+                    Group::Map(trained),
+                    Group::Single(x),
+                ],
+            )?;
+            Ok(art.execute(&inputs)?.remove(0))
+        })
+    }
+
+    /// §4.2 point-wise variant (mobilenet only).
+    pub fn pointwise_accuracy(
+        &self,
+        stats: &CalibStats,
+        pw: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        let art = self.artifact("quant_fwd_pw")?;
+        let bs = batch_size_of(&art, "3")?;
+        let act_t = stats.act_t_tensor();
+        accuracy_with(bs, val_images, |x| {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(&self.weights),
+                    Group::Single(&act_t),
+                    Group::Map(pw),
+                    Group::Single(x),
+                ],
+            )?;
+            Ok(art.execute(&inputs)?.remove(0))
+        })
+    }
+
+    /// FAT threshold fine-tuning (RMSE distillation, unlabeled).
+    pub fn finetune(
+        &self,
+        mode: QuantMode,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: impl FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
+        finetune::run(&art, &self.weights, &stats.act_t_tensor(), opts, progress)
+    }
+
+    /// §4.2 point-wise fine-tuning (same loop, `train_step_pw` artifact).
+    pub fn finetune_pointwise(
+        &self,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: impl FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        let art = self.artifact("train_step_pw")?;
+        finetune::run(&art, &self.weights, &stats.act_t_tensor(), opts, progress)
+    }
+
+    /// Inject per-filter range disparity (DESIGN.md §2 substitution for
+    /// the disparity of real ImageNet checkpoints). Function-preserving.
+    pub fn inject_spread(&mut self, seed: u64, span_log2: f32) -> Result<usize> {
+        dws::inject_spread(&self.graph, &mut self.weights, seed, span_log2)
+    }
+
+    /// Apply §3.3 weight rescaling in place (before quantization).
+    pub fn dws_rescale(
+        &mut self,
+        stats: &CalibStats,
+    ) -> Result<Vec<PatternReport>> {
+        let ch_max: BTreeMap<String, Vec<f32>> = stats
+            .channel_minmax
+            .iter()
+            .map(|(k, v)| (k.clone(), v.iter().map(|mm| mm.max).collect()))
+            .collect();
+        dws::rescale_model(&self.graph, &mut self.weights, &ch_max)
+    }
+
+    /// Identity trainable map shaped from the artifact manifest.
+    pub fn identity_trainables(
+        &self,
+        mode: QuantMode,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
+        Ok(finetune::init_trainables(&art))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 0: QuantSession (opened)
+// ---------------------------------------------------------------------
+
+/// An opened quantization session (stage 0 of the dataflow): the model
+/// is loaded and folded but not yet calibrated. The only way forward is
+/// [`QuantSession::calibrate`].
+pub struct QuantSession {
+    core: Arc<SessionCore>,
+}
+
+impl QuantSession {
+    /// Open `model` under `artifacts` (see [`SessionCore::open`]).
+    pub fn open<P: AsRef<Path>>(
+        reg: Arc<Registry>,
+        artifacts: P,
+        model: &str,
+    ) -> Result<Self> {
+        Ok(QuantSession { core: Arc::new(SessionCore::open(reg, artifacts, model)?) })
+    }
+
+    /// Shared state + primitives behind this session.
+    pub fn core(&self) -> &SessionCore {
+        &self.core
+    }
+
+    /// FP32 baseline accuracy (available at every stage).
+    pub fn fp_accuracy(&self, val_images: usize) -> Result<f64> {
+        self.core.fp_accuracy(val_images)
+    }
+
+    /// Inject per-filter range disparity before calibration
+    /// (function-preserving; DESIGN.md §2). Returns the number of
+    /// patterns touched.
+    pub fn inject_spread(&mut self, seed: u64, span_log2: f32) -> Result<usize> {
+        Arc::make_mut(&mut self.core).inject_spread(seed, span_log2)
+    }
+
+    /// Stage 1 transition: run the calibration pass. Non-consuming, so
+    /// studies can calibrate one opened model several times (e.g. the
+    /// calibration-set-size ablation).
+    pub fn calibrate(&self, opts: CalibOpts) -> Result<Calibrated> {
+        let stats = self.core.calibrate(opts.images)?;
+        Ok(Calibrated {
+            core: self.core.clone(),
+            opts,
+            stats,
+            reports: vec![],
+            refresh: true,
+            hists: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// Stage 1 transition with externally supplied statistics (e.g.
+    /// restored from a previous run's calibration). `opts` must describe
+    /// how `stats` were produced: the percentile/KL histogram pass uses
+    /// `opts.images`. Mutating stages ([`Calibrated::dws_rescale`]) skip
+    /// the automatic re-calibration pass for such sessions, since the
+    /// supplied stats cannot be regenerated faithfully here.
+    pub fn assume_calibrated(
+        &self,
+        stats: CalibStats,
+        opts: CalibOpts,
+    ) -> Calibrated {
+        Calibrated {
+            core: self.core.clone(),
+            opts,
+            stats,
+            reports: vec![],
+            refresh: false,
+            hists: std::sync::OnceLock::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 1: Calibrated
+// ---------------------------------------------------------------------
+
+/// A calibrated session (stage 1): per-site ranges are known. Optional
+/// weight-mutating steps ([`Calibrated::dws_rescale`],
+/// [`Calibrated::inject_spread`]) keep the stage; the threshold
+/// transitions are [`Calibrated::finetune`] and [`Calibrated::identity`].
+pub struct Calibrated {
+    core: Arc<SessionCore>,
+    opts: CalibOpts,
+    stats: CalibStats,
+    reports: Vec<PatternReport>,
+    /// Whether the stats came from this session's own calibration pass.
+    /// Externally supplied stats ([`QuantSession::assume_calibrated`])
+    /// cannot be refreshed, so mutating stages skip re-calibration.
+    refresh: bool,
+    /// Per-site activation histograms, computed at most once per
+    /// calibration (they depend only on `stats`/`opts`; the mutating
+    /// stage transitions reset this cache along with `stats`).
+    hists: std::sync::OnceLock<Vec<Vec<u32>>>,
+}
+
+impl Calibrated {
+    /// Shared state + primitives behind this session.
+    pub fn core(&self) -> &SessionCore {
+        &self.core
+    }
+
+    /// Calibration statistics of this stage.
+    pub fn stats(&self) -> &CalibStats {
+        &self.stats
+    }
+
+    /// §3.3 rescale reports accumulated by [`Calibrated::dws_rescale`].
+    pub fn rescale_reports(&self) -> &[PatternReport] {
+        &self.reports
+    }
+
+    /// FP32 baseline accuracy.
+    pub fn fp_accuracy(&self, val_images: usize) -> Result<f64> {
+        self.core.fp_accuracy(val_images)
+    }
+
+    /// Apply §3.3 DWS→Conv mutual weight rescaling, then re-run the
+    /// calibration pass (thresholds must be re-calibrated after weights
+    /// move). Consumes the stage because it mutates the model.
+    pub fn dws_rescale(mut self) -> Result<Calibrated> {
+        let reports =
+            Arc::make_mut(&mut self.core).dws_rescale(&self.stats)?;
+        self.reports.extend(reports);
+        if self.refresh {
+            self.stats = self.core.calibrate(self.opts.images)?;
+        }
+        self.hists = std::sync::OnceLock::new(); // weights moved; recompute
+        Ok(self)
+    }
+
+    /// Inject per-filter range disparity (DESIGN.md §2), then re-run the
+    /// calibration pass. Prefer [`QuantSession::inject_spread`] (before
+    /// the first calibration) when possible — it saves a pass.
+    pub fn inject_spread(mut self, seed: u64, span_log2: f32) -> Result<Calibrated> {
+        Arc::make_mut(&mut self.core).inject_spread(seed, span_log2)?;
+        if self.refresh {
+            self.stats = self.core.calibrate(self.opts.images)?;
+        }
+        self.hists = std::sync::OnceLock::new(); // weights moved; recompute
+        Ok(self)
+    }
+
+    /// §4.2 point-wise weight fine-tuning (side path of the ladder; the
+    /// main dataflow is [`Calibrated::finetune`]). Takes the spec so its
+    /// static calibrator applies to these stats too, keeping the §4.2
+    /// ladder rungs comparable under non-max calibrators.
+    pub fn finetune_pointwise(
+        &self,
+        spec: &QuantSpec,
+        opts: &FinetuneOpts,
+        progress: impl FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        let stats = self.adjusted_stats(spec)?;
+        self.core.finetune_pointwise(&stats, opts, progress)
+    }
+
+    /// Accuracy of the §4.2 point-wise fake-quant forward (same
+    /// calibrator handling as [`Calibrated::finetune_pointwise`]).
+    pub fn pointwise_accuracy(
+        &self,
+        spec: &QuantSpec,
+        pw: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        let stats = self.adjusted_stats(spec)?;
+        self.core.pointwise_accuracy(&stats, pw, val_images)
+    }
+
+    /// The activation histograms for this calibration, running the
+    /// `calib_hist` artifact pass at most once per stage.
+    fn hists(&self) -> Result<&[Vec<u32>]> {
+        if self.hists.get().is_none() {
+            let h = self
+                .core
+                .calibrate_hist(&self.stats, self.opts.images.max(1))?;
+            let _ = self.hists.set(h); // racing setters computed equal data
+        }
+        Ok(self.hists.get().expect("histogram cache just filled").as_slice())
+    }
+
+    /// Calibration statistics with the spec's static calibrator applied
+    /// (no-op for [`Calibrator::Max`]).
+    fn adjusted_stats(&self, spec: &QuantSpec) -> Result<CalibStats> {
+        let mut stats = self.stats.clone();
+        if spec.calibrator != Calibrator::Max {
+            stats.apply_calibrator(spec.calibrator, self.hists()?)?;
+        }
+        Ok(stats)
+    }
+
+    /// Stage 2 transition: FAT fine-tuning of the threshold scales
+    /// (RMSE distillation on unlabeled data, Adam + cosine annealing
+    /// with optimizer reset). Non-consuming so one calibration can feed
+    /// several specs (e.g. the Tables 1–2 mode grid).
+    pub fn finetune(
+        &self,
+        spec: &QuantSpec,
+        opts: &FinetuneOpts,
+        progress: impl FnMut(usize, f32, f32),
+    ) -> Result<Thresholded> {
+        let mode = spec.mode();
+        let stats = self.adjusted_stats(spec)?;
+        let (tr, losses) = self.core.finetune(mode, &stats, opts, progress)?;
+        let thresholds = ThresholdSet::from_trainables(
+            &self.core.graph,
+            mode,
+            self.core.sites.sites.len(),
+            &tr,
+        )?;
+        Ok(Thresholded {
+            core: self.core.clone(),
+            spec: *spec,
+            stats,
+            thresholds,
+            trainables: Some(tr),
+            identity_tr: std::sync::OnceLock::new(),
+            losses,
+        })
+    }
+
+    /// Stage 2 transition without fine-tuning: identity thresholds
+    /// (α = 1), i.e. pure calibration-based quantization.
+    pub fn identity(&self, spec: &QuantSpec) -> Result<Thresholded> {
+        let stats = self.adjusted_stats(spec)?;
+        let thresholds = ThresholdSet::identity(
+            &self.core.graph,
+            spec.mode(),
+            self.core.sites.sites.len(),
+        );
+        Ok(Thresholded {
+            core: self.core.clone(),
+            spec: *spec,
+            stats,
+            thresholds,
+            trainables: None,
+            identity_tr: std::sync::OnceLock::new(),
+            losses: vec![],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage 2: Thresholded
+// ---------------------------------------------------------------------
+
+/// A session with final thresholds (stage 2): ready to evaluate the
+/// fake-quant forward and to export the integer-only model.
+pub struct Thresholded {
+    core: Arc<SessionCore>,
+    spec: QuantSpec,
+    stats: CalibStats,
+    thresholds: ThresholdSet,
+    /// Trainable map as returned by the fine-tune artifact (absent for
+    /// identity thresholds — synthesized from the manifest on first use
+    /// and cached in `identity_tr`).
+    trainables: Option<BTreeMap<String, Tensor>>,
+    identity_tr: std::sync::OnceLock<BTreeMap<String, Tensor>>,
+    losses: Vec<f32>,
+}
+
+impl Thresholded {
+    /// Shared state + primitives behind this session.
+    pub fn core(&self) -> &SessionCore {
+        &self.core
+    }
+
+    /// The spec these thresholds were produced under.
+    pub fn spec(&self) -> &QuantSpec {
+        &self.spec
+    }
+
+    /// Calibrator-adjusted calibration statistics.
+    pub fn stats(&self) -> &CalibStats {
+        &self.stats
+    }
+
+    /// The typed threshold set.
+    pub fn thresholds(&self) -> &ThresholdSet {
+        &self.thresholds
+    }
+
+    /// Per-step fine-tune losses (empty for identity thresholds).
+    pub fn losses(&self) -> &[f32] {
+        &self.losses
+    }
+
+    /// The trainable map backing the fake-quant artifact: the fine-tuned
+    /// map, or (for identity thresholds) a manifest-shaped identity map
+    /// built once and cached.
+    fn trainable_map(&self) -> Result<&BTreeMap<String, Tensor>> {
+        if let Some(tr) = &self.trainables {
+            return Ok(tr);
+        }
+        if self.identity_tr.get().is_none() {
+            let tr = self.core.identity_trainables(self.spec.mode())?;
+            let _ = self.identity_tr.set(tr); // racing setters built equal maps
+        }
+        Ok(self.identity_tr.get().expect("identity map just filled"))
+    }
+
+    /// Accuracy of the fake-quant forward under these thresholds (runs
+    /// through the AOT `quant_fwd_*` artifact).
+    pub fn quant_accuracy(&self, val_images: usize) -> Result<f64> {
+        let tr = self.trainable_map()?;
+        self.core.quant_accuracy(self.spec.mode(), &self.stats, tr, val_images)
+    }
+
+    /// Stage 3 transition: build the integer-only deployment model.
+    /// This compiles the engine's execution plan once (`int8::plan`).
+    pub fn export(&self) -> Result<QModel> {
+        export_with(
+            &self.core.graph,
+            &self.core.weights,
+            &self.core.sites,
+            &self.stats,
+            &self.spec,
+            &self.thresholds,
+        )
+    }
+
+    /// Stage 3 transition straight to a serving handle: export the
+    /// integer-only model and wrap it in an [`Int8Engine`].
+    pub fn serve(&self, opts: EngineOptions) -> Result<Int8Engine> {
+        Ok(Int8Engine::new(self.export()?, opts))
+    }
+}
+
+/// Build a quantized model from explicit parts — the one path into
+/// [`export::build_qmodel`]. The threshold set's mode must match the
+/// spec (a [`ThresholdSet`] built for another mode is a hard error, not
+/// a silent reinterpretation).
+pub fn export_with(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    sites: &SitesJson,
+    stats: &CalibStats,
+    spec: &QuantSpec,
+    thresholds: &ThresholdSet,
+) -> Result<QModel> {
+    anyhow::ensure!(
+        thresholds.mode() == spec.mode(),
+        "threshold set was built for {:?} but the spec requests {:?}",
+        thresholds.mode(),
+        spec.mode()
+    );
+    export::build_qmodel(g, weights, sites, stats, spec.mode(), thresholds.trained())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> GraphDef {
+        GraphDef::from_json(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[8,8,3]},
+             {"id":"c","op":"conv","inputs":["input"],"k":1,"stride":1,"cin":3,"cout":4,"bias":true},
+             {"id":"g","op":"gap","inputs":["c"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":4,"cout":2,"bias":true}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spec_mode_roundtrip() {
+        for mode in QuantMode::all() {
+            assert_eq!(QuantSpec::from_mode(mode).mode(), mode);
+        }
+        let d = QuantSpec::default();
+        assert_eq!(d.mode(), QuantMode::SymScalar);
+        assert_eq!(d.calibrator, Calibrator::Max);
+    }
+
+    #[test]
+    fn spec_parse() {
+        let s = QuantSpec::parse("asym_vector", "p9999").unwrap();
+        assert_eq!(s.mode(), QuantMode::AsymVector);
+        assert_eq!(s.calibrator, Calibrator::Percentile(9999));
+        assert!(QuantSpec::parse("nope", "max").is_err());
+        assert!(QuantSpec::parse("sym_scalar", "nope").is_err());
+    }
+
+    #[test]
+    fn threshold_set_accepts_known_keys() {
+        let g = tiny_graph();
+        let mut m = BTreeMap::new();
+        m.insert("act_a".to_string(), Tensor::f32(vec![3], vec![0.9; 3]));
+        m.insert("w_a:c".to_string(), Tensor::f32(vec![1], vec![1.1]));
+        let ts = ThresholdSet::from_trainables(&g, QuantMode::SymScalar, 3, &m)
+            .unwrap();
+        assert_eq!(ts.trained().act_a, vec![0.9; 3]);
+        assert_eq!(ts.trained().w_a["c"], vec![1.1]);
+        // untouched entries keep identity defaults
+        assert_eq!(ts.trained().w_a["d"], vec![1.0]);
+    }
+
+    #[test]
+    fn threshold_set_rejects_unknown_keys() {
+        let g = tiny_graph();
+        let mut m = BTreeMap::new();
+        m.insert("act_alpha".to_string(), Tensor::f32(vec![3], vec![1.0; 3]));
+        let err = ThresholdSet::from_trainables(&g, QuantMode::SymScalar, 3, &m)
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown trainable key"));
+
+        let mut m = BTreeMap::new();
+        m.insert("w_a:nope".to_string(), Tensor::f32(vec![1], vec![1.0]));
+        assert!(
+            ThresholdSet::from_trainables(&g, QuantMode::SymScalar, 3, &m)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn threshold_set_rejects_shape_mismatch() {
+        let g = tiny_graph();
+        let mut m = BTreeMap::new();
+        m.insert("act_a".to_string(), Tensor::f32(vec![2], vec![1.0; 2]));
+        assert!(
+            ThresholdSet::from_trainables(&g, QuantMode::SymScalar, 3, &m)
+                .is_err()
+        );
+        // vector mode expects cout=4 scales for conv `c`
+        let mut m = BTreeMap::new();
+        m.insert("w_a:c".to_string(), Tensor::f32(vec![1], vec![1.0]));
+        assert!(
+            ThresholdSet::from_trainables(&g, QuantMode::SymVector, 3, &m)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn export_with_rejects_mode_mismatch() {
+        let g = tiny_graph();
+        let ts = ThresholdSet::identity(&g, QuantMode::SymScalar, 3);
+        let spec = QuantSpec::from_mode(QuantMode::SymVector);
+        let sites = SitesJson {
+            sites: vec![],
+            channel_stats: vec![],
+            weight_order: vec![],
+            val_acc_fp_pretrain: -1.0,
+        };
+        let err = export_with(
+            &g,
+            &BTreeMap::new(),
+            &sites,
+            &CalibStats::new(0),
+            &spec,
+            &ts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("spec requests"));
+    }
+}

@@ -1,11 +1,17 @@
 //! End-to-end pipeline tests: short FAT runs over the real artifacts,
 //! checking stage composition, §3.3 invariants and int8 agreement.
-//! Skipped gracefully before `make artifacts`.
+//! Skipped gracefully before `make artifacts`. These intentionally keep
+//! exercising the deprecated `Pipeline` shim (plus a shim-vs-session
+//! equivalence check); the staged-API tests live in
+//! `rust/tests/session_equiv.rs`.
+#![allow(deprecated)]
 
 use std::sync::Arc;
 
 use fat::coordinator::{Pipeline, PipelineConfig};
+use fat::int8::serve::{EngineOptions, Int8Engine};
 use fat::quant::export::QuantMode;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::runtime::{Registry, Runtime};
 
 fn setup() -> Option<(Arc<Registry>, std::path::PathBuf)> {
@@ -118,13 +124,49 @@ fn int8_engine_agrees_with_fake_quant() {
     let fake = p.quant_accuracy(mode, &stats, &tr, 200).unwrap();
     let trained = p.trained_of_map(mode, &tr).unwrap();
     let qm = p.export_int8(mode, &stats, &trained).unwrap();
-    let engine =
-        fat::coordinator::experiments::int8_accuracy(&qm, 200).unwrap();
+    let engine = Int8Engine::new(qm, EngineOptions::default());
+    let acc =
+        fat::coordinator::experiments::int8_accuracy(&engine, 200).unwrap();
     assert!(
-        (fake - engine).abs() <= 0.08,
-        "engine {engine} vs fake-quant {fake}"
+        (fake - acc).abs() <= 0.08,
+        "engine {acc} vs fake-quant {fake}"
     );
-    assert!(qm.param_bytes > 10_000);
+    assert!(engine.param_bytes() > 10_000);
+}
+
+/// The redesigned session path must be bit-exact with the legacy
+/// `Pipeline` path for every mode: same calibration, same identity
+/// thresholds, same exported integer model, same logits.
+#[test]
+fn session_matches_pipeline_bit_exact_per_mode() {
+    let (reg, artifacts) = need!(setup());
+    let p =
+        Pipeline::new(reg.clone(), &artifacts, "mnas_mini_10").unwrap();
+    let session =
+        QuantSession::open(reg, &artifacts, "mnas_mini_10").unwrap();
+    let stats = p.calibrate(50).unwrap();
+    let cal = session.calibrate(CalibOpts::images(50)).unwrap();
+    let (x, _) = fat::data::loader::batch(
+        fat::data::Split::Val,
+        &(0..20).collect::<Vec<_>>(),
+    );
+    for mode in QuantMode::all() {
+        let legacy = p
+            .export_int8(mode, &stats, &p.identity_trained(mode))
+            .unwrap();
+        let engine = cal
+            .identity(&QuantSpec::from_mode(mode))
+            .unwrap()
+            .serve(EngineOptions::threads(2))
+            .unwrap();
+        let want = legacy.run_batch_with(&x, 1).unwrap();
+        let got = engine.infer_batch(&x).unwrap();
+        let (a, b) = (want.as_f32().unwrap(), got.as_f32().unwrap());
+        assert_eq!(a.len(), b.len(), "{mode:?}");
+        for i in 0..a.len() {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "{mode:?} logit {i}");
+        }
+    }
 }
 
 #[test]

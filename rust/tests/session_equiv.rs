@@ -1,0 +1,309 @@
+//! Equivalence tests for the redesigned API (no artifacts needed):
+//!
+//! * the session-layer export path (`QuantSpec` + `ThresholdSet` +
+//!   `export_with`) must be bit-exact with the pre-redesign path
+//!   (`Trained` + `build_qmodel`) for every [`QuantMode`];
+//! * the [`Int8Engine`] serving handle with its pooled per-worker
+//!   execution states must be bit-exact with the bare
+//!   `QModel::run_batch_with` across repeated calls and thread counts
+//!   {1, 2, 8};
+//! * [`ThresholdSet::from_trainables`] must accept exactly the trainable
+//!   key grammar and reject everything else (the old
+//!   `Pipeline::trained_of_map` silently dropped unknown keys).
+
+use std::collections::BTreeMap;
+
+use fat::int8::serve::{EngineOptions, Int8Engine};
+use fat::int8::QModel;
+use fat::model::store::{Site, SitesJson};
+use fat::model::{GraphDef, Op};
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::quant::session::{export_with, QuantSpec, ThresholdSet};
+use fat::tensor::Tensor;
+use fat::util::prop;
+
+/// Residual branch + DWS chain + dense head; odd channel counts, odd
+/// input size, a stride-2 dwconv, and both relu flavours (the same
+/// geometry as `engine_equiv.rs`).
+const GRAPH: &str = r#"{
+  "name": "equiv", "num_classes": 4,
+  "nodes": [
+    {"id": "input", "op": "input", "inputs": [], "shape": [9, 9, 3]},
+    {"id": "c0", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1, "cin": 3, "cout": 5, "bias": true},
+    {"id": "r0", "op": "relu6", "inputs": ["c0"]},
+    {"id": "dw", "op": "dwconv", "inputs": ["r0"], "k": 3, "stride": 2, "ch": 5, "bias": true},
+    {"id": "r1", "op": "relu", "inputs": ["dw"]},
+    {"id": "c1", "op": "conv", "inputs": ["r1"], "k": 1, "stride": 1, "cin": 5, "cout": 7, "bias": true},
+    {"id": "c2", "op": "conv", "inputs": ["r1"], "k": 1, "stride": 1, "cin": 5, "cout": 7, "bias": true},
+    {"id": "ad", "op": "add", "inputs": ["c1", "c2"]},
+    {"id": "g", "op": "gap", "inputs": ["ad"]},
+    {"id": "d", "op": "dense", "inputs": ["g"], "cin": 7, "cout": 4, "bias": true}
+  ]}"#;
+
+fn weights_for(g: &GraphDef) -> BTreeMap<String, Tensor> {
+    let mut w = BTreeMap::new();
+    let mut seed = 100u64;
+    for n in g.conv_like() {
+        let (wlen, cout) = match n.op {
+            Op::Conv => (n.k * n.k * n.cin * n.cout, n.cout),
+            Op::DwConv => (n.k * n.k * n.ch, n.ch),
+            Op::Dense => (n.cin * n.cout, n.cout),
+            _ => unreachable!(),
+        };
+        w.insert(
+            format!("{}.w", n.id),
+            Tensor::f32(vec![wlen], prop::f32s(seed, wlen, -0.6, 0.6)),
+        );
+        w.insert(
+            format!("{}.b", n.id),
+            Tensor::f32(vec![cout], prop::f32s(seed + 1, cout, -0.2, 0.2)),
+        );
+        seed += 2;
+    }
+    w
+}
+
+fn sites_for(g: &GraphDef) -> SitesJson {
+    SitesJson {
+        sites: g
+            .sites()
+            .into_iter()
+            .map(|(id, unsigned)| Site { id, unsigned })
+            .collect(),
+        channel_stats: vec![],
+        weight_order: g.folded_weight_order(),
+        val_acc_fp_pretrain: -1.0,
+    }
+}
+
+fn stats_for(s: &SitesJson) -> CalibStats {
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.5 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 3.0 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    st
+}
+
+struct Parts {
+    g: GraphDef,
+    w: BTreeMap<String, Tensor>,
+    s: SitesJson,
+    st: CalibStats,
+}
+
+fn parts() -> Parts {
+    let g = GraphDef::from_json(GRAPH).unwrap();
+    let w = weights_for(&g);
+    let s = sites_for(&g);
+    let st = stats_for(&s);
+    Parts { g, w, s, st }
+}
+
+/// Pre-redesign export path: `Trained` straight into `build_qmodel`.
+fn legacy_model(p: &Parts, mode: QuantMode) -> QModel {
+    let tr = Trained::identity(&p.g, mode, p.s.sites.len());
+    build_qmodel(&p.g, &p.w, &p.s, &p.st, mode, &tr).unwrap()
+}
+
+/// Redesigned export path: `QuantSpec` + `ThresholdSet` + `export_with`.
+fn session_model(p: &Parts, mode: QuantMode) -> QModel {
+    let spec = QuantSpec::from_mode(mode);
+    let ts = ThresholdSet::identity(&p.g, mode, p.s.sites.len());
+    export_with(&p.g, &p.w, &p.s, &p.st, &spec, &ts).unwrap()
+}
+
+fn input_for(g: &GraphDef, batch: usize, seed: u64) -> Tensor {
+    let sh = g.node("input").unwrap().input_shape.clone().unwrap();
+    let len = batch * sh[0] * sh[1] * sh[2];
+    Tensor::f32(
+        vec![batch, sh[0], sh[1], sh[2]],
+        prop::f32s(seed, len, -0.5, 3.0),
+    )
+}
+
+fn assert_logits_eq(a: &Tensor, b: &Tensor, tag: &str) {
+    assert_eq!(a.shape, b.shape, "{tag}");
+    let (af, bf) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+    for i in 0..af.len() {
+        assert_eq!(af[i].to_bits(), bf[i].to_bits(), "{tag} logit {i}");
+    }
+}
+
+#[test]
+fn session_export_matches_legacy_all_modes() {
+    let p = parts();
+    for mode in QuantMode::all() {
+        let legacy = legacy_model(&p, mode);
+        let session = session_model(&p, mode);
+        let x = input_for(&p.g, 5, 7);
+        let want = legacy.run_batch_with(&x, 1).unwrap();
+        let got = session.run_batch_with(&x, 1).unwrap();
+        assert_logits_eq(&want, &got, &format!("{mode:?}"));
+    }
+}
+
+#[test]
+fn threshold_set_from_trainables_matches_manual_trained() {
+    let p = parts();
+    let mode = QuantMode::AsymVector;
+    let nsites = p.s.sites.len();
+    // a trainable map with every key class exercised
+    let mut map = BTreeMap::new();
+    map.insert(
+        "act_at".to_string(),
+        Tensor::f32(vec![nsites], vec![0.05; nsites]),
+    );
+    map.insert(
+        "act_ar".to_string(),
+        Tensor::f32(vec![nsites], vec![0.93; nsites]),
+    );
+    map.insert("w_a:c1".to_string(), Tensor::f32(vec![7], vec![0.9; 7]));
+    let ts =
+        ThresholdSet::from_trainables(&p.g, mode, nsites, &map).unwrap();
+    // the manual pre-redesign equivalent
+    let mut tr = Trained::identity(&p.g, mode, nsites);
+    tr.act_at = vec![0.05; nsites];
+    tr.act_ar = vec![0.93; nsites];
+    tr.w_a.insert("c1".to_string(), vec![0.9; 7]);
+    let legacy = build_qmodel(&p.g, &p.w, &p.s, &p.st, mode, &tr).unwrap();
+    let session = export_with(
+        &p.g,
+        &p.w,
+        &p.s,
+        &p.st,
+        &QuantSpec::from_mode(mode),
+        &ts,
+    )
+    .unwrap();
+    let x = input_for(&p.g, 3, 21);
+    assert_logits_eq(
+        &legacy.run_batch_with(&x, 1).unwrap(),
+        &session.run_batch_with(&x, 1).unwrap(),
+        "finetuned-map equivalence",
+    );
+}
+
+#[test]
+fn from_trainables_rejects_unknown_and_misshaped_keys() {
+    let p = parts();
+    let nsites = p.s.sites.len();
+    // unknown key: the old trained_of_map silently dropped this
+    let mut map = BTreeMap::new();
+    map.insert(
+        "act_a_typo".to_string(),
+        Tensor::f32(vec![nsites], vec![1.0; nsites]),
+    );
+    let err =
+        ThresholdSet::from_trainables(&p.g, QuantMode::SymScalar, nsites, &map)
+            .unwrap_err();
+    assert!(
+        err.to_string().contains("unknown trainable key"),
+        "{err}"
+    );
+    // unknown node behind the w_a: prefix
+    let mut map = BTreeMap::new();
+    map.insert("w_a:ghost".to_string(), Tensor::f32(vec![1], vec![1.0]));
+    assert!(ThresholdSet::from_trainables(
+        &p.g,
+        QuantMode::SymScalar,
+        nsites,
+        &map
+    )
+    .is_err());
+    // wrong per-site length
+    let mut map = BTreeMap::new();
+    map.insert("act_a".to_string(), Tensor::f32(vec![1], vec![1.0]));
+    assert!(ThresholdSet::from_trainables(
+        &p.g,
+        QuantMode::SymScalar,
+        nsites,
+        &map
+    )
+    .is_err());
+}
+
+#[test]
+fn engine_pool_reuse_bit_exact_across_threads_and_calls() {
+    let p = parts();
+    let qm = legacy_model(&p, QuantMode::SymVector);
+    let x = input_for(&p.g, 7, 33); // odd batch vs every shard count
+    let want = qm.run_batch_with(&x, 1).unwrap();
+    for t in [1usize, 2, 8] {
+        let engine =
+            Int8Engine::new(qm.clone(), EngineOptions::threads(t));
+        assert_eq!(engine.threads(), t);
+        for call in 0..3 {
+            // repeated calls run on recycled pooled states
+            let got = engine.infer_batch(&x).unwrap();
+            assert_logits_eq(&want, &got, &format!("t={t} call={call}"));
+        }
+        let pooled = engine.pooled_states();
+        assert!(
+            (1..=t.min(7)).contains(&pooled),
+            "t={t}: expected 1..={} resting states, got {pooled}",
+            t.min(7)
+        );
+        // the pool is recycled, not regrown, on further calls
+        let _ = engine.infer_batch(&x).unwrap();
+        assert_eq!(engine.pooled_states(), pooled, "t={t}");
+    }
+}
+
+#[test]
+fn engine_handle_clones_share_model_and_pool() {
+    let p = parts();
+    let engine = Int8Engine::new(
+        legacy_model(&p, QuantMode::SymScalar),
+        EngineOptions::threads(2),
+    );
+    let clone = engine.clone();
+    let x = input_for(&p.g, 4, 5);
+    let a = engine.infer_batch(&x).unwrap();
+    let b = clone.infer_batch(&x).unwrap();
+    assert_logits_eq(&a, &b, "clone");
+    // both handles drain/refill the same pool
+    assert_eq!(engine.pooled_states(), clone.pooled_states());
+    assert_eq!(engine.param_bytes(), clone.param_bytes());
+}
+
+#[test]
+fn infer_u8_matches_infer_batch() {
+    let p = parts();
+    let engine = Int8Engine::new(
+        legacy_model(&p, QuantMode::AsymScalar),
+        EngineOptions::threads(1),
+    );
+    let sh = p.g.node("input").unwrap().input_shape.clone().unwrap();
+    let n: usize = sh.iter().product();
+    let bytes: Vec<u8> =
+        (0..n).map(|i| ((i * 37 + 11) % 256) as u8).collect();
+    let x: Vec<f32> = bytes.iter().map(|&b| b as f32 / 255.0).collect();
+    let t = Tensor::f32(vec![1, sh[0], sh[1], sh[2]], x);
+    let want = engine.infer_batch(&t).unwrap();
+    let got = engine.infer(&bytes).unwrap();
+    let wf = want.as_f32().unwrap();
+    assert_eq!(wf.len(), got.len());
+    for i in 0..got.len() {
+        assert_eq!(wf[i].to_bits(), got[i].to_bits(), "logit {i}");
+    }
+    // wrong byte count is a typed error, not a panic
+    assert!(engine.infer(&bytes[..n - 1]).is_err());
+}
+
+#[test]
+fn engine_options_default_follows_env_knob() {
+    let p = parts();
+    let engine = Int8Engine::new(
+        legacy_model(&p, QuantMode::SymScalar),
+        EngineOptions::default(),
+    );
+    assert_eq!(engine.threads(), fat::util::threads::fat_threads());
+    let pinned = Int8Engine::new(
+        legacy_model(&p, QuantMode::SymScalar),
+        EngineOptions::threads(3),
+    );
+    assert_eq!(pinned.threads(), 3);
+}
