@@ -1,0 +1,254 @@
+//! Native calibration passes (DESIGN.md §7): run the plain FP32 program
+//! over calibration batches and aggregate exactly what the AOT
+//! `calib_stats` / `calib_hist` artifacts produce — per-site (min, max),
+//! per-conv-channel (min, max) of the pre-activation output (feeding the
+//! §3.3 DWS rescale), and per-site histograms over the calibrated ranges
+//! (feeding [`CalibStats::apply_calibrator`]'s percentile/KL path).
+//!
+//! Images shard across the `FAT_THREADS` worker pool with one
+//! [`StatsSink`]/[`HistSink`] per worker; min/max and histogram counts
+//! are order-insensitive, so the merged statistics are deterministic for
+//! every thread count.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Split};
+use crate::quant::calibrate::{CalibStats, MinMax};
+
+use super::program::{FpProgram, FpState, Observer};
+
+/// Calibration batch size of the native backend (the artifact path reads
+/// its batch size from the manifest; the native executor is shape-agnostic).
+pub const CALIB_BATCH: usize = 25;
+
+/// Histogram bins of the native `calib_hist` pass (`CalibStats::site_hist`
+/// documents 128-bin histograms; the calibrators only need density).
+pub const HIST_BINS: usize = 128;
+
+/// Per-worker min/max aggregation sink.
+#[derive(Debug, Clone)]
+pub struct StatsSink {
+    pub minmax: Vec<MinMax>,
+    pub channels: BTreeMap<String, Vec<MinMax>>,
+}
+
+impl StatsSink {
+    pub fn new(num_sites: usize) -> Self {
+        StatsSink {
+            minmax: vec![MinMax::default(); num_sites],
+            channels: BTreeMap::new(),
+        }
+    }
+}
+
+impl Observer for StatsSink {
+    fn site(&mut self, site: usize, values: &[f32]) {
+        let mm = &mut self.minmax[site];
+        for &v in values {
+            mm.update(v, v);
+        }
+    }
+
+    fn channels(&mut self, node_id: &str, cout: usize, preact: &[f32]) {
+        let entry = self
+            .channels
+            .entry(node_id.to_string())
+            .or_insert_with(|| vec![MinMax::default(); cout]);
+        for (i, &v) in preact.iter().enumerate() {
+            entry[i % cout].update(v, v);
+        }
+    }
+}
+
+/// Per-worker histogram sink over fixed per-site ranges.
+#[derive(Debug, Clone)]
+pub struct HistSink {
+    ranges: Vec<(f32, f32)>,
+    pub hists: Vec<Vec<u32>>,
+}
+
+impl HistSink {
+    pub fn new(stats: &CalibStats) -> Self {
+        HistSink {
+            ranges: stats
+                .site_minmax
+                .iter()
+                .map(|mm| (mm.min, mm.max))
+                .collect(),
+            hists: vec![vec![0u32; HIST_BINS]; stats.site_minmax.len()],
+        }
+    }
+}
+
+impl Observer for HistSink {
+    fn site(&mut self, site: usize, values: &[f32]) {
+        let (lo, hi) = self.ranges[site];
+        let span = hi - lo;
+        let h = &mut self.hists[site];
+        if span.is_nan() || span <= 0.0 {
+            h[0] += values.len() as u32;
+            return;
+        }
+        let scale = HIST_BINS as f32 / span;
+        for &v in values {
+            let b = ((v - lo) * scale) as usize;
+            h[b.min(HIST_BINS - 1)] += 1;
+        }
+    }
+
+    fn channels(&mut self, _node_id: &str, _cout: usize, _preact: &[f32]) {}
+}
+
+/// Run one observed batch, sharding images across `threads` workers with
+/// one sink per worker; returns the per-worker sinks in shard order.
+fn observe_batch<S>(
+    prog: &FpProgram,
+    xd: &[f32],
+    n: usize,
+    threads: usize,
+    mk: impl Fn() -> S + Sync,
+) -> Result<Vec<S>>
+where
+    S: Observer + Send,
+{
+    let per = prog.input_len();
+    let t = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(t);
+    let mut out: Vec<Result<S>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for wi in 0..t {
+            let i0 = wi * chunk;
+            let i1 = (i0 + chunk).min(n);
+            if i0 >= i1 {
+                break;
+            }
+            let mk = &mk;
+            handles.push(s.spawn(move || -> Result<S> {
+                let mut sink = mk();
+                let mut st = FpState::default();
+                for i in i0..i1 {
+                    let img = &xd[i * per..(i + 1) * per];
+                    let logits =
+                        prog.run_image(img, &mut st, Some(&mut sink))?;
+                    st.recycle(logits.data);
+                }
+                Ok(sink)
+            }));
+        }
+        out = handles
+            .into_iter()
+            .map(|h| h.join().expect("calibration worker panicked"))
+            .collect();
+    });
+    out.into_iter().collect()
+}
+
+/// Native `calib_stats` pass: per-site and per-channel (min, max) over
+/// `images` training images (values below one batch round up to a full
+/// batch, like the artifact path).
+pub fn calib_stats(
+    prog: &FpProgram,
+    images: usize,
+    threads: usize,
+) -> Result<CalibStats> {
+    let bs = CALIB_BATCH;
+    let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
+    let batcher = Batcher::new(Split::Train, indices, bs);
+    let mut stats = CalibStats::new(prog.num_sites);
+    for (x, _) in batcher.epoch_iter(0) {
+        let n = x.shape[0];
+        let sinks = observe_batch(prog, x.as_f32()?, n, threads, || {
+            StatsSink::new(prog.num_sites)
+        })?;
+        for sink in sinks {
+            for (dst, src) in stats.site_minmax.iter_mut().zip(&sink.minmax)
+            {
+                dst.update(src.min, src.max);
+            }
+            for (node, mms) in sink.channels {
+                let entry = stats
+                    .channel_minmax
+                    .entry(node)
+                    .or_insert_with(|| vec![MinMax::default(); mms.len()]);
+                for (dst, src) in entry.iter_mut().zip(&mms) {
+                    dst.update(src.min, src.max);
+                }
+            }
+        }
+        stats.batches += 1;
+    }
+    Ok(stats)
+}
+
+/// Native `calib_hist` pass: per-site histograms (128 bins spanning each
+/// site's calibrated range) over `images` training images.
+pub fn calib_hist(
+    prog: &FpProgram,
+    stats: &CalibStats,
+    images: usize,
+    threads: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let bs = CALIB_BATCH;
+    let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
+    let batcher = Batcher::new(Split::Train, indices, bs);
+    let mut hists = vec![vec![0u32; HIST_BINS]; prog.num_sites];
+    for (x, _) in batcher.epoch_iter(0) {
+        let n = x.shape[0];
+        let sinks = observe_batch(prog, x.as_f32()?, n, threads, || {
+            HistSink::new(stats)
+        })?;
+        for sink in sinks {
+            for (dst, src) in hists.iter_mut().zip(&sink.hists) {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+    }
+    Ok(hists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn stats_cover_every_site_and_are_thread_invariant() {
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let s1 = calib_stats(&prog, 25, 1).unwrap();
+        let s4 = calib_stats(&prog, 25, 4).unwrap();
+        assert_eq!(s1.site_minmax.len(), sites.sites.len());
+        assert_eq!(s1.batches, 1);
+        for (a, b) in s1.site_minmax.iter().zip(&s4.site_minmax) {
+            assert!(a.min <= a.max);
+            assert_eq!(a.min.to_bits(), b.min.to_bits());
+            assert_eq!(a.max.to_bits(), b.max.to_bits());
+        }
+        // input site spans the synth pixel range, unsigned sites >= 0
+        let input_mm = &s1.site_minmax[0];
+        assert!(input_mm.min >= 0.0 && input_mm.max <= 3.0);
+        // per-channel stats exist for every conv-like (non-dense) node
+        for cs in &sites.channel_stats {
+            let ch = s1.channel_minmax.get(&cs.id).unwrap();
+            assert_eq!(ch.len(), cs.channels, "{}", cs.id);
+        }
+    }
+
+    #[test]
+    fn hists_count_every_observed_value() {
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let stats = calib_stats(&prog, 25, 2).unwrap();
+        let hists = calib_hist(&prog, &stats, 25, 2).unwrap();
+        assert_eq!(hists.len(), sites.sites.len());
+        // every site histogram holds one count per observed value:
+        // 25 images x site size; the input site has 32*32*3 values/img
+        let total: u64 = hists[0].iter().map(|&c| c as u64).sum();
+        assert_eq!(total, 25 * 32 * 32 * 3);
+    }
+}

@@ -1,0 +1,131 @@
+//! Native fake-quant forward (paper eq. 4–9, DESIGN.md §7).
+//!
+//! Builds an [`FpProgram`] whose weights went through the **same**
+//! quantize→dequantize the int8 exporter applies
+//! ([`export::quantize_weights`]) and whose quant sites apply the
+//! transfer function of the **same** per-site parameters
+//! ([`export::site_qparams`]). Sharing those two functions with
+//! `quant::export` is what keeps the native fake-quant forward, the
+//! trainer's objective and the exported integer model mutually
+//! consistent — the property the artifact path got from lowering one
+//! JAX source of truth.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::store::SitesJson;
+use crate::model::{GraphDef, Op};
+use crate::quant::calibrate::CalibStats;
+use crate::quant::export::{self, QuantMode, Trained};
+use crate::tensor::Tensor;
+
+use super::program::FpProgram;
+
+/// Fake-quantized weight map: every conv-like `.w` replaced by its
+/// quantize→dequantize image under the mode's weight thresholds and the
+/// trained per-layer scales (`w_a`). Biases stay float, as in the JAX
+/// fake-quant forward.
+pub fn fq_weights(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    mode: QuantMode,
+    tr: &Trained,
+) -> Result<BTreeMap<String, Tensor>> {
+    let mut out = weights.clone();
+    let ones = vec![1.0f32];
+    for n in g.conv_like() {
+        let key = format!("{}.w", n.id);
+        let w = weights
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("missing weight {key}"))?;
+        let cout = n.out_channels();
+        let vector = mode.vector() && n.op != Op::Dense;
+        let wa = tr.w_a.get(&n.id).unwrap_or(&ones);
+        let (w_q, scales) = export::quantize_weights(w, cout, vector, wa)?;
+        let deq: Vec<f32> = w_q
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| q as f32 * scales[i % scales.len()])
+            .collect();
+        out.insert(key, Tensor::f32(w.shape.clone(), deq));
+    }
+    Ok(out)
+}
+
+/// Compile the native fake-quant forward for `(mode, stats, trained)`.
+pub fn quantized_program(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    sites: &SitesJson,
+    stats: &CalibStats,
+    mode: QuantMode,
+    tr: &Trained,
+) -> Result<FpProgram> {
+    let site_qp = export::site_qparams(sites, stats, mode, tr);
+    let fqw = fq_weights(g, weights, mode, tr)?;
+    FpProgram::compile(g, &fqw, sites, Some(&site_qp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::program::FpState;
+    use crate::model::builtin;
+
+    #[test]
+    fn fq_weights_snap_to_int8_grid() {
+        let (g, _, w) = builtin::load("tiny_cnn").unwrap();
+        let tr = Trained::identity(&g, QuantMode::SymVector, 4);
+        let fq = fq_weights(&g, &w, QuantMode::SymVector, &tr).unwrap();
+        for n in g.conv_like() {
+            let key = format!("{}.w", n.id);
+            let orig = w[&key].as_f32().unwrap();
+            let q = fq[&key].as_f32().unwrap();
+            assert_eq!(orig.len(), q.len());
+            // quantization error bounded by half a grid step of the
+            // per-tensor/per-channel threshold
+            let t = crate::quant::thresholds::per_tensor_w_threshold(orig);
+            for (a, b) in orig.iter().zip(q) {
+                assert!((a - b).abs() <= t / 127.0, "{key}: {a} vs {b}");
+            }
+            // at least one weight actually moved (snapped to the grid)
+            assert!(orig.iter().zip(q).any(|(a, b)| a != b), "{key}");
+            // biases untouched
+            let bkey = format!("{}.b", n.id);
+            assert_eq!(
+                w[&bkey].as_f32().unwrap(),
+                fq[&bkey].as_f32().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn identity_alpha_one_is_plain_range_quant() {
+        // with alpha = 1 the fake-quant forward equals quantizing at the
+        // calibrated ranges; spot-check it runs and stays finite
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog0 = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let stats = crate::fp::calibrate::calib_stats(&prog0, 25, 2).unwrap();
+        let tr = Trained::identity(&g, QuantMode::SymScalar, sites.sites.len());
+        let prog =
+            quantized_program(&g, &w, &sites, &stats, QuantMode::SymScalar, &tr)
+                .unwrap();
+        let (x, _) = crate::data::loader::batch(
+            crate::data::Split::Val,
+            &[0, 1, 2],
+        );
+        let y = prog.run_batch(&x, 2).unwrap();
+        assert_eq!(y.shape, vec![3, 10]);
+        assert!(y.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        // and it differs from the plain FP32 forward (quantization bites)
+        let y0 = prog0.run_batch(&x, 2).unwrap();
+        assert_ne!(y.as_f32().unwrap(), y0.as_f32().unwrap());
+        // ...but not by much on a tame net
+        let mut st = FpState::default();
+        let one = prog
+            .run_image(&x.as_f32().unwrap()[..prog.input_len()], &mut st, None)
+            .unwrap();
+        assert_eq!(one.data.len(), 10);
+    }
+}

@@ -1,0 +1,32 @@
+//! Native FP32 backend (DESIGN.md §7) — the float side of the paper's
+//! pipeline with no PJRT and no AOT artifacts.
+//!
+//! Four pieces, mirroring the four stubbed artifact stages:
+//!
+//! * [`program`] — a planned FP32 graph executor: the int8 engine's plan
+//!   machinery (`int8::plan`) instantiated at `f32`, with fused
+//!   activations, per-site fake-quant hooks, calibration observers and
+//!   `FAT_THREADS` batch sharding (replaces `fp_forward` and, with site
+//!   parameters, `quant_fwd_*`).
+//! * [`calibrate`] — min/max + per-channel + histogram collection over
+//!   calibration batches (replaces `calib_stats` / `calib_hist`),
+//!   feeding the existing `CalibStats::apply_calibrator` percentile/KL
+//!   path unchanged.
+//! * [`fakequant`] — the eq. 4–9 fake-quant forward built from the same
+//!   `site_qparams` / `quantize_weights` the int8 exporter uses.
+//! * [`train`] — the RMSE-distillation trainer with analytic
+//!   straight-through gradients for the threshold scales (replaces
+//!   `train_step_*`), driven by the shared Adam/cosine loop in
+//!   `coordinator::finetune`.
+//!
+//! The backend is selected automatically by `quant::backend::resolve`
+//! (native is the default whenever AOT artifacts are absent) and can be
+//! forced with `FAT_BACKEND=native|artifact`.
+
+pub mod calibrate;
+pub mod fakequant;
+pub mod program;
+pub mod train;
+
+pub use program::{FpProgram, FpState, FTensor, Observer};
+pub use train::Trainer;

@@ -1,0 +1,715 @@
+//! Planned FP32 graph executor (DESIGN.md §7).
+//!
+//! An [`FpProgram`] is the float twin of the int8 engine's `QModel`: the
+//! folded graph is compiled **once** into an
+//! [`ExecPlan`]`<`[`FpNode`]`>` — the same topological schedule,
+//! liveness-based buffer slots and recycled [`Arena`] the int8 plan
+//! uses, instantiated at `f32` — and then executed per image with no
+//! name lookups on the hot path. Relu/relu6 nodes compile to nothing:
+//! their activation is fused into the producing step ([`Act`]), exactly
+//! mirroring how the int8 exporter fuses the clamp into the producer's
+//! requantization.
+//!
+//! Every step knows its **effective quant site** (the paper's eq. 4–9
+//! insertion points): a plain program reports site values to an
+//! [`Observer`] (native calibration), and a program compiled with
+//! per-site [`QParams`] applies the fake-quant transfer function at each
+//! site (the native quantized forward). Batches shard across the
+//! `FAT_THREADS` worker pool image-by-image; images are independent, so
+//! every thread count is bit-exact.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::int8::plan::{Arena, ExecPlan};
+use crate::model::store::SitesJson;
+use crate::model::{GraphDef, Op};
+use crate::quant::scale::QParams;
+use crate::tensor::Tensor;
+
+/// Activation fused into a compute step (the relu/relu6 node that is the
+/// step's sole consumer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::None => v,
+            Act::Relu => v.max(0.0),
+            Act::Relu6 => v.clamp(0.0, 6.0),
+        }
+    }
+}
+
+/// Parameters of one conv-like FP32 layer. Weight layout matches the
+/// folded `.fatw` tensors: conv `(k, k, cin, cout)` row-major, dwconv
+/// `(k, k, ch)`, dense `(cin, cout)`.
+#[derive(Debug, Clone)]
+pub struct FpLayer {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+/// Op payload of one scheduled FP32 step.
+#[derive(Debug, Clone)]
+pub enum FpKind {
+    Conv(FpLayer),
+    DwConv(FpLayer),
+    Dense(FpLayer),
+    Add,
+    Gap,
+}
+
+/// One scheduled FP32 node: op parameters + fused activation + the
+/// effective quant site its output lands in (+ that site's fake-quant
+/// parameters, for quantized programs).
+#[derive(Debug, Clone)]
+pub struct FpNode {
+    pub kind: FpKind,
+    pub act: Act,
+    /// Index into the model's site list of this step's effective output
+    /// site (the fused relu's site when the activation was folded in).
+    pub site: usize,
+    /// Fake-quant applied to the step output (`None` in plain programs).
+    pub qp: Option<QParams>,
+}
+
+/// A dense float activation: shape (per image, no batch axis) + data.
+#[derive(Debug, Clone, Default)]
+pub struct FTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Per-worker execution state: slot table + recycled f32 arena. One
+/// state serves one image at a time and is reused across images.
+#[derive(Default)]
+pub struct FpState {
+    slots: Vec<Option<FTensor>>,
+    arena: Arena<f32>,
+}
+
+impl FpState {
+    /// Hand a dead buffer (e.g. consumed logits) back to the arena.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.arena.put(buf);
+    }
+}
+
+/// Observation hook for calibration passes: called once per quant site
+/// per image (post-activation values) and once per conv-like node
+/// (pre-activation values, for per-channel stats).
+pub trait Observer {
+    fn site(&mut self, site: usize, values: &[f32]);
+    fn channels(&mut self, node_id: &str, cout: usize, preact: &[f32]);
+}
+
+/// A compiled FP32 program: plan + input metadata.
+#[derive(Debug, Clone)]
+pub struct FpProgram {
+    pub plan: ExecPlan<FpNode>,
+    /// Input image shape `[h, w, c]`.
+    pub input_shape: Vec<usize>,
+    /// Site index of the model input.
+    pub input_site: usize,
+    /// Fake-quant applied to the input (`None` in plain programs).
+    pub input_qp: Option<QParams>,
+    pub num_sites: usize,
+    pub num_classes: usize,
+}
+
+impl FpProgram {
+    /// Compile `g` + folded weights into an executable FP32 program.
+    /// `site_qp` (keyed by site id, as produced by
+    /// `quant::export::site_qparams`) turns the program into a
+    /// fake-quant forward; `None` compiles the plain FP32 teacher.
+    pub fn compile(
+        g: &GraphDef,
+        weights: &BTreeMap<String, Tensor>,
+        sites: &SitesJson,
+        site_qp: Option<&BTreeMap<String, QParams>>,
+    ) -> Result<FpProgram> {
+        let site_idx: BTreeMap<&str, usize> = sites
+            .sites
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.id.as_str(), i))
+            .collect();
+        let cons = g.consumers();
+        let mut nodes: BTreeMap<String, FpNode> = BTreeMap::new();
+        let mut input_shape = None;
+        for n in &g.nodes {
+            let kind = match n.op {
+                Op::Input => {
+                    input_shape = Some(
+                        n.input_shape.clone().unwrap_or(vec![32, 32, 3]),
+                    );
+                    continue;
+                }
+                Op::Relu | Op::Relu6 => {
+                    // The plan aliases relu outputs to their producer,
+                    // so the activation must be fusable: reject graphs
+                    // where the producer has other consumers too (the
+                    // int8 engine has the same constraint).
+                    let src = n.inputs.first().ok_or_else(|| {
+                        anyhow::anyhow!("{}: relu without input", n.id)
+                    })?;
+                    anyhow::ensure!(
+                        cons[src.as_str()].len() == 1,
+                        "{}: relu over a multi-consumer value cannot be \
+                         fused",
+                        n.id
+                    );
+                    continue; // fused into producer
+                }
+                Op::Bn => anyhow::bail!(
+                    "{}: bn survived graph folding",
+                    n.id
+                ),
+                Op::Conv | Op::DwConv | Op::Dense => {
+                    let w = weights
+                        .get(&format!("{}.w", n.id))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("missing weight {}.w", n.id)
+                        })?
+                        .as_f32()?
+                        .to_vec();
+                    let b = weights
+                        .get(&format!("{}.b", n.id))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("missing bias {}.b", n.id)
+                        })?
+                        .as_f32()?
+                        .to_vec();
+                    let (cin, cout) = match n.op {
+                        Op::Conv => (n.cin, n.cout),
+                        Op::DwConv => (n.ch, n.ch),
+                        Op::Dense => (n.cin, n.cout),
+                        _ => unreachable!(),
+                    };
+                    anyhow::ensure!(
+                        b.len() == cout,
+                        "{}: bias len {} != cout {cout}",
+                        n.id,
+                        b.len()
+                    );
+                    let l = FpLayer { w, b, k: n.k, stride: n.stride, cin, cout };
+                    match n.op {
+                        Op::Conv => FpKind::Conv(l),
+                        Op::DwConv => FpKind::DwConv(l),
+                        _ => FpKind::Dense(l),
+                    }
+                }
+                Op::Add => FpKind::Add,
+                Op::Gap => FpKind::Gap,
+            };
+            // Effective site + fused activation: the sole relu/relu6
+            // consumer absorbs both (mirror of quant::export).
+            let cs = &cons[n.id.as_str()];
+            let (act, site_id) = if cs.len() == 1
+                && matches!(cs[0].op, Op::Relu | Op::Relu6)
+            {
+                let a = if cs[0].op == Op::Relu { Act::Relu } else { Act::Relu6 };
+                (a, cs[0].id.as_str())
+            } else {
+                (Act::None, n.id.as_str())
+            };
+            let site = *site_idx.get(site_id).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: effective site {site_id} is not a quant site",
+                    n.id
+                )
+            })?;
+            let qp = match site_qp {
+                None => None,
+                Some(m) => Some(*m.get(site_id).ok_or_else(|| {
+                    anyhow::anyhow!("no site qparams for {site_id}")
+                })?),
+            };
+            nodes.insert(n.id.clone(), FpNode { kind, act, site, qp });
+        }
+        let input_node = g
+            .nodes
+            .iter()
+            .find(|n| n.op == Op::Input)
+            .ok_or_else(|| anyhow::anyhow!("graph has no input node"))?;
+        let input_site = *site_idx
+            .get(input_node.id.as_str())
+            .ok_or_else(|| anyhow::anyhow!("input is not a quant site"))?;
+        let input_qp = match site_qp {
+            None => None,
+            Some(m) => Some(*m.get(input_node.id.as_str()).ok_or_else(
+                || anyhow::anyhow!("no site qparams for the input"),
+            )?),
+        };
+        let plan = ExecPlan::compile(g, nodes)?;
+        Ok(FpProgram {
+            plan,
+            input_shape: input_shape
+                .ok_or_else(|| anyhow::anyhow!("input node has no shape"))?,
+            input_site,
+            input_qp,
+            num_sites: sites.sites.len(),
+            num_classes: g.num_classes,
+        })
+    }
+
+    /// Floats per input image.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Execute one image (`img` is `input_len()` HWC floats). Returns
+    /// the logits tensor; hand its buffer back via [`FpState::recycle`]
+    /// to avoid steady-state allocation.
+    pub fn run_image(
+        &self,
+        img: &[f32],
+        state: &mut FpState,
+        mut obs: Option<&mut dyn Observer>,
+    ) -> Result<FTensor> {
+        anyhow::ensure!(
+            img.len() == self.input_len(),
+            "run_image: expected {} input floats, got {}",
+            self.input_len(),
+            img.len()
+        );
+        let plan = &self.plan;
+        for s in state.slots.iter_mut() {
+            if let Some(dead) = s.take() {
+                state.arena.put(dead.data);
+            }
+        }
+        state.slots.resize_with(plan.num_slots, || None);
+
+        let mut xbuf = state.arena.take();
+        xbuf.extend_from_slice(img);
+        if let Some(qp) = self.input_qp {
+            for v in xbuf.iter_mut() {
+                *v = qp.fake_quant(*v);
+            }
+        }
+        if let Some(o) = obs.as_mut() {
+            o.site(self.input_site, &xbuf);
+        }
+        state.slots[plan.input_slot] =
+            Some(FTensor { shape: self.input_shape.clone(), data: xbuf });
+
+        for step in &plan.steps {
+            let out_buf = state.arena.take();
+            let p = &plan.params[step.param];
+            let mut out = {
+                let a = state.slots[step.a].as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("{}: input slot {} empty", step.id, step.a)
+                })?;
+                match &p.kind {
+                    FpKind::Conv(l) => conv_fwd(a, l, out_buf),
+                    FpKind::DwConv(l) => dwconv_fwd(a, l, out_buf),
+                    FpKind::Dense(l) => dense_fwd(a, l, out_buf),
+                    FpKind::Add => {
+                        let bs = step.b.ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "{}: add without 2nd input",
+                                step.id
+                            )
+                        })?;
+                        let b =
+                            state.slots[bs].as_ref().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "{}: input slot {bs} empty",
+                                    step.id
+                                )
+                            })?;
+                        add_fwd(a, b, out_buf)
+                    }
+                    FpKind::Gap => gap_fwd(a, out_buf),
+                }
+            };
+            if let Some(o) = obs.as_mut() {
+                if let FpKind::Conv(l) | FpKind::DwConv(l) = &p.kind {
+                    o.channels(&step.id, l.cout, &out.data);
+                }
+            }
+            if p.act != Act::None {
+                for v in out.data.iter_mut() {
+                    *v = p.act.apply(*v);
+                }
+            }
+            if let Some(qp) = p.qp {
+                for v in out.data.iter_mut() {
+                    *v = qp.fake_quant(*v);
+                }
+            }
+            if let Some(o) = obs.as_mut() {
+                o.site(p.site, &out.data);
+            }
+            for &f in &step.frees {
+                if let Some(dead) = state.slots[f].take() {
+                    state.arena.put(dead.data);
+                }
+            }
+            state.slots[step.dst] = Some(out);
+        }
+        state.slots[plan.output_slot]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("plan produced no output"))
+    }
+
+    /// Run a float NHWC batch, sharding images across `threads` scoped
+    /// workers (each with its own reusable [`FpState`]). Images are
+    /// independent, so the stitched logits are bit-exact for every
+    /// thread count. Returns `(n, num_classes)` f32 logits.
+    pub fn run_batch(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
+        let xd = x.as_f32()?;
+        anyhow::ensure!(
+            x.shape.len() == 4
+                && x.shape[1..] == self.input_shape[..],
+            "run_batch: input shape {:?} != (n, {:?})",
+            x.shape,
+            self.input_shape
+        );
+        let n = x.shape[0];
+        let per = self.input_len();
+        let classes = self.num_classes;
+        let mut out = vec![0f32; n * classes];
+        if n == 0 {
+            return Ok(Tensor::f32(vec![0, classes], out));
+        }
+        let t = threads.max(1).min(n);
+        let chunk = n.div_ceil(t);
+        let mut results: Vec<Result<()>> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (wi, ochunk) in out.chunks_mut(chunk * classes).enumerate() {
+                let i0 = wi * chunk;
+                handles.push(s.spawn(move || -> Result<()> {
+                    let mut st = FpState::default();
+                    for (j, orow) in
+                        ochunk.chunks_mut(classes).enumerate()
+                    {
+                        let img = &xd[(i0 + j) * per..(i0 + j + 1) * per];
+                        let logits = self.run_image(img, &mut st, None)?;
+                        orow.copy_from_slice(&logits.data);
+                        st.recycle(logits.data);
+                    }
+                    Ok(())
+                }));
+            }
+            results = handles
+                .into_iter()
+                .map(|h| h.join().expect("fp worker panicked"))
+                .collect();
+        });
+        for r in results {
+            r?;
+        }
+        Ok(Tensor::f32(vec![n, classes], out))
+    }
+}
+
+/// SAME padding on one axis: `((o-1)*stride + k - size) / 2` (matches
+/// the int8 engine's im2col and XLA).
+#[inline]
+pub fn same_pad(size: usize, k: usize, stride: usize) -> (usize, usize) {
+    let o = size.div_ceil(stride);
+    (o, (((o - 1) * stride + k).saturating_sub(size)) / 2)
+}
+
+pub(crate) fn conv_fwd(x: &FTensor, l: &FpLayer, out: Vec<f32>) -> FTensor {
+    let (h, w, cin) = (x.shape[0], x.shape[1], x.shape[2]);
+    debug_assert_eq!(cin, l.cin);
+    let (oh, pad_top) = same_pad(h, l.k, l.stride);
+    let (ow, pad_left) = same_pad(w, l.k, l.stride);
+    let cout = l.cout;
+    let mut data = out;
+    data.clear();
+    data.resize(oh * ow * cout, 0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let orow = &mut data[(oy * ow + ox) * cout..][..cout];
+            orow.copy_from_slice(&l.b);
+            for ky in 0..l.k {
+                let iy = (oy * l.stride + ky) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..l.k {
+                    let ix =
+                        (ox * l.stride + kx) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xoff = (iy as usize * w + ix as usize) * cin;
+                    for ci in 0..cin {
+                        let xv = x.data[xoff + ci];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let woff = ((ky * l.k + kx) * cin + ci) * cout;
+                        let wrow = &l.w[woff..woff + cout];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    FTensor { shape: vec![oh, ow, cout], data }
+}
+
+pub(crate) fn dwconv_fwd(x: &FTensor, l: &FpLayer, out: Vec<f32>) -> FTensor {
+    let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    debug_assert_eq!(c, l.cout);
+    let (oh, pad_top) = same_pad(h, l.k, l.stride);
+    let (ow, pad_left) = same_pad(w, l.k, l.stride);
+    let mut data = out;
+    data.clear();
+    data.resize(oh * ow * c, 0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let orow = &mut data[(oy * ow + ox) * c..][..c];
+            orow.copy_from_slice(&l.b);
+            for ky in 0..l.k {
+                let iy = (oy * l.stride + ky) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..l.k {
+                    let ix =
+                        (ox * l.stride + kx) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xoff = (iy as usize * w + ix as usize) * c;
+                    let woff = (ky * l.k + kx) * c;
+                    for ci in 0..c {
+                        orow[ci] += x.data[xoff + ci] * l.w[woff + ci];
+                    }
+                }
+            }
+        }
+    }
+    FTensor { shape: vec![oh, ow, c], data }
+}
+
+pub(crate) fn dense_fwd(x: &FTensor, l: &FpLayer, out: Vec<f32>) -> FTensor {
+    let cin = x.data.len();
+    debug_assert_eq!(cin, l.cin);
+    let cout = l.cout;
+    let mut data = out;
+    data.clear();
+    data.extend_from_slice(&l.b);
+    for (ci, &xv) in x.data.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &l.w[ci * cout..(ci + 1) * cout];
+        for (o, &wv) in data.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+    FTensor { shape: vec![cout], data }
+}
+
+pub(crate) fn add_fwd(a: &FTensor, b: &FTensor, out: Vec<f32>) -> FTensor {
+    debug_assert_eq!(a.shape, b.shape);
+    let mut data = out;
+    data.clear();
+    data.extend(a.data.iter().zip(&b.data).map(|(&x, &y)| x + y));
+    FTensor { shape: a.shape.clone(), data }
+}
+
+pub(crate) fn gap_fwd(x: &FTensor, out: Vec<f32>) -> FTensor {
+    let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let hw = (h * w).max(1);
+    let mut data = out;
+    data.clear();
+    data.resize(c, 0.0);
+    for pix in 0..(h * w) {
+        let row = &x.data[pix * c..(pix + 1) * c];
+        for (o, &v) in data.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / hw as f32;
+    for o in data.iter_mut() {
+        *o *= inv;
+    }
+    FTensor { shape: vec![c], data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    fn graph(json: &str) -> GraphDef {
+        GraphDef::from_json(json).unwrap()
+    }
+
+    fn run_one(
+        g: &GraphDef,
+        w: &BTreeMap<String, Tensor>,
+        img: &[f32],
+    ) -> Vec<f32> {
+        let sites = builtin::sites_of(g);
+        let prog = FpProgram::compile(g, w, &sites, None).unwrap();
+        let mut st = FpState::default();
+        prog.run_image(img, &mut st, None).unwrap().data
+    }
+
+    #[test]
+    fn dense_head_golden() {
+        // input(1x1x2) -> gap -> dense(2->2): y = x @ W + b
+        let g = graph(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[1,1,2]},
+             {"id":"g","op":"gap","inputs":["input"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":2,"cout":2,"bias":true}]}"#,
+        );
+        let mut w = BTreeMap::new();
+        w.insert(
+            "d.w".into(),
+            Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, -1.0]),
+        );
+        w.insert("d.b".into(), Tensor::f32(vec![2], vec![0.5, -0.5]));
+        let y = run_one(&g, &w, &[2.0, 1.0]);
+        // y0 = 2*1 + 1*3 + 0.5 = 5.5 ; y1 = 2*2 + 1*(-1) - 0.5 = 2.5
+        assert_eq!(y, vec![5.5, 2.5]);
+    }
+
+    #[test]
+    fn conv_1x1_and_relu_fuse_golden() {
+        let g = graph(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[1,2,1]},
+             {"id":"c","op":"conv","inputs":["input"],"k":1,"stride":1,"cin":1,"cout":2,"bias":true},
+             {"id":"r","op":"relu","inputs":["c"]},
+             {"id":"g","op":"gap","inputs":["r"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":2,"cout":2,"bias":true}]}"#,
+        );
+        let mut w = BTreeMap::new();
+        w.insert("c.w".into(), Tensor::f32(vec![1, 1, 1, 2], vec![1.0, -1.0]));
+        w.insert("c.b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        w.insert(
+            "d.w".into(),
+            Tensor::f32(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]),
+        );
+        w.insert("d.b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        // pixels [3, -1]: conv ch0 = x, ch1 = -x; relu; gap
+        // ch0: relu(3)=3, relu(-1)=0 -> mean 1.5 ; ch1: relu(-3)=0, relu(1)=1 -> 0.5
+        let y = run_one(&g, &w, &[3.0, -1.0]);
+        assert_eq!(y, vec![1.5, 0.5]);
+    }
+
+    #[test]
+    fn conv_3x3_same_padding_golden() {
+        // 2x2 single-channel image, 3x3 kernel of ones, stride 1:
+        // each output = sum of in-image taps (SAME zero padding).
+        let g = graph(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[2,2,1]},
+             {"id":"c","op":"conv","inputs":["input"],"k":3,"stride":1,"cin":1,"cout":1,"bias":true},
+             {"id":"g","op":"gap","inputs":["c"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":1,"cout":2,"bias":true}]}"#,
+        );
+        let mut w = BTreeMap::new();
+        w.insert("c.w".into(), Tensor::f32(vec![3, 3, 1, 1], vec![1.0; 9]));
+        w.insert("c.b".into(), Tensor::f32(vec![1], vec![0.0]));
+        w.insert("d.w".into(), Tensor::f32(vec![1, 2], vec![1.0, 2.0]));
+        w.insert("d.b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        // all four 3x3 windows cover the whole 2x2 image -> each out = 10
+        let y = run_one(&g, &w, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(y, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn dwconv_add_relu6_golden() {
+        let g = graph(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[1,1,2]},
+             {"id":"dw","op":"dwconv","inputs":["input"],"k":1,"stride":1,"ch":2,"bias":true},
+             {"id":"r","op":"relu6","inputs":["dw"]},
+             {"id":"ad","op":"add","inputs":["r","input"]},
+             {"id":"g","op":"gap","inputs":["ad"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":2,"cout":2,"bias":true}]}"#,
+        );
+        let mut w = BTreeMap::new();
+        w.insert("dw.w".into(), Tensor::f32(vec![1, 1, 2], vec![4.0, -1.0]));
+        w.insert("dw.b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        w.insert(
+            "d.w".into(),
+            Tensor::f32(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]),
+        );
+        w.insert("d.b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        // x = [2, 3]: dw -> [8, -3]; relu6 -> [6, 0]; + x -> [8, 3]
+        let y = run_one(&g, &w, &[2.0, 3.0]);
+        assert_eq!(y, vec![8.0, 3.0]);
+    }
+
+    #[test]
+    fn stride2_shapes_match_int8_engine_convention() {
+        assert_eq!(same_pad(32, 3, 2), (16, 0));
+        assert_eq!(same_pad(5, 3, 2), (3, 1));
+        assert_eq!(same_pad(4, 3, 1), (4, 1));
+    }
+
+    #[test]
+    fn batch_sharding_bit_exact_across_threads() {
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let xs = crate::util::prop::f32s(3, 5 * prog.input_len(), 0.0, 1.0);
+        let x = Tensor::f32(vec![5, 32, 32, 3], xs);
+        let base = prog.run_batch(&x, 1).unwrap();
+        for t in [2usize, 3, 8] {
+            let y = prog.run_batch(&x, t).unwrap();
+            assert_eq!(base.shape, y.shape, "t={t}");
+            let (a, b) = (base.as_f32().unwrap(), y.as_f32().unwrap());
+            for i in 0..a.len() {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "t={t} logit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fake_quant_program_matches_reference_transfer() {
+        // conv identity + known site params: program output must equal
+        // applying QParams::fake_quant at every site by hand.
+        let g = graph(
+            r#"{"name":"t","num_classes":2,"nodes":[
+             {"id":"input","op":"input","inputs":[],"shape":[1,1,1]},
+             {"id":"g","op":"gap","inputs":["input"]},
+             {"id":"d","op":"dense","inputs":["g"],"cin":1,"cout":2,"bias":true}]}"#,
+        );
+        let mut w = BTreeMap::new();
+        w.insert("d.w".into(), Tensor::f32(vec![1, 2], vec![1.0, -1.0]));
+        w.insert("d.b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        let sites = builtin::sites_of(&g);
+        let mut qp = BTreeMap::new();
+        let q_in = QParams::symmetric_unsigned(2.0);
+        let q_mid = QParams::symmetric_unsigned(2.0);
+        let q_out = QParams::symmetric_signed(1.5);
+        qp.insert("input".to_string(), q_in);
+        qp.insert("g".to_string(), q_mid);
+        qp.insert("d".to_string(), q_out);
+        let prog = FpProgram::compile(&g, &w, &sites, Some(&qp)).unwrap();
+        let mut st = FpState::default();
+        let y = prog.run_image(&[1.234], &mut st, None).unwrap().data;
+        let xh = q_in.fake_quant(1.234);
+        let gh = q_mid.fake_quant(xh);
+        assert_eq!(y[0].to_bits(), q_out.fake_quant(gh).to_bits());
+        assert_eq!(y[1].to_bits(), q_out.fake_quant(-gh).to_bits());
+    }
+}

@@ -1,0 +1,1220 @@
+//! Native FAT threshold trainer (DESIGN.md §7).
+//!
+//! Implements the paper's fine-tuning objective without any AOT
+//! artifact: per optimizer step, the **teacher** is the plain FP32
+//! forward and the **student** is the fake-quant forward under the
+//! current threshold scales; the loss is the RMSE between their logits
+//! (unlabeled distillation, §4.1), and the gradients w.r.t. the scales
+//! — `act_a` (symmetric α, eq. 12–13), `act_at`/`act_ar` (asymmetric
+//! α_T/α_R, eq. 21–23) and per-layer `w_a` — are the analytic
+//! straight-through construction that TQT (Jain et al., 1903.08066)
+//! formalizes on top of the fake-quant scheme of Jacob et al.
+//! (1712.05877):
+//!
+//! * inside the clip range, `∂x̂/∂T = (x̂ − x)/T` (the rounding
+//!   residual divided by the threshold) and `∂x̂/∂x = 1`;
+//! * at a clipped element, `∂x̂/∂T = x̂/T` (symmetric) or
+//!   `∂x̂/∂left = 1`, `∂x̂/∂width ∈ {0, 1}` (asymmetric) and
+//!   `∂x̂/∂x = 0`;
+//! * `∂T/∂α = T_cal` through the empiric clip, with the parameters
+//!   clamped back into their paper ranges after each Adam step so the
+//!   clip never strands a gradient.
+//!
+//! Backprop through conv/dwconv/dense/add/gap is exact; Adam runs on
+//! the threshold scales only (weights and biases are frozen, as in the
+//! paper). Images of a batch shard across the `FAT_THREADS` worker pool
+//! and per-worker gradient partial sums merge in shard order.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::finetune::{StepOut, TrainStep};
+use crate::model::store::SitesJson;
+use crate::model::{GraphDef, Op};
+use crate::quant::calibrate::CalibStats;
+use crate::quant::export::QuantMode;
+use crate::quant::scale::QParams;
+use crate::quant::thresholds as th;
+use crate::tensor::Tensor;
+
+use super::program::{
+    add_fwd, conv_fwd, dense_fwd, dwconv_fwd, gap_fwd, same_pad, Act, FpKind,
+    FpLayer, FpProgram, FpState, FTensor,
+};
+
+/// Fine-tune batch size of the native backend.
+pub const TRAIN_BATCH: usize = 25;
+
+const B1: f32 = 0.9;
+const B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Where a tape step reads its operand from.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    Input,
+    Step(usize),
+}
+
+/// Per-site calibration metadata.
+#[derive(Debug, Clone, Copy)]
+struct SiteMeta {
+    unsigned: bool,
+    t_l: f32,
+    t_r: f32,
+}
+
+/// Per conv-like tape step: trainable-key id + static weight thresholds.
+#[derive(Debug, Clone)]
+struct WInfo {
+    id: String,
+    /// Calibrated weight thresholds (len 1 per-tensor, `cout` per-filter).
+    t_cal: Vec<f32>,
+}
+
+/// Per-site quant parameters derived from the current trainables.
+#[derive(Debug, Clone, Copy)]
+enum SiteQ {
+    Sym { qp: QParams, t: f32, t_cal: f32 },
+    Asym { qp: QParams, width: f32, r: f32 },
+}
+
+impl SiteQ {
+    #[inline]
+    fn fq(&self, v: f32) -> f32 {
+        match self {
+            SiteQ::Sym { qp, .. } | SiteQ::Asym { qp, .. } => qp.fake_quant(v),
+        }
+    }
+}
+
+/// Per conv-like tape step under the current trainables: fake-quant
+/// weights (as an [`FpLayer`], so the forward kernels run unchanged)
+/// plus the scales/thresholds the backward pass needs.
+struct WQuant {
+    layer: FpLayer,
+    sw: Vec<f32>,
+    tw: Vec<f32>,
+}
+
+/// Per-worker gradient accumulator (summed over the worker's images).
+struct Acc {
+    sse: f64,
+    da: Vec<f32>,
+    dat: Vec<f32>,
+    dar: Vec<f32>,
+    /// dS/dŵ per conv-like tape step.
+    dw: BTreeMap<usize, Vec<f32>>,
+}
+
+impl Acc {
+    fn new(num_sites: usize) -> Self {
+        Acc {
+            sse: 0.0,
+            da: vec![0.0; num_sites],
+            dat: vec![0.0; num_sites],
+            dar: vec![0.0; num_sites],
+            dw: BTreeMap::new(),
+        }
+    }
+
+    fn merge(&mut self, other: Acc) {
+        self.sse += other.sse;
+        for (d, s) in self.da.iter_mut().zip(&other.da) {
+            *d += s;
+        }
+        for (d, s) in self.dat.iter_mut().zip(&other.dat) {
+            *d += s;
+        }
+        for (d, s) in self.dar.iter_mut().zip(&other.dar) {
+            *d += s;
+        }
+        for (i, sv) in other.dw {
+            match self.dw.get_mut(&i) {
+                Some(dv) => {
+                    for (d, s) in dv.iter_mut().zip(&sv) {
+                        *d += s;
+                    }
+                }
+                None => {
+                    self.dw.insert(i, sv);
+                }
+            }
+        }
+    }
+}
+
+/// The native threshold trainer: one per `(model, mode, stats)` triple.
+pub struct Trainer {
+    prog: FpProgram,
+    mode: QuantMode,
+    site_meta: Vec<SiteMeta>,
+    /// Per tape step: weight-trainable info for conv-like steps.
+    winfo: Vec<Option<WInfo>>,
+    /// Per tape step: operand sources (resolved through the plan slots).
+    tape: Vec<(Src, Option<Src>)>,
+    /// Tape index producing the model output.
+    out_idx: usize,
+    threads: usize,
+}
+
+impl Trainer {
+    pub fn new(
+        g: &GraphDef,
+        weights: &BTreeMap<String, Tensor>,
+        sites: &SitesJson,
+        stats: &CalibStats,
+        mode: QuantMode,
+        threads: usize,
+    ) -> Result<Trainer> {
+        let prog = FpProgram::compile(g, weights, sites, None)?;
+        anyhow::ensure!(
+            stats.site_minmax.len() == sites.sites.len(),
+            "trainer: {} calibrated sites for {} model sites",
+            stats.site_minmax.len(),
+            sites.sites.len()
+        );
+        let site_meta: Vec<SiteMeta> = sites
+            .sites
+            .iter()
+            .zip(&stats.site_minmax)
+            .map(|(s, mm)| SiteMeta {
+                unsigned: s.unsigned,
+                t_l: mm.min,
+                t_r: mm.max,
+            })
+            .collect();
+
+        // Resolve each step's operands through the slot table (slots are
+        // recycled, so the resolution must happen in schedule order).
+        let mut cur: Vec<Option<Src>> = vec![None; prog.plan.num_slots];
+        cur[prog.plan.input_slot] = Some(Src::Input);
+        let mut tape = Vec::with_capacity(prog.plan.steps.len());
+        let mut winfo = Vec::with_capacity(prog.plan.steps.len());
+        for (i, step) in prog.plan.steps.iter().enumerate() {
+            let a = cur[step.a].ok_or_else(|| {
+                anyhow::anyhow!("{}: unresolved input slot", step.id)
+            })?;
+            let b = match step.b {
+                None => None,
+                Some(bs) => Some(cur[bs].ok_or_else(|| {
+                    anyhow::anyhow!("{}: unresolved 2nd input slot", step.id)
+                })?),
+            };
+            tape.push((a, b));
+            let p = &prog.plan.params[step.param];
+            winfo.push(match &p.kind {
+                FpKind::Conv(l) | FpKind::DwConv(l) | FpKind::Dense(l) => {
+                    let vector = mode.vector() && step.op != Op::Dense;
+                    let t_cal = if vector {
+                        th::per_channel_w_thresholds(&l.w, l.cout)
+                    } else {
+                        vec![th::per_tensor_w_threshold(&l.w)]
+                    };
+                    Some(WInfo { id: step.id.clone(), t_cal })
+                }
+                _ => None,
+            });
+            cur[step.dst] = Some(Src::Step(i));
+        }
+        let out_idx = match cur[prog.plan.output_slot] {
+            Some(Src::Step(i)) => i,
+            _ => anyhow::bail!("model output is not produced by a step"),
+        };
+        Ok(Trainer {
+            prog,
+            mode,
+            site_meta,
+            winfo,
+            tape,
+            out_idx,
+            threads: threads.max(1),
+        })
+    }
+
+    /// The plain FP32 teacher program.
+    pub fn program(&self) -> &FpProgram {
+        &self.prog
+    }
+
+    /// Identity trainables for this mode, shaped exactly like the maps
+    /// the artifact trainer produces: α = 1, α_T = 0, α_R = 1.
+    /// (Delegates to [`identity_trainables`]; the trainer's per-step
+    /// `winfo` lengths follow the same cout-or-1 grammar by
+    /// construction.)
+    pub fn init_trainables(&self) -> BTreeMap<String, Tensor> {
+        identity_trainables(
+            self.prog.num_sites,
+            self.mode,
+            self.winfo
+                .iter()
+                .flatten()
+                .map(|wi| (wi.id.clone(), wi.t_cal.len())),
+        )
+    }
+
+    /// Per-site quant parameters under the current trainables.
+    fn site_quants(
+        &self,
+        act_a: &[f32],
+        act_at: &[f32],
+        act_ar: &[f32],
+    ) -> Vec<SiteQ> {
+        self.site_meta
+            .iter()
+            .enumerate()
+            .map(|(i, sm)| {
+                if self.mode.asym() {
+                    let (left, width) = th::adjust_asym(
+                        act_at[i], act_ar[i], sm.t_l, sm.t_r, sm.unsigned,
+                    );
+                    SiteQ::Asym {
+                        qp: QParams::asymmetric(left, width),
+                        width: width.max(1e-8),
+                        r: sm.t_r - sm.t_l,
+                    }
+                } else {
+                    let t_cal = th::sym_t_from_minmax(sm.t_l, sm.t_r);
+                    let t = th::adjust_sym(act_a[i], t_cal);
+                    let qp = if sm.unsigned {
+                        QParams::symmetric_unsigned(t)
+                    } else {
+                        QParams::symmetric_signed(t)
+                    };
+                    SiteQ::Sym { qp, t: t.max(1e-12), t_cal }
+                }
+            })
+            .collect()
+    }
+
+    /// Fake-quant weight layers under the current trainables (shared by
+    /// all workers of one step).
+    fn weight_quants(
+        &self,
+        tr: &BTreeMap<String, Tensor>,
+    ) -> Result<Vec<Option<WQuant>>> {
+        let mut out = Vec::with_capacity(self.winfo.len());
+        for (i, wi) in self.winfo.iter().enumerate() {
+            let Some(wi) = wi else {
+                out.push(None);
+                continue;
+            };
+            let p = &self.prog.plan.params[self.prog.plan.steps[i].param];
+            let (FpKind::Conv(l) | FpKind::DwConv(l) | FpKind::Dense(l)) =
+                &p.kind
+            else {
+                anyhow::bail!("{}: weight info on a non-layer step", wi.id);
+            };
+            let key = format!("w_a:{}", wi.id);
+            let wa = tr
+                .get(&key)
+                .ok_or_else(|| anyhow::anyhow!("missing trainable {key}"))?
+                .as_f32()?;
+            anyhow::ensure!(
+                wa.len() == wi.t_cal.len(),
+                "{key}: expected {} scales, got {}",
+                wi.t_cal.len(),
+                wa.len()
+            );
+            let n = wa.len();
+            let tw: Vec<f32> = (0..n)
+                .map(|c| th::adjust_sym(wa[c], wi.t_cal[c]).max(1e-12))
+                .collect();
+            let sw: Vec<f32> = tw.iter().map(|t| t / 127.0).collect();
+            let what: Vec<f32> = l
+                .w
+                .iter()
+                .enumerate()
+                .map(|(j, &wv)| {
+                    let si = if n == 1 { 0 } else { j % l.cout };
+                    let s = sw[si];
+                    let q = (wv / s).round_ties_even().clamp(-127.0, 127.0);
+                    q * s
+                })
+                .collect();
+            out.push(Some(WQuant {
+                layer: FpLayer {
+                    w: what,
+                    b: l.b.clone(),
+                    k: l.k,
+                    stride: l.stride,
+                    cin: l.cin,
+                    cout: l.cout,
+                },
+                sw,
+                tw,
+            }));
+        }
+        Ok(out)
+    }
+
+    /// One distillation batch: RMSE loss + analytic gradients w.r.t.
+    /// every trainable, summed over the batch and already scaled to
+    /// `∂loss/∂θ`. Returns `(loss, grads)`.
+    pub fn loss_and_grads(
+        &self,
+        tr: &BTreeMap<String, Tensor>,
+        x: &Tensor,
+    ) -> Result<(f32, BTreeMap<String, Vec<f32>>)> {
+        let s = self.prog.num_sites;
+        let empty: Vec<f32> = Vec::new();
+        let (act_a, act_at, act_ar);
+        if self.mode.asym() {
+            act_a = empty;
+            act_at = take_vec(tr, "act_at", s)?;
+            act_ar = take_vec(tr, "act_ar", s)?;
+        } else {
+            act_a = take_vec(tr, "act_a", s)?;
+            act_at = vec![0.0; s];
+            act_ar = vec![1.0; s];
+        }
+        let siteq = self.site_quants(&act_a, &act_at, &act_ar);
+        let wq = self.weight_quants(tr)?;
+
+        let xd = x.as_f32()?;
+        let n = x.shape[0];
+        let per = self.prog.input_len();
+        anyhow::ensure!(
+            xd.len() == n * per && n > 0,
+            "train step: bad batch shape {:?}",
+            x.shape
+        );
+        let t = self.threads.min(n);
+        let chunk = n.div_ceil(t);
+        let mut parts: Vec<Result<Acc>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for wi in 0..t {
+                let i0 = wi * chunk;
+                let i1 = (i0 + chunk).min(n);
+                if i0 >= i1 {
+                    break;
+                }
+                let siteq = &siteq;
+                let wq = &wq;
+                handles.push(scope.spawn(move || -> Result<Acc> {
+                    let mut acc = Acc::new(s);
+                    let mut st = FpState::default();
+                    for i in i0..i1 {
+                        let img = &xd[i * per..(i + 1) * per];
+                        self.image_pass(img, siteq, wq, &mut st, &mut acc)?;
+                    }
+                    Ok(acc)
+                }));
+            }
+            parts = handles
+                .into_iter()
+                .map(|h| h.join().expect("train worker panicked"))
+                .collect();
+        });
+        let mut acc = Acc::new(s);
+        for p in parts {
+            acc.merge(p?);
+        }
+
+        let total = (n * self.prog.num_classes) as f64;
+        let loss = (acc.sse / total).sqrt();
+        // L = sqrt(S/N)  =>  dL/dθ = dS/dθ / (2 L N); workers accumulated
+        // dS/dθ (their backward seed was 2·error).
+        let scale = if loss > 1e-12 {
+            (1.0 / (2.0 * loss * total)) as f32
+        } else {
+            0.0
+        };
+
+        let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        if self.mode.asym() {
+            grads.insert(
+                "act_at".to_string(),
+                acc.dat.iter().map(|g| g * scale).collect(),
+            );
+            grads.insert(
+                "act_ar".to_string(),
+                acc.dar.iter().map(|g| g * scale).collect(),
+            );
+        } else {
+            grads.insert(
+                "act_a".to_string(),
+                acc.da.iter().map(|g| g * scale).collect(),
+            );
+        }
+        for (i, dwv) in &acc.dw {
+            let (Some(wi), Some(wqi)) = (&self.winfo[*i], &wq[*i]) else {
+                continue;
+            };
+            let p = &self.prog.plan.params[self.prog.plan.steps[*i].param];
+            let (FpKind::Conv(l) | FpKind::DwConv(l) | FpKind::Dense(l)) =
+                &p.kind
+            else {
+                continue;
+            };
+            let nsc = wi.t_cal.len();
+            let mut ga = vec![0f32; nsc];
+            for (j, &d) in dwv.iter().enumerate() {
+                let si = if nsc == 1 { 0 } else { j % l.cout };
+                let sw = wqi.sw[si];
+                let tw = wqi.tw[si];
+                let what = wqi.layer.w[j];
+                let raw = l.w[j];
+                let q = (raw / sw).round_ties_even();
+                let dt = if !(-127.0..=127.0).contains(&q) {
+                    what / tw
+                } else {
+                    (what - raw) / tw
+                };
+                ga[si] += d * dt * wi.t_cal[si];
+            }
+            for g in ga.iter_mut() {
+                *g *= scale;
+            }
+            grads.insert(format!("w_a:{}", wi.id), ga);
+        }
+        Ok((loss as f32, grads))
+    }
+
+    /// Forward + backward for one image, accumulating dS/dθ into `acc`.
+    fn image_pass(
+        &self,
+        img: &[f32],
+        siteq: &[SiteQ],
+        wq: &[Option<WQuant>],
+        st: &mut FpState,
+        acc: &mut Acc,
+    ) -> Result<()> {
+        let plan = &self.prog.plan;
+        // Teacher: plain FP32 logits.
+        let teacher = self.prog.run_image(img, st, None)?;
+
+        // Student forward with caches (a = post-act pre-fq, y = post-fq).
+        let x0 = FTensor {
+            shape: self.prog.input_shape.clone(),
+            data: img.to_vec(),
+        };
+        let in_q = &siteq[self.prog.input_site];
+        let x0h = FTensor {
+            shape: x0.shape.clone(),
+            data: x0.data.iter().map(|&v| in_q.fq(v)).collect(),
+        };
+        let mut caches: Vec<(FTensor, FTensor)> =
+            Vec::with_capacity(plan.steps.len());
+        for (i, step) in plan.steps.iter().enumerate() {
+            let p = &plan.params[step.param];
+            let (a_src, b_src) = self.tape[i];
+            let a_t = match a_src {
+                Src::Input => &x0h,
+                Src::Step(j) => &caches[j].1,
+            };
+            let mut z = match (&p.kind, &wq[i]) {
+                (FpKind::Conv(_), Some(q)) => conv_fwd(a_t, &q.layer, Vec::new()),
+                (FpKind::DwConv(_), Some(q)) => {
+                    dwconv_fwd(a_t, &q.layer, Vec::new())
+                }
+                (FpKind::Dense(_), Some(q)) => {
+                    dense_fwd(a_t, &q.layer, Vec::new())
+                }
+                (FpKind::Add, _) => {
+                    let b_t = match b_src.ok_or_else(|| {
+                        anyhow::anyhow!("{}: add without 2nd input", step.id)
+                    })? {
+                        Src::Input => &x0h,
+                        Src::Step(j) => &caches[j].1,
+                    };
+                    add_fwd(a_t, b_t, Vec::new())
+                }
+                (FpKind::Gap, _) => gap_fwd(a_t, Vec::new()),
+                _ => anyhow::bail!("{}: missing weight quant", step.id),
+            };
+            if p.act != Act::None {
+                for v in z.data.iter_mut() {
+                    *v = p.act.apply(*v);
+                }
+            }
+            let sq = &siteq[p.site];
+            let y = FTensor {
+                shape: z.shape.clone(),
+                data: z.data.iter().map(|&v| sq.fq(v)).collect(),
+            };
+            caches.push((z, y));
+        }
+
+        // Seed: dS/dlogit = 2 * (student - teacher).
+        let student = &caches[self.out_idx].1;
+        let mut seed = vec![0f32; student.data.len()];
+        for (k, sd) in seed.iter_mut().enumerate() {
+            let e = student.data[k] - teacher.data[k];
+            acc.sse += (e as f64) * (e as f64);
+            *sd = 2.0 * e;
+        }
+        st.recycle(teacher.data);
+
+        let mut grads: Vec<Option<Vec<f32>>> = vec![None; plan.steps.len()];
+        let mut g_input: Option<Vec<f32>> = None;
+        grads[self.out_idx] = Some(seed);
+
+        for i in (0..plan.steps.len()).rev() {
+            let Some(gy) = grads[i].take() else { continue };
+            let step = &plan.steps[i];
+            let p = &plan.params[step.param];
+            let (a_pre, y) = &caches[i];
+
+            // Site fake-quant backward (STE + threshold grads).
+            let mut ga = vec![0f32; gy.len()];
+            site_bwd(
+                &siteq[p.site],
+                &a_pre.data,
+                &y.data,
+                &gy,
+                &mut ga,
+                p.site,
+                acc,
+            );
+
+            // Fused activation backward (mask from the post-act cache).
+            match p.act {
+                Act::None => {}
+                Act::Relu => {
+                    for (g, &a) in ga.iter_mut().zip(&a_pre.data) {
+                        if a <= 0.0 {
+                            *g = 0.0;
+                        }
+                    }
+                }
+                Act::Relu6 => {
+                    for (g, &a) in ga.iter_mut().zip(&a_pre.data) {
+                        if a <= 0.0 || a >= 6.0 {
+                            *g = 0.0;
+                        }
+                    }
+                }
+            }
+
+            // Op backward.
+            let (a_src, b_src) = self.tape[i];
+            let a_t = match a_src {
+                Src::Input => &x0h,
+                Src::Step(j) => &caches[j].1,
+            };
+            match (&p.kind, &wq[i]) {
+                (FpKind::Conv(_), Some(q)) => {
+                    let dw = acc
+                        .dw
+                        .entry(i)
+                        .or_insert_with(|| vec![0.0; q.layer.w.len()]);
+                    let gx = grad_buf(
+                        &mut grads,
+                        &mut g_input,
+                        a_src,
+                        a_t.data.len(),
+                    );
+                    conv_bwd(a_t, &q.layer, &ga, gx, dw);
+                }
+                (FpKind::DwConv(_), Some(q)) => {
+                    let dw = acc
+                        .dw
+                        .entry(i)
+                        .or_insert_with(|| vec![0.0; q.layer.w.len()]);
+                    let gx = grad_buf(
+                        &mut grads,
+                        &mut g_input,
+                        a_src,
+                        a_t.data.len(),
+                    );
+                    dwconv_bwd(a_t, &q.layer, &ga, gx, dw);
+                }
+                (FpKind::Dense(_), Some(q)) => {
+                    let dw = acc
+                        .dw
+                        .entry(i)
+                        .or_insert_with(|| vec![0.0; q.layer.w.len()]);
+                    let gx = grad_buf(
+                        &mut grads,
+                        &mut g_input,
+                        a_src,
+                        a_t.data.len(),
+                    );
+                    dense_bwd(a_t, &q.layer, &ga, gx, dw);
+                }
+                (FpKind::Add, _) => {
+                    let gx = grad_buf(
+                        &mut grads,
+                        &mut g_input,
+                        a_src,
+                        ga.len(),
+                    );
+                    for (g, &d) in gx.iter_mut().zip(&ga) {
+                        *g += d;
+                    }
+                    let b_src = b_src.expect("add without 2nd input");
+                    let gx = grad_buf(
+                        &mut grads,
+                        &mut g_input,
+                        b_src,
+                        ga.len(),
+                    );
+                    for (g, &d) in gx.iter_mut().zip(&ga) {
+                        *g += d;
+                    }
+                }
+                (FpKind::Gap, _) => {
+                    let gx = grad_buf(
+                        &mut grads,
+                        &mut g_input,
+                        a_src,
+                        a_t.data.len(),
+                    );
+                    gap_bwd(&a_t.shape, &ga, gx);
+                }
+                _ => anyhow::bail!("{}: missing weight quant", step.id),
+            }
+        }
+
+        // Input-site fake-quant backward (grads stop at the image).
+        if let Some(gin) = g_input {
+            let mut sink = vec![0f32; gin.len()];
+            site_bwd(
+                in_q,
+                &x0.data,
+                &x0h.data,
+                &gin,
+                &mut sink,
+                self.prog.input_site,
+                acc,
+            );
+        }
+        Ok(())
+    }
+
+    /// One full optimizer step: loss + grads, then Adam on the scales,
+    /// then the paper's empiric clamps. Matches the artifact trainer's
+    /// contract: `(loss, trainables', m', v')`.
+    #[allow(clippy::type_complexity)]
+    pub fn step(
+        &self,
+        tr: &BTreeMap<String, Tensor>,
+        m: &BTreeMap<String, Tensor>,
+        v: &BTreeMap<String, Tensor>,
+        adam_step: f32,
+        lr: f32,
+        x: &Tensor,
+    ) -> Result<(f32, BTreeMap<String, Tensor>, BTreeMap<String, Tensor>, BTreeMap<String, Tensor>)>
+    {
+        let (loss, grads) = self.loss_and_grads(tr, x)?;
+        let bc1 = 1.0 - B1.powf(adam_step);
+        let bc2 = 1.0 - B2.powf(adam_step);
+        let mut tr2 = BTreeMap::new();
+        let mut m2 = BTreeMap::new();
+        let mut v2 = BTreeMap::new();
+        for (key, pt) in tr {
+            let p = pt.as_f32()?;
+            let zeros = vec![0f32; p.len()];
+            let g = grads.get(key).unwrap_or(&zeros);
+            anyhow::ensure!(
+                g.len() == p.len(),
+                "grad/param length mismatch for {key}"
+            );
+            let mv = m
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("missing m state {key}"))?
+                .as_f32()?;
+            let vv = v
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("missing v state {key}"))?
+                .as_f32()?;
+            let mut pn = Vec::with_capacity(p.len());
+            let mut mn = Vec::with_capacity(p.len());
+            let mut vn = Vec::with_capacity(p.len());
+            for j in 0..p.len() {
+                let gm = B1 * mv[j] + (1.0 - B1) * g[j];
+                let gv = B2 * vv[j] + (1.0 - B2) * g[j] * g[j];
+                let mh = gm / bc1.max(1e-12);
+                let vh = gv / bc2.max(1e-12);
+                let mut pj = p[j] - lr * mh / (vh.sqrt() + ADAM_EPS);
+                pj = self.clamp_trainable(key, j, pj);
+                pn.push(pj);
+                mn.push(gm);
+                vn.push(gv);
+            }
+            tr2.insert(key.clone(), Tensor::f32(pt.shape.clone(), pn));
+            m2.insert(key.clone(), Tensor::f32(pt.shape.clone(), mn));
+            v2.insert(key.clone(), Tensor::f32(pt.shape.clone(), vn));
+        }
+        Ok((loss, tr2, m2, v2))
+    }
+
+    /// The paper's empiric parameter ranges, applied after each update
+    /// so the STE-through-clip gradients never strand a parameter.
+    fn clamp_trainable(&self, key: &str, j: usize, v: f32) -> f32 {
+        if key == "act_at" {
+            let lo = if self.site_meta[j].unsigned {
+                th::AT_MIN_UNSIGNED
+            } else {
+                th::AT_MIN_SIGNED
+            };
+            v.clamp(lo, th::AT_MAX)
+        } else {
+            // act_a, act_ar and every w_a share the [0.5, 1.0] range.
+            v.clamp(th::ALPHA_MIN, th::ALPHA_MAX)
+        }
+    }
+}
+
+/// The one construction of the identity trainable map (α = 1, α_T = 0,
+/// α_R = 1 + per-layer `w_a:<node>` scales): every native producer of
+/// trainables — the trainer and the backend's `identity_trainables` —
+/// goes through here, so the key/shape grammar cannot desynchronize
+/// from [`crate::quant::session::ThresholdSet::from_trainables`].
+pub fn identity_trainables(
+    num_sites: usize,
+    mode: QuantMode,
+    w_lens: impl IntoIterator<Item = (String, usize)>,
+) -> BTreeMap<String, Tensor> {
+    let s = num_sites;
+    let mut out = BTreeMap::new();
+    if mode.asym() {
+        out.insert("act_at".to_string(), Tensor::f32(vec![s], vec![0.0; s]));
+        out.insert("act_ar".to_string(), Tensor::f32(vec![s], vec![1.0; s]));
+    } else {
+        out.insert("act_a".to_string(), Tensor::f32(vec![s], vec![1.0; s]));
+    }
+    for (id, len) in w_lens {
+        out.insert(format!("w_a:{id}"), Tensor::f32(vec![len], vec![1.0; len]));
+    }
+    out
+}
+
+/// [`identity_trainables`] with the per-layer lengths derived from the
+/// graph (the `mode.vector()`-and-not-dense cout-or-1 rule shared with
+/// `Trained::identity`).
+pub fn identity_trainables_for_graph(
+    g: &GraphDef,
+    mode: QuantMode,
+    num_sites: usize,
+) -> BTreeMap<String, Tensor> {
+    identity_trainables(
+        num_sites,
+        mode,
+        g.conv_like().map(|n| {
+            let len = if mode.vector() && n.op != Op::Dense {
+                n.out_channels()
+            } else {
+                1
+            };
+            (n.id.clone(), len)
+        }),
+    )
+}
+
+fn take_vec(
+    tr: &BTreeMap<String, Tensor>,
+    key: &str,
+    len: usize,
+) -> Result<Vec<f32>> {
+    let t = tr
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing trainable {key}"))?;
+    let v = t.as_f32()?;
+    anyhow::ensure!(
+        v.len() == len,
+        "trainable {key}: expected {len} values, got {}",
+        v.len()
+    );
+    Ok(v.to_vec())
+}
+
+/// Fetch (creating on first use) the gradient buffer of a source value.
+fn grad_buf<'a>(
+    grads: &'a mut [Option<Vec<f32>>],
+    g_input: &'a mut Option<Vec<f32>>,
+    src: Src,
+    len: usize,
+) -> &'a mut Vec<f32> {
+    match src {
+        Src::Input => g_input.get_or_insert_with(|| vec![0.0; len]),
+        Src::Step(j) => grads[j].get_or_insert_with(|| vec![0.0; len]),
+    }
+}
+
+/// Site fake-quant backward: writes the STE-masked input gradient into
+/// `ga` and accumulates dS/dα (or dS/dα_T, dS/dα_R) into `acc`.
+fn site_bwd(
+    sq: &SiteQ,
+    a: &[f32],
+    y: &[f32],
+    gy: &[f32],
+    ga: &mut [f32],
+    site: usize,
+    acc: &mut Acc,
+) {
+    match sq {
+        SiteQ::Sym { qp, t, t_cal } => {
+            let mut d = 0f32;
+            for j in 0..gy.len() {
+                let q = (a[j] / qp.scale).round_ties_even() as i64;
+                let clipped = q < qp.qmin as i64 || q > qp.qmax as i64;
+                if clipped {
+                    d += gy[j] * (y[j] / t);
+                } else {
+                    d += gy[j] * ((y[j] - a[j]) / t);
+                    ga[j] = gy[j];
+                }
+            }
+            acc.da[site] += d * t_cal;
+        }
+        SiteQ::Asym { qp, width, r } => {
+            let mut dt = 0f32;
+            let mut dr = 0f32;
+            for j in 0..gy.len() {
+                let q = (a[j] / qp.scale).round_ties_even() as i64
+                    + qp.zero_point as i64;
+                if q < qp.qmin as i64 {
+                    dt += gy[j]; // ∂x̂/∂left = 1 at the low clip
+                } else if q > qp.qmax as i64 {
+                    dt += gy[j]; // ∂x̂/∂left = 1, ∂x̂/∂width = 1
+                    dr += gy[j];
+                } else {
+                    dr += gy[j] * ((y[j] - a[j]) / width);
+                    ga[j] = gy[j];
+                }
+            }
+            acc.dat[site] += dt * r;
+            acc.dar[site] += dr * r;
+        }
+    }
+}
+
+fn conv_bwd(
+    x: &FTensor,
+    l: &FpLayer,
+    gz: &[f32],
+    gx: &mut [f32],
+    dw: &mut [f32],
+) {
+    let (h, w, cin) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, pad_top) = same_pad(h, l.k, l.stride);
+    let (ow, pad_left) = same_pad(w, l.k, l.stride);
+    let cout = l.cout;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let gz_row = &gz[(oy * ow + ox) * cout..][..cout];
+            for ky in 0..l.k {
+                let iy = (oy * l.stride + ky) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..l.k {
+                    let ix =
+                        (ox * l.stride + kx) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xoff = (iy as usize * w + ix as usize) * cin;
+                    for ci in 0..cin {
+                        let woff = ((ky * l.k + kx) * cin + ci) * cout;
+                        let xv = x.data[xoff + ci];
+                        let wrow = &l.w[woff..woff + cout];
+                        let dwrow = &mut dw[woff..woff + cout];
+                        let mut a = 0f32;
+                        for co in 0..cout {
+                            let g = gz_row[co];
+                            a += g * wrow[co];
+                            dwrow[co] += g * xv;
+                        }
+                        gx[xoff + ci] += a;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn dwconv_bwd(
+    x: &FTensor,
+    l: &FpLayer,
+    gz: &[f32],
+    gx: &mut [f32],
+    dw: &mut [f32],
+) {
+    let (h, w, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, pad_top) = same_pad(h, l.k, l.stride);
+    let (ow, pad_left) = same_pad(w, l.k, l.stride);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let gz_row = &gz[(oy * ow + ox) * c..][..c];
+            for ky in 0..l.k {
+                let iy = (oy * l.stride + ky) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..l.k {
+                    let ix =
+                        (ox * l.stride + kx) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xoff = (iy as usize * w + ix as usize) * c;
+                    let woff = (ky * l.k + kx) * c;
+                    for ci in 0..c {
+                        let g = gz_row[ci];
+                        gx[xoff + ci] += g * l.w[woff + ci];
+                        dw[woff + ci] += g * x.data[xoff + ci];
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn dense_bwd(
+    x: &FTensor,
+    l: &FpLayer,
+    gz: &[f32],
+    gx: &mut [f32],
+    dw: &mut [f32],
+) {
+    let cout = l.cout;
+    for (ci, &xv) in x.data.iter().enumerate() {
+        let wrow = &l.w[ci * cout..(ci + 1) * cout];
+        let dwrow = &mut dw[ci * cout..(ci + 1) * cout];
+        let mut a = 0f32;
+        for co in 0..cout {
+            let g = gz[co];
+            a += g * wrow[co];
+            dwrow[co] += g * xv;
+        }
+        gx[ci] += a;
+    }
+}
+
+fn gap_bwd(x_shape: &[usize], gz: &[f32], gx: &mut [f32]) {
+    let (h, w, c) = (x_shape[0], x_shape[1], x_shape[2]);
+    let inv = 1.0 / (h * w).max(1) as f32;
+    for pix in 0..(h * w) {
+        let row = &mut gx[pix * c..(pix + 1) * c];
+        for (g, &d) in row.iter_mut().zip(gz) {
+            *g += d * inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TrainStep adapter for the shared fine-tune loop
+// ---------------------------------------------------------------------
+
+/// Native implementation of the fine-tune loop's step contract.
+pub struct NativeStep {
+    pub trainer: Trainer,
+}
+
+impl TrainStep for NativeStep {
+    fn batch_size(&self) -> usize {
+        TRAIN_BATCH
+    }
+
+    fn init_trainables(&self) -> Result<BTreeMap<String, Tensor>> {
+        Ok(self.trainer.init_trainables())
+    }
+
+    fn step(
+        &self,
+        tr: &BTreeMap<String, Tensor>,
+        m: &BTreeMap<String, Tensor>,
+        v: &BTreeMap<String, Tensor>,
+        adam_step: f32,
+        lr: f32,
+        x: &Tensor,
+    ) -> Result<StepOut> {
+        let (loss, tr2, m2, v2) = self.trainer.step(tr, m, v, adam_step, lr, x)?;
+        Ok(StepOut { loss, tr: tr2, m: m2, v: v2 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+    use crate::util::prop;
+
+    fn ft(shape: Vec<usize>, data: Vec<f32>) -> FTensor {
+        FTensor { shape, data }
+    }
+
+    /// Central finite difference of a scalar function of one input
+    /// element; the fp ops are linear in x and w, so the analytic
+    /// gradients must match to fp noise.
+    fn check_linear_bwd(
+        fwd: impl Fn(&FTensor) -> Vec<f32>,
+        bwd_gx: &[f32],
+        x: &FTensor,
+        r: &[f32],
+    ) {
+        let h = 1e-2f32;
+        for j in 0..x.data.len() {
+            let mut xp = x.clone();
+            xp.data[j] += h;
+            let mut xm = x.clone();
+            xm.data[j] -= h;
+            let yp = fwd(&xp);
+            let ym = fwd(&xm);
+            let lp: f32 = yp.iter().zip(r).map(|(a, b)| a * b).sum();
+            let lm: f32 = ym.iter().zip(r).map(|(a, b)| a * b).sum();
+            let num = (lp - lm) / (2.0 * h);
+            assert!(
+                (num - bwd_gx[j]).abs() <= 1e-3 * (1.0 + num.abs()),
+                "elem {j}: numeric {num} vs analytic {}",
+                bwd_gx[j]
+            );
+        }
+    }
+
+    #[test]
+    fn conv_backward_matches_finite_difference() {
+        let l = FpLayer {
+            w: prop::f32s(1, 3 * 3 * 2 * 3, -0.5, 0.5),
+            b: vec![0.1, -0.2, 0.3],
+            k: 3,
+            stride: 2,
+            cin: 2,
+            cout: 3,
+        };
+        let x = ft(vec![5, 5, 2], prop::f32s(2, 50, -1.0, 1.0));
+        let y0 = conv_fwd(&x, &l, Vec::new());
+        let r = prop::f32s(3, y0.data.len(), -1.0, 1.0);
+        let mut gx = vec![0f32; x.data.len()];
+        let mut dw = vec![0f32; l.w.len()];
+        conv_bwd(&x, &l, &r, &mut gx, &mut dw);
+        check_linear_bwd(|xx| conv_fwd(xx, &l, Vec::new()).data, &gx, &x, &r);
+        // weight grad: finite difference on one weight element
+        let h = 1e-2f32;
+        for j in [0usize, 7, 23, l.w.len() - 1] {
+            let mut lp = l.clone();
+            lp.w[j] += h;
+            let mut lm = l.clone();
+            lm.w[j] -= h;
+            let yp = conv_fwd(&x, &lp, Vec::new());
+            let ym = conv_fwd(&x, &lm, Vec::new());
+            let dp: f32 = yp.data.iter().zip(&r).map(|(a, b)| a * b).sum();
+            let dm: f32 = ym.data.iter().zip(&r).map(|(a, b)| a * b).sum();
+            let num = (dp - dm) / (2.0 * h);
+            assert!(
+                (num - dw[j]).abs() <= 1e-3 * (1.0 + num.abs()),
+                "w {j}: numeric {num} vs analytic {}",
+                dw[j]
+            );
+        }
+    }
+
+    #[test]
+    fn dwconv_and_dense_and_gap_backward_match_finite_difference() {
+        let l = FpLayer {
+            w: prop::f32s(5, 9 * 3, -0.5, 0.5),
+            b: vec![0.0; 3],
+            k: 3,
+            stride: 1,
+            cin: 3,
+            cout: 3,
+        };
+        let x = ft(vec![4, 4, 3], prop::f32s(6, 48, -1.0, 1.0));
+        let y0 = dwconv_fwd(&x, &l, Vec::new());
+        let r = prop::f32s(7, y0.data.len(), -1.0, 1.0);
+        let mut gx = vec![0f32; x.data.len()];
+        let mut dw = vec![0f32; l.w.len()];
+        dwconv_bwd(&x, &l, &r, &mut gx, &mut dw);
+        check_linear_bwd(|xx| dwconv_fwd(xx, &l, Vec::new()).data, &gx, &x, &r);
+
+        let d = FpLayer {
+            w: prop::f32s(8, 4 * 3, -0.5, 0.5),
+            b: vec![0.0; 3],
+            k: 0,
+            stride: 0,
+            cin: 4,
+            cout: 3,
+        };
+        let xv = ft(vec![4], prop::f32s(9, 4, -1.0, 1.0));
+        let r2 = prop::f32s(10, 3, -1.0, 1.0);
+        let mut gx2 = vec![0f32; 4];
+        let mut dw2 = vec![0f32; 12];
+        dense_bwd(&xv, &d, &r2, &mut gx2, &mut dw2);
+        check_linear_bwd(
+            |xx| dense_fwd(xx, &d, Vec::new()).data,
+            &gx2,
+            &xv,
+            &r2,
+        );
+
+        let xg = ft(vec![2, 2, 3], prop::f32s(11, 12, -1.0, 1.0));
+        let rg = prop::f32s(12, 3, -1.0, 1.0);
+        let mut gxg = vec![0f32; 12];
+        gap_bwd(&xg.shape, &rg, &mut gxg);
+        check_linear_bwd(|xx| gap_fwd(xx, Vec::new()).data, &gxg, &xg, &rg);
+    }
+
+    #[test]
+    fn trainer_shapes_and_finite_grads() {
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let stats = crate::fp::calibrate::calib_stats(&prog, 25, 2).unwrap();
+        for mode in [QuantMode::SymScalar, QuantMode::AsymVector] {
+            let trainer =
+                Trainer::new(&g, &w, &sites, &stats, mode, 2).unwrap();
+            let tr = trainer.init_trainables();
+            if mode.asym() {
+                assert!(tr.contains_key("act_at") && tr.contains_key("act_ar"));
+            } else {
+                assert!(tr.contains_key("act_a"));
+            }
+            assert!(tr.keys().any(|k| k.starts_with("w_a:")));
+            let (x, _) = crate::data::loader::batch(
+                crate::data::Split::Train,
+                &[0, 1, 2, 4, 5],
+            );
+            let (loss, grads) = trainer.loss_and_grads(&tr, &x).unwrap();
+            assert!(loss.is_finite() && loss >= 0.0, "{mode:?}: {loss}");
+            assert!(loss > 0.0, "{mode:?}: quantization error must be > 0");
+            let mut any_nonzero = false;
+            for (k, gv) in &grads {
+                assert!(
+                    gv.iter().all(|v| v.is_finite()),
+                    "{mode:?} {k}: non-finite grad"
+                );
+                any_nonzero |= gv.iter().any(|&v| v != 0.0);
+            }
+            assert!(any_nonzero, "{mode:?}: all gradients are zero");
+        }
+    }
+
+    #[test]
+    fn adam_step_moves_and_clamps_trainables() {
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let stats = crate::fp::calibrate::calib_stats(&prog, 25, 2).unwrap();
+        let trainer =
+            Trainer::new(&g, &w, &sites, &stats, QuantMode::SymScalar, 2)
+                .unwrap();
+        let tr = trainer.init_trainables();
+        let zeros: BTreeMap<String, Tensor> = tr
+            .iter()
+            .map(|(k, t)| (k.clone(), Tensor::zeros_f32(t.shape.clone())))
+            .collect();
+        let (x, _) =
+            crate::data::loader::batch(crate::data::Split::Train, &[0, 1, 2]);
+        let (_, tr2, m2, v2) = trainer
+            .step(&tr, &zeros, &zeros, 1.0, 0.05, &x)
+            .unwrap();
+        assert_eq!(tr2.len(), tr.len());
+        assert_eq!(m2.len(), tr.len());
+        assert_eq!(v2.len(), tr.len());
+        let moved = tr2.iter().any(|(k, t)| {
+            t.as_f32().unwrap() != tr[k].as_f32().unwrap()
+        });
+        assert!(moved, "one Adam step moved no trainable");
+        for (k, t) in &tr2 {
+            for &v in t.as_f32().unwrap() {
+                assert!(
+                    (th::ALPHA_MIN..=th::ALPHA_MAX).contains(&v),
+                    "{k}: {v} outside the empiric clamp"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact-free tests of the native backend: the staged session API
+//! running calibrate → fine-tune → export → int8 serving entirely on
+//! the native FP32 executor (`fat::fp`) over builtin models. This is
+//! the offline twin of `rust/tests/pipeline.rs` and the test for the
+//! ISSUE-3 acceptance criterion: the full pipeline completes with no
+//! `artifacts/` directory present, and the native fine-tune loss
+//! decreases over an epoch of synth data.
+
+use std::sync::Arc;
+
+use fat::coordinator::finetune::FinetuneOpts;
+use fat::int8::serve::EngineOptions;
+use fat::model::builtin;
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
+use fat::quant::QuantMode;
+use fat::runtime::{Registry, Runtime};
+
+/// A session over a builtin model rooted at a directory that does not
+/// exist — proving no artifact file is ever touched.
+fn native_session(model: &str) -> QuantSession {
+    let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu().unwrap())));
+    let session =
+        QuantSession::open(reg, "definitely-no-artifacts-here", model)
+            .unwrap();
+    assert_eq!(session.core().backend_name(), "native");
+    session
+}
+
+fn fast_opts(max_steps: usize) -> FinetuneOpts {
+    FinetuneOpts {
+        epochs: 1,
+        stride: 10,
+        lr: 2e-2,
+        cycle: 0,
+        max_steps,
+        seed: 0xFA7,
+    }
+}
+
+#[test]
+fn unknown_model_error_names_builtins() {
+    let reg = Arc::new(Registry::new(Arc::new(Runtime::cpu().unwrap())));
+    let err = QuantSession::open(reg, "definitely-no-artifacts-here", "nope")
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("tiny_cnn"), "{msg}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn native_pipeline_end_to_end_without_artifacts() {
+    let session = native_session("tiny_cnn");
+    let spec = QuantSpec::parse("asym_vector", "max").unwrap();
+
+    // calibrate → identity-quantize → export → serve → infer
+    let cal = session.calibrate(CalibOpts::images(25)).unwrap();
+    assert_eq!(
+        cal.stats().site_minmax.len(),
+        session.core().sites.sites.len()
+    );
+    let fp = cal.fp_accuracy(100).unwrap();
+    assert!((0.0..=1.0).contains(&fp));
+    let th = cal.identity(&spec).unwrap();
+    let q = th.quant_accuracy(100).unwrap();
+    assert!((0.0..=1.0).contains(&q));
+    let engine = th.serve(EngineOptions::threads(2)).unwrap();
+    assert!(engine.param_bytes() > 100);
+    let (x, _) = fat::data::loader::batch(
+        fat::data::Split::Val,
+        &(0..10).collect::<Vec<_>>(),
+    );
+    let logits = engine.infer_batch(&x).unwrap();
+    assert_eq!(logits.shape, vec![10, 10]);
+    assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+
+    // int8 engine tracks the native fake-quant forward
+    let a8 = fat::coordinator::evaluate::int8_accuracy(&engine, 100).unwrap();
+    assert!(
+        (q - a8).abs() <= 0.15,
+        "int8 {a8} vs native fake-quant {q}"
+    );
+}
+
+#[test]
+fn native_finetune_loss_decreases_over_an_epoch() {
+    // The paper's scenario: max-calibrated thresholds inflated by rare
+    // outliers, which threshold training then shrinks (α < 1). A
+    // freshly max-calibrated tame net already sits near α* ≈ 1, so to
+    // get a *robust* decrease signal we inflate the calibrated ranges
+    // 4x (exactly what a heavy-tailed activation would do to the max
+    // calibrator) and let the trainer recover the tight thresholds.
+    let session = native_session("tiny_cnn");
+    let cal0 = session.calibrate(CalibOpts::images(25)).unwrap();
+    let mut inflated = cal0.stats().clone();
+    for mm in inflated.site_minmax.iter_mut() {
+        mm.min *= 4.0;
+        mm.max *= 4.0;
+    }
+    let cal = session.assume_calibrated(inflated, CalibOpts::images(25));
+    for mode in [QuantMode::SymScalar, QuantMode::AsymScalar] {
+        let spec = QuantSpec::from_mode(mode);
+        let th = cal.finetune(&spec, &fast_opts(20), |_, _, _| {}).unwrap();
+        let losses = th.losses();
+        assert_eq!(losses.len(), 20, "{mode:?}");
+        assert!(
+            losses.iter().all(|l| l.is_finite() && *l >= 0.0),
+            "{mode:?}: non-finite loss"
+        );
+        // RMSE distillation must reduce the quantization error: compare
+        // the first and last thirds of the loss curve (robust to
+        // per-batch noise).
+        let third = losses.len() / 3;
+        let head: f32 = losses[..third].iter().sum::<f32>() / third as f32;
+        let tail: f32 =
+            losses[losses.len() - third..].iter().sum::<f32>() / third as f32;
+        assert!(
+            tail < head,
+            "{mode:?}: loss did not decrease ({head:.5} -> {tail:.5}; {losses:?})"
+        );
+        // and the threshold scales actually moved below 1 (the analytic
+        // gradient pushes α down toward the un-inflated ranges)
+        let tr = th.thresholds().trained();
+        let scales = if mode.asym() { &tr.act_ar } else { &tr.act_a };
+        let mean: f32 = scales.iter().sum::<f32>() / scales.len() as f32;
+        assert!(
+            mean < 0.97,
+            "{mode:?}: threshold scales did not shrink (mean α = {mean})"
+        );
+        // fine-tuned thresholds still export + serve
+        let engine = th.serve(EngineOptions::threads(2)).unwrap();
+        let a8 =
+            fat::coordinator::evaluate::int8_accuracy(&engine, 50).unwrap();
+        assert!((0.0..=1.0).contains(&a8), "{mode:?}");
+    }
+}
+
+#[test]
+fn native_finetune_runs_from_fresh_calibration_too() {
+    // With honestly-calibrated ranges the optimum sits near α ≈ 1, so
+    // only sanity properties are asserted here (the decrease signal is
+    // pinned by the inflated-range test above).
+    let session = native_session("tiny_cnn");
+    let cal = session.calibrate(CalibOpts::images(25)).unwrap();
+    let spec = QuantSpec::from_mode(QuantMode::SymScalar);
+    let th = cal.finetune(&spec, &fast_opts(8), |_, _, _| {}).unwrap();
+    let losses = th.losses();
+    assert_eq!(losses.len(), 8);
+    assert!(losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+    assert!(th.quant_accuracy(50).is_ok());
+}
+
+#[test]
+fn native_calibrators_flow_through_hist_pass() {
+    let session = native_session("tiny_cnn");
+    let cal = session.calibrate(CalibOpts::images(25)).unwrap();
+    let max_spec = QuantSpec::parse("sym_vector", "max").unwrap();
+    let p_spec = QuantSpec::parse("sym_vector", "p999").unwrap();
+    let th_max = cal.identity(&max_spec).unwrap();
+    let th_p = cal.identity(&p_spec).unwrap();
+    // the percentile calibrator shrinks at least one site range
+    let shrunk = th_max
+        .stats()
+        .site_minmax
+        .iter()
+        .zip(&th_p.stats().site_minmax)
+        .any(|(a, b)| b.max < a.max || b.min > a.min);
+    assert!(shrunk, "p999 calibrator shrank no range");
+    // and the shrunk model still evaluates + exports
+    let acc = th_p.quant_accuracy(50).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(th_p.export().is_ok());
+}
+
+#[test]
+fn dws_rescale_runs_natively_and_preserves_fp() {
+    // mnas has dw→pw patterns; §3.3 rescaling must work off the native
+    // channel stats and leave the FP32 function intact
+    let session = native_session("mnas_mini_10");
+    let before = session.fp_accuracy(50).unwrap();
+    let cal = session.calibrate(CalibOpts::images(25)).unwrap();
+    let cal = cal.dws_rescale().unwrap();
+    assert!(!cal.rescale_reports().is_empty(), "no DWS patterns rescaled");
+    let after = cal.fp_accuracy(50).unwrap();
+    assert!(
+        (before - after).abs() <= 0.02,
+        "§3.3 rescale changed the FP32 function: {before} -> {after}"
+    );
+}
+
+#[test]
+fn from_parts_session_runs_custom_graph() {
+    // a hand-built graph + weights, no model zoo involved at all
+    // (input must be 32x32x3 — the SynthShapes calibration batches are)
+    let g = fat::model::GraphDef::from_json(
+        r#"{"name":"custom","num_classes":4,"nodes":[
+         {"id":"input","op":"input","inputs":[],"shape":[32,32,3]},
+         {"id":"c","op":"conv","inputs":["input"],"k":3,"stride":2,"cin":3,"cout":6,"bias":true},
+         {"id":"r","op":"relu","inputs":["c"]},
+         {"id":"g","op":"gap","inputs":["r"]},
+         {"id":"d","op":"dense","inputs":["g"],"cin":6,"cout":4,"bias":true}]}"#,
+    )
+    .unwrap();
+    let sites = builtin::sites_of(&g);
+    let weights = builtin::init_weights(&g, 7);
+    let session = QuantSession::from_parts(g, sites, weights);
+    assert_eq!(session.core().backend_name(), "native");
+    let cal = session.calibrate(CalibOpts::images(25)).unwrap();
+    let th = cal.identity(&QuantSpec::default()).unwrap();
+    let engine = th.serve(EngineOptions::threads(1)).unwrap();
+    // raw-bytes single-image serving path on the custom head size
+    let logits = engine.infer(&[7u8; 32 * 32 * 3]).unwrap();
+    assert_eq!(logits.len(), 4);
+}
+
+#[test]
+fn every_builtin_compiles_and_calibrates_one_batch() {
+    for name in builtin::names() {
+        let (g, sites, w) = builtin::load(name).unwrap();
+        let prog = fat::fp::FpProgram::compile(&g, &w, &sites, None).unwrap();
+        // one tiny forward proves the plan executes for every topology
+        let (x, _) =
+            fat::data::loader::batch(fat::data::Split::Val, &[0, 1]);
+        let y = prog.run_batch(&x, 2).unwrap();
+        assert_eq!(y.shape, vec![2, 10], "{name}");
+        assert!(
+            y.as_f32().unwrap().iter().all(|v| v.is_finite()),
+            "{name}: non-finite logits"
+        );
+    }
+}

@@ -16,6 +16,13 @@ fn setup() -> Option<(Arc<Registry>, std::path::PathBuf)> {
         eprintln!("SKIP: artifacts not built");
         return None;
     }
+    if !fat::runtime::pjrt_available() {
+        eprintln!(
+            "SKIP: no `pjrt` feature (these tests execute AOT artifacts; \
+             the native backend is covered by fp_native.rs)"
+        );
+        return None;
+    }
     let rt = Runtime::cpu().ok()?;
     Some((Arc::new(Registry::new(Arc::new(rt))), artifacts))
 }

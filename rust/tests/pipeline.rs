@@ -1,23 +1,26 @@
-//! End-to-end pipeline tests: short FAT runs over the real artifacts,
-//! checking stage composition, §3.3 invariants and int8 agreement.
-//! Skipped gracefully before `make artifacts`. These intentionally keep
-//! exercising the deprecated `Pipeline` shim (plus a shim-vs-session
-//! equivalence check); the staged-API tests live in
-//! `rust/tests/session_equiv.rs`.
-#![allow(deprecated)]
+//! End-to-end pipeline tests over the real AOT artifacts: short FAT
+//! runs checking stage composition, §3.3 invariants, int8 agreement and
+//! artifact-vs-native backend agreement. Skipped gracefully when
+//! `make artifacts` has not run or the build has no `pjrt` feature —
+//! the artifact-free equivalents live in `rust/tests/fp_native.rs`.
 
 use std::sync::Arc;
 
-use fat::coordinator::{Pipeline, PipelineConfig};
-use fat::int8::serve::{EngineOptions, Int8Engine};
+use fat::coordinator::PipelineConfig;
+use fat::int8::serve::EngineOptions;
+use fat::quant::backend::{ModelView, NativeExec, Executor};
 use fat::quant::export::QuantMode;
-use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
-use fat::runtime::{Registry, Runtime};
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec, SessionCore};
+use fat::runtime::{pjrt_available, Registry, Runtime};
 
 fn setup() -> Option<(Arc<Registry>, std::path::PathBuf)> {
     let artifacts = fat::artifacts_dir();
     if !artifacts.join("models/mobilenet_v2_mini").exists() {
-        eprintln!("SKIP: artifacts not built");
+        eprintln!("SKIP: artifacts not built (native-backend coverage runs in fp_native.rs)");
+        return None;
+    }
+    if !pjrt_available() {
+        eprintln!("SKIP: no `pjrt` feature (native-backend coverage runs in fp_native.rs)");
         return None;
     }
     let rt = Runtime::cpu().ok()?;
@@ -36,10 +39,10 @@ macro_rules! need {
 #[test]
 fn fat_pipeline_composes_and_finetunes() {
     let (reg, artifacts) = need!(setup());
-    let p = Pipeline::new(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let core = SessionCore::open(reg, &artifacts, "mobilenet_v2_mini").unwrap();
     let mode = QuantMode::SymVector;
-    let stats = p.calibrate(50).unwrap();
-    assert_eq!(stats.site_minmax.len(), p.sites.sites.len());
+    let stats = core.calibrate(50).unwrap();
+    assert_eq!(stats.site_minmax.len(), core.sites.sites.len());
     for mm in &stats.site_minmax {
         assert!(mm.min <= mm.max);
     }
@@ -49,30 +52,32 @@ fn fat_pipeline_composes_and_finetunes() {
     cfg.epochs = 1;
     cfg.val_images = 100;
 
-    let (tr, losses) = p.finetune(mode, &stats, &cfg, |_, _, _| {}).unwrap();
+    let (tr, losses) = core
+        .finetune(mode, &stats, &cfg.finetune_opts(false), |_, _, _| {})
+        .unwrap();
     assert_eq!(losses.len(), 3);
     assert!(losses.iter().all(|l| l.is_finite() && *l >= 0.0));
     // trainables moved
-    let tr0 = p.identity_trainables(mode).unwrap();
-    let moved = tr.iter().any(|(k, t)| {
-        t.as_f32().unwrap() != tr0[k].as_f32().unwrap()
-    });
+    let tr0 = core.identity_trainables(mode).unwrap();
+    let moved = tr
+        .iter()
+        .any(|(k, t)| t.as_f32().unwrap() != tr0[k].as_f32().unwrap());
     assert!(moved, "finetune did not update any trainable");
 
-    let acc = p.quant_accuracy(mode, &stats, &tr, 100).unwrap();
+    let acc = core.quant_accuracy(mode, &stats, &tr, 100).unwrap();
     assert!((0.0..=1.0).contains(&acc));
 }
 
 #[test]
 fn dws_rescale_preserves_fp_accuracy() {
     let (reg, artifacts) = need!(setup());
-    let mut p =
-        Pipeline::new(reg, &artifacts, "mobilenet_v2_mini").unwrap();
-    let before = p.fp_accuracy(200).unwrap();
-    let stats = p.calibrate(50).unwrap();
-    let reports = p.dws_rescale(&stats).unwrap();
+    let mut core =
+        SessionCore::open(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let before = core.fp_accuracy(200).unwrap();
+    let stats = core.calibrate(50).unwrap();
+    let reports = core.dws_rescale(&stats).unwrap();
     assert!(!reports.is_empty());
-    let after = p.fp_accuracy(200).unwrap();
+    let after = core.fp_accuracy(200).unwrap();
     assert!(
         (before - after).abs() <= 0.01,
         "rescale changed FP accuracy: {before} -> {after}"
@@ -82,30 +87,32 @@ fn dws_rescale_preserves_fp_accuracy() {
 #[test]
 fn inject_spread_preserves_fp_and_hurts_scalar_quant() {
     let (reg, artifacts) = need!(setup());
-    let mut p =
-        Pipeline::new(reg.clone(), &artifacts, "mobilenet_v2_mini").unwrap();
-    let fp_before = p.fp_accuracy(200).unwrap();
-    let n = p
+    let mut core =
+        SessionCore::open(reg.clone(), &artifacts, "mobilenet_v2_mini")
+            .unwrap();
+    let fp_before = core.fp_accuracy(200).unwrap();
+    let n = core
         .inject_spread(
             fat::coordinator::experiments::SPREAD_SEED,
             fat::coordinator::experiments::MOBILENET_SPREAD_LOG2,
         )
         .unwrap();
     assert!(n >= 5, "expected several DWS patterns, got {n}");
-    let fp_after = p.fp_accuracy(200).unwrap();
+    let fp_after = core.fp_accuracy(200).unwrap();
     assert!(
         (fp_before - fp_after).abs() <= 0.01,
         "spread injection must be function-preserving: {fp_before} -> {fp_after}"
     );
     // scalar quantization now collapses relative to the clean model
-    let stats = p.calibrate(50).unwrap();
-    let tr0 = p.identity_trainables(QuantMode::SymScalar).unwrap();
-    let q_spread = p
+    let stats = core.calibrate(50).unwrap();
+    let tr0 = core.identity_trainables(QuantMode::SymScalar).unwrap();
+    let q_spread = core
         .quant_accuracy(QuantMode::SymScalar, &stats, &tr0, 200)
         .unwrap();
-    let p_clean = Pipeline::new(reg, &artifacts, "mobilenet_v2_mini").unwrap();
-    let stats_c = p_clean.calibrate(50).unwrap();
-    let q_clean = p_clean
+    let core_clean =
+        SessionCore::open(reg, &artifacts, "mobilenet_v2_mini").unwrap();
+    let stats_c = core_clean.calibrate(50).unwrap();
+    let q_clean = core_clean
         .quant_accuracy(QuantMode::SymScalar, &stats_c, &tr0, 200)
         .unwrap();
     assert!(
@@ -117,14 +124,14 @@ fn inject_spread_preserves_fp_and_hurts_scalar_quant() {
 #[test]
 fn int8_engine_agrees_with_fake_quant() {
     let (reg, artifacts) = need!(setup());
-    let p = Pipeline::new(reg, &artifacts, "mnas_mini_10").unwrap();
-    let mode = QuantMode::SymVector;
-    let stats = p.calibrate(50).unwrap();
-    let tr = p.identity_trainables(mode).unwrap();
-    let fake = p.quant_accuracy(mode, &stats, &tr, 200).unwrap();
-    let trained = p.trained_of_map(mode, &tr).unwrap();
-    let qm = p.export_int8(mode, &stats, &trained).unwrap();
-    let engine = Int8Engine::new(qm, EngineOptions::default());
+    let th = QuantSession::open(reg, &artifacts, "mnas_mini_10")
+        .unwrap()
+        .calibrate(CalibOpts::images(50))
+        .unwrap()
+        .identity(&QuantSpec::from_mode(QuantMode::SymVector))
+        .unwrap();
+    let fake = th.quant_accuracy(200).unwrap();
+    let engine = th.serve(EngineOptions::default()).unwrap();
     let acc =
         fat::coordinator::experiments::int8_accuracy(&engine, 200).unwrap();
     assert!(
@@ -134,53 +141,55 @@ fn int8_engine_agrees_with_fake_quant() {
     assert!(engine.param_bytes() > 10_000);
 }
 
-/// The redesigned session path must be bit-exact with the legacy
-/// `Pipeline` path for every mode: same calibration, same identity
-/// thresholds, same exported integer model, same logits.
-#[test]
-fn session_matches_pipeline_bit_exact_per_mode() {
-    let (reg, artifacts) = need!(setup());
-    let p =
-        Pipeline::new(reg.clone(), &artifacts, "mnas_mini_10").unwrap();
-    let session =
-        QuantSession::open(reg, &artifacts, "mnas_mini_10").unwrap();
-    let stats = p.calibrate(50).unwrap();
-    let cal = session.calibrate(CalibOpts::images(50)).unwrap();
-    let (x, _) = fat::data::loader::batch(
-        fat::data::Split::Val,
-        &(0..20).collect::<Vec<_>>(),
-    );
-    for mode in QuantMode::all() {
-        let legacy = p
-            .export_int8(mode, &stats, &p.identity_trained(mode))
-            .unwrap();
-        let engine = cal
-            .identity(&QuantSpec::from_mode(mode))
-            .unwrap()
-            .serve(EngineOptions::threads(2))
-            .unwrap();
-        let want = legacy.run_batch_with(&x, 1).unwrap();
-        let got = engine.infer_batch(&x).unwrap();
-        let (a, b) = (want.as_f32().unwrap(), got.as_f32().unwrap());
-        assert_eq!(a.len(), b.len(), "{mode:?}");
-        for i in 0..a.len() {
-            assert_eq!(a[i].to_bits(), b[i].to_bits(), "{mode:?} logit {i}");
-        }
-    }
-}
-
 #[test]
 fn asym_pipeline_runs() {
     let (reg, artifacts) = need!(setup());
-    let p = Pipeline::new(reg, &artifacts, "mnas_mini_10").unwrap();
+    let core = SessionCore::open(reg, &artifacts, "mnas_mini_10").unwrap();
     let mode = QuantMode::AsymScalar;
-    let stats = p.calibrate(50).unwrap();
+    let stats = core.calibrate(50).unwrap();
     let mut cfg = PipelineConfig::default();
     cfg.max_steps = 2;
     cfg.epochs = 1;
-    let (tr, losses) = p.finetune(mode, &stats, &cfg, |_, _, _| {}).unwrap();
+    let (tr, losses) = core
+        .finetune(mode, &stats, &cfg.finetune_opts(false), |_, _, _| {})
+        .unwrap();
     assert!(losses.iter().all(|l| l.is_finite()));
     assert!(tr.contains_key("act_at") && tr.contains_key("act_ar"));
-    let acc = p.quant_accuracy(mode, &stats, &tr, 100).unwrap();
+    let acc = core.quant_accuracy(mode, &stats, &tr, 100).unwrap();
     assert!(acc > 0.15, "asym quant collapsed unexpectedly: {acc}");
+}
+
+/// Backend agreement: on the same pretrained model + calibration, the
+/// native fake-quant forward must closely track the AOT (PJRT-lowered)
+/// fake-quant forward — both implement eq. 4–9 over identical site
+/// parameters, so their accuracies may differ only by borderline-pixel
+/// rounding.
+#[test]
+fn native_fake_quant_agrees_with_artifact_fake_quant() {
+    let (reg, artifacts) = need!(setup());
+    let core = SessionCore::open(reg, &artifacts, "mnas_mini_10").unwrap();
+    let stats = core.calibrate(50).unwrap();
+    let native = NativeExec;
+    let view = ModelView {
+        graph: &core.graph,
+        sites: &core.sites,
+        weights: &core.weights,
+    };
+    // the native FP32 forward must track the PJRT fp_forward
+    let art_fp = core.fp_accuracy(200).unwrap();
+    let nat_fp = native.fp_accuracy(&view, 200).unwrap();
+    assert!(
+        (art_fp - nat_fp).abs() <= 0.03,
+        "fp: artifact {art_fp} vs native {nat_fp}"
+    );
+    for mode in [QuantMode::SymScalar, QuantMode::AsymVector] {
+        let tr = native.identity_trainables(&view, mode).unwrap();
+        let art_acc = core.quant_accuracy(mode, &stats, &tr, 200).unwrap();
+        let nat_acc =
+            native.quant_accuracy(&view, mode, &stats, &tr, 200).unwrap();
+        assert!(
+            (art_acc - nat_acc).abs() <= 0.05,
+            "{mode:?}: artifact {art_acc} vs native {nat_acc}"
+        );
+    }
 }
