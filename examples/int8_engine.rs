@@ -1,7 +1,8 @@
 //! **int8 engine study**: the deployment simulator in isolation —
-//! latency/throughput of the `Int8Engine` serving handle vs the PJRT
+//! latency/throughput of the `Int8Engine` serving handle vs the native
 //! f32 forward, model-size accounting, fake-quant agreement, and the
-//! raw-bytes `infer` path.
+//! raw-bytes `infer` path. Artifact-free: runs on the builtin zoo +
+//! native backend when `artifacts/` is absent.
 //!
 //!   cargo run --release --example int8_engine -- [--model M] [--mode MODE]
 
@@ -51,7 +52,7 @@ fn main() -> Result<()> {
     let fake = th.quant_accuracy(val)?;
     let acc = fat::coordinator::evaluate::int8_accuracy(&engine, val)?;
     println!(
-        "accuracy: fake-quant (XLA) {:.2}%  vs int8 engine {:.2}%",
+        "accuracy: fake-quant {:.2}%  vs int8 engine {:.2}%",
         fake * 100.0,
         acc * 100.0
     );
@@ -97,28 +98,26 @@ fn main() -> Result<()> {
         }
     }
 
+    // f32 reference: the native FP32 executor over the same images
     let core = session.core();
-    let art = core.artifact("fp_forward")?;
-    // fp_forward expects batch 100; re-batch accordingly
-    let b100 = Batcher::new(Split::Val, (0..200u64).collect(), 100);
+    let prog = fat::fp::FpProgram::compile(
+        &core.graph,
+        &core.weights,
+        &core.sites,
+        None,
+    )?;
     let t = Instant::now();
-    for (x, _) in b100.epoch_iter(0) {
-        let inputs = fat::coordinator::marshal::build_inputs(
-            &art.manifest,
-            &[
-                fat::coordinator::marshal::Group::Map(&core.weights),
-                fat::coordinator::marshal::Group::Single(&x),
-            ],
-        )?;
-        let _ = art.execute(&inputs)?;
+    for (x, _) in &batches {
+        let _ = prog.run_batch(x, fat_threads())?;
     }
     let f32_ips = 200.0 / t.elapsed().as_secs_f64();
 
     println!(
-        "throughput: int8 engine {int8_ips:.1} img/s  |  PJRT f32 {f32_ips:.1} img/s"
+        "throughput: int8 engine {int8_ips:.1} img/s  |  native f32 {f32_ips:.1} img/s"
     );
-    println!("(XLA fuses + vectorises the f32 path; the int8 engine models a \
-              mobile integer-only target — compare its accuracy, size and \
-              integer-arithmetic properties, not absolute CPU speed)");
+    println!("(the int8 engine models a mobile integer-only target — compare \
+              its accuracy, size and integer-arithmetic properties; the f32 \
+              row is the native backend's planned executor on the same \
+              worker pool)");
     Ok(())
 }

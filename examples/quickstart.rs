@@ -1,10 +1,12 @@
-//! **Quickstart — the end-to-end driver** (DESIGN.md §5–§6).
+//! **Quickstart — the end-to-end driver** (DESIGN.md §5–§7).
 //!
 //! Runs the complete FAT system on a real small workload through the
-//! staged `QuantSession` API, proving all three layers compose:
+//! staged `QuantSession` API, proving all layers compose:
 //!
-//!   1. open the pretrained FP model + AOT artifacts (L2/L1 products)
-//!   2. evaluate FP accuracy through the PJRT runtime
+//!   1. open the model — the pretrained artifact directory when it
+//!      exists, else a builtin model on the native FP32 backend
+//!      (`artifacts/` is NOT required; a bare checkout works)
+//!   2. evaluate FP accuracy (PJRT artifact or native executor)
 //!   3. calibrate on the paper's 100 training images
 //!   4. quantize (vector, asymmetric) without fine-tuning (`identity`)
 //!   5. FAT fine-tune: RMSE distillation on the unlabeled 10% subset,
@@ -16,7 +18,9 @@
 //!
 //! `--full` uses the paper's schedule (6 epochs); the default is a
 //! shortened schedule sized for the single-core CI box. Results land in
-//! EXPERIMENTS.md §E2E.
+//! EXPERIMENTS.md §E2E. (On the native backend the builtin weights are
+//! untrained, so the accuracy ladder is near chance — the pipeline
+//! mechanics, loss curve and int8 agreement are what it demonstrates.)
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -58,8 +62,10 @@ fn main() -> Result<()> {
     );
     let reg = Arc::new(Registry::new(rt));
 
-    // stage 0: open (loads + BN-folds the model)
+    // stage 0: open (loads + BN-folds the model; falls back to the
+    // builtin zoo + native backend when artifacts/ is absent)
     let session = QuantSession::open(reg, &artifacts, model)?;
+    println!("backend: {}", session.core().backend_name());
 
     // 1-2: FP baseline through the AOT fp_forward artifact
     let t = Instant::now();

@@ -54,7 +54,13 @@ fn main() {
         );
     });
 
-    // point-wise fine-tune step (the §4.2 rung-2 unit of work)
+    // point-wise fine-tune step (the §4.2 rung-2 unit of work) — this
+    // stage is artifact-only (no native implementation), so skip it
+    // when the float backend is native
+    if !fat::runtime::pjrt_available() {
+        println!("SKIP pointwise_finetune_step (needs the `pjrt` feature)");
+        return;
+    }
     let mut cfg = PipelineConfig::default();
     cfg.max_steps = 1;
     cfg.epochs = 1;

@@ -1,0 +1,82 @@
+//! Native fine-tune benchmarks (EXPERIMENTS.md §Perf): step and
+//! epoch-equivalent time of the analytic threshold trainer with a
+//! worker-count sweep, plus the native FP32 evaluation throughput. No
+//! artifacts needed — this is the `FAT_THREADS` scaling story of the
+//! native backend.
+//!
+//!   cargo bench --bench bench_finetune
+//!   FAT_BENCH_ITERS=20 cargo bench --bench bench_finetune
+
+use fat::data::{loader, Split};
+use fat::fp::{self, Trainer};
+use fat::model::builtin;
+use fat::quant::QuantMode;
+use fat::util::bench::{bench_throughput, report_speedup, BenchOpts};
+use fat::util::threads::fat_threads;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let batch = fp::train::TRAIN_BATCH;
+    let (x, _) = loader::batch(Split::Train, &(0..batch as u64).collect::<Vec<_>>());
+
+    let mut sweep = vec![1usize, 2, 4];
+    if !sweep.contains(&fat_threads()) {
+        sweep.push(fat_threads());
+    }
+
+    for model in ["tiny_cnn", "mnas_mini_10"] {
+        let (g, sites, w) = builtin::load(model).unwrap();
+        let prog = fp::FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let stats =
+            fp::calibrate::calib_stats(&prog, 25, fat_threads()).unwrap();
+
+        // native FP32 forward throughput (the teacher/eval path)
+        for &t in &sweep {
+            bench_throughput(
+                &format!("fp_forward_{model}_b{batch}_t{t}"),
+                &opts,
+                batch,
+                || {
+                    std::hint::black_box(
+                        prog.run_batch(&x, t).unwrap().len(),
+                    );
+                },
+            );
+        }
+
+        // one fine-tune step (teacher + student + backward + grads)
+        let mut base = 0.0;
+        for &t in &sweep {
+            let trainer =
+                Trainer::new(&g, &w, &sites, &stats, QuantMode::SymScalar, t)
+                    .unwrap();
+            let tr = trainer.init_trainables();
+            let mean = bench_throughput(
+                &format!("finetune_step_{model}_b{batch}_t{t}"),
+                &opts,
+                batch,
+                || {
+                    let (loss, grads) =
+                        trainer.loss_and_grads(&tr, &x).unwrap();
+                    std::hint::black_box((loss, grads.len()));
+                },
+            );
+            if t == 1 {
+                base = mean;
+            } else {
+                report_speedup(
+                    &format!("finetune_step_{model}_t{t}_vs_t1"),
+                    base,
+                    mean,
+                );
+            }
+        }
+        // paper-schedule framing: steps per epoch at stride 10
+        let steps_per_epoch =
+            fat::data::synth::TRAIN_SIZE / 10 / batch;
+        println!(
+            "BENCH finetune_epoch_{model} steps_per_epoch={steps_per_epoch} \
+             (epoch time = steps x step mean above)"
+        );
+    }
+}

@@ -85,7 +85,10 @@ fn main() {
         });
     }
 
-    // whole-model throughput (needs artifacts + the pjrt feature)
+    // whole-model throughput (needs the artifact model dir for the
+    // pretrained weights; the float side of the export runs on whichever
+    // backend resolves — PJRT with the `pjrt` feature, native otherwise.
+    // The engine numbers below measure the int8 plan either way.)
     let artifacts = fat::artifacts_dir();
     if artifacts.join("models/mobilenet_v2_mini").exists() {
         let rt = match fat::runtime::Runtime::cpu() {

@@ -16,6 +16,13 @@ fn main() {
         println!("SKIP runtime benches (run `make artifacts`)");
         return;
     }
+    if !fat::runtime::pjrt_available() {
+        println!(
+            "SKIP runtime benches (no `pjrt` feature; see bench_finetune \
+             for the native backend)"
+        );
+        return;
+    }
     let opts = BenchOpts { warmup: 1, iters: 8, max_secs: 60.0 };
     let rt = match Runtime::cpu() {
         Ok(rt) => Arc::new(rt),

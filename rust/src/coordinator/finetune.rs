@@ -1,7 +1,14 @@
-//! The FAT fine-tune loop: drives the `train_step_<mode>` artifact with
-//! RMSE-distillation batches (unlabeled — labels are generated but unused,
-//! exactly as the paper discards them), Adam on threshold scales only,
-//! cosine annealing with optimizer reset.
+//! The FAT fine-tune loop: RMSE-distillation batches (unlabeled — labels
+//! are generated but unused, exactly as the paper discards them), Adam on
+//! threshold scales only, cosine annealing with optimizer reset.
+//!
+//! The loop is backend-agnostic: it drives any [`TrainStep`] — the
+//! AOT-artifact stepper ([`ArtifactStep`], whose Adam update runs inside
+//! the lowered `train_step_<mode>` executable) or the native trainer
+//! (`crate::fp::train::NativeStep`, whose analytic gradients and Adam
+//! update run in Rust). Scheduling, shuffling, restarts and the
+//! trainable/optimizer-state plumbing are shared, so both backends see
+//! the identical schedule.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -49,21 +56,100 @@ pub struct FinetuneOpts {
     pub seed: u64,
 }
 
-/// Run fine-tuning. Returns (trained map, per-step losses).
-pub fn run(
-    art: &Arc<Artifact>,
-    weights: &BTreeMap<String, Tensor>,
-    act_t: &Tensor,
+/// Result of one optimizer step: loss + updated trainables and Adam
+/// moment maps.
+pub struct StepOut {
+    pub loss: f32,
+    pub tr: BTreeMap<String, Tensor>,
+    pub m: BTreeMap<String, Tensor>,
+    pub v: BTreeMap<String, Tensor>,
+}
+
+/// One backend's fine-tune step: everything the shared loop needs to
+/// drive it. `adam_step` is the in-cycle Adam step counter (it resets
+/// with the optimizer on every cosine restart, paper §4.1.2).
+pub trait TrainStep {
+    fn batch_size(&self) -> usize;
+    fn init_trainables(&self) -> Result<BTreeMap<String, Tensor>>;
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        tr: &BTreeMap<String, Tensor>,
+        m: &BTreeMap<String, Tensor>,
+        v: &BTreeMap<String, Tensor>,
+        adam_step: f32,
+        lr: f32,
+        x: &Tensor,
+    ) -> Result<StepOut>;
+}
+
+/// The AOT-artifact stepper: marshals `(weights, act_t, trainables, m,
+/// v, step, lr, batch)` through the `train_step_<mode>` executable.
+pub struct ArtifactStep<'a> {
+    pub art: &'a Arc<Artifact>,
+    pub weights: &'a BTreeMap<String, Tensor>,
+    pub act_t: &'a Tensor,
+}
+
+impl TrainStep for ArtifactStep<'_> {
+    fn batch_size(&self) -> usize {
+        self.art
+            .manifest
+            .inputs
+            .iter()
+            .find(|s| s.name == "7")
+            .map(|s| s.shape[0])
+            .unwrap_or(0)
+    }
+
+    fn init_trainables(&self) -> Result<BTreeMap<String, Tensor>> {
+        Ok(init_trainables(self.art))
+    }
+
+    fn step(
+        &self,
+        tr: &BTreeMap<String, Tensor>,
+        m: &BTreeMap<String, Tensor>,
+        v: &BTreeMap<String, Tensor>,
+        adam_step: f32,
+        lr: f32,
+        x: &Tensor,
+    ) -> Result<StepOut> {
+        let step_t = Tensor::scalar_f32(adam_step);
+        let lr_t = Tensor::scalar_f32(lr);
+        let inputs = build_inputs(
+            &self.art.manifest,
+            &[
+                Group::Map(self.weights),
+                Group::Single(self.act_t),
+                Group::Map(tr),
+                Group::Map(m),
+                Group::Map(v),
+                Group::Single(&step_t),
+                Group::Single(&lr_t),
+                Group::Single(x),
+            ],
+        )?;
+        let outs = self.art.execute(&inputs)?;
+        let o = split_outputs(&self.art.manifest, outs)?;
+        Ok(StepOut {
+            loss: o.singles[&0].as_f32()?[0],
+            tr: o.maps[&1].clone(),
+            m: o.maps[&2].clone(),
+            v: o.maps[&3].clone(),
+        })
+    }
+}
+
+/// Run the shared fine-tune loop over any stepper. Returns (trained
+/// map, per-step losses).
+pub fn run_loop(
+    stepper: &dyn TrainStep,
     opts: &FinetuneOpts,
     mut progress: impl FnMut(usize, f32, f32),
 ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-    let batch_size = art
-        .manifest
-        .inputs
-        .iter()
-        .find(|s| s.name == "7")
-        .map(|s| s.shape[0])
-        .ok_or_else(|| anyhow::anyhow!("train_step: no batch input"))?;
+    let batch_size = stepper.batch_size();
+    anyhow::ensure!(batch_size > 0, "fine-tune: no batch input");
 
     let indices: Vec<u64> = (0..crate::data::synth::TRAIN_SIZE as u64)
         .step_by(opts.stride.max(1))
@@ -74,7 +160,7 @@ pub fn run(
     let cycle = if opts.cycle == 0 { steps_per_epoch } else { opts.cycle };
     let sched = CosineRestarts::new(opts.lr, cycle);
 
-    let mut tr = init_trainables(art);
+    let mut tr = stepper.init_trainables()?;
     let mut m = zeros_like(&tr);
     let mut v = zeros_like(&tr);
     let mut adam_step = 0f32; // resets with the optimizer (paper §4.1.2)
@@ -90,29 +176,12 @@ pub fn run(
                 adam_step = 0.0;
             }
             adam_step += 1.0;
-            let step_t = Tensor::scalar_f32(adam_step);
-            let lr_t = Tensor::scalar_f32(lr);
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(weights),
-                    Group::Single(act_t),
-                    Group::Map(&tr),
-                    Group::Map(&m),
-                    Group::Map(&v),
-                    Group::Single(&step_t),
-                    Group::Single(&lr_t),
-                    Group::Single(&x),
-                ],
-            )?;
-            let outs = art.execute(&inputs)?;
-            let o = split_outputs(&art.manifest, outs)?;
-            let loss = o.singles[&0].as_f32()?[0];
-            tr = o.maps[&1].clone();
-            m = o.maps[&2].clone();
-            v = o.maps[&3].clone();
-            losses.push(loss);
-            progress(global, loss, lr);
+            let out = stepper.step(&tr, &m, &v, adam_step, lr, &x)?;
+            tr = out.tr;
+            m = out.m;
+            v = out.v;
+            losses.push(out.loss);
+            progress(global, out.loss, lr);
             global += 1;
             if opts.max_steps > 0 && global >= opts.max_steps {
                 break 'outer;
@@ -120,6 +189,18 @@ pub fn run(
         }
     }
     Ok((tr, losses))
+}
+
+/// Run fine-tuning through an AOT `train_step_*` artifact. Returns
+/// (trained map, per-step losses).
+pub fn run(
+    art: &Arc<Artifact>,
+    weights: &BTreeMap<String, Tensor>,
+    act_t: &Tensor,
+    opts: &FinetuneOpts,
+    progress: impl FnMut(usize, f32, f32),
+) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+    run_loop(&ArtifactStep { art, weights, act_t }, opts, progress)
 }
 
 #[cfg(test)]
@@ -137,5 +218,69 @@ mod tests {
             seed: 1,
         };
         assert_eq!(o.epochs, 6);
+    }
+
+    /// A stepper that just counts calls and echoes its state: checks the
+    /// loop's restart/step bookkeeping without any backend.
+    struct Probe;
+
+    impl TrainStep for Probe {
+        fn batch_size(&self) -> usize {
+            50
+        }
+
+        fn init_trainables(&self) -> Result<BTreeMap<String, Tensor>> {
+            let mut m = BTreeMap::new();
+            m.insert("act_a".to_string(), Tensor::f32(vec![1], vec![1.0]));
+            Ok(m)
+        }
+
+        fn step(
+            &self,
+            tr: &BTreeMap<String, Tensor>,
+            m: &BTreeMap<String, Tensor>,
+            _v: &BTreeMap<String, Tensor>,
+            adam_step: f32,
+            lr: f32,
+            _x: &Tensor,
+        ) -> Result<StepOut> {
+            // optimizer state must arrive zeroed right after a restart
+            if adam_step == 1.0 {
+                assert_eq!(m["act_a"].as_f32()?[0], 0.0);
+            }
+            let mut tr2 = tr.clone();
+            let cur = tr2["act_a"].as_f32()?[0];
+            tr2.insert(
+                "act_a".to_string(),
+                Tensor::f32(vec![1], vec![cur - 0.01]),
+            );
+            let mut m2 = m.clone();
+            m2.insert("act_a".to_string(), Tensor::f32(vec![1], vec![1.0]));
+            Ok(StepOut {
+                loss: lr, // echo lr so the test can see the schedule
+                tr: tr2,
+                m: m2,
+                v: m.clone(),
+            })
+        }
+    }
+
+    #[test]
+    fn loop_steps_caps_and_threads_state() {
+        let opts = FinetuneOpts {
+            epochs: 3,
+            stride: 40,
+            lr: 0.5,
+            cycle: 4,
+            max_steps: 9,
+            seed: 7,
+        };
+        let (tr, losses) = run_loop(&Probe, &opts, |_, _, _| {}).unwrap();
+        assert_eq!(losses.len(), 9);
+        // trainables threaded through every step
+        let a = tr["act_a"].as_f32().unwrap()[0];
+        assert!((a - (1.0 - 0.09)).abs() < 1e-5, "{a}");
+        // cosine restarts: step 4 starts a new cycle at peak lr
+        assert!((losses[4] - 0.5).abs() < 1e-6);
     }
 }

@@ -7,19 +7,18 @@
 //!
 //! The staged public API lives in [`crate::quant::session`]
 //! ([`crate::quant::QuantSession`] → `Calibrated` → `Thresholded` →
-//! [`crate::int8::Int8Engine`]); the loose [`Pipeline`] handle here is a
-//! deprecated shim kept for one release.
+//! [`crate::int8::Int8Engine`]). The deprecated loose `Pipeline` shim
+//! that used to live here was removed after its one grace release; the
+//! session core ([`crate::quant::session::SessionCore`]) exposes the
+//! same primitives.
 
 pub mod config;
 pub mod evaluate;
 pub mod experiments;
 pub mod finetune;
 pub mod marshal;
-pub mod pipeline;
 pub mod report;
 pub mod schedule;
 
 pub use config::PipelineConfig;
-#[allow(deprecated)]
-pub use pipeline::Pipeline;
 pub use report::Report;

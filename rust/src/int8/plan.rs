@@ -1,13 +1,20 @@
-//! Execution planning for the int8 engine (DESIGN.md §5).
+//! Execution planning for the int8 engine and the native FP32 executor
+//! (DESIGN.md §5, §7).
 //!
 //! `quant::export::build_qmodel` compiles the folded graph into an
 //! [`ExecPlan`] exactly once: a topological schedule of compute steps
 //! with **dense indices** (no name lookups on the hot path), a dense
 //! parameter table, and **liveness-based buffer slots** so activations
-//! recycle a small [`Arena`] of i8 buffers instead of cloning `QTensor`s
+//! recycle a small [`Arena`] of buffers instead of cloning tensors
 //! through a per-call `BTreeMap`. Relu/relu6 nodes whose clamp was fused
 //! into their producer compile to nothing: their value aliases the
 //! producer's slot.
+//!
+//! The scheduler is generic over the per-node parameter payload `P` and
+//! the arena element type `T`: the int8 engine instantiates
+//! `ExecPlan<QNode>` / `Arena<i8>` (the defaults), and the native FP32
+//! backend (`crate::fp`) instantiates `ExecPlan<fp::FpNode>` /
+//! `Arena<f32>` — one planner, two dtypes.
 
 use std::collections::BTreeMap;
 
@@ -17,22 +24,29 @@ use crate::model::{GraphDef, Op};
 
 use super::engine::QNode;
 
-/// Recycled i8 buffer pool: freed activation buffers are handed to later
-/// steps instead of allocating per node.
-#[derive(Debug, Default)]
-pub struct Arena {
-    free: Vec<Vec<i8>>,
+/// Recycled buffer pool: freed activation buffers are handed to later
+/// steps instead of allocating per node. `T = i8` for the int8 engine,
+/// `T = f32` for the native FP32 executor.
+#[derive(Debug)]
+pub struct Arena<T = i8> {
+    free: Vec<Vec<T>>,
 }
 
-impl Arena {
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena { free: Vec::new() }
+    }
+}
+
+impl<T> Arena<T> {
     /// Pop a recycled buffer (empty but with retained capacity), or a
     /// fresh one.
-    pub fn take(&mut self) -> Vec<i8> {
+    pub fn take(&mut self) -> Vec<T> {
         self.free.pop().unwrap_or_default()
     }
 
     /// Return a dead activation's buffer to the pool.
-    pub fn put(&mut self, mut buf: Vec<i8>) {
+    pub fn put(&mut self, mut buf: Vec<T>) {
         buf.clear();
         self.free.push(buf);
     }
@@ -64,12 +78,14 @@ pub struct PlanStep {
     pub frees: Vec<usize>,
 }
 
-/// A compiled schedule: steps + dense params + slot count.
+/// A compiled schedule: steps + dense params + slot count. `P` is the
+/// per-node parameter payload ([`QNode`] for the int8 engine,
+/// `fp::FpNode` for the native FP32 executor).
 #[derive(Debug, Clone)]
-pub struct ExecPlan {
+pub struct ExecPlan<P = QNode> {
     pub steps: Vec<PlanStep>,
     /// Dense parameter table in schedule order.
-    pub params: Vec<QNode>,
+    pub params: Vec<P>,
     /// Total buffer slots needed for one inference (incl. the input).
     pub num_slots: usize,
     /// Slot the (quantized) input tensor is placed in before step 0.
@@ -79,18 +95,21 @@ pub struct ExecPlan {
     index: BTreeMap<String, usize>,
 }
 
-impl ExecPlan {
-    /// Quantized parameters of a compute node, if it has any.
-    pub fn node(&self, id: &str) -> Option<&QNode> {
+impl<P> ExecPlan<P> {
+    /// Parameters of a compute node, if it has any.
+    pub fn node(&self, id: &str) -> Option<&P> {
         self.index.get(id).map(|&i| &self.params[i])
     }
 
     /// Compile schedule + slot assignment from the folded graph and the
-    /// per-node quantized parameters built by `quant::export`.
+    /// per-node parameters (built by `quant::export` for int8, by
+    /// `fp::program` for the FP32 backend). `qnodes` must hold an entry
+    /// for every compute node; relu/relu6 entries are ignored (their
+    /// value aliases the producer's slot).
     pub fn compile(
         g: &GraphDef,
-        mut qnodes: BTreeMap<String, QNode>,
-    ) -> Result<ExecPlan> {
+        mut qnodes: BTreeMap<String, P>,
+    ) -> Result<ExecPlan<P>> {
         let pos: BTreeMap<&str, usize> = g
             .nodes
             .iter()
@@ -141,7 +160,7 @@ impl ExecPlan {
         let mut free_slots: Vec<usize> = Vec::new();
         let mut num_slots = 0usize;
         let mut steps = Vec::new();
-        let mut params: Vec<QNode> = Vec::new();
+        let mut params: Vec<P> = Vec::new();
         let mut index = BTreeMap::new();
         let mut input_slot = usize::MAX;
 
@@ -311,7 +330,7 @@ mod tests {
     #[test]
     fn missing_params_rejected() {
         let g = GraphDef::from_json(CHAIN).unwrap();
-        assert!(ExecPlan::compile(&g, BTreeMap::new()).is_err());
+        assert!(ExecPlan::compile(&g, BTreeMap::<String, QNode>::new()).is_err());
     }
 
     #[test]

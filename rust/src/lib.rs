@@ -8,30 +8,37 @@
 //!  * **L1** Pallas fake-quant / int8-GEMM kernels (`python/compile/kernels`)
 //!  * **L2** JAX model graphs + FAT fine-tune step (`python/compile`),
 //!    AOT-lowered to HLO-text artifacts at build time
-//!  * **L3** this crate: the quantization pipeline coordinator, PJRT
-//!    runtime (behind the `pjrt` feature), calibration, BN folding, §3.3
-//!    DWS rescaling, and an integer-only int8 inference engine (the
-//!    mobile-deployment simulator) driven by a precompiled execution
-//!    plan with `FAT_THREADS`-way parallelism.
+//!  * **L3** this crate: the quantization pipeline coordinator,
+//!    calibration, BN folding, §3.3 DWS rescaling, a **native FP32
+//!    backend** ([`fp`]: planned float executor, fake-quant forward and
+//!    analytic threshold trainer — DESIGN.md §7), an optional PJRT
+//!    runtime for the AOT artifacts (behind the `pjrt` feature), and an
+//!    integer-only int8 inference engine (the mobile-deployment
+//!    simulator) driven by a precompiled execution plan with
+//!    `FAT_THREADS`-way parallelism.
 //!
 //! The public API is staged (DESIGN.md §6): a
 //! [`quant::session::QuantSession`] walks the paper's dataflow —
 //! calibrate → optional §3.3 rescale → fine-tune or identity thresholds
 //! → export — with each stage a distinct type, and serving traffic goes
 //! through the [`int8::serve::Int8Engine`] handle (`Arc`-clone, pooled
-//! per-worker execution state). The loose [`coordinator::Pipeline`] is
-//! a deprecated shim kept for one release.
+//! per-worker execution state).
 //!
-//! Python never runs at runtime; the Rust binary drives everything from
-//! the AOT artifacts in `artifacts/`.
+//! Python never runs at runtime. With AOT artifacts present (and the
+//! `pjrt` feature), float stages execute the lowered HLO; without them,
+//! the native backend runs the identical pipeline on builtin models —
+//! `cargo run --release -- --epochs 1` works on a bare checkout
+//! (DESIGN.md §7).
 //!
 //! Environment knobs: `FAT_ARTIFACTS` (artifact dir, default
-//! `./artifacts`), `FAT_THREADS` (engine worker count, default = machine
-//! parallelism), `FAT_BENCH_ITERS` / `FAT_BENCH_MAX_SECS` (bench
-//! harness).
+//! `./artifacts`), `FAT_BACKEND` (`auto` | `native` | `artifact`),
+//! `FAT_THREADS` (worker count for the int8 engine and the native FP32
+//! backend, default = machine parallelism), `FAT_BENCH_ITERS` /
+//! `FAT_BENCH_MAX_SECS` (bench harness).
 
 pub mod coordinator;
 pub mod data;
+pub mod fp;
 pub mod int8;
 pub mod model;
 pub mod quant;

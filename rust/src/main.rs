@@ -1,13 +1,18 @@
 //! `fat` — the FAT quantization pipeline launcher, on the staged
 //! `QuantSession` → `Int8Engine` API.
 //!
+//! Runs with or without AOT artifacts: backend resolution picks the
+//! native FP32 executor when `artifacts/` is absent, so a bare
+//! `cargo run --release -- --epochs 1` executes the full calibrate →
+//! fine-tune → export → int8 pipeline on a builtin model.
+//!
 //! Usage:
+//!   fat [pipeline] [--config run.toml] [--model M] [--mode MODE]
+//!                [--calibrator C] [--epochs N] [--max-steps N]
+//!                [--val N] [--dws]
 //!   fat info
 //!   fat quantize --model mnas_mini_10 --mode asym_vector [--dws]
 //!                [--calibrator max|p9999|kl] [--val N]
-//!   fat pipeline [--config run.toml] [--model M] [--mode MODE]
-//!                [--calibrator C] [--epochs N] [--max-steps N]
-//!                [--val N] [--dws]
 //!   fat eval-int8 --model mnas_mini_10 --mode sym_vector [--val N]
 //!                 [--threads N]
 
@@ -25,19 +30,25 @@ use fat::util::cli::Args;
 const USAGE: &str = "\
 fat — FAT: fast adjustable threshold quantization
 
-Commands:
-  info                         list models + FP accuracies
-  quantize                     calibration-only quantization + accuracy
-    --model M --mode MODE --calib N --val N [--dws] [--calibrator C]
+Commands (default: pipeline):
   pipeline                     full FAT pipeline (calibrate→finetune→int8)
     [--config F] [--model M] [--mode MODE] [--calibrator C] [--epochs N]
     [--max-steps N] [--val N] [--lr F] [--dws]
+  info                         list models + FP accuracies
+  quantize                     calibration-only quantization + accuracy
+    --model M --mode MODE --calib N --val N [--dws] [--calibrator C]
   eval-int8                    int8 engine vs fake-quant agreement
     --model M --mode MODE [--val N] [--threads N]
 
 Modes: sym_scalar | sym_vector | asym_scalar | asym_vector
 Calibrators: max (default) | p99 | p999 | p9999 | kl
 Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
+        FAT_BACKEND=auto|native|artifact (float-stage backend)
+
+Without an artifacts/ directory everything runs on the native FP32
+backend over the builtin model zoo (deterministic untrained weights):
+the pipeline mechanics are identical, only the accuracy ladder needs
+the pretrained artifact models.
 ";
 
 fn main() -> Result<()> {
@@ -46,22 +57,42 @@ fn main() -> Result<()> {
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(fat::artifacts_dir);
-    if args.flag("help") || args.subcommand.is_none() {
+    if args.flag("help") {
         print!("{USAGE}");
         return Ok(());
     }
     let rt = Arc::new(Runtime::cpu()?);
     let reg = Arc::new(Registry::new(rt));
 
-    match args.subcommand.as_deref().unwrap() {
+    // `fat --epochs 1` (no subcommand) runs the full pipeline.
+    match args.subcommand.as_deref().unwrap_or("pipeline") {
         "info" => {
-            for name in ModelStore::list(&artifacts)? {
-                let store = ModelStore::open(&artifacts, &name)?;
-                let sites = store.sites()?;
+            let listed = if artifacts.join("models").exists() {
+                let names = ModelStore::list(&artifacts)?;
+                for name in &names {
+                    let store = ModelStore::open(&artifacts, name)?;
+                    let sites = store.sites()?;
+                    println!(
+                        "{name}: {} quant sites, FP pretrain acc {:.2}% \
+                         (artifacts)",
+                        sites.sites.len(),
+                        sites.val_acc_fp_pretrain * 100.0
+                    );
+                }
+                names
+            } else {
+                vec![]
+            };
+            for name in fat::model::builtin::names() {
+                if listed.iter().any(|l| l == name) {
+                    continue;
+                }
+                let (g, sites, _) = fat::model::builtin::load(name)?;
                 println!(
-                    "{name}: {} quant sites, FP pretrain acc {:.2}%",
+                    "{name}: {} quant sites, {} nodes (builtin, native \
+                     backend, untrained)",
                     sites.sites.len(),
-                    sites.val_acc_fp_pretrain * 100.0
+                    g.nodes.len()
                 );
             }
         }
@@ -180,8 +211,10 @@ fn run_pipeline(
     // scope the session so a later dws_rescale holds the only reference
     // to the model state (no copy-on-write)
     let t0 = std::time::Instant::now();
-    let mut cal = QuantSession::open(reg.clone(), artifacts, &cfg.model)?
-        .calibrate(CalibOpts::images(cfg.calib_images))?;
+    let session = QuantSession::open(reg.clone(), artifacts, &cfg.model)?;
+    println!("backend: {}", session.core().backend_name());
+    let mut cal = session.calibrate(CalibOpts::images(cfg.calib_images))?;
+    drop(session);
     println!(
         "calibrated on {} images ({} batches) in {:.1}s",
         cfg.calib_images,

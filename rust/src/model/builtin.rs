@@ -1,0 +1,408 @@
+//! Built-in model zoo — the artifact-free mirror of
+//! `python/compile/models.py`.
+//!
+//! When `artifacts/models/<name>/` is absent, a session can still open
+//! one of these models: the folded graph is built in code (BN is never
+//! materialised, so no fold pass is needed), the weights are
+//! deterministic He-uniform draws from the portable PRNG, and the
+//! quant-site metadata comes from [`GraphDef::sites`]. Together with the
+//! native FP32 backend (`crate::fp`) this makes the whole pipeline —
+//! calibrate → fine-tune → export → int8 serving — runnable from a bare
+//! `cargo run`, no Python and no AOT artifacts.
+//!
+//! The graphs mirror the Python zoo's topology and naming exactly
+//! (`stem_conv`, `b0_exp_conv`, `head_dense`, …); only the weights
+//! differ (the Python side pretrains, this side draws deterministic
+//! initialisations — accuracy ladders are therefore only meaningful on
+//! the artifact path, while the pipeline mechanics, the RMSE
+//! distillation objective and the int8 export are exercised in full).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::prng;
+use crate::tensor::Tensor;
+use crate::util::prop;
+
+use super::store::{ChannelStat, Site, SitesJson};
+use super::{GraphDef, Op};
+
+/// Deterministic weight seed (shared by every builtin model; the node
+/// index is mixed in per layer).
+pub const WEIGHT_SEED: u64 = 0xB111D_0001;
+
+/// Names served by [`load`], in canonical order.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "mobilenet_v2_mini",
+        "mnas_mini_10",
+        "mnas_mini_13",
+        "resnet_mini",
+        "tiny_cnn",
+    ]
+}
+
+/// Whether `name` is a builtin model.
+pub fn is_builtin(name: &str) -> bool {
+    names().contains(&name)
+}
+
+/// Build a builtin model: folded graph, quant-site metadata and
+/// deterministic folded weights.
+pub fn load(name: &str) -> Result<(GraphDef, SitesJson, BTreeMap<String, Tensor>)> {
+    let g = match name {
+        "mobilenet_v2_mini" => mobilenet_v2_mini()?,
+        "mnas_mini_10" => mnas_mini(1.0, "mnas_mini_10")?,
+        "mnas_mini_13" => mnas_mini(1.3, "mnas_mini_13")?,
+        "resnet_mini" => resnet_mini()?,
+        "tiny_cnn" => tiny_cnn()?,
+        other => anyhow::bail!(
+            "no builtin model `{other}` (available: {})",
+            names().join(", ")
+        ),
+    };
+    let sites = sites_of(&g);
+    let weights = init_weights(&g, WEIGHT_SEED);
+    Ok((g, sites, weights))
+}
+
+/// Quant-site metadata derived from the folded graph (mirror of the
+/// `sites.json` the Python exporter writes).
+pub fn sites_of(g: &GraphDef) -> SitesJson {
+    SitesJson {
+        sites: g
+            .sites()
+            .into_iter()
+            .map(|(id, unsigned)| Site { id, unsigned })
+            .collect(),
+        channel_stats: g
+            .conv_like()
+            .filter(|n| n.op != Op::Dense)
+            .map(|n| ChannelStat { id: n.id.clone(), channels: n.out_channels() })
+            .collect(),
+        weight_order: g.folded_weight_order(),
+        val_acc_fp_pretrain: -1.0,
+    }
+}
+
+/// Deterministic He-uniform weights (`±sqrt(6 / fan_in)`) + zero biases
+/// for every conv-like node of a folded graph.
+pub fn init_weights(g: &GraphDef, seed: u64) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for (i, n) in g.conv_like().enumerate() {
+        let (shape, fan_in, cout) = match n.op {
+            Op::Conv => {
+                (vec![n.k, n.k, n.cin, n.cout], n.k * n.k * n.cin, n.cout)
+            }
+            Op::DwConv => (vec![n.k, n.k, n.ch], n.k * n.k, n.ch),
+            Op::Dense => (vec![n.cin, n.cout], n.cin, n.cout),
+            _ => unreachable!("conv_like returned {:?}", n.op),
+        };
+        let len: usize = shape.iter().product();
+        let bound = (6.0f32 / fan_in.max(1) as f32).sqrt();
+        let node_seed = prng::hash_u64(seed, i as u64, 101, 0, 0, 0);
+        out.insert(
+            format!("{}.w", n.id),
+            Tensor::f32(shape, prop::f32s(node_seed, len, -bound, bound)),
+        );
+        out.insert(format!("{}.b", n.id), Tensor::zeros_f32(vec![cout]));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Folded-graph builder (mirror of python/compile/graph.Builder with
+// bn=True folded away: conv-like nodes carry bias, bn nodes are never
+// emitted).
+// ---------------------------------------------------------------------
+
+struct B {
+    name: String,
+    nodes: Vec<String>,
+}
+
+impl B {
+    fn new(name: &str) -> B {
+        B {
+            name: name.to_string(),
+            nodes: vec![
+                r#"{"id":"input","op":"input","inputs":[],"shape":[32,32,3]}"#
+                    .to_string(),
+            ],
+        }
+    }
+
+    fn act(&mut self, x: String, act: Option<&str>, hint: &str) -> String {
+        match act {
+            None => x,
+            Some(a) => {
+                let id = format!("{hint}_{a}");
+                self.nodes.push(format!(
+                    r#"{{"id":"{id}","op":"{a}","inputs":["{x}"]}}"#
+                ));
+                id
+            }
+        }
+    }
+
+    fn conv(
+        &mut self,
+        x: &str,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        act: Option<&str>,
+        hint: &str,
+    ) -> String {
+        let id = format!("{hint}_conv");
+        self.nodes.push(format!(
+            r#"{{"id":"{id}","op":"conv","inputs":["{x}"],"k":{k},"stride":{stride},"cin":{cin},"cout":{cout},"bias":true}}"#
+        ));
+        self.act(id, act, hint)
+    }
+
+    fn dwconv(
+        &mut self,
+        x: &str,
+        ch: usize,
+        k: usize,
+        stride: usize,
+        act: Option<&str>,
+        hint: &str,
+    ) -> String {
+        let id = format!("{hint}_dwconv");
+        self.nodes.push(format!(
+            r#"{{"id":"{id}","op":"dwconv","inputs":["{x}"],"k":{k},"stride":{stride},"ch":{ch},"bias":true}}"#
+        ));
+        self.act(id, act, hint)
+    }
+
+    fn add(&mut self, a: &str, b: &str, hint: &str) -> String {
+        let id = format!("{hint}_add");
+        self.nodes.push(format!(
+            r#"{{"id":"{id}","op":"add","inputs":["{a}","{b}"]}}"#
+        ));
+        id
+    }
+
+    fn relu(&mut self, x: &str, hint: &str) -> String {
+        let id = format!("{hint}_relu");
+        self.nodes
+            .push(format!(r#"{{"id":"{id}","op":"relu","inputs":["{x}"]}}"#));
+        id
+    }
+
+    fn head(&mut self, x: &str, cin: usize) -> String {
+        self.nodes.push(format!(
+            r#"{{"id":"head_gap","op":"gap","inputs":["{x}"]}}"#
+        ));
+        let id = "head_dense".to_string();
+        self.nodes.push(format!(
+            r#"{{"id":"{id}","op":"dense","inputs":["head_gap"],"cin":{cin},"cout":10,"bias":true}}"#
+        ));
+        id
+    }
+
+    fn build(self) -> Result<GraphDef> {
+        let json = format!(
+            r#"{{"name":"{}","num_classes":10,"nodes":[{}]}}"#,
+            self.name,
+            self.nodes.join(",")
+        );
+        GraphDef::from_json(&json)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn inverted_residual(
+    b: &mut B,
+    x: String,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    t: usize,
+    act: &str,
+    hint: &str,
+) -> String {
+    let mid = cin * t;
+    let y = b.conv(&x, cin, mid, 1, 1, Some(act), &format!("{hint}_exp"));
+    let y = b.dwconv(&y, mid, 3, stride, Some(act), &format!("{hint}_dw"));
+    let y = b.conv(&y, mid, cout, 1, 1, None, &format!("{hint}_proj"));
+    if stride == 1 && cin == cout {
+        b.add(&x, &y, &format!("{hint}_res"))
+    } else {
+        y
+    }
+}
+
+fn mobilenet_v2_mini() -> Result<GraphDef> {
+    let mut b = B::new("mobilenet_v2_mini");
+    let mut x = b.conv("input", 3, 16, 3, 1, Some("relu6"), "stem");
+    let cfg: [(usize, usize, usize); 7] = [
+        (1, 16, 1),
+        (4, 24, 2),
+        (4, 24, 1),
+        (4, 32, 2),
+        (4, 32, 1),
+        (4, 64, 2),
+        (4, 64, 1),
+    ];
+    let mut cin = 16;
+    for (i, (t, cout, s)) in cfg.iter().enumerate() {
+        x = inverted_residual(
+            &mut b,
+            x,
+            cin,
+            *cout,
+            *s,
+            *t,
+            "relu6",
+            &format!("b{i}"),
+        );
+        cin = *cout;
+    }
+    let x = b.conv(&x, cin, 128, 1, 1, Some("relu6"), "headconv");
+    b.head(&x, 128);
+    b.build()
+}
+
+fn mnas_mini(width: f32, name: &str) -> Result<GraphDef> {
+    let c = |ch: usize| -> usize { ((ch as f32 * width + 0.5) as usize).max(8) };
+    let mut b = B::new(name);
+    let x = b.conv("input", 3, c(16), 3, 1, Some("relu"), "stem");
+    let x = b.dwconv(&x, c(16), 3, 1, Some("relu"), "sep_dw");
+    let mut x = b.conv(&x, c(16), c(16), 1, 1, None, "sep_pw");
+    let cfg: [(usize, usize, usize, usize); 3] =
+        [(3, 24, 2, 2), (3, 40, 2, 2), (6, 64, 2, 2)];
+    let mut cin = c(16);
+    for (bi, (t, cout, s, n)) in cfg.iter().enumerate() {
+        for j in 0..*n {
+            let stride = if j == 0 { *s } else { 1 };
+            x = inverted_residual(
+                &mut b,
+                x,
+                cin,
+                c(*cout),
+                stride,
+                *t,
+                "relu",
+                &format!("m{bi}_{j}"),
+            );
+            cin = c(*cout);
+        }
+    }
+    let x = b.conv(&x, cin, c(128), 1, 1, Some("relu"), "headconv");
+    b.head(&x, c(128));
+    b.build()
+}
+
+fn resnet_mini() -> Result<GraphDef> {
+    let mut b = B::new("resnet_mini");
+    let mut x = b.conv("input", 3, 16, 3, 1, Some("relu"), "stem");
+    let mut cin = 16;
+    for (si, (cout, s)) in [(16usize, 1usize), (32, 2), (64, 2)].iter().enumerate()
+    {
+        for j in 0..2usize {
+            let stride = if j == 0 { *s } else { 1 };
+            let y = b.conv(
+                &x,
+                cin,
+                *cout,
+                3,
+                stride,
+                Some("relu"),
+                &format!("r{si}_{j}a"),
+            );
+            let y =
+                b.conv(&y, *cout, *cout, 3, 1, None, &format!("r{si}_{j}b"));
+            let y = if stride == 1 && cin == *cout {
+                b.add(&x, &y, &format!("r{si}_{j}"))
+            } else {
+                let sc = b.conv(
+                    &x,
+                    cin,
+                    *cout,
+                    1,
+                    stride,
+                    None,
+                    &format!("r{si}_{j}s"),
+                );
+                b.add(&sc, &y, &format!("r{si}_{j}"))
+            };
+            x = b.relu(&y, &format!("r{si}_{j}o"));
+            cin = *cout;
+        }
+    }
+    b.head(&x, 64);
+    b.build()
+}
+
+/// Smallest builtin: one of every op kind (conv, dwconv, dense, add,
+/// gap, relu, relu6) at test-friendly sizes — the CI / debug-build
+/// workhorse for the native pipeline.
+fn tiny_cnn() -> Result<GraphDef> {
+    let mut b = B::new("tiny_cnn");
+    let x = b.conv("input", 3, 8, 3, 2, Some("relu6"), "stem");
+    let x = b.dwconv(&x, 8, 3, 1, Some("relu"), "dw");
+    let y = b.conv(&x, 8, 8, 1, 1, None, "pw_a");
+    let z = b.conv(&x, 8, 8, 1, 1, None, "pw_b");
+    let x = b.add(&y, &z, "res");
+    let x = b.conv(&x, 8, 16, 3, 2, Some("relu"), "down");
+    b.head(&x, 16);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_loads_consistently() {
+        for name in names() {
+            let (g, sites, w) = load(name).unwrap();
+            assert_eq!(&g.name, name);
+            assert!(!sites.sites.is_empty(), "{name}");
+            // weights cover exactly the folded weight order
+            for key in g.folded_weight_order() {
+                assert!(w.contains_key(&key), "{name}: missing {key}");
+            }
+            assert_eq!(w.len(), g.folded_weight_order().len(), "{name}");
+            // folded graphs never carry bn nodes
+            assert!(g.nodes.iter().all(|n| n.op != Op::Bn), "{name}");
+            // input is a quant site (the paper quantizes the input too)
+            assert_eq!(sites.sites[0].id, "input", "{name}");
+        }
+        assert!(load("nope").is_err());
+        assert!(is_builtin("tiny_cnn"));
+        assert!(!is_builtin("nope"));
+    }
+
+    #[test]
+    fn weights_are_deterministic_and_bounded() {
+        let (g, _, w1) = load("tiny_cnn").unwrap();
+        let (_, _, w2) = load("tiny_cnn").unwrap();
+        for (k, t) in &w1 {
+            assert_eq!(t.as_f32().unwrap(), w2[k].as_f32().unwrap(), "{k}");
+        }
+        // He-uniform bound for the stem conv: sqrt(6 / (3*3*3))
+        let stem = w1["stem_conv.w"].as_f32().unwrap();
+        let bound = (6.0f32 / 27.0).sqrt();
+        assert!(stem.iter().all(|v| v.abs() <= bound));
+        assert!(stem.iter().any(|v| v.abs() > bound * 0.5));
+        assert_eq!(w1["stem_conv.b"].as_f32().unwrap(), &[0.0f32; 8]);
+        let _ = g;
+    }
+
+    #[test]
+    fn mnas_names_mirror_python_builder() {
+        let (g, _, _) = load("mnas_mini_10").unwrap();
+        for id in ["stem_conv", "sep_dw_dwconv", "m0_0_exp_conv", "head_dense"]
+        {
+            assert!(g.node(id).is_ok(), "{id}");
+        }
+        // second block of each stage is a residual
+        assert!(g.node("m0_1_res_add").is_ok());
+    }
+}

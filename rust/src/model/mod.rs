@@ -1,6 +1,8 @@
-//! Model substrate: weight containers, graph IR, artifact manifests and
-//! the on-disk model directory produced by `make artifacts`.
+//! Model substrate: weight containers, graph IR, artifact manifests,
+//! the on-disk model directory produced by `make artifacts`, and the
+//! builtin zoo used when no artifacts exist.
 
+pub mod builtin;
 pub mod fatw;
 pub mod graphdef;
 pub mod manifest;

@@ -1,0 +1,542 @@
+//! Execution backends for the float side of the pipeline (DESIGN.md §7).
+//!
+//! Every stage of the paper's flow that runs the *float* model —
+//! calibration, FP32 evaluation, the fake-quant forward and threshold
+//! fine-tuning — goes through the [`Executor`] trait. Two
+//! implementations exist:
+//!
+//! * [`ArtifactExec`] — the original path: AOT-lowered HLO artifacts
+//!   executed through the PJRT runtime (requires `make artifacts` and
+//!   the `pjrt` cargo feature).
+//! * [`NativeExec`] — the pure-Rust path (`crate::fp`): a planned,
+//!   `FAT_THREADS`-parallel FP32 executor, native calibration, the
+//!   eq. 4–9 fake-quant forward and the analytic STE threshold trainer.
+//!
+//! [`resolve`] picks the backend: `FAT_BACKEND=native|artifact` forces
+//! one; the default (`auto`) uses artifacts when they exist *and* the
+//! crate was built with `pjrt`, and the native backend otherwise — so a
+//! bare `cargo run` on a fresh checkout executes the whole pipeline.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::evaluate::{accuracy_with, batch_size_of};
+use crate::coordinator::finetune::{self, FinetuneOpts};
+use crate::coordinator::marshal::{build_inputs, split_outputs, Group};
+use crate::data::{Batcher, Split};
+use crate::fp;
+use crate::model::store::SitesJson;
+use crate::model::{GraphDef, ModelStore};
+use crate::runtime::{pjrt_available, Artifact, Registry};
+use crate::tensor::Tensor;
+use crate::util::threads::fat_threads;
+
+use super::calibrate::CalibStats;
+use super::export::QuantMode;
+use super::session::ThresholdSet;
+
+/// Borrowed view of a session's model state — everything a backend
+/// needs to run a float-side stage.
+pub struct ModelView<'a> {
+    pub graph: &'a GraphDef,
+    pub sites: &'a SitesJson,
+    pub weights: &'a BTreeMap<String, Tensor>,
+}
+
+/// A float-side execution backend. All methods are stage-level (one
+/// call = one pipeline pass), so implementations own their batching.
+pub trait Executor: Send + Sync {
+    /// Short backend name for logs (`"native"` / `"artifact"`).
+    fn name(&self) -> &'static str;
+
+    /// Calibration pass: per-site + per-channel (min, max) over `images`
+    /// training images.
+    fn calibrate(&self, m: &ModelView, images: usize) -> Result<CalibStats>;
+
+    /// Histogram pass over the calibrated ranges (percentile/KL
+    /// calibrators).
+    fn calibrate_hist(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        images: usize,
+    ) -> Result<Vec<Vec<u32>>>;
+
+    /// FP32 accuracy over the validation split.
+    fn fp_accuracy(&self, m: &ModelView, val_images: usize) -> Result<f64>;
+
+    /// Accuracy of the fake-quant forward under a trainable map.
+    fn quant_accuracy(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+        stats: &CalibStats,
+        trained: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64>;
+
+    /// FAT threshold fine-tuning (RMSE distillation, unlabeled).
+    fn finetune(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: &mut dyn FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)>;
+
+    /// Identity trainable map in this backend's key/shape convention.
+    fn identity_trainables(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+    ) -> Result<BTreeMap<String, Tensor>>;
+
+    /// §4.2 point-wise fake-quant accuracy (mobilenet ladder).
+    fn pointwise_accuracy(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        pw: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64>;
+
+    /// §4.2 point-wise weight fine-tuning.
+    fn finetune_pointwise(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: &mut dyn FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)>;
+}
+
+/// Pick the backend for a session. `FAT_BACKEND` forces `native` or
+/// `artifact`; `auto` (the default) prefers artifacts when both the
+/// `pjrt` feature and the model's `fp_forward` manifest are present and
+/// falls back to the native executor otherwise.
+pub fn resolve(
+    reg: &Arc<Registry>,
+    store: Option<&ModelStore>,
+) -> Result<Arc<dyn Executor>> {
+    let choice =
+        std::env::var("FAT_BACKEND").unwrap_or_else(|_| "auto".to_string());
+    let manifests_present = store
+        .map(|s| {
+            s.artifact_path("fp_forward")
+                .with_extension("manifest.json")
+                .exists()
+        })
+        .unwrap_or(false);
+    match choice.as_str() {
+        "native" => Ok(Arc::new(NativeExec)),
+        "artifact" => {
+            anyhow::ensure!(
+                pjrt_available(),
+                "FAT_BACKEND=artifact, but this build has no `pjrt` \
+                 feature — rebuild with `--features pjrt` or use the \
+                 native backend"
+            );
+            let store = store.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "FAT_BACKEND=artifact, but the model has no artifact \
+                     directory (builtin models are native-only)"
+                )
+            })?;
+            anyhow::ensure!(
+                manifests_present,
+                "FAT_BACKEND=artifact, but {:?} has no fp_forward \
+                 manifest — run `make artifacts` first",
+                store.dir
+            );
+            Ok(Arc::new(ArtifactExec::new(reg.clone(), store.clone())))
+        }
+        "auto" | "" => {
+            if pjrt_available() && manifests_present {
+                let store = store.expect("manifests imply a store");
+                Ok(Arc::new(ArtifactExec::new(reg.clone(), store.clone())))
+            } else {
+                Ok(Arc::new(NativeExec))
+            }
+        }
+        other => anyhow::bail!(
+            "unknown FAT_BACKEND `{other}` (expected native, artifact or \
+             auto)"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// ArtifactExec — the AOT PJRT path
+// ---------------------------------------------------------------------
+
+/// The AOT-artifact backend: every stage marshals tensors through the
+/// lowered HLO executables in the model's artifact directory.
+pub struct ArtifactExec {
+    reg: Arc<Registry>,
+    store: ModelStore,
+}
+
+impl ArtifactExec {
+    pub fn new(reg: Arc<Registry>, store: ModelStore) -> Self {
+        ArtifactExec { reg, store }
+    }
+
+    /// Compiled artifact handle by name.
+    pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
+        self.reg.get(self.store.artifact_path(name))
+    }
+}
+
+impl Executor for ArtifactExec {
+    fn name(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn calibrate(&self, m: &ModelView, images: usize) -> Result<CalibStats> {
+        let art = self.artifact("calib_stats")?;
+        let bs = batch_size_of(&art, "1")?;
+        let mut stats = CalibStats::new(m.sites.sites.len());
+        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
+        let batcher = Batcher::new(Split::Train, indices, bs);
+        for (x, _) in batcher.epoch_iter(0) {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[Group::Map(m.weights), Group::Single(&x)],
+            )?;
+            let outs = art.execute(&inputs)?;
+            let o = split_outputs(&art.manifest, outs)?;
+            let mm = o.singles[&0].as_f32()?;
+            for (i, s) in stats.site_minmax.iter_mut().enumerate() {
+                s.update(mm[i * 2], mm[i * 2 + 1]);
+            }
+            for (key, t) in &o.maps[&1] {
+                let nid = key.trim_start_matches("ch:").to_string();
+                let d = t.as_f32()?;
+                let c = t.shape[1];
+                let entry = stats
+                    .channel_minmax
+                    .entry(nid)
+                    .or_insert_with(|| vec![Default::default(); c]);
+                for (ci, e) in entry.iter_mut().enumerate() {
+                    e.update(d[ci], d[c + ci]);
+                }
+            }
+            stats.batches += 1;
+        }
+        Ok(stats)
+    }
+
+    fn calibrate_hist(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        images: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        let art = self.artifact("calib_hist")?;
+        let bs = batch_size_of(&art, "2")?;
+        let act_t = stats.act_t_tensor();
+        let nsites = m.sites.sites.len();
+        let mut hists: Vec<Vec<u32>> = vec![];
+        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
+        let batcher = Batcher::new(Split::Train, indices, bs);
+        for (x, _) in batcher.epoch_iter(0) {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(m.weights),
+                    Group::Single(&act_t),
+                    Group::Single(&x),
+                ],
+            )?;
+            let outs = art.execute(&inputs)?;
+            let o = split_outputs(&art.manifest, outs)?;
+            let h = o.singles[&0].as_i32()?;
+            let bins = h.len() / nsites;
+            if hists.is_empty() {
+                hists = vec![vec![0u32; bins]; nsites];
+            }
+            for s in 0..nsites {
+                for b in 0..bins {
+                    hists[s][b] += h[s * bins + b] as u32;
+                }
+            }
+        }
+        Ok(hists)
+    }
+
+    fn fp_accuracy(&self, m: &ModelView, val_images: usize) -> Result<f64> {
+        let art = self.artifact("fp_forward")?;
+        let bs = batch_size_of(&art, "1")?;
+        accuracy_with(bs, val_images, |x| {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[Group::Map(m.weights), Group::Single(x)],
+            )?;
+            Ok(art.execute(&inputs)?.remove(0))
+        })
+    }
+
+    fn quant_accuracy(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+        stats: &CalibStats,
+        trained: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        let art = self.artifact(&format!("quant_fwd_{}", mode.name()))?;
+        let bs = batch_size_of(&art, "3")?;
+        let act_t = stats.act_t_tensor();
+        accuracy_with(bs, val_images, |x| {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(m.weights),
+                    Group::Single(&act_t),
+                    Group::Map(trained),
+                    Group::Single(x),
+                ],
+            )?;
+            Ok(art.execute(&inputs)?.remove(0))
+        })
+    }
+
+    fn finetune(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: &mut dyn FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
+        finetune::run(&art, m.weights, &stats.act_t_tensor(), opts, progress)
+    }
+
+    fn identity_trainables(
+        &self,
+        _m: &ModelView,
+        mode: QuantMode,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
+        Ok(finetune::init_trainables(&art))
+    }
+
+    fn pointwise_accuracy(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        pw: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        let art = self.artifact("quant_fwd_pw")?;
+        let bs = batch_size_of(&art, "3")?;
+        let act_t = stats.act_t_tensor();
+        accuracy_with(bs, val_images, |x| {
+            let inputs = build_inputs(
+                &art.manifest,
+                &[
+                    Group::Map(m.weights),
+                    Group::Single(&act_t),
+                    Group::Map(pw),
+                    Group::Single(x),
+                ],
+            )?;
+            Ok(art.execute(&inputs)?.remove(0))
+        })
+    }
+
+    fn finetune_pointwise(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: &mut dyn FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        let art = self.artifact("train_step_pw")?;
+        finetune::run(&art, m.weights, &stats.act_t_tensor(), opts, progress)
+    }
+}
+
+// ---------------------------------------------------------------------
+// NativeExec — the pure-Rust path
+// ---------------------------------------------------------------------
+
+/// Evaluation batch size of the native backend.
+pub const NATIVE_EVAL_BATCH: usize = 50;
+
+/// The native backend: planned FP32 executor + analytic trainer, no
+/// artifacts, no PJRT (see `crate::fp`).
+pub struct NativeExec;
+
+impl NativeExec {
+    fn plain_program(&self, m: &ModelView) -> Result<fp::FpProgram> {
+        fp::FpProgram::compile(m.graph, m.weights, m.sites, None)
+    }
+}
+
+impl Executor for NativeExec {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn calibrate(&self, m: &ModelView, images: usize) -> Result<CalibStats> {
+        let prog = self.plain_program(m)?;
+        fp::calibrate::calib_stats(&prog, images, fat_threads())
+    }
+
+    fn calibrate_hist(
+        &self,
+        m: &ModelView,
+        stats: &CalibStats,
+        images: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        let prog = self.plain_program(m)?;
+        fp::calibrate::calib_hist(&prog, stats, images, fat_threads())
+    }
+
+    fn fp_accuracy(&self, m: &ModelView, val_images: usize) -> Result<f64> {
+        let prog = self.plain_program(m)?;
+        let threads = fat_threads();
+        accuracy_with(NATIVE_EVAL_BATCH, val_images, |x| {
+            prog.run_batch(x, threads)
+        })
+    }
+
+    fn quant_accuracy(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+        stats: &CalibStats,
+        trained: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        let tr = ThresholdSet::from_trainables(
+            m.graph,
+            mode,
+            m.sites.sites.len(),
+            trained,
+        )?
+        .into_trained();
+        let prog = fp::fakequant::quantized_program(
+            m.graph, m.weights, m.sites, stats, mode, &tr,
+        )?;
+        let threads = fat_threads();
+        accuracy_with(NATIVE_EVAL_BATCH, val_images, |x| {
+            prog.run_batch(x, threads)
+        })
+    }
+
+    fn finetune(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
+        progress: &mut dyn FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        let trainer = fp::Trainer::new(
+            m.graph,
+            m.weights,
+            m.sites,
+            stats,
+            mode,
+            fat_threads(),
+        )?;
+        finetune::run_loop(
+            &fp::train::NativeStep { trainer },
+            opts,
+            progress,
+        )
+    }
+
+    fn identity_trainables(
+        &self,
+        m: &ModelView,
+        mode: QuantMode,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        Ok(fp::train::identity_trainables_for_graph(
+            m.graph,
+            mode,
+            m.sites.sites.len(),
+        ))
+    }
+
+    fn pointwise_accuracy(
+        &self,
+        _m: &ModelView,
+        _stats: &CalibStats,
+        _pw: &BTreeMap<String, Tensor>,
+        _val_images: usize,
+    ) -> Result<f64> {
+        anyhow::bail!(
+            "the §4.2 point-wise path (quant_fwd_pw) has no native \
+             implementation — it needs the AOT artifacts"
+        )
+    }
+
+    fn finetune_pointwise(
+        &self,
+        _m: &ModelView,
+        _stats: &CalibStats,
+        _opts: &FinetuneOpts,
+        _progress: &mut dyn FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        anyhow::bail!(
+            "the §4.2 point-wise path (train_step_pw) has no native \
+             implementation — it needs the AOT artifacts"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    fn view<'a>(
+        g: &'a GraphDef,
+        s: &'a SitesJson,
+        w: &'a BTreeMap<String, Tensor>,
+    ) -> ModelView<'a> {
+        ModelView { graph: g, sites: s, weights: w }
+    }
+
+    #[test]
+    fn native_identity_trainables_match_threshold_grammar() {
+        let (g, s, w) = builtin::load("tiny_cnn").unwrap();
+        let m = view(&g, &s, &w);
+        for mode in QuantMode::all() {
+            let tr = NativeExec.identity_trainables(&m, mode).unwrap();
+            // the typed ThresholdSet parser accepts every key + shape
+            let ts = ThresholdSet::from_trainables(
+                &g,
+                mode,
+                s.sites.len(),
+                &tr,
+            )
+            .unwrap();
+            assert_eq!(ts.mode(), mode);
+            if mode.asym() {
+                assert!(tr.contains_key("act_at"));
+                assert!(!tr.contains_key("act_a"));
+            } else {
+                assert!(tr.contains_key("act_a"));
+            }
+        }
+    }
+
+    #[test]
+    fn native_pointwise_is_a_clear_error() {
+        let (g, s, w) = builtin::load("tiny_cnn").unwrap();
+        let m = view(&g, &s, &w);
+        let stats = CalibStats::new(s.sites.len());
+        let err = NativeExec
+            .pointwise_accuracy(&m, &stats, &BTreeMap::new(), 10)
+            .unwrap_err();
+        assert!(err.to_string().contains("point-wise"), "{err}");
+    }
+}

@@ -10,7 +10,10 @@
 //! * [`export`] — quantized-model builder for the int8 engine.
 //! * [`session`] — the staged public API: [`session::QuantSession`] →
 //!   `Calibrated` → `Thresholded` → [`crate::int8::serve::Int8Engine`].
+//! * [`backend`] — the float-side [`backend::Executor`] trait with its
+//!   AOT-artifact and native (`crate::fp`) implementations.
 
+pub mod backend;
 pub mod calibrate;
 pub mod dws;
 pub mod export;
@@ -19,6 +22,7 @@ pub mod scale;
 pub mod session;
 pub mod thresholds;
 
+pub use backend::Executor;
 pub use export::{QuantMode, Rounding};
 pub use scale::QParams;
 pub use session::{CalibOpts, QuantSession, QuantSpec, ThresholdSet};

@@ -22,8 +22,11 @@
 //! stringly-keyed trainable map (unknown keys are now a hard error, see
 //! [`ThresholdSet::from_trainables`]).
 //!
-//! The legacy [`crate::coordinator::Pipeline`] is kept for one release as
-//! a thin deprecated shim over [`SessionCore`].
+//! Every float-side stage runs through the session's resolved
+//! [`Executor`] backend (DESIGN.md §7): AOT PJRT artifacts when they
+//! exist and the build has the `pjrt` feature, the native `crate::fp`
+//! executor otherwise — so the whole flow above works on a fresh
+//! checkout with no artifacts at all.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -31,17 +34,15 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::evaluate::{accuracy_with, batch_size_of};
-use crate::coordinator::finetune::{self, FinetuneOpts};
-use crate::coordinator::marshal::{build_inputs, split_outputs, Group};
-use crate::data::{Batcher, Split};
+use crate::coordinator::finetune::FinetuneOpts;
 use crate::int8::serve::{EngineOptions, Int8Engine};
 use crate::int8::QModel;
 use crate::model::store::SitesJson;
-use crate::model::{GraphDef, ModelStore};
-use crate::runtime::{Artifact, Registry};
+use crate::model::{builtin, GraphDef, ModelStore};
+use crate::runtime::Registry;
 use crate::tensor::Tensor;
 
+use super::backend::{self, Executor, ModelView};
 use super::calibrate::{CalibStats, Calibrator};
 use super::dws::{self, PatternReport};
 use super::export::{self, QuantMode, Rounding, Trained};
@@ -266,82 +267,97 @@ impl ThresholdSet {
 // ---------------------------------------------------------------------
 
 /// Shared state + primitive operations behind every session stage: the
-/// model's artifacts, folded graph, quant-site metadata and (mutable)
-/// folded weights.
+/// model's graph, quant-site metadata, (mutable) folded weights and the
+/// resolved float-side execution backend.
 ///
 /// Most callers should drive the staged [`QuantSession`] API instead;
-/// the core is public so studies and the legacy
-/// [`crate::coordinator::Pipeline`] shim can reach the primitives.
+/// the core is public so studies can reach the primitives.
 #[derive(Clone)]
 pub struct SessionCore {
-    /// Artifact registry (lazily compiles each HLO module once).
-    pub reg: Arc<Registry>,
-    /// On-disk model directory handle.
-    pub store: ModelStore,
+    /// On-disk model directory handle (`None` for builtin models and
+    /// sessions built from explicit parts — those are native-only).
+    pub store: Option<ModelStore>,
     /// BN-folded graph IR.
     pub graph: GraphDef,
     /// Quantization-site metadata.
     pub sites: SitesJson,
     /// Rust-folded weights (mutated in place by §3.3 rescaling).
     pub weights: BTreeMap<String, Tensor>,
+    /// Float-side execution backend (native or AOT artifacts), resolved
+    /// once at open time (see `quant::backend::resolve`).
+    pub exec: Arc<dyn Executor>,
 }
 
 impl SessionCore {
-    /// Open a model's artifact directory and fold its weights (eq. 10–11).
+    /// Open a model and fold its weights (eq. 10–11). Prefers the
+    /// on-disk artifact directory; when `artifacts/models/<model>` is
+    /// absent and `model` names a builtin, the graph and deterministic
+    /// weights come from [`crate::model::builtin`] and every float
+    /// stage runs on the native backend.
     pub fn open<P: AsRef<Path>>(
         reg: Arc<Registry>,
         artifacts: P,
         model: &str,
     ) -> Result<Self> {
-        let store = ModelStore::open(&artifacts, model)?;
-        let raw_graph = store.graph()?;
-        let graph = store.folded_graph()?;
-        let sites = store.sites()?;
-        let raw = store.raw_weights()?;
-        // BN folding happens here, in Rust (eq. 10-11); the Python-folded
-        // weights only serve as a golden cross-check in tests.
-        let weights = fold::fold_bn(&raw_graph, &raw)?;
-        Ok(SessionCore { reg, store, graph, sites, weights })
+        let dir = artifacts.as_ref().join("models").join(model);
+        if dir.exists() {
+            let store = ModelStore::open(&artifacts, model)?;
+            let raw_graph = store.graph()?;
+            let graph = store.folded_graph()?;
+            let sites = store.sites()?;
+            let raw = store.raw_weights()?;
+            // BN folding happens here, in Rust (eq. 10-11); the
+            // Python-folded weights only serve as a golden cross-check.
+            let weights = fold::fold_bn(&raw_graph, &raw)?;
+            let exec = backend::resolve(&reg, Some(&store))?;
+            Ok(SessionCore { store: Some(store), graph, sites, weights, exec })
+        } else if builtin::is_builtin(model) {
+            let (graph, sites, weights) = builtin::load(model)?;
+            let exec = backend::resolve(&reg, None)?;
+            Ok(SessionCore { store: None, graph, sites, weights, exec })
+        } else {
+            anyhow::bail!(
+                "model `{model}`: no artifact directory at {dir:?} and no \
+                 builtin of that name (builtins: {}; run `make artifacts` \
+                 for pretrained models)",
+                builtin::names().join(", ")
+            )
+        }
     }
 
-    /// Compiled artifact handle by name.
-    pub fn artifact(&self, name: &str) -> Result<Arc<Artifact>> {
-        self.reg.get(self.store.artifact_path(name))
+    /// Build a native-only session from explicit parts (tests, custom
+    /// graphs). No artifact directory is involved.
+    pub fn from_parts(
+        graph: GraphDef,
+        sites: SitesJson,
+        weights: BTreeMap<String, Tensor>,
+    ) -> Self {
+        SessionCore {
+            store: None,
+            graph,
+            sites,
+            weights,
+            exec: Arc::new(backend::NativeExec),
+        }
+    }
+
+    /// Short name of the resolved float-side backend (for logs).
+    pub fn backend_name(&self) -> &'static str {
+        self.exec.name()
+    }
+
+    /// Backend view of the model state.
+    fn view(&self) -> ModelView<'_> {
+        ModelView {
+            graph: &self.graph,
+            sites: &self.sites,
+            weights: &self.weights,
+        }
     }
 
     /// Run the calibration pass over `images` training images.
     pub fn calibrate(&self, images: usize) -> Result<CalibStats> {
-        let art = self.artifact("calib_stats")?;
-        let bs = batch_size_of(&art, "1")?;
-        let mut stats = CalibStats::new(self.sites.sites.len());
-        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
-        let batcher = Batcher::new(Split::Train, indices, bs);
-        for (x, _) in batcher.epoch_iter(0) {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[Group::Map(&self.weights), Group::Single(&x)],
-            )?;
-            let outs = art.execute(&inputs)?;
-            let o = split_outputs(&art.manifest, outs)?;
-            let mm = o.singles[&0].as_f32()?;
-            for (i, s) in stats.site_minmax.iter_mut().enumerate() {
-                s.update(mm[i * 2], mm[i * 2 + 1]);
-            }
-            for (key, t) in &o.maps[&1] {
-                let nid = key.trim_start_matches("ch:").to_string();
-                let d = t.as_f32()?;
-                let c = t.shape[1];
-                let entry = stats
-                    .channel_minmax
-                    .entry(nid)
-                    .or_insert_with(|| vec![Default::default(); c]);
-                for (ci, e) in entry.iter_mut().enumerate() {
-                    e.update(d[ci], d[c + ci]);
-                }
-            }
-            stats.batches += 1;
-        }
-        Ok(stats)
+        self.exec.calibrate(&self.view(), images)
     }
 
     /// Second pass: per-site histograms over the calibrated ranges (used
@@ -351,49 +367,12 @@ impl SessionCore {
         stats: &CalibStats,
         images: usize,
     ) -> Result<Vec<Vec<u32>>> {
-        let art = self.artifact("calib_hist")?;
-        let bs = batch_size_of(&art, "2")?;
-        let act_t = stats.act_t_tensor();
-        let nsites = self.sites.sites.len();
-        let mut hists: Vec<Vec<u32>> = vec![];
-        let indices: Vec<u64> = (0..images.max(bs) as u64).collect();
-        let batcher = Batcher::new(Split::Train, indices, bs);
-        for (x, _) in batcher.epoch_iter(0) {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(&self.weights),
-                    Group::Single(&act_t),
-                    Group::Single(&x),
-                ],
-            )?;
-            let outs = art.execute(&inputs)?;
-            let o = split_outputs(&art.manifest, outs)?;
-            let h = o.singles[&0].as_i32()?;
-            let bins = h.len() / nsites;
-            if hists.is_empty() {
-                hists = vec![vec![0u32; bins]; nsites];
-            }
-            for s in 0..nsites {
-                for b in 0..bins {
-                    hists[s][b] += h[s * bins + b] as u32;
-                }
-            }
-        }
-        Ok(hists)
+        self.exec.calibrate_hist(&self.view(), stats, images)
     }
 
-    /// FP32 accuracy through the AOT `fp_forward` artifact.
+    /// FP32 accuracy of the float forward.
     pub fn fp_accuracy(&self, val_images: usize) -> Result<f64> {
-        let art = self.artifact("fp_forward")?;
-        let bs = batch_size_of(&art, "1")?;
-        accuracy_with(bs, val_images, |x| {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[Group::Map(&self.weights), Group::Single(x)],
-            )?;
-            Ok(art.execute(&inputs)?.remove(0))
-        })
+        self.exec.fp_accuracy(&self.view(), val_images)
     }
 
     /// Accuracy of the fake-quant forward under a trainable map.
@@ -404,45 +383,17 @@ impl SessionCore {
         trained: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64> {
-        let art = self.artifact(&format!("quant_fwd_{}", mode.name()))?;
-        let bs = batch_size_of(&art, "3")?;
-        let act_t = stats.act_t_tensor();
-        accuracy_with(bs, val_images, |x| {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(&self.weights),
-                    Group::Single(&act_t),
-                    Group::Map(trained),
-                    Group::Single(x),
-                ],
-            )?;
-            Ok(art.execute(&inputs)?.remove(0))
-        })
+        self.exec.quant_accuracy(&self.view(), mode, stats, trained, val_images)
     }
 
-    /// §4.2 point-wise variant (mobilenet only).
+    /// §4.2 point-wise variant (mobilenet only; artifact backend).
     pub fn pointwise_accuracy(
         &self,
         stats: &CalibStats,
         pw: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64> {
-        let art = self.artifact("quant_fwd_pw")?;
-        let bs = batch_size_of(&art, "3")?;
-        let act_t = stats.act_t_tensor();
-        accuracy_with(bs, val_images, |x| {
-            let inputs = build_inputs(
-                &art.manifest,
-                &[
-                    Group::Map(&self.weights),
-                    Group::Single(&act_t),
-                    Group::Map(pw),
-                    Group::Single(x),
-                ],
-            )?;
-            Ok(art.execute(&inputs)?.remove(0))
-        })
+        self.exec.pointwise_accuracy(&self.view(), stats, pw, val_images)
     }
 
     /// FAT threshold fine-tuning (RMSE distillation, unlabeled).
@@ -451,21 +402,19 @@ impl SessionCore {
         mode: QuantMode,
         stats: &CalibStats,
         opts: &FinetuneOpts,
-        progress: impl FnMut(usize, f32, f32),
+        mut progress: impl FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
-        finetune::run(&art, &self.weights, &stats.act_t_tensor(), opts, progress)
+        self.exec.finetune(&self.view(), mode, stats, opts, &mut progress)
     }
 
-    /// §4.2 point-wise fine-tuning (same loop, `train_step_pw` artifact).
+    /// §4.2 point-wise fine-tuning (artifact backend).
     pub fn finetune_pointwise(
         &self,
         stats: &CalibStats,
         opts: &FinetuneOpts,
-        progress: impl FnMut(usize, f32, f32),
+        mut progress: impl FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-        let art = self.artifact("train_step_pw")?;
-        finetune::run(&art, &self.weights, &stats.act_t_tensor(), opts, progress)
+        self.exec.finetune_pointwise(&self.view(), stats, opts, &mut progress)
     }
 
     /// Inject per-filter range disparity (DESIGN.md §2 substitution for
@@ -487,13 +436,12 @@ impl SessionCore {
         dws::rescale_model(&self.graph, &mut self.weights, &ch_max)
     }
 
-    /// Identity trainable map shaped from the artifact manifest.
+    /// Identity trainable map in the backend's key/shape convention.
     pub fn identity_trainables(
         &self,
         mode: QuantMode,
     ) -> Result<BTreeMap<String, Tensor>> {
-        let art = self.artifact(&format!("train_step_{}", mode.name()))?;
-        Ok(finetune::init_trainables(&art))
+        self.exec.identity_trainables(&self.view(), mode)
     }
 }
 
@@ -516,6 +464,18 @@ impl QuantSession {
         model: &str,
     ) -> Result<Self> {
         Ok(QuantSession { core: Arc::new(SessionCore::open(reg, artifacts, model)?) })
+    }
+
+    /// Open a native-only session from explicit parts (tests, custom
+    /// graphs) — see [`SessionCore::from_parts`].
+    pub fn from_parts(
+        graph: GraphDef,
+        sites: SitesJson,
+        weights: BTreeMap<String, Tensor>,
+    ) -> Self {
+        QuantSession {
+            core: Arc::new(SessionCore::from_parts(graph, sites, weights)),
+        }
     }
 
     /// Shared state + primitives behind this session.

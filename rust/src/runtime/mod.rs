@@ -7,9 +7,11 @@
 //! The PJRT backing (the external `xla` crate) is gated behind the
 //! `pjrt` cargo feature so the crate builds on boxes without the PJRT
 //! C library. Without the feature, [`Runtime`] and [`Artifact`] are
-//! API-identical stubs that report a clear error at runtime; everything
-//! artifact-free (the int8 engine, quant math, data substrate) is
-//! unaffected.
+//! API-identical stubs: constructing the runtime succeeds, and only
+//! executing an AOT artifact errors — which nothing reaches by default,
+//! because backend resolution (`quant::backend::resolve`) routes every
+//! float-side stage to the native FP32 executor (`crate::fp`) whenever
+//! PJRT or the artifacts are absent.
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
@@ -26,3 +28,10 @@ pub use client::Runtime;
 pub use registry::Registry;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{Artifact, Runtime};
+
+/// Whether this build can execute AOT PJRT artifacts (the `pjrt` cargo
+/// feature). Backend resolution and artifact-gated tests consult this
+/// instead of probing `Runtime::cpu()`, which always succeeds now.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}

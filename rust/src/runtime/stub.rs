@@ -1,9 +1,14 @@
 //! No-PJRT stand-ins for the `client::Runtime` / `artifact::Artifact`
 //! pair (compiled when the `pjrt` feature is off). They keep the same
-//! API surface so every binary, bench and test
-//! builds unchanged; constructing the runtime reports a clear error, and
-//! artifact-gated code paths (which check for `artifacts/` first) skip
-//! exactly as they do before `make artifacts`.
+//! API surface so every binary, bench and test builds unchanged.
+//!
+//! Since the native FP32 backend landed (DESIGN.md §7), a build without
+//! `pjrt` is **not** degraded: calibration, fine-tuning, evaluation and
+//! export all run natively (`quant::backend::resolve` picks
+//! `NativeExec` automatically). Constructing the stub [`Runtime`]
+//! therefore succeeds — only executing a loaded AOT [`Artifact`]
+//! reports an error, and nothing reaches that call unless the backend
+//! was explicitly forced to the artifact path.
 
 use std::path::Path;
 
@@ -12,23 +17,26 @@ use anyhow::Result;
 use crate::model::ArtifactManifest;
 use crate::tensor::Tensor;
 
-const NO_PJRT: &str = "fat was built without the `pjrt` feature: the PJRT \
-runtime (and the AOT artifact paths) are unavailable. To enable it, add \
-the `xla` crate (PJRT CPU bindings) to rust/Cargo.toml [dependencies] \
-(e.g. a vendored checkout: xla = { path = \"vendor/xla\" }) and build \
-with `--features pjrt`; the int8 engine, quantization math and data \
-substrate work without it.";
+const NO_PJRT: &str = "fat was built without the `pjrt` feature, so AOT \
+PJRT artifacts cannot execute. This does not block the pipeline: the \
+native backend (the default when artifacts are absent — see DESIGN.md \
+§7) runs calibrate → fine-tune → export → int8 serving in pure Rust. \
+To execute the AOT artifacts instead, add the `xla` crate (PJRT CPU \
+bindings) to rust/Cargo.toml [dependencies] (e.g. a vendored checkout: \
+xla = { path = \"vendor/xla\" }), build with `--features pjrt`, and run \
+`make artifacts`.";
 
-/// Stub PJRT client.
+/// Stub PJRT client. Construction succeeds (the registry and session
+/// plumbing are backend-agnostic); only artifact execution errors.
 pub struct Runtime;
 
 impl Runtime {
     pub fn cpu() -> Result<Self> {
-        anyhow::bail!(NO_PJRT)
+        Ok(Runtime)
     }
 
     pub fn platform(&self) -> String {
-        "none (built without `pjrt`)".to_string()
+        "none (built without `pjrt`; native backend available)".to_string()
     }
 
     pub fn device_count(&self) -> usize {
