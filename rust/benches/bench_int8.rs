@@ -1,67 +1,161 @@
 //! int8 engine benchmarks (deployment simulator hot path): reference vs
-//! cache-blocked GEMM, thread-scaling at FAT_THREADS ∈ {1,2,4,8}, im2col,
-//! depthwise conv, and whole-model batch throughput. The §Perf
-//! optimization log in EXPERIMENTS.md tracks these numbers; raise
-//! FAT_BENCH_ITERS for tighter timings.
+//! cache-blocked GEMM, packed SIMD vs scalar kernels, pooled-worker vs
+//! per-call spawn sharding, thread-scaling at t ∈ {1,2,4,8}, im2col,
+//! depthwise conv, and whole-model batch throughput. Every measurement
+//! is also appended to a machine-readable `BENCH_int8.json`
+//! (`FAT_BENCH_JSON` overrides the path) so the §Perf trajectory in
+//! EXPERIMENTS.md is populated from real runs; raise `FAT_BENCH_ITERS`
+//! for tighter timings.
 
 use std::sync::Arc;
 
 use fat::int8::engine::QLayer;
+use fat::int8::kernels::{self, Isa, PackedWeights};
 use fat::int8::serve::EngineOptions;
 use fat::int8::{gemm, im2col, ops, qtensor::QTensor};
 use fat::quant::export::QuantMode;
 use fat::quant::scale::QParams;
 use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
-use fat::util::bench::{bench, bench_throughput, report_speedup, BenchOpts};
+use fat::util::bench::{bench, bench_throughput, report_speedup, BenchLog, BenchOpts};
 use fat::util::prop;
 use fat::util::threads::fat_threads;
 
+/// The PR-3 baseline sharding: spawn fresh OS threads per call via
+/// `std::thread::scope` (kept here, benchmark-only, as the comparison
+/// point for the persistent pool).
+#[allow(clippy::too_many_arguments)]
+fn gemm_spawn_sharded(
+    a: &[i8],
+    a_zp: i32,
+    b: &[i8],
+    bsums: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+    threads: usize,
+) {
+    let t = threads.max(1).min(m.max(1));
+    if t <= 1 || n == 0 {
+        return gemm::gemm_i8(a, a_zp, b, bsums, m, k, n, out);
+    }
+    let rows = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for (i, out_slab) in out.chunks_mut(rows * n).enumerate() {
+            let mc = out_slab.len() / n;
+            let a_slab = &a[i * rows * k..i * rows * k + mc * k];
+            s.spawn(move || {
+                gemm::gemm_i8(a_slab, a_zp, b, bsums, mc, k, n, out_slab);
+            });
+        }
+    });
+}
+
 fn main() {
     let opts = BenchOpts::from_env();
-    println!("FAT_THREADS default = {}", fat_threads());
+    let isa = Isa::detect();
+    let mut log = BenchLog::default();
+    println!(
+        "FAT_THREADS default = {}, kernel ISA = {}",
+        fat_threads(),
+        isa.name()
+    );
 
     // raw GEMM: a typical early-conv shape and a late, deeper one
     for &(m, k, n) in &[(1024usize, 144usize, 64usize), (512, 1152, 128)] {
         let a = prop::i8s(1, m * k);
         let b = prop::i8s(2, k * n);
         let sums = gemm::col_sums(&b, k, n);
+        let pw = PackedWeights::pack(&b, k, n);
         let mut out = vec![0i32; m * n];
         let macs = m * k * n;
         let name = format!("gemm_i8_{m}x{k}x{n}");
+        let shape = format!("{m}x{k}x{n}");
         bench_throughput(&format!("{name}_ref_macs"), &opts, macs, || {
             std::hint::black_box(gemm::gemm_ref(&a, -3, &b, m, k, n).len());
         });
+
+        // unpacked blocked kernel (serves ad-hoc layers)
         let base =
             bench_throughput(&format!("{name}_t1_macs"), &opts, macs, || {
                 gemm::gemm_i8(&a, -3, &b, &sums, m, k, n, &mut out);
                 std::hint::black_box(out[0]);
             });
+        log.add(&name, &shape, 1, "blocked-unpacked", base, macs);
+
+        // packed kernels: scalar fallback vs the detected SIMD level
+        let scalar = bench_throughput(
+            &format!("{name}_packed_scalar_t1_macs"),
+            &opts,
+            macs,
+            || {
+                kernels::gemm_packed(&a, -3, &pw, &sums, m, &mut out, Isa::Scalar);
+                std::hint::black_box(out[0]);
+            },
+        );
+        log.add(&name, &shape, 1, "scalar", scalar, macs);
+        let simd = bench_throughput(
+            &format!("{name}_packed_{}_t1_macs", isa.name()),
+            &opts,
+            macs,
+            || {
+                kernels::gemm_packed(&a, -3, &pw, &sums, m, &mut out, isa);
+                std::hint::black_box(out[0]);
+            },
+        );
+        log.add(&name, &shape, 1, isa.name(), simd, macs);
+        report_speedup(&format!("{name}_simd_vs_scalar"), scalar, simd);
+        report_speedup(&format!("{name}_simd_vs_unpacked"), base, simd);
+
+        // pooled sharding vs the PR-3 per-call spawn baseline
         for t in [2usize, 4, 8] {
-            let mean = bench_throughput(
-                &format!("{name}_t{t}_macs"),
+            let spawn = bench_throughput(
+                &format!("{name}_spawn_t{t}_macs"),
                 &opts,
                 macs,
                 || {
-                    gemm::gemm_i8_parallel(
+                    gemm_spawn_sharded(
                         &a, -3, &b, &sums, m, k, n, &mut out, t,
                     );
                     std::hint::black_box(out[0]);
                 },
             );
-            report_speedup(&format!("{name}_t{t}_vs_t1"), base, mean);
+            log.add(&name, &shape, t, "spawn", spawn, macs);
+            let pooled = bench_throughput(
+                &format!("{name}_pooled_t{t}_macs"),
+                &opts,
+                macs,
+                || {
+                    kernels::gemm_packed_parallel(
+                        &a, -3, &pw, &sums, m, &mut out, t, isa,
+                    );
+                    std::hint::black_box(out[0]);
+                },
+            );
+            log.add(&name, &shape, t, &format!("pooled-{}", isa.name()), pooled, macs);
+            report_speedup(&format!("{name}_pooled_vs_spawn_t{t}"), spawn, pooled);
+            report_speedup(&format!("{name}_pooled_t{t}_vs_t1"), simd, pooled);
         }
     }
 
-    // im2col for a 32x32x16 image, 3x3 (with scratch reuse)
+    // im2col for a 32x32x16 image: 3x3 general path and the 1x1 pure-copy
+    // fast path (pointwise convs skip the zero-point prefill entirely)
     let x = prop::i8s(3, 32 * 32 * 16);
     let mut patches = Vec::new();
-    bench("im2col_32x32x16_k3", &opts, || {
+    let i2c = bench("im2col_32x32x16_k3", &opts, || {
         let (oh, _) =
             im2col::im2col_into(&x, 1, 32, 32, 16, 3, 1, 0, &mut patches);
         std::hint::black_box(oh);
     });
+    log.add("im2col_k3", "32x32x16", 1, "scalar", i2c, 32 * 32 * 16 * 9);
+    let i2c1 = bench("im2col_32x32x16_k1_copy", &opts, || {
+        let (oh, _) =
+            im2col::im2col_into(&x, 1, 32, 32, 16, 1, 1, 0, &mut patches);
+        std::hint::black_box(oh);
+    });
+    log.add("im2col_k1", "32x32x16", 1, "copy", i2c1, 32 * 32 * 16);
 
-    // dwconv 3x3 over 32x32x64, serial vs row-sharded
+    // dwconv 3x3 over 32x32x64: scalar vs SIMD taps, serial vs pooled
     let qp = QParams::symmetric_signed(1.0);
     let xq = QTensor {
         shape: vec![1, 32, 32, 64],
@@ -76,13 +170,34 @@ fn main() {
         out_qp: qp,
         clamp: (-127, 127),
         w_scales: vec![1.0],
+        packed: None,
     };
+    let dw_macs = 32 * 32 * 64 * 9;
+    let mut dw_scalar = 0.0;
     for t in [1usize, 4] {
-        let mut ctx = ops::OpCtx::with_threads(t);
-        bench(&format!("dwconv_32x32x64_k3_t{t}"), &opts, || {
+        let mut ctx =
+            ops::OpCtx { isa: Isa::Scalar, threads: t, ..Default::default() };
+        let s = bench(&format!("dwconv_32x32x64_k3_scalar_t{t}"), &opts, || {
             let y = ops::dwconv2d(&xq, &l, 3, 1, &mut ctx, Vec::new());
             std::hint::black_box(y.data[0]);
         });
+        log.add("dwconv_k3", "32x32x64", t, "scalar", s, dw_macs);
+        if t == 1 {
+            dw_scalar = s;
+        }
+        let mut ctx = ops::OpCtx::with_threads(t);
+        let v = bench(
+            &format!("dwconv_32x32x64_k3_{}_t{t}", isa.name()),
+            &opts,
+            || {
+                let y = ops::dwconv2d(&xq, &l, 3, 1, &mut ctx, Vec::new());
+                std::hint::black_box(y.data[0]);
+            },
+        );
+        log.add("dwconv_k3", "32x32x64", t, isa.name(), v, dw_macs);
+        if t == 1 {
+            report_speedup("dwconv_simd_vs_scalar_t1", dw_scalar, v);
+        }
     }
 
     // whole-model throughput (needs the artifact model dir for the
@@ -95,6 +210,7 @@ fn main() {
             Ok(rt) => rt,
             Err(e) => {
                 println!("SKIP int8 whole-model bench ({e})");
+                finish(&log);
                 return;
             }
         };
@@ -126,6 +242,7 @@ fn main() {
                     );
                 },
             );
+            log.add("int8_mobilenet", "batch50", t, isa.name(), mean, 50);
             if t == 1 {
                 base = mean;
             } else {
@@ -173,5 +290,14 @@ fn main() {
         );
     } else {
         println!("SKIP int8 whole-model bench (run `make artifacts`)");
+    }
+    finish(&log);
+}
+
+fn finish(log: &BenchLog) {
+    let path = std::env::var("FAT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_int8.json".to_string());
+    if let Err(e) = log.write(&path) {
+        println!("BENCH log write failed ({path}): {e}");
     }
 }

@@ -114,36 +114,37 @@ where
     S: Observer + Send,
 {
     let per = prog.input_len();
-    let t = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let t = threads.max(1).min(n);
     let chunk = n.div_ceil(t);
-    let mut out: Vec<Result<S>> = Vec::new();
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for wi in 0..t {
-            let i0 = wi * chunk;
-            let i1 = (i0 + chunk).min(n);
-            if i0 >= i1 {
-                break;
-            }
-            let mk = &mk;
-            handles.push(s.spawn(move || -> Result<S> {
-                let mut sink = mk();
-                let mut st = FpState::default();
-                for i in i0..i1 {
-                    let img = &xd[i * per..(i + 1) * per];
-                    let logits =
-                        prog.run_image(img, &mut st, Some(&mut sink))?;
-                    st.recycle(logits.data);
+    let shards = n.div_ceil(chunk);
+    // One sink cell per shard; image ranges fan out over the persistent
+    // worker pool (util::threads::pool).
+    let mut cells: Vec<Option<Result<S>>> = (0..shards).map(|_| None).collect();
+    crate::util::threads::pool().run_chunks(&mut cells, 1, |wi, cell| {
+        let i0 = wi * chunk;
+        let i1 = (i0 + chunk).min(n);
+        let mut sink = mk();
+        let mut st = FpState::default();
+        let mut r = Ok(());
+        for i in i0..i1 {
+            let img = &xd[i * per..(i + 1) * per];
+            match prog.run_image(img, &mut st, Some(&mut sink)) {
+                Ok(logits) => st.recycle(logits.data),
+                Err(e) => {
+                    r = Err(e);
+                    break;
                 }
-                Ok(sink)
-            }));
+            }
         }
-        out = handles
-            .into_iter()
-            .map(|h| h.join().expect("calibration worker panicked"))
-            .collect();
+        cell[0] = Some(r.map(|()| sink));
     });
-    out.into_iter().collect()
+    cells
+        .into_iter()
+        .map(|c| c.expect("pool shard ran"))
+        .collect()
 }
 
 /// Native `calib_stats` pass: per-site and per-channel (min, max) over

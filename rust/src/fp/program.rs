@@ -366,10 +366,11 @@ impl FpProgram {
             .ok_or_else(|| anyhow::anyhow!("plan produced no output"))
     }
 
-    /// Run a float NHWC batch, sharding images across `threads` scoped
-    /// workers (each with its own reusable [`FpState`]). Images are
-    /// independent, so the stitched logits are bit-exact for every
-    /// thread count. Returns `(n, num_classes)` f32 logits.
+    /// Run a float NHWC batch, sharding images across `threads` workers
+    /// of the persistent pool (`util::threads::pool`), each with its own
+    /// reusable [`FpState`]. Images are independent, so the stitched
+    /// logits are bit-exact for every thread count. Returns
+    /// `(n, num_classes)` f32 logits.
     pub fn run_batch(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
         let xd = x.as_f32()?;
         anyhow::ensure!(
@@ -388,31 +389,30 @@ impl FpProgram {
         }
         let t = threads.max(1).min(n);
         let chunk = n.div_ceil(t);
-        let mut results: Vec<Result<()>> = Vec::new();
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (wi, ochunk) in out.chunks_mut(chunk * classes).enumerate() {
+        let errs = std::sync::Mutex::new(Vec::new());
+        crate::util::threads::pool().run_chunks(
+            &mut out,
+            chunk * classes,
+            |wi, ochunk| {
                 let i0 = wi * chunk;
-                handles.push(s.spawn(move || -> Result<()> {
-                    let mut st = FpState::default();
-                    for (j, orow) in
-                        ochunk.chunks_mut(classes).enumerate()
-                    {
-                        let img = &xd[(i0 + j) * per..(i0 + j + 1) * per];
-                        let logits = self.run_image(img, &mut st, None)?;
-                        orow.copy_from_slice(&logits.data);
-                        st.recycle(logits.data);
+                let mut st = FpState::default();
+                for (j, orow) in ochunk.chunks_mut(classes).enumerate() {
+                    let img = &xd[(i0 + j) * per..(i0 + j + 1) * per];
+                    match self.run_image(img, &mut st, None) {
+                        Ok(logits) => {
+                            orow.copy_from_slice(&logits.data);
+                            st.recycle(logits.data);
+                        }
+                        Err(e) => {
+                            errs.lock().unwrap().push(e);
+                            return;
+                        }
                     }
-                    Ok(())
-                }));
-            }
-            results = handles
-                .into_iter()
-                .map(|h| h.join().expect("fp worker panicked"))
-                .collect();
-        });
-        for r in results {
-            r?;
+                }
+            },
+        );
+        if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+            return Err(e);
         }
         Ok(Tensor::f32(vec![n, classes], out))
     }

@@ -380,37 +380,33 @@ impl Trainer {
             "train step: bad batch shape {:?}",
             x.shape
         );
-        let t = self.threads.min(n);
+        let t = self.threads.min(n).max(1);
         let chunk = n.div_ceil(t);
-        let mut parts: Vec<Result<Acc>> = Vec::new();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for wi in 0..t {
-                let i0 = wi * chunk;
-                let i1 = (i0 + chunk).min(n);
-                if i0 >= i1 {
+        let shards = n.div_ceil(chunk);
+        // One result cell per shard; the persistent pool fans the image
+        // ranges out and each worker accumulates its own partial `Acc`.
+        let mut parts: Vec<Option<Result<Acc>>> =
+            (0..shards).map(|_| None).collect();
+        crate::util::threads::pool().run_chunks(&mut parts, 1, |wi, cell| {
+            let i0 = wi * chunk;
+            let i1 = (i0 + chunk).min(n);
+            let mut acc = Acc::new(s);
+            let mut st = FpState::default();
+            let mut r = Ok(());
+            for i in i0..i1 {
+                let img = &xd[i * per..(i + 1) * per];
+                if let Err(e) =
+                    self.image_pass(img, &siteq, &wq, &mut st, &mut acc)
+                {
+                    r = Err(e);
                     break;
                 }
-                let siteq = &siteq;
-                let wq = &wq;
-                handles.push(scope.spawn(move || -> Result<Acc> {
-                    let mut acc = Acc::new(s);
-                    let mut st = FpState::default();
-                    for i in i0..i1 {
-                        let img = &xd[i * per..(i + 1) * per];
-                        self.image_pass(img, siteq, wq, &mut st, &mut acc)?;
-                    }
-                    Ok(acc)
-                }));
             }
-            parts = handles
-                .into_iter()
-                .map(|h| h.join().expect("train worker panicked"))
-                .collect();
+            cell[0] = Some(r.map(|()| acc));
         });
         let mut acc = Acc::new(s);
         for p in parts {
-            acc.merge(p?);
+            acc.merge(p.expect("pool shard ran")?);
         }
 
         let total = (n * self.prog.num_classes) as f64;

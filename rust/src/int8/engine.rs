@@ -33,6 +33,10 @@ pub struct QLayer {
     pub clamp: (i32, i32),
     /// Per-channel weight scales (len 1 in scalar mode).
     pub w_scales: Vec<f32>,
+    /// Conv/dense weights prepacked at plan-build time for the SIMD
+    /// microkernels (`int8::kernels`); `None` for depthwise layers and
+    /// ad-hoc hand-built layers (those run the unpacked kernel).
+    pub packed: Option<super::kernels::PackedWeights>,
 }
 
 #[derive(Debug, Clone)]
@@ -158,7 +162,7 @@ impl QModel {
     }
 
     /// Split the batch into `shards` contiguous image groups and run them
-    /// on scoped workers with fresh per-worker states. Images are
+    /// on pool workers with fresh per-worker states. Images are
     /// independent through every kernel, so the concatenated logits are
     /// bit-exact with the unsharded run.
     fn run_sharded(
@@ -189,33 +193,33 @@ impl QModel {
     ) -> Result<QTensor> {
         let per_img: usize = q.shape[1..].iter().product();
         debug_assert!(rows * per_img > 0, "degenerate shard geometry");
+        let chunks = q.shape[0].div_ceil(rows.max(1));
         debug_assert!(
-            q.shape[0].div_ceil(rows.max(1)) <= states.len(),
+            chunks <= states.len(),
             "fewer worker states than chunks"
         );
-        let mut parts: Vec<Result<QTensor>> = Vec::new();
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (chunk, st) in
-                q.data.chunks(rows * per_img).zip(states.iter_mut())
-            {
-                let mut shape = q.shape.clone();
-                shape[0] = chunk.len() / per_img;
-                let sub = QTensor { shape, data: chunk.to_vec(), qp: q.qp };
-                handles.push(s.spawn(move || self.run_quant_state(sub, st)));
-            }
-            parts = handles
-                .into_iter()
-                .map(|h| h.join().expect("int8 worker panicked"))
-                .collect();
+        // Pair each chunk's result cell with its worker state so the
+        // pool shards can borrow both mutably through one slab each.
+        let mut cells: Vec<(Option<Result<QTensor>>, &mut ExecState)> =
+            states.iter_mut().take(chunks).map(|st| (None, st)).collect();
+        let qref = &q;
+        crate::util::threads::pool().run_chunks(&mut cells, 1, |i, cell| {
+            let (res, st) = &mut cell[0];
+            let start = i * rows * per_img;
+            let end = (start + rows * per_img).min(qref.data.len());
+            let chunk = &qref.data[start..end];
+            let mut shape = qref.shape.clone();
+            shape[0] = chunk.len() / per_img;
+            let sub = QTensor { shape, data: chunk.to_vec(), qp: qref.qp };
+            *res = Some(self.run_quant_state(sub, st));
         });
         let mut data = Vec::new();
         let mut classes = 0usize;
         let mut total = 0usize;
         let mut qp = q.qp;
         let mut first_err = None;
-        for (part, st) in parts.into_iter().zip(states.iter_mut()) {
-            match part {
+        for (part, st) in cells.iter_mut() {
+            match part.take().expect("pool shard ran") {
                 Ok(t) => {
                     classes = t.shape[1];
                     qp = t.qp;
@@ -331,11 +335,16 @@ impl QModel {
     /// Reference interpreter: the pre-plan sequential `BTreeMap` walk
     /// with per-node allocations, kept as the bit-exactness oracle for
     /// the planned/parallel engine (see `rust/tests/engine_equiv.rs`).
+    /// Pinned to the scalar single-threaded kernels so the oracle is
+    /// independent of the pool and the SIMD dispatch under test.
     pub fn run_quant_ref(&self, input: QTensor) -> Result<QTensor> {
         use std::collections::BTreeMap;
         let mut vals: BTreeMap<&str, QTensor> = BTreeMap::new();
         let mut last = "input";
-        let mut ctx = OpCtx::default();
+        let mut ctx = OpCtx {
+            isa: super::kernels::Isa::Scalar,
+            ..Default::default()
+        };
         for n in &self.graph.nodes {
             if n.op == Op::Input {
                 vals.insert(n.id.as_str(), input.clone());

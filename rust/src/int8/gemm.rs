@@ -10,17 +10,18 @@
 //! stays L1-resident while every row of `a` streams over it, and each
 //! `(MR, NR)` micro-tile accumulates into a stack-resident i32 block so
 //! a loaded `b` row is reused across [`MR`] rows of `a`. Multi-threading
-//! is row-sharded in [`gemm_i8_parallel`]: workers own disjoint row
-//! slabs of `out`, so no synchronisation is needed and — i32 addition
-//! being associative — every blocking and thread count is bit-exact
-//! with [`gemm_ref`].
+//! is row-sharded in [`gemm_i8_parallel`] over the persistent worker
+//! pool (`util::threads::pool`): workers own disjoint row slabs of
+//! `out`, so no synchronisation is needed and — i32 addition being
+//! associative — every blocking and thread count is bit-exact with
+//! [`gemm_ref`].
+//!
+//! This unpacked-`b` kernel serves ad-hoc weights (tests, hand-built
+//! layers). Exported models prepack their weights at plan-build time and
+//! run the SIMD microkernels in `int8::kernels` instead — same blocking
+//! constants, same results.
 
-/// Rows of `a` per micro-tile (register-block height).
-const MR: usize = 4;
-/// Columns of `b` per micro-tile (register-block width).
-const NR: usize = 64;
-/// Depth of one cache panel of `b` (`KC * NR` i8 ≈ 8 KiB).
-const KC: usize = 128;
+use super::kernels::{KC, MR, NR};
 
 /// Precomputed column sums of the weight matrix (for the zero-point term).
 pub fn col_sums(b: &[i8], k: usize, n: usize) -> Vec<i32> {
@@ -64,10 +65,10 @@ pub fn gemm_i8(
                     let brow =
                         &b[(k0 + ki) * n + n0..(k0 + ki) * n + n0 + nr];
                     for (r, arow) in acc.iter_mut().take(mr).enumerate() {
+                        // No zero-skip: the branch defeats
+                        // auto-vectorization and costs more than the
+                        // multiplies it saves (EXPERIMENTS.md §Perf).
                         let av = a[(m0 + r) * k + k0 + ki] as i32;
-                        if av == 0 {
-                            continue;
-                        }
                         for (j, &bv) in brow.iter().enumerate() {
                             arow[j] += av * bv as i32;
                         }
@@ -94,9 +95,9 @@ pub fn gemm_i8(
     }
 }
 
-/// Row-sharded parallel GEMM: `threads` scoped workers, each owning a
-/// disjoint slab of `out` rows. Bit-exact with [`gemm_i8`] for every
-/// thread count (workers never share accumulators).
+/// Row-sharded parallel GEMM over the persistent worker pool: each
+/// shard owns a disjoint slab of `out` rows. Bit-exact with [`gemm_i8`]
+/// for every thread count (workers never share accumulators).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_i8_parallel(
     a: &[i8],
@@ -114,14 +115,10 @@ pub fn gemm_i8_parallel(
         return gemm_i8(a, a_zp, b, bsums, m, k, n, out);
     }
     let rows = m.div_ceil(t);
-    std::thread::scope(|s| {
-        for (i, out_slab) in out.chunks_mut(rows * n).enumerate() {
-            let mc = out_slab.len() / n;
-            let a_slab = &a[i * rows * k..i * rows * k + mc * k];
-            s.spawn(move || {
-                gemm_i8(a_slab, a_zp, b, bsums, mc, k, n, out_slab);
-            });
-        }
+    crate::util::threads::pool().run_chunks(out, rows * n, |i, out_slab| {
+        let mc = out_slab.len() / n;
+        let a_slab = &a[i * rows * k..i * rows * k + mc * k];
+        gemm_i8(a_slab, a_zp, b, bsums, mc, k, n, out_slab);
     });
 }
 
@@ -160,18 +157,8 @@ mod tests {
             .collect()
     }
 
-    // Shapes chosen to hit every blocking edge: single element, odd
-    // everything, exact tile multiples, and remainders in m, n and k.
-    const SHAPES: &[(usize, usize, usize, i32)] = &[
-        (1, 1, 1, 0),
-        (3, 5, 7, -3),
-        (8, 16, 4, 12),
-        (17, 9, 33, -128),
-        (4, 128, 64, 5),   // exactly one (KC, NR) panel, one MR block
-        (5, 129, 65, -7),  // +1 remainder in every dimension
-        (2, 300, 100, 11), // multiple k panels
-        (65, 7, 130, -1),  // many row blocks, two n strips
-    ];
+    // Blocking-edge shapes shared with the packed-kernel proptests.
+    use crate::util::prop::SHAPES;
 
     #[test]
     fn matches_reference() {

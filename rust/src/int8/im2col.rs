@@ -35,6 +35,28 @@ pub fn im2col_into(
 ) -> (usize, usize) {
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
+    // 1×1 window: SAME padding is zero ((oh-1)*stride + 1 <= h) and every
+    // patch is one in-bounds pixel, so the whole output is a pure copy —
+    // skip the zero-point prefill of the full buffer. This is the hot
+    // shape of the pointwise-conv-heavy mobilenet/mnas builtins.
+    if k == 1 {
+        out.clear();
+        out.reserve(n * oh * ow * c);
+        if stride == 1 {
+            out.extend_from_slice(x);
+        } else {
+            for ni in 0..n {
+                for oy in 0..oh {
+                    let iy = oy * stride;
+                    for ox in 0..ow {
+                        let src = ((ni * h + iy) * w + ox * stride) * c;
+                        out.extend_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+        return (oh, ow);
+    }
     // SAME padding (matches XLA): pad_total = (o-1)*s + k - h
     let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
     let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
@@ -109,6 +131,31 @@ mod tests {
         let (oh2, ow2) = im2col_into(&x, 1, 4, 4, 1, 3, 2, -9, &mut buf);
         assert_eq!((oh, ow), (oh2, ow2));
         assert_eq!(want, buf);
+    }
+
+    #[test]
+    fn strided_1x1_copies_subsampled_pixels() {
+        // 4x4, 2 channels, stride 2: the copy fast path must pick pixels
+        // (0,0), (0,2), (2,0), (2,2) with no zero-point fill anywhere.
+        let x: Vec<i8> = (0..4 * 4 * 2).map(|i| i as i8).collect();
+        let (p, oh, ow) = im2col_i8(&x, 1, 4, 4, 2, 1, 2, -9);
+        assert_eq!((oh, ow), (2, 2));
+        let mut want = Vec::new();
+        for &(r, c0) in &[(0usize, 0usize), (0, 2), (2, 0), (2, 2)] {
+            let s = (r * 4 + c0) * 2;
+            want.extend_from_slice(&x[s..s + 2]);
+        }
+        assert_eq!(p, want);
+        assert!(!p.contains(&-9));
+    }
+
+    #[test]
+    fn fast_path_reuses_stale_buffer() {
+        let x: Vec<i8> = (0..3 * 3).map(|i| i as i8).collect();
+        let mut buf = vec![111i8; 50]; // stale, oversized
+        let (oh, ow) = im2col_into(&x, 1, 3, 3, 1, 1, 1, -5, &mut buf);
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(buf, x);
     }
 
     #[test]

@@ -1,0 +1,616 @@
+//! SIMD int8 microkernels over prepacked weight panels (DESIGN.md §8).
+//!
+//! The conv/dense hot loop is `i8 × i8 → i32`: widen both operands to
+//! i16, multiply-accumulate pairs into i32 lanes (`pmaddwd` — the
+//! gemmlowp/oneDNN lineage), with an SSE2 baseline, an AVX2 path picked
+//! once per process by [`Isa::detect`], and a portable scalar fallback
+//! that reads the **same packed layout** so every path is bit-exact.
+//!
+//! ## Packed layout
+//!
+//! [`PackedWeights::pack`] reorders the row-major `(k, n)` weight matrix
+//! into `NR`-column strips of k-**pair**-interleaved rows (the shape
+//! `pmaddwd` consumes directly):
+//!
+//! ```text
+//! strip ns (columns n0 = ns·NR .. n0+NR, zero-padded past n):
+//!   pair p (rows 2p, 2p+1; row k zero-padded when k is odd):
+//!     b[2p][n0], b[2p+1][n0], b[2p][n0+1], b[2p+1][n0+1], …  (2·NR i8)
+//! ```
+//!
+//! One `KC`-row panel of a strip is `KC × NR` i8 ≈ 8 KiB (L1-resident),
+//! and a 16-byte load inside a pair yields 8 interleaved columns — the
+//! exact operand layout of a widening multiply-add, with no shuffles on
+//! the hot path.
+//!
+//! ## Bit-exactness
+//!
+//! Products of i8 (and of `(x - zp) · w` in the depthwise tap, with
+//! `|x - zp| ≤ 255`, `|w| ≤ 128`, so `|prod| ≤ 32640 < 2^15`) fit i16
+//! exactly; every accumulation is i32, and i32 addition is associative
+//! and commutative, so any vector width, blocking, shard count and ISA
+//! produces identical bytes. `gemm_ref` stays the oracle
+//! (`rust/tests/proptests.rs`, `kernels::tests`).
+
+use std::sync::OnceLock;
+
+/// Rows of `a` per micro-tile (register-block height).
+pub const MR: usize = 4;
+/// Columns of `b` per strip (register-block width).
+pub const NR: usize = 64;
+/// Depth of one cache panel of `b` (`KC * NR` i8 ≈ 8 KiB).
+pub const KC: usize = 128;
+
+/// Instruction-set level for the int8 microkernels. Ordered: a request
+/// above the hardware clamps down ([`Isa::detect`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable scalar loop over the packed layout (any arch).
+    Scalar,
+    /// x86_64 baseline: 128-bit `pmaddwd` path.
+    Sse2,
+    /// 256-bit `vpmaddwd` path, runtime-detected.
+    Avx2,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Best ISA the hardware supports.
+    fn best() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Isa::Avx2
+            } else {
+                Isa::Sse2
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Isa::Scalar
+        }
+    }
+
+    /// The process-wide kernel ISA, detected **once** (`OnceLock`) when
+    /// the first plan is built or executed. `FAT_ISA=scalar|sse2|avx2`
+    /// pins a lower level for A/B runs; asking above the hardware clamps
+    /// down to the best supported level. Tests sweep explicitly via
+    /// [`Isa::available`] instead of mutating the environment.
+    pub fn detect() -> Isa {
+        static CACHE: OnceLock<Isa> = OnceLock::new();
+        *CACHE.get_or_init(|| {
+            let best = Isa::best();
+            let req = match std::env::var("FAT_ISA")
+                .ok()
+                .as_deref()
+                .map(str::trim)
+            {
+                Some("scalar") => Some(Isa::Scalar),
+                Some("sse2") => Some(Isa::Sse2),
+                Some("avx2") => Some(Isa::Avx2),
+                Some(other) => {
+                    // An explicit pin the user typo'd must not silently
+                    // turn into "fastest": that would invert A/B runs.
+                    eprintln!(
+                        "FAT_ISA: unknown value {other:?} \
+                         (want scalar|sse2|avx2); using detected {}",
+                        best.name()
+                    );
+                    None
+                }
+                None => None,
+            };
+            req.map_or(best, |r| r.min(best))
+        })
+    }
+
+    /// Every ISA runnable on this machine, weakest first (test sweeps).
+    pub fn available() -> Vec<Isa> {
+        match Isa::best() {
+            Isa::Avx2 => vec![Isa::Scalar, Isa::Sse2, Isa::Avx2],
+            Isa::Sse2 => vec![Isa::Scalar, Isa::Sse2],
+            Isa::Scalar => vec![Isa::Scalar],
+        }
+    }
+}
+
+/// Weight matrix prepacked at `build_qmodel` plan time into the strip /
+/// pair-interleaved layout the microkernels consume (module docs). Built
+/// once per exported model and stored on the plan's dense parameter
+/// table (`QLayer::packed`).
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    data: Vec<i8>,
+    /// Logical row count of the source `(k, n)` matrix.
+    pub k: usize,
+    /// Logical column count of the source `(k, n)` matrix.
+    pub n: usize,
+    /// Rows per strip after padding `k` up to a pair boundary.
+    pk: usize,
+    /// Number of `NR`-column strips (`n` padded up).
+    strips: usize,
+}
+
+impl PackedWeights {
+    /// Pack a row-major `(k, n)` i8 matrix. Padding lanes (columns ≥ n,
+    /// the row `k` of an odd-`k` pair) are zero, so they contribute
+    /// nothing to any accumulator.
+    pub fn pack(b: &[i8], k: usize, n: usize) -> PackedWeights {
+        assert_eq!(b.len(), k * n, "pack: bad weight shape ({k},{n})");
+        let strips = n.div_ceil(NR);
+        let pk = k + (k & 1);
+        let mut data = vec![0i8; strips * pk * NR];
+        for ns in 0..strips {
+            let n0 = ns * NR;
+            let nr = NR.min(n - n0);
+            let sbase = ns * pk * NR;
+            for ki in 0..k {
+                let lane = ki & 1;
+                let pair = ki / 2;
+                let src = &b[ki * n + n0..ki * n + n0 + nr];
+                for (j, &v) in src.iter().enumerate() {
+                    data[sbase + (pair * NR + j) * 2 + lane] = v;
+                }
+            }
+        }
+        PackedWeights { data, k, n, pk, strips }
+    }
+
+    /// Packed size in bytes (padding included) — for size reports.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    fn strip(&self, ns: usize) -> &[i8] {
+        &self.data[ns * self.pk * NR..(ns + 1) * self.pk * NR]
+    }
+}
+
+/// Packed-panel GEMM: `out[mi, ni] = Σ_k (a[mi,k] - a_zp) · b[k,ni]`,
+/// single-threaded, with the a_zp term applied via the precomputed
+/// column sums exactly like `gemm::gemm_i8`. Bit-exact with `gemm_ref`
+/// for every [`Isa`].
+pub fn gemm_packed(
+    a: &[i8],
+    a_zp: i32,
+    pw: &PackedWeights,
+    bsums: &[i32],
+    m: usize,
+    out: &mut [i32],
+    isa: Isa,
+) {
+    let (k, n) = (pw.k, pw.n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let pairs_total = pw.pk / 2;
+    for ns in 0..pw.strips {
+        let n0 = ns * NR;
+        let nr = NR.min(n - n0);
+        let strip = pw.strip(ns);
+        let mut p0 = 0usize;
+        while p0 < pairs_total {
+            // One KC-row cache panel = KC/2 interleaved pairs.
+            let pc = (KC / 2).min(pairs_total - p0);
+            let mut m0 = 0usize;
+            while m0 < m {
+                let mr = MR.min(m - m0);
+                let mut acc = [[0i32; NR]; MR];
+                match isa {
+                    #[cfg(target_arch = "x86_64")]
+                    Isa::Avx2 => unsafe {
+                        microtile_avx2(a, m0, k, strip, p0, pc, mr, &mut acc)
+                    },
+                    #[cfg(target_arch = "x86_64")]
+                    Isa::Sse2 => unsafe {
+                        microtile_sse2(a, m0, k, strip, p0, pc, mr, &mut acc)
+                    },
+                    _ => microtile_scalar(a, m0, k, strip, p0, pc, mr, &mut acc),
+                }
+                for (r, arow) in acc.iter().take(mr).enumerate() {
+                    let o0 = (m0 + r) * n + n0;
+                    let orow = &mut out[o0..o0 + nr];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o += arow[j];
+                    }
+                }
+                m0 += MR;
+            }
+            p0 += pc;
+        }
+    }
+    if a_zp != 0 {
+        for mi in 0..m {
+            let orow = &mut out[mi * n..(mi + 1) * n];
+            for (ni, o) in orow.iter_mut().enumerate() {
+                *o -= a_zp * bsums[ni];
+            }
+        }
+    }
+}
+
+/// Row-sharded [`gemm_packed`] over the persistent worker pool
+/// (`util::threads::pool`). Workers own disjoint `out` slabs, so every
+/// thread count is bit-exact.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_parallel(
+    a: &[i8],
+    a_zp: i32,
+    pw: &PackedWeights,
+    bsums: &[i32],
+    m: usize,
+    out: &mut [i32],
+    threads: usize,
+    isa: Isa,
+) {
+    let (k, n) = (pw.k, pw.n);
+    let t = threads.max(1).min(m.max(1));
+    if t <= 1 || n == 0 {
+        return gemm_packed(a, a_zp, pw, bsums, m, out, isa);
+    }
+    let rows = m.div_ceil(t);
+    crate::util::threads::pool().run_chunks(out, rows * n, |i, out_slab| {
+        let mc = out_slab.len() / n;
+        let a_slab = &a[i * rows * k..i * rows * k + mc * k];
+        gemm_packed(a_slab, a_zp, pw, bsums, mc, out_slab, isa);
+    });
+}
+
+/// Portable reference micro-tile over the packed layout: accumulate
+/// `pc` row-pairs of one strip into the `(mr, NR)` i32 block. The SIMD
+/// paths compute exactly this sum (associative i32 adds).
+#[allow(clippy::too_many_arguments)]
+fn microtile_scalar(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    for p in p0..p0 + pc {
+        let prow = &strip[p * 2 * NR..(p + 1) * 2 * NR];
+        for (r, arow) in acc.iter_mut().take(mr).enumerate() {
+            let ai = (m0 + r) * k + 2 * p;
+            let a0 = a[ai] as i32;
+            let a1 = if 2 * p + 1 < k { a[ai + 1] as i32 } else { 0 };
+            for (j, av) in arow.iter_mut().enumerate() {
+                *av += a0 * prow[2 * j] as i32 + a1 * prow[2 * j + 1] as i32;
+            }
+        }
+    }
+}
+
+/// Broadcastable i16 pair `[a0, a1]` as one i32 lane value.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn pair_i32(a0: i32, a1: i32) -> i32 {
+    (((a1 as i16 as u16 as u32) << 16) | (a0 as i16 as u16 as u32)) as i32
+}
+
+/// AVX2 micro-tile: per a-row, 8 × 256-bit i32 accumulators cover the
+/// NR=64 strip; each pair iteration does one broadcast + 4×(16-byte load
+/// → sign-extend → `vpmaddwd` → `vpaddd`) per 16 columns.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (guarded by [`Isa::detect`] /
+/// [`Isa::available`]) and the slice geometry invariants of
+/// [`gemm_packed`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn microtile_avx2(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
+        let abase = (m0 + r) * k;
+        let mut accv = [_mm256_setzero_si256(); NR / 8];
+        for (i, v) in accv.iter_mut().enumerate() {
+            *v = _mm256_loadu_si256(
+                arow_acc.as_ptr().add(i * 8) as *const __m256i
+            );
+        }
+        for p in p0..p0 + pc {
+            let a0 = *a.get_unchecked(abase + 2 * p) as i32;
+            let a1 = if 2 * p + 1 < k {
+                *a.get_unchecked(abase + 2 * p + 1) as i32
+            } else {
+                0
+            };
+            let av = _mm256_set1_epi32(pair_i32(a0, a1));
+            let brow = strip.as_ptr().add(p * 2 * NR);
+            for (i, v) in accv.iter_mut().enumerate() {
+                let b16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    brow.add(i * 16) as *const __m128i,
+                ));
+                *v = _mm256_add_epi32(*v, _mm256_madd_epi16(av, b16));
+            }
+        }
+        for (i, v) in accv.iter().enumerate() {
+            _mm256_storeu_si256(
+                arow_acc.as_mut_ptr().add(i * 8) as *mut __m256i,
+                *v,
+            );
+        }
+    }
+}
+
+/// SSE2 micro-tile (x86_64 baseline — no runtime check needed): 128-bit
+/// `pmaddwd` over 4-column groups, sign-extension via compare+unpack.
+///
+/// # Safety
+/// Caller must uphold the slice geometry invariants of [`gemm_packed`].
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn microtile_sse2(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    let zero = _mm_setzero_si128();
+    for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
+        let abase = (m0 + r) * k;
+        for jv in 0..NR / 4 {
+            let mut accv = _mm_loadu_si128(
+                arow_acc.as_ptr().add(jv * 4) as *const __m128i
+            );
+            for p in p0..p0 + pc {
+                let a0 = *a.get_unchecked(abase + 2 * p) as i32;
+                let a1 = if 2 * p + 1 < k {
+                    *a.get_unchecked(abase + 2 * p + 1) as i32
+                } else {
+                    0
+                };
+                let av = _mm_set1_epi32(pair_i32(a0, a1));
+                let b8 = _mm_loadl_epi64(
+                    strip.as_ptr().add((p * NR + jv * 4) * 2)
+                        as *const __m128i,
+                );
+                let b16 = _mm_unpacklo_epi8(b8, _mm_cmpgt_epi8(zero, b8));
+                accv = _mm_add_epi32(accv, _mm_madd_epi16(av, b16));
+            }
+            _mm_storeu_si128(
+                arow_acc.as_mut_ptr().add(jv * 4) as *mut __m128i,
+                accv,
+            );
+        }
+    }
+}
+
+/// One depthwise-conv tap over all channels:
+/// `acc[ci] += (x[ci] - zp) · w[ci]`. The i16 product is exact
+/// (`|x - zp| ≤ 255`, `|w| ≤ 128` ⇒ `|prod| ≤ 32640 < 2^15`), so every
+/// ISA is bit-exact.
+pub fn dw_accum_tap(acc: &mut [i32], x: &[i8], w: &[i8], zp: i32, isa: Isa) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), w.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { dw_tap_avx2(acc, x, w, zp) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { dw_tap_sse2(acc, x, w, zp) },
+        _ => dw_tap_scalar(acc, x, w, zp),
+    }
+}
+
+fn dw_tap_scalar(acc: &mut [i32], x: &[i8], w: &[i8], zp: i32) {
+    for ((a, &xv), &wv) in acc.iter_mut().zip(x).zip(w) {
+        *a += (xv as i32 - zp) * wv as i32;
+    }
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available and `acc`/`x`/`w` have equal
+/// lengths (debug-asserted in [`dw_accum_tap`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dw_tap_avx2(acc: &mut [i32], x: &[i8], w: &[i8], zp: i32) {
+    use std::arch::x86_64::*;
+    let c = acc.len();
+    let zpv = _mm256_set1_epi16(zp as i16);
+    let mut i = 0usize;
+    while i + 16 <= c {
+        let xv = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+            x.as_ptr().add(i) as *const __m128i
+        ));
+        let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+            w.as_ptr().add(i) as *const __m128i
+        ));
+        let prod = _mm256_mullo_epi16(_mm256_sub_epi16(xv, zpv), wv);
+        let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod));
+        let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256(prod, 1));
+        let ap = acc.as_mut_ptr().add(i) as *mut __m256i;
+        _mm256_storeu_si256(ap, _mm256_add_epi32(_mm256_loadu_si256(ap), lo));
+        let ap2 = acc.as_mut_ptr().add(i + 8) as *mut __m256i;
+        _mm256_storeu_si256(
+            ap2,
+            _mm256_add_epi32(_mm256_loadu_si256(ap2), hi),
+        );
+        i += 16;
+    }
+    dw_tap_scalar(&mut acc[i..], &x[i..], &w[i..], zp);
+}
+
+/// # Safety
+/// Caller must ensure `acc`/`x`/`w` have equal lengths (debug-asserted
+/// in [`dw_accum_tap`]). SSE2 is the x86_64 baseline.
+#[cfg(target_arch = "x86_64")]
+unsafe fn dw_tap_sse2(acc: &mut [i32], x: &[i8], w: &[i8], zp: i32) {
+    use std::arch::x86_64::*;
+    let c = acc.len();
+    let zero = _mm_setzero_si128();
+    let zpv = _mm_set1_epi16(zp as i16);
+    let mut i = 0usize;
+    while i + 8 <= c {
+        let x8 = _mm_loadl_epi64(x.as_ptr().add(i) as *const __m128i);
+        let x16 = _mm_unpacklo_epi8(x8, _mm_cmpgt_epi8(zero, x8));
+        let w8 = _mm_loadl_epi64(w.as_ptr().add(i) as *const __m128i);
+        let w16 = _mm_unpacklo_epi8(w8, _mm_cmpgt_epi8(zero, w8));
+        let prod = _mm_mullo_epi16(_mm_sub_epi16(x16, zpv), w16);
+        let sign = _mm_srai_epi16(prod, 15);
+        let lo = _mm_unpacklo_epi16(prod, sign);
+        let hi = _mm_unpackhi_epi16(prod, sign);
+        let ap = acc.as_mut_ptr().add(i) as *mut __m128i;
+        _mm_storeu_si128(ap, _mm_add_epi32(_mm_loadu_si128(ap), lo));
+        let ap2 = acc.as_mut_ptr().add(i + 4) as *mut __m128i;
+        _mm_storeu_si128(ap2, _mm_add_epi32(_mm_loadu_si128(ap2), hi));
+        i += 8;
+    }
+    dw_tap_scalar(&mut acc[i..], &x[i..], &w[i..], zp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::int8::gemm::{col_sums, gemm_ref};
+    use crate::util::prop;
+
+    #[test]
+    fn pack_layout_golden() {
+        // (3, 2) matrix, k odd → one zero-padded pair row; n < NR → the
+        // strip's tail columns are zero.
+        let b = vec![1i8, 2, 3, 4, 5, 6];
+        let pw = PackedWeights::pack(&b, 3, 2);
+        assert_eq!((pw.k, pw.n, pw.pk, pw.strips), (3, 2, 4, 1));
+        assert_eq!(pw.bytes(), 4 * NR);
+        let d = &pw.data;
+        // pair 0 (rows 0, 1), columns 0 and 1
+        assert_eq!(&d[0..4], &[1, 3, 2, 4]);
+        // pair 1 (row 2 + zero pad)
+        assert_eq!(&d[2 * NR..2 * NR + 4], &[5, 0, 6, 0]);
+        // every other lane is padding
+        let live = [0usize, 1, 2, 3, 2 * NR, 2 * NR + 1, 2 * NR + 2, 2 * NR + 3];
+        for (i, &v) in d.iter().enumerate() {
+            if !live.contains(&i) {
+                assert_eq!(v, 0, "lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_reference_across_isas() {
+        for &(m, k, n, zp) in prop::SHAPES {
+            let a = prop::i8s(21, m * k);
+            let b = prop::i8s(22, k * n);
+            let sums = col_sums(&b, k, n);
+            let pw = PackedWeights::pack(&b, k, n);
+            let want = gemm_ref(&a, zp, &b, m, k, n);
+            for isa in Isa::available() {
+                let mut out = vec![i32::MIN; m * n];
+                gemm_packed(&a, zp, &pw, &sums, m, &mut out, isa);
+                assert_eq!(out, want, "({m},{k},{n}) zp={zp} {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_parallel_matches_reference_across_isa_and_threads() {
+        for &(m, k, n, zp) in prop::SHAPES {
+            let a = prop::i8s(23, m * k);
+            let b = prop::i8s(24, k * n);
+            let sums = col_sums(&b, k, n);
+            let pw = PackedWeights::pack(&b, k, n);
+            let want = gemm_ref(&a, zp, &b, m, k, n);
+            for isa in Isa::available() {
+                for threads in [1usize, 2, 8] {
+                    let mut out = vec![0i32; m * n];
+                    gemm_packed_parallel(
+                        &a, zp, &pw, &sums, m, &mut out, threads, isa,
+                    );
+                    assert_eq!(
+                        out,
+                        want,
+                        "({m},{k},{n}) t={threads} {}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dw_tap_matches_scalar_across_isas_and_channel_remainders() {
+        // channel counts straddling the 16/8-lane vector widths
+        for &c in &[1usize, 3, 7, 8, 15, 16, 17, 31, 64, 67] {
+            let x = prop::i8s(31, c);
+            let w = prop::i8s(32, c);
+            for &zp in &[0i32, -7, 127, -128] {
+                let mut want = vec![3i32; c];
+                dw_tap_scalar(&mut want, &x, &w, zp);
+                for isa in Isa::available() {
+                    let mut acc = vec![3i32; c];
+                    dw_accum_tap(&mut acc, &x, &w, zp, isa);
+                    assert_eq!(acc, want, "c={c} zp={zp} {}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dw_tap_extreme_operands_stay_exact() {
+        // the i16-product proof obligation: |x-zp|·|w| peaks at 32640
+        let c = 40usize;
+        let x = vec![127i8; c];
+        let w = vec![-128i8; c];
+        let mut want = vec![0i32; c];
+        dw_tap_scalar(&mut want, &x, &w, -128);
+        assert!(want.iter().all(|&v| v == (127 + 128) * -128));
+        for isa in Isa::available() {
+            let mut acc = vec![0i32; c];
+            dw_accum_tap(&mut acc, &x, &w, -128, isa);
+            assert_eq!(acc, want, "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn accumulates_beyond_i16_on_every_isa() {
+        // 512 × 127·127 overflows i16 by far; i32 accumulation must hold.
+        let a = vec![127i8; 512];
+        let b = vec![127i8; 512];
+        let pw = PackedWeights::pack(&b, 512, 1);
+        let sums = col_sums(&b, 512, 1);
+        for isa in Isa::available() {
+            let mut out = vec![0i32; 1];
+            gemm_packed(&a, 0, &pw, &sums, 1, &mut out, isa);
+            assert_eq!(out[0], 127 * 127 * 512, "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn isa_order_supports_clamping() {
+        assert!(Isa::Scalar < Isa::Sse2 && Isa::Sse2 < Isa::Avx2);
+        assert_eq!(Isa::Avx2.min(Isa::Sse2), Isa::Sse2);
+        let avail = Isa::available();
+        assert!(avail.contains(&Isa::Scalar));
+        // detect() clamps to best(), and available() lists every level
+        // up to best(), so the detected ISA is always runnable.
+        assert!(avail.contains(&Isa::detect()));
+    }
+}

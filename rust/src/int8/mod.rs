@@ -6,10 +6,12 @@
 //!
 //! Execution is plan-driven: `quant::export::build_qmodel` compiles a
 //! [`plan::ExecPlan`] once (topological schedule, dense indices,
-//! liveness-based buffer reuse) and [`engine::QModel`] runs it with
-//! cache-blocked GEMM kernels and `FAT_THREADS`-way parallelism —
-//! batch-sharded across images, row-sharded inside kernels.
-
+//! liveness-based buffer reuse, weights prepacked for the SIMD
+//! microkernels) and [`engine::QModel`] runs it with cache-blocked
+//! int8 GEMM microkernels ([`kernels`]: SSE2/AVX2 with a bit-exact
+//! scalar fallback, DESIGN.md §8) and `FAT_THREADS`-way parallelism on
+//! the persistent worker pool — batch-sharded across images,
+//! row-sharded inside kernels.
 //!
 //! Serving traffic should go through [`serve::Int8Engine`] — an
 //! `Arc`-clone handle with pooled per-worker execution state — rather
@@ -18,12 +20,14 @@
 pub mod engine;
 pub mod gemm;
 pub mod im2col;
+pub mod kernels;
 pub mod ops;
 pub mod plan;
 pub mod qtensor;
 pub mod serve;
 
 pub use engine::{ExecState, QLayer, QModel};
+pub use kernels::{Isa, PackedWeights};
 pub use plan::ExecPlan;
 pub use qtensor::QTensor;
 pub use serve::{EngineOptions, Int8Engine};

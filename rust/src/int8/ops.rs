@@ -6,27 +6,37 @@
 //! bundle, writes its activation into a caller-provided buffer (recycled
 //! through the engine's arena) and reuses im2col/accumulator scratch from
 //! an [`OpCtx`] across nodes. `OpCtx::threads` drives row-sharded
-//! parallelism inside the GEMM and the depthwise loop; every thread
-//! count produces bit-identical activations.
+//! parallelism inside the GEMM and the depthwise loop (dispatched onto
+//! the persistent worker pool, `util::threads::pool`), and
+//! `OpCtx::isa` selects the SIMD microkernel level (`int8::kernels`);
+//! every thread count and ISA produces bit-identical activations.
 
 use crate::quant::scale::{apply_multiplier, QParams};
 
 use super::engine::{AddParams, GapParams, QLayer};
 use super::gemm::gemm_i8_parallel;
 use super::im2col::im2col_into;
+use super::kernels::{self, Isa};
 use super::qtensor::QTensor;
 
-/// Reusable per-run execution context: worker count plus im2col /
-/// accumulator scratch shared by all nodes of one inference.
+/// Reusable per-run execution context: worker count and kernel ISA plus
+/// im2col / accumulator scratch shared by all nodes of one inference.
 pub struct OpCtx {
     pub threads: usize,
+    /// Microkernel ISA; defaults to the process-wide [`Isa::detect`].
+    pub isa: Isa,
     pub patches: Vec<i8>,
     pub acc: Vec<i32>,
 }
 
 impl Default for OpCtx {
     fn default() -> Self {
-        OpCtx { threads: 1, patches: Vec::new(), acc: Vec::new() }
+        OpCtx {
+            threads: 1,
+            isa: Isa::detect(),
+            patches: Vec::new(),
+            acc: Vec::new(),
+        }
     }
 }
 
@@ -71,6 +81,7 @@ pub fn conv2d(
     out: Vec<i8>,
 ) -> QTensor {
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let OpCtx { threads, isa, patches, acc } = ctx;
     let (oh, ow) = im2col_into(
         &x.data,
         n,
@@ -80,28 +91,50 @@ pub fn conv2d(
         k,
         stride,
         x.qp.zero_point as i8,
-        &mut ctx.patches,
+        patches,
     );
     let m = n * oh * ow;
     let kk = k * k * c;
-    ctx.acc.clear();
-    ctx.acc.resize(m * cout, 0);
-    gemm_i8_parallel(
-        &ctx.patches,
-        x.qp.zero_point,
-        &l.w_q,
-        &l.w_sums,
-        m,
-        kk,
-        cout,
-        &mut ctx.acc,
-        ctx.threads,
+    acc.clear();
+    acc.resize(m * cout, 0);
+    gemm_dispatch(
+        patches, x.qp.zero_point, l, m, kk, cout, acc, *threads, *isa,
     );
     let mut data = out;
     requant_store(
-        &ctx.acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, &mut data,
+        acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, &mut data,
     );
     QTensor { shape: vec![n, oh, ow, cout], data, qp: l.out_qp }
+}
+
+/// Route the conv/dense GEMM: exported layers carry weights prepacked
+/// at plan-build time and run the SIMD microkernels
+/// ([`kernels::gemm_packed_parallel`]); ad-hoc layers (tests,
+/// hand-built) fall back to the unpacked blocked kernel. Both are
+/// bit-exact with `gemm_ref`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_dispatch(
+    a: &[i8],
+    a_zp: i32,
+    l: &QLayer,
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: &mut [i32],
+    threads: usize,
+    isa: Isa,
+) {
+    match &l.packed {
+        Some(pw) => {
+            debug_assert_eq!((pw.k, pw.n), (k, n), "packed shape mismatch");
+            kernels::gemm_packed_parallel(
+                a, a_zp, pw, &l.w_sums, m, acc, threads, isa,
+            );
+        }
+        None => {
+            gemm_i8_parallel(a, a_zp, &l.w_q, &l.w_sums, m, k, n, acc, threads)
+        }
+    }
 }
 
 /// Depthwise SAME-padded conv (multiplier 1). `l.w_q` is (k,k,ch)
@@ -128,23 +161,29 @@ pub fn dwconv2d(
     if row_len == 0 || rows == 0 {
         // degenerate empty output; nothing to compute
     } else if t <= 1 {
-        dw_rows(x, l, k, stride, oh, ow, pad_top, pad_left, 0, &mut data);
+        dw_rows(x, l, k, stride, oh, ow, pad_top, pad_left, 0, &mut data, ctx.isa);
     } else {
         let per = rows.div_ceil(t);
-        std::thread::scope(|s| {
-            for (i, slab) in data.chunks_mut(per * row_len).enumerate() {
-                let r0 = i * per;
-                s.spawn(move || {
-                    dw_rows(x, l, k, stride, oh, ow, pad_top, pad_left, r0, slab);
-                });
-            }
-        });
+        let isa = ctx.isa;
+        crate::util::threads::pool().run_chunks(
+            &mut data,
+            per * row_len,
+            |i, slab| {
+                dw_rows(
+                    x, l, k, stride, oh, ow, pad_top, pad_left, i * per,
+                    slab, isa,
+                );
+            },
+        );
     }
     QTensor { shape: vec![n, oh, ow, c], data, qp: l.out_qp }
 }
 
 /// Compute a contiguous range of depthwise output rows (one row =
-/// one (image, oy) scanline of ow*c values) into `out`.
+/// one (image, oy) scanline of ow*c values) into `out`. Taps run
+/// channel-vectorized ([`kernels::dw_accum_tap`]); the per-(pixel,
+/// channel) sum set is unchanged and i32 adds are associative, so the
+/// result is bit-exact with the old channel-inner scalar loop.
 #[allow(clippy::too_many_arguments)]
 fn dw_rows(
     x: &QTensor,
@@ -157,37 +196,42 @@ fn dw_rows(
     pad_left: usize,
     r0: usize,
     out: &mut [i8],
+    isa: Isa,
 ) {
     let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
     let zp = x.qp.zero_point;
+    let mut acc = vec![0i32; c];
     for (ri, orow) in out.chunks_mut(ow * c).enumerate() {
         let r = r0 + ri;
         let ni = r / oh;
         let oy = r % oh;
         for ox in 0..ow {
-            for ci in 0..c {
-                let mut acc = 0i32;
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad_top as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue; // pad tap: (zp - zp) * w = 0
-                    }
-                    for kx in 0..k {
-                        let ix =
-                            (ox * stride + kx) as isize - pad_left as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let xi = ((ni * h + iy as usize) * w + ix as usize)
-                            * c
-                            + ci;
-                        let wi = (ky * k + kx) * c + ci;
-                        acc += (x.data[xi] as i32 - zp)
-                            * l.w_q[wi] as i32;
-                    }
+            acc.fill(0);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue; // pad tap: (zp - zp) * w = 0
                 }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xi =
+                        ((ni * h + iy as usize) * w + ix as usize) * c;
+                    let wi = (ky * k + kx) * c;
+                    kernels::dw_accum_tap(
+                        &mut acc,
+                        &x.data[xi..xi + c],
+                        &l.w_q[wi..wi + c],
+                        zp,
+                        isa,
+                    );
+                }
+            }
+            for (ci, &a) in acc.iter().enumerate() {
                 let (m0, shift) = l.requant[ci];
-                let v = apply_multiplier(acc + l.bias_q[ci], m0, shift)
+                let v = apply_multiplier(a + l.bias_q[ci], m0, shift)
                     + l.out_qp.zero_point;
                 orow[ox * c + ci] = v.clamp(l.clamp.0, l.clamp.1) as i8;
             }
@@ -207,16 +251,16 @@ pub fn dense(
     let cin = x.shape[1];
     ctx.acc.clear();
     ctx.acc.resize(n * cout, 0);
-    gemm_i8_parallel(
+    gemm_dispatch(
         &x.data,
         x.qp.zero_point,
-        &l.w_q,
-        &l.w_sums,
+        l,
         n,
         cin,
         cout,
         &mut ctx.acc,
         ctx.threads,
+        ctx.isa,
     );
     let mut data = out;
     requant_store(
@@ -294,7 +338,16 @@ mod tests {
         out_qp: QParams,
         clamp: (i32, i32),
     ) -> QLayer {
-        QLayer { w_q, w_sums, bias_q, requant, out_qp, clamp, w_scales: vec![1.0] }
+        QLayer {
+            w_q,
+            w_sums,
+            bias_q,
+            requant,
+            out_qp,
+            clamp,
+            w_scales: vec![1.0],
+            packed: None,
+        }
     }
 
     #[test]
@@ -418,6 +471,65 @@ mod tests {
         let y = conv2d(&x, &l, 1, 1, 1, &mut OpCtx::default(), Vec::new());
         let d = y.dequantize()[0];
         assert!((d - 6.0).abs() < 0.05, "{d}");
+    }
+
+    #[test]
+    fn conv_packed_matches_unpacked_across_isa_and_threads() {
+        // the exported-model path (prepacked SIMD kernels) must be
+        // bit-exact with the ad-hoc unpacked path
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(21, 2 * 6 * 6 * 3, -1.0, 1.0);
+        let x = QTensor::quantize(vec![2, 6, 6, 3], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.6);
+        let w_q: Vec<i8> = crate::util::prop::f32s(22, 9 * 3 * 5, -0.6, 0.6)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 27, 5);
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 5];
+        let plain =
+            layer(w_q.clone(), sums, vec![1, -2, 3, 0, 7], req, out_qp, (-127, 127));
+        let mut packed = plain.clone();
+        packed.packed =
+            Some(crate::int8::kernels::PackedWeights::pack(&w_q, 27, 5));
+        let base =
+            conv2d(&x, &plain, 3, 1, &mut OpCtx::default(), Vec::new());
+        for isa in Isa::available() {
+            for t in [1usize, 2, 8] {
+                let mut ctx = OpCtx::with_threads(t);
+                ctx.isa = isa;
+                let y = conv2d(&x, &packed, 3, 1, &mut ctx, Vec::new());
+                assert_eq!(base.shape, y.shape, "t={t} {}", isa.name());
+                assert_eq!(base.data, y.data, "t={t} {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_isa_sweep_matches_scalar() {
+        let in_qp = qp_sym(2.0);
+        // 5 channels straddles every vector width remainder
+        let xs = crate::util::prop::f32s(25, 2 * 7 * 7 * 5, -2.0, 2.0);
+        let x = QTensor::quantize(vec![2, 7, 7, 5], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.5);
+        let w_q: Vec<i8> = crate::util::prop::f32s(26, 9 * 5, -0.5, 0.5)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 5];
+        let l = layer(w_q, vec![], vec![3, -2, 0, 1, -1], req, out_qp, (-127, 127));
+        let mut sctx = OpCtx { isa: Isa::Scalar, ..Default::default() };
+        let base = dwconv2d(&x, &l, 3, 2, &mut sctx, Vec::new());
+        for isa in Isa::available() {
+            for t in [1usize, 2, 8] {
+                let mut ctx = OpCtx::with_threads(t);
+                ctx.isa = isa;
+                let y = dwconv2d(&x, &l, 3, 2, &mut ctx, Vec::new());
+                assert_eq!(base.data, y.data, "t={t} {}", isa.name());
+            }
+        }
     }
 
     #[test]

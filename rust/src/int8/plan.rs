@@ -8,7 +8,10 @@
 //! recycle a small [`Arena`] of buffers instead of cloning tensors
 //! through a per-call `BTreeMap`. Relu/relu6 nodes whose clamp was fused
 //! into their producer compile to nothing: their value aliases the
-//! producer's slot.
+//! producer's slot. Conv/dense entries of the parameter table carry
+//! their weights **prepacked** for the SIMD microkernels
+//! (`QLayer::packed`, built alongside this plan in `build_qmodel`; see
+//! `int8::kernels` and DESIGN.md §8).
 //!
 //! The scheduler is generic over the per-node parameter payload `P` and
 //! the arena element type `T`: the int8 engine instantiates

@@ -26,8 +26,12 @@ use super::qtensor::QTensor;
 /// Engine construction options.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineOptions {
-    /// Worker count for batch sharding and kernel row sharding.
-    /// `None` falls back to `$FAT_THREADS` (or machine parallelism).
+    /// Worker count for batch sharding and kernel row sharding —
+    /// the top of the precedence chain documented in `util::threads`:
+    /// `EngineOptions.threads` > `$FAT_THREADS` (read once per process)
+    /// > machine parallelism. Shards execute on the persistent worker
+    /// pool, so any count here is a scheduling degree, not a thread
+    /// spawn count.
     pub threads: Option<usize>,
 }
 

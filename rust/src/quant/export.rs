@@ -290,11 +290,20 @@ pub fn build_qmodel(
                         )
                     })
                     .collect();
-                let w_sums = if n.op == Op::DwConv {
-                    vec![]
+                // Conv/dense weights are prepacked once here, at plan
+                // build time, into the strip/pair-interleaved layout the
+                // SIMD microkernels consume (int8::kernels; depthwise
+                // weights stay in (k,k,ch) layout — already tap-contiguous).
+                let (w_sums, packed) = if n.op == Op::DwConv {
+                    (vec![], None)
                 } else {
                     let k = w_q.len() / cout;
-                    crate::int8::gemm::col_sums(&w_q, k, cout)
+                    (
+                        crate::int8::gemm::col_sums(&w_q, k, cout),
+                        Some(crate::int8::kernels::PackedWeights::pack(
+                            &w_q, k, cout,
+                        )),
+                    )
                 };
                 param_bytes += w_q.len() + bias_q.len() * 4;
                 nodes.insert(
@@ -307,6 +316,7 @@ pub fn build_qmodel(
                         out_qp,
                         clamp: clamp_for(g, &n.id, out_qp),
                         w_scales,
+                        packed,
                     }),
                 );
             }

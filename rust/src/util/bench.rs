@@ -94,6 +94,60 @@ pub fn report_speedup(name: &str, base_secs: f64, variant_secs: f64) -> f64 {
     s
 }
 
+/// Machine-readable bench log: flat JSON records accumulated during a
+/// bench run and written as one array (e.g. `BENCH_int8.json`), so the
+/// perf trajectory can be populated and diffed PR over PR without
+/// scraping stdout.
+#[derive(Default)]
+pub struct BenchLog {
+    entries: Vec<String>,
+}
+
+impl BenchLog {
+    /// Record one measurement. `ops` is the logical operation count per
+    /// iteration (MACs for GEMM benches, images for model benches) from
+    /// which GOP/s is derived; `isa` is the kernel level the variant ran
+    /// (`"spawn"`/`"pooled"`-style tags are fine for non-kernel rows).
+    pub fn add(
+        &mut self,
+        name: &str,
+        shape: &str,
+        threads: usize,
+        isa: &str,
+        mean_secs: f64,
+        ops: usize,
+    ) {
+        let ns = mean_secs * 1e9;
+        let gops = ops as f64 / mean_secs.max(1e-12) / 1e9;
+        self.entries.push(format!(
+            "  {{\"name\": \"{name}\", \"shape\": \"{shape}\", \
+             \"threads\": {threads}, \"isa\": \"{isa}\", \
+             \"ns_per_iter\": {ns:.0}, \"gops\": {gops:.4}}}"
+        ));
+    }
+
+    /// Number of recorded entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to a JSON array string.
+    pub fn to_json(&self) -> String {
+        format!("[\n{}\n]\n", self.entries.join(",\n"))
+    }
+
+    /// Write the array to `path` and print where it went.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("BENCH log: {} entries -> {path}", self.entries.len());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +156,22 @@ mod tests {
     fn speedup_ratio() {
         assert!((report_speedup("x", 2.0, 1.0) - 2.0).abs() < 1e-9);
         assert!(report_speedup("y", 1.0, 0.0) > 1.0);
+    }
+
+    #[test]
+    fn bench_log_serializes_valid_json() {
+        let mut log = BenchLog::default();
+        assert!(log.is_empty());
+        log.add("gemm", "1024x144x64", 4, "avx2", 0.001, 9_437_184);
+        log.add("model", "batch50", 1, "pooled", 0.5, 50);
+        assert_eq!(log.len(), 2);
+        let j = crate::util::json::Json::parse(&log.to_json()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("isa").unwrap().as_str().unwrap(), "avx2");
+        assert_eq!(arr[0].get("threads").unwrap().as_f64().unwrap(), 4.0);
+        assert!(arr[0].get("gops").unwrap().as_f64().unwrap() > 9.0);
+        assert!(arr[1].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -5,6 +5,23 @@
 
 use crate::data::prng;
 
+/// GEMM shapes `(m, k, n, a_zp)` chosen to hit every blocking edge of
+/// the int8 kernels: single element, odd everything, exact `(KC, NR)`
+/// tile multiples, and remainders in m, n and k. Shared by the unpacked
+/// kernel unit tests (`int8::gemm`), the packed SIMD kernel tests
+/// (`int8::kernels`) and the ISA × thread-count proptests
+/// (`rust/tests/proptests.rs`).
+pub const SHAPES: &[(usize, usize, usize, i32)] = &[
+    (1, 1, 1, 0),
+    (3, 5, 7, -3),
+    (8, 16, 4, 12),
+    (17, 9, 33, -128),
+    (4, 128, 64, 5),   // exactly one (KC, NR) panel, one MR block
+    (5, 129, 65, -7),  // +1 remainder in every dimension
+    (2, 300, 100, 11), // multiple k panels
+    (65, 7, 130, -1),  // many row blocks, two n strips
+];
+
 /// Deterministic f32s in [lo, hi).
 pub fn f32s(seed: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
     (0..n)

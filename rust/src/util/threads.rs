@@ -1,13 +1,43 @@
-//! Worker-count knob for the int8 engine (and any future parallel stage).
+//! Worker-count knob and the persistent worker pool shared by every
+//! parallel stage of the engine.
 //!
-//! `FAT_THREADS=<n>` pins the worker count; unset or invalid values fall
-//! back to the machine's available parallelism. The engine also accepts
-//! explicit counts through the `*_with` entry points
-//! (`QModel::run_batch_with`, `run_quant_with`, `gemm_i8_parallel`) — the
-//! env knob only feeds the default paths, so tests can sweep thread
-//! counts deterministically without touching the environment.
+//! ## Worker-count precedence
+//!
+//! 1. An explicit count wins: `EngineOptions.threads` on the serving
+//!    handle, or any `*_with(threads)` entry point
+//!    (`QModel::run_batch_with`, `run_quant_with`, `gemm_i8_parallel`).
+//! 2. Otherwise `FAT_THREADS=<n>` pins the default. The env var is
+//!    parsed **once per process** ([`fat_threads`] caches it in a
+//!    `OnceLock`), so tests sweeping thread counts go through the
+//!    explicit entry points rather than mutating the environment.
+//! 3. Otherwise the machine's `available_parallelism`.
+//!
+//! ## The pool
+//!
+//! [`pool`] returns the process-wide [`WorkerPool`]: long-lived parked
+//! worker threads fed by a job queue, replacing the per-call
+//! `std::thread::scope` spawning the kernels used before PR 4. Submitting
+//! a job is a queue push + condvar notify instead of N `clone`/`spawn`
+//! syscalls, which makes parallelism profitable even for small layers.
+//!
+//! Jobs are *sharded*: [`WorkerPool::run_sharded`]`(n, f)` runs `f(0)`,
+//! …, `f(n-1)` across the workers **and the calling thread** (the caller
+//! claims shards too, so the pool can never deadlock on nested jobs:
+//! an unclaimed shard is always runnable by its submitter). The call
+//! blocks until every shard finished, so `f` may borrow from the
+//! caller's stack — the same borrow-friendliness `std::thread::scope`
+//! gave the old call sites. [`WorkerPool::run_chunks`] layers the common
+//! "disjoint `&mut` slabs of one output buffer" pattern on top, so the
+//! former `chunks_mut`+`spawn` sites port mechanically.
+//!
+//! Shards are claimed dynamically (atomic counter), so `n_shards` may
+//! exceed the worker count — extra shards multiplex onto whichever
+//! thread frees up first, and every schedule is bit-exact because shard
+//! payloads own disjoint outputs.
 
-use std::sync::OnceLock;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Hard cap: more workers than this never helps the engine's shard sizes.
 pub const MAX_THREADS: usize = 256;
@@ -28,7 +58,8 @@ pub fn default_threads() -> usize {
 }
 
 /// The engine's worker count: `$FAT_THREADS`, else available parallelism.
-/// Resolved once per process (the env var is read a single time).
+/// Resolved once per process (the env var is read a single time); see the
+/// module docs for the full precedence order.
 pub fn fat_threads() -> usize {
     static CACHE: OnceLock<usize> = OnceLock::new();
     *CACHE.get_or_init(|| {
@@ -37,9 +68,222 @@ pub fn fat_threads() -> usize {
     })
 }
 
+/// One queued sharded job. `f` is a type-erased reference into the
+/// submitting caller's stack; the `'static` is a lie upheld by
+/// [`WorkerPool::run_sharded`], which does not return (and therefore does
+/// not release the borrow) until `remaining` hits zero and the job has
+/// been unlinked from the queue.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    /// Next shard index to claim (may overshoot `n_shards`; claims
+    /// at or above it are no-ops).
+    next: AtomicUsize,
+    n_shards: usize,
+    /// Shards not yet finished; guarded by a mutex so the submitter's
+    /// condvar wait cannot miss the final decrement.
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Job {
+    /// Claim and run shards until none are left. Shared by workers and
+    /// the submitting thread.
+    fn run_claimed(&self) {
+        loop {
+            let s = self.next.fetch_add(1, Ordering::Relaxed);
+            if s >= self.n_shards {
+                return;
+            }
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| (self.f)(s)),
+            );
+            if r.is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            let mut rem = self.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work: Condvar,
+}
+
+/// Process-wide persistent worker pool (see the module docs). Workers
+/// are spawned lazily up to the machine parallelism (or an explicit
+/// `FAT_THREADS` ask, hard-capped at [`MAX_THREADS`]) and then park on
+/// the job queue's condvar between jobs.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    spawned: Mutex<usize>,
+}
+
+/// The process-wide pool. Initialised on first use; worker threads are
+/// detached and die with the process.
+pub fn pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool {
+        shared: Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+        }),
+        spawned: Mutex::new(0),
+    })
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    enum Next {
+        Wait,
+        Pop,
+        Run(Arc<Job>),
+    }
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // Drop exhausted jobs, grab the first with open shards.
+                let next = match q.front() {
+                    None => Next::Wait,
+                    Some(j)
+                        if j.next.load(Ordering::Relaxed) >= j.n_shards =>
+                    {
+                        Next::Pop
+                    }
+                    Some(j) => Next::Run(j.clone()),
+                };
+                match next {
+                    Next::Wait => q = shared.work.wait(q).unwrap(),
+                    Next::Pop => drop(q.pop_front()),
+                    Next::Run(j) => break j,
+                }
+            }
+        };
+        job.run_claimed();
+    }
+}
+
+impl WorkerPool {
+    /// Number of live worker threads (diagnostics).
+    pub fn workers(&self) -> usize {
+        *self.spawned.lock().unwrap()
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        // Workers beyond the hardware (or an explicit FAT_THREADS ask)
+        // can't add throughput — larger shard counts multiplex instead.
+        let cap = fat_threads().max(default_threads()).min(MAX_THREADS);
+        let want = want.min(cap);
+        let mut count = self.spawned.lock().unwrap();
+        while *count < want {
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("fat-pool-{count}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+            *count += 1;
+        }
+    }
+
+    /// Run `f(0..n_shards)` across the pool workers and the calling
+    /// thread; blocks until every shard finished, so `f` may borrow
+    /// caller state. Shards must touch disjoint data (the callers all
+    /// write disjoint output slabs; prefer [`WorkerPool::run_chunks`]).
+    /// Panics (after all shards drained) if any shard panicked.
+    pub fn run_sharded<F: Fn(usize) + Sync>(&self, n_shards: usize, f: F) {
+        if n_shards <= 1 {
+            if n_shards == 1 {
+                f(0);
+            }
+            return;
+        }
+        self.ensure_workers(n_shards - 1);
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the job is removed from the queue and fully drained
+        // before this function returns, so the erased borrow of `f`
+        // never outlives the real closure.
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let job = Arc::new(Job {
+            f: f_static,
+            next: AtomicUsize::new(0),
+            n_shards,
+            remaining: Mutex::new(n_shards),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(job.clone());
+        }
+        self.shared.work.notify_all();
+        // The submitter claims shards too: an unclaimed shard is always
+        // runnable right here, so nested run_sharded calls cannot
+        // deadlock even with every worker busy.
+        job.run_claimed();
+        let mut rem = job.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = job.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        // Unlink the job so no queue entry can outlive `f`'s borrow.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                drop(q.remove(pos));
+            }
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool shard panicked");
+        }
+    }
+
+    /// Split `data` into `chunk_len`-element slabs and run
+    /// `f(shard, slab)` across the pool — the safe port of the old
+    /// `chunks_mut` + `thread::scope` pattern. Blocks until done.
+    pub fn run_chunks<T: Send>(
+        &self,
+        data: &mut [T],
+        chunk_len: usize,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        let chunk_len = chunk_len.max(1);
+        let n_shards = data.len().div_ceil(chunk_len);
+        if n_shards <= 1 {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            return;
+        }
+        let total = data.len();
+        let base = data.as_mut_ptr() as usize;
+        self.run_sharded(n_shards, |i| {
+            let start = i * chunk_len;
+            let len = chunk_len.min(total - start);
+            // SAFETY: shard `i` owns exactly [start, start+len) — the
+            // ranges are disjoint across shards — and run_sharded blocks
+            // until every shard completes, so the reconstructed slab
+            // never outlives the `data` borrow.
+            let slab = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (base as *mut T).add(start),
+                    len,
+                )
+            };
+            f(i, slab);
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn parse_accepts_positive_integers() {
@@ -65,5 +309,92 @@ mod tests {
     fn defaults_are_sane() {
         assert!(default_threads() >= 1);
         assert!(fat_threads() >= 1);
+    }
+
+    #[test]
+    fn run_sharded_runs_every_shard_exactly_once() {
+        for n in [0usize, 1, 2, 7, 32] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool().run_sharded(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "n={n} shard={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_writes_disjoint_slabs() {
+        let mut data = vec![0usize; 103];
+        pool().run_chunks(&mut data, 10, |i, slab| {
+            for v in slab.iter_mut() {
+                *v = i + 1;
+            }
+        });
+        for (j, &v) in data.iter().enumerate() {
+            assert_eq!(v, j / 10 + 1, "elem {j}");
+        }
+    }
+
+    #[test]
+    fn run_chunks_handles_empty_and_single() {
+        let mut empty: Vec<u8> = Vec::new();
+        pool().run_chunks(&mut empty, 4, |_, _| panic!("no shards"));
+        let mut one = vec![1u8, 2, 3];
+        pool().run_chunks(&mut one, 8, |i, slab| {
+            assert_eq!(i, 0);
+            slab.iter_mut().for_each(|v| *v += 1);
+        });
+        assert_eq!(one, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_jobs_do_not_deadlock() {
+        let mut out = vec![0usize; 16];
+        pool().run_chunks(&mut out, 4, |i, slab| {
+            // Each outer shard submits an inner sharded job.
+            let total = AtomicUsize::new(0);
+            pool().run_sharded(3, |j| {
+                total.fetch_add(j + 1, Ordering::Relaxed);
+            });
+            let t = total.load(Ordering::Relaxed);
+            for v in slab.iter_mut() {
+                *v = 100 * (i + 1) + t;
+            }
+        });
+        for (j, &v) in out.iter().enumerate() {
+            assert_eq!(v, 100 * (j / 4 + 1) + 6, "elem {j}");
+        }
+    }
+
+    #[test]
+    fn more_shards_than_workers_still_complete() {
+        let n = MAX_THREADS + 37;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool().run_sharded(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert!(pool().workers() <= MAX_THREADS);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let mut data = vec![0usize; 40];
+                    pool().run_chunks(&mut data, 5, |i, slab| {
+                        slab.iter_mut().for_each(|v| *v = t * 1000 + i);
+                    });
+                    for (j, &v) in data.iter().enumerate() {
+                        assert_eq!(v, t * 1000 + j / 5);
+                    }
+                });
+            }
+        });
     }
 }

@@ -2,6 +2,7 @@
 //! replaces proptest on this offline box). Each case is deterministic and
 //! reproducible from its printed index.
 
+use fat::int8::kernels::{self, Isa, PackedWeights};
 use fat::int8::qtensor::{to_i8_domain, QTensor};
 use fat::int8::{gemm, im2col};
 use fat::quant::scale::{
@@ -130,6 +131,101 @@ fn prop_gemm_parallel_matches_reference_across_threads() {
                 &a, zp, &b, &sums, m, k, n, &mut out, threads,
             );
             assert_eq!(out, want, "case {case}: ({m},{k},{n}) t={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_packed_simd_gemm_matches_reference_on_blocking_edges() {
+    // The curated blocking-edge shapes × every runtime-detected ISA ×
+    // thread counts {1, 2, 8}: the packed SIMD kernels and the
+    // pool-sharded dispatch must be bit-exact with the naive oracle.
+    for &(m, k, n, zp) in prop::SHAPES {
+        let a = prop::i8s(61, m * k);
+        let b = prop::i8s(62, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let pw = PackedWeights::pack(&b, k, n);
+        let want = gemm::gemm_ref(&a, zp, &b, m, k, n);
+        for isa in Isa::available() {
+            for threads in [1usize, 2, 8] {
+                let mut out = vec![0i32; m * n];
+                kernels::gemm_packed_parallel(
+                    &a, zp, &pw, &sums, m, &mut out, threads, isa,
+                );
+                assert_eq!(
+                    out,
+                    want,
+                    "({m},{k},{n}) zp={zp} t={threads} isa={}",
+                    isa.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_packed_simd_gemm_matches_reference_random_shapes() {
+    prop::for_cases(67, 25, |case| {
+        let m = prop::usize_in(case, 0, 1, 33);
+        let k = prop::usize_in(case, 1, 1, 70);
+        let n = prop::usize_in(case, 2, 1, 80);
+        let zp = prop::usize_in(case, 3, 0, 61) as i32 - 30;
+        let a = prop::i8s(case + 500, m * k);
+        let b = prop::i8s(case + 600, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let pw = PackedWeights::pack(&b, k, n);
+        let want = gemm::gemm_ref(&a, zp, &b, m, k, n);
+        for isa in Isa::available() {
+            for threads in [1usize, 2, 8] {
+                let mut out = vec![0i32; m * n];
+                kernels::gemm_packed_parallel(
+                    &a, zp, &pw, &sums, m, &mut out, threads, isa,
+                );
+                assert_eq!(
+                    out,
+                    want,
+                    "case {case}: ({m},{k},{n}) t={threads} isa={}",
+                    isa.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pool_sharded_gemm_matches_reference_on_blocking_edges() {
+    // The unpacked kernel's pool-sharded path over the same edge shapes
+    // (it serves ad-hoc layers; 64 shards exceed the worker cap, so this
+    // also exercises shard multiplexing).
+    for &(m, k, n, zp) in prop::SHAPES {
+        let a = prop::i8s(71, m * k);
+        let b = prop::i8s(72, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let want = gemm::gemm_ref(&a, zp, &b, m, k, n);
+        for threads in [1usize, 2, 8, 64] {
+            let mut out = vec![0i32; m * n];
+            gemm::gemm_i8_parallel(
+                &a, zp, &b, &sums, m, k, n, &mut out, threads,
+            );
+            assert_eq!(out, want, "({m},{k},{n}) t={threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_dw_tap_kernel_matches_scalar() {
+    prop::for_cases(73, 40, |case| {
+        let c = prop::usize_in(case, 0, 1, 70);
+        let zp = prop::usize_in(case, 1, 0, 255) as i32 - 128;
+        let x = prop::i8s(case + 700, c);
+        let w = prop::i8s(case + 800, c);
+        let mut want = vec![-5i32; c];
+        // scalar oracle via the public entry point
+        kernels::dw_accum_tap(&mut want, &x, &w, zp, Isa::Scalar);
+        for isa in Isa::available() {
+            let mut acc = vec![-5i32; c];
+            kernels::dw_accum_tap(&mut acc, &x, &w, zp, isa);
+            assert_eq!(acc, want, "case {case}: c={c} zp={zp} {}", isa.name());
         }
     });
 }
