@@ -1,0 +1,140 @@
+//! Serving-scheduler benchmarks (DESIGN.md §9): micro-batched vs
+//! unbatched `Int8Engine` throughput and latency percentiles under
+//! concurrent closed-loop clients {1, 4, 16, 64}, on the builtin
+//! `tiny_cnn` (artifact-free — runs on a bare checkout). Every response
+//! is checked bit-exactly against the scalar/serial reference
+//! interpreter `run_quant_ref`, so the speedups carry no accuracy
+//! caveats. Measurements land in `BENCH_serve.json` (`FAT_BENCH_JSON`
+//! overrides the path); raise `FAT_BENCH_ITERS` to lengthen the runs.
+
+use std::sync::Arc;
+
+use fat::int8::serve::drive_clients;
+use fat::int8::{BatchOptions, Int8Engine, QTensor};
+use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
+use fat::util::bench::{percentiles, report_speedup, BenchLog, BenchOpts};
+
+fn synth_image(per_img: usize, client: usize) -> Vec<u8> {
+    (0..per_img)
+        .map(|i| ((i * 31 + client * 97 + 13) % 256) as u8)
+        .collect()
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    // Closed-loop requests per client, scaled by the shared iters knob.
+    let per_client = (opts.iters * 8).clamp(8, 256);
+
+    let rt = fat::runtime::Runtime::cpu().expect("cpu runtime");
+    let reg = Arc::new(fat::runtime::Registry::new(Arc::new(rt)));
+    let th = QuantSession::open(reg, fat::artifacts_dir(), "tiny_cnn")
+        .unwrap()
+        .calibrate(CalibOpts::images(16))
+        .unwrap()
+        .identity(&QuantSpec::default())
+        .unwrap();
+    let qm = th.export().unwrap();
+    let sh = qm
+        .graph
+        .nodes
+        .iter()
+        .find(|n| n.op == fat::model::Op::Input)
+        .and_then(|n| n.input_shape.clone())
+        .expect("tiny_cnn has a shaped input");
+    let per_img: usize = sh.iter().product();
+
+    let batch_opts = BatchOptions::default();
+    let unbatched =
+        Int8Engine::new(qm.clone(), fat::int8::EngineOptions::default());
+    let batched = Int8Engine::new(
+        qm.clone(),
+        fat::int8::EngineOptions::default().with_batch(batch_opts),
+    );
+    println!(
+        "serve bench: tiny_cnn, {} worker(s), max_batch={} max_wait_us={}, \
+         {per_client} requests/client",
+        unbatched.threads(),
+        batch_opts.max_batch,
+        batch_opts.max_wait_us
+    );
+
+    let clients = [1usize, 4, 16, 64];
+    let max_clients = *clients.iter().max().unwrap();
+    let images: Vec<Vec<u8>> =
+        (0..max_clients).map(|c| synth_image(per_img, c)).collect();
+    let oracle: Vec<Vec<f32>> = images
+        .iter()
+        .map(|px| {
+            let x: Vec<f32> =
+                px.iter().map(|&p| p as f32 / 255.0).collect();
+            let q = QTensor::quantize(
+                vec![1, sh[0], sh[1], sh[2]],
+                &x,
+                qm.input_qp,
+            );
+            qm.run_quant_ref(q).unwrap().dequantize()
+        })
+        .collect();
+
+    let mut log = BenchLog::default();
+    for c in clients {
+        let stats0 = batched.batcher_stats().unwrap_or((0, 0, 0));
+        let mut secs_per_req = [0.0f64; 2];
+        for (mode_i, (name, engine)) in
+            [("unbatched", &unbatched), ("batched", &batched)]
+                .into_iter()
+                .enumerate()
+        {
+            let rep = drive_clients(
+                engine,
+                c,
+                per_client,
+                |i| images[i].clone(),
+                |i| Some(oracle[i].clone()),
+            )
+            .expect("bit-exact serving");
+            let mut lat = rep.latencies_secs.clone();
+            let p = percentiles(&mut lat);
+            let rps = rep.requests as f64 / rep.wall_secs.max(1e-12);
+            println!(
+                "BENCH serve_{name}_c{c} rps={rps:.1} p50_ms={:.3} \
+                 p95_ms={:.3} p99_ms={:.3} requests={}",
+                p.p50 * 1e3,
+                p.p95 * 1e3,
+                p.p99 * 1e3,
+                rep.requests
+            );
+            log.add_latency(
+                "serve_tiny_cnn",
+                name,
+                c,
+                engine.threads(),
+                rep.requests,
+                rep.wall_secs,
+                p,
+            );
+            secs_per_req[mode_i] = rep.wall_secs / rep.requests as f64;
+        }
+        report_speedup(
+            &format!("serve_batched_vs_unbatched_c{c}"),
+            secs_per_req[0],
+            secs_per_req[1],
+        );
+        // stats delta = this client count's batched run only
+        if let Some((req, bat, rows)) = batched.batcher_stats() {
+            let (dreq, dbat, drows) =
+                (req - stats0.0, bat - stats0.1, rows - stats0.2);
+            println!(
+                "batcher c{c}: {dreq} requests -> {dbat} batches (mean \
+                 occupancy {:.2})",
+                drows as f64 / dbat.max(1) as f64
+            );
+        }
+    }
+
+    let path = std::env::var("FAT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    if let Err(e) = log.write(&path) {
+        println!("BENCH log write failed ({path}): {e}");
+    }
+}

@@ -1,0 +1,413 @@
+//! Dynamic micro-batching for the serving stack (DESIGN.md §9).
+//!
+//! Concurrent [`crate::int8::serve::Int8Engine`] requests are collected
+//! into *micro-batches* so the engine executes one well-sharded plan run
+//! instead of many contending batch-1 runs. The protocol is
+//! leader-elected assembly:
+//!
+//! * the first request of a batch becomes the **leader**: it takes a row
+//!   buffer from the batcher's arena, quantizes its input into row 0 and
+//!   publishes the open assembly;
+//! * **followers** append their quantized rows in place (no per-request
+//!   `QTensor` allocation, no concat copy) and block on the batch's
+//!   `ready` [`Notify`] cell;
+//! * the leader waits — at most [`BatchOptions::max_wait_us`] — on the
+//!   batch's `full` cell; the follower that fills row `max_batch − 1`
+//!   seals the assembly and wakes it early;
+//! * the leader executes the sealed batch through the engine's ordinary
+//!   sharded plan path (on the persistent worker pool), stores the
+//!   dequantized logits, and wakes every follower, which **demux** their
+//!   own logits rows by the row index they were assigned at join time.
+//!
+//! Bit-exactness: images are independent through every kernel of the
+//! plan (DESIGN.md §8.3), so row *i* of a micro-batch is byte-identical
+//! to running request *i* alone — any coalescing schedule returns the
+//! same bytes as the unbatched path and as `run_quant_ref`
+//! (`rust/tests/serve_stress.rs` hammers exactly this).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::threads::Notify;
+
+use super::plan::Arena;
+
+/// Micro-batching knobs of [`crate::int8::serve::EngineOptions`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOptions {
+    /// Rows per micro-batch at which assembly seals immediately.
+    /// Values below 2 disable the batcher (a 1-row batch cannot
+    /// coalesce anything).
+    pub max_batch: usize,
+    /// How long the leader waits for followers before executing a
+    /// partial batch. The deadline bounds added latency: a lone request
+    /// pays at most this much over the unbatched path.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { max_batch: 16, max_wait_us: 200 }
+    }
+}
+
+/// What executing one sealed micro-batch produced: the dequantized
+/// logits for all rows, the class count to demux by, and — when the
+/// executor only borrowed the assembled rows (the sharded path) — the
+/// row buffer handed back for the batcher's arena.
+pub struct BatchOutput {
+    pub logits: Vec<f32>,
+    pub classes: usize,
+    pub reclaimed: Option<Vec<i8>>,
+}
+
+/// One assembling/executing micro-batch. `state` guards the rows and
+/// the result; the two [`Notify`] cells carry the only cross-request
+/// wakeups (follower→leader `full`, leader→followers `ready`).
+struct MicroBatch {
+    state: Mutex<Assembly>,
+    full: Notify,
+    ready: Notify,
+}
+
+struct Assembly {
+    /// Quantized input rows, `n * per_img` i8 values, written in place
+    /// by joining requests.
+    rows: Vec<i8>,
+    /// Rows filled so far.
+    n: usize,
+    /// No further joins; set by the filling follower or by the leader's
+    /// deadline/execution path.
+    sealed: bool,
+    /// Execution result: flat logits + class count, or the error text
+    /// (`anyhow::Error` is not `Clone`, and every waiter needs a copy).
+    out: Option<std::result::Result<(Vec<f32>, usize), String>>,
+}
+
+/// The engine's micro-batch collector. One instance per
+/// [`crate::int8::serve::Int8Engine`]; requests enter through
+/// [`Batcher::submit`].
+pub struct Batcher {
+    opts: BatchOptions,
+    per_img: usize,
+    /// The currently open assembly, if any. Join order: this lock, then
+    /// the assembly's `state` lock (never the reverse), so joins and
+    /// the leader's unpublish cannot deadlock.
+    current: Mutex<Option<Arc<MicroBatch>>>,
+    /// Recycled row buffers; executed batches hand theirs back.
+    arena: Mutex<Arena<i8>>,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    rows_run: AtomicU64,
+}
+
+impl Batcher {
+    /// Collector for inputs of `per_img` i8 values per row.
+    pub fn new(per_img: usize, opts: BatchOptions) -> Self {
+        Batcher {
+            opts,
+            per_img,
+            current: Mutex::new(None),
+            arena: Mutex::new(Arena::default()),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows_run: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured knobs.
+    pub fn options(&self) -> BatchOptions {
+        self.opts
+    }
+
+    /// `(requests, batches executed, rows executed)` so far — mean
+    /// occupancy is `rows / batches`.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.rows_run.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Submit a `k`-row request (`1 ≤ k ≤ max_batch`; the serving layer
+    /// routes larger requests straight to the unbatched path). `write`
+    /// quantizes the request's rows into the assembly buffer; `exec`
+    /// runs a sealed batch (called on exactly one request's thread per
+    /// batch — the leader's). Returns this request's dequantized logits
+    /// rows, bit-exact with running the request alone.
+    pub fn submit(
+        &self,
+        k: usize,
+        write: impl FnOnce(&mut Vec<i8>),
+        exec: impl FnOnce(Vec<i8>, usize) -> Result<BatchOutput>,
+    ) -> Result<Vec<f32>> {
+        debug_assert!(k >= 1 && k <= self.opts.max_batch);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut write = Some(write);
+        let (mb, row0, leader) = self.join(k, &mut write);
+        if leader {
+            self.lead(&mb, exec);
+        } else {
+            mb.ready.wait();
+        }
+        let st = mb.state.lock().unwrap();
+        match st.out.as_ref().expect("sealed batch stored a result") {
+            Ok((logits, classes)) => {
+                let lo = row0 * classes;
+                let hi = (row0 + k) * classes;
+                Ok(logits[lo..hi].to_vec())
+            }
+            Err(msg) => Err(anyhow::anyhow!("batched inference failed: {msg}")),
+        }
+    }
+
+    /// Join the open assembly (appending `k` rows) or open a new one as
+    /// its leader. Returns `(batch, first row index, is_leader)`.
+    fn join(
+        &self,
+        k: usize,
+        write: &mut Option<impl FnOnce(&mut Vec<i8>)>,
+    ) -> (Arc<MicroBatch>, usize, bool) {
+        let mut cur = self.current.lock().unwrap();
+        if let Some(existing) = cur.clone() {
+            let mut st = existing.state.lock().unwrap();
+            if !st.sealed && st.n + k <= self.opts.max_batch {
+                let row0 = st.n;
+                (write.take().expect("row writer used once"))(&mut st.rows);
+                debug_assert_eq!(st.rows.len(), (row0 + k) * self.per_img);
+                st.n += k;
+                let filled = st.n >= self.opts.max_batch;
+                if filled {
+                    st.sealed = true;
+                }
+                drop(st);
+                if filled {
+                    *cur = None;
+                    existing.full.notify();
+                }
+                return (existing, row0, false);
+            }
+            // Sealed, or no room for k rows: detach it (sealing first if
+            // the leader hasn't yet, so it executes now) and lead a
+            // fresh assembly.
+            let newly_sealed = !st.sealed;
+            if newly_sealed {
+                st.sealed = true;
+            }
+            drop(st);
+            *cur = None;
+            if newly_sealed {
+                existing.full.notify();
+            }
+        }
+        let mut rows = self.arena.lock().unwrap().take();
+        rows.reserve(self.opts.max_batch * self.per_img);
+        (write.take().expect("row writer used once"))(&mut rows);
+        debug_assert_eq!(rows.len(), k * self.per_img);
+        let sealed = k >= self.opts.max_batch;
+        let mb = Arc::new(MicroBatch {
+            state: Mutex::new(Assembly { rows, n: k, sealed, out: None }),
+            full: Notify::new(),
+            ready: Notify::new(),
+        });
+        if !sealed {
+            *cur = Some(Arc::clone(&mb));
+        }
+        (mb, 0, true)
+    }
+
+    /// Leader duty: wait out the assembly window, seal, unpublish,
+    /// execute, store the result and wake the followers. Panics in
+    /// `exec` still wake the followers (with an error) before
+    /// propagating.
+    fn lead(
+        &self,
+        mb: &Arc<MicroBatch>,
+        exec: impl FnOnce(Vec<i8>, usize) -> Result<BatchOutput>,
+    ) {
+        let deadline =
+            Instant::now() + Duration::from_micros(self.opts.max_wait_us);
+        loop {
+            if mb.state.lock().unwrap().sealed {
+                break;
+            }
+            if !mb.full.wait_deadline(deadline) {
+                break; // window elapsed; seal below
+            }
+        }
+        {
+            let mut st = mb.state.lock().unwrap();
+            st.sealed = true; // idempotent (deadline path)
+        }
+        {
+            // Unpublish so late arrivals open a fresh assembly. A
+            // follower that raced ahead may already have replaced
+            // `current` — only clear our own batch.
+            let mut cur = self.current.lock().unwrap();
+            if cur.as_ref().is_some_and(|c| Arc::ptr_eq(c, mb)) {
+                *cur = None;
+            }
+        }
+        let (rows, n) = {
+            let mut st = mb.state.lock().unwrap();
+            (std::mem::take(&mut st.rows), st.n)
+        };
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.rows_run.fetch_add(n as u64, Ordering::Relaxed);
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || exec(rows, n),
+        ));
+        let (stored, panic) = match run {
+            Ok(Ok(out)) => {
+                if let Some(buf) = out.reclaimed {
+                    self.arena.lock().unwrap().put(buf);
+                }
+                (Ok((out.logits, out.classes)), None)
+            }
+            Ok(Err(e)) => (Err(e.to_string()), None),
+            Err(p) => (Err("batch execution panicked".to_string()), Some(p)),
+        };
+        {
+            let mut st = mb.state.lock().unwrap();
+            st.out = Some(stored);
+        }
+        mb.ready.notify();
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Identity "engine": logits = rows as f32, one class per element.
+    fn echo_exec(
+        per_img: usize,
+    ) -> impl Fn(Vec<i8>, usize) -> Result<BatchOutput> {
+        move |rows, n| {
+            assert_eq!(rows.len(), n * per_img);
+            Ok(BatchOutput {
+                logits: rows.iter().map(|&v| v as f32).collect(),
+                classes: per_img,
+                reclaimed: Some(rows),
+            })
+        }
+    }
+
+    #[test]
+    fn lone_request_executes_after_deadline() {
+        let b = Batcher::new(
+            3,
+            BatchOptions { max_batch: 8, max_wait_us: 50 },
+        );
+        let out = b
+            .submit(1, |rows| rows.extend_from_slice(&[1, 2, 3]), echo_exec(3))
+            .unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        let (req, bat, rows) = b.stats();
+        assert_eq!((req, bat, rows), (1, 1, 1));
+        // the row buffer came back to the arena
+        assert_eq!(b.arena.lock().unwrap().pooled(), 1);
+    }
+
+    #[test]
+    fn filling_request_seals_at_birth() {
+        let b = Batcher::new(
+            2,
+            BatchOptions { max_batch: 2, max_wait_us: 1_000_000 },
+        );
+        // k == max_batch: must not wait out the huge window
+        let t0 = Instant::now();
+        let out = b
+            .submit(2, |rows| rows.extend_from_slice(&[5, 6, 7, 8]), echo_exec(2))
+            .unwrap();
+        assert_eq!(out, vec![5.0, 6.0, 7.0, 8.0]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_demux() {
+        let b = Arc::new(Batcher::new(
+            2,
+            BatchOptions { max_batch: 4, max_wait_us: 20_000 },
+        ));
+        let mut outs = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for c in 0..8u8 {
+                let b = Arc::clone(&b);
+                handles.push(s.spawn(move || {
+                    let base = 2 * c as i8;
+                    b.submit(
+                        1,
+                        |rows| rows.extend_from_slice(&[base, base + 1]),
+                        echo_exec(2),
+                    )
+                    .unwrap()
+                }));
+            }
+            for h in handles {
+                outs.push(h.join().unwrap());
+            }
+        });
+        // every request got exactly its own rows back
+        for (c, out) in outs.iter().enumerate() {
+            let base = (2 * c) as f32;
+            assert_eq!(out, &vec![base, base + 1.0], "client {c}");
+        }
+        let (req, bat, rows) = b.stats();
+        assert_eq!(req, 8);
+        assert_eq!(rows, 8);
+        assert!(bat >= 2, "8 rows cannot fit one 4-row batch");
+        assert!(bat <= 8);
+    }
+
+    #[test]
+    fn exec_error_reaches_every_waiter() {
+        let b = Batcher::new(
+            1,
+            BatchOptions { max_batch: 4, max_wait_us: 50 },
+        );
+        let err = b
+            .submit(
+                1,
+                |rows| rows.push(0),
+                |_rows, _n| anyhow::bail!("boom"),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn oversized_join_seals_current_and_leads_fresh() {
+        // A 3-row request over an assembly holding 2/4 rows must not
+        // block forever: it seals the open batch and leads its own.
+        let b = Arc::new(Batcher::new(
+            1,
+            BatchOptions { max_batch: 4, max_wait_us: 50_000 },
+        ));
+        std::thread::scope(|s| {
+            let b2 = Arc::clone(&b);
+            let first = s.spawn(move || {
+                b2.submit(2, |rows| rows.extend_from_slice(&[1, 2]), echo_exec(1))
+                    .unwrap()
+            });
+            // let the 2-row leader publish its assembly
+            std::thread::sleep(Duration::from_millis(20));
+            let big = b
+                .submit(3, |rows| rows.extend_from_slice(&[7, 8, 9]), echo_exec(1))
+                .unwrap();
+            assert_eq!(big, vec![7.0, 8.0, 9.0]);
+            assert_eq!(first.join().unwrap(), vec![1.0, 2.0]);
+        });
+        let (req, bat, rows) = b.stats();
+        assert_eq!((req, rows), (2, 5));
+        assert_eq!(bat, 2, "the big request must not join the open batch");
+    }
+}

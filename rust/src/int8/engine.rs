@@ -115,6 +115,15 @@ impl ExecState {
         self.arena.put(buf);
     }
 
+    /// Borrow a recycled (empty, capacity-retaining) buffer from this
+    /// state's arena — the serving handle quantizes request pixels into
+    /// it and feeds the result back via [`QModel::run_quant_state`], so
+    /// the unbatched single-image path allocates nothing at steady
+    /// state either.
+    pub fn take_buffer(&mut self) -> Vec<i8> {
+        self.arena.take()
+    }
+
     /// Number of pooled arena buffers (diagnostics).
     pub fn pooled_buffers(&self) -> usize {
         self.arena.pooled()
@@ -191,9 +200,27 @@ impl QModel {
         rows: usize,
         states: &mut [ExecState],
     ) -> Result<QTensor> {
-        let per_img: usize = q.shape[1..].iter().product();
-        debug_assert!(rows * per_img > 0, "degenerate shard geometry");
-        let chunks = q.shape[0].div_ceil(rows.max(1));
+        self.run_rows_sharded(&q.data, &q.shape, q.qp, rows, states)
+    }
+
+    /// Row-writable sharded input path: the batch input is a borrowed,
+    /// already-quantized `(n, per_img)` i8 slab (assembled in place by
+    /// the micro-batcher, or the data of an owned [`QTensor`] via
+    /// [`QModel::run_sharded_states`]). Per-shard chunk copies come out
+    /// of each worker state's arena ([`Arena::take_filled`]), so the
+    /// steady-state sharded path performs no input allocation, and the
+    /// caller keeps ownership of the assembled rows for reuse.
+    pub(crate) fn run_rows_sharded(
+        &self,
+        rows: &[i8],
+        shape: &[usize],
+        in_qp: QParams,
+        rows_per_shard: usize,
+        states: &mut [ExecState],
+    ) -> Result<QTensor> {
+        let per_img: usize = shape[1..].iter().product();
+        debug_assert!(rows_per_shard * per_img > 0, "degenerate shard geometry");
+        let chunks = shape[0].div_ceil(rows_per_shard.max(1));
         debug_assert!(
             chunks <= states.len(),
             "fewer worker states than chunks"
@@ -202,21 +229,24 @@ impl QModel {
         // pool shards can borrow both mutably through one slab each.
         let mut cells: Vec<(Option<Result<QTensor>>, &mut ExecState)> =
             states.iter_mut().take(chunks).map(|st| (None, st)).collect();
-        let qref = &q;
         crate::util::threads::pool().run_chunks(&mut cells, 1, |i, cell| {
             let (res, st) = &mut cell[0];
-            let start = i * rows * per_img;
-            let end = (start + rows * per_img).min(qref.data.len());
-            let chunk = &qref.data[start..end];
-            let mut shape = qref.shape.clone();
-            shape[0] = chunk.len() / per_img;
-            let sub = QTensor { shape, data: chunk.to_vec(), qp: qref.qp };
+            let start = i * rows_per_shard * per_img;
+            let end = (start + rows_per_shard * per_img).min(rows.len());
+            let chunk = &rows[start..end];
+            let mut sub_shape = shape.to_vec();
+            sub_shape[0] = chunk.len() / per_img;
+            let sub = QTensor {
+                shape: sub_shape,
+                data: st.arena.take_filled(chunk),
+                qp: in_qp,
+            };
             *res = Some(self.run_quant_state(sub, st));
         });
         let mut data = Vec::new();
         let mut classes = 0usize;
         let mut total = 0usize;
-        let mut qp = q.qp;
+        let mut qp = in_qp;
         let mut first_err = None;
         for (part, st) in cells.iter_mut() {
             match part.take().expect("pool shard ran") {
@@ -330,6 +360,23 @@ impl QModel {
         state.slots[plan.output_slot]
             .take()
             .ok_or_else(|| anyhow::anyhow!("plan produced no output"))
+    }
+
+    /// Row-writable single-state path: copy the assembled, already
+    /// quantized batch rows into a state-arena buffer and run the plan.
+    /// The caller keeps ownership of `rows` (the micro-batcher recycles
+    /// its assembly buffer), and the input copy comes out of the
+    /// state's arena, so repeated calls through one state stay
+    /// allocation-free — the input take balances the output recycle.
+    pub(crate) fn run_quant_rows_state(
+        &self,
+        rows: &[i8],
+        shape: Vec<usize>,
+        in_qp: QParams,
+        state: &mut ExecState,
+    ) -> Result<QTensor> {
+        let data = state.arena.take_filled(rows);
+        self.run_quant_state(QTensor { shape, data, qp: in_qp }, state)
     }
 
     /// Reference interpreter: the pre-plan sequential `BTreeMap` walk

@@ -15,8 +15,13 @@
 //!
 //! Serving traffic should go through [`serve::Int8Engine`] — an
 //! `Arc`-clone handle with pooled per-worker execution state — rather
-//! than calling the bare [`engine::QModel`] run methods.
+//! than calling the bare [`engine::QModel`] run methods. With
+//! [`serve::EngineOptions::batch`] set, the engine coalesces concurrent
+//! requests into micro-batches ([`batcher`], DESIGN.md §9) so traffic
+//! keeps the worker pool saturated with one well-sharded plan run
+//! instead of many contending batch-1 runs.
 
+pub mod batcher;
 pub mod engine;
 pub mod gemm;
 pub mod im2col;
@@ -26,6 +31,7 @@ pub mod plan;
 pub mod qtensor;
 pub mod serve;
 
+pub use batcher::BatchOptions;
 pub use engine::{ExecState, QLayer, QModel};
 pub use kernels::{Isa, PackedWeights};
 pub use plan::ExecPlan;

@@ -54,6 +54,20 @@ impl<T> Arena<T> {
         self.free.push(buf);
     }
 
+    /// Pop a recycled buffer and fill it with a copy of `src` — the
+    /// row-writable input path of the serving stack: batch rows and
+    /// per-shard input chunks are copied into arena-owned buffers
+    /// instead of freshly allocated `Vec`s (`QModel::run_rows_sharded`,
+    /// `int8::batcher`).
+    pub fn take_filled(&mut self, src: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        let mut buf = self.take();
+        buf.extend_from_slice(src);
+        buf
+    }
+
     /// Number of pooled buffers (diagnostics).
     pub fn pooled(&self) -> usize {
         self.free.len()
@@ -349,6 +363,19 @@ mod tests {
         assert!(v2.is_empty());
         assert!(v2.capacity() >= cap.min(3));
         assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn arena_take_filled_copies_into_recycled_buffer() {
+        let mut a = Arena::default();
+        a.put(vec![9i8; 64]); // retained capacity
+        let v = a.take_filled(&[1i8, 2, 3]);
+        assert_eq!(v, vec![1, 2, 3]);
+        assert!(v.capacity() >= 64);
+        assert_eq!(a.pooled(), 0);
+        // empty pool still works (fresh allocation)
+        let w = a.take_filled(&[5i8]);
+        assert_eq!(w, vec![5]);
     }
 
     #[test]

@@ -27,17 +27,44 @@ pub fn to_i8_domain(qp: QParams) -> QParams {
     }
 }
 
+/// Quantize a float row into `dst` (appending) under **already
+/// i8-domain** params — the row-writable input path of the serving
+/// stack: micro-batch requests quantize straight into a shared,
+/// arena-owned batch row buffer instead of allocating a per-request
+/// [`QTensor`]. Bit-exact with [`QTensor::quantize`] by construction
+/// (that constructor calls this).
+pub fn quantize_f32_into(x: &[f32], qp: QParams, dst: &mut Vec<i8>) {
+    dst.reserve(x.len());
+    for &v in x {
+        dst.push(
+            ((v / qp.scale).round_ties_even() as i32 + qp.zero_point)
+                .clamp(qp.qmin, qp.qmax) as i8,
+        );
+    }
+}
+
+/// Quantize raw u8 pixels into `dst` (appending) under **already
+/// i8-domain** params, using the serving handle's `p / 255` float
+/// mapping. Bit-exact with mapping to f32 first and then calling
+/// [`quantize_f32_into`] (it performs exactly those two steps per
+/// element).
+pub fn quantize_u8_into(pixels: &[u8], qp: QParams, dst: &mut Vec<i8>) {
+    dst.reserve(pixels.len());
+    for &p in pixels {
+        let v = p as f32 / 255.0;
+        dst.push(
+            ((v / qp.scale).round_ties_even() as i32 + qp.zero_point)
+                .clamp(qp.qmin, qp.qmax) as i8,
+        );
+    }
+}
+
 impl QTensor {
     /// Quantize a float tensor under (u8/i8-domain) params.
     pub fn quantize(shape: Vec<usize>, x: &[f32], qp: QParams) -> Self {
         let qp = to_i8_domain(qp);
-        let data = x
-            .iter()
-            .map(|&v| {
-                ((v / qp.scale).round_ties_even() as i32 + qp.zero_point)
-                    .clamp(qp.qmin, qp.qmax) as i8
-            })
-            .collect();
+        let mut data = Vec::with_capacity(x.len());
+        quantize_f32_into(x, qp, &mut data);
         QTensor { shape, data, qp }
     }
 
@@ -87,6 +114,22 @@ mod tests {
             let want = a.min(2.0);
             assert!((want - b).abs() <= qp.scale, "{a} -> {b}");
         }
+    }
+
+    #[test]
+    fn row_writers_match_quantize() {
+        let qp = QParams::symmetric_unsigned(1.7);
+        let pixels: Vec<u8> = (0..=255u16).map(|p| p as u8).collect();
+        let x: Vec<f32> = pixels.iter().map(|&p| p as f32 / 255.0).collect();
+        let want = QTensor::quantize(vec![pixels.len()], &x, qp);
+        let qpi = to_i8_domain(qp);
+        let mut via_f32 = Vec::new();
+        quantize_f32_into(&x, qpi, &mut via_f32);
+        assert_eq!(via_f32, want.data);
+        let mut via_u8 = vec![7i8]; // appends after existing content
+        quantize_u8_into(&pixels, qpi, &mut via_u8);
+        assert_eq!(via_u8[0], 7);
+        assert_eq!(&via_u8[1..], &want.data[..]);
     }
 
     #[test]

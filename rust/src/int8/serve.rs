@@ -1,27 +1,35 @@
 //! Serving handle for the int8 engine — the one blessed entry point for
-//! inference traffic (DESIGN.md §6).
+//! inference traffic (DESIGN.md §6, §9).
 //!
 //! [`Int8Engine`] wraps a compiled [`QModel`] (weights + execution plan)
 //! behind a cheaply clonable `Arc` handle, so one exported model can be
 //! shared across request threads without copying parameters. Worker
-//! count is an explicit [`EngineOptions`] knob (the `$FAT_THREADS`
-//! environment default still applies when unset), and every call runs
-//! on pooled per-worker [`ExecState`]s: slot tables, activation arenas
-//! and im2col/accumulator scratch persist across calls instead of being
-//! re-allocated per batch. All entry points are bit-exact with the bare
-//! [`QModel::run_batch_with`] path for every thread count and any pool
-//! history (see `rust/tests/session_equiv.rs`).
+//! count and the micro-batching knobs are explicit [`EngineOptions`];
+//! every call runs on pooled per-worker [`ExecState`]s drawn from a
+//! sharded, lock-light state pool whose resting size is capped at the
+//! configured worker count. With [`EngineOptions::batch`] set,
+//! concurrent `infer` / `infer_batch` calls coalesce into micro-batches
+//! (`int8::batcher`): requests quantize straight into a shared,
+//! arena-owned batch row buffer — no per-request `QTensor` allocation,
+//! no concat copy — and demux their own logits rows after one sharded
+//! plan execution. All entry points, batched or not, are bit-exact with
+//! the bare [`QModel::run_batch_with`] path and with `run_quant_ref`
+//! for every thread count, batch schedule and pool history (see
+//! `rust/tests/session_equiv.rs` and `rust/tests/serve_stress.rs`).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::model::Op;
+use crate::quant::scale::QParams;
 use crate::tensor::Tensor;
 use crate::util::threads::fat_threads;
 
+use super::batcher::{BatchOptions, BatchOutput, Batcher};
 use super::engine::{shard_geometry, ExecState, QModel};
-use super::qtensor::QTensor;
+use super::qtensor::{quantize_f32_into, quantize_u8_into, to_i8_domain, QTensor};
 
 /// Engine construction options.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -33,44 +41,173 @@ pub struct EngineOptions {
     /// pool, so any count here is a scheduling degree, not a thread
     /// spawn count.
     pub threads: Option<usize>,
+    /// Dynamic micro-batching knobs (`int8::batcher`). `None` — the
+    /// default — disables the batcher entirely and preserves the
+    /// pre-batching serving behavior unchanged.
+    pub batch: Option<BatchOptions>,
 }
 
 impl EngineOptions {
     /// Pin the worker count explicitly.
     pub fn threads(threads: usize) -> Self {
-        EngineOptions { threads: Some(threads) }
+        EngineOptions { threads: Some(threads), ..Default::default() }
+    }
+
+    /// Default worker count with micro-batching at the default knobs.
+    pub fn batched() -> Self {
+        EngineOptions { batch: Some(BatchOptions::default()), ..Default::default() }
+    }
+
+    /// Builder: set the micro-batching knobs.
+    pub fn with_batch(mut self, batch: BatchOptions) -> Self {
+        self.batch = Some(batch);
+        self
+    }
+
+    /// Builder: pin the worker count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+}
+
+/// Input-node facts resolved once at [`Int8Engine::new`] instead of
+/// being re-derived from a graph scan on every `infer` call: the HWC
+/// shape, its element count, and the input quantization parameters
+/// already shifted into the i8 domain.
+struct InputMeta {
+    shape: Vec<usize>,
+    per_img: usize,
+    qp: QParams,
+}
+
+/// Sharded, lock-light pool of resting [`ExecState`]s. Checkout scans
+/// the stripes with `try_lock` (round-robin start) so concurrent
+/// requests rarely contend on one mutex; checkout also normalizes the
+/// state's kernel thread count, so a state can never carry a stale
+/// count from its previous call. Check-in enforces a per-stripe cap
+/// whose sum is exactly the engine's configured worker count — the
+/// largest number of states one call can use — so a burst of concurrent
+/// requests cannot grow the resting pool without bound: excess states
+/// are simply dropped.
+struct StatePool {
+    stripes: Vec<Mutex<Vec<ExecState>>>,
+    caps: Vec<usize>,
+    next: AtomicUsize,
+}
+
+impl StatePool {
+    fn new(threads: usize) -> Self {
+        let n = threads.clamp(1, 8);
+        // Distribute the total cap (= threads) exactly across stripes.
+        let caps: Vec<usize> =
+            (0..n).map(|i| threads / n + usize::from(i < threads % n)).collect();
+        StatePool {
+            stripes: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            caps,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    fn take(&self, threads: usize) -> ExecState {
+        let n = self.stripes.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for i in 0..n {
+            if let Ok(mut stripe) = self.stripes[(start + i) % n].try_lock() {
+                if let Some(mut st) = stripe.pop() {
+                    st.set_threads(threads);
+                    return st;
+                }
+            }
+        }
+        ExecState::with_threads(threads)
+    }
+
+    fn put(&self, st: ExecState) {
+        let n = self.stripes.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        for i in 0..n {
+            let idx = (start + i) % n;
+            if let Ok(mut stripe) = self.stripes[idx].try_lock() {
+                if stripe.len() < self.caps[idx] {
+                    stripe.push(st);
+                    return;
+                }
+                // at cap: keep scanning — a warm state is worth keeping
+                // while any stripe is under its cap
+            }
+        }
+        // Every stripe contended or full: block on the home stripe,
+        // still capped — a genuinely full pool drops the state.
+        let idx = start % n;
+        let mut stripe = self.stripes[idx].lock().unwrap();
+        if stripe.len() < self.caps[idx] {
+            stripe.push(st);
+        }
+    }
+
+    fn resting(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 }
 
 struct EngineInner {
     model: QModel,
     threads: usize,
-    /// Reusable per-worker execution states; grows up to the shard
-    /// count actually used and is then recycled call after call.
-    pool: Mutex<Vec<ExecState>>,
+    /// Input facts resolved once at construction (`None` only for a
+    /// model whose graph lacks a shaped input node; `infer` then
+    /// errors, exactly like the old per-call scan did).
+    meta: Option<InputMeta>,
+    /// Reusable per-worker execution states (sharded, capped).
+    pool: StatePool,
+    /// Micro-batch collector; present iff `EngineOptions::batch` asked
+    /// for batching and the model has usable input metadata.
+    batcher: Option<Batcher>,
 }
 
 /// A cheap-to-clone serving handle over a compiled quantized model.
 ///
-/// Cloning shares the model and the state pool (`Arc` internally), so a
-/// server can hand one engine to many request workers. Produced by
-/// [`crate::quant::session::Thresholded::serve`]; [`Int8Engine::infer`]
-/// and [`Int8Engine::infer_batch`] are the supported inference paths.
+/// Cloning shares the model, the state pool and the micro-batcher
+/// (`Arc` internally), so a server can hand one engine to many request
+/// workers. Produced by [`crate::quant::session::Thresholded::serve`];
+/// [`Int8Engine::infer`] and [`Int8Engine::infer_batch`] are the
+/// supported inference paths.
 #[derive(Clone)]
 pub struct Int8Engine {
     inner: Arc<EngineInner>,
 }
 
 impl Int8Engine {
-    /// Wrap a compiled model. `opts.threads` pins the worker count;
-    /// unset, it follows `$FAT_THREADS` / machine parallelism.
+    /// Wrap a compiled model. `opts.threads` pins the worker count
+    /// (unset, it follows `$FAT_THREADS` / machine parallelism);
+    /// `opts.batch` enables the micro-batching scheduler.
     pub fn new(model: QModel, opts: EngineOptions) -> Self {
         let threads = opts.threads.unwrap_or_else(fat_threads).max(1);
+        let meta = model
+            .graph
+            .nodes
+            .iter()
+            .find(|n| n.op == Op::Input)
+            .and_then(|n| n.input_shape.clone())
+            .filter(|sh| sh.len() == 3 && sh.iter().product::<usize>() > 0)
+            .map(|sh| InputMeta {
+                per_img: sh.iter().product(),
+                shape: sh,
+                qp: to_i8_domain(model.input_qp),
+            });
+        let batcher = match (&meta, opts.batch) {
+            (Some(m), Some(b)) if b.max_batch >= 2 => {
+                Some(Batcher::new(m.per_img, b))
+            }
+            _ => None,
+        };
         Int8Engine {
             inner: Arc::new(EngineInner {
                 model,
                 threads,
-                pool: Mutex::new(Vec::new()),
+                meta,
+                pool: StatePool::new(threads),
+                batcher,
             }),
         }
     }
@@ -92,54 +229,97 @@ impl Int8Engine {
 
     /// Execution states currently resting in the pool (diagnostics).
     pub fn pooled_states(&self) -> usize {
-        self.inner.pool.lock().unwrap().len()
+        self.inner.pool.resting()
+    }
+
+    /// Micro-batcher counters `(requests, batches, rows)` when batching
+    /// is enabled (diagnostics; mean occupancy is `rows / batches`).
+    pub fn batcher_stats(&self) -> Option<(u64, u64, u64)> {
+        self.inner.batcher.as_ref().map(|b| b.stats())
     }
 
     fn take_state(&self, threads: usize) -> ExecState {
-        let mut st =
-            self.inner.pool.lock().unwrap().pop().unwrap_or_default();
-        st.set_threads(threads);
-        st
+        self.inner.pool.take(threads)
     }
 
     fn put_state(&self, st: ExecState) {
-        self.inner.pool.lock().unwrap().push(st);
+        self.inner.pool.put(st);
     }
 
     /// Classify one raw image: `pixels` is HWC u8 data matching the
     /// model's input shape, mapped to floats in `[0, 1]` (`p / 255`).
-    /// Returns the logits row.
+    /// Returns the logits row. With batching enabled, concurrent calls
+    /// coalesce into one plan execution (bit-exact either way).
     pub fn infer(&self, pixels: &[u8]) -> Result<Vec<f32>> {
-        let sh = self
-            .inner
-            .model
-            .graph
-            .nodes
-            .iter()
-            .find(|n| n.op == Op::Input)
-            .ok_or_else(|| anyhow::anyhow!("model has no input node"))?
-            .input_shape
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("model input has no shape"))?;
-        let want: usize = sh.iter().product();
+        let meta = self.meta()?;
         anyhow::ensure!(
-            pixels.len() == want && sh.len() == 3,
-            "infer: expected {want} bytes for input shape {sh:?}, got {}",
+            pixels.len() == meta.per_img,
+            "infer: expected {} bytes for input shape {:?}, got {}",
+            meta.per_img,
+            meta.shape,
             pixels.len()
         );
-        let x: Vec<f32> = pixels.iter().map(|&p| p as f32 / 255.0).collect();
-        let t = Tensor::f32(vec![1, sh[0], sh[1], sh[2]], x);
-        Ok(self.infer_batch(&t)?.as_f32()?.to_vec())
+        let qp = meta.qp;
+        if let Some(b) = &self.inner.batcher {
+            return b.submit(
+                1,
+                |rows| quantize_u8_into(pixels, qp, rows),
+                |rows, n| self.exec_rows(rows, n),
+            );
+        }
+        // Unbatched: quantize into a state-arena row and run directly —
+        // no intermediate f32 tensor, no fresh input allocation.
+        let mut st = self.take_state(self.inner.threads);
+        let mut data = st.take_buffer();
+        quantize_u8_into(pixels, qp, &mut data);
+        let shape = vec![1, meta.shape[0], meta.shape[1], meta.shape[2]];
+        let q = QTensor { shape, data, qp };
+        match self.inner.model.run_quant_state(q, &mut st) {
+            Ok(out) => {
+                let logits = out.dequantize();
+                st.recycle(out.data);
+                self.put_state(st);
+                Ok(logits)
+            }
+            Err(e) => {
+                self.put_state(st);
+                Err(e)
+            }
+        }
     }
 
     /// Run a float NHWC batch; returns f32 logits `(n, classes)`.
-    /// Batch-shards across the configured worker count.
+    /// Batch-shards across the configured worker count; with batching
+    /// enabled, input-shaped batches up to `max_batch` rows coalesce
+    /// with concurrent traffic.
     pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        if let (Some(b), Some(meta)) =
+            (&self.inner.batcher, self.inner.meta.as_ref())
+        {
+            let opts = b.options();
+            let joins = x.shape.len() == 4
+                && x.shape[1..] == meta.shape[..]
+                && x.shape[0] >= 1
+                && x.shape[0] <= opts.max_batch;
+            if joins {
+                let n = x.shape[0];
+                let xs = x.as_f32()?;
+                let qp = meta.qp;
+                let logits = b.submit(
+                    n,
+                    |rows| quantize_f32_into(xs, qp, rows),
+                    |rows, m| self.exec_rows(rows, m),
+                )?;
+                let classes = logits.len() / n;
+                return Ok(Tensor::f32(vec![n, classes], logits));
+            }
+        }
         self.infer_batch_with(x, self.inner.threads)
     }
 
     /// [`Int8Engine::infer_batch`] with an explicit worker count (thread
-    /// sweeps); still uses the shared state pool.
+    /// sweeps); still uses the shared state pool, but always bypasses
+    /// the micro-batcher — an explicit count pins this call's schedule.
     pub fn infer_batch_with(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
         let model = &self.inner.model;
         let q = QTensor::quantize(x.shape.clone(), x.as_f32()?, model.input_qp);
@@ -176,4 +356,137 @@ impl Int8Engine {
         Ok(Tensor::f32(vec![n, c], logits.dequantize()))
     }
 
+    fn meta(&self) -> Result<&InputMeta> {
+        self.inner.meta.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("model has no shaped input node")
+        })
+    }
+
+    /// Execute one sealed micro-batch of `n` already-quantized rows
+    /// through exactly the shard geometry the unbatched path uses, on
+    /// pooled states — bit-exact with `n` separate requests because
+    /// images are independent through every kernel (DESIGN.md §8.3).
+    fn exec_rows(&self, rows: Vec<i8>, n: usize) -> Result<BatchOutput> {
+        let meta = self.meta()?;
+        let model = &self.inner.model;
+        let threads = self.inner.threads;
+        let shape = vec![n, meta.shape[0], meta.shape[1], meta.shape[2]];
+        let (shards, kernel_threads, per_shard) = shard_geometry(threads, n);
+        if shards <= 1 {
+            let mut st = self.take_state(threads);
+            let res =
+                model.run_quant_rows_state(&rows, shape, meta.qp, &mut st);
+            let out = match res {
+                Ok(out) => out,
+                Err(e) => {
+                    self.put_state(st);
+                    return Err(e);
+                }
+            };
+            let classes = out.shape[1];
+            let logits = out.dequantize();
+            st.recycle(out.data);
+            self.put_state(st);
+            return Ok(BatchOutput { logits, classes, reclaimed: Some(rows) });
+        }
+        let mut states: Vec<ExecState> =
+            (0..shards).map(|_| self.take_state(kernel_threads)).collect();
+        let result = model.run_rows_sharded(
+            &rows,
+            &shape,
+            meta.qp,
+            per_shard,
+            &mut states,
+        );
+        for st in states {
+            self.put_state(st);
+        }
+        let out = result?;
+        let classes = out.shape[1];
+        Ok(BatchOutput {
+            logits: out.dequantize(),
+            classes,
+            reclaimed: Some(rows),
+        })
+    }
+}
+
+/// What [`drive_clients`] measured: wall time for the whole run and the
+/// per-request latencies (unsorted; feed to `util::bench::percentiles`).
+pub struct DriveReport {
+    pub wall_secs: f64,
+    pub latencies_secs: Vec<f64>,
+    pub requests: usize,
+}
+
+/// Closed-loop synthetic client driver shared by the `serve-bench` CLI
+/// subcommand and `benches/bench_serve.rs`: spawns `clients` OS
+/// threads, each issuing `per_client` single-image
+/// [`Int8Engine::infer`] calls with its own deterministic image
+/// (`image(client)`), timing every request. When `expected(client)`
+/// returns a logits row, every response is checked against it
+/// **bit-exactly** — the batched scheduler must coalesce without
+/// changing a single byte.
+pub fn drive_clients<I, E>(
+    engine: &Int8Engine,
+    clients: usize,
+    per_client: usize,
+    image: I,
+    expected: E,
+) -> Result<DriveReport>
+where
+    I: Fn(usize) -> Vec<u8> + Sync,
+    E: Fn(usize) -> Option<Vec<f32>> + Sync,
+{
+    let image = &image;
+    let expected = &expected;
+    let t0 = std::time::Instant::now();
+    let mut results: Vec<Result<Vec<f64>>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let eng = engine.clone();
+            handles.push(s.spawn(move || -> Result<Vec<f64>> {
+                let px = image(c);
+                let want = expected(c);
+                let mut lats = Vec::with_capacity(per_client);
+                for r in 0..per_client {
+                    let t = std::time::Instant::now();
+                    let got = eng.infer(&px)?;
+                    lats.push(t.elapsed().as_secs_f64());
+                    if let Some(w) = &want {
+                        anyhow::ensure!(
+                            w.len() == got.len(),
+                            "client {c} request {r}: {} logits, want {}",
+                            got.len(),
+                            w.len()
+                        );
+                        for (i, (a, b)) in
+                            w.iter().zip(got.iter()).enumerate()
+                        {
+                            anyhow::ensure!(
+                                a.to_bits() == b.to_bits(),
+                                "client {c} request {r} logit {i}: \
+                                 {b} != expected {a} (not bit-exact)"
+                            );
+                        }
+                    }
+                }
+                Ok(lats)
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("client thread panicked"));
+        }
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let mut latencies_secs = Vec::with_capacity(clients * per_client);
+    for r in results {
+        latencies_secs.extend(r?);
+    }
+    Ok(DriveReport {
+        wall_secs,
+        requests: clients * per_client,
+        latencies_secs,
+    })
 }

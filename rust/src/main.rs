@@ -15,6 +15,9 @@
 //!                [--calibrator max|p9999|kl] [--val N]
 //!   fat eval-int8 --model mnas_mini_10 --mode sym_vector [--val N]
 //!                 [--threads N]
+//!   fat serve-bench [--model tiny_cnn] [--clients 1,4,16,64]
+//!                 [--requests N] [--max-batch N] [--max-wait-us N]
+//!                 [--threads N] [--json PATH]
 
 use std::sync::Arc;
 
@@ -39,6 +42,11 @@ Commands (default: pipeline):
     --model M --mode MODE --calib N --val N [--dws] [--calibrator C]
   eval-int8                    int8 engine vs fake-quant agreement
     --model M --mode MODE [--val N] [--threads N]
+  serve-bench                  concurrent-client serving throughput:
+    micro-batched vs unbatched engine, p50/p95/p99 latency, bit-exact
+    check vs the reference interpreter, BENCH_serve.json log
+    [--model M] [--clients 1,4,16,64] [--requests N] [--max-batch N]
+    [--max-wait-us N] [--threads N] [--json PATH]
 
 Modes: sym_scalar | sym_vector | asym_scalar | asym_vector
 Calibrators: max (default) | p99 | p999 | p9999 | kl
@@ -188,10 +196,175 @@ fn main() -> Result<()> {
                 val as f64 / dt.as_secs_f64()
             );
         }
+        "serve-bench" => {
+            let model = args.get_or("model", "tiny_cnn");
+            let clients: Vec<usize> = args
+                .get_or("clients", "1,4,16,64")
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .filter(|&c| c >= 1)
+                .collect();
+            anyhow::ensure!(
+                !clients.is_empty(),
+                "serve-bench: --clients must list positive counts"
+            );
+            let requests = args.usize_or("requests", 256);
+            let max_batch = args.usize_or("max-batch", 16).max(2);
+            let max_wait_us = args.usize_or("max-wait-us", 200) as u64;
+            let threads = match args.get("threads") {
+                Some(t) => Some(t.parse()?),
+                None => None,
+            };
+            serve_bench(
+                &reg, &artifacts, model, &clients, requests, max_batch,
+                max_wait_us, threads, args.get("json"),
+            )?;
+        }
         other => {
             eprintln!("unknown command {other}\n{USAGE}");
             std::process::exit(2);
         }
+    }
+    Ok(())
+}
+
+/// Deterministic synthetic client image: every client hammers its own
+/// fixed pixels, so each response has one precomputable oracle row.
+fn synth_image(per_img: usize, client: usize) -> Vec<u8> {
+    (0..per_img)
+        .map(|i| ((i * 31 + client * 97 + 13) % 256) as u8)
+        .collect()
+}
+
+/// Drive batched-vs-unbatched serving with N concurrent closed-loop
+/// clients; print throughput + latency percentiles, verify every
+/// response bit-exactly against `run_quant_ref`, and write the
+/// machine-readable `BENCH_serve.json`.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench(
+    reg: &Arc<Registry>,
+    artifacts: &std::path::Path,
+    model: &str,
+    clients: &[usize],
+    requests: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    threads: Option<usize>,
+    json: Option<&str>,
+) -> Result<()> {
+    use fat::int8::serve::drive_clients;
+    use fat::int8::{BatchOptions, Int8Engine, QTensor};
+    use fat::util::bench::{percentiles, report_speedup, BenchLog};
+
+    let th = QuantSession::open(reg.clone(), artifacts, model)?
+        .calibrate(CalibOpts::images(16))?
+        .identity(&QuantSpec::default())?;
+    let qm = th.export()?;
+    let sh = qm
+        .graph
+        .nodes
+        .iter()
+        .find(|n| n.op == fat::model::Op::Input)
+        .and_then(|n| n.input_shape.clone())
+        .ok_or_else(|| anyhow::anyhow!("{model}: no shaped input node"))?;
+    let per_img: usize = sh.iter().product();
+
+    let base = match threads {
+        Some(t) => EngineOptions::threads(t),
+        None => EngineOptions::default(),
+    };
+    let unbatched = Int8Engine::new(qm.clone(), base);
+    let batched = Int8Engine::new(
+        qm.clone(),
+        base.with_batch(BatchOptions { max_batch, max_wait_us }),
+    );
+    println!(
+        "serve-bench: {model} [{} worker(s)] micro-batch \
+         max_batch={max_batch} max_wait_us={max_wait_us}",
+        unbatched.threads()
+    );
+
+    // Per-client deterministic images and their oracle logits from the
+    // scalar/serial reference interpreter (the engine's bit-exactness
+    // anchor).
+    let max_clients = clients.iter().copied().max().unwrap_or(1);
+    let images: Vec<Vec<u8>> =
+        (0..max_clients).map(|c| synth_image(per_img, c)).collect();
+    let mut oracle: Vec<Vec<f32>> = Vec::with_capacity(max_clients);
+    for px in &images {
+        let x: Vec<f32> = px.iter().map(|&p| p as f32 / 255.0).collect();
+        let q = QTensor::quantize(
+            vec![1, sh[0], sh[1], sh[2]],
+            &x,
+            qm.input_qp,
+        );
+        oracle.push(qm.run_quant_ref(q)?.dequantize());
+    }
+
+    let mut log = BenchLog::default();
+    for &c in clients {
+        let per_client = (requests / c).max(1);
+        let stats0 = batched.batcher_stats().unwrap_or((0, 0, 0));
+        let mut secs_per_req = [0.0f64; 2];
+        for (mode_i, (name, engine)) in
+            [("unbatched", &unbatched), ("batched", &batched)]
+                .into_iter()
+                .enumerate()
+        {
+            let rep = drive_clients(
+                engine,
+                c,
+                per_client,
+                |i| images[i].clone(),
+                |i| Some(oracle[i].clone()),
+            )?;
+            let mut lat = rep.latencies_secs.clone();
+            let p = percentiles(&mut lat);
+            let rps = rep.requests as f64 / rep.wall_secs.max(1e-12);
+            println!(
+                "BENCH serve_{name}_c{c} rps={rps:.1} p50_ms={:.3} \
+                 p95_ms={:.3} p99_ms={:.3} requests={}",
+                p.p50 * 1e3,
+                p.p95 * 1e3,
+                p.p99 * 1e3,
+                rep.requests
+            );
+            log.add_latency(
+                "serve",
+                name,
+                c,
+                engine.threads(),
+                rep.requests,
+                rep.wall_secs,
+                p,
+            );
+            secs_per_req[mode_i] = rep.wall_secs / rep.requests as f64;
+        }
+        report_speedup(
+            &format!("serve_batched_vs_unbatched_c{c}"),
+            secs_per_req[0],
+            secs_per_req[1],
+        );
+        // Per-client-count occupancy (stats delta over this config's
+        // batched run only) — the number the EXPERIMENTS.md PR-5 table
+        // records per row.
+        if let Some((req, bat, rows)) = batched.batcher_stats() {
+            let (dreq, dbat, drows) =
+                (req - stats0.0, bat - stats0.1, rows - stats0.2);
+            println!(
+                "batcher c{c}: {dreq} requests -> {dbat} batches ({drows} \
+                 rows, mean occupancy {:.2})",
+                drows as f64 / dbat.max(1) as f64
+            );
+        }
+    }
+    println!("bit-exact: every response matched run_quant_ref");
+    let path = json
+        .map(str::to_string)
+        .or_else(|| std::env::var("FAT_BENCH_JSON").ok())
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+    if let Err(e) = log.write(&path) {
+        println!("BENCH log write failed ({path}): {e}");
     }
     Ok(())
 }

@@ -13,6 +13,7 @@
 //!     .finetune(&spec, &opts, progress)?           // stage 2: Thresholded
 //!     // or .identity(&spec)?                      //   (α = 1, no fine-tune)
 //!     .serve(EngineOptions::default())?            // stage 3: Int8Engine
+//!     // or .serve_batched(16, 200)?               //   micro-batching scheduler (§9)
 //! ```
 //!
 //! [`QuantSpec`] gathers every quantization knob (threshold symmetry,
@@ -35,6 +36,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::finetune::FinetuneOpts;
+use crate::int8::batcher::BatchOptions;
 use crate::int8::serve::{EngineOptions, Int8Engine};
 use crate::int8::QModel;
 use crate::model::store::SitesJson;
@@ -782,8 +784,26 @@ impl Thresholded {
 
     /// Stage 3 transition straight to a serving handle: export the
     /// integer-only model and wrap it in an [`Int8Engine`].
+    /// `opts.batch` turns on the dynamic micro-batching scheduler
+    /// (DESIGN.md §9); the default options keep it off and preserve the
+    /// pre-batching serving behavior.
     pub fn serve(&self, opts: EngineOptions) -> Result<Int8Engine> {
         Ok(Int8Engine::new(self.export()?, opts))
+    }
+
+    /// [`Thresholded::serve`] with micro-batching on: concurrent
+    /// `infer` / `infer_batch` calls coalesce into micro-batches of up
+    /// to `max_batch` rows, assembled for at most `max_wait_us`
+    /// microseconds — bit-exact with the unbatched path.
+    pub fn serve_batched(
+        &self,
+        max_batch: usize,
+        max_wait_us: u64,
+    ) -> Result<Int8Engine> {
+        self.serve(
+            EngineOptions::default()
+                .with_batch(BatchOptions { max_batch, max_wait_us }),
+        )
     }
 }
 

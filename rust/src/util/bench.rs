@@ -86,6 +86,30 @@ pub fn bench_throughput(
     mean
 }
 
+/// Latency percentiles in seconds (nearest-rank), as aggregated by
+/// [`percentiles`] for the serving benches.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Nearest-rank percentile aggregation over per-request latency samples
+/// (sorts `samples` in place; empty input yields zeros). Used by
+/// `benches/bench_serve.rs` and the `serve-bench` CLI subcommand.
+pub fn percentiles(samples: &mut [f64]) -> Percentiles {
+    if samples.is_empty() {
+        return Percentiles::default();
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let pick = |p: f64| {
+        let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+        samples[rank.clamp(1, samples.len()) - 1]
+    };
+    Percentiles { p50: pick(50.0), p95: pick(95.0), p99: pick(99.0) }
+}
+
 /// Print a stable `speedup=` line relating a baseline to a variant
 /// (used by the thread-scaling sweeps in `bench_int8`).
 pub fn report_speedup(name: &str, base_secs: f64, variant_secs: f64) -> f64 {
@@ -123,6 +147,33 @@ impl BenchLog {
             "  {{\"name\": \"{name}\", \"shape\": \"{shape}\", \
              \"threads\": {threads}, \"isa\": \"{isa}\", \
              \"ns_per_iter\": {ns:.0}, \"gops\": {gops:.4}}}"
+        ));
+    }
+
+    /// Record one serving measurement: closed-loop client count, total
+    /// requests, wall time and per-request latency [`Percentiles`]
+    /// (seconds in, milliseconds in the log). `mode` tags the serving
+    /// path (`"batched"` / `"unbatched"`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_latency(
+        &mut self,
+        name: &str,
+        mode: &str,
+        clients: usize,
+        threads: usize,
+        requests: usize,
+        wall_secs: f64,
+        lat: Percentiles,
+    ) {
+        let rps = requests as f64 / wall_secs.max(1e-12);
+        self.entries.push(format!(
+            "  {{\"name\": \"{name}\", \"mode\": \"{mode}\", \
+             \"clients\": {clients}, \"threads\": {threads}, \
+             \"requests\": {requests}, \"rps\": {rps:.1}, \
+             \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+            lat.p50 * 1e3,
+            lat.p95 * 1e3,
+            lat.p99 * 1e3
         ));
     }
 
@@ -172,6 +223,45 @@ mod tests {
         assert_eq!(arr[0].get("threads").unwrap().as_f64().unwrap(), 4.0);
         assert!(arr[0].get("gops").unwrap().as_f64().unwrap() > 9.0);
         assert!(arr[1].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut empty: Vec<f64> = vec![];
+        assert_eq!(percentiles(&mut empty), Percentiles::default());
+        let mut one = vec![4.0];
+        let p = percentiles(&mut one);
+        assert_eq!((p.p50, p.p95, p.p99), (4.0, 4.0, 4.0));
+        // 1..=100 reversed: nearest-rank pN is exactly N
+        let mut v: Vec<f64> = (1..=100).rev().map(|i| i as f64).collect();
+        let p = percentiles(&mut v);
+        assert_eq!((p.p50, p.p95, p.p99), (50.0, 95.0, 99.0));
+        // sorted in place
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[99], 100.0);
+    }
+
+    #[test]
+    fn latency_rows_serialize_valid_json() {
+        let mut log = BenchLog::default();
+        log.add_latency(
+            "serve_tiny_cnn",
+            "batched",
+            16,
+            8,
+            256,
+            0.5,
+            Percentiles { p50: 0.001, p95: 0.002, p99: 0.004 },
+        );
+        let j = crate::util::json::Json::parse(&log.to_json()).unwrap();
+        let row = &j.as_arr().unwrap()[0];
+        assert_eq!(row.get("mode").unwrap().as_str().unwrap(), "batched");
+        assert_eq!(row.get("clients").unwrap().as_f64().unwrap(), 16.0);
+        assert_eq!(row.get("rps").unwrap().as_f64().unwrap(), 512.0);
+        assert!(
+            (row.get("p99_ms").unwrap().as_f64().unwrap() - 4.0).abs()
+                < 1e-9
+        );
     }
 
     #[test]

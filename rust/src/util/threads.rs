@@ -38,6 +38,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Hard cap: more workers than this never helps the engine's shard sizes.
 pub const MAX_THREADS: usize = 256;
@@ -107,6 +108,65 @@ impl Job {
                 self.done.notify_all();
             }
         }
+    }
+}
+
+/// One-shot blocking wait/notify cell — the request-level counterpart of
+/// the pool's sharded jobs, used by the micro-batching serving scheduler
+/// (`crate::int8::batcher`): followers block on the batch's `ready` cell
+/// while the leader assembles and executes the batch on the pool, and
+/// the leader blocks (with a deadline) on the `full` cell until a
+/// follower fills the last row.
+///
+/// The notified flag is sticky: a `notify` that races ahead of the
+/// `wait` is never lost, and later waiters return immediately. There is
+/// no reset — one cell serves one event.
+#[derive(Default)]
+pub struct Notify {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Notify {
+    /// Fresh, un-notified cell.
+    pub fn new() -> Self {
+        Notify::default()
+    }
+
+    /// Mark the event as happened and wake every waiter (idempotent).
+    pub fn notify(&self) {
+        let mut f = self.flag.lock().unwrap();
+        *f = true;
+        drop(f);
+        self.cv.notify_all();
+    }
+
+    /// Whether the event already happened.
+    pub fn is_notified(&self) -> bool {
+        *self.flag.lock().unwrap()
+    }
+
+    /// Block until [`Notify::notify`] was called.
+    pub fn wait(&self) {
+        let mut f = self.flag.lock().unwrap();
+        while !*f {
+            f = self.cv.wait(f).unwrap();
+        }
+    }
+
+    /// Block until notified or `deadline` passes; `true` iff notified.
+    pub fn wait_deadline(&self, deadline: Instant) -> bool {
+        let mut f = self.flag.lock().unwrap();
+        while !*f {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _timeout) =
+                self.cv.wait_timeout(f, deadline - now).unwrap();
+            f = g;
+        }
+        true
     }
 }
 
@@ -379,6 +439,40 @@ mod tests {
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         assert!(pool().workers() <= MAX_THREADS);
+    }
+
+    #[test]
+    fn notify_is_sticky_and_wakes_waiters() {
+        let n = Arc::new(Notify::new());
+        assert!(!n.is_notified());
+        // notify-before-wait is not lost
+        n.notify();
+        n.wait();
+        assert!(n.is_notified());
+        // already-notified deadline wait returns immediately
+        assert!(n.wait_deadline(Instant::now()));
+
+        // wait-before-notify across threads
+        let m = Arc::new(Notify::new());
+        let m2 = Arc::clone(&m);
+        let h = std::thread::spawn(move || {
+            m2.wait();
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.notify();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn notify_deadline_times_out_without_notify() {
+        let n = Notify::new();
+        let t0 = Instant::now();
+        let hit = n.wait_deadline(
+            Instant::now() + std::time::Duration::from_millis(10),
+        );
+        assert!(!hit);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Concurrent serving stress (DESIGN.md §9): {2, 8} OS-thread clients
+//! hammer one cloned [`Int8Engine`] with interleaved `infer` and
+//! `infer_batch` calls, across micro-batching on/off and worker counts
+//! {1, 8}, and every response must be **bit-exact** with the
+//! scalar/serial reference interpreter `run_quant_ref` — coalescing
+//! requests into micro-batches may change scheduling, never bytes.
+//! (CI additionally re-runs this whole file under `FAT_THREADS=1` and
+//! `FAT_THREADS=8`; the env knob is process-wide, so the in-process
+//! sweep here pins counts through `EngineOptions::threads` instead.)
+
+use std::collections::BTreeMap;
+
+use fat::int8::batcher::BatchOptions;
+use fat::int8::serve::{EngineOptions, Int8Engine};
+use fat::int8::{QModel, QTensor};
+use fat::model::store::{Site, SitesJson};
+use fat::model::{GraphDef, Op};
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::tensor::Tensor;
+use fat::util::prop;
+
+/// Residual branch + DWS chain + dense head (the `session_equiv.rs`
+/// geometry): odd channels, odd input size, stride-2 dwconv, both relu
+/// flavours — small enough that a debug-build stress run stays fast.
+const GRAPH: &str = r#"{
+  "name": "stress", "num_classes": 4,
+  "nodes": [
+    {"id": "input", "op": "input", "inputs": [], "shape": [9, 9, 3]},
+    {"id": "c0", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1, "cin": 3, "cout": 5, "bias": true},
+    {"id": "r0", "op": "relu6", "inputs": ["c0"]},
+    {"id": "dw", "op": "dwconv", "inputs": ["r0"], "k": 3, "stride": 2, "ch": 5, "bias": true},
+    {"id": "r1", "op": "relu", "inputs": ["dw"]},
+    {"id": "c1", "op": "conv", "inputs": ["r1"], "k": 1, "stride": 1, "cin": 5, "cout": 7, "bias": true},
+    {"id": "c2", "op": "conv", "inputs": ["r1"], "k": 1, "stride": 1, "cin": 5, "cout": 7, "bias": true},
+    {"id": "ad", "op": "add", "inputs": ["c1", "c2"]},
+    {"id": "g", "op": "gap", "inputs": ["ad"]},
+    {"id": "d", "op": "dense", "inputs": ["g"], "cin": 7, "cout": 4, "bias": true}
+  ]}"#;
+
+fn model() -> QModel {
+    let g = GraphDef::from_json(GRAPH).unwrap();
+    let mut w = BTreeMap::new();
+    let mut seed = 300u64;
+    for n in g.conv_like() {
+        let (wlen, cout) = match n.op {
+            Op::Conv => (n.k * n.k * n.cin * n.cout, n.cout),
+            Op::DwConv => (n.k * n.k * n.ch, n.ch),
+            Op::Dense => (n.cin * n.cout, n.cout),
+            _ => unreachable!(),
+        };
+        w.insert(
+            format!("{}.w", n.id),
+            Tensor::f32(vec![wlen], prop::f32s(seed, wlen, -0.6, 0.6)),
+        );
+        w.insert(
+            format!("{}.b", n.id),
+            Tensor::f32(vec![cout], prop::f32s(seed + 1, cout, -0.2, 0.2)),
+        );
+        seed += 2;
+    }
+    let s = SitesJson {
+        sites: g
+            .sites()
+            .into_iter()
+            .map(|(id, unsigned)| Site { id, unsigned })
+            .collect(),
+        channel_stats: vec![],
+        weight_order: g.folded_weight_order(),
+        val_acc_fp_pretrain: -1.0,
+    };
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.5 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 3.0 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
+    build_qmodel(&g, &w, &s, &st, QuantMode::SymVector, &tr).unwrap()
+}
+
+const H: usize = 9;
+const W: usize = 9;
+const C: usize = 3;
+const PER_IMG: usize = H * W * C;
+/// Distinct synthetic images the clients draw from.
+const IMAGES: usize = 6;
+
+fn pixels(img: usize) -> Vec<u8> {
+    (0..PER_IMG)
+        .map(|i| ((i * 29 + img * 83 + 7) % 256) as u8)
+        .collect()
+}
+
+/// Oracle logits row for image `img`, from the reference interpreter.
+fn oracle_rows(qm: &QModel) -> Vec<Vec<f32>> {
+    (0..IMAGES)
+        .map(|img| {
+            let x: Vec<f32> =
+                pixels(img).iter().map(|&p| p as f32 / 255.0).collect();
+            let q = QTensor::quantize(vec![1, H, W, C], &x, qm.input_qp);
+            qm.run_quant_ref(q).unwrap().dequantize()
+        })
+        .collect()
+}
+
+fn assert_row_eq(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{tag} logit {i}: {} != {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// The tentpole assertion: interleaved `infer` / `infer_batch` traffic
+/// from concurrent clients stays bit-exact with `run_quant_ref`, for
+/// batching on/off × engine workers {1, 8} × clients {2, 8}.
+fn hammer(engine: &Int8Engine, oracle: &[Vec<f32>], clients: usize, tag: &str) {
+    let reqs_per_client = 6usize;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let eng = engine.clone();
+            let tag = format!("{tag} client {c}");
+            s.spawn(move || {
+                for r in 0..reqs_per_client {
+                    if (c + r) % 2 == 0 {
+                        // single raw-image request
+                        let img = (c * 5 + r) % IMAGES;
+                        let got = eng.infer(&pixels(img)).unwrap();
+                        assert_row_eq(
+                            &got,
+                            &oracle[img],
+                            &format!("{tag} req {r} infer[{img}]"),
+                        );
+                    } else {
+                        // small float batch: rows must match per-image
+                        // oracles (images are independent)
+                        let n = 2 + (c + r) % 2; // 2 or 3 images
+                        let imgs: Vec<usize> =
+                            (0..n).map(|j| (c + r + 3 * j) % IMAGES).collect();
+                        let mut x = Vec::with_capacity(n * PER_IMG);
+                        for &img in &imgs {
+                            x.extend(
+                                pixels(img)
+                                    .iter()
+                                    .map(|&p| p as f32 / 255.0),
+                            );
+                        }
+                        let t = Tensor::f32(vec![n, H, W, C], x);
+                        let out = eng.infer_batch(&t).unwrap();
+                        assert_eq!(out.shape[0], n, "{tag} req {r}");
+                        let classes = out.shape[1];
+                        let of = out.as_f32().unwrap();
+                        for (j, &img) in imgs.iter().enumerate() {
+                            assert_row_eq(
+                                &of[j * classes..(j + 1) * classes],
+                                &oracle[img],
+                                &format!("{tag} req {r} batch row {j}[{img}]"),
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn concurrent_traffic_bit_exact_batching_off_and_on() {
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    for threads in [1usize, 8] {
+        for batch in [None, Some(BatchOptions::default())] {
+            let opts = EngineOptions {
+                threads: Some(threads),
+                batch,
+            };
+            let engine = Int8Engine::new(qm.clone(), opts);
+            for clients in [2usize, 8] {
+                hammer(
+                    &engine,
+                    &oracle,
+                    clients,
+                    &format!(
+                        "t={threads} batch={} clients={clients}",
+                        batch.is_some()
+                    ),
+                );
+            }
+            if batch.is_some() {
+                let (req, bat, rows) =
+                    engine.batcher_stats().expect("batcher enabled");
+                assert!(req > 0 && bat > 0 && rows >= bat);
+                assert!(
+                    bat <= req,
+                    "batches ({bat}) cannot exceed requests ({req})"
+                );
+            } else {
+                assert!(engine.batcher_stats().is_none());
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_singleton_pays_only_the_deadline() {
+    // A lone request on an otherwise idle batched engine must execute
+    // after max_wait and stay bit-exact.
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let engine = Int8Engine::new(
+        qm,
+        EngineOptions::threads(2).with_batch(BatchOptions {
+            max_batch: 8,
+            max_wait_us: 100,
+        }),
+    );
+    for img in 0..IMAGES {
+        let got = engine.infer(&pixels(img)).unwrap();
+        assert_row_eq(&got, &oracle[img], &format!("singleton img {img}"));
+    }
+    let (req, bat, rows) = engine.batcher_stats().unwrap();
+    assert_eq!(req, IMAGES as u64);
+    assert_eq!(rows, IMAGES as u64);
+    assert_eq!(bat, IMAGES as u64, "idle singletons each run alone");
+}
+
+#[test]
+fn default_options_leave_batching_off() {
+    let qm = model();
+    let engine = Int8Engine::new(qm, EngineOptions::default());
+    assert!(engine.batcher_stats().is_none());
+    // oversized and non-input-shaped batches run the direct path even
+    // on a batched engine (and stay correct)
+    let qm2 = model();
+    let oracle = oracle_rows(&qm2);
+    let batched = Int8Engine::new(
+        qm2,
+        EngineOptions::threads(2).with_batch(BatchOptions {
+            max_batch: 2,
+            max_wait_us: 100,
+        }),
+    );
+    let n = 5; // > max_batch: bypasses the batcher
+    let imgs: Vec<usize> = (0..n).map(|j| j % IMAGES).collect();
+    let mut x = Vec::with_capacity(n * PER_IMG);
+    for &img in &imgs {
+        x.extend(pixels(img).iter().map(|&p| p as f32 / 255.0));
+    }
+    let out = batched.infer_batch(&Tensor::f32(vec![n, H, W, C], x)).unwrap();
+    let classes = out.shape[1];
+    let of = out.as_f32().unwrap();
+    for (j, &img) in imgs.iter().enumerate() {
+        assert_row_eq(
+            &of[j * classes..(j + 1) * classes],
+            &oracle[img],
+            &format!("oversized batch row {j}"),
+        );
+    }
+    let (req, bat, _rows) = batched.batcher_stats().unwrap();
+    assert_eq!((req, bat), (0, 0), "oversized batch must bypass the batcher");
+}
