@@ -1,16 +1,21 @@
-//! Serving-scheduler benchmarks (DESIGN.md §9): micro-batched vs
+//! Serving-scheduler benchmarks (DESIGN.md §9–§10): micro-batched vs
 //! unbatched `Int8Engine` throughput and latency percentiles under
 //! concurrent closed-loop clients {1, 4, 16, 64}, on the builtin
-//! `tiny_cnn` (artifact-free — runs on a bare checkout). Every response
-//! is checked bit-exactly against the scalar/serial reference
+//! `tiny_cnn` (artifact-free — runs on a bare checkout), in two
+//! transports: **thread** (in-process engine clones) and **socket**
+//! (HTTP over a live loopback server), so `BENCH_serve.json` carries
+//! the cost of the network hop next to the scheduler numbers. Every
+//! response is checked bit-exactly against the scalar/serial reference
 //! interpreter `run_quant_ref`, so the speedups carry no accuracy
 //! caveats. Measurements land in `BENCH_serve.json` (`FAT_BENCH_JSON`
 //! overrides the path); raise `FAT_BENCH_ITERS` to lengthen the runs.
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use fat::int8::serve::drive_clients;
+use fat::int8::serve::{drive_clients, drive_with};
 use fat::int8::{BatchOptions, Int8Engine, QTensor};
+use fat::net::{HttpClient, ModelRegistry, Server, ServerOptions};
 use fat::quant::session::{CalibOpts, QuantSession, QuantSpec};
 use fat::util::bench::{percentiles, report_speedup, BenchLog, BenchOpts};
 
@@ -76,10 +81,26 @@ fn main() {
         })
         .collect();
 
+    // One loopback server carries the socket columns: both engines,
+    // routed by model name, behind generous admission limits so the
+    // bench measures the hop, not load shedding.
+    let registry = ModelRegistry::new();
+    registry.insert("unbatched", unbatched.clone());
+    registry.insert("batched", batched.clone());
+    let server_opts = ServerOptions {
+        max_conns: 2 * max_clients,
+        max_inflight: 2 * max_clients,
+        ..ServerOptions::default()
+    };
+    let server = Server::bind("127.0.0.1:0", registry, server_opts)
+        .expect("loopback bind");
+    let addr = server.local_addr();
+
     let mut log = BenchLog::default();
     for c in clients {
         let stats0 = batched.batcher_stats().unwrap_or((0, 0, 0));
         let mut secs_per_req = [0.0f64; 2];
+        let mut socket_secs = [0.0f64; 2];
         for (mode_i, (name, engine)) in
             [("unbatched", &unbatched), ("batched", &batched)]
                 .into_iter()
@@ -115,12 +136,50 @@ fn main() {
             );
             secs_per_req[mode_i] = rep.wall_secs / rep.requests as f64;
         }
+        for (mode_i, name) in
+            ["unbatched", "batched"].into_iter().enumerate()
+        {
+            let rep = drive_with(
+                |_| HttpClient::connect(addr, name),
+                c,
+                per_client,
+                |i| images[i].clone(),
+                |i| Some(oracle[i].clone()),
+            )
+            .expect("bit-exact loopback serving");
+            let mut lat = rep.latencies_secs.clone();
+            let p = percentiles(&mut lat);
+            let rps = rep.requests as f64 / rep.wall_secs.max(1e-12);
+            println!(
+                "BENCH serve_socket_{name}_c{c} rps={rps:.1} p50_ms={:.3} \
+                 p95_ms={:.3} p99_ms={:.3} requests={}",
+                p.p50 * 1e3,
+                p.p95 * 1e3,
+                p.p99 * 1e3,
+                rep.requests
+            );
+            log.add_latency(
+                "serve_socket_tiny_cnn",
+                name,
+                c,
+                batched.threads(),
+                rep.requests,
+                rep.wall_secs,
+                p,
+            );
+            socket_secs[mode_i] = rep.wall_secs / rep.requests as f64;
+        }
         report_speedup(
             &format!("serve_batched_vs_unbatched_c{c}"),
             secs_per_req[0],
             secs_per_req[1],
         );
-        // stats delta = this client count's batched run only
+        report_speedup(
+            &format!("serve_loopback_vs_inprocess_c{c}"),
+            socket_secs[1],
+            secs_per_req[1],
+        );
+        // stats delta = this client count's batched runs (both transports)
         if let Some((req, bat, rows)) = batched.batcher_stats() {
             let (dreq, dbat, drows) =
                 (req - stats0.0, bat - stats0.1, rows - stats0.2);
@@ -131,6 +190,13 @@ fn main() {
             );
         }
     }
+
+    server.drain(Duration::from_secs(5));
+    let st = server.stats();
+    println!(
+        "server: {} conns accepted, {} admitted, {} rejected",
+        st.accepted_conns, st.admitted, st.rejected
+    );
 
     let path = std::env::var("FAT_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_serve.json".to_string());

@@ -54,6 +54,20 @@ impl Default for BatchOptions {
     }
 }
 
+/// Point-in-time batcher counters for `/stats`-style introspection
+/// (`crate::net::server` serializes these): cumulative totals plus the
+/// `waiting` gauge of requests currently inside [`Batcher::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatcherStats {
+    pub requests: u64,
+    /// Batches executed; mean occupancy is `rows / batches`.
+    pub batches: u64,
+    /// Rows executed across all batches.
+    pub rows: u64,
+    /// Requests currently assembling, executing or demuxing.
+    pub waiting: u64,
+}
+
 /// What executing one sealed micro-batch produced: the dequantized
 /// logits for all rows, the class count to demux by, and — when the
 /// executor only borrowed the assembled rows (the sharded path) — the
@@ -102,6 +116,18 @@ pub struct Batcher {
     requests: AtomicU64,
     batches: AtomicU64,
     rows_run: AtomicU64,
+    /// Requests currently inside [`Batcher::submit`] (gauge).
+    waiting: AtomicU64,
+}
+
+/// RAII decrement for the `waiting` gauge: submit's early returns and
+/// error paths all pass through it.
+struct DecOnDrop<'a>(&'a AtomicU64);
+
+impl Drop for DecOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl Batcher {
@@ -115,6 +141,7 @@ impl Batcher {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             rows_run: AtomicU64::new(0),
+            waiting: AtomicU64::new(0),
         }
     }
 
@@ -133,6 +160,18 @@ impl Batcher {
         )
     }
 
+    /// Point-in-time counter snapshot (the tuple [`Batcher::stats`]
+    /// plus the `waiting` gauge), for `/stats`-style introspection.
+    pub fn snapshot(&self) -> BatcherStats {
+        let (requests, batches, rows) = self.stats();
+        BatcherStats {
+            requests,
+            batches,
+            rows,
+            waiting: self.waiting.load(Ordering::Relaxed),
+        }
+    }
+
     /// Submit a `k`-row request (`1 ≤ k ≤ max_batch`; the serving layer
     /// routes larger requests straight to the unbatched path). `write`
     /// quantizes the request's rows into the assembly buffer; `exec`
@@ -147,6 +186,8 @@ impl Batcher {
     ) -> Result<Vec<f32>> {
         debug_assert!(k >= 1 && k <= self.opts.max_batch);
         self.requests.fetch_add(1, Ordering::Relaxed);
+        self.waiting.fetch_add(1, Ordering::Relaxed);
+        let _waiting = DecOnDrop(&self.waiting);
         let mut write = Some(write);
         let (mb, row0, leader) = self.join(k, &mut write);
         if leader {
@@ -312,6 +353,11 @@ mod tests {
         assert_eq!(out, vec![1.0, 2.0, 3.0]);
         let (req, bat, rows) = b.stats();
         assert_eq!((req, bat, rows), (1, 1, 1));
+        let snap = b.snapshot();
+        assert_eq!(
+            snap,
+            BatcherStats { requests: 1, batches: 1, rows: 1, waiting: 0 }
+        );
         // the row buffer came back to the arena
         assert_eq!(b.arena.lock().unwrap().pooled(), 1);
     }

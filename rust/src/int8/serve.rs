@@ -17,7 +17,7 @@
 //! for every thread count, batch schedule and pool history (see
 //! `rust/tests/session_equiv.rs` and `rust/tests/serve_stress.rs`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -27,7 +27,7 @@ use crate::quant::scale::QParams;
 use crate::tensor::Tensor;
 use crate::util::threads::fat_threads;
 
-use super::batcher::{BatchOptions, BatchOutput, Batcher};
+use super::batcher::{BatchOptions, BatchOutput, Batcher, BatcherStats};
 use super::engine::{shard_geometry, ExecState, QModel};
 use super::qtensor::{quantize_f32_into, quantize_u8_into, to_i8_domain, QTensor};
 
@@ -163,6 +163,36 @@ struct EngineInner {
     /// Micro-batch collector; present iff `EngineOptions::batch` asked
     /// for batching and the model has usable input metadata.
     batcher: Option<Batcher>,
+    /// Inference calls currently executing (gauge, all entry points).
+    in_flight: AtomicU64,
+    /// Inference calls ever started (cumulative, all entry points).
+    requests: AtomicU64,
+}
+
+/// RAII decrement for the engine's `in_flight` gauge — error returns
+/// and batch-execution panics still restore the gauge.
+struct Gauge<'a>(&'a AtomicU64);
+
+impl Drop for Gauge<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time engine counters for `/stats`-style introspection
+/// (`crate::net::server` serializes one per registered model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Configured worker count.
+    pub threads: usize,
+    /// Execution states resting in the pool right now.
+    pub pooled_states: usize,
+    /// Inference calls currently executing.
+    pub in_flight: u64,
+    /// Inference calls ever started.
+    pub requests: u64,
+    /// Micro-batcher counters, when batching is enabled.
+    pub batcher: Option<BatcherStats>,
 }
 
 /// A cheap-to-clone serving handle over a compiled quantized model.
@@ -208,8 +238,18 @@ impl Int8Engine {
                 meta,
                 pool: StatePool::new(threads),
                 batcher,
+                in_flight: AtomicU64::new(0),
+                requests: AtomicU64::new(0),
             }),
         }
+    }
+
+    /// Count one inference call: bump the cumulative counter and hold
+    /// the `in_flight` gauge for the caller's scope.
+    fn track(&self) -> Gauge<'_> {
+        self.inner.requests.fetch_add(1, Ordering::Relaxed);
+        self.inner.in_flight.fetch_add(1, Ordering::Relaxed);
+        Gauge(&self.inner.in_flight)
     }
 
     /// The wrapped quantized model.
@@ -238,6 +278,19 @@ impl Int8Engine {
         self.inner.batcher.as_ref().map(|b| b.stats())
     }
 
+    /// Point-in-time counter snapshot across the engine's moving parts
+    /// — worker count, pooled states, the request gauge/total, and the
+    /// micro-batcher's counters when batching is enabled.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            threads: self.inner.threads,
+            pooled_states: self.inner.pool.resting(),
+            in_flight: self.inner.in_flight.load(Ordering::Relaxed),
+            requests: self.inner.requests.load(Ordering::Relaxed),
+            batcher: self.inner.batcher.as_ref().map(|b| b.snapshot()),
+        }
+    }
+
     fn take_state(&self, threads: usize) -> ExecState {
         self.inner.pool.take(threads)
     }
@@ -251,6 +304,7 @@ impl Int8Engine {
     /// Returns the logits row. With batching enabled, concurrent calls
     /// coalesce into one plan execution (bit-exact either way).
     pub fn infer(&self, pixels: &[u8]) -> Result<Vec<f32>> {
+        let _g = self.track();
         let meta = self.meta()?;
         anyhow::ensure!(
             pixels.len() == meta.per_img,
@@ -302,6 +356,7 @@ impl Int8Engine {
                 && x.shape[0] >= 1
                 && x.shape[0] <= opts.max_batch;
             if joins {
+                let _g = self.track();
                 let n = x.shape[0];
                 let xs = x.as_f32()?;
                 let qp = meta.qp;
@@ -321,6 +376,7 @@ impl Int8Engine {
     /// sweeps); still uses the shared state pool, but always bypasses
     /// the micro-batcher — an explicit count pins this call's schedule.
     pub fn infer_batch_with(&self, x: &Tensor, threads: usize) -> Result<Tensor> {
+        let _g = self.track();
         let model = &self.inner.model;
         let q = QTensor::quantize(x.shape.clone(), x.as_f32()?, model.input_qp);
         let batch = q.shape[0];
@@ -411,7 +467,7 @@ impl Int8Engine {
     }
 }
 
-/// What [`drive_clients`] measured: wall time for the whole run and the
+/// What [`drive_with`] measured: wall time for the whole run and the
 /// per-request latencies (unsorted; feed to `util::bench::percentiles`).
 pub struct DriveReport {
     pub wall_secs: f64,
@@ -419,25 +475,51 @@ pub struct DriveReport {
     pub requests: usize,
 }
 
+/// One synthetic client's view of the serving stack: a single-image
+/// classify call, whatever the transport. [`Int8Engine`] implements it
+/// directly (thread mode); `crate::net::client` implements it over live
+/// sockets (HTTP and frame protocols), so the benchmark driver and its
+/// bit-exactness oracle are shared by every transport.
+pub trait InferClient {
+    /// Classify one HWC u8 image; returns the logits row.
+    fn infer_one(&mut self, pixels: &[u8]) -> Result<Vec<f32>>;
+}
+
+impl InferClient for Int8Engine {
+    fn infer_one(&mut self, pixels: &[u8]) -> Result<Vec<f32>> {
+        self.infer(pixels)
+    }
+}
+
+impl<T: InferClient + ?Sized> InferClient for Box<T> {
+    fn infer_one(&mut self, pixels: &[u8]) -> Result<Vec<f32>> {
+        (**self).infer_one(pixels)
+    }
+}
+
 /// Closed-loop synthetic client driver shared by the `serve-bench` CLI
-/// subcommand and `benches/bench_serve.rs`: spawns `clients` OS
-/// threads, each issuing `per_client` single-image
-/// [`Int8Engine::infer`] calls with its own deterministic image
-/// (`image(client)`), timing every request. When `expected(client)`
-/// returns a logits row, every response is checked against it
-/// **bit-exactly** — the batched scheduler must coalesce without
-/// changing a single byte.
-pub fn drive_clients<I, E>(
-    engine: &Int8Engine,
+/// subcommand (thread and socket transports) and
+/// `benches/bench_serve.rs`: spawns `clients` OS threads, each calling
+/// `connect(client)` for its own transport handle and then issuing
+/// `per_client` single-image [`InferClient::infer_one`] calls with its
+/// own deterministic image (`image(client)`), timing every request.
+/// When `expected(client)` returns a logits row, every response is
+/// checked against it **bit-exactly** — neither the batched scheduler
+/// nor a network hop may change a single byte.
+pub fn drive_with<C, M, I, E>(
+    connect: M,
     clients: usize,
     per_client: usize,
     image: I,
     expected: E,
 ) -> Result<DriveReport>
 where
+    C: InferClient + Send,
+    M: Fn(usize) -> Result<C> + Sync,
     I: Fn(usize) -> Vec<u8> + Sync,
     E: Fn(usize) -> Option<Vec<f32>> + Sync,
 {
+    let connect = &connect;
     let image = &image;
     let expected = &expected;
     let t0 = std::time::Instant::now();
@@ -445,14 +527,14 @@ where
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for c in 0..clients {
-            let eng = engine.clone();
             handles.push(s.spawn(move || -> Result<Vec<f64>> {
+                let mut conn = connect(c)?;
                 let px = image(c);
                 let want = expected(c);
                 let mut lats = Vec::with_capacity(per_client);
                 for r in 0..per_client {
                     let t = std::time::Instant::now();
-                    let got = eng.infer(&px)?;
+                    let got = conn.infer_one(&px)?;
                     lats.push(t.elapsed().as_secs_f64());
                     if let Some(w) = &want {
                         anyhow::ensure!(
@@ -489,4 +571,20 @@ where
         requests: clients * per_client,
         latencies_secs,
     })
+}
+
+/// [`drive_with`] in thread mode: every client is a clone of the same
+/// in-process engine handle.
+pub fn drive_clients<I, E>(
+    engine: &Int8Engine,
+    clients: usize,
+    per_client: usize,
+    image: I,
+    expected: E,
+) -> Result<DriveReport>
+where
+    I: Fn(usize) -> Vec<u8> + Sync,
+    E: Fn(usize) -> Option<Vec<f32>> + Sync,
+{
+    drive_with(|_| Ok(engine.clone()), clients, per_client, image, expected)
 }

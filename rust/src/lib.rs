@@ -22,7 +22,10 @@
 //! calibrate → optional §3.3 rescale → fine-tune or identity thresholds
 //! → export — with each stage a distinct type, and serving traffic goes
 //! through the [`int8::serve::Int8Engine`] handle (`Arc`-clone, pooled
-//! per-worker execution state).
+//! per-worker execution state). The [`net`] module puts that handle
+//! behind a real socket front-end — hand-rolled HTTP/1.1 plus a binary
+//! frame protocol on one port, admission control, and graceful drain
+//! (`fat serve`, DESIGN.md §10).
 //!
 //! Python never runs at runtime. With AOT artifacts present (and the
 //! `pjrt` feature), float stages execute the lowered HLO; without them,
@@ -41,6 +44,7 @@ pub mod data;
 pub mod fp;
 pub mod int8;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

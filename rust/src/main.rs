@@ -18,6 +18,10 @@
 //!   fat serve-bench [--model tiny_cnn] [--clients 1,4,16,64]
 //!                 [--requests N] [--max-batch N] [--max-wait-us N]
 //!                 [--threads N] [--json PATH]
+//!                 [--transport thread|socket|both]
+//!   fat serve [--models M1,M2] [--addr 127.0.0.1:8080] [--mode MODE]
+//!                 [--threads N] [--max-batch N] [--max-wait-us N]
+//!                 [--max-conns N] [--max-inflight N] [--drain-secs N]
 
 use std::sync::Arc;
 
@@ -47,6 +51,14 @@ Commands (default: pipeline):
     check vs the reference interpreter, BENCH_serve.json log
     [--model M] [--clients 1,4,16,64] [--requests N] [--max-batch N]
     [--max-wait-us N] [--threads N] [--json PATH]
+    [--transport thread|socket|both]  (socket drives a live loopback
+    server over HTTP; both also prints loopback-vs-inprocess speedups)
+  serve                        socket server over the int8 engine:
+    HTTP/1.1 + binary frame protocol on one port, multi-model routing,
+    admission control, /stats, graceful drain on SIGINT/SIGTERM
+    [--models M1,M2] [--addr 127.0.0.1:8080] [--mode MODE] [--threads N]
+    [--max-batch N] [--max-wait-us N] [--max-conns N] [--max-inflight N]
+    [--read-timeout-ms N] [--drain-secs N]
 
 Modes: sym_scalar | sym_vector | asym_scalar | asym_vector
 Calibrators: max (default) | p99 | p999 | p9999 | kl
@@ -215,10 +227,18 @@ fn main() -> Result<()> {
                 Some(t) => Some(t.parse()?),
                 None => None,
             };
+            let transport = args.get_or("transport", "thread");
+            anyhow::ensure!(
+                matches!(transport, "thread" | "socket" | "both"),
+                "serve-bench: --transport must be thread, socket or both"
+            );
             serve_bench(
                 &reg, &artifacts, model, &clients, requests, max_batch,
-                max_wait_us, threads, args.get("json"),
+                max_wait_us, threads, args.get("json"), transport,
             )?;
+        }
+        "serve" => {
+            cmd_serve(&reg, &artifacts, &args)?;
         }
         other => {
             eprintln!("unknown command {other}\n{USAGE}");
@@ -239,7 +259,10 @@ fn synth_image(per_img: usize, client: usize) -> Vec<u8> {
 /// Drive batched-vs-unbatched serving with N concurrent closed-loop
 /// clients; print throughput + latency percentiles, verify every
 /// response bit-exactly against `run_quant_ref`, and write the
-/// machine-readable `BENCH_serve.json`.
+/// machine-readable `BENCH_serve.json`. `transport` picks in-process
+/// engine handles (`thread`), a live loopback HTTP server (`socket`),
+/// or `both` — one driver and one oracle either way
+/// (`int8::serve::drive_with`).
 #[allow(clippy::too_many_arguments)]
 fn serve_bench(
     reg: &Arc<Registry>,
@@ -251,10 +274,15 @@ fn serve_bench(
     max_wait_us: u64,
     threads: Option<usize>,
     json: Option<&str>,
+    transport: &str,
 ) -> Result<()> {
-    use fat::int8::serve::drive_clients;
+    use fat::int8::serve::{drive_clients, drive_with};
     use fat::int8::{BatchOptions, Int8Engine, QTensor};
+    use fat::net::{HttpClient, ModelRegistry, Server, ServerOptions};
     use fat::util::bench::{percentiles, report_speedup, BenchLog};
+
+    let do_thread = transport != "socket";
+    let do_socket = transport != "thread";
 
     let th = QuantSession::open(reg.clone(), artifacts, model)?
         .calibrate(CalibOpts::images(16))?
@@ -301,50 +329,109 @@ fn serve_bench(
         oracle.push(qm.run_quant_ref(q)?.dequantize());
     }
 
+    // Socket transport: both engines behind one live loopback server,
+    // routed by model name, driven over keep-alive HTTP.
+    let server = if do_socket {
+        let registry = ModelRegistry::new();
+        registry.insert("unbatched", unbatched.clone());
+        registry.insert("batched", batched.clone());
+        let srv =
+            Server::bind("127.0.0.1:0", registry, ServerOptions::default())?;
+        println!("serve-bench: loopback server on {}", srv.local_addr());
+        Some(srv)
+    } else {
+        None
+    };
+    let sock_addr = server.as_ref().map(|s| s.local_addr());
+
     let mut log = BenchLog::default();
     for &c in clients {
         let per_client = (requests / c).max(1);
         let stats0 = batched.batcher_stats().unwrap_or((0, 0, 0));
-        let mut secs_per_req = [0.0f64; 2];
+        let mut thread_secs = [0.0f64; 2];
+        let mut socket_secs = [0.0f64; 2];
         for (mode_i, (name, engine)) in
             [("unbatched", &unbatched), ("batched", &batched)]
                 .into_iter()
                 .enumerate()
         {
-            let rep = drive_clients(
-                engine,
-                c,
-                per_client,
-                |i| images[i].clone(),
-                |i| Some(oracle[i].clone()),
-            )?;
-            let mut lat = rep.latencies_secs.clone();
-            let p = percentiles(&mut lat);
-            let rps = rep.requests as f64 / rep.wall_secs.max(1e-12);
-            println!(
-                "BENCH serve_{name}_c{c} rps={rps:.1} p50_ms={:.3} \
-                 p95_ms={:.3} p99_ms={:.3} requests={}",
-                p.p50 * 1e3,
-                p.p95 * 1e3,
-                p.p99 * 1e3,
-                rep.requests
-            );
-            log.add_latency(
-                "serve",
-                name,
-                c,
-                engine.threads(),
-                rep.requests,
-                rep.wall_secs,
-                p,
-            );
-            secs_per_req[mode_i] = rep.wall_secs / rep.requests as f64;
+            if do_thread {
+                let rep = drive_clients(
+                    engine,
+                    c,
+                    per_client,
+                    |i| images[i].clone(),
+                    |i| Some(oracle[i].clone()),
+                )?;
+                let mut lat = rep.latencies_secs.clone();
+                let p = percentiles(&mut lat);
+                let rps = rep.requests as f64 / rep.wall_secs.max(1e-12);
+                println!(
+                    "BENCH serve_{name}_c{c} rps={rps:.1} p50_ms={:.3} \
+                     p95_ms={:.3} p99_ms={:.3} requests={}",
+                    p.p50 * 1e3,
+                    p.p95 * 1e3,
+                    p.p99 * 1e3,
+                    rep.requests
+                );
+                log.add_latency(
+                    "serve",
+                    name,
+                    c,
+                    engine.threads(),
+                    rep.requests,
+                    rep.wall_secs,
+                    p,
+                );
+                thread_secs[mode_i] = rep.wall_secs / rep.requests as f64;
+            }
+            if let Some(addr) = sock_addr {
+                let rep = drive_with(
+                    |_| HttpClient::connect(addr, name),
+                    c,
+                    per_client,
+                    |i| images[i].clone(),
+                    |i| Some(oracle[i].clone()),
+                )?;
+                let mut lat = rep.latencies_secs.clone();
+                let p = percentiles(&mut lat);
+                let rps = rep.requests as f64 / rep.wall_secs.max(1e-12);
+                println!(
+                    "BENCH serve_socket_{name}_c{c} rps={rps:.1} \
+                     p50_ms={:.3} p95_ms={:.3} p99_ms={:.3} requests={}",
+                    p.p50 * 1e3,
+                    p.p95 * 1e3,
+                    p.p99 * 1e3,
+                    rep.requests
+                );
+                log.add_latency(
+                    "serve_socket",
+                    name,
+                    c,
+                    engine.threads(),
+                    rep.requests,
+                    rep.wall_secs,
+                    p,
+                );
+                socket_secs[mode_i] = rep.wall_secs / rep.requests as f64;
+            }
         }
-        report_speedup(
-            &format!("serve_batched_vs_unbatched_c{c}"),
-            secs_per_req[0],
-            secs_per_req[1],
-        );
+        if do_thread {
+            report_speedup(
+                &format!("serve_batched_vs_unbatched_c{c}"),
+                thread_secs[0],
+                thread_secs[1],
+            );
+        }
+        if do_thread && do_socket {
+            // How much the network hop costs at this concurrency: the
+            // loopback (base) vs in-process (variant) batched engine.
+            report_speedup(
+                &format!("serve_loopback_vs_inprocess_c{c}"),
+                socket_secs[1],
+                thread_secs[1],
+            );
+        }
         // Per-client-count occupancy (stats delta over this config's
         // batched run only) — the number the EXPERIMENTS.md PR-5 table
         // records per row.
@@ -358,6 +445,14 @@ fn serve_bench(
             );
         }
     }
+    if let Some(srv) = &server {
+        srv.drain(std::time::Duration::from_secs(5));
+        let st = srv.stats();
+        println!(
+            "loopback server: {} conns, {} admitted, {} rejected",
+            st.accepted_conns, st.admitted, st.rejected
+        );
+    }
     println!("bit-exact: every response matched run_quant_ref");
     let path = json
         .map(str::to_string)
@@ -366,6 +461,94 @@ fn serve_bench(
     if let Err(e) = log.write(&path) {
         println!("BENCH log write failed ({path}): {e}");
     }
+    Ok(())
+}
+
+/// The `fat serve` subcommand: calibrate + export each requested model,
+/// register all of them in one [`fat::net::ModelRegistry`], bind the
+/// socket front-end and run until SIGINT/SIGTERM asks for a drain.
+fn cmd_serve(
+    reg: &Arc<Registry>,
+    artifacts: &std::path::Path,
+    args: &Args,
+) -> Result<()> {
+    use fat::int8::BatchOptions;
+    use fat::net::{signal, ModelRegistry, Server, ServerOptions};
+    use std::time::Duration;
+
+    let models: Vec<String> = args
+        .get("models")
+        .or_else(|| args.get("model"))
+        .unwrap_or("tiny_cnn")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(
+        !models.is_empty(),
+        "serve: --models must list at least one model"
+    );
+    let addr = args.get_or("addr", "127.0.0.1:8080");
+    let spec = QuantSpec::parse(
+        args.get_or("mode", "sym_vector"),
+        args.get_or("calibrator", "max"),
+    )?;
+    // Serving defaults to micro-batching on: concurrent socket clients
+    // are exactly the traffic it coalesces. `--max-batch 1` turns it off.
+    let max_batch = args.usize_or("max-batch", 16);
+    let max_wait_us = args.usize_or("max-wait-us", 200) as u64;
+    let mut opts = match args.get("threads") {
+        Some(t) => EngineOptions::threads(t.parse()?),
+        None => EngineOptions::default(),
+    };
+    if max_batch >= 2 {
+        opts = opts.with_batch(BatchOptions { max_batch, max_wait_us });
+    }
+    let server_opts = ServerOptions {
+        max_conns: args.usize_or("max-conns", 256),
+        max_inflight: args.usize_or("max-inflight", 128),
+        read_timeout: Duration::from_millis(
+            args.usize_or("read-timeout-ms", 5_000) as u64,
+        ),
+        write_timeout: Duration::from_millis(
+            args.usize_or("write-timeout-ms", 5_000) as u64,
+        ),
+        ..ServerOptions::default()
+    };
+
+    let registry = ModelRegistry::new();
+    for name in &models {
+        let engine = QuantSession::open(reg.clone(), artifacts, name)?
+            .calibrate(CalibOpts::images(16))?
+            .identity(&spec)?
+            .serve(opts)?;
+        println!(
+            "model {name} [{}]: {} int8 param bytes, {} worker(s)",
+            spec.mode().name(),
+            engine.param_bytes(),
+            engine.threads()
+        );
+        registry.insert(name, engine);
+    }
+    let server = Server::bind(addr, registry, server_opts)?;
+    let local = server.local_addr();
+    println!("fat serve: http://{local} (HTTP/1.1 + 0xFA frame protocol)");
+    println!("  curl http://{local}/healthz");
+    println!("  curl http://{local}/stats");
+    println!(
+        "  head -c {{input_bytes}} /dev/urandom | curl -s --data-binary @- \
+         http://{local}/v1/models/{}/infer",
+        models[0]
+    );
+    signal::install_drain_handler();
+    println!("serving; SIGINT/SIGTERM drains");
+    while !signal::drain_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let grace = Duration::from_secs(args.usize_or("drain-secs", 5) as u64);
+    println!("drain requested; grace {}s", grace.as_secs());
+    server.drain(grace);
+    println!("{}", server.stats_json());
     Ok(())
 }
 

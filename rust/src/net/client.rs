@@ -1,0 +1,238 @@
+//! Loopback clients for both wire protocols, implementing
+//! [`InferClient`] so the transport-agnostic driver
+//! ([`crate::int8::serve::drive_with`]) and its bit-exactness oracle
+//! run unchanged over live sockets — the socket columns of
+//! `BENCH_serve.json` and the fault-injection tests both ride on these.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::int8::serve::InferClient;
+
+use super::{frame, http, Limits, Step};
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn connect_stream(addr: SocketAddr) -> Result<TcpStream> {
+    let stream = TcpStream::connect_timeout(&addr, CLIENT_TIMEOUT)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT))?;
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+/// Keep-alive HTTP/1.1 client for one model endpoint.
+pub struct HttpClient {
+    stream: TcpStream,
+    model: String,
+    limits: Limits,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr, model: &str) -> Result<Self> {
+        Ok(HttpClient {
+            stream: connect_stream(addr)?,
+            model: model.to_string(),
+            limits: Limits::default(),
+            buf: Vec::new(),
+        })
+    }
+
+    fn read_response(&mut self) -> Result<http::Response> {
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            match http::parse_response(&self.buf, &self.limits) {
+                Ok(Step::Done(resp, used)) => {
+                    self.buf.drain(..used);
+                    return Ok(resp);
+                }
+                Ok(Step::Incomplete) => {}
+                Err(e) => bail!("bad response from server: {e}"),
+            }
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                bail!("server closed the connection mid-response");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// POST one image; returns `(status, body)` without interpreting
+    /// the status — overload tests tally `429`s through this.
+    pub fn infer_status(&mut self, pixels: &[u8]) -> Result<(u16, Vec<u8>)> {
+        let path = format!("/v1/models/{}/infer", self.model);
+        let wire = http::request(
+            "POST",
+            &path,
+            "application/octet-stream",
+            pixels,
+        );
+        self.stream.write_all(&wire)?;
+        let resp = self.read_response()?;
+        Ok((resp.status, resp.body))
+    }
+
+    /// Fetch and return the raw `/stats` JSON document.
+    pub fn stats(&mut self) -> Result<String> {
+        let wire = http::request("GET", "/stats", "text/plain", b"");
+        self.stream.write_all(&wire)?;
+        let resp = self.read_response()?;
+        if resp.status != 200 {
+            bail!("/stats answered {}", resp.status);
+        }
+        Ok(String::from_utf8(resp.body)?)
+    }
+}
+
+/// Extract the logits row from a `POST .../infer` 200 body. Parses
+/// each token with the correctly-rounded `str::parse::<f32>`, so the
+/// bits of the server's shortest-round-trip formatting are recovered
+/// exactly (never through an f64 intermediate, which double-rounds).
+pub fn parse_logits_json(body: &str) -> Result<Vec<f32>> {
+    let Some(tail) = body.split("\"logits\":[").nth(1) else {
+        bail!("no logits array in response: {body}");
+    };
+    let Some(inner) = tail.split(']').next() else {
+        bail!("unterminated logits array: {body}");
+    };
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<f32>()
+                .map_err(|e| anyhow::anyhow!("bad logit {tok:?}: {e}"))
+        })
+        .collect()
+}
+
+impl InferClient for HttpClient {
+    fn infer_one(&mut self, pixels: &[u8]) -> Result<Vec<f32>> {
+        let (status, body) = self.infer_status(pixels)?;
+        if status != 200 {
+            bail!(
+                "infer answered {status}: {}",
+                String::from_utf8_lossy(&body).trim()
+            );
+        }
+        parse_logits_json(std::str::from_utf8(&body)?)
+    }
+}
+
+/// Binary frame-protocol client for one model endpoint. Logits travel
+/// as raw little-endian `f32` bits — bit-exact by construction.
+pub struct FrameClient {
+    stream: TcpStream,
+    model: String,
+    limits: Limits,
+    buf: Vec<u8>,
+}
+
+impl FrameClient {
+    pub fn connect(addr: SocketAddr, model: &str) -> Result<Self> {
+        Ok(FrameClient {
+            stream: connect_stream(addr)?,
+            model: model.to_string(),
+            limits: Limits::default(),
+            buf: Vec::new(),
+        })
+    }
+
+    fn read_response(&mut self) -> Result<frame::FrameResponse> {
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            match frame::parse_response(&self.buf, &self.limits) {
+                Ok(Step::Done(resp, used)) => {
+                    self.buf.drain(..used);
+                    return Ok(resp);
+                }
+                Ok(Step::Incomplete) => {}
+                Err(e) => bail!("bad frame from server: {e}"),
+            }
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                bail!("server closed the connection mid-frame");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// Send one infer frame; returns `(status, body)` uninterpreted.
+    pub fn infer_status(&mut self, pixels: &[u8]) -> Result<(u8, Vec<u8>)> {
+        let wire = frame::encode_request(frame::OP_INFER, &self.model, pixels);
+        self.stream.write_all(&wire)?;
+        let resp = self.read_response()?;
+        Ok((resp.status, resp.body))
+    }
+
+    /// Fetch and return the raw stats JSON over the frame protocol.
+    pub fn stats(&mut self) -> Result<String> {
+        let wire = frame::encode_request(frame::OP_STATS, "", b"");
+        self.stream.write_all(&wire)?;
+        let resp = self.read_response()?;
+        if resp.status != frame::ST_OK {
+            bail!("stats frame answered status {}", resp.status);
+        }
+        Ok(String::from_utf8(resp.body)?)
+    }
+}
+
+impl InferClient for FrameClient {
+    fn infer_one(&mut self, pixels: &[u8]) -> Result<Vec<f32>> {
+        let (status, body) = self.infer_status(pixels)?;
+        if status != frame::ST_OK {
+            bail!(
+                "infer frame answered status {status}: {}",
+                String::from_utf8_lossy(&body).trim()
+            );
+        }
+        if body.len() % 4 != 0 {
+            bail!("logits body of {} bytes is not f32-aligned", body.len());
+        }
+        Ok(body
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_json_parsing_is_bit_exact() {
+        let vals = [0.1f32, -0.0, 1.0 / 3.0, f32::MIN_POSITIVE, -3.4e38];
+        let mut body = String::from("{\"model\":\"m\",\"logits\":[");
+        for (i, v) in vals.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str(&format!("{v}"));
+        }
+        body.push_str("]}");
+        let got = parse_logits_json(&body).unwrap();
+        assert_eq!(got.len(), vals.len());
+        for (g, w) in got.iter().zip(vals.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_logits_and_garbage() {
+        assert_eq!(
+            parse_logits_json("{\"model\":\"m\",\"logits\":[]}").unwrap(),
+            Vec::<f32>::new()
+        );
+        assert!(parse_logits_json("{}").is_err());
+        assert!(parse_logits_json("{\"logits\":[1,x]}").is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Length-prefixed binary frame protocol (DESIGN.md §10.2) — the
+//! machine-client fallback sharing the listener port with HTTP.
+//!
+//! A connection opting into frames starts its first byte with `0xFA`
+//! (no valid HTTP method does), so the server can sniff the protocol
+//! from one byte. Wire layout, all integers little-endian:
+//!
+//! ```text
+//! request:  FA 54 | op:u8 | name_len:u8 | name bytes | body_len:u32 | body
+//! response: FA 54 | status:u8          |              body_len:u32 | body
+//! ```
+//!
+//! `OP_INFER` carries raw HWC u8 pixels and answers raw `f32` logit
+//! bits — bit-exactness needs no text round-trip at all. `OP_STATS`
+//! answers the same JSON document as HTTP `GET /stats`. Response
+//! statuses fold the HTTP codes onto one byte via [`status_for`].
+//!
+//! Like [`super::http`], parsers are pure and incremental: feed a
+//! growing buffer, get [`Step::Incomplete`] until a whole frame is
+//! present. Malformed magic or an oversized body is fatal to the
+//! connection ([`WireError`]).
+
+use super::{Limits, Step, WireError};
+
+/// Frame magic: `0xFA` selects the protocol, `0x54` ("T") guards
+/// against accidents.
+pub const MAGIC: [u8; 2] = [0xFA, 0x54];
+
+/// Request opcodes.
+pub const OP_INFER: u8 = 1;
+pub const OP_STATS: u8 = 2;
+
+/// Response statuses.
+pub const ST_OK: u8 = 0;
+pub const ST_BAD_REQUEST: u8 = 1;
+pub const ST_NOT_FOUND: u8 = 2;
+pub const ST_OVERLOADED: u8 = 3;
+pub const ST_DRAINING: u8 = 4;
+pub const ST_INTERNAL: u8 = 5;
+
+/// Fold an HTTP status onto the frame protocol's one-byte space.
+pub fn status_for(http: u16) -> u8 {
+    match http {
+        200 => ST_OK,
+        404 => ST_NOT_FOUND,
+        429 => ST_OVERLOADED,
+        503 => ST_DRAINING,
+        500 => ST_INTERNAL,
+        _ => ST_BAD_REQUEST,
+    }
+}
+
+/// One parsed request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub op: u8,
+    pub model: String,
+    pub body: Vec<u8>,
+}
+
+/// One parsed response frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameResponse {
+    pub status: u8,
+    pub body: Vec<u8>,
+}
+
+/// Check the magic prefix byte-by-byte so a wrong byte errors as soon
+/// as it arrives instead of waiting for a full header that never comes.
+fn check_magic(buf: &[u8]) -> Result<(), WireError> {
+    for (i, want) in MAGIC.iter().enumerate() {
+        match buf.get(i) {
+            Some(got) if got == want => {}
+            Some(_) => return Err(WireError::new(400, "bad frame magic")),
+            None => return Ok(()), // not enough bytes yet
+        }
+    }
+    Ok(())
+}
+
+fn body_len_at(buf: &[u8], at: usize, limits: &Limits) -> Result<Option<usize>, WireError> {
+    if buf.len() < at + 4 {
+        return Ok(None);
+    }
+    let n = u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]]) as usize;
+    if n > limits.max_body {
+        return Err(WireError::new(413, "frame body too large"));
+    }
+    Ok(Some(n))
+}
+
+/// Incrementally parse one request frame from the front of `buf`.
+pub fn parse_request(buf: &[u8], limits: &Limits) -> Result<Step<Frame>, WireError> {
+    check_magic(buf)?;
+    if buf.len() < 4 {
+        return Ok(Step::Incomplete);
+    }
+    let op = buf[2];
+    let name_len = buf[3] as usize;
+    let body_at = 4 + name_len;
+    let Some(body_len) = body_len_at(buf, body_at, limits)? else {
+        return Ok(Step::Incomplete);
+    };
+    let total = body_at + 4 + body_len;
+    if buf.len() < total {
+        return Ok(Step::Incomplete);
+    }
+    let model = std::str::from_utf8(&buf[4..body_at])
+        .map_err(|_| WireError::new(400, "non-utf8 model name"))?
+        .to_string();
+    Ok(Step::Done(
+        Frame { op, model, body: buf[body_at + 4..total].to_vec() },
+        total,
+    ))
+}
+
+/// Incrementally parse one response frame from the front of `buf`.
+pub fn parse_response(
+    buf: &[u8],
+    limits: &Limits,
+) -> Result<Step<FrameResponse>, WireError> {
+    check_magic(buf)?;
+    if buf.len() < 3 {
+        return Ok(Step::Incomplete);
+    }
+    let status = buf[2];
+    let Some(body_len) = body_len_at(buf, 3, limits)? else {
+        return Ok(Step::Incomplete);
+    };
+    let total = 3 + 4 + body_len;
+    if buf.len() < total {
+        return Ok(Step::Incomplete);
+    }
+    Ok(Step::Done(
+        FrameResponse { status, body: buf[7..total].to_vec() },
+        total,
+    ))
+}
+
+/// Serialize a request frame.
+pub fn encode_request(op: u8, model: &str, body: &[u8]) -> Vec<u8> {
+    assert!(model.len() <= u8::MAX as usize, "model name too long for frame");
+    assert!(body.len() <= u32::MAX as usize);
+    let mut v = Vec::with_capacity(4 + model.len() + 4 + body.len());
+    v.extend_from_slice(&MAGIC);
+    v.push(op);
+    v.push(model.len() as u8);
+    v.extend_from_slice(model.as_bytes());
+    v.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    v.extend_from_slice(body);
+    v
+}
+
+/// Serialize a response frame.
+pub fn encode_response(status: u8, body: &[u8]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(3 + 4 + body.len());
+    v.extend_from_slice(&MAGIC);
+    v.push(status);
+    v.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    v.extend_from_slice(body);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: Limits = Limits { max_head: 1024, max_body: 4096 };
+
+    #[test]
+    fn request_roundtrip_and_prefixes() {
+        let wire = encode_request(OP_INFER, "tiny_cnn", &[1, 2, 3, 0xFA]);
+        match parse_request(&wire, &L).unwrap() {
+            Step::Done(f, used) => {
+                assert_eq!(used, wire.len());
+                assert_eq!(f.op, OP_INFER);
+                assert_eq!(f.model, "tiny_cnn");
+                assert_eq!(f.body, [1, 2, 3, 0xFA]);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        for cut in 0..wire.len() {
+            assert_eq!(
+                parse_request(&wire[..cut], &L).unwrap(),
+                Step::Incomplete,
+                "prefix {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_and_prefixes() {
+        let wire = encode_response(ST_OK, &42f32.to_le_bytes());
+        match parse_response(&wire, &L).unwrap() {
+            Step::Done(r, used) => {
+                assert_eq!(used, wire.len());
+                assert_eq!(r.status, ST_OK);
+                assert_eq!(r.body, 42f32.to_le_bytes());
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        for cut in 0..wire.len() {
+            assert_eq!(
+                parse_response(&wire[..cut], &L).unwrap(),
+                Step::Incomplete,
+                "prefix {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_errors_as_early_as_possible() {
+        assert_eq!(parse_request(&[0x47], &L).unwrap_err().status, 400);
+        assert_eq!(parse_request(&[0xFA, 0x00], &L).unwrap_err().status, 400);
+        assert_eq!(parse_request(&[], &L).unwrap(), Step::Incomplete);
+        assert_eq!(parse_request(&[0xFA], &L).unwrap(), Step::Incomplete);
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_before_it_arrives() {
+        let mut wire = encode_request(OP_INFER, "m", &[]);
+        let len_at = wire.len() - 4;
+        wire[len_at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(parse_request(&wire, &L).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn pipelined_frames_consume_exactly_one() {
+        let mut wire = encode_request(OP_STATS, "", &[]);
+        let first = wire.len();
+        wire.extend_from_slice(&encode_request(OP_INFER, "m", &[9]));
+        let Step::Done(f, used) = parse_request(&wire, &L).unwrap() else {
+            panic!("incomplete");
+        };
+        assert_eq!(used, first);
+        assert_eq!(f.op, OP_STATS);
+    }
+
+    #[test]
+    fn status_mapping_covers_server_codes() {
+        assert_eq!(status_for(200), ST_OK);
+        assert_eq!(status_for(404), ST_NOT_FOUND);
+        assert_eq!(status_for(429), ST_OVERLOADED);
+        assert_eq!(status_for(503), ST_DRAINING);
+        assert_eq!(status_for(500), ST_INTERNAL);
+        assert_eq!(status_for(400), ST_BAD_REQUEST);
+        assert_eq!(status_for(413), ST_BAD_REQUEST);
+    }
+}

@@ -1,0 +1,431 @@
+//! Hand-rolled HTTP/1.1 wire format (DESIGN.md §10.1): an incremental,
+//! pure request/response parser plus the serializers the server and
+//! loopback clients share.
+//!
+//! The subset is deliberately small and strict — exactly what the
+//! serving front-end speaks, with every violation mapped to a precise
+//! status code instead of a panic or a hang:
+//!
+//! * request line `METHOD SP PATH SP HTTP/1.1|HTTP/1.0` (else `400`,
+//!   unknown versions `505`);
+//! * `Name: value` headers, names lower-cased on parse (malformed `400`,
+//!   head over [`Limits::max_head`] `431`);
+//! * bodies sized by `Content-Length` only (`Transfer-Encoding` answers
+//!   `501`, a `POST`/`PUT` without a length `411`, a length over
+//!   [`Limits::max_body`] `413`);
+//! * keep-alive by default on 1.1, `Connection: close` honored.
+//!
+//! Parsers never mutate their input: callers accumulate bytes and
+//! re-parse on [`Step::Incomplete`], which makes "split across reads"
+//! handling trivial and directly testable (`rust/tests/net_proto.rs`
+//! feeds every prefix of valid and garbage byte soups).
+
+use super::{Limits, Step, WireError};
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub version_11: bool,
+    /// Header names lower-cased, values trimmed, in wire order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Resolved keep-alive: the version default overridden by any
+    /// `Connection` header.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First header value by lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One parsed HTTP response (the loopback clients' half).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the shared `Name: value` header block; returns
+/// `(headers, content_length)`.
+fn parse_headers<'a>(
+    lines: impl Iterator<Item = &'a str>,
+    limits: &Limits,
+) -> Result<(Vec<(String, String)>, Option<usize>), WireError> {
+    let mut headers = Vec::new();
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| WireError::new(400, "malformed header line"))?;
+        if name.is_empty()
+            || name.contains(' ')
+            || name.contains('\t')
+        {
+            return Err(WireError::new(400, "malformed header name"));
+        }
+        let name = name.to_ascii_lowercase();
+        let value = value.trim().to_string();
+        match name.as_str() {
+            "content-length" => {
+                let n: usize = value.parse().map_err(|_| {
+                    WireError::new(400, "bad content-length")
+                })?;
+                if content_length.is_some_and(|prev| prev != n) {
+                    return Err(WireError::new(
+                        400,
+                        "conflicting content-length",
+                    ));
+                }
+                if n > limits.max_body {
+                    return Err(WireError::new(413, "body too large"));
+                }
+                content_length = Some(n);
+            }
+            "transfer-encoding" => {
+                return Err(WireError::new(
+                    501,
+                    "transfer-encoding not supported",
+                ));
+            }
+            _ => {}
+        }
+        headers.push((name, value));
+    }
+    Ok((headers, content_length))
+}
+
+/// Incrementally parse one request from the front of `buf`.
+pub fn parse_request(
+    buf: &[u8],
+    limits: &Limits,
+) -> Result<Step<Request>, WireError> {
+    let head_end = match find_head_end(buf) {
+        Some(e) => e,
+        None => {
+            return if buf.len() > limits.max_head {
+                Err(WireError::new(431, "request head too large"))
+            } else {
+                Ok(Step::Incomplete)
+            };
+        }
+    };
+    if head_end > limits.max_head {
+        return Err(WireError::new(431, "request head too large"));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| WireError::new(400, "non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let req_line = lines.next().unwrap_or("");
+    let mut parts = req_line.split(' ');
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None)
+                if !m.is_empty() && !p.is_empty() =>
+            {
+                (m, p, v)
+            }
+            _ => return Err(WireError::new(400, "malformed request line")),
+        };
+    if !(1..=16).contains(&method.len())
+        || !method.bytes().all(|b| b.is_ascii_uppercase())
+    {
+        return Err(WireError::new(400, "malformed method"));
+    }
+    if !path.starts_with('/') {
+        return Err(WireError::new(400, "malformed path"));
+    }
+    let version_11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(WireError::new(505, "unsupported HTTP version")),
+    };
+    let (headers, content_length) = parse_headers(lines, limits)?;
+    let body_len = match content_length {
+        Some(n) => n,
+        None => {
+            if method == "POST" || method == "PUT" {
+                return Err(WireError::new(411, "length required"));
+            }
+            0
+        }
+    };
+    let total = head_end + 4 + body_len;
+    if buf.len() < total {
+        return Ok(Step::Incomplete);
+    }
+    let mut keep_alive = version_11;
+    let mut req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        version_11,
+        headers,
+        body: buf[head_end + 4..total].to_vec(),
+        keep_alive,
+    };
+    if let Some(conn) = req.header("connection") {
+        let conn = conn.to_ascii_lowercase();
+        if conn.contains("close") {
+            keep_alive = false;
+        } else if conn.contains("keep-alive") {
+            keep_alive = true;
+        }
+    }
+    req.keep_alive = keep_alive;
+    Ok(Step::Done(req, total))
+}
+
+/// Incrementally parse one response from the front of `buf`. A missing
+/// `Content-Length` is an error — every response this stack emits
+/// carries one, so its absence means a framing bug, not a legal
+/// read-until-close body.
+pub fn parse_response(
+    buf: &[u8],
+    limits: &Limits,
+) -> Result<Step<Response>, WireError> {
+    let head_end = match find_head_end(buf) {
+        Some(e) => e,
+        None => {
+            return if buf.len() > limits.max_head {
+                Err(WireError::new(431, "response head too large"))
+            } else {
+                Ok(Step::Incomplete)
+            };
+        }
+    };
+    if head_end > limits.max_head {
+        return Err(WireError::new(431, "response head too large"));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| WireError::new(400, "non-utf8 response head"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let (version, code) = match (parts.next(), parts.next()) {
+        (Some(v), Some(c)) => (v, c),
+        _ => return Err(WireError::new(400, "malformed status line")),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(WireError::new(400, "malformed status line"));
+    }
+    let status: u16 = code
+        .parse()
+        .map_err(|_| WireError::new(400, "malformed status code"))?;
+    let (headers, content_length) = parse_headers(lines, limits)?;
+    let body_len = content_length
+        .ok_or_else(|| WireError::new(400, "response missing content-length"))?;
+    let total = head_end + 4 + body_len;
+    if buf.len() < total {
+        return Ok(Step::Incomplete);
+    }
+    Ok(Step::Done(
+        Response {
+            status,
+            headers,
+            body: buf[head_end + 4..total].to_vec(),
+        },
+        total,
+    ))
+}
+
+/// Serialize a response with `Content-Length` and an explicit
+/// `Connection` header (the server's one response shape).
+pub fn response(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    let mut v = head.into_bytes();
+    v.extend_from_slice(body);
+    v
+}
+
+/// Serialize a request (the loopback clients' half).
+pub fn request(
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Vec<u8> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: fat\r\n\
+         Content-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    let mut v = head.into_bytes();
+    v.extend_from_slice(body);
+    v
+}
+
+/// Canonical reason phrase for the status codes this stack emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: Limits = Limits { max_head: 1024, max_body: 4096 };
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let wire = request("POST", "/v1/models/m/infer", "application/octet-stream", b"abc");
+        match parse_request(&wire, &L).unwrap() {
+            Step::Done(req, used) => {
+                assert_eq!(used, wire.len());
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/models/m/infer");
+                assert_eq!(req.body, b"abc");
+                assert!(req.keep_alive);
+                assert_eq!(req.header("host"), Some("fat"));
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_prefix_is_incomplete() {
+        let wire = request("POST", "/x", "text/plain", b"hello");
+        for cut in 0..wire.len() {
+            assert_eq!(
+                parse_request(&wire[..cut], &L).unwrap(),
+                Step::Incomplete,
+                "prefix {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_consume_exactly_one() {
+        let mut wire = request("GET", "/stats", "text/plain", b"");
+        let first_len = wire.len();
+        wire.extend_from_slice(&request("GET", "/healthz", "text/plain", b""));
+        match parse_request(&wire, &L).unwrap() {
+            Step::Done(req, used) => {
+                assert_eq!(used, first_len);
+                assert_eq!(req.path, "/stats");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn connection_close_and_http10_default() {
+        let wire = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let Step::Done(req, _) = parse_request(wire, &L).unwrap() else {
+            panic!("incomplete");
+        };
+        assert!(!req.keep_alive);
+        let wire = b"GET / HTTP/1.0\r\n\r\n";
+        let Step::Done(req, _) = parse_request(wire, &L).unwrap() else {
+            panic!("incomplete");
+        };
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn malformed_inputs_get_precise_codes() {
+        let cases: &[(&[u8], u16)] = &[
+            (b"GET\r\n\r\n", 400),
+            (b"GET /x\r\n\r\n", 400),
+            (b"GET /x HTTP/2.0\r\n\r\n", 505),
+            (b"get /x HTTP/1.1\r\n\r\n", 400),
+            (b"GET x HTTP/1.1\r\n\r\n", 400),
+            (b"GET /x HTTP/1.1\r\nno-colon-line\r\n\r\n", 400),
+            (b"GET /x HTTP/1.1\r\nBad Name: v\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nContent-Length: abc\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\n\r\n", 411),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 9999\r\n\r\n", 413),
+            (
+                b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\n",
+                400,
+            ),
+            (
+                b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                501,
+            ),
+        ];
+        for (wire, want) in cases {
+            let got = parse_request(wire, &L).unwrap_err();
+            assert_eq!(got.status, *want, "{}", String::from_utf8_lossy(wire));
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_431_even_without_terminator() {
+        let junk = vec![b'A'; L.max_head + 1];
+        assert_eq!(parse_request(&junk, &L).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn huge_content_length_is_rejected_not_allocated() {
+        let wire =
+            b"POST /x HTTP/1.1\r\nContent-Length: 999999999999999999999\r\n\r\n";
+        // overflows usize -> 400 (bad value), never an allocation
+        assert_eq!(parse_request(wire, &L).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let wire = response(200, "application/json", b"{\"k\":1}", true);
+        let Step::Done(resp, used) = parse_response(&wire, &L).unwrap() else {
+            panic!("incomplete");
+        };
+        assert_eq!(used, wire.len());
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{\"k\":1}");
+        for cut in 0..wire.len() {
+            assert_eq!(
+                parse_response(&wire[..cut], &L).unwrap(),
+                Step::Incomplete,
+                "prefix {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn reason_phrases_cover_emitted_codes() {
+        for code in [200, 400, 404, 405, 408, 411, 413, 429, 431, 500, 501, 503, 505]
+        {
+            assert_ne!(reason(code), "Error", "code {code}");
+        }
+        assert_eq!(reason(418), "Error");
+    }
+}

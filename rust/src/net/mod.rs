@@ -1,0 +1,97 @@
+//! Socket serving front-end over [`crate::int8::serve::Int8Engine`]
+//! (DESIGN.md §10) — the network layer that turns the in-process
+//! serving stack of PRs 2–5 into a real server, with zero dependencies
+//! beyond `std::net`.
+//!
+//! Two wire protocols share one listener port, distinguished by the
+//! first byte of a connection (`0xFA` opens the binary protocol, any
+//! other byte is parsed as HTTP):
+//!
+//! * **HTTP/1.1** ([`http`]): hand-rolled request parsing with
+//!   keep-alive, `POST /v1/models/<name>/infer` carrying raw HWC u8
+//!   pixels and answering JSON logits, `GET /stats` and `GET /healthz`.
+//! * **Length-prefixed frames** ([`frame`]): a compact binary protocol
+//!   for machine clients — magic, opcode, model name, `u32` body length,
+//!   raw pixel bytes in, raw little-endian `f32` logits out.
+//!
+//! [`server::Server`] owns the listener: the accept loop and every
+//! per-connection handler run on the worker pool's detached IO workers
+//! ([`crate::util::threads::WorkerPool::spawn_io`]), requests are routed
+//! by model name through a [`registry::ModelRegistry`], and admission
+//! control rejects work beyond `max_inflight` with a `429`-style answer
+//! instead of queueing unboundedly. Sockets carry read/write deadlines,
+//! so slow-loris clients and half-dead peers are bounded, and
+//! [`server::Server::drain`] performs a graceful shutdown: stop
+//! accepting, finish in-flight work, then force-close stragglers.
+//!
+//! Bit-exactness survives the network hop: the frame protocol carries
+//! logits as raw `f32` bits, and the HTTP path prints each logit with
+//! Rust's shortest round-trip formatting and parses it back with the
+//! correctly-rounded `str::parse::<f32>` — both reproduce
+//! `run_quant_ref`'s bytes exactly (`rust/tests/serve_stress.rs`
+//! asserts this over live sockets).
+
+pub mod client;
+pub mod frame;
+pub mod http;
+pub mod registry;
+pub mod server;
+pub mod signal;
+
+pub use client::{FrameClient, HttpClient};
+pub use registry::ModelRegistry;
+pub use server::{Server, ServerOptions, ServerStats};
+
+/// Parser size caps shared by both wire protocols. Every cap answers a
+/// well-formed protocol error instead of growing a buffer without
+/// bound, so a garbage-spewing client costs bounded memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Limits {
+    /// Maximum HTTP head (request line + headers) bytes.
+    pub max_head: usize,
+    /// Maximum request body bytes (HTTP body or frame payload).
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        // 224*224*3 mobilenet input is ~150 KiB; 4 MiB leaves headroom
+        // without letting one connection balloon the process.
+        Limits { max_head: 8 * 1024, max_body: 4 << 20 }
+    }
+}
+
+/// Outcome of feeding a byte buffer to an incremental parser: either
+/// the message is not complete yet (read more bytes and retry — the
+/// parser is pure, so re-parsing a grown buffer is always safe), or a
+/// complete message plus the number of bytes it consumed (trailing
+/// bytes belong to the next pipelined message).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step<T> {
+    Incomplete,
+    Done(T, usize),
+}
+
+/// A protocol violation with the HTTP status code it maps to (the frame
+/// protocol folds these onto its one-byte status space via
+/// [`frame::status_for`]). Parse errors are fatal to the connection:
+/// after a malformed message the byte stream cannot be resynchronized.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn new(status: u16, msg: impl Into<String>) -> Self {
+        WireError { status, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.status, self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}

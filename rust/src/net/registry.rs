@@ -1,0 +1,56 @@
+//! Multi-model registry: routes requests by model name to per-model
+//! [`Int8Engine`] handles (DESIGN.md §10.3).
+//!
+//! The registry is a cheaply clonable handle over a name → engine map.
+//! Lookups clone the engine (an `Arc` bump), so the read lock is held
+//! only for the map probe — never across inference. [`insert`] replaces
+//! atomically, which doubles as hot reload: in-flight requests finish
+//! on the engine they resolved, new requests resolve the new one.
+//!
+//! [`insert`]: ModelRegistry::insert
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::int8::serve::Int8Engine;
+
+/// Shared name → engine routing table.
+#[derive(Clone, Default)]
+pub struct ModelRegistry {
+    inner: Arc<RwLock<BTreeMap<String, Int8Engine>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `engine` under `name`, returning the engine it replaced
+    /// (if any). Replacement is atomic — this is the hot-reload path.
+    pub fn insert(&self, name: &str, engine: Int8Engine) -> Option<Int8Engine> {
+        self.inner.write().unwrap().insert(name.to_string(), engine)
+    }
+
+    /// Resolve a model name to a serving handle (an `Arc` clone).
+    pub fn get(&self, name: &str) -> Option<Int8Engine> {
+        self.inner.read().unwrap().get(name).cloned()
+    }
+
+    /// Unregister a model; in-flight requests on it finish normally.
+    pub fn remove(&self, name: &str) -> Option<Int8Engine> {
+        self.inner.write().unwrap().remove(name)
+    }
+
+    /// Registered model names, sorted (BTreeMap order).
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

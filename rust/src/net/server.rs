@@ -1,0 +1,640 @@
+//! The socket server (DESIGN.md §10.3–10.5): listener, accept loop,
+//! per-connection protocol handling, admission control and graceful
+//! drain over the [`ModelRegistry`].
+//!
+//! Concurrency model: the accept loop and every connection handler run
+//! as detached IO tasks on the process worker pool
+//! ([`crate::util::threads::WorkerPool::spawn_io`]) — blocking socket
+//! reads therefore never occupy a compute shard, and inference inside a
+//! handler still runs on the shard workers exactly as in-process
+//! serving does. Backpressure is admission control, not queueing:
+//!
+//! * over [`ServerOptions::max_conns`] open connections → the accept
+//!   loop answers `503` and drops the socket;
+//! * over [`ServerOptions::max_inflight`] executing requests → the
+//!   handler answers `429` without touching the engine.
+//!
+//! Both caps bound memory: a connection holds at most
+//! [`super::Limits`] buffered bytes, and rejected work is never
+//! buffered at all. Read/write deadlines bound how long a slow or dead
+//! peer can hold a handler. [`Server::drain`] stops the accept loop,
+//! waits for open connections and in-flight work to finish within a
+//! grace period, then force-closes stragglers.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::threads::{pool, Notify};
+
+use super::registry::ModelRegistry;
+use super::{frame, http, Limits, Step, WireError};
+
+/// Server construction knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerOptions {
+    /// Open-connection cap; the accept loop answers `503` beyond it.
+    pub max_conns: usize,
+    /// Executing-request cap; handlers answer `429` beyond it.
+    pub max_inflight: usize,
+    /// Socket read deadline (slow-loris bound).
+    pub read_timeout: Duration,
+    /// Socket write deadline (dead-peer bound).
+    pub write_timeout: Duration,
+    /// Parser size caps.
+    pub limits: Limits,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            max_conns: 256,
+            max_inflight: 128,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            limits: Limits::default(),
+        }
+    }
+}
+
+/// Monotonic counters and gauges; `/stats` serializes these and the
+/// overload tests reconcile them against client-side tallies.
+#[derive(Default)]
+struct Counters {
+    accepted_conns: AtomicU64,
+    rejected_conns: AtomicU64,
+    /// Gauge: connections currently owned by a handler.
+    open_conns: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    /// Gauge: requests past admission, not yet answered.
+    in_flight: AtomicU64,
+    malformed: AtomicU64,
+    timeouts: AtomicU64,
+    disconnects: AtomicU64,
+}
+
+/// Point-in-time server counter snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    pub accepted_conns: u64,
+    pub rejected_conns: u64,
+    pub open_conns: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub in_flight: u64,
+    pub malformed: u64,
+    pub timeouts: u64,
+    pub disconnects: u64,
+    pub draining: bool,
+}
+
+struct Inner {
+    registry: ModelRegistry,
+    opts: ServerOptions,
+    addr: SocketAddr,
+    counters: Counters,
+    draining: AtomicBool,
+    /// Clones of every open connection, for force-shutdown at drain.
+    conns: Mutex<BTreeMap<u64, TcpStream>>,
+    conn_seq: AtomicU64,
+    /// Signaled when the accept loop exits.
+    accept_done: Notify,
+}
+
+/// A running socket server; dropping the handle does **not** stop it —
+/// call [`Server::drain`] for a graceful shutdown.
+#[derive(Clone)]
+pub struct Server {
+    inner: Arc<Inner>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting on the worker pool's IO tasks.
+    pub fn bind(
+        addr: &str,
+        registry: ModelRegistry,
+        opts: ServerOptions,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            registry,
+            opts,
+            addr: local,
+            counters: Counters::default(),
+            draining: AtomicBool::new(false),
+            conns: Mutex::new(BTreeMap::new()),
+            conn_seq: AtomicU64::new(0),
+            accept_done: Notify::new(),
+        });
+        let accept_inner = Arc::clone(&inner);
+        pool().spawn_io(move || accept_loop(accept_inner, listener));
+        Ok(Server { inner })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.addr
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.inner.registry
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.draining.load(Ordering::SeqCst)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ServerStats {
+        let c = &self.inner.counters;
+        ServerStats {
+            accepted_conns: c.accepted_conns.load(Ordering::Relaxed),
+            rejected_conns: c.rejected_conns.load(Ordering::Relaxed),
+            open_conns: c.open_conns.load(Ordering::SeqCst),
+            admitted: c.admitted.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            in_flight: c.in_flight.load(Ordering::SeqCst),
+            malformed: c.malformed.load(Ordering::Relaxed),
+            timeouts: c.timeouts.load(Ordering::Relaxed),
+            disconnects: c.disconnects.load(Ordering::Relaxed),
+            draining: self.is_draining(),
+        }
+    }
+
+    /// The `/stats` JSON document (also served over both protocols).
+    pub fn stats_json(&self) -> String {
+        stats_json(&self.inner)
+    }
+
+    /// Graceful shutdown: stop accepting, wait up to `grace` for open
+    /// connections and in-flight requests to finish, then force-close
+    /// stragglers. Idempotent; new requests answer `503` from the
+    /// moment this is called.
+    pub fn drain(&self, grace: Duration) {
+        let inner = &self.inner;
+        if !inner.draining.swap(true, Ordering::SeqCst) {
+            // Wake the accept loop: it re-checks `draining` once per
+            // accepted connection, so connect to ourselves.
+            let _ = TcpStream::connect_timeout(
+                &inner.addr,
+                Duration::from_millis(250),
+            );
+        }
+        let deadline = Instant::now() + grace;
+        inner.accept_done.wait_deadline(deadline);
+        loop {
+            let quiet = inner.counters.open_conns.load(Ordering::SeqCst) == 0
+                && inner.counters.in_flight.load(Ordering::SeqCst) == 0;
+            if quiet {
+                return;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Grace expired: cut stragglers loose. Their handlers observe
+        // the shutdown as a read/write error and unwind normally.
+        let stragglers: Vec<TcpStream> = {
+            let mut m = inner.conns.lock().unwrap();
+            std::mem::take(&mut *m).into_values().collect()
+        };
+        for s in &stragglers {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let hard = Instant::now() + Duration::from_millis(500);
+        while inner.counters.open_conns.load(Ordering::SeqCst) != 0
+            && Instant::now() < hard
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+fn accept_loop(inner: Arc<Inner>, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if inner.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let c = &inner.counters;
+        if c.open_conns.load(Ordering::SeqCst)
+            >= inner.opts.max_conns as u64
+        {
+            c.rejected_conns.fetch_add(1, Ordering::Relaxed);
+            // Best-effort refusal; the peer may be gone already.
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(Duration::from_millis(250)));
+            let _ = s.write_all(&http::response(
+                503,
+                "text/plain",
+                b"connection limit\n",
+                false,
+            ));
+            continue;
+        }
+        c.accepted_conns.fetch_add(1, Ordering::Relaxed);
+        c.open_conns.fetch_add(1, Ordering::SeqCst);
+        let id = inner.conn_seq.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            inner.conns.lock().unwrap().insert(id, clone);
+        }
+        let conn_inner = Arc::clone(&inner);
+        pool().spawn_io(move || {
+            // Deregisters + decrements even if the handler panics (the
+            // IO worker catches the unwind after Drop runs).
+            let _guard = ConnGuard { inner: &conn_inner, id };
+            handle_conn(&conn_inner, stream);
+        });
+    }
+    // Listener drops here: the port closes, post-drain connects fail.
+    inner.accept_done.notify();
+}
+
+struct ConnGuard<'a> {
+    inner: &'a Arc<Inner>,
+    id: u64,
+}
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.inner.conns.lock().unwrap().remove(&self.id);
+        self.inner.counters.open_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Drive one connection to completion: accumulate bytes, parse as many
+/// complete messages as the buffer holds (protocol sniffed from the
+/// first byte), dispatch, answer. Every exit path is bounded: parse
+/// errors close after a well-formed error answer, read deadlines close
+/// after a best-effort timeout answer, and EOF just closes.
+fn handle_conn(inner: &Arc<Inner>, mut stream: TcpStream) {
+    let opts = &inner.opts;
+    let c = &inner.counters;
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(opts.read_timeout)).is_err()
+        || stream.set_write_timeout(Some(opts.write_timeout)).is_err()
+    {
+        return;
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 16 * 1024];
+    'conn: loop {
+        // Parse phase: drain every complete pipelined message.
+        while !buf.is_empty() {
+            if buf[0] == frame::MAGIC[0] {
+                match frame::parse_request(&buf, &opts.limits) {
+                    Ok(Step::Done(f, used)) => {
+                        let resp = dispatch_frame(inner, f);
+                        if stream.write_all(&resp).is_err() {
+                            break 'conn;
+                        }
+                        buf.drain(..used);
+                    }
+                    Ok(Step::Incomplete) => break,
+                    Err(e) => {
+                        c.malformed.fetch_add(1, Ordering::Relaxed);
+                        let _ = stream.write_all(&frame::encode_response(
+                            frame::status_for(e.status),
+                            e.msg.as_bytes(),
+                        ));
+                        break 'conn;
+                    }
+                }
+            } else {
+                match http::parse_request(&buf, &opts.limits) {
+                    Ok(Step::Done(req, used)) => {
+                        let keep = req.keep_alive;
+                        let resp = dispatch_http(inner, &req);
+                        if stream.write_all(&resp).is_err() {
+                            break 'conn;
+                        }
+                        buf.drain(..used);
+                        if !keep {
+                            break 'conn;
+                        }
+                    }
+                    Ok(Step::Incomplete) => break,
+                    Err(e) => {
+                        c.malformed.fetch_add(1, Ordering::Relaxed);
+                        let _ = stream.write_all(&http::response(
+                            e.status,
+                            "text/plain",
+                            format!("{}\n", e.msg).as_bytes(),
+                            false,
+                        ));
+                        break 'conn;
+                    }
+                }
+            }
+        }
+        if inner.draining.load(Ordering::SeqCst) && buf.is_empty() {
+            break;
+        }
+        // Read phase.
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                if !buf.is_empty() {
+                    // EOF mid-request: the peer hung up on us.
+                    c.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if !buf.is_empty() {
+                    // Deadline fired with a request half-arrived:
+                    // slow-loris. Answer and cut the connection. An
+                    // idle keep-alive connection (empty buffer) just
+                    // closes quietly.
+                    c.timeouts.fetch_add(1, Ordering::Relaxed);
+                    let resp = if buf[0] == frame::MAGIC[0] {
+                        frame::encode_response(
+                            frame::ST_BAD_REQUEST,
+                            b"read timeout",
+                        )
+                    } else {
+                        http::response(
+                            408,
+                            "text/plain",
+                            b"read timeout\n",
+                            false,
+                        )
+                    };
+                    let _ = stream.write_all(&resp);
+                }
+                break;
+            }
+            Err(_) => {
+                c.disconnects.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// RAII decrement for the admission `in_flight` gauge.
+struct InflightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The one inference path both protocols dispatch into: drain check,
+/// model routing, admission control, engine call, counter bookkeeping.
+fn infer(
+    inner: &Inner,
+    model: &str,
+    pixels: &[u8],
+) -> Result<Vec<f32>, WireError> {
+    if inner.draining.load(Ordering::SeqCst) {
+        return Err(WireError::new(503, "draining"));
+    }
+    let engine = inner
+        .registry
+        .get(model)
+        .ok_or_else(|| WireError::new(404, format!("unknown model {model}")))?;
+    let c = &inner.counters;
+    // Admission: claim a slot first, give it back if over the cap. The
+    // claim-first order makes the gauge an upper bound, so the cap can
+    // never be exceeded by a race.
+    let prev = c.in_flight.fetch_add(1, Ordering::SeqCst);
+    if prev >= inner.opts.max_inflight as u64 {
+        c.in_flight.fetch_sub(1, Ordering::SeqCst);
+        c.rejected.fetch_add(1, Ordering::Relaxed);
+        return Err(WireError::new(429, "over capacity"));
+    }
+    let _slot = InflightGuard(&c.in_flight);
+    c.admitted.fetch_add(1, Ordering::Relaxed);
+    match engine.infer(pixels) {
+        Ok(logits) => {
+            c.completed.fetch_add(1, Ordering::Relaxed);
+            Ok(logits)
+        }
+        Err(e) => {
+            c.failed.fetch_add(1, Ordering::Relaxed);
+            Err(WireError::new(400, e.to_string()))
+        }
+    }
+}
+
+/// `/v1/models/<name>/infer` → `<name>` (no empty or nested names).
+fn infer_path(path: &str) -> Option<&str> {
+    let name = path.strip_prefix("/v1/models/")?.strip_suffix("/infer")?;
+    (!name.is_empty() && !name.contains('/')).then_some(name)
+}
+
+fn dispatch_http(inner: &Inner, req: &http::Request) -> Vec<u8> {
+    let keep = req.keep_alive;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            http::response(200, "text/plain", b"ok\n", keep)
+        }
+        ("GET", "/stats") => http::response(
+            200,
+            "application/json",
+            stats_json(inner).as_bytes(),
+            keep,
+        ),
+        (method, path) => match infer_path(path) {
+            Some(name) => {
+                if method != "POST" {
+                    return http::response(
+                        405,
+                        "text/plain",
+                        b"use POST\n",
+                        keep,
+                    );
+                }
+                match infer(inner, name, &req.body) {
+                    Ok(logits) => http::response(
+                        200,
+                        "application/json",
+                        logits_json(name, &logits).as_bytes(),
+                        keep,
+                    ),
+                    Err(e) => http::response(
+                        e.status,
+                        "text/plain",
+                        format!("{}\n", e.msg).as_bytes(),
+                        keep,
+                    ),
+                }
+            }
+            None => http::response(404, "text/plain", b"not found\n", keep),
+        },
+    }
+}
+
+fn dispatch_frame(inner: &Inner, f: frame::Frame) -> Vec<u8> {
+    match f.op {
+        frame::OP_INFER => match infer(inner, &f.model, &f.body) {
+            Ok(logits) => {
+                let mut body = Vec::with_capacity(logits.len() * 4);
+                for v in &logits {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                frame::encode_response(frame::ST_OK, &body)
+            }
+            Err(e) => frame::encode_response(
+                frame::status_for(e.status),
+                e.msg.as_bytes(),
+            ),
+        },
+        frame::OP_STATS => frame::encode_response(
+            frame::ST_OK,
+            stats_json(inner).as_bytes(),
+        ),
+        _ => frame::encode_response(frame::ST_BAD_REQUEST, b"unknown opcode"),
+    }
+}
+
+/// Logits answer body. Each value prints with Rust's shortest
+/// round-trip `f32` formatting, so `str::parse::<f32>` on the client
+/// recovers the exact bits — the bit-exactness oracle holds across the
+/// text protocol (DESIGN.md §10.5).
+fn logits_json(model: &str, logits: &[f32]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(24 + 16 * logits.len());
+    let _ = write!(s, "{{\"model\":\"{}\",\"logits\":[", esc(model));
+    for (i, v) in logits.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{v}");
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Minimal JSON string escape (registry names are CLI identifiers, but
+/// never emit a syntactically broken document).
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn stats_json(inner: &Inner) -> String {
+    use std::fmt::Write as _;
+    let c = &inner.counters;
+    let p = pool();
+    let mut s = String::with_capacity(768);
+    let _ = write!(
+        s,
+        "{{\"draining\":{},\"accepted_conns\":{},\"rejected_conns\":{},\
+         \"open_conns\":{},\"admitted\":{},\"rejected\":{},\
+         \"completed\":{},\"failed\":{},\"in_flight\":{},\
+         \"malformed\":{},\"timeouts\":{},\"disconnects\":{},\
+         \"max_conns\":{},\"max_inflight\":{},\
+         \"pool_workers\":{},\"io_workers\":{},\"io_idle\":{},\
+         \"models\":{{",
+        inner.draining.load(Ordering::SeqCst),
+        c.accepted_conns.load(Ordering::Relaxed),
+        c.rejected_conns.load(Ordering::Relaxed),
+        c.open_conns.load(Ordering::SeqCst),
+        c.admitted.load(Ordering::Relaxed),
+        c.rejected.load(Ordering::Relaxed),
+        c.completed.load(Ordering::Relaxed),
+        c.failed.load(Ordering::Relaxed),
+        c.in_flight.load(Ordering::SeqCst),
+        c.malformed.load(Ordering::Relaxed),
+        c.timeouts.load(Ordering::Relaxed),
+        c.disconnects.load(Ordering::Relaxed),
+        inner.opts.max_conns,
+        inner.opts.max_inflight,
+        p.workers(),
+        p.io_workers(),
+        p.io_idle(),
+    );
+    for (i, name) in inner.registry.names().iter().enumerate() {
+        let Some(engine) = inner.registry.get(name) else {
+            continue;
+        };
+        let st = engine.stats();
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "\"{}\":{{\"threads\":{},\"pooled_states\":{},\
+             \"in_flight\":{},\"requests\":{},\"param_bytes\":{},\
+             \"batcher\":",
+            esc(name),
+            st.threads,
+            st.pooled_states,
+            st.in_flight,
+            st.requests,
+            engine.param_bytes(),
+        );
+        match st.batcher {
+            Some(b) => {
+                let _ = write!(
+                    s,
+                    "{{\"requests\":{},\"batches\":{},\"rows\":{},\
+                     \"waiting\":{}}}",
+                    b.requests, b.batches, b.rows, b.waiting
+                );
+            }
+            None => s.push_str("null"),
+        }
+        s.push('}');
+    }
+    s.push_str("}}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_path_routing() {
+        assert_eq!(infer_path("/v1/models/tiny_cnn/infer"), Some("tiny_cnn"));
+        assert_eq!(infer_path("/v1/models/a.b-c/infer"), Some("a.b-c"));
+        assert_eq!(infer_path("/v1/models//infer"), None);
+        assert_eq!(infer_path("/v1/models/a/b/infer"), None);
+        assert_eq!(infer_path("/v1/models/a"), None);
+        assert_eq!(infer_path("/stats"), None);
+    }
+
+    #[test]
+    fn logits_json_round_trips_awkward_floats() {
+        let vals = [0.1f32, -0.0, f32::MIN_POSITIVE, 3.4e38, 1.0 / 3.0];
+        let s = logits_json("m", &vals);
+        let inner = s
+            .split("\"logits\":[")
+            .nth(1)
+            .and_then(|t| t.strip_suffix("]}"))
+            .unwrap();
+        for (tok, want) in inner.split(',').zip(vals.iter()) {
+            let got: f32 = tok.parse().unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "token {tok}");
+        }
+    }
+}

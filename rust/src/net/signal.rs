@@ -1,0 +1,62 @@
+//! Drain-on-signal for the `fat serve` subcommand: SIGINT/SIGTERM flip
+//! one async-signal-safe flag that the serve loop polls, then
+//! [`super::server::Server::drain`] does the actual graceful shutdown
+//! on the main thread. The handler itself only stores an atomic — the
+//! full async-signal-safety story is that nothing else happens in
+//! signal context.
+//!
+//! Zero-dependency by design (the repo bans crates the container lacks,
+//! DESIGN.md §1): on Unix we declare libc's `signal(2)` ourselves
+//! instead of pulling in the `libc` crate; elsewhere installation is a
+//! no-op and the serve loop simply runs until killed.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set by the signal handler; polled by the serve loop.
+static DRAIN: AtomicBool = AtomicBool::new(false);
+/// Guards against double-installation.
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Has a drain been requested (SIGINT/SIGTERM since install)?
+pub fn drain_requested() -> bool {
+    DRAIN.load(Ordering::Acquire)
+}
+
+/// Install the SIGINT/SIGTERM → drain-flag handler (idempotent).
+pub fn install_drain_handler() {
+    if INSTALLED.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    platform::install();
+}
+
+#[cfg(unix)]
+mod platform {
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        /// POSIX `signal(2)`. The return value (previous disposition)
+        /// is deliberately opaque — we never restore it.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        // Only an atomic store: async-signal-safe.
+        super::DRAIN.store(true, Ordering::Release);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod platform {
+    pub fn install() {}
+}

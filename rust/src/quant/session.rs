@@ -805,6 +805,23 @@ impl Thresholded {
                 .with_batch(BatchOptions { max_batch, max_wait_us }),
         )
     }
+
+    /// Stage 3 transition straight to a live socket server: export,
+    /// wrap in an [`Int8Engine`] per `opts`, register it under the
+    /// graph's name and bind `addr` (`crate::net`, DESIGN.md §10). The
+    /// returned server is already accepting; route further models
+    /// through [`crate::net::ModelRegistry::insert`] on its registry,
+    /// and stop it with [`crate::net::Server::drain`].
+    pub fn serve_http(
+        &self,
+        addr: &str,
+        opts: EngineOptions,
+        server: crate::net::server::ServerOptions,
+    ) -> Result<crate::net::Server> {
+        let registry = crate::net::ModelRegistry::new();
+        registry.insert(&self.core.graph.name, self.serve(opts)?);
+        crate::net::Server::bind(addr, registry, server)
+    }
 }
 
 /// Build a quantized model from explicit parts — the one path into

@@ -34,6 +34,18 @@
 //! exceed the worker count — extra shards multiplex onto whichever
 //! thread frees up first, and every schedule is bit-exact because shard
 //! payloads own disjoint outputs.
+//!
+//! ## IO tasks
+//!
+//! The shard workers above are compute-bound and *must not block*: a
+//! socket read parked on one of them would stall GEMM shards. The
+//! serving front-end (`crate::net`, DESIGN.md §10) instead submits its
+//! accept loop and per-connection handlers through
+//! [`WorkerPool::spawn_io`]: detached, long-lived **IO workers** parked
+//! on their own queue, spawned on demand (capped at [`MAX_IO_WORKERS`])
+//! and reused across connections — serving a new connection is a queue
+//! push, not a thread spawn. Panics inside an IO task are contained to
+//! the task; the worker survives and returns to the queue.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -175,6 +187,47 @@ struct PoolShared {
     work: Condvar,
 }
 
+/// Hard cap on detached IO workers — a backstop far above any sane
+/// connection-slot configuration (`net::ServerOptions::max_conns`
+/// bounds live connections long before this bites).
+pub const MAX_IO_WORKERS: usize = 512;
+
+type IoJob = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct IoState {
+    jobs: VecDeque<IoJob>,
+    /// Workers currently parked on `work` (tracked under the same lock
+    /// as `jobs`, so the spawn-on-demand decision cannot race a worker
+    /// that is about to wait).
+    idle: usize,
+    spawned: usize,
+}
+
+#[derive(Default)]
+struct IoShared {
+    state: Mutex<IoState>,
+    work: Condvar,
+}
+
+fn io_worker_loop(shared: Arc<IoShared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                st.idle += 1;
+                st = shared.work.wait(st).unwrap();
+                st.idle -= 1;
+            }
+        };
+        // A panicking connection handler must not take the worker down.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
 /// Process-wide persistent worker pool (see the module docs). Workers
 /// are spawned lazily up to the machine parallelism (or an explicit
 /// `FAT_THREADS` ask, hard-capped at [`MAX_THREADS`]) and then park on
@@ -182,6 +235,7 @@ struct PoolShared {
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     spawned: Mutex<usize>,
+    io: Arc<IoShared>,
 }
 
 /// The process-wide pool. Initialised on first use; worker threads are
@@ -194,6 +248,7 @@ pub fn pool() -> &'static WorkerPool {
             work: Condvar::new(),
         }),
         spawned: Mutex::new(0),
+        io: Arc::new(IoShared::default()),
     })
 }
 
@@ -232,6 +287,42 @@ impl WorkerPool {
     /// Number of live worker threads (diagnostics).
     pub fn workers(&self) -> usize {
         *self.spawned.lock().unwrap()
+    }
+
+    /// Run a long-lived or blocking task on the pool's detached IO
+    /// workers (see the module docs): the serving front-end's accept
+    /// loop and per-connection handlers go through here so blocking
+    /// socket reads never occupy a compute shard worker. An idle IO
+    /// worker picks the task up immediately; otherwise a new worker is
+    /// spawned (up to [`MAX_IO_WORKERS`], beyond which tasks queue until
+    /// a worker frees up). Tasks are fire-and-forget; a panic inside the
+    /// task is contained to the task.
+    pub fn spawn_io(&self, f: impl FnOnce() + Send + 'static) {
+        {
+            let mut st = self.io.state.lock().unwrap();
+            st.jobs.push_back(Box::new(f));
+            if st.idle == 0 && st.spawned < MAX_IO_WORKERS {
+                let n = st.spawned;
+                st.spawned += 1;
+                let shared = Arc::clone(&self.io);
+                std::thread::Builder::new()
+                    .name(format!("fat-io-{n}"))
+                    .spawn(move || io_worker_loop(shared))
+                    .expect("spawn io worker");
+            }
+        }
+        self.io.work.notify_one();
+    }
+
+    /// Number of live IO worker threads (diagnostics).
+    pub fn io_workers(&self) -> usize {
+        self.io.state.lock().unwrap().spawned
+    }
+
+    /// IO workers currently parked with no queued task (diagnostics).
+    pub fn io_idle(&self) -> usize {
+        let st = self.io.state.lock().unwrap();
+        st.idle.saturating_sub(st.jobs.len())
     }
 
     fn ensure_workers(&self, want: usize) {
@@ -473,6 +564,62 @@ mod tests {
         );
         assert!(!hit);
         assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
+    }
+
+    #[test]
+    fn spawn_io_runs_detached_tasks() {
+        let done = Arc::new(Notify::new());
+        let d = Arc::clone(&done);
+        pool().spawn_io(move || d.notify());
+        done.wait();
+        assert!(pool().io_workers() >= 1);
+    }
+
+    #[test]
+    fn spawn_io_blockers_get_distinct_workers() {
+        // N tasks that all block until every one of them has started:
+        // this only completes if each got its own worker (tasks must
+        // not queue behind a blocked sibling while under the cap).
+        let n = 6usize;
+        let started = Arc::new(AtomicUsize::new(0));
+        let release = Arc::new(Notify::new());
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..n {
+            let (s, r, d) = (
+                Arc::clone(&started),
+                Arc::clone(&release),
+                Arc::clone(&done),
+            );
+            pool().spawn_io(move || {
+                s.fetch_add(1, Ordering::SeqCst);
+                r.wait();
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let t0 = Instant::now();
+        while started.load(Ordering::SeqCst) < n
+            && t0.elapsed() < std::time::Duration::from_secs(10)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(started.load(Ordering::SeqCst), n, "all tasks started");
+        release.notify();
+        while done.load(Ordering::SeqCst) < n
+            && t0.elapsed() < std::time::Duration::from_secs(10)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(done.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn spawn_io_panics_are_contained() {
+        pool().spawn_io(|| panic!("io task panic (expected in test)"));
+        // The pool keeps serving tasks afterwards.
+        let done = Arc::new(Notify::new());
+        let d = Arc::clone(&done);
+        pool().spawn_io(move || d.notify());
+        done.wait();
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! Protocol battery for the socket front-end (`fat::net`, DESIGN.md
+//! §10): truncated, oversized, split-across-reads and garbage-byte
+//! requests against the pure parsers **and** a live loopback server.
+//! The contract under attack input is narrow and absolute — the server
+//! answers a well-formed error or closes the connection cleanly; it
+//! never panics and never hangs (every read here carries a deadline, so
+//! a hang fails the test). Happy-path responses must stay bit-exact
+//! with `run_quant_ref` even when the request arrives a few bytes at a
+//! time. (CI re-runs this file under `FAT_THREADS=1` and `8`.)
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+use fat::int8::serve::{EngineOptions, InferClient, Int8Engine};
+use fat::int8::{QModel, QTensor};
+use fat::model::store::{Site, SitesJson};
+use fat::model::{GraphDef, Op};
+use fat::net::client::parse_logits_json;
+use fat::net::{
+    frame, http, FrameClient, HttpClient, Limits, ModelRegistry, Server,
+    ServerOptions, Step,
+};
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::tensor::Tensor;
+use fat::util::json::Json;
+use fat::util::prop;
+
+/// Tiny gap→dense model: big enough to produce nontrivial logits,
+/// small enough that a debug-build battery stays fast.
+const GRAPH: &str = r#"{
+  "name": "proto", "num_classes": 3,
+  "nodes": [
+    {"id": "input", "op": "input", "inputs": [], "shape": [4, 4, 2]},
+    {"id": "g", "op": "gap", "inputs": ["input"]},
+    {"id": "d", "op": "dense", "inputs": ["g"], "cin": 2, "cout": 3, "bias": true}
+  ]}"#;
+
+const H: usize = 4;
+const W: usize = 4;
+const C: usize = 2;
+const PER_IMG: usize = H * W * C;
+const IMAGES: usize = 3;
+
+fn model() -> QModel {
+    let g = GraphDef::from_json(GRAPH).unwrap();
+    let mut w = BTreeMap::new();
+    let mut seed = 900u64;
+    for n in g.conv_like() {
+        let (wlen, cout) = match n.op {
+            Op::Conv => (n.k * n.k * n.cin * n.cout, n.cout),
+            Op::DwConv => (n.k * n.k * n.ch, n.ch),
+            Op::Dense => (n.cin * n.cout, n.cout),
+            _ => unreachable!(),
+        };
+        w.insert(
+            format!("{}.w", n.id),
+            Tensor::f32(vec![wlen], prop::f32s(seed, wlen, -0.6, 0.6)),
+        );
+        w.insert(
+            format!("{}.b", n.id),
+            Tensor::f32(vec![cout], prop::f32s(seed + 1, cout, -0.2, 0.2)),
+        );
+        seed += 2;
+    }
+    let s = SitesJson {
+        sites: g
+            .sites()
+            .into_iter()
+            .map(|(id, unsigned)| Site { id, unsigned })
+            .collect(),
+        channel_stats: vec![],
+        weight_order: g.folded_weight_order(),
+        val_acc_fp_pretrain: -1.0,
+    };
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.0 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 2.5 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
+    build_qmodel(&g, &w, &s, &st, QuantMode::SymVector, &tr).unwrap()
+}
+
+fn pixels(img: usize) -> Vec<u8> {
+    (0..PER_IMG)
+        .map(|i| ((i * 37 + img * 101 + 5) % 256) as u8)
+        .collect()
+}
+
+fn oracle_rows(qm: &QModel) -> Vec<Vec<f32>> {
+    (0..IMAGES)
+        .map(|img| {
+            let x: Vec<f32> =
+                pixels(img).iter().map(|&p| p as f32 / 255.0).collect();
+            let q = QTensor::quantize(vec![1, H, W, C], &x, qm.input_qp);
+            qm.run_quant_ref(q).unwrap().dequantize()
+        })
+        .collect()
+}
+
+fn assert_row_eq(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{tag} logit {i}: {} != {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// Boot a single-model loopback server (the "proto" endpoint).
+fn boot() -> (Server, SocketAddr) {
+    let engine = Int8Engine::new(model(), EngineOptions::threads(2));
+    let registry = ModelRegistry::new();
+    registry.insert("proto", engine);
+    let server =
+        Server::bind("127.0.0.1:0", registry, ServerOptions::default())
+            .unwrap();
+    let addr = server.local_addr();
+    (server, addr)
+}
+
+/// Raw attack socket with bounded reads — a server hang fails the test
+/// as a read-timeout unwrap instead of wedging the suite.
+fn raw(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+    s
+}
+
+/// Every byte the server sent back must parse as a sequence of
+/// well-formed messages of the protocol the connection spoke.
+fn assert_well_formed(buf: &[u8], is_frame: bool) {
+    let limits = Limits::default();
+    let mut rest = buf;
+    while !rest.is_empty() {
+        if is_frame {
+            match frame::parse_response(rest, &limits).unwrap() {
+                Step::Done(_, used) => rest = &rest[used..],
+                Step::Incomplete => panic!("truncated frame response"),
+            }
+        } else {
+            match http::parse_response(rest, &limits).unwrap() {
+                Step::Done(_, used) => rest = &rest[used..],
+                Step::Incomplete => panic!("truncated http response"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pure parsers under fire (no sockets)
+// ---------------------------------------------------------------------
+
+#[test]
+fn parsers_never_panic_on_byte_soup() {
+    let limits = Limits::default();
+    prop::for_cases(11, 300, |case| {
+        let n = prop::usize_in(11, case, 0, 600);
+        let bytes: Vec<u8> =
+            prop::i8s(case, n).into_iter().map(|b| b as u8).collect();
+        // Any Ok/Err outcome is fine; the property is "returns".
+        let _ = http::parse_request(&bytes, &limits);
+        let _ = http::parse_response(&bytes, &limits);
+        let _ = frame::parse_request(&bytes, &limits);
+        let _ = frame::parse_response(&bytes, &limits);
+    });
+}
+
+#[test]
+fn single_byte_mutations_of_a_valid_request_never_panic() {
+    let limits = Limits::default();
+    let wire = http::request(
+        "POST",
+        "/v1/models/proto/infer",
+        "application/octet-stream",
+        &pixels(0),
+    );
+    for i in 0..wire.len() {
+        for delta in [1u8, 0x80] {
+            let mut m = wire.clone();
+            m[i] = m[i].wrapping_add(delta);
+            let _ = http::parse_request(&m, &limits);
+        }
+    }
+    let fwire = frame::encode_request(frame::OP_INFER, "proto", &pixels(0));
+    for i in 0..fwire.len() {
+        let mut m = fwire.clone();
+        m[i] = m[i].wrapping_add(1);
+        let _ = frame::parse_request(&m, &limits);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live server under fire
+// ---------------------------------------------------------------------
+
+#[test]
+fn garbage_bytes_get_an_error_or_a_clean_close() {
+    let (server, addr) = boot();
+    prop::for_cases(7, 12, |case| {
+        let n = prop::usize_in(7, case, 1, 256);
+        let mut bytes: Vec<u8> = prop::i8s(case + 100, n)
+            .into_iter()
+            .map(|b| b as u8)
+            .collect();
+        // Alternate protocols: even cases attack the HTTP parser, odd
+        // cases the frame parser.
+        if case % 2 == 0 {
+            if bytes[0] == frame::MAGIC[0] {
+                bytes[0] = b'G';
+            }
+        } else {
+            bytes[0] = frame::MAGIC[0];
+        }
+        let is_frame = bytes[0] == frame::MAGIC[0];
+        let mut s = raw(addr);
+        s.write_all(&bytes).unwrap();
+        s.shutdown(Shutdown::Write).unwrap();
+        let mut buf = Vec::new();
+        // EOF (clean close) or a finite answer; a hang trips the
+        // 5s deadline and fails the unwrap.
+        s.read_to_end(&mut buf).unwrap();
+        assert_well_formed(&buf, is_frame);
+    });
+    // The server survived the soup and still serves.
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let mut c = HttpClient::connect(addr, "proto").unwrap();
+    let got = c.infer_one(&pixels(0)).unwrap();
+    assert_row_eq(&got, &oracle[0], "after garbage");
+    drop(c);
+    server.drain(Duration::from_secs(2));
+    assert_eq!(server.stats().open_conns, 0);
+}
+
+#[test]
+fn split_across_reads_request_is_served_bit_exact() {
+    let (server, addr) = boot();
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let px = pixels(1);
+    let head = format!(
+        "POST /v1/models/proto/infer HTTP/1.1\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n",
+        px.len()
+    );
+    let wire = [head.as_bytes(), &px[..]].concat();
+    let mut s = raw(addr);
+    // Dribble the request a few bytes per write, with pauses, so the
+    // server's incremental parser sees many Incomplete rounds.
+    for chunk in wire.chunks(7) {
+        s.write_all(chunk).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let Step::Done(resp, used) =
+        http::parse_response(&buf, &Limits::default()).unwrap()
+    else {
+        panic!("truncated response");
+    };
+    assert_eq!(used, buf.len());
+    assert_eq!(resp.status, 200);
+    let got =
+        parse_logits_json(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_row_eq(&got, &oracle[1], "split-across-reads");
+    server.drain(Duration::from_secs(2));
+}
+
+#[test]
+fn oversized_content_length_is_rejected_promptly() {
+    let (server, addr) = boot();
+    let mut s = raw(addr);
+    let head = format!(
+        "POST /v1/models/proto/infer HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        64 << 20
+    );
+    let t0 = std::time::Instant::now();
+    s.write_all(head.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    // Answered from the header alone — no waiting for 64 MiB that will
+    // never arrive.
+    assert!(t0.elapsed() < Duration::from_secs(2));
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+    assert!(server.stats().malformed >= 1);
+    server.drain(Duration::from_secs(2));
+}
+
+#[test]
+fn pipelined_requests_get_pipelined_responses() {
+    let (server, addr) = boot();
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let mut wire = http::request(
+        "POST",
+        "/v1/models/proto/infer",
+        "application/octet-stream",
+        &pixels(0),
+    );
+    wire.extend_from_slice(&http::request(
+        "POST",
+        "/v1/models/proto/infer",
+        "application/octet-stream",
+        &pixels(2),
+    ));
+    let mut s = raw(addr);
+    s.write_all(&wire).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let limits = Limits::default();
+    let Step::Done(r0, used) = http::parse_response(&buf, &limits).unwrap()
+    else {
+        panic!("truncated first response");
+    };
+    let Step::Done(r1, used1) =
+        http::parse_response(&buf[used..], &limits).unwrap()
+    else {
+        panic!("truncated second response");
+    };
+    assert_eq!(used + used1, buf.len());
+    assert_eq!((r0.status, r1.status), (200, 200));
+    for (resp, img) in [(&r0, 0usize), (&r1, 2usize)] {
+        let got = parse_logits_json(std::str::from_utf8(&resp.body).unwrap())
+            .unwrap();
+        assert_row_eq(&got, &oracle[img], &format!("pipelined img {img}"));
+    }
+    server.drain(Duration::from_secs(2));
+}
+
+#[test]
+fn frame_protocol_over_a_live_socket() {
+    let (server, addr) = boot();
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    // Happy path: raw f32 logits, bit-exact by construction.
+    let mut c = FrameClient::connect(addr, "proto").unwrap();
+    for img in 0..IMAGES {
+        let got = c.infer_one(&pixels(img)).unwrap();
+        assert_row_eq(&got, &oracle[img], &format!("frame img {img}"));
+    }
+    // Stats travel over frames too, as the same JSON document.
+    let j = Json::parse(&c.stats().unwrap()).unwrap();
+    assert_eq!(j.usize_or("completed", 0), IMAGES);
+    drop(c);
+    // Bad magic: a well-formed error frame, then close.
+    let mut s = raw(addr);
+    s.write_all(&[frame::MAGIC[0], 0x00, 1, 2, 3]).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let Step::Done(resp, _) =
+        frame::parse_response(&buf, &Limits::default()).unwrap()
+    else {
+        panic!("truncated error frame");
+    };
+    assert_eq!(resp.status, frame::ST_BAD_REQUEST);
+    // Oversized body length: rejected from the header, connection cut.
+    let mut s = raw(addr);
+    let mut req = frame::encode_request(frame::OP_INFER, "proto", &[]);
+    let at = req.len() - 4;
+    req[at..].copy_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&req).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let Step::Done(resp, _) =
+        frame::parse_response(&buf, &Limits::default()).unwrap()
+    else {
+        panic!("truncated oversize answer");
+    };
+    assert_eq!(resp.status, frame::ST_BAD_REQUEST);
+    // Unknown opcode: error frame, connection stays usable.
+    let mut s = raw(addr);
+    s.write_all(&frame::encode_request(99, "proto", &[])).unwrap();
+    s.write_all(&frame::encode_request(frame::OP_STATS, "", &[])).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    assert_well_formed(&buf, true);
+    server.drain(Duration::from_secs(2));
+}
+
+#[test]
+fn routing_errors_are_precise() {
+    let (server, addr) = boot();
+    // Unknown model over HTTP: 404.
+    let mut c = HttpClient::connect(addr, "nope").unwrap();
+    let (status, _) = c.infer_status(&pixels(0)).unwrap();
+    assert_eq!(status, 404);
+    drop(c);
+    // Unknown model over frames: ST_NOT_FOUND.
+    let mut fc = FrameClient::connect(addr, "nope").unwrap();
+    let (fstatus, _) = fc.infer_status(&pixels(0)).unwrap();
+    assert_eq!(fstatus, frame::ST_NOT_FOUND);
+    drop(fc);
+    // Wrong method on the infer path: 405. Unknown path: 404.
+    for (req, want) in [
+        (
+            "GET /v1/models/proto/infer HTTP/1.1\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 405",
+        ),
+        ("GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n", "HTTP/1.1 404"),
+    ] {
+        let mut s = raw(addr);
+        s.write_all(req.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with(want), "{req:?} -> {text}");
+    }
+    server.drain(Duration::from_secs(2));
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_and_stats_reconcile() {
+    let (server, addr) = boot();
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let mut c = HttpClient::connect(addr, "proto").unwrap();
+    for r in 0..6 {
+        let img = r % IMAGES;
+        let got = c.infer_one(&pixels(img)).unwrap();
+        assert_row_eq(&got, &oracle[img], &format!("keep-alive req {r}"));
+    }
+    let j = Json::parse(&c.stats().unwrap()).unwrap();
+    assert_eq!(j.usize_or("completed", 0), 6);
+    assert_eq!(j.usize_or("rejected", 99), 0);
+    assert_eq!(j.usize_or("failed", 99), 0);
+    assert_eq!(j.usize_or("open_conns", 0), 1, "one keep-alive connection");
+    let m = j
+        .get("models")
+        .and_then(|ms| ms.get("proto"))
+        .expect("per-model stats present");
+    assert_eq!(m.usize_or("requests", 0), 6);
+    // A wrong-sized body is a client error (400), not a connection
+    // killer: the same connection keeps serving afterwards.
+    let (status, _) = c.infer_status(&[1, 2, 3]).unwrap();
+    assert_eq!(status, 400);
+    let got = c.infer_one(&pixels(0)).unwrap();
+    assert_row_eq(&got, &oracle[0], "after 400");
+    drop(c);
+    server.drain(Duration::from_secs(2));
+    assert_eq!(server.stats().open_conns, 0);
+}

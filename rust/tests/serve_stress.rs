@@ -9,15 +9,22 @@
 //! sweep here pins counts through `EngineOptions::threads` instead.)
 
 use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use fat::int8::batcher::BatchOptions;
-use fat::int8::serve::{EngineOptions, Int8Engine};
+use fat::int8::serve::{drive_with, EngineOptions, InferClient, Int8Engine};
 use fat::int8::{QModel, QTensor};
 use fat::model::store::{Site, SitesJson};
 use fat::model::{GraphDef, Op};
+use fat::net::client::parse_logits_json;
+use fat::net::{FrameClient, HttpClient, ModelRegistry, Server, ServerOptions};
 use fat::quant::calibrate::CalibStats;
 use fat::quant::export::{build_qmodel, QuantMode, Trained};
 use fat::tensor::Tensor;
+use fat::util::json::Json;
 use fat::util::prop;
 
 /// Residual branch + DWS chain + dense head (the `session_equiv.rs`
@@ -264,4 +271,304 @@ fn default_options_leave_batching_off() {
     }
     let (req, bat, _rows) = batched.batcher_stats().unwrap();
     assert_eq!((req, bat), (0, 0), "oversized batch must bypass the batcher");
+}
+
+// ---------------------------------------------------------------------
+// Socket front-end: fault injection and backpressure (DESIGN.md §10)
+// ---------------------------------------------------------------------
+
+/// Boot a loopback server over the given named engines.
+fn boot(models: &[(&str, Int8Engine)], opts: ServerOptions) -> Server {
+    let registry = ModelRegistry::new();
+    for (name, engine) in models {
+        registry.insert(name, engine.clone());
+    }
+    Server::bind("127.0.0.1:0", registry, opts).unwrap()
+}
+
+/// The same driver + bit-exactness oracle that hammers the in-process
+/// engine runs over live sockets, alternating HTTP and frame clients,
+/// against batched and unbatched endpoints of one server — and the
+/// `/stats` counters must reconcile exactly with the client tallies.
+#[test]
+fn socket_transport_bit_exact_and_stats_reconcile() {
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let unbat = Int8Engine::new(qm.clone(), EngineOptions::threads(2));
+    let bat = Int8Engine::new(
+        qm,
+        EngineOptions::threads(2).with_batch(BatchOptions {
+            max_batch: 4,
+            max_wait_us: 200,
+        }),
+    );
+    let server =
+        boot(&[("unbat", unbat), ("bat", bat)], ServerOptions::default());
+    let addr = server.local_addr();
+    let per_client = 4usize;
+    let mut total = 0u64;
+    let oracle = &oracle;
+    for name in ["unbat", "bat"] {
+        for clients in [2usize, 8] {
+            let report = drive_with(
+                |c| -> anyhow::Result<Box<dyn InferClient + Send>> {
+                    // even clients speak HTTP, odd ones the frame wire
+                    if c % 2 == 0 {
+                        Ok(Box::new(HttpClient::connect(addr, name)?))
+                    } else {
+                        Ok(Box::new(FrameClient::connect(addr, name)?))
+                    }
+                },
+                clients,
+                per_client,
+                |c| pixels(c % IMAGES),
+                |c| Some(oracle[c % IMAGES].clone()),
+            )
+            .unwrap();
+            assert_eq!(report.requests, clients * per_client);
+            total += report.requests as u64;
+        }
+    }
+    let st = server.stats();
+    assert_eq!(st.completed, total, "every request completed");
+    assert_eq!(st.admitted, total);
+    assert_eq!((st.rejected, st.failed, st.malformed), (0, 0, 0));
+    assert_eq!(st.in_flight, 0);
+    // the client-visible /stats document tells the same story
+    let mut c = HttpClient::connect(addr, "unbat").unwrap();
+    let j = Json::parse(&c.stats().unwrap()).unwrap();
+    assert_eq!(j.usize_or("completed", 0) as u64, total);
+    assert!(
+        j.get("models").and_then(|m| m.get("bat")).is_some(),
+        "per-model stats for every registered model"
+    );
+    drop(c);
+    server.drain(Duration::from_secs(2));
+    assert_eq!(server.stats().open_conns, 0);
+}
+
+/// Slow-loris attackers dribble a partial request head and stall. The
+/// read deadline must cut them off (408 or clean close, counted as
+/// timeouts) while concurrent well-behaved clients stay bit-exact.
+#[test]
+fn slow_loris_deadline_fires_and_good_clients_unaffected() {
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let engine = Int8Engine::new(qm, EngineOptions::threads(2));
+    let opts = ServerOptions {
+        read_timeout: Duration::from_millis(300),
+        ..ServerOptions::default()
+    };
+    let server = boot(&[("stress", engine)], opts);
+    let addr = server.local_addr();
+    let oracle = &oracle;
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(move || {
+                let sock = TcpStream::connect(addr).unwrap();
+                sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                let mut sock = sock;
+                sock.write_all(b"POST /v1/models/stress/infer HT").unwrap();
+                // ...and never another byte. The server must answer or
+                // hang up on its own; a hang fails the 5s read below.
+                let mut buf = Vec::new();
+                sock.read_to_end(&mut buf).unwrap();
+                if !buf.is_empty() {
+                    let text = String::from_utf8_lossy(&buf);
+                    assert!(text.starts_with("HTTP/1.1 408"), "{text}");
+                }
+            });
+        }
+        for c in 0..4usize {
+            s.spawn(move || {
+                let mut client = HttpClient::connect(addr, "stress").unwrap();
+                for r in 0..4usize {
+                    let img = (c + r) % IMAGES;
+                    let got = client.infer_one(&pixels(img)).unwrap();
+                    assert_row_eq(
+                        &got,
+                        &oracle[img],
+                        &format!("good client {c} req {r}"),
+                    );
+                }
+            });
+        }
+    });
+    assert!(
+        server.stats().timeouts >= 2,
+        "both loris connections must hit the read deadline"
+    );
+    server.drain(Duration::from_secs(2));
+    assert_eq!(server.stats().open_conns, 0);
+}
+
+/// A client that vanishes mid-body is observed as a disconnect, its
+/// worker is reclaimed, and the server keeps serving bit-exact.
+#[test]
+fn mid_request_disconnect_is_counted_and_survivable() {
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let engine = Int8Engine::new(qm, EngineOptions::threads(2));
+    let server = boot(&[("stress", engine)], ServerOptions::default());
+    let addr = server.local_addr();
+    {
+        let mut sock = TcpStream::connect(addr).unwrap();
+        let head = format!(
+            "POST /v1/models/stress/infer HTTP/1.1\r\n\
+             Content-Length: {PER_IMG}\r\n\r\n"
+        );
+        sock.write_all(head.as_bytes()).unwrap();
+        sock.write_all(&pixels(0)[..10]).unwrap();
+        // drop: FIN with a partial request buffered server-side
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.stats().disconnects == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "mid-request disconnect never observed"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut client = HttpClient::connect(addr, "stress").unwrap();
+    let got = client.infer_one(&pixels(2)).unwrap();
+    assert_row_eq(&got, &oracle[2], "after disconnect");
+    drop(client);
+    server.drain(Duration::from_secs(2));
+    assert_eq!(server.stats().open_conns, 0);
+}
+
+/// A half-closed socket (client shuts down its write side after the
+/// request) still gets the complete response before the server closes.
+#[test]
+fn half_closed_socket_still_gets_full_response() {
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    let engine = Int8Engine::new(qm, EngineOptions::threads(2));
+    let server = boot(&[("stress", engine)], ServerOptions::default());
+    let addr = server.local_addr();
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let px = pixels(1);
+    let head = format!(
+        "POST /v1/models/stress/infer HTTP/1.1\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n",
+        px.len()
+    );
+    sock.write_all(head.as_bytes()).unwrap();
+    sock.write_all(&px).unwrap();
+    sock.shutdown(Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    sock.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    let body = text.split("\r\n\r\n").nth(1).expect("has body");
+    let got = parse_logits_json(body).unwrap();
+    assert_row_eq(&got, &oracle[1], "half-closed");
+    server.drain(Duration::from_secs(2));
+}
+
+/// Over-admission: with `max_inflight = 1` and a slow batched engine,
+/// a burst of clients must be shed with 429s; everyone admitted stays
+/// bit-exact, and the server counters reconcile exactly with the
+/// client-side tallies.
+#[test]
+fn overload_answers_429_and_counters_reconcile() {
+    let qm = model();
+    let oracle = oracle_rows(&qm);
+    // one worker + a long micro-batch deadline: each admitted request
+    // holds the single in-flight slot for >= 150ms
+    let engine = Int8Engine::new(
+        qm,
+        EngineOptions::threads(1).with_batch(BatchOptions {
+            max_batch: 64,
+            max_wait_us: 150_000,
+        }),
+    );
+    let opts = ServerOptions {
+        max_inflight: 1,
+        ..ServerOptions::default()
+    };
+    let server = boot(&[("stress", engine)], opts);
+    let addr = server.local_addr();
+    let clients = 8usize;
+    let per_client = 2usize;
+    let ok = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let barrier = std::sync::Barrier::new(clients);
+    let (oracle, ok, rejected, barrier) = (&oracle, &ok, &rejected, &barrier);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            s.spawn(move || {
+                let mut client = HttpClient::connect(addr, "stress").unwrap();
+                barrier.wait();
+                for r in 0..per_client {
+                    let img = (c + r) % IMAGES;
+                    let (status, body) =
+                        client.infer_status(&pixels(img)).unwrap();
+                    match status {
+                        200 => {
+                            let got = parse_logits_json(
+                                std::str::from_utf8(&body).unwrap(),
+                            )
+                            .unwrap();
+                            assert_row_eq(
+                                &got,
+                                &oracle[img],
+                                &format!("admitted {c}/{r}"),
+                            );
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        429 => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("unexpected status {other}"),
+                    }
+                }
+            });
+        }
+    });
+    let (ok, rejected) =
+        (ok.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+    assert_eq!(ok + rejected, (clients * per_client) as u64);
+    assert!(ok > 0, "someone must get through");
+    assert!(rejected > 0, "max_inflight=1 under 8 clients must shed load");
+    let st = server.stats();
+    assert_eq!(st.completed, ok, "server completed == client 200s");
+    assert_eq!(st.admitted, ok);
+    assert_eq!(st.rejected, rejected, "server rejected == client 429s");
+    assert_eq!(st.failed, 0);
+    assert_eq!(st.in_flight, 0);
+    server.drain(Duration::from_secs(2));
+}
+
+/// Drain finishes in-flight work, closes every connection and gives the
+/// port back; post-drain connects get no service.
+#[test]
+fn drain_stops_accepting_and_closes_the_port() {
+    let qm = model();
+    let engine = Int8Engine::new(qm, EngineOptions::threads(1));
+    let server = boot(&[("stress", engine)], ServerOptions::default());
+    let addr = server.local_addr();
+    let mut c = HttpClient::connect(addr, "stress").unwrap();
+    assert!(c.stats().unwrap().starts_with('{'), "alive before drain");
+    drop(c);
+    server.drain(Duration::from_secs(2));
+    assert!(server.is_draining());
+    let st = server.stats();
+    assert_eq!((st.open_conns, st.in_flight), (0, 0));
+    // The listener is gone: a fresh connect fails outright, or — if the
+    // OS queued it in the backlog before the close — yields no service.
+    match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+        Err(_) => {}
+        Ok(mut sock) => {
+            sock.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let _ = sock.write_all(
+                b"GET /stats HTTP/1.1\r\nContent-Length: 0\r\n\r\n",
+            );
+            let mut buf = Vec::new();
+            if sock.read_to_end(&mut buf).is_ok() {
+                assert!(buf.is_empty(), "drained server served a request");
+            }
+        }
+    }
 }
