@@ -163,7 +163,7 @@ fn main() {
         qp,
     };
     let l = QLayer {
-        w_q: prop::i8s(5, 9 * 64),
+        w_q: prop::i8s(5, 9 * 64).into(),
         w_sums: vec![],
         bias_q: vec![0i32; 64],
         requant: vec![fat::quant::scale::quantize_multiplier(0.001); 64],

@@ -1,0 +1,140 @@
+//! Serving cold-start benchmark (DESIGN.md §11, EXPERIMENTS.md §Perf
+//! PR-7): what a `.fatm` artifact saves over compiling from scratch.
+//! Baseline is the in-process export path — `build_qmodel` re-quantizes
+//! weights, re-derives qparams and re-packs every SIMD panel on every
+//! process start. Variants load the same compiled model from a `.fatm`
+//! file: zero-copy mmap and heap-read, plus load-to-first-inference
+//! latency (the number a deploy actually waits on). Loaded models are
+//! checked bit-exact against the in-memory export before anything is
+//! timed. Measurements land in `BENCH_load.json` (`FAT_BENCH_JSON`
+//! overrides the path); raise `FAT_BENCH_ITERS` to lengthen the runs.
+
+use std::collections::BTreeMap;
+use std::hint::black_box;
+
+use fat::artifact::{self, LoadOptions};
+use fat::int8::{Isa, QModel, QTensor};
+use fat::model::builtin;
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::tensor::Tensor;
+use fat::util::bench::{bench, report_speedup, BenchLog, BenchOpts};
+
+/// The from-scratch cold-start path a `.fatm` artifact replaces:
+/// builtin graph + weights through `build_qmodel` (quantize, fold,
+/// col-sum, prepack) with deterministic synthetic calibration ranges.
+fn build(name: &str) -> QModel {
+    let (g, s, w): (_, _, BTreeMap<String, Tensor>) =
+        builtin::load(name).unwrap();
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.0 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 2.5 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
+    build_qmodel(&g, &w, &s, &st, QuantMode::SymVector, &tr).unwrap()
+}
+
+fn quant_input(qm: &QModel) -> QTensor {
+    let sh = qm
+        .graph
+        .nodes
+        .iter()
+        .find(|n| n.op == fat::model::Op::Input)
+        .and_then(|n| n.input_shape.clone())
+        .expect("builtin model has a shaped input");
+    let per_img: usize = sh.iter().product();
+    let x: Vec<f32> = (0..per_img)
+        .map(|i| ((i * 37 + 5) % 256) as f32 / 255.0)
+        .collect();
+    QTensor::quantize(vec![1, sh[0], sh[1], sh[2]], &x, qm.input_qp)
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let isa = Isa::detect();
+    let dir = std::env::temp_dir()
+        .join(format!("fatm_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut log = BenchLog::default();
+
+    for name in ["tiny_cnn", "mobilenet_v2_mini"] {
+        let qm = build(name);
+        let path = dir.join(format!("{name}.fatm"));
+        let etag = artifact::save(&qm, &path, isa).unwrap();
+        let size = std::fs::metadata(&path).unwrap().len();
+        println!(
+            "bench_load: {name} -> {} ({size} bytes, {etag}, \
+             packed for {})",
+            path.display(),
+            isa.name()
+        );
+
+        // Bit-exactness gate before timing anything: mmap-loaded logits
+        // must equal the in-memory export's.
+        let input = quant_input(&qm);
+        let (loaded, rep) =
+            artifact::load(&path, LoadOptions::default()).unwrap();
+        let want = qm.run_quant(input.clone()).unwrap();
+        let got = loaded.run_quant(input.clone()).unwrap();
+        assert_eq!(want.data, got.data, "{name}: artifact logits diverge");
+        println!(
+            "bench_load: {name} verified bit-exact \
+             (mapped={}, repacked={})",
+            rep.mapped, rep.repacked
+        );
+        drop(loaded);
+
+        let build_mean = bench(&format!("coldstart_build_{name}"), &opts, || {
+            black_box(build(name));
+        });
+        let mmap_mean =
+            bench(&format!("coldstart_mmap_load_{name}"), &opts, || {
+                let (m, _) =
+                    artifact::load(&path, LoadOptions::default()).unwrap();
+                black_box(m);
+            });
+        let heap_mean =
+            bench(&format!("coldstart_heap_load_{name}"), &opts, || {
+                let (m, _) = artifact::load(
+                    &path,
+                    LoadOptions { force_heap: true, ..Default::default() },
+                )
+                .unwrap();
+                black_box(m);
+            });
+        let first_mean =
+            bench(&format!("coldstart_first_infer_{name}"), &opts, || {
+                let (m, _) =
+                    artifact::load(&path, LoadOptions::default()).unwrap();
+                black_box(m.run_quant(input.clone()).unwrap());
+            });
+        report_speedup(
+            &format!("artifact_mmap_vs_build_{name}"),
+            build_mean,
+            mmap_mean,
+        );
+        report_speedup(
+            &format!("artifact_heap_vs_build_{name}"),
+            build_mean,
+            heap_mean,
+        );
+
+        // `ops` = int8 parameter bytes, so the gops column reads as
+        // cold-start GB/s of model material made servable.
+        let pb = qm.param_bytes;
+        log.add("coldstart_build", name, 1, isa.name(), build_mean, pb);
+        log.add("coldstart_mmap_load", name, 1, isa.name(), mmap_mean, pb);
+        log.add("coldstart_heap_load", name, 1, isa.name(), heap_mean, pb);
+        log.add("coldstart_first_infer", name, 1, isa.name(), first_mean, pb);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    let path = std::env::var("FAT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_load.json".to_string());
+    if let Err(e) = log.write(&path) {
+        println!("BENCH log write failed ({path}): {e}");
+    }
+}

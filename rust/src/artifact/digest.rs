@@ -1,0 +1,54 @@
+//! Content digest for `.fatm` artifacts: FNV-1a 64 (DESIGN.md §11.3).
+//!
+//! The digest serves two jobs: corruption detection at load (any
+//! single-byte change to the digested region fails the open) and the
+//! model **etag** the registry exposes over `/stats` and `/models` —
+//! two artifacts with the same digest serve bit-identical logits, so
+//! the etag doubles as the hot-reload change detector. FNV-1a is not
+//! collision-resistant against adversaries; it guards against rot and
+//! truncation, not tampering (matching the checksum discipline of the
+//! `.fatw` container and TFLite-style flatbuffer artifacts).
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit over `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Render a digest as the registry etag string (`fnv64-<16 hex>`).
+pub fn etag(digest: u64) -> String {
+    format!("fnv64-{digest:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn single_byte_sensitivity() {
+        let a = fnv1a64(b"fat artifact");
+        let b = fnv1a64(b"fat artifacu");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn etag_format() {
+        assert_eq!(etag(0xdead_beef), "fnv64-00000000deadbeef");
+        assert_eq!(etag(u64::MAX), "fnv64-ffffffffffffffff");
+    }
+}

@@ -1,0 +1,334 @@
+//! `.fatm` on-disk layout: constants, the checked little-endian reader,
+//! and the section writer (DESIGN.md §11.1).
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"FATM0001"
+//! 8       8     file_size (u64 LE) — must equal the real byte length
+//! 16      8     digest (u64 LE) — FNV-1a 64 over bytes[24..file_size]
+//! 24      4     isa_tag (u32 LE) — packing ISA of the panel section
+//! 28      4     section_count (u32 LE)
+//! 32      32    reserved (zero; covered by the digest region)
+//! 64      24×n  section TOC: (kind u32, reserved u32, off u64, len u64)
+//! ...           sections, each starting at a 64-byte-aligned offset
+//! ```
+//!
+//! Sections: `GRAPH` (the graph IR as `graph.json` text), `PLAN` (the
+//! compiled schedule + parameter tables, hand-serialized little-endian,
+//! referencing panel blobs by offset), `PANEL` (concatenated raw i8
+//! blobs — unpacked weights and prepacked SIMD panels — each blob
+//! 64-byte aligned within the section). The 64-byte discipline keeps
+//! every panel cache-line aligned under `mmap` (the mapping base is
+//! page-aligned, and 4096 ≡ 0 mod 64); the heap fallback only
+//! guarantees byte alignment, which is all `i8` data needs.
+//!
+//! Every multi-byte integer in the file is little-endian. The
+//! [`Reader`] here is the one parsing primitive for both the `.fatm`
+//! loader and the hardened `.fatw` reader: every read is
+//! length-checked, and every length-prefixed allocation is validated
+//! against the remaining bytes *before* allocating, so truncated or
+//! hostile inputs fail with an error instead of a panic or an OOM.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::int8::kernels::Isa;
+
+/// File magic, bumped with the format version.
+pub const MAGIC: &[u8; 8] = b"FATM0001";
+/// Fixed header length (bytes); the TOC follows immediately.
+pub const HEADER_LEN: usize = 64;
+/// Bytes per section TOC entry.
+pub const TOC_ENTRY_LEN: usize = 24;
+/// Section alignment (and intra-PANEL blob alignment).
+pub const ALIGN: usize = 64;
+/// First digested byte: everything after the digest field itself.
+pub const DIGEST_START: usize = 24;
+
+/// Section kinds.
+pub const SEC_GRAPH: u32 = 1;
+pub const SEC_PLAN: u32 = 2;
+pub const SEC_PANEL: u32 = 3;
+/// Sections every v1 file carries, in file order.
+pub const SECTIONS: [u32; 3] = [SEC_GRAPH, SEC_PLAN, SEC_PANEL];
+
+/// PLAN-section format version (bumped independently of the magic for
+/// additive changes).
+pub const PLAN_VERSION: u32 = 1;
+
+/// Wire tag for a packing ISA.
+pub fn isa_tag(isa: Isa) -> u32 {
+    match isa {
+        Isa::Scalar => 0,
+        Isa::Sse2 => 1,
+        Isa::Avx2 => 2,
+    }
+}
+
+/// Inverse of [`isa_tag`]; unknown tags are a format error.
+pub fn isa_from_tag(tag: u32) -> Result<Isa> {
+    Ok(match tag {
+        0 => Isa::Scalar,
+        1 => Isa::Sse2,
+        2 => Isa::Avx2,
+        other => bail!("unknown ISA tag {other} (want 0|1|2)"),
+    })
+}
+
+/// Round `n` up to the next [`ALIGN`] boundary.
+pub fn align_up(n: usize) -> usize {
+    n.div_ceil(ALIGN) * ALIGN
+}
+
+/// Checked little-endian cursor over a byte slice. Every accessor
+/// errors (never panics) on truncation, and the `vec_*` readers bound
+/// their allocation by the remaining input length first.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Context string prefixed to every error (e.g. the section name).
+    what: &'static str,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8], what: &'static str) -> Reader<'a> {
+        Reader { buf, pos: 0, what }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current offset from the start of the buffer.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// True when every byte was consumed (trailing garbage detector).
+    pub fn exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "{}: truncated at byte {} (need {n} more, have {})",
+            self.what,
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    /// `f32` transported as raw bits — exact for every value including
+    /// NaN payloads (no decimal round-trip).
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// A `u32` that must fit in `usize` and stay within `cap` (index
+    /// and count fields).
+    pub fn usize_capped(&mut self, cap: usize, field: &str) -> Result<usize> {
+        let v = self.u32()? as usize;
+        ensure!(
+            v <= cap,
+            "{}: {field} = {v} exceeds cap {cap}",
+            self.what
+        );
+        Ok(v)
+    }
+
+    /// Length-prefixed UTF-8 string (u32 length).
+    pub fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|e| anyhow::anyhow!("{}: bad utf-8 string: {e}", self.what))
+    }
+
+    /// Length-prefixed `Vec<i32>`; the element count is validated
+    /// against the remaining bytes before any allocation happens.
+    pub fn vec_i32(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n <= self.remaining() / 4,
+            "{}: i32 array of {n} elements exceeds remaining {} bytes",
+            self.what,
+            self.remaining()
+        );
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    /// Length-prefixed `Vec<f32>` (bit-exact transport).
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n <= self.remaining() / 4,
+            "{}: f32 array of {n} elements exceeds remaining {} bytes",
+            self.what,
+            self.remaining()
+        );
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    /// Length-prefixed `Vec<(i32, i32)>` (requant multiplier pairs).
+    pub fn vec_i32_pair(&mut self) -> Result<Vec<(i32, i32)>> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n <= self.remaining() / 8,
+            "{}: pair array of {n} elements exceeds remaining {} bytes",
+            self.what,
+            self.remaining()
+        );
+        (0..n).map(|_| Ok((self.i32()?, self.i32()?))).collect()
+    }
+}
+
+/// Little-endian serializer mirroring [`Reader`].
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    pub fn vec_f32(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn vec_i32_pair(&mut self, v: &[(i32, i32)]) {
+        self.u32(v.len() as u32);
+        for &(a, b) in v {
+            self.i32(a);
+            self.i32(b);
+        }
+    }
+}
+
+/// View `&[i8]` as raw bytes (same size, alignment 1, all bit patterns
+/// valid both ways).
+pub fn i8_as_bytes(s: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 are layout-identical; lifetime and length carry
+    // over unchanged.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reader_round_trips_writer() {
+        let mut w = Writer::default();
+        w.u32(7);
+        w.u64(1 << 40);
+        w.i32(-9);
+        w.f32(f32::MIN_POSITIVE);
+        w.string("node.id");
+        w.vec_i32(&[1, -2, 3]);
+        w.vec_f32(&[0.5, -0.0]);
+        w.vec_i32_pair(&[(1, 2), (-3, 4)]);
+        let mut r = Reader::new(&w.buf, "test");
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.i32().unwrap(), -9);
+        assert_eq!(r.f32().unwrap().to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert_eq!(r.string().unwrap(), "node.id");
+        assert_eq!(r.vec_i32().unwrap(), vec![1, -2, 3]);
+        let f = r.vec_f32().unwrap();
+        assert_eq!(f[0], 0.5);
+        assert_eq!(f[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.vec_i32_pair().unwrap(), vec![(1, 2), (-3, 4)]);
+        assert!(r.exhausted());
+    }
+
+    #[test]
+    fn truncation_errors_not_panics() {
+        let mut w = Writer::default();
+        w.vec_i32(&[1, 2, 3, 4]);
+        for cut in 0..w.buf.len() {
+            let mut r = Reader::new(&w.buf[..cut], "trunc");
+            assert!(r.vec_i32().is_err(), "prefix {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected_before_allocating() {
+        // claims 2^32-1 elements with 4 bytes of payload
+        let mut bytes = (u32::MAX).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 4]);
+        let mut r = Reader::new(&bytes, "hostile");
+        assert!(r.vec_i32().is_err());
+        let mut r2 = Reader::new(&bytes, "hostile");
+        assert!(r2.string().is_err());
+    }
+
+    #[test]
+    fn isa_tags_round_trip() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+            assert_eq!(isa_from_tag(isa_tag(isa)).unwrap(), isa);
+        }
+        assert!(isa_from_tag(3).is_err());
+    }
+
+    #[test]
+    fn alignment() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 64);
+        assert_eq!(align_up(64), 64);
+        assert_eq!(align_up(65), 128);
+    }
+}

@@ -1,0 +1,459 @@
+//! `.fatm` loader: validate the container (magic, size, digest, TOC),
+//! parse the plan with the checked [`Reader`], cross-check every step
+//! and parameter against the embedded graph, and rebuild a [`QModel`]
+//! whose weight slabs are zero-copy windows into the file mapping
+//! (DESIGN.md §11).
+//!
+//! Validation layering:
+//!  1. **Container**: magic / `file_size` / FNV digest — catches every
+//!     truncation and every byte flip of a real artifact.
+//!  2. **Structure**: the length-checked reader — no parse can read past
+//!     a section or allocate beyond the input size, so even digest-valid
+//!     hand-crafted files fail with errors, never panics or OOM.
+//!  3. **Semantics**: plan indices ([`ExecPlan::from_parts`]), step ↔
+//!     graph agreement, and per-layer geometry (weight blob length,
+//!     packed panel shape, per-channel table lengths ≥ cout) — the
+//!     invariants the executor's hot path assumes without checking.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::int8::engine::{AddParams, GapParams, QLayer, QModel, QNode};
+use crate::int8::kernels::{Isa, PackedWeights};
+use crate::int8::plan::{ExecPlan, PlanStep};
+use crate::model::{GraphDef, Node, Op};
+use crate::quant::scale::QParams;
+
+use super::digest::{etag, fnv1a64};
+use super::layout::{
+    isa_from_tag, Reader, ALIGN, DIGEST_START, HEADER_LEN, MAGIC,
+    PLAN_VERSION, SECTIONS, TOC_ENTRY_LEN,
+};
+use super::mmap::Mapping;
+use super::slab::I8Slab;
+
+/// Executor slot tables are `Vec<Option<QTensor>>` sized from the file;
+/// cap the count so a hostile header cannot trigger a huge allocation.
+const MAX_SLOTS: usize = 1 << 16;
+
+/// How to load a `.fatm` file.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadOptions {
+    /// Read into a heap buffer instead of mmap (also forced by
+    /// `FAT_MMAP=off`).
+    pub force_heap: bool,
+    /// ISA to validate the panel tag against; `None` = the process-wide
+    /// [`Isa::detect`]. Panels packed under a different ISA tag are
+    /// rebuilt from the unpacked weights ([`LoadReport::repacked`]).
+    pub isa: Option<Isa>,
+}
+
+/// What a load did — surfaced by `fat serve` logs and the cold-start
+/// bench.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Content etag (`fnv64-…`), the registry's change detector.
+    pub etag: String,
+    /// ISA tag recorded in the file.
+    pub file_isa: Isa,
+    /// ISA the model was loaded for.
+    pub host_isa: Isa,
+    /// Whether panels were repacked for the host ISA.
+    pub repacked: bool,
+    /// Whether the weights are served from a real file mapping.
+    pub mapped: bool,
+    /// Total artifact size in bytes.
+    pub bytes: usize,
+}
+
+/// Load a `.fatm` artifact from disk (zero-copy via mmap unless
+/// disabled).
+pub fn load<P: AsRef<Path>>(
+    path: P,
+    opts: LoadOptions,
+) -> Result<(QModel, LoadReport)> {
+    let path = path.as_ref();
+    let map = if opts.force_heap {
+        Mapping::map_file_with(path, true)
+    } else {
+        Mapping::map_file(path)
+    }
+    .with_context(|| format!("loading artifact {path:?}"))?;
+    load_mapping(Arc::new(map), opts)
+        .with_context(|| format!("parsing artifact {path:?}"))
+}
+
+/// Load from an in-memory byte buffer (tests, fuzzing, network blobs).
+/// Same code path as [`load`] — the buffer becomes a heap
+/// [`Mapping`] and weight slabs are zero-copy windows into it.
+pub fn load_from_bytes(
+    bytes: Vec<u8>,
+    opts: LoadOptions,
+) -> Result<(QModel, LoadReport)> {
+    load_mapping(Arc::new(Mapping::from_vec(bytes)), opts)
+}
+
+/// Read just the 64-byte header of `path` and return its etag — the
+/// cheap change detector behind directory rescans
+/// (`net::registry::ModelRegistry::sync_dir`). Trusts the stored digest;
+/// full verification happens on the actual [`load`].
+pub fn peek_etag<P: AsRef<Path>>(path: P) -> Result<String> {
+    use std::io::Read as _;
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let mut hdr = [0u8; HEADER_LEN];
+    f.read_exact(&mut hdr)
+        .with_context(|| format!("reading header of {path:?}"))?;
+    ensure!(&hdr[0..8] == MAGIC, "{path:?}: not a .fatm artifact");
+    let d = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+    Ok(etag(d))
+}
+
+fn get_qp(r: &mut Reader) -> Result<QParams> {
+    Ok(QParams {
+        scale: r.f32()?,
+        zero_point: r.i32()?,
+        qmin: r.i32()?,
+        qmax: r.i32()?,
+    })
+}
+
+/// A section's absolute byte range in the file.
+struct Section {
+    off: usize,
+    len: usize,
+}
+
+fn load_mapping(
+    map: Arc<Mapping>,
+    opts: LoadOptions,
+) -> Result<(QModel, LoadReport)> {
+    let b = map.bytes();
+    let toc_end = HEADER_LEN + SECTIONS.len() * TOC_ENTRY_LEN;
+    ensure!(
+        b.len() >= toc_end,
+        "file too small for a .fatm header ({} bytes)",
+        b.len()
+    );
+    ensure!(&b[0..8] == MAGIC, "bad magic (not a .fatm artifact)");
+    let file_size = u64::from_le_bytes(b[8..16].try_into().unwrap());
+    ensure!(
+        file_size == b.len() as u64,
+        "file size mismatch: header says {file_size}, file has {}",
+        b.len()
+    );
+    let stored = u64::from_le_bytes(b[16..24].try_into().unwrap());
+    let computed = fnv1a64(&b[DIGEST_START..]);
+    ensure!(
+        stored == computed,
+        "digest mismatch: stored {stored:#018x}, computed {computed:#018x} \
+         (corrupt artifact)"
+    );
+    let file_isa =
+        isa_from_tag(u32::from_le_bytes(b[24..28].try_into().unwrap()))?;
+    let nsec = u32::from_le_bytes(b[28..32].try_into().unwrap());
+    ensure!(
+        nsec as usize == SECTIONS.len(),
+        "expected {} sections, header says {nsec}",
+        SECTIONS.len()
+    );
+
+    let mut sections = Vec::with_capacity(SECTIONS.len());
+    let mut prev_end = toc_end as u64;
+    for (i, &want_kind) in SECTIONS.iter().enumerate() {
+        let e = HEADER_LEN + i * TOC_ENTRY_LEN;
+        let kind = u32::from_le_bytes(b[e..e + 4].try_into().unwrap());
+        ensure!(
+            kind == want_kind,
+            "section {i}: kind {kind}, want {want_kind}"
+        );
+        let off = u64::from_le_bytes(b[e + 8..e + 16].try_into().unwrap());
+        let len = u64::from_le_bytes(b[e + 16..e + 24].try_into().unwrap());
+        ensure!(off % ALIGN as u64 == 0, "section {i}: offset {off} unaligned");
+        ensure!(off >= prev_end, "section {i}: overlaps previous section");
+        let end = off
+            .checked_add(len)
+            .filter(|&end| end <= file_size)
+            .ok_or_else(|| {
+                anyhow::anyhow!("section {i}: [{off}, +{len}) out of file")
+            })?;
+        prev_end = end;
+        sections.push(Section { off: off as usize, len: len as usize });
+    }
+    let [graph_sec, plan_sec, panel_sec] = match &sections[..] {
+        [g, pl, pa] => [g, pl, pa],
+        _ => unreachable!("section count checked above"),
+    };
+
+    let graph_raw = &b[graph_sec.off..graph_sec.off + graph_sec.len];
+    let graph_json = std::str::from_utf8(graph_raw)
+        .context("graph section is not UTF-8")?;
+    let graph = GraphDef::from_json(graph_json)
+        .context("parsing embedded graph.json")?;
+
+    let plan_raw = &b[plan_sec.off..plan_sec.off + plan_sec.len];
+    let mut r = Reader::new(plan_raw, "fatm plan");
+    let version = r.u32()?;
+    ensure!(
+        version == PLAN_VERSION,
+        "plan version {version}, this build reads {PLAN_VERSION}"
+    );
+    let num_slots = r.usize_capped(MAX_SLOTS, "num_slots")?;
+    let input_slot = r.u32()? as usize;
+    let output_slot = r.u32()? as usize;
+    let input_qp = get_qp(&mut r)?;
+    let param_bytes = r.u64()? as usize;
+
+    let n_steps = r.u32()?;
+    let mut steps = Vec::new();
+    for _ in 0..n_steps {
+        let id = r.string()?;
+        let op = Op::parse(&r.string()?)?;
+        let param = r.u32()? as usize;
+        let a = r.u32()? as usize;
+        let b_plus1 = r.u32()?;
+        let dst = r.u32()? as usize;
+        let k = r.u32()? as usize;
+        let stride = r.u32()? as usize;
+        let cout = r.u32()? as usize;
+        let n_frees = r.usize_capped(MAX_SLOTS, "n_frees")?;
+        let mut frees = Vec::new();
+        for _ in 0..n_frees {
+            frees.push(r.u32()? as usize);
+        }
+        steps.push(PlanStep {
+            id,
+            op,
+            param,
+            a,
+            b: (b_plus1 > 0).then(|| b_plus1 as usize - 1),
+            dst,
+            k,
+            stride,
+            cout,
+            frees,
+        });
+    }
+
+    let n_params = r.u32()?;
+    let mut params: Vec<QNode> = Vec::new();
+    for pi in 0..n_params {
+        let tag = r.u32()?;
+        params.push(match tag {
+            0 => QNode::Layer(get_layer(&mut r, &map, panel_sec)?),
+            1 => QNode::Add(AddParams {
+                ma: (r.i32()?, r.i32()?),
+                mb: (r.i32()?, r.i32()?),
+                out_qp: get_qp(&mut r)?,
+                clamp: (r.i32()?, r.i32()?),
+            }),
+            2 => QNode::Gap(GapParams {
+                m: (r.i32()?, r.i32()?),
+                out_qp: get_qp(&mut r)?,
+            }),
+            3 => QNode::Passthrough,
+            other => bail!("param {pi}: unknown node tag {other}"),
+        });
+    }
+    ensure!(
+        r.exhausted(),
+        "plan section has {} trailing bytes",
+        r.remaining()
+    );
+
+    let mut plan =
+        ExecPlan::from_parts(steps, params, num_slots, input_slot, output_slot)?;
+
+    // Cross-check the plan against the embedded graph: the executor
+    // trusts step geometry and per-layer table lengths on its hot path.
+    for s in &plan.steps {
+        let node = graph
+            .node(&s.id)
+            .with_context(|| format!("step {} not in graph", s.id))?;
+        ensure!(
+            node.op == s.op,
+            "step {}: op {} but graph says {}",
+            s.id,
+            s.op.name(),
+            node.op.name()
+        );
+        ensure!(
+            s.k == node.k && s.stride == node.stride
+                && s.cout == node.out_channels(),
+            "step {}: geometry disagrees with graph",
+            s.id
+        );
+        let p = &plan.params[s.param];
+        match (s.op, p) {
+            (Op::Conv | Op::DwConv | Op::Dense, QNode::Layer(l)) => {
+                check_layer(node, l)?
+            }
+            (Op::Add, QNode::Add(_)) | (Op::Gap, QNode::Gap(_)) => {}
+            (op, _) => bail!(
+                "step {}: op {} paired with wrong param kind",
+                s.id,
+                op.name()
+            ),
+        }
+    }
+
+    // Repack panels when the file's packing ISA differs from the host's.
+    // Today the packed layout is ISA-independent, so this reproduces the
+    // identical bytes — the rule is what keeps the format correct if a
+    // future packing specializes per ISA.
+    let host_isa = opts.isa.unwrap_or_else(Isa::detect);
+    let mut repacked = false;
+    if file_isa != host_isa {
+        for p in &mut plan.params {
+            if let QNode::Layer(l) = p {
+                if let Some(pw) = &l.packed {
+                    let (k, n) = (pw.k, pw.n);
+                    l.packed = Some(PackedWeights::pack(&l.w_q, k, n));
+                    repacked = true;
+                }
+            }
+        }
+    }
+
+    let report = LoadReport {
+        etag: etag(stored),
+        file_isa,
+        host_isa,
+        repacked,
+        mapped: map.is_mmap(),
+        bytes: map.len(),
+    };
+    let qm = QModel { graph, plan, input_qp, param_bytes };
+    Ok((qm, report))
+}
+
+/// Expected `w_q` length of a conv-like node, from the graph's shape
+/// fields (checked multiplication — these are file-controlled values).
+fn expected_w_len(n: &Node) -> Result<usize> {
+    let mul = |a: usize, bs: &[usize]| -> Result<usize> {
+        bs.iter().try_fold(a, |acc, &x| {
+            acc.checked_mul(x).ok_or_else(|| {
+                anyhow::anyhow!("{}: weight shape overflows", n.id)
+            })
+        })
+    };
+    match n.op {
+        Op::Conv => mul(n.k, &[n.k, n.cin, n.cout]),
+        Op::DwConv => mul(n.k, &[n.k, n.ch]),
+        Op::Dense => mul(n.cin, &[n.cout]),
+        _ => bail!("{}: not a conv-like node", n.id),
+    }
+}
+
+/// Layer geometry invariants the kernels assume: weight blob length
+/// matches the graph shape, per-channel tables cover every output
+/// channel, and a packed panel (if present) matches the unpacked shape
+/// — `gemm_packed` reads `a` with unchecked indexing under `pw.k`, so
+/// panel shape agreement is a safety requirement, not a nicety.
+fn check_layer(n: &Node, l: &QLayer) -> Result<()> {
+    let cout = n.out_channels();
+    ensure!(cout > 0, "{}: zero output channels", n.id);
+    let want_w = expected_w_len(n)?;
+    ensure!(
+        l.w_q.len() == want_w,
+        "{}: weight blob {} bytes, graph shape wants {want_w}",
+        n.id,
+        l.w_q.len()
+    );
+    ensure!(
+        l.bias_q.len() >= cout && l.requant.len() >= cout,
+        "{}: bias/requant tables shorter than {cout} channels",
+        n.id
+    );
+    ensure!(!l.w_scales.is_empty(), "{}: empty w_scales", n.id);
+    if let Some(pw) = &l.packed {
+        ensure!(
+            n.op != Op::DwConv,
+            "{}: depthwise layer with a packed panel",
+            n.id
+        );
+        let kk = want_w / cout;
+        ensure!(
+            pw.k == kk && pw.n == cout,
+            "{}: packed panel shape ({}, {}) disagrees with ({kk}, {cout})",
+            n.id,
+            pw.k,
+            pw.n
+        );
+        ensure!(
+            l.w_sums.len() == cout,
+            "{}: col-sum table {} entries, want {cout}",
+            n.id,
+            l.w_sums.len()
+        );
+    } else if n.op != Op::DwConv {
+        // unpacked GEMM path also consumes the col sums
+        ensure!(
+            l.w_sums.len() == cout,
+            "{}: col-sum table {} entries, want {cout}",
+            n.id,
+            l.w_sums.len()
+        );
+    }
+    Ok(())
+}
+
+fn get_layer(
+    r: &mut Reader,
+    map: &Arc<Mapping>,
+    panel: &Section,
+) -> Result<QLayer> {
+    let out_qp = get_qp(r)?;
+    let clamp = (r.i32()?, r.i32()?);
+    let w_q = get_blob(r, map, panel)?;
+    let w_sums = r.vec_i32()?;
+    let bias_q = r.vec_i32()?;
+    let requant = r.vec_i32_pair()?;
+    let w_scales = r.vec_f32()?;
+    let packed = match r.u32()? {
+        0 => None,
+        1 => {
+            let k = r.u32()? as usize;
+            let n = r.u32()? as usize;
+            let slab = get_blob(r, map, panel)?;
+            Some(PackedWeights::from_packed(slab, k, n)?)
+        }
+        other => bail!("bad has_packed flag {other}"),
+    };
+    Ok(QLayer {
+        w_q,
+        w_sums,
+        bias_q,
+        requant,
+        out_qp,
+        clamp,
+        w_scales,
+        packed,
+    })
+}
+
+/// Resolve a (off, len) panel-section reference into a zero-copy slab.
+fn get_blob(
+    r: &mut Reader,
+    map: &Arc<Mapping>,
+    panel: &Section,
+) -> Result<I8Slab> {
+    let off = r.u64()?;
+    let len = r.u64()?;
+    let end = off.checked_add(len).ok_or_else(|| {
+        anyhow::anyhow!("panel blob [{off}, +{len}) overflows")
+    })?;
+    ensure!(
+        end <= panel.len as u64,
+        "panel blob [{off}, +{len}) exceeds panel section of {} bytes",
+        panel.len
+    );
+    I8Slab::from_mapping(
+        Arc::clone(map),
+        panel.off + off as usize,
+        len as usize,
+    )
+}

@@ -1,0 +1,251 @@
+//! Read-only file mappings for zero-copy artifact loading
+//! (DESIGN.md §11.2).
+//!
+//! [`Mapping`] backs the `.fatm` loader: on 64-bit unix it wraps the raw
+//! `mmap(2)`/`munmap(2)` syscalls declared directly against the libc the
+//! Rust runtime already links (zero-deps policy — no `libc` crate), so a
+//! loaded model's weight panels are served straight out of the kernel
+//! page cache and N server processes share one physical copy. Everywhere
+//! else — and whenever `FAT_MMAP=off` asks for it — the file is read
+//! into a heap buffer instead; both variants expose one `&[u8]` and the
+//! loader above cannot tell them apart.
+//!
+//! ## Safety argument
+//!
+//! The mapped region is `PROT_READ` + `MAP_PRIVATE`: nothing in this
+//! process can write through it, and writes by other processes to the
+//! underlying file are not guaranteed to be observed (private mapping)
+//! — but even if they were, every zero-copy consumer reads the bytes as
+//! `i8`/`u8`, for which **every bit pattern is a valid value**, so a
+//! concurrently-truncated or rewritten file can produce wrong logits
+//! but never undefined behavior from the values themselves. (A
+//! truncation that shrinks the file below the mapping can still fault
+//! on touch, as with any mmap consumer; the deployment contract is that
+//! artifacts are replaced atomically via rename, never truncated in
+//! place.) Structured fields (lengths, offsets, i32/f32 tables) are
+//! *copied out* through checked little-endian decoding at load time and
+//! are never re-read from the mapping afterwards.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x2;
+
+    extern "C" {
+        // Declared against the platform libc the Rust std runtime
+        // already links. 64-bit targets only (gated above): `off_t` is
+        // 64-bit there, so the `i64` offset matches the ABI.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+enum MapInner {
+    /// A live `mmap(2)` region; unmapped on drop.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap { ptr: *mut std::os::raw::c_void, len: usize },
+    /// Heap fallback (non-unix targets, `FAT_MMAP=off`, or in-memory
+    /// byte buffers from tests/fuzzing).
+    Heap(Vec<u8>),
+}
+
+/// An immutable byte region backing a loaded artifact: either a real
+/// file mapping or an owned heap buffer. Shared by every borrowed
+/// weight slab of a loaded model via `Arc` (see
+/// [`crate::artifact::I8Slab`]), so the region outlives all views into
+/// it by construction.
+pub struct Mapping {
+    inner: MapInner,
+}
+
+// SAFETY: the region is immutable for the lifetime of the Mapping (heap
+// buffer is never touched again; mmap is PROT_READ), so shared access
+// from any thread is sound.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only. Uses `mmap` where available unless
+    /// `FAT_MMAP=off|0` pins the heap path; falls back to reading the
+    /// file into memory otherwise (including for empty files, which
+    /// `mmap` rejects).
+    pub fn map_file<P: AsRef<Path>>(path: P) -> Result<Mapping> {
+        let force_heap = matches!(
+            std::env::var("FAT_MMAP").ok().as_deref().map(str::trim),
+            Some("off") | Some("0") | Some("false")
+        );
+        Self::map_file_with(path, force_heap)
+    }
+
+    /// [`Mapping::map_file`] with the heap fallback pinned explicitly.
+    pub fn map_file_with<P: AsRef<Path>>(
+        path: P,
+        force_heap: bool,
+    ) -> Result<Mapping> {
+        let path = path.as_ref();
+        if !force_heap {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            {
+                return Self::mmap_unix(path);
+            }
+        }
+        Self::read_heap(path)
+    }
+
+    /// Wrap an owned byte buffer (the in-memory load path).
+    pub fn from_vec(bytes: Vec<u8>) -> Mapping {
+        Mapping { inner: MapInner::Heap(bytes) }
+    }
+
+    fn read_heap(path: &Path) -> Result<Mapping> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Ok(Mapping { inner: MapInner::Heap(bytes) })
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn mmap_unix(path: &Path) -> Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            // mmap(2) rejects zero-length maps; an empty artifact fails
+            // header validation anyway, so hand back an empty buffer.
+            return Ok(Mapping { inner: MapInner::Heap(Vec::new()) });
+        }
+        // SAFETY: valid fd for the duration of the call; the mapping
+        // survives the fd close per POSIX. Failure is reported via
+        // MAP_FAILED (-1), checked below.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            anyhow::bail!(
+                "mmap {path:?} failed: {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(Mapping { inner: MapInner::Mmap { ptr, len } })
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            // SAFETY: ptr/len came from a successful PROT_READ mmap
+            // that lives until Drop; the region is immutable (module
+            // safety argument) and u8 has no invalid bit patterns.
+            MapInner::Mmap { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr as *const u8, *len)
+            },
+            MapInner::Heap(v) => v,
+        }
+    }
+
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            MapInner::Mmap { len, .. } => *len,
+            MapInner::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this region is a real file mapping (vs the heap path) —
+    /// surfaced in [`crate::artifact::LoadReport`].
+    pub fn is_mmap(&self) -> bool {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            MapInner::Mmap { .. } => true,
+            MapInner::Heap(_) => false,
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let MapInner::Mmap { ptr, len } = self.inner {
+            // SAFETY: exactly the region returned by mmap in map_file;
+            // dropped once (Drop runs once, Mapping is not Clone).
+            unsafe {
+                sys::munmap(ptr, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping")
+            .field("len", &self.len())
+            .field("mmap", &self.is_mmap())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_and_mmap_agree() {
+        let p = std::env::temp_dir().join("fat_mapping_test.bin");
+        let payload: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&p, &payload).unwrap();
+        let heap = Mapping::map_file_with(&p, true).unwrap();
+        assert!(!heap.is_mmap());
+        assert_eq!(heap.bytes(), &payload[..]);
+        let auto = Mapping::map_file_with(&p, false).unwrap();
+        assert_eq!(auto.bytes(), &payload[..]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(auto.is_mmap());
+    }
+
+    #[test]
+    fn empty_file_maps_as_empty() {
+        let p = std::env::temp_dir().join("fat_mapping_empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mapping::map_file_with(&p, false).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), b"");
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mapping::map_file("/nonexistent/fat/artifact.fatm").is_err());
+    }
+
+    #[test]
+    fn from_vec_owns_bytes() {
+        let m = Mapping::from_vec(vec![1, 2, 3]);
+        assert_eq!(m.bytes(), &[1, 2, 3]);
+        assert_eq!(m.len(), 3);
+        assert!(!m.is_mmap());
+    }
+}

@@ -1,0 +1,44 @@
+//! Compiled-model artifact format (`.fatm`) with zero-copy mmap loading
+//! (DESIGN.md §11).
+//!
+//! `quant::export::build_qmodel` is expensive relative to serving
+//! cold-start: it re-quantizes weights, re-derives per-site qparams and
+//! re-packs every conv/dense matrix into SIMD panels. A `.fatm` artifact
+//! captures the *output* of that work — the compiled [`ExecPlan`]
+//! schedule, buffer-slot table, per-site quantization parameters,
+//! col sums and prepacked weight panels — in a versioned, checksummed,
+//! alignment-aware container, so a server process goes from `open(2)` to
+//! first inference without doing any of it again:
+//!
+//! ```text
+//! fat export --models mobilenet_cifar     # build once  → .fatm
+//! fat serve  --models artifacts/compiled  # load zero-copy, serve
+//! ```
+//!
+//! Module map: [`layout`] (constants + checked LE reader/writer),
+//! [`digest`] (FNV-1a 64 content digest = registry etag), [`mmap`]
+//! (read-only file mappings via direct `mmap(2)`, heap fallback),
+//! [`slab`] (owned-vs-mapped i8 weight storage behind the kernels),
+//! [`save`] (deterministic writer, atomic rename), [`load`] (validating
+//! zero-copy loader with ISA repack).
+//!
+//! The packing-ISA tag in the header records which microkernel level the
+//! panels were packed for; the loader repacks from the unpacked weights
+//! when the host differs ([`LoadReport::repacked`]). Loaded models serve
+//! logits bit-identical to the in-memory export across every ISA ×
+//! thread-count combination (`rust/tests/artifact_roundtrip.rs`).
+//!
+//! [`ExecPlan`]: crate::int8::plan::ExecPlan
+
+pub mod digest;
+pub mod layout;
+pub mod load;
+pub mod mmap;
+pub mod save;
+pub mod slab;
+
+pub use digest::{etag, fnv1a64};
+pub use load::{load, load_from_bytes, peek_etag, LoadOptions, LoadReport};
+pub use mmap::Mapping;
+pub use save::{save, to_bytes};
+pub use slab::I8Slab;

@@ -1,0 +1,183 @@
+//! `.fatm` writer: serialize a compiled [`QModel`] — plan schedule,
+//! per-site qparams, col sums, prepacked SIMD weight panels — into the
+//! sectioned container of DESIGN.md §11.1.
+//!
+//! The writer is fully deterministic (no timestamps, no map iteration
+//! order — everything follows the plan's dense schedule order), so the
+//! same model always produces byte-identical files and the content
+//! digest doubles as the registry's change-detecting etag.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::int8::engine::{QLayer, QModel, QNode};
+use crate::int8::kernels::Isa;
+use crate::quant::scale::QParams;
+
+use super::digest::{etag, fnv1a64};
+use super::layout::{
+    align_up, i8_as_bytes, isa_tag, Writer, DIGEST_START, HEADER_LEN, MAGIC,
+    PLAN_VERSION, SECTIONS, SEC_GRAPH, SEC_PANEL, SEC_PLAN, TOC_ENTRY_LEN,
+};
+
+/// Append a blob to the panel section at the next 64-byte boundary and
+/// return its `(off, len)` reference (relative to the section start).
+fn push_blob(panel: &mut Vec<u8>, bytes: &[i8]) -> (u64, u64) {
+    let off = align_up(panel.len());
+    panel.resize(off, 0);
+    panel.extend_from_slice(i8_as_bytes(bytes));
+    (off as u64, bytes.len() as u64)
+}
+
+fn put_qp(w: &mut Writer, qp: QParams) {
+    w.f32(qp.scale);
+    w.i32(qp.zero_point);
+    w.i32(qp.qmin);
+    w.i32(qp.qmax);
+}
+
+/// Serialize `qm` into `.fatm` bytes, tagging the weight panels with
+/// `isa` (the packed layout itself is ISA-independent today; the tag
+/// drives the loader's repack-on-mismatch rule so the format stays
+/// correct if a future packing ever specializes per ISA).
+pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
+    let graph = qm.graph.to_json().into_bytes();
+    let plan = &qm.plan;
+
+    // PLAN and PANEL are built together: the plan references weight
+    // blobs by (off, len) into the panel section.
+    let mut panel: Vec<u8> = Vec::new();
+    let mut w = Writer::default();
+    w.u32(PLAN_VERSION);
+    w.u32(plan.num_slots as u32);
+    w.u32(plan.input_slot as u32);
+    w.u32(plan.output_slot as u32);
+    put_qp(&mut w, qm.input_qp);
+    w.u64(qm.param_bytes as u64);
+
+    w.u32(plan.steps.len() as u32);
+    for s in &plan.steps {
+        w.string(&s.id);
+        w.string(s.op.name());
+        w.u32(s.param as u32);
+        w.u32(s.a as u32);
+        w.u32(s.b.map_or(0, |b| b as u32 + 1));
+        w.u32(s.dst as u32);
+        w.u32(s.k as u32);
+        w.u32(s.stride as u32);
+        w.u32(s.cout as u32);
+        w.u32(s.frees.len() as u32);
+        for &f in &s.frees {
+            w.u32(f as u32);
+        }
+    }
+
+    w.u32(plan.params.len() as u32);
+    for p in &plan.params {
+        match p {
+            QNode::Layer(l) => {
+                w.u32(0);
+                put_layer(&mut w, &mut panel, l);
+            }
+            QNode::Add(a) => {
+                w.u32(1);
+                w.i32(a.ma.0);
+                w.i32(a.ma.1);
+                w.i32(a.mb.0);
+                w.i32(a.mb.1);
+                put_qp(&mut w, a.out_qp);
+                w.i32(a.clamp.0);
+                w.i32(a.clamp.1);
+            }
+            QNode::Gap(gp) => {
+                w.u32(2);
+                w.i32(gp.m.0);
+                w.i32(gp.m.1);
+                put_qp(&mut w, gp.out_qp);
+            }
+            QNode::Passthrough => w.u32(3),
+        }
+    }
+    let plan_bytes = w.buf;
+
+    // Assemble: header, TOC, then the three sections at 64-byte offsets.
+    let toc_end = HEADER_LEN + SECTIONS.len() * TOC_ENTRY_LEN;
+    let graph_off = align_up(toc_end);
+    let plan_off = align_up(graph_off + graph.len());
+    let panel_off = align_up(plan_off + plan_bytes.len());
+    let file_size = panel_off + panel.len();
+
+    let mut out = vec![0u8; file_size];
+    out[0..8].copy_from_slice(MAGIC);
+    out[8..16].copy_from_slice(&(file_size as u64).to_le_bytes());
+    // digest written last
+    out[24..28].copy_from_slice(&isa_tag(isa).to_le_bytes());
+    out[28..32].copy_from_slice(&(SECTIONS.len() as u32).to_le_bytes());
+    for (i, (kind, (off, len))) in SECTIONS
+        .iter()
+        .zip([
+            (graph_off, graph.len()),
+            (plan_off, plan_bytes.len()),
+            (panel_off, panel.len()),
+        ])
+        .enumerate()
+    {
+        let e = HEADER_LEN + i * TOC_ENTRY_LEN;
+        out[e..e + 4].copy_from_slice(&kind.to_le_bytes());
+        out[e + 8..e + 16].copy_from_slice(&(off as u64).to_le_bytes());
+        out[e + 16..e + 24].copy_from_slice(&(len as u64).to_le_bytes());
+    }
+    out[graph_off..graph_off + graph.len()].copy_from_slice(&graph);
+    out[plan_off..plan_off + plan_bytes.len()].copy_from_slice(&plan_bytes);
+    out[panel_off..panel_off + panel.len()].copy_from_slice(&panel);
+
+    let d = fnv1a64(&out[DIGEST_START..]);
+    out[16..24].copy_from_slice(&d.to_le_bytes());
+    out
+}
+
+fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer) {
+    put_qp(w, l.out_qp);
+    w.i32(l.clamp.0);
+    w.i32(l.clamp.1);
+    let (off, len) = push_blob(panel, &l.w_q);
+    w.u64(off);
+    w.u64(len);
+    w.vec_i32(&l.w_sums);
+    w.vec_i32(&l.bias_q);
+    w.vec_i32_pair(&l.requant);
+    w.vec_f32(&l.w_scales);
+    match &l.packed {
+        Some(pw) => {
+            w.u32(1);
+            w.u32(pw.k as u32);
+            w.u32(pw.n as u32);
+            let (poff, plen) = push_blob(panel, pw.raw_data());
+            w.u64(poff);
+            w.u64(plen);
+        }
+        None => w.u32(0),
+    }
+}
+
+/// Serialize `qm` and write it to `path` atomically (write to a
+/// `.fatm.tmp` sibling, then rename — readers mapping the old file keep
+/// their mapping; see the deployment contract in
+/// [`super::mmap`]). Returns the artifact's etag.
+pub fn save<P: AsRef<Path>>(qm: &QModel, path: P, isa: Isa) -> Result<String> {
+    let path = path.as_ref();
+    let bytes = to_bytes(qm, isa);
+    let d = fnv1a64(&bytes[DIGEST_START..]);
+    let tmp = path.with_extension("fatm.tmp");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {dir:?}"))?;
+        }
+    }
+    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(etag(d))
+}

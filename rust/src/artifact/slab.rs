@@ -1,0 +1,140 @@
+//! Borrowed-vs-owned int8 weight storage (DESIGN.md §11.2).
+//!
+//! [`I8Slab`] is the storage type behind `QLayer::w_q` and
+//! `PackedWeights` panel data: either an owned `Vec<i8>` (the
+//! `build_qmodel` export path and every hand-built test layer) or a
+//! window into a shared read-only [`Mapping`] (the zero-copy `.fatm`
+//! load path). It derefs to `&[i8]`, so the kernels and the execution
+//! plan are oblivious to where the weights live — a model can run
+//! straight out of the page cache.
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+use super::mmap::Mapping;
+
+/// Owned or mapping-backed `[i8]` storage with slice semantics.
+#[derive(Clone)]
+pub enum I8Slab {
+    /// Heap-owned bytes (export path, hand-built layers).
+    Owned(Vec<i8>),
+    /// A `len`-byte window at `off` into a shared read-only mapping.
+    /// Alignment is irrelevant for `i8` (align 1) and every bit pattern
+    /// is a valid `i8`, so any in-bounds window is sound.
+    Mapped { map: Arc<Mapping>, off: usize, len: usize },
+}
+
+impl I8Slab {
+    /// View a window of a mapping as an i8 slab. Errors when the window
+    /// exceeds the mapping — the loader calls this with attacker-visible
+    /// offsets, so the check is not a debug assert.
+    pub fn from_mapping(
+        map: Arc<Mapping>,
+        off: usize,
+        len: usize,
+    ) -> anyhow::Result<I8Slab> {
+        anyhow::ensure!(
+            off.checked_add(len).is_some_and(|end| end <= map.len()),
+            "i8 slab [{off}, {off}+{len}) exceeds mapping of {} bytes",
+            map.len()
+        );
+        Ok(I8Slab::Mapped { map, off, len })
+    }
+
+    /// Whether this slab borrows a mapping (vs owning its bytes).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, I8Slab::Mapped { .. })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            I8Slab::Owned(v) => v.len(),
+            I8Slab::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for I8Slab {
+    type Target = [i8];
+
+    fn deref(&self) -> &[i8] {
+        match self {
+            I8Slab::Owned(v) => v,
+            I8Slab::Mapped { map, off, len } => {
+                let bytes = &map.bytes()[*off..*off + *len];
+                // SAFETY: i8 and u8 have identical size/alignment and
+                // every bit pattern is valid for both; the range was
+                // bounds-checked at construction and the mapping is
+                // immutable and outlives `self` (Arc).
+                unsafe {
+                    std::slice::from_raw_parts(
+                        bytes.as_ptr() as *const i8,
+                        bytes.len(),
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl From<Vec<i8>> for I8Slab {
+    fn from(v: Vec<i8>) -> I8Slab {
+        I8Slab::Owned(v)
+    }
+}
+
+impl PartialEq for I8Slab {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl std::fmt::Debug for I8Slab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "I8Slab::{}({} bytes)",
+            if self.is_mapped() { "Mapped" } else { "Owned" },
+            self.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_and_mapped_deref_equally() {
+        let v: Vec<i8> = vec![-128, -1, 0, 1, 127];
+        let owned: I8Slab = v.clone().into();
+        let bytes: Vec<u8> = v.iter().map(|&b| b as u8).collect();
+        let map = Arc::new(Mapping::from_vec(bytes));
+        let mapped = I8Slab::from_mapping(map, 0, 5).unwrap();
+        assert_eq!(&owned[..], &v[..]);
+        assert_eq!(&mapped[..], &v[..]);
+        assert_eq!(owned, mapped);
+        assert!(!owned.is_mapped());
+        assert!(mapped.is_mapped());
+    }
+
+    #[test]
+    fn window_into_mapping() {
+        let map = Arc::new(Mapping::from_vec(vec![0, 1, 2, 3, 4, 5]));
+        let s = I8Slab::from_mapping(Arc::clone(&map), 2, 3).unwrap();
+        assert_eq!(&s[..], &[2i8, 3, 4]);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn out_of_bounds_window_rejected() {
+        let map = Arc::new(Mapping::from_vec(vec![0u8; 8]));
+        assert!(I8Slab::from_mapping(Arc::clone(&map), 4, 5).is_err());
+        assert!(I8Slab::from_mapping(Arc::clone(&map), usize::MAX, 2).is_err());
+        assert!(I8Slab::from_mapping(map, 8, 0).is_ok()); // empty tail ok
+    }
+}

@@ -20,11 +20,15 @@ use super::ops::{self, OpCtx};
 use super::plan::{Arena, ExecPlan};
 use super::qtensor::QTensor;
 
-/// Parameters of one conv-like quantized layer.
+/// Parameters of one conv-like quantized layer. Weight bytes live in
+/// [`crate::artifact::I8Slab`]s: owned when built by
+/// `quant::export::build_qmodel`, windows into a shared read-only
+/// mapping when loaded zero-copy from a `.fatm` artifact
+/// (`crate::artifact`).
 #[derive(Debug, Clone)]
 pub struct QLayer {
     /// conv: (k*k*cin, cout) row-major; dwconv: (k,k,ch); dense: (cin, cout)
-    pub w_q: Vec<i8>,
+    pub w_q: crate::artifact::I8Slab,
     pub w_sums: Vec<i32>,
     pub bias_q: Vec<i32>,
     /// Per output channel (m0, shift): s_in * s_w[c] / s_out.
@@ -98,6 +102,20 @@ impl ExecState {
             arena: Arena::default(),
             ctx: OpCtx::with_threads(threads),
         }
+    }
+
+    /// Empty state with an explicit worker count **and** kernel ISA —
+    /// the in-process ISA-sweep path (artifact round-trip tests, A/B
+    /// runs). [`Isa::detect`](super::kernels::Isa::detect) caches the
+    /// process-wide level once, so sweeping ISAs requires pinning it
+    /// per state rather than mutating the environment.
+    pub fn with_threads_isa(
+        threads: usize,
+        isa: super::kernels::Isa,
+    ) -> Self {
+        let mut st = Self::with_threads(threads);
+        st.ctx.isa = isa;
+        st
     }
 
     /// Change the kernel worker count for subsequent runs.

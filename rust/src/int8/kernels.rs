@@ -34,6 +34,8 @@
 
 use std::sync::OnceLock;
 
+use crate::artifact::I8Slab;
+
 /// Rows of `a` per micro-tile (register-block height).
 pub const MR: usize = 4;
 /// Columns of `b` per strip (register-block width).
@@ -62,6 +64,16 @@ impl Isa {
         }
     }
 
+    /// Inverse of [`Isa::name`] for CLI/env values (`scalar|sse2|avx2`).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim() {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            _ => None,
+        }
+    }
+
     /// Best ISA the hardware supports.
     fn best() -> Isa {
         #[cfg(target_arch = "x86_64")]
@@ -87,24 +99,21 @@ impl Isa {
         static CACHE: OnceLock<Isa> = OnceLock::new();
         *CACHE.get_or_init(|| {
             let best = Isa::best();
-            let req = match std::env::var("FAT_ISA")
-                .ok()
-                .as_deref()
-                .map(str::trim)
-            {
-                Some("scalar") => Some(Isa::Scalar),
-                Some("sse2") => Some(Isa::Sse2),
-                Some("avx2") => Some(Isa::Avx2),
-                Some(other) => {
-                    // An explicit pin the user typo'd must not silently
-                    // turn into "fastest": that would invert A/B runs.
-                    eprintln!(
-                        "FAT_ISA: unknown value {other:?} \
-                         (want scalar|sse2|avx2); using detected {}",
-                        best.name()
-                    );
-                    None
-                }
+            let req = match std::env::var("FAT_ISA").ok().as_deref() {
+                Some(other) => match Isa::parse(other) {
+                    Some(r) => Some(r),
+                    None => {
+                        // An explicit pin the user typo'd must not
+                        // silently turn into "fastest": that would
+                        // invert A/B runs.
+                        eprintln!(
+                            "FAT_ISA: unknown value {other:?} \
+                             (want scalar|sse2|avx2); using detected {}",
+                            best.name()
+                        );
+                        None
+                    }
+                },
                 None => None,
             };
             req.map_or(best, |r| r.min(best))
@@ -124,10 +133,14 @@ impl Isa {
 /// Weight matrix prepacked at `build_qmodel` plan time into the strip /
 /// pair-interleaved layout the microkernels consume (module docs). Built
 /// once per exported model and stored on the plan's dense parameter
-/// table (`QLayer::packed`).
+/// table (`QLayer::packed`). The panel bytes live in an [`I8Slab`]:
+/// owned when packed in-process, a borrowed window into a shared
+/// read-only mapping when loaded zero-copy from a `.fatm` artifact
+/// (`crate::artifact`) — the packed layout is ISA-independent, so a
+/// panel packed on one machine is valid on any other.
 #[derive(Debug, Clone)]
 pub struct PackedWeights {
-    data: Vec<i8>,
+    data: I8Slab,
     /// Logical row count of the source `(k, n)` matrix.
     pub k: usize,
     /// Logical column count of the source `(k, n)` matrix.
@@ -160,12 +173,48 @@ impl PackedWeights {
                 }
             }
         }
-        PackedWeights { data, k, n, pk, strips }
+        PackedWeights { data: data.into(), k, n, pk, strips }
+    }
+
+    /// Rehydrate from already-packed panel bytes (the `.fatm` zero-copy
+    /// load path). `data` must be exactly the output of
+    /// [`PackedWeights::pack`] for a `(k, n)` matrix; only the length is
+    /// checkable here — byte-level validity is the artifact digest's
+    /// job.
+    pub fn from_packed(
+        data: I8Slab,
+        k: usize,
+        n: usize,
+    ) -> anyhow::Result<PackedWeights> {
+        let strips = n.div_ceil(NR);
+        let pk = k + (k & 1);
+        let want = strips
+            .checked_mul(pk)
+            .and_then(|v| v.checked_mul(NR))
+            .ok_or_else(|| {
+                anyhow::anyhow!("packed shape ({k},{n}) overflows")
+            })?;
+        anyhow::ensure!(
+            data.len() == want,
+            "packed panel for ({k},{n}): {} bytes, want {want}",
+            data.len()
+        );
+        Ok(PackedWeights { data, k, n, pk, strips })
     }
 
     /// Packed size in bytes (padding included) — for size reports.
     pub fn bytes(&self) -> usize {
         self.data.len()
+    }
+
+    /// The raw packed panel bytes (artifact serialization).
+    pub fn raw_data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Whether the panel bytes borrow a mapped artifact (vs owned heap).
+    pub fn is_mapped(&self) -> bool {
+        self.data.is_mapped()
     }
 
     #[inline]
@@ -601,6 +650,29 @@ mod tests {
             gemm_packed(&a, 0, &pw, &sums, 1, &mut out, isa);
             assert_eq!(out[0], 127 * 127 * 512, "{}", isa.name());
         }
+    }
+
+    #[test]
+    fn from_packed_rehydrates_identically() {
+        let b = prop::i8s(41, 24 * 70);
+        let pw = PackedWeights::pack(&b, 24, 70);
+        let re =
+            PackedWeights::from_packed(pw.raw_data().to_vec().into(), 24, 70)
+                .unwrap();
+        assert_eq!(re.raw_data(), pw.raw_data());
+        assert_eq!((re.k, re.n, re.pk, re.strips), (pw.k, pw.n, pw.pk, pw.strips));
+        // wrong byte count is rejected, not asserted
+        assert!(PackedWeights::from_packed(vec![0i8; 7].into(), 24, 70).is_err());
+    }
+
+    #[test]
+    fn isa_parse_inverts_name() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse(" avx2 "), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("neon"), None);
+        assert_eq!(Isa::parse(""), None);
     }
 
     #[test]

@@ -339,7 +339,7 @@ mod tests {
         clamp: (i32, i32),
     ) -> QLayer {
         QLayer {
-            w_q,
+            w_q: w_q.into(),
             w_sums,
             bias_q,
             requant,

@@ -118,6 +118,52 @@ impl<P> ExecPlan<P> {
         self.index.get(id).map(|&i| &self.params[i])
     }
 
+    /// Rebuild a plan from deserialized parts (the `.fatm` load path —
+    /// `crate::artifact`), re-deriving the private id→param index from
+    /// the steps and validating every dense index so a corrupt or
+    /// hand-crafted artifact fails here with an error instead of
+    /// panicking inside the executor's slot table.
+    pub fn from_parts(
+        steps: Vec<PlanStep>,
+        params: Vec<P>,
+        num_slots: usize,
+        input_slot: usize,
+        output_slot: usize,
+    ) -> Result<ExecPlan<P>> {
+        anyhow::ensure!(
+            input_slot < num_slots && output_slot < num_slots,
+            "plan slots out of range: input {input_slot} / output \
+             {output_slot} with {num_slots} slots"
+        );
+        let mut index = BTreeMap::new();
+        for s in &steps {
+            anyhow::ensure!(
+                s.param < params.len(),
+                "{}: param index {} out of range ({} params)",
+                s.id,
+                s.param,
+                params.len()
+            );
+            for slot in std::iter::once(s.a)
+                .chain(s.b)
+                .chain(std::iter::once(s.dst))
+                .chain(s.frees.iter().copied())
+            {
+                anyhow::ensure!(
+                    slot < num_slots,
+                    "{}: buffer slot {slot} out of range ({num_slots} slots)",
+                    s.id
+                );
+            }
+            anyhow::ensure!(
+                index.insert(s.id.clone(), s.param).is_none(),
+                "duplicate step id {}",
+                s.id
+            );
+        }
+        Ok(ExecPlan { steps, params, num_slots, input_slot, output_slot, index })
+    }
+
     /// Compile schedule + slot assignment from the folded graph and the
     /// per-node parameters (built by `quant::export` for int8, by
     /// `fp::program` for the FP32 backend). `qnodes` must hold an entry
@@ -342,6 +388,54 @@ mod tests {
                 assert_ne!(s.dst, b, "{}", s.id);
             }
         }
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_validates() {
+        let g = GraphDef::from_json(CHAIN).unwrap();
+        let mut qn = BTreeMap::new();
+        qn.insert("g0".to_string(), gap_node());
+        qn.insert("r0".to_string(), QNode::Passthrough);
+        let plan = ExecPlan::compile(&g, qn).unwrap();
+        let re = ExecPlan::from_parts(
+            plan.steps.clone(),
+            plan.params.clone(),
+            plan.num_slots,
+            plan.input_slot,
+            plan.output_slot,
+        )
+        .unwrap();
+        assert_eq!(re.steps.len(), plan.steps.len());
+        assert!(re.node("g0").is_some());
+        // hostile indices must error, not panic in the executor
+        assert!(ExecPlan::from_parts(
+            plan.steps.clone(),
+            plan.params.clone(),
+            plan.num_slots,
+            99,
+            plan.output_slot,
+        )
+        .is_err());
+        let mut bad = plan.steps.clone();
+        bad[0].param = 7;
+        assert!(ExecPlan::from_parts(
+            bad,
+            plan.params.clone(),
+            plan.num_slots,
+            plan.input_slot,
+            plan.output_slot,
+        )
+        .is_err());
+        let mut bad2 = plan.steps.clone();
+        bad2[0].dst = plan.num_slots;
+        assert!(ExecPlan::from_parts(
+            bad2,
+            plan.params.clone(),
+            plan.num_slots,
+            plan.input_slot,
+            plan.output_slot,
+        )
+        .is_err());
     }
 
     #[test]

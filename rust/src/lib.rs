@@ -33,12 +33,21 @@
 //! `cargo run --release -- --epochs 1` works on a bare checkout
 //! (DESIGN.md §7).
 //!
+//! Exported models persist as **`.fatm` compiled artifacts**
+//! ([`artifact`], DESIGN.md §11): a versioned, checksummed container for
+//! everything `build_qmodel` produces — plan schedule, per-site qparams,
+//! prepacked SIMD weight panels — written by `fat export` and loaded
+//! zero-copy via `mmap` so serving cold-start skips re-quantization and
+//! re-packing entirely (`fat serve --models <dir>`).
+//!
 //! Environment knobs: `FAT_ARTIFACTS` (artifact dir, default
 //! `./artifacts`), `FAT_BACKEND` (`auto` | `native` | `artifact`),
 //! `FAT_THREADS` (worker count for the int8 engine and the native FP32
-//! backend, default = machine parallelism), `FAT_BENCH_ITERS` /
+//! backend, default = machine parallelism), `FAT_MMAP` (`off` pins the
+//! `.fatm` loader to the read-into-heap path), `FAT_BENCH_ITERS` /
 //! `FAT_BENCH_MAX_SECS` (bench harness).
 
+pub mod artifact;
 pub mod coordinator;
 pub mod data;
 pub mod fp;

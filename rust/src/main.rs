@@ -19,9 +19,13 @@
 //!                 [--requests N] [--max-batch N] [--max-wait-us N]
 //!                 [--threads N] [--json PATH]
 //!                 [--transport thread|socket|both]
-//!   fat serve [--models M1,M2] [--addr 127.0.0.1:8080] [--mode MODE]
+//!   fat export [--models M1,M2] [--out DIR] [--mode MODE]
+//!                 [--calibrator C] [--calib N] [--isa scalar|sse2|avx2]
+//!   fat serve [--models M1,M2|path.fatm|artifact-dir]
+//!                 [--addr 127.0.0.1:8080] [--mode MODE]
 //!                 [--threads N] [--max-batch N] [--max-wait-us N]
 //!                 [--max-conns N] [--max-inflight N] [--drain-secs N]
+//!                 [--reload-secs N]
 
 use std::sync::Arc;
 
@@ -53,17 +57,29 @@ Commands (default: pipeline):
     [--max-wait-us N] [--threads N] [--json PATH]
     [--transport thread|socket|both]  (socket drives a live loopback
     server over HTTP; both also prints loopback-vs-inprocess speedups)
+  export                       compile models to .fatm artifacts:
+    calibrate + quantize once, write the compiled plan + prepacked
+    panels to <out>/<model>.fatm for zero-copy mmap serving cold-start
+    [--models M1,M2] [--out DIR (default <artifacts>/compiled)]
+    [--mode MODE] [--calibrator C] [--calib N] [--isa scalar|sse2|avx2]
   serve                        socket server over the int8 engine:
     HTTP/1.1 + binary frame protocol on one port, multi-model routing,
-    admission control, /stats, graceful drain on SIGINT/SIGTERM
-    [--models M1,M2] [--addr 127.0.0.1:8080] [--mode MODE] [--threads N]
-    [--max-batch N] [--max-wait-us N] [--max-conns N] [--max-inflight N]
-    [--read-timeout-ms N] [--drain-secs N]
+    admission control, /stats + /models, graceful drain on
+    SIGINT/SIGTERM. --models items may be builtin/artifact model names
+    (calibrate + export in-process), paths to compiled .fatm files
+    (zero-copy mmap load), or directories of .fatm artifacts (load all;
+    with --reload-secs N, rescan every N seconds and hot-reload entries
+    whose content etag changed)
+    [--models M1,M2|path.fatm|dir] [--addr 127.0.0.1:8080] [--mode MODE]
+    [--threads N] [--max-batch N] [--max-wait-us N] [--max-conns N]
+    [--max-inflight N] [--read-timeout-ms N] [--drain-secs N]
+    [--reload-secs N]
 
 Modes: sym_scalar | sym_vector | asym_scalar | asym_vector
 Calibrators: max (default) | p99 | p999 | p9999 | kl
 Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
         FAT_BACKEND=auto|native|artifact (float-stage backend)
+        FAT_MMAP=off (read .fatm artifacts onto the heap instead of mmap)
 
 Without an artifacts/ directory everything runs on the native FP32
 backend over the builtin model zoo (deterministic untrained weights):
@@ -236,6 +252,9 @@ fn main() -> Result<()> {
                 &reg, &artifacts, model, &clients, requests, max_batch,
                 max_wait_us, threads, args.get("json"), transport,
             )?;
+        }
+        "export" => {
+            cmd_export(&reg, &artifacts, &args)?;
         }
         "serve" => {
             cmd_serve(&reg, &artifacts, &args)?;
@@ -464,9 +483,75 @@ fn serve_bench(
     Ok(())
 }
 
-/// The `fat serve` subcommand: calibrate + export each requested model,
-/// register all of them in one [`fat::net::ModelRegistry`], bind the
-/// socket front-end and run until SIGINT/SIGTERM asks for a drain.
+/// The `fat export` subcommand: compile each requested model (calibrate
+/// → quantize → `build_qmodel`) and save the result as a `.fatm`
+/// artifact, so a later `fat serve --models <dir>` cold-starts by
+/// zero-copy mmap instead of redoing any of that work.
+fn cmd_export(
+    reg: &Arc<Registry>,
+    artifacts: &std::path::Path,
+    args: &Args,
+) -> Result<()> {
+    use fat::int8::Isa;
+    use fat::model::store::{compiled_dir, fatm_path};
+
+    let models: Vec<String> = args
+        .get("models")
+        .or_else(|| args.get("model"))
+        .unwrap_or("tiny_cnn")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(
+        !models.is_empty(),
+        "export: --models must list at least one model"
+    );
+    let out = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| compiled_dir(artifacts));
+    let spec = QuantSpec::parse(
+        args.get_or("mode", "sym_vector"),
+        args.get_or("calibrator", "max"),
+    )?;
+    let calib = args.usize_or("calib", 16);
+    let isa = match args.get("isa") {
+        Some(s) => Isa::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("export: --isa must be scalar|sse2|avx2, got {s}")
+        })?,
+        None => Isa::detect(),
+    };
+    for name in &models {
+        let t0 = std::time::Instant::now();
+        let qm = QuantSession::open(reg.clone(), artifacts, name)?
+            .calibrate(CalibOpts::images(calib))?
+            .identity(&spec)?
+            .export()?;
+        let build_secs = t0.elapsed().as_secs_f64();
+        let path = fatm_path(&out, name);
+        let t1 = std::time::Instant::now();
+        let etag = fat::artifact::save(&qm, &path, isa)?;
+        let size = std::fs::metadata(&path)?.len();
+        println!(
+            "exported {name} [{}] -> {} ({size} bytes, {etag}, \
+             panels packed for {}; build {build_secs:.2}s, \
+             write {:.3}s)",
+            spec.mode().name(),
+            path.display(),
+            isa.name(),
+            t1.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+/// The `fat serve` subcommand: register every requested model in one
+/// [`fat::net::ModelRegistry`] — builtin/artifact names calibrate +
+/// export in-process, `.fatm` paths and artifact directories load
+/// zero-copy — bind the socket front-end and run until SIGINT/SIGTERM
+/// asks for a drain, optionally rescanning artifact directories for
+/// etag-changed files every `--reload-secs`.
 fn cmd_serve(
     reg: &Arc<Registry>,
     artifacts: &std::path::Path,
@@ -517,33 +602,93 @@ fn cmd_serve(
     };
 
     let registry = ModelRegistry::new();
+    let mut watch_dirs: Vec<std::path::PathBuf> = Vec::new();
     for name in &models {
-        let engine = QuantSession::open(reg.clone(), artifacts, name)?
-            .calibrate(CalibOpts::images(16))?
-            .identity(&spec)?
-            .serve(opts)?;
-        println!(
-            "model {name} [{}]: {} int8 param bytes, {} worker(s)",
-            spec.mode().name(),
-            engine.param_bytes(),
-            engine.threads()
-        );
-        registry.insert(name, engine);
+        let path = std::path::Path::new(name);
+        if name.ends_with(".fatm") {
+            let (reg_name, rep) = registry.load_artifact(path, opts)?;
+            println!(
+                "model {reg_name} [.fatm {}]: {} bytes {}, \
+                 packed for {}{}",
+                rep.etag,
+                rep.bytes,
+                if rep.mapped { "mmapped" } else { "heap" },
+                rep.file_isa.name(),
+                if rep.repacked {
+                    format!(" (repacked for {})", rep.host_isa.name())
+                } else {
+                    String::new()
+                }
+            );
+        } else if path.is_dir() {
+            let sr = registry.sync_dir(path, opts)?;
+            println!(
+                "artifact dir {}: loaded {:?} ({} unchanged)",
+                path.display(),
+                sr.loaded,
+                sr.unchanged
+            );
+            watch_dirs.push(path.to_path_buf());
+        } else {
+            let engine = QuantSession::open(reg.clone(), artifacts, name)?
+                .calibrate(CalibOpts::images(16))?
+                .identity(&spec)?
+                .serve(opts)?;
+            println!(
+                "model {name} [{}]: {} int8 param bytes, {} worker(s)",
+                spec.mode().name(),
+                engine.param_bytes(),
+                engine.threads()
+            );
+            registry.insert(name, engine);
+        }
     }
-    let server = Server::bind(addr, registry, server_opts)?;
+    anyhow::ensure!(
+        !registry.is_empty(),
+        "serve: no models registered (empty artifact dir?)"
+    );
+    let server = Server::bind(addr, registry.clone(), server_opts)?;
     let local = server.local_addr();
     println!("fat serve: http://{local} (HTTP/1.1 + 0xFA frame protocol)");
     println!("  curl http://{local}/healthz");
     println!("  curl http://{local}/stats");
+    println!("  curl http://{local}/models");
+    // `models` items can be dirs/paths; quote a name that actually
+    // resolved (the ensure above guarantees at least one).
     println!(
         "  head -c {{input_bytes}} /dev/urandom | curl -s --data-binary @- \
          http://{local}/v1/models/{}/infer",
-        models[0]
+        registry.names()[0]
     );
     signal::install_drain_handler();
+    let reload_secs = args.usize_or("reload-secs", 0) as u64;
+    if reload_secs > 0 && !watch_dirs.is_empty() {
+        println!("hot reload: rescanning artifact dirs every {reload_secs}s");
+    }
     println!("serving; SIGINT/SIGTERM drains");
+    let mut last_sync = std::time::Instant::now();
     while !signal::drain_requested() {
         std::thread::sleep(Duration::from_millis(100));
+        if reload_secs > 0
+            && !watch_dirs.is_empty()
+            && last_sync.elapsed() >= Duration::from_secs(reload_secs)
+        {
+            for d in &watch_dirs {
+                match registry.sync_dir(d, opts) {
+                    Ok(sr) if !sr.loaded.is_empty() || !sr.removed.is_empty() => {
+                        println!(
+                            "reload {}: loaded {:?}, removed {:?}",
+                            d.display(),
+                            sr.loaded,
+                            sr.removed
+                        );
+                    }
+                    Ok(_) => {}
+                    Err(e) => eprintln!("reload {}: {e:#}", d.display()),
+                }
+            }
+            last_sync = std::time::Instant::now();
+        }
     }
     let grace = Duration::from_secs(args.usize_or("drain-secs", 5) as u64);
     println!("drain requested; grace {}s", grace.as_secs());

@@ -1,11 +1,19 @@
 //! FATW named-tensor container (mirror of `python/compile/fatw.py`).
+//!
+//! The reader is hardened against truncated and corrupt files: it is
+//! built on the length-checked cursor of `crate::artifact::layout`, so
+//! every count, name length and shape product is validated against the
+//! remaining input *before* any allocation, and hostile headers (huge
+//! declared counts, overflowing shape products) fail with a contextual
+//! error instead of a panic or an OOM.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::artifact::layout::Reader;
 use crate::tensor::{Data, Tensor};
 
 const MAGIC: &[u8; 8] = b"FATW0001";
@@ -14,64 +22,66 @@ const MAGIC: &[u8; 8] = b"FATW0001";
 pub fn read_fatw<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, Tensor>> {
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading {:?}", path.as_ref()))?;
-    parse(&bytes)
+    parse(&bytes).with_context(|| format!("parsing {:?}", path.as_ref()))
 }
 
 fn parse(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
-    let mut cur = std::io::Cursor::new(bytes);
-    let mut magic = [0u8; 8];
-    cur.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("bad FATW magic");
-    }
-    let count = read_u32(&mut cur)?;
+    let mut r = Reader::new(bytes, "fatw");
+    let magic = r.bytes(MAGIC.len()).context("magic")?;
+    ensure!(magic == MAGIC, "bad FATW magic");
+    let count = r.u32()?;
     let mut out = BTreeMap::new();
-    for _ in 0..count {
-        let nlen = read_u32(&mut cur)? as usize;
-        let mut name = vec![0u8; nlen];
-        cur.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
-        let mut hdr = [0u8; 2];
-        cur.read_exact(&mut hdr)?;
-        let (dt, ndim) = (hdr[0], hdr[1] as usize);
+    for i in 0..count {
+        let name = r
+            .string()
+            .with_context(|| format!("tensor {i}/{count}: name"))?;
+        let dt = r.u8()?;
+        let ndim = r.u8()? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            shape.push(read_u32(&mut cur)? as usize);
+            shape.push(r.u32()? as usize);
         }
-        let n: usize = shape.iter().product();
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                anyhow::anyhow!("tensor {name}: shape product overflows")
+            })?;
+        let elem = match dt {
+            0 | 2 => 4usize,
+            1 | 3 => 1,
+            other => bail!("tensor {name}: unknown dtype tag {other}"),
+        };
+        let nbytes = n.checked_mul(elem).ok_or_else(|| {
+            anyhow::anyhow!("tensor {name}: byte length overflows")
+        })?;
+        // bytes() bounds-checks against the remaining input, so the
+        // element collect below never allocates more than the file holds.
+        let raw = r
+            .bytes(nbytes)
+            .with_context(|| format!("tensor {name}: payload"))?;
         let data = match dt {
-            0 => {
-                let mut buf = vec![0u8; n * 4];
-                cur.read_exact(&mut buf)?;
-                Data::F32(
-                    buf.chunks_exact(4)
-                        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                        .collect(),
-                )
-            }
-            1 => {
-                let mut buf = vec![0u8; n];
-                cur.read_exact(&mut buf)?;
-                Data::I8(buf.into_iter().map(|b| b as i8).collect())
-            }
-            2 => {
-                let mut buf = vec![0u8; n * 4];
-                cur.read_exact(&mut buf)?;
-                Data::I32(
-                    buf.chunks_exact(4)
-                        .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
-                        .collect(),
-                )
-            }
-            3 => {
-                let mut buf = vec![0u8; n];
-                cur.read_exact(&mut buf)?;
-                Data::U8(buf)
-            }
-            other => bail!("unknown dtype tag {other}"),
+            0 => Data::F32(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            ),
+            1 => Data::I8(raw.iter().map(|&b| b as i8).collect()),
+            2 => Data::I32(
+                raw.chunks_exact(4)
+                    .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            ),
+            3 => Data::U8(raw.to_vec()),
+            _ => unreachable!("dtype validated above"),
         };
         out.insert(name, Tensor { shape, data });
     }
+    ensure!(
+        r.exhausted(),
+        "{} trailing bytes after {count} tensors",
+        r.remaining()
+    );
     Ok(out)
 }
 
@@ -102,18 +112,11 @@ pub fn write_fatw<P: AsRef<Path>>(
     Ok(())
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn sample() -> BTreeMap<String, Tensor> {
         let mut m = BTreeMap::new();
         m.insert(
             "a.w".to_string(),
@@ -121,6 +124,18 @@ mod tests {
         );
         m.insert("b".to_string(), Tensor::i32(vec![3], vec![1, -7, 42]));
         m.insert("c".to_string(), Tensor::i8(vec![2], vec![-128, 127]));
+        m
+    }
+
+    fn sample_bytes() -> Vec<u8> {
+        let p = std::env::temp_dir().join("fatw_bytes.fatw");
+        write_fatw(&p, &sample()).unwrap();
+        std::fs::read(&p).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
         let dir = std::env::temp_dir().join("fatw_test.fatw");
         write_fatw(&dir, &m).unwrap();
         let back = read_fatw(&dir).unwrap();
@@ -143,5 +158,79 @@ mod tests {
         let back = read_fatw(&p).unwrap();
         assert_eq!(back["s"].shape, Vec::<usize>::new());
         assert_eq!(back["s"].as_f32().unwrap(), &[3.5]);
+    }
+
+    #[test]
+    fn every_truncated_prefix_errors() {
+        let bytes = sample_bytes();
+        for cut in 0..bytes.len() {
+            assert!(parse(&bytes[..cut]).is_err(), "prefix {cut} parsed");
+        }
+        assert!(parse(&bytes).is_ok());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = sample_bytes();
+        bytes.push(0);
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn hostile_count_errors_cleanly() {
+        // header claims u32::MAX tensors with an empty body
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn hostile_name_length_errors_before_allocating() {
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // name "length"
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn shape_product_overflow_errors() {
+        // one tensor, empty name, f32, 4 dims of u32::MAX each: the
+        // element count (and byte length) overflow usize
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // name len 0
+        bytes.push(0); // dtype f32
+        bytes.push(4); // ndim
+        for _ in 0..4 {
+            bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let err = parse(&bytes).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn declared_payload_beyond_file_errors() {
+        // a (1000, 1000) f32 tensor with no payload must not allocate
+        // 4 MB or panic — it must fail the length check
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'x');
+        bytes.push(0); // f32
+        bytes.push(2); // ndim
+        bytes.extend_from_slice(&1000u32.to_le_bytes());
+        bytes.extend_from_slice(&1000u32.to_le_bytes());
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn unknown_dtype_rejected() {
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'x');
+        bytes.push(9); // bogus dtype
+        bytes.push(0); // ndim
+        assert!(parse(&bytes).is_err());
     }
 }

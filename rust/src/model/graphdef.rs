@@ -41,6 +41,21 @@ impl Op {
     pub fn is_conv_like(self) -> bool {
         matches!(self, Op::Conv | Op::DwConv | Op::Dense)
     }
+
+    /// Canonical wire name — the inverse of [`Op::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv => "conv",
+            Op::DwConv => "dwconv",
+            Op::Dense => "dense",
+            Op::Bn => "bn",
+            Op::Relu => "relu",
+            Op::Relu6 => "relu6",
+            Op::Add => "add",
+            Op::Gap => "gap",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -127,6 +142,60 @@ impl GraphDef {
         let s = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {:?}", path.as_ref()))?;
         Self::from_json(&s)
+    }
+
+    /// Serialize back to the `graph.json` wire form — the inverse of
+    /// [`GraphDef::from_json`] (the `.fatm` artifact stores the graph
+    /// this way; see `crate::artifact`). Every field `from_json` reads
+    /// is emitted, so parse(serialize(g)) reproduces `g` exactly.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::with_capacity(64 + 96 * self.nodes.len());
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"num_classes\":{},\"nodes\":[",
+            esc(&self.name),
+            self.num_classes
+        );
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"id\":\"{}\",\"op\":\"{}\",\"inputs\":[",
+                esc(&n.id),
+                n.op.name()
+            );
+            for (j, inp) in n.inputs.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{}\"", esc(inp));
+            }
+            let _ = write!(
+                out,
+                "],\"k\":{},\"stride\":{},\"cin\":{},\"cout\":{},\
+                 \"ch\":{},\"bias\":{}",
+                n.k, n.stride, n.cin, n.cout, n.ch, n.bias
+            );
+            if let Some(sh) = &n.input_shape {
+                out.push_str(",\"shape\":[");
+                for (j, d) in sh.iter().enumerate() {
+                    if j > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "{d}");
+                }
+                out.push(']');
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
     }
 
     pub fn node(&self, id: &str) -> Result<&Node> {
@@ -232,6 +301,44 @@ mod tests {
         assert_eq!(ids, vec!["input", "r0", "g", "d"]);
         let uns: Vec<bool> = sites.iter().map(|&(_, u)| u).collect();
         assert_eq!(uns, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn to_json_round_trips() {
+        let g = GraphDef::from_json(SAMPLE).unwrap();
+        let g2 = GraphDef::from_json(&g.to_json()).unwrap();
+        assert_eq!(g2.name, g.name);
+        assert_eq!(g2.num_classes, g.num_classes);
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(
+                (a.k, a.stride, a.cin, a.cout, a.ch, a.bias),
+                (b.k, b.stride, b.cin, b.cout, b.ch, b.bias)
+            );
+            assert_eq!(a.input_shape, b.input_shape);
+        }
+        // and the serialization is a fixed point
+        assert_eq!(g.to_json(), g2.to_json());
+    }
+
+    #[test]
+    fn op_name_inverts_parse() {
+        for op in [
+            Op::Input,
+            Op::Conv,
+            Op::DwConv,
+            Op::Dense,
+            Op::Bn,
+            Op::Relu,
+            Op::Relu6,
+            Op::Add,
+            Op::Gap,
+        ] {
+            assert_eq!(Op::parse(op.name()).unwrap(), op);
+        }
     }
 
     #[test]

@@ -70,6 +70,19 @@ impl SitesJson {
     }
 }
 
+/// Default directory for compiled `.fatm` artifacts under an artifacts
+/// root: `<artifacts>/compiled` (written by `fat export`, scanned by
+/// `fat serve --models <dir>` — see `crate::artifact`).
+pub fn compiled_dir<P: AsRef<Path>>(artifacts: P) -> PathBuf {
+    artifacts.as_ref().join("compiled")
+}
+
+/// Canonical `.fatm` path for a model name inside a compiled-artifact
+/// directory.
+pub fn fatm_path<P: AsRef<Path>>(dir: P, name: &str) -> PathBuf {
+    dir.as_ref().join(format!("{name}.fatm"))
+}
+
 /// Handle on one model's artifact directory.
 #[derive(Debug, Clone)]
 pub struct ModelStore {

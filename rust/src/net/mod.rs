@@ -17,7 +17,9 @@
 //! [`server::Server`] owns the listener: the accept loop and every
 //! per-connection handler run on the worker pool's detached IO workers
 //! ([`crate::util::threads::WorkerPool::spawn_io`]), requests are routed
-//! by model name through a [`registry::ModelRegistry`], and admission
+//! by model name through a [`registry::ModelRegistry`] (which also
+//! loads compiled `.fatm` artifacts and hot-reloads them by content
+//! etag — `GET /models` lists each model's provenance), and admission
 //! control rejects work beyond `max_inflight` with a `429`-style answer
 //! instead of queueing unboundedly. Sockets carry read/write deadlines,
 //! so slow-loris clients and half-dead peers are bounded, and
@@ -39,7 +41,7 @@ pub mod server;
 pub mod signal;
 
 pub use client::{FrameClient, HttpClient};
-pub use registry::ModelRegistry;
+pub use registry::{ModelMeta, ModelRegistry, SyncReport};
 pub use server::{Server, ServerOptions, ServerStats};
 
 /// Parser size caps shared by both wire protocols. Every cap answers a

@@ -1,23 +1,75 @@
 //! Multi-model registry: routes requests by model name to per-model
-//! [`Int8Engine`] handles (DESIGN.md §10.3).
+//! [`Int8Engine`] handles (DESIGN.md §10.3), and loads compiled `.fatm`
+//! artifacts straight into serving slots (DESIGN.md §11.4).
 //!
-//! The registry is a cheaply clonable handle over a name → engine map.
+//! The registry is a cheaply clonable handle over a name → entry map.
 //! Lookups clone the engine (an `Arc` bump), so the read lock is held
 //! only for the map probe — never across inference. [`insert`] replaces
 //! atomically, which doubles as hot reload: in-flight requests finish
 //! on the engine they resolved, new requests resolve the new one.
 //!
+//! Every entry carries a [`ModelMeta`] sidecar: the artifact content
+//! digest (`etag`), where the model came from, when it was (re)loaded
+//! and how many times. `/stats` and `GET /models` serialize it, and
+//! [`sync_dir`] uses the etag as the change detector — a rescan calls
+//! the cheap [`crate::artifact::peek_etag`] (one 64-byte header read)
+//! per file and only pays for a full load when the digest moved.
+//!
 //! [`insert`]: ModelRegistry::insert
+//! [`sync_dir`]: ModelRegistry::sync_dir
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::{Arc, RwLock};
 
-use crate::int8::serve::Int8Engine;
+use anyhow::{Context, Result};
+
+use crate::artifact::{self, LoadOptions, LoadReport};
+use crate::int8::serve::{EngineOptions, Int8Engine};
+
+/// Provenance + freshness sidecar for one registered model.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelMeta {
+    /// Artifact content digest (`fnv64-…`); `None` for models built
+    /// in-process (no artifact to digest).
+    pub etag: Option<String>,
+    /// Where the model came from: a `.fatm` path for artifact loads,
+    /// `None` for in-process exports.
+    pub source: Option<String>,
+    /// Unix seconds when this entry was last (re)inserted.
+    pub loaded_at_unix: u64,
+    /// How many times this name has been (re)loaded since registration.
+    pub loads: u64,
+}
+
+struct Entry {
+    engine: Int8Engine,
+    meta: ModelMeta,
+}
+
+/// What one [`ModelRegistry::sync_dir`] pass did.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SyncReport {
+    /// Names (re)loaded this pass because their etag moved (or they
+    /// were new).
+    pub loaded: Vec<String>,
+    /// `.fatm` files whose etag matched the registered entry.
+    pub unchanged: usize,
+    /// Names removed because their source file under the dir vanished.
+    pub removed: Vec<String>,
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
 
 /// Shared name → engine routing table.
 #[derive(Clone, Default)]
 pub struct ModelRegistry {
-    inner: Arc<RwLock<BTreeMap<String, Int8Engine>>>,
+    inner: Arc<RwLock<BTreeMap<String, Entry>>>,
 }
 
 impl ModelRegistry {
@@ -27,23 +79,57 @@ impl ModelRegistry {
 
     /// Register `engine` under `name`, returning the engine it replaced
     /// (if any). Replacement is atomic — this is the hot-reload path.
+    /// For in-process builds; artifact loads go through
+    /// [`Self::load_artifact`] so the etag rides along.
     pub fn insert(&self, name: &str, engine: Int8Engine) -> Option<Int8Engine> {
-        self.inner.write().unwrap().insert(name.to_string(), engine)
+        self.insert_with_meta(name, engine, None, None)
+    }
+
+    /// [`Self::insert`] with artifact provenance: `etag` is the `.fatm`
+    /// content digest, `source` the path it was loaded from. The load
+    /// counter carries over from the replaced entry.
+    pub fn insert_with_meta(
+        &self,
+        name: &str,
+        engine: Int8Engine,
+        etag: Option<String>,
+        source: Option<String>,
+    ) -> Option<Int8Engine> {
+        let mut m = self.inner.write().unwrap();
+        let loads = m.get(name).map_or(1, |e| e.meta.loads + 1);
+        let meta = ModelMeta { etag, source, loaded_at_unix: now_unix(), loads };
+        m.insert(name.to_string(), Entry { engine, meta })
+            .map(|e| e.engine)
     }
 
     /// Resolve a model name to a serving handle (an `Arc` clone).
     pub fn get(&self, name: &str) -> Option<Int8Engine> {
-        self.inner.read().unwrap().get(name).cloned()
+        self.inner.read().unwrap().get(name).map(|e| e.engine.clone())
+    }
+
+    /// The provenance sidecar for a registered model.
+    pub fn meta(&self, name: &str) -> Option<ModelMeta> {
+        self.inner.read().unwrap().get(name).map(|e| e.meta.clone())
     }
 
     /// Unregister a model; in-flight requests on it finish normally.
     pub fn remove(&self, name: &str) -> Option<Int8Engine> {
-        self.inner.write().unwrap().remove(name)
+        self.inner.write().unwrap().remove(name).map(|e| e.engine)
     }
 
     /// Registered model names, sorted (BTreeMap order).
     pub fn names(&self) -> Vec<String> {
         self.inner.read().unwrap().keys().cloned().collect()
+    }
+
+    /// `(name, meta)` for every registered model, sorted by name.
+    pub fn entries(&self) -> Vec<(String, ModelMeta)> {
+        self.inner
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (k.clone(), e.meta.clone()))
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -52,5 +138,98 @@ impl ModelRegistry {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Load a compiled `.fatm` artifact and register it under its graph
+    /// name (falling back to the file stem for unnamed graphs). Returns
+    /// the registered name and the loader's [`LoadReport`].
+    pub fn load_artifact<P: AsRef<Path>>(
+        &self,
+        path: P,
+        opts: EngineOptions,
+    ) -> Result<(String, LoadReport)> {
+        let path = path.as_ref();
+        let (qm, report) = artifact::load(path, LoadOptions::default())?;
+        let name = if qm.graph.name.is_empty() {
+            path.file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "model".to_string())
+        } else {
+            qm.graph.name.clone()
+        };
+        let engine = Int8Engine::new(qm, opts);
+        self.insert_with_meta(
+            &name,
+            engine,
+            Some(report.etag.clone()),
+            Some(path.display().to_string()),
+        );
+        Ok((name, report))
+    }
+
+    /// One hot-reload pass over an artifact directory: for every
+    /// `*.fatm` file (sorted), peek the header etag and fully load only
+    /// the new/changed ones; drop registered models whose source file
+    /// under `dir` disappeared. Models registered from other sources
+    /// (in-process exports, other dirs) are left alone. Idempotent —
+    /// call it from a timer for `fat serve --models <dir>` hot reload.
+    pub fn sync_dir<P: AsRef<Path>>(
+        &self,
+        dir: P,
+        opts: EngineOptions,
+    ) -> Result<SyncReport> {
+        let dir = dir.as_ref();
+        let mut files: Vec<std::path::PathBuf> = Vec::new();
+        for e in std::fs::read_dir(dir)
+            .with_context(|| format!("scanning artifact dir {dir:?}"))?
+        {
+            let p = e?.path();
+            if p.extension().is_some_and(|x| x == "fatm") && p.is_file() {
+                files.push(p);
+            }
+        }
+        files.sort();
+
+        let mut report = SyncReport::default();
+        let mut live_sources: Vec<String> = Vec::new();
+        for p in &files {
+            let source = p.display().to_string();
+            live_sources.push(source.clone());
+            let on_disk = artifact::peek_etag(p)
+                .with_context(|| format!("peeking {p:?}"))?;
+            let current = self.entries().into_iter().find_map(|(_, m)| {
+                (m.source.as_deref() == Some(source.as_str()))
+                    .then_some(m.etag)
+            });
+            if current.flatten().as_deref() == Some(on_disk.as_str()) {
+                report.unchanged += 1;
+                continue;
+            }
+            let (name, _) = self
+                .load_artifact(p, opts)
+                .with_context(|| format!("loading {p:?}"))?;
+            // If the file's embedded graph name changed, retire the
+            // entry its previous content was registered under — one
+            // source file owns at most one serving slot.
+            for (other, m) in self.entries() {
+                if other != name
+                    && m.source.as_deref() == Some(source.as_str())
+                {
+                    self.remove(&other);
+                    report.removed.push(other);
+                }
+            }
+            report.loaded.push(name);
+        }
+        // Retire entries whose .fatm under this dir was deleted.
+        for (name, meta) in self.entries() {
+            let Some(src) = meta.source.as_deref() else { continue };
+            let managed = Path::new(src).parent() == Some(dir);
+            if managed && !live_sources.iter().any(|s| s == src) {
+                self.remove(&name);
+                report.removed.push(name);
+            }
+        }
+        Ok(report)
     }
 }

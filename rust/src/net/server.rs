@@ -463,6 +463,12 @@ fn dispatch_http(inner: &Inner, req: &http::Request) -> Vec<u8> {
             stats_json(inner).as_bytes(),
             keep,
         ),
+        ("GET", "/models") => http::response(
+            200,
+            "application/json",
+            models_json(inner).as_bytes(),
+            keep,
+        ),
         (method, path) => match infer_path(path) {
             Some(name) => {
                 if method != "POST" {
@@ -580,10 +586,12 @@ fn stats_json(inner: &Inner) -> String {
         if i > 0 {
             s.push(',');
         }
+        let meta = inner.registry.meta(name).unwrap_or_default();
         let _ = write!(
             s,
             "\"{}\":{{\"threads\":{},\"pooled_states\":{},\
              \"in_flight\":{},\"requests\":{},\"param_bytes\":{},\
+             \"etag\":{},\"loaded_at\":{},\"loads\":{},\
              \"batcher\":",
             esc(name),
             st.threads,
@@ -591,6 +599,9 @@ fn stats_json(inner: &Inner) -> String {
             st.in_flight,
             st.requests,
             engine.param_bytes(),
+            json_opt_str(meta.etag.as_deref()),
+            meta.loaded_at_unix,
+            meta.loads,
         );
         match st.batcher {
             Some(b) => {
@@ -609,9 +620,50 @@ fn stats_json(inner: &Inner) -> String {
     s
 }
 
+/// `null` or a quoted, escaped JSON string.
+fn json_opt_str(v: Option<&str>) -> String {
+    match v {
+        Some(s) => format!("\"{}\"", esc(s)),
+        None => "null".to_string(),
+    }
+}
+
+/// The `GET /models` document: every registered model with its artifact
+/// provenance ([`super::registry::ModelMeta`]) — the etag is the `.fatm`
+/// content digest, so clients can poll this endpoint to detect hot
+/// reloads without re-downloading anything.
+fn models_json(inner: &Inner) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from("{\"models\":[");
+    for (i, (name, meta)) in inner.registry.entries().iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"name\":\"{}\",\"etag\":{},\"source\":{},\
+             \"loaded_at\":{},\"loads\":{}}}",
+            esc(name),
+            json_opt_str(meta.etag.as_deref()),
+            json_opt_str(meta.source.as_deref()),
+            meta.loaded_at_unix,
+            meta.loads,
+        );
+    }
+    s.push_str("]}");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_opt_str_escapes() {
+        assert_eq!(json_opt_str(None), "null");
+        assert_eq!(json_opt_str(Some("fnv64-0abc")), "\"fnv64-0abc\"");
+        assert_eq!(json_opt_str(Some("a\"b\\c")), "\"a\\\"b\\\\c\"");
+    }
 
     #[test]
     fn infer_path_routing() {

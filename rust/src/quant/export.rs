@@ -309,7 +309,7 @@ pub fn build_qmodel(
                 nodes.insert(
                     n.id.clone(),
                     QNode::Layer(QLayer {
-                        w_q,
+                        w_q: w_q.into(),
                         w_sums,
                         bias_q,
                         requant,

@@ -1,0 +1,278 @@
+//! `.fatm` artifact round-trip battery (DESIGN.md §11): a compiled
+//! model saved to disk and loaded back — zero-copy mmap or heap — must
+//! serve logits **bit-identical** to the in-memory export, across every
+//! runnable kernel ISA × thread count, including when the artifact's
+//! packing-ISA tag forces a repack on load. Also pins down the
+//! determinism contract (same model → same bytes → same etag) and the
+//! registry/server integration (`load_artifact`, `/models`, per-model
+//! etag in `/stats`). (CI re-runs this file under `FAT_THREADS=1`
+//! and `8`.)
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use fat::artifact::{self, LoadOptions};
+use fat::int8::serve::{EngineOptions, InferClient};
+use fat::int8::{ExecState, Isa, QModel, QTensor};
+use fat::model::builtin;
+use fat::net::{ModelRegistry, Server, ServerOptions};
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::util::json::Json;
+
+/// Compile a builtin model with synthetic calibration ranges —
+/// deterministic, artifact-free, and exercising conv / dwconv / dense /
+/// add / gap params depending on the model.
+fn build(name: &str) -> QModel {
+    let (g, s, w) = builtin::load(name).unwrap();
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.0 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 2.5 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
+    build_qmodel(&g, &w, &s, &st, QuantMode::SymVector, &tr).unwrap()
+}
+
+fn input_shape(qm: &QModel) -> Vec<usize> {
+    qm.graph
+        .nodes
+        .iter()
+        .find(|n| n.op == fat::model::Op::Input)
+        .and_then(|n| n.input_shape.clone())
+        .expect("builtin model has a shaped input")
+}
+
+fn quant_input(qm: &QModel, img: usize) -> QTensor {
+    let sh = input_shape(qm);
+    let per_img: usize = sh.iter().product();
+    let x: Vec<f32> = (0..per_img)
+        .map(|i| ((i * 37 + img * 101 + 5) % 256) as f32 / 255.0)
+        .collect();
+    QTensor::quantize(vec![1, sh[0], sh[1], sh[2]], &x, qm.input_qp)
+}
+
+/// Quantized logits under an explicit (threads, isa) execution state.
+fn logits(qm: &QModel, img: usize, threads: usize, isa: Isa) -> QTensor {
+    let mut st = ExecState::with_threads_isa(threads, isa);
+    qm.run_quant_state(quant_input(qm, img), &mut st).unwrap()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("fatm_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn assert_same_logits(a: &QTensor, b: &QTensor, tag: &str) {
+    assert_eq!(a.shape, b.shape, "{tag}: shape");
+    assert_eq!(a.qp, b.qp, "{tag}: output qparams");
+    assert_eq!(a.data, b.data, "{tag}: quantized logits");
+}
+
+#[test]
+fn roundtrip_bit_exact_across_isa_and_threads() {
+    for name in ["tiny_cnn", "mnas_mini_10"] {
+        let qm = build(name);
+        let dir = tmp_dir("rt");
+        let path = dir.join(format!("{name}.fatm"));
+        let etag = artifact::save(&qm, &path, Isa::detect()).unwrap();
+        assert_eq!(artifact::peek_etag(&path).unwrap(), etag);
+
+        for force_heap in [false, true] {
+            let (loaded, rep) = artifact::load(
+                &path,
+                LoadOptions { force_heap, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(rep.etag, etag, "{name}: etag");
+            if force_heap {
+                assert!(!rep.mapped, "{name}: force_heap must not mmap");
+            }
+            assert_eq!(loaded.param_bytes, qm.param_bytes, "{name}");
+            assert_eq!(loaded.graph.name, qm.graph.name, "{name}");
+            for isa in Isa::available() {
+                for threads in [1, 8] {
+                    for img in 0..2 {
+                        let want = logits(&qm, img, threads, isa);
+                        let got = logits(&loaded, img, threads, isa);
+                        assert_same_logits(
+                            &want,
+                            &got,
+                            &format!(
+                                "{name} heap={force_heap} {} t{threads} \
+                                 img{img}",
+                                isa.name()
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn serialization_is_deterministic_and_etag_tracks_content() {
+    let qm = build("tiny_cnn");
+    let b1 = artifact::to_bytes(&qm, Isa::Scalar);
+    let b2 = artifact::to_bytes(&qm, Isa::Scalar);
+    assert_eq!(b1, b2, "same model must serialize byte-identically");
+    // A different packing tag is different content → different etag.
+    let b3 = artifact::to_bytes(&qm, Isa::Avx2);
+    assert_ne!(b1, b3);
+    let (_, r1) = artifact::load_from_bytes(b1, LoadOptions::default()).unwrap();
+    let (_, r3) = artifact::load_from_bytes(b3, LoadOptions::default()).unwrap();
+    assert_ne!(r1.etag, r3.etag);
+    // A different model is different content too.
+    let other = artifact::to_bytes(&build("mnas_mini_10"), Isa::Scalar);
+    let (_, r_other) =
+        artifact::load_from_bytes(other, LoadOptions::default()).unwrap();
+    assert_ne!(r1.etag, r_other.etag);
+}
+
+#[test]
+fn foreign_isa_tag_repacks_to_identical_logits() {
+    let qm = build("tiny_cnn");
+    // Tag the panels as packed for avx2, then load pinned to scalar:
+    // the loader must notice the mismatch and repack.
+    let bytes = artifact::to_bytes(&qm, Isa::Avx2);
+    let (loaded, rep) = artifact::load_from_bytes(
+        bytes,
+        LoadOptions { isa: Some(Isa::Scalar), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(rep.file_isa, Isa::Avx2);
+    assert_eq!(rep.host_isa, Isa::Scalar);
+    assert!(rep.repacked, "isa mismatch must repack");
+    for threads in [1, 8] {
+        let want = logits(&qm, 0, threads, Isa::Scalar);
+        let got = logits(&loaded, 0, threads, Isa::Scalar);
+        assert_same_logits(&want, &got, &format!("repacked t{threads}"));
+    }
+    // Matching tag: no repack, slabs stay windows into the buffer.
+    let bytes = artifact::to_bytes(&qm, Isa::Scalar);
+    let (_, rep) = artifact::load_from_bytes(
+        bytes,
+        LoadOptions { isa: Some(Isa::Scalar), ..Default::default() },
+    )
+    .unwrap();
+    assert!(!rep.repacked, "matching isa must not repack");
+}
+
+#[test]
+fn tampered_artifact_is_rejected() {
+    let qm = build("tiny_cnn");
+    let bytes = artifact::to_bytes(&qm, Isa::Scalar);
+    // Sanity: the pristine bytes load.
+    artifact::load_from_bytes(bytes.clone(), LoadOptions::default()).unwrap();
+    // A flip anywhere must fail (magic, size, digest or digest-covered
+    // content).
+    for at in [0, 9, 17, 30, bytes.len() / 2, bytes.len() - 1] {
+        let mut m = bytes.clone();
+        m[at] ^= 0x40;
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "flip at {at} accepted"
+        );
+    }
+    // Truncation must fail.
+    let cut = bytes[..bytes.len() - 1].to_vec();
+    assert!(artifact::load_from_bytes(cut, LoadOptions::default()).is_err());
+}
+
+/// One raw keep-alive-less HTTP GET against a live loopback server.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{path}: {head}");
+    body.to_string()
+}
+
+#[test]
+fn registry_serves_artifact_with_etag_over_live_server() {
+    let qm = build("tiny_cnn");
+    let dir = tmp_dir("srv");
+    let path = dir.join("tiny_cnn.fatm");
+    let etag = artifact::save(&qm, &path, Isa::detect()).unwrap();
+
+    let registry = ModelRegistry::new();
+    let (reg_name, rep) = registry
+        .load_artifact(&path, EngineOptions::threads(2))
+        .unwrap();
+    assert_eq!(reg_name, "tiny_cnn");
+    assert_eq!(rep.etag, etag);
+    let meta = registry.meta("tiny_cnn").unwrap();
+    assert_eq!(meta.etag.as_deref(), Some(etag.as_str()));
+    assert_eq!(meta.loads, 1);
+
+    let server = Server::bind(
+        "127.0.0.1:0",
+        registry.clone(),
+        ServerOptions::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // GET /models lists the artifact with its provenance.
+    let j = Json::parse(&http_get(addr, "/models")).unwrap();
+    let models = j.req("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    let m = &models[0];
+    assert_eq!(m.req("name").unwrap().as_str().unwrap(), "tiny_cnn");
+    assert_eq!(m.req("etag").unwrap().as_str().unwrap(), etag);
+    assert_eq!(m.usize_or("loads", 0), 1);
+    assert!(m.usize_or("loaded_at", 0) > 0);
+
+    // /stats carries the etag in the per-model block too.
+    let st = Json::parse(&http_get(addr, "/stats")).unwrap();
+    let pm = st
+        .get("models")
+        .and_then(|ms| ms.get("tiny_cnn"))
+        .expect("per-model stats");
+    assert_eq!(pm.req("etag").unwrap().as_str().unwrap(), etag);
+
+    // The artifact-loaded model answers inference over the wire,
+    // bit-exact with the in-memory reference interpreter.
+    let want = qm.run_quant_ref(quant_input(&qm, 0)).unwrap().dequantize();
+    let mut c = fat::net::HttpClient::connect(addr, "tiny_cnn").unwrap();
+    let sh = input_shape(&qm);
+    let per_img: usize = sh.iter().product();
+    let px: Vec<u8> =
+        (0..per_img).map(|i| ((i * 37 + 5) % 256) as u8).collect();
+    let got = c.infer_one(&px).unwrap();
+    assert_eq!(got.len(), want.len());
+    for i in 0..got.len() {
+        assert_eq!(got[i].to_bits(), want[i].to_bits(), "logit {i}");
+    }
+    drop(c);
+
+    // Re-saving the same bytes keeps the etag; sync_dir sees no change.
+    let sr = registry.sync_dir(&dir, EngineOptions::threads(2)).unwrap();
+    assert_eq!(sr.loaded, Vec::<String>::new());
+    assert_eq!(sr.unchanged, 1);
+    // A different artifact at the same path is a changed etag → reload;
+    // the old name the file used to serve under is retired.
+    let other = build("mnas_mini_10");
+    artifact::save(&other, &path, Isa::detect()).unwrap();
+    let sr = registry.sync_dir(&dir, EngineOptions::threads(2)).unwrap();
+    assert_eq!(sr.loaded, vec!["mnas_mini_10".to_string()]);
+    assert_eq!(sr.removed, vec!["tiny_cnn".to_string()]);
+    assert!(registry.get("tiny_cnn").is_none());
+    assert_eq!(registry.meta("mnas_mini_10").unwrap().loads, 1);
+    // Deleting the file retires the entry on the next sync.
+    std::fs::remove_file(&path).unwrap();
+    let sr = registry.sync_dir(&dir, EngineOptions::threads(2)).unwrap();
+    assert_eq!(sr.removed, vec!["mnas_mini_10".to_string()]);
+    assert!(registry.get("mnas_mini_10").is_none());
+
+    server.drain(std::time::Duration::from_secs(2));
+}

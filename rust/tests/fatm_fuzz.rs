@@ -1,0 +1,179 @@
+//! Mutation/truncation fuzz battery over the `.fatm` parser
+//! (DESIGN.md §11.3): the loader's contract under hostile input is that
+//! it **returns an error** — it never panics, never over-allocates,
+//! never accepts a corrupted artifact. Three attack families:
+//!
+//! 1. every truncated prefix of a valid artifact,
+//! 2. every single-byte flip (the FNV digest must catch all of them),
+//! 3. digest-fixed flips (the digest is recomputed after the mutation,
+//!    so the structural/semantic validators are the only line of
+//!    defense) and random byte soups — any `Ok`/`Err` outcome is fine,
+//!    the property is "returns", and every accepted mutant must also
+//!    *execute* without panicking.
+
+use std::collections::BTreeMap;
+
+use fat::artifact::{self, fnv1a64, LoadOptions};
+use fat::int8::{QModel, QTensor};
+use fat::model::builtin::sites_of;
+use fat::model::GraphDef;
+use fat::quant::calibrate::CalibStats;
+use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::tensor::Tensor;
+use fat::util::prop;
+
+/// Small conv → gap → dense model: exercises packed panels, col sums
+/// and every section of the container while keeping the byte-flip
+/// sweep (one load per byte) fast.
+const GRAPH: &str = r#"{
+  "name": "fuzz", "num_classes": 3,
+  "nodes": [
+    {"id": "input", "op": "input", "inputs": [], "shape": [6, 6, 2]},
+    {"id": "c", "op": "conv", "inputs": ["input"], "k": 3, "stride": 1,
+     "cin": 2, "cout": 4, "bias": true},
+    {"id": "g", "op": "gap", "inputs": ["c"]},
+    {"id": "d", "op": "dense", "inputs": ["g"], "cin": 4, "cout": 3,
+     "bias": true}
+  ]}"#;
+
+fn model() -> QModel {
+    let g = GraphDef::from_json(GRAPH).unwrap();
+    let s = sites_of(&g);
+    let mut w = BTreeMap::new();
+    let mut seed = 77u64;
+    for n in g.conv_like() {
+        let (wlen, cout) = match n.op {
+            fat::model::Op::Conv => (n.k * n.k * n.cin * n.cout, n.cout),
+            fat::model::Op::Dense => (n.cin * n.cout, n.cout),
+            _ => unreachable!("graph has no dwconv"),
+        };
+        w.insert(
+            format!("{}.w", n.id),
+            Tensor::f32(vec![wlen], prop::f32s(seed, wlen, -0.6, 0.6)),
+        );
+        w.insert(
+            format!("{}.b", n.id),
+            Tensor::f32(vec![cout], prop::f32s(seed + 1, cout, -0.2, 0.2)),
+        );
+        seed += 2;
+    }
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.0 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 2.5 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
+    build_qmodel(&g, &w, &s, &st, QuantMode::SymVector, &tr).unwrap()
+}
+
+fn artifact_bytes() -> Vec<u8> {
+    artifact::to_bytes(&model(), fat::int8::Isa::Scalar)
+}
+
+#[test]
+fn every_truncated_prefix_errors() {
+    let bytes = artifact_bytes();
+    artifact::load_from_bytes(bytes.clone(), LoadOptions::default())
+        .expect("pristine artifact loads");
+    for cut in 0..bytes.len() {
+        assert!(
+            artifact::load_from_bytes(
+                bytes[..cut].to_vec(),
+                LoadOptions::default()
+            )
+            .is_err(),
+            "prefix of {cut} bytes accepted"
+        );
+    }
+    // Appended garbage breaks the declared file size.
+    let mut extended = bytes;
+    extended.push(0);
+    assert!(artifact::load_from_bytes(extended, LoadOptions::default())
+        .is_err());
+}
+
+#[test]
+fn every_single_byte_flip_errors() {
+    let bytes = artifact_bytes();
+    // Flips in [0, 24) break magic/size/digest fields; flips in
+    // [24, len) change the computed digest. Either way: rejected.
+    for at in 0..bytes.len() {
+        let mut m = bytes.clone();
+        m[at] ^= 0x01;
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "flip at byte {at} accepted"
+        );
+    }
+}
+
+/// Rewrite the stored digest so a mutated body passes the container
+/// checks — the structural and semantic validators are then the only
+/// defense.
+fn fix_digest(bytes: &mut [u8]) {
+    let d = fnv1a64(&bytes[24..]);
+    bytes[16..24].copy_from_slice(&d.to_le_bytes());
+}
+
+#[test]
+fn digest_fixed_flips_never_panic_and_accepted_mutants_execute() {
+    let qm = model();
+    let bytes = artifact_bytes();
+    let input = {
+        let x: Vec<f32> = (0..6 * 6 * 2)
+            .map(|i| ((i * 37 + 5) % 256) as f32 / 255.0)
+            .collect();
+        QTensor::quantize(vec![1, 6, 6, 2], &x, qm.input_qp)
+    };
+    let mut accepted = 0usize;
+    for at in 24..bytes.len() {
+        let mut m = bytes.clone();
+        m[at] ^= 0x40;
+        fix_digest(&mut m);
+        // The property is "returns": Ok (an inconsequential flip, e.g.
+        // a weight byte) or a clean Err — never a panic.
+        if let Ok((mutant, _)) =
+            artifact::load_from_bytes(m, LoadOptions::default())
+        {
+            accepted += 1;
+            // Anything the validator accepted must actually run: the
+            // executor's unchecked hot paths rely on the loader's
+            // geometry checks.
+            let _ = mutant.run_quant(input.clone());
+        }
+    }
+    // Sanity: the sweep exercised both validator rejections and
+    // harmless mutations (weight bytes dominate the file).
+    assert!(accepted > 0, "no mutant survived — sweep is vacuous");
+    assert!(
+        accepted < bytes.len() - 24,
+        "every mutant survived — validators are vacuous"
+    );
+}
+
+#[test]
+fn random_byte_soup_never_panics() {
+    prop::for_cases(23, 500, |case| {
+        let n = prop::usize_in(23, case, 0, 4096);
+        let soup: Vec<u8> =
+            prop::i8s(case + 7, n).into_iter().map(|b| b as u8).collect();
+        // Virtually all soups fail magic; the property is "returns".
+        let _ = artifact::load_from_bytes(soup, LoadOptions::default());
+    });
+    // Soups that start with a valid magic + plausible header reach the
+    // deeper validators.
+    prop::for_cases(29, 200, |case| {
+        let n = prop::usize_in(29, case, 64, 2048);
+        let mut soup: Vec<u8> =
+            prop::i8s(case + 13, n).into_iter().map(|b| b as u8).collect();
+        soup[0..8].copy_from_slice(b"FATM0001");
+        soup[8..16].copy_from_slice(&(soup.len() as u64).to_le_bytes());
+        soup[28..32].copy_from_slice(&3u32.to_le_bytes());
+        fix_digest(&mut soup);
+        assert!(
+            artifact::load_from_bytes(soup, LoadOptions::default()).is_err(),
+            "case {case}: random section table accepted"
+        );
+    });
+}
