@@ -1,5 +1,6 @@
 //! int8 engine benchmarks (deployment simulator hot path): reference vs
-//! cache-blocked GEMM, packed SIMD vs scalar kernels, pooled-worker vs
+//! cache-blocked GEMM, packed SIMD vs scalar kernels, autotuned vs
+//! default GEMM blocking schedules, pooled-worker vs
 //! per-call spawn sharding, thread-scaling at t ∈ {1,2,4,8}, im2col,
 //! depthwise conv, and whole-model batch throughput. Every measurement
 //! is also appended to a machine-readable `BENCH_int8.json`
@@ -10,7 +11,8 @@
 use std::sync::Arc;
 
 use fat::int8::engine::QLayer;
-use fat::int8::kernels::{self, Isa, PackedWeights};
+use fat::int8::kernels::{self, Blocking, Isa, PackedWeights};
+use fat::int8::tune;
 use fat::int8::serve::EngineOptions;
 use fat::int8::{gemm, im2col, ops, qtensor::QTensor};
 use fat::quant::export::QuantMode;
@@ -89,7 +91,16 @@ fn main() {
             &opts,
             macs,
             || {
-                kernels::gemm_packed(&a, -3, &pw, &sums, m, &mut out, Isa::Scalar);
+                kernels::gemm_packed(
+                    &a,
+                    -3,
+                    &pw,
+                    &sums,
+                    m,
+                    &mut out,
+                    Isa::Scalar,
+                    Blocking::default(),
+                );
                 std::hint::black_box(out[0]);
             },
         );
@@ -99,13 +110,55 @@ fn main() {
             &opts,
             macs,
             || {
-                kernels::gemm_packed(&a, -3, &pw, &sums, m, &mut out, isa);
+                kernels::gemm_packed(
+                    &a,
+                    -3,
+                    &pw,
+                    &sums,
+                    m,
+                    &mut out,
+                    isa,
+                    Blocking::default(),
+                );
                 std::hint::black_box(out[0]);
             },
         );
         log.add(&name, &shape, 1, isa.name(), simd, macs);
         report_speedup(&format!("{name}_simd_vs_scalar"), scalar, simd);
         report_speedup(&format!("{name}_simd_vs_unpacked"), base, simd);
+
+        // autotuned schedule vs the default (the blocking the tuner
+        // would persist in a .fatm for this shape)
+        let mut topts = tune::TuneOptions::full();
+        topts.threads = 1;
+        topts.isa = isa;
+        let choice = tune::tune_gemm(&b, k, n, &topts, None);
+        println!(
+            "BENCH {name} tuned_blocking={} (default {})",
+            choice.blocking.label(),
+            Blocking::default().label()
+        );
+        let pw_tuned = PackedWeights::pack_with(&b, k, n, choice.blocking.nr);
+        let tuned = bench_throughput(
+            &format!("{name}_tuned_t1_macs"),
+            &opts,
+            macs,
+            || {
+                kernels::gemm_packed(
+                    &a,
+                    -3,
+                    &pw_tuned,
+                    &sums,
+                    m,
+                    &mut out,
+                    isa,
+                    choice.blocking,
+                );
+                std::hint::black_box(out[0]);
+            },
+        );
+        log.add(&name, &shape, 1, &format!("tuned-{}", isa.name()), tuned, macs);
+        report_speedup(&format!("{name}_tuned_vs_default_t1"), simd, tuned);
 
         // pooled sharding vs the PR-3 per-call spawn baseline
         for t in [2usize, 4, 8] {
@@ -127,7 +180,15 @@ fn main() {
                 macs,
                 || {
                     kernels::gemm_packed_parallel(
-                        &a, -3, &pw, &sums, m, &mut out, t, isa,
+                        &a,
+                        -3,
+                        &pw,
+                        &sums,
+                        m,
+                        &mut out,
+                        t,
+                        isa,
+                        Blocking::default(),
                     );
                     std::hint::black_box(out[0]);
                 },
@@ -171,6 +232,7 @@ fn main() {
         clamp: (-127, 127),
         w_scales: vec![1.0],
         packed: None,
+        blocking: Blocking::default(),
     };
     let dw_macs = 32 * 32 * 64 * 9;
     let mut dw_scalar = 0.0;

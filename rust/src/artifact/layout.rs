@@ -52,8 +52,15 @@ pub const SEC_PANEL: u32 = 3;
 pub const SECTIONS: [u32; 3] = [SEC_GRAPH, SEC_PLAN, SEC_PANEL];
 
 /// PLAN-section format version (bumped independently of the magic for
-/// additive changes).
-pub const PLAN_VERSION: u32 = 1;
+/// additive changes). v2 appends a per-layer GEMM [`Blocking`] table
+/// (autotuner output, DESIGN.md §12); v1 files are still readable and
+/// get [`Blocking::default`] everywhere.
+///
+/// [`Blocking`]: crate::int8::kernels::Blocking
+/// [`Blocking::default`]: crate::int8::kernels::Blocking::default
+pub const PLAN_VERSION: u32 = 2;
+/// Oldest PLAN version this build still reads.
+pub const PLAN_VERSION_MIN: u32 = 1;
 
 /// Wire tag for a packing ISA.
 pub fn isa_tag(isa: Isa) -> u32 {
@@ -61,6 +68,7 @@ pub fn isa_tag(isa: Isa) -> u32 {
         Isa::Scalar => 0,
         Isa::Sse2 => 1,
         Isa::Avx2 => 2,
+        Isa::Avx512Vnni => 3,
     }
 }
 
@@ -70,7 +78,8 @@ pub fn isa_from_tag(tag: u32) -> Result<Isa> {
         0 => Isa::Scalar,
         1 => Isa::Sse2,
         2 => Isa::Avx2,
-        other => bail!("unknown ISA tag {other} (want 0|1|2)"),
+        3 => Isa::Avx512Vnni,
+        other => bail!("unknown ISA tag {other} (want 0..=3)"),
     })
 }
 
@@ -318,10 +327,11 @@ mod tests {
 
     #[test]
     fn isa_tags_round_trip() {
-        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Avx512Vnni] {
             assert_eq!(isa_from_tag(isa_tag(isa)).unwrap(), isa);
         }
-        assert!(isa_from_tag(3).is_err());
+        assert!(isa_from_tag(4).is_err());
+        assert!(isa_from_tag(u32::MAX).is_err());
     }
 
     #[test]

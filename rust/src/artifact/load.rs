@@ -21,7 +21,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::int8::engine::{AddParams, GapParams, QLayer, QModel, QNode};
-use crate::int8::kernels::{Isa, PackedWeights};
+use crate::int8::kernels::{Blocking, Isa, PackedWeights};
 use crate::int8::plan::{ExecPlan, PlanStep};
 use crate::model::{GraphDef, Node, Op};
 use crate::quant::scale::QParams;
@@ -29,7 +29,7 @@ use crate::quant::scale::QParams;
 use super::digest::{etag, fnv1a64};
 use super::layout::{
     isa_from_tag, Reader, ALIGN, DIGEST_START, HEADER_LEN, MAGIC,
-    PLAN_VERSION, SECTIONS, TOC_ENTRY_LEN,
+    PLAN_VERSION, PLAN_VERSION_MIN, SECTIONS, TOC_ENTRY_LEN,
 };
 use super::mmap::Mapping;
 use super::slab::I8Slab;
@@ -198,8 +198,9 @@ fn load_mapping(
     let mut r = Reader::new(plan_raw, "fatm plan");
     let version = r.u32()?;
     ensure!(
-        version == PLAN_VERSION,
-        "plan version {version}, this build reads {PLAN_VERSION}"
+        (PLAN_VERSION_MIN..=PLAN_VERSION).contains(&version),
+        "plan version {version}, this build reads \
+         {PLAN_VERSION_MIN}..={PLAN_VERSION}"
     );
     let num_slots = r.usize_capped(MAX_SLOTS, "num_slots")?;
     let input_slot = r.u32()? as usize;
@@ -243,7 +244,7 @@ fn load_mapping(
     for pi in 0..n_params {
         let tag = r.u32()?;
         params.push(match tag {
-            0 => QNode::Layer(get_layer(&mut r, &map, panel_sec)?),
+            0 => QNode::Layer(get_layer(&mut r, &map, panel_sec, version)?),
             1 => QNode::Add(AddParams {
                 ma: (r.i32()?, r.i32()?),
                 mb: (r.i32()?, r.i32()?),
@@ -303,12 +304,16 @@ fn load_mapping(
     // Repack panels when the file's packing ISA differs from the host's.
     // Today the packed layout is ISA-independent, so this reproduces the
     // identical bytes — the rule is what keeps the format correct if a
-    // future packing specializes per ISA.
+    // future packing specializes per ISA. The tuned blocking table was
+    // also chosen on the packing host, so a foreign file falls back to
+    // the default schedule (the mirror of the repack rule; re-tune by
+    // re-exporting on this host).
     let host_isa = opts.isa.unwrap_or_else(Isa::detect);
     let mut repacked = false;
     if file_isa != host_isa {
         for p in &mut plan.params {
             if let QNode::Layer(l) = p {
+                l.blocking = Blocking::default();
                 if let Some(pw) = &l.packed {
                     let (k, n) = (pw.k, pw.n);
                     l.packed = Some(PackedWeights::pack(&l.w_q, k, n));
@@ -405,6 +410,7 @@ fn get_layer(
     r: &mut Reader,
     map: &Arc<Mapping>,
     panel: &Section,
+    version: u32,
 ) -> Result<QLayer> {
     let out_qp = get_qp(r)?;
     let clamp = (r.i32()?, r.i32()?);
@@ -413,13 +419,29 @@ fn get_layer(
     let bias_q = r.vec_i32()?;
     let requant = r.vec_i32_pair()?;
     let w_scales = r.vec_f32()?;
+    // v2: the tune-table entry precedes the packed-panel record, and is
+    // validated *before* its strip width parameterizes the panel
+    // geometry — a hostile blocking must never reach `gemm_packed`'s
+    // unchecked inner loops.
+    let blocking = if version >= 2 {
+        let bk = Blocking {
+            kc: r.u32()? as usize,
+            nr: r.u32()? as usize,
+            mr: r.u32()? as usize,
+            grain: r.u32()? as usize,
+        };
+        bk.validate().context("hostile blocking table entry")?;
+        bk
+    } else {
+        Blocking::default()
+    };
     let packed = match r.u32()? {
         0 => None,
         1 => {
             let k = r.u32()? as usize;
             let n = r.u32()? as usize;
             let slab = get_blob(r, map, panel)?;
-            Some(PackedWeights::from_packed(slab, k, n)?)
+            Some(PackedWeights::from_packed(slab, k, n, blocking.nr)?)
         }
         other => bail!("bad has_packed flag {other}"),
     };
@@ -432,6 +454,7 @@ fn get_layer(
         clamp,
         w_scales,
         packed,
+        blocking,
     })
 }
 

@@ -40,5 +40,5 @@ pub mod slab;
 pub use digest::{etag, fnv1a64};
 pub use load::{load, load_from_bytes, peek_etag, LoadOptions, LoadReport};
 pub use mmap::Mapping;
-pub use save::{save, to_bytes};
+pub use save::{save, to_bytes, to_bytes_versioned};
 pub use slab::I8Slab;

@@ -40,8 +40,25 @@ fn put_qp(w: &mut Writer, qp: QParams) {
 /// Serialize `qm` into `.fatm` bytes, tagging the weight panels with
 /// `isa` (the packed layout itself is ISA-independent today; the tag
 /// drives the loader's repack-on-mismatch rule so the format stays
-/// correct if a future packing ever specializes per ISA).
+/// correct if a future packing ever specializes per ISA). Writes PLAN
+/// v2: each layer record carries its GEMM [`Blocking`] table entry.
+///
+/// [`Blocking`]: crate::int8::kernels::Blocking
 pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
+    to_bytes_versioned(qm, isa, PLAN_VERSION)
+}
+
+/// [`to_bytes`] at an explicit PLAN version — exists so back-compat
+/// tests can produce genuine v1 bytes. A v1 file cannot represent a
+/// tuned blocking table; writing one is only valid when every layer is
+/// at [`Blocking::default`] (debug-asserted in [`put_layer`]).
+///
+/// [`Blocking::default`]: crate::int8::kernels::Blocking::default
+pub fn to_bytes_versioned(qm: &QModel, isa: Isa, version: u32) -> Vec<u8> {
+    assert!(
+        (super::layout::PLAN_VERSION_MIN..=PLAN_VERSION).contains(&version),
+        "unwritable PLAN version {version}"
+    );
     let graph = qm.graph.to_json().into_bytes();
     let plan = &qm.plan;
 
@@ -49,7 +66,7 @@ pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
     // blobs by (off, len) into the panel section.
     let mut panel: Vec<u8> = Vec::new();
     let mut w = Writer::default();
-    w.u32(PLAN_VERSION);
+    w.u32(version);
     w.u32(plan.num_slots as u32);
     w.u32(plan.input_slot as u32);
     w.u32(plan.output_slot as u32);
@@ -78,7 +95,7 @@ pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
         match p {
             QNode::Layer(l) => {
                 w.u32(0);
-                put_layer(&mut w, &mut panel, l);
+                put_layer(&mut w, &mut panel, l, version);
             }
             QNode::Add(a) => {
                 w.u32(1);
@@ -137,7 +154,7 @@ pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
     out
 }
 
-fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer) {
+fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer, version: u32) {
     put_qp(w, l.out_qp);
     w.i32(l.clamp.0);
     w.i32(l.clamp.1);
@@ -148,8 +165,28 @@ fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer) {
     w.vec_i32(&l.bias_q);
     w.vec_i32_pair(&l.requant);
     w.vec_f32(&l.w_scales);
+    if version >= 2 {
+        // The tune-table entry sits *before* the packed-panel record so
+        // the loader knows the strip width when it validates the panel
+        // geometry.
+        w.u32(l.blocking.kc as u32);
+        w.u32(l.blocking.nr as u32);
+        w.u32(l.blocking.mr as u32);
+        w.u32(l.blocking.grain as u32);
+    } else {
+        debug_assert_eq!(
+            l.blocking,
+            Default::default(),
+            "PLAN v1 cannot represent a tuned blocking table"
+        );
+    }
     match &l.packed {
         Some(pw) => {
+            debug_assert_eq!(
+                pw.nr(),
+                l.blocking.nr,
+                "panel strip width out of sync with the blocking table"
+            );
             w.u32(1);
             w.u32(pw.k as u32);
             w.u32(pw.n as u32);

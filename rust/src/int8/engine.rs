@@ -41,6 +41,11 @@ pub struct QLayer {
     /// microkernels (`int8::kernels`); `None` for depthwise layers and
     /// ad-hoc hand-built layers (those run the unpacked kernel).
     pub packed: Option<super::kernels::PackedWeights>,
+    /// GEMM loop schedule for this layer — [`Default::default`] unless
+    /// the autotuner (`int8::tune`) picked a better one; persisted in
+    /// the `.fatm` PLAN section (v2) and validated on load. Its `nr`
+    /// always matches the strip width `packed` was packed with.
+    pub blocking: super::kernels::Blocking,
 }
 
 #[derive(Debug, Clone)]
@@ -163,6 +168,24 @@ impl QModel {
     /// Quantized parameters of a compute node, if it has any.
     pub fn node(&self, id: &str) -> Option<&QNode> {
         self.plan.node(id)
+    }
+
+    /// Distinct GEMM blockings in use and how many layers carry each —
+    /// surfaced by `/stats` and `fat info`. A freshly built (untuned)
+    /// model reports a single [`Blocking::default`] entry.
+    ///
+    /// [`Blocking::default`]: super::kernels::Blocking::default
+    pub fn blocking_summary(&self) -> Vec<(super::kernels::Blocking, usize)> {
+        let mut out: Vec<(super::kernels::Blocking, usize)> = Vec::new();
+        for p in &self.plan.params {
+            if let QNode::Layer(l) = p {
+                match out.iter_mut().find(|(b, _)| *b == l.blocking) {
+                    Some((_, c)) => *c += 1,
+                    None => out.push((l.blocking, 1)),
+                }
+            }
+        }
+        out
     }
 
     /// Run a float NHWC batch through the integer engine; returns f32

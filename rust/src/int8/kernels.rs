@@ -1,27 +1,34 @@
-//! SIMD int8 microkernels over prepacked weight panels (DESIGN.md §8).
+//! SIMD int8 microkernels over prepacked weight panels (DESIGN.md §8,
+//! §12).
 //!
 //! The conv/dense hot loop is `i8 × i8 → i32`: widen both operands to
 //! i16, multiply-accumulate pairs into i32 lanes (`pmaddwd` — the
 //! gemmlowp/oneDNN lineage), with an SSE2 baseline, an AVX2 path picked
-//! once per process by [`Isa::detect`], and a portable scalar fallback
-//! that reads the **same packed layout** so every path is bit-exact.
+//! once per process by [`Isa::detect`], an AVX-512/VNNI path
+//! (`vpdpwssd`, behind the default-off `avx512` cargo feature), and a
+//! portable scalar fallback that reads the **same packed layout** so
+//! every path is bit-exact.
 //!
 //! ## Packed layout
 //!
-//! [`PackedWeights::pack`] reorders the row-major `(k, n)` weight matrix
-//! into `NR`-column strips of k-**pair**-interleaved rows (the shape
-//! `pmaddwd` consumes directly):
+//! [`PackedWeights::pack_with`] reorders the row-major `(k, n)` weight
+//! matrix into `nr`-column strips of k-**pair**-interleaved rows (the
+//! shape `pmaddwd`/`vpdpwssd` consume directly):
 //!
 //! ```text
-//! strip ns (columns n0 = ns·NR .. n0+NR, zero-padded past n):
+//! strip ns (columns n0 = ns·nr .. n0+nr, zero-padded past n):
 //!   pair p (rows 2p, 2p+1; row k zero-padded when k is odd):
-//!     b[2p][n0], b[2p+1][n0], b[2p][n0+1], b[2p+1][n0+1], …  (2·NR i8)
+//!     b[2p][n0], b[2p+1][n0], b[2p][n0+1], b[2p+1][n0+1], …  (2·nr i8)
 //! ```
 //!
-//! One `KC`-row panel of a strip is `KC × NR` i8 ≈ 8 KiB (L1-resident),
-//! and a 16-byte load inside a pair yields 8 interleaved columns — the
-//! exact operand layout of a widening multiply-add, with no shuffles on
-//! the hot path.
+//! The strip width `nr` and the loop blockings around it are no longer
+//! compile-time constants: each layer carries a [`Blocking`] chosen by
+//! the autotuner (`crate::int8::tune`, persisted in `.fatm` PLAN v2) or
+//! the [`Blocking::default`] that reproduces the historical
+//! `KC=128/NR=64/MR=4` schedule. One `kc`-row panel of a strip is
+//! `kc × nr` i8 (≈ 8 KiB at the defaults, L1-resident), and a 16-byte
+//! load inside a pair yields 8 interleaved columns — the exact operand
+//! layout of a widening multiply-add, with no shuffles on the hot path.
 //!
 //! ## Bit-exactness
 //!
@@ -36,12 +43,74 @@ use std::sync::OnceLock;
 
 use crate::artifact::I8Slab;
 
-/// Rows of `a` per micro-tile (register-block height).
+/// Default rows of `a` per micro-tile (register-block height).
 pub const MR: usize = 4;
-/// Columns of `b` per strip (register-block width).
+/// Maximum columns of `b` per strip; also the default strip width.
 pub const NR: usize = 64;
-/// Depth of one cache panel of `b` (`KC * NR` i8 ≈ 8 KiB).
+/// Default depth of one cache panel of `b` (`KC * NR` i8 ≈ 8 KiB).
 pub const KC: usize = 128;
+/// Maximum micro-tile height any [`Blocking`] may request (the
+/// accumulator block is statically sized `MR_MAX × NR`).
+pub const MR_MAX: usize = 8;
+
+/// One GEMM loop schedule: panel depth, strip width, micro-tile height
+/// and the parallel shard grain. Chosen per layer by the autotuner
+/// (`crate::int8::tune`), persisted in the `.fatm` PLAN section (v2),
+/// and validated on load before it reaches the unchecked inner loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Blocking {
+    /// Rows of `b` per cache panel (must be even: the layout pairs rows).
+    pub kc: usize,
+    /// Columns per packed strip (multiple of 16, ≤ [`NR`]); must match
+    /// the `nr` the panel was packed with.
+    pub nr: usize,
+    /// Rows of `a` per micro-tile (1 ..= [`MR_MAX`]).
+    pub mr: usize,
+    /// Row-shard granularity for [`gemm_packed_parallel`]: shards are
+    /// rounded up to a multiple of this many rows.
+    pub grain: usize,
+}
+
+impl Default for Blocking {
+    /// The historical hard-coded schedule (`KC=128/NR=64/MR=4`,
+    /// ungrained sharding) — what PLAN v1 artifacts implicitly used.
+    fn default() -> Blocking {
+        Blocking { kc: KC, nr: NR, mr: MR, grain: 1 }
+    }
+}
+
+impl Blocking {
+    /// Reject geometries the unchecked micro-tile loops cannot take:
+    /// this is the loader's safety gate for hostile `.fatm` tables.
+    pub fn validate(self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.kc >= 2 && self.kc <= 8192 && self.kc % 2 == 0,
+            "blocking kc={} (want even, 2..=8192)",
+            self.kc
+        );
+        anyhow::ensure!(
+            self.nr >= 16 && self.nr <= NR && self.nr % 16 == 0,
+            "blocking nr={} (want multiple of 16, 16..={NR})",
+            self.nr
+        );
+        anyhow::ensure!(
+            self.mr >= 1 && self.mr <= MR_MAX,
+            "blocking mr={} (want 1..={MR_MAX})",
+            self.mr
+        );
+        anyhow::ensure!(
+            self.grain >= 1 && self.grain <= 4096,
+            "blocking grain={} (want 1..=4096)",
+            self.grain
+        );
+        Ok(())
+    }
+
+    /// Compact `kc/nr/mr/grain` form for logs, `/stats` and `fat info`.
+    pub fn label(self) -> String {
+        format!("{}/{}/{}/{}", self.kc, self.nr, self.mr, self.grain)
+    }
+}
 
 /// Instruction-set level for the int8 microkernels. Ordered: a request
 /// above the hardware clamps down ([`Isa::detect`]).
@@ -53,6 +122,13 @@ pub enum Isa {
     Sse2,
     /// 256-bit `vpmaddwd` path, runtime-detected.
     Avx2,
+    /// 512-bit `vpdpwssd` (AVX-512 VNNI) path. The variant always
+    /// exists (so `FAT_ISA=avx512vnni` parses everywhere), but it is
+    /// only *selectable* when the crate is built with the `avx512`
+    /// feature **and** the CPU reports avx512f/bw/vnni — otherwise
+    /// [`Isa::detect`] clamps down and the dispatch falls back to
+    /// scalar, which is bit-exact anyway.
+    Avx512Vnni,
 }
 
 impl Isa {
@@ -61,21 +137,34 @@ impl Isa {
             Isa::Scalar => "scalar",
             Isa::Sse2 => "sse2",
             Isa::Avx2 => "avx2",
+            Isa::Avx512Vnni => "avx512vnni",
         }
     }
 
-    /// Inverse of [`Isa::name`] for CLI/env values (`scalar|sse2|avx2`).
+    /// Inverse of [`Isa::name`] for CLI/env values
+    /// (`scalar|sse2|avx2|avx512vnni`).
     pub fn parse(s: &str) -> Option<Isa> {
         match s.trim() {
             "scalar" => Some(Isa::Scalar),
             "sse2" => Some(Isa::Sse2),
             "avx2" => Some(Isa::Avx2),
+            "avx512vnni" => Some(Isa::Avx512Vnni),
             _ => None,
         }
     }
 
-    /// Best ISA the hardware supports.
+    /// Best ISA the hardware (and build) supports.
     fn best() -> Isa {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx512vnni")
+                && std::arch::is_x86_feature_detected!("avx512bw")
+                && std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx2")
+            {
+                return Isa::Avx512Vnni;
+            }
+        }
         #[cfg(target_arch = "x86_64")]
         {
             if std::arch::is_x86_feature_detected!("avx2") {
@@ -91,10 +180,11 @@ impl Isa {
     }
 
     /// The process-wide kernel ISA, detected **once** (`OnceLock`) when
-    /// the first plan is built or executed. `FAT_ISA=scalar|sse2|avx2`
-    /// pins a lower level for A/B runs; asking above the hardware clamps
-    /// down to the best supported level. Tests sweep explicitly via
-    /// [`Isa::available`] instead of mutating the environment.
+    /// the first plan is built or executed.
+    /// `FAT_ISA=scalar|sse2|avx2|avx512vnni` pins a lower level for A/B
+    /// runs; asking above the hardware clamps down to the best
+    /// supported level. Tests sweep explicitly via [`Isa::available`]
+    /// instead of mutating the environment.
     pub fn detect() -> Isa {
         static CACHE: OnceLock<Isa> = OnceLock::new();
         *CACHE.get_or_init(|| {
@@ -108,7 +198,8 @@ impl Isa {
                         // invert A/B runs.
                         eprintln!(
                             "FAT_ISA: unknown value {other:?} \
-                             (want scalar|sse2|avx2); using detected {}",
+                             (want scalar|sse2|avx2|avx512vnni); \
+                             using detected {}",
                             best.name()
                         );
                         None
@@ -122,11 +213,11 @@ impl Isa {
 
     /// Every ISA runnable on this machine, weakest first (test sweeps).
     pub fn available() -> Vec<Isa> {
-        match Isa::best() {
-            Isa::Avx2 => vec![Isa::Scalar, Isa::Sse2, Isa::Avx2],
-            Isa::Sse2 => vec![Isa::Scalar, Isa::Sse2],
-            Isa::Scalar => vec![Isa::Scalar],
-        }
+        let best = Isa::best();
+        [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Avx512Vnni]
+            .into_iter()
+            .filter(|i| *i <= best)
+            .collect()
     }
 }
 
@@ -147,59 +238,80 @@ pub struct PackedWeights {
     pub n: usize,
     /// Rows per strip after padding `k` up to a pair boundary.
     pk: usize,
-    /// Number of `NR`-column strips (`n` padded up).
+    /// Number of `nr`-column strips (`n` padded up).
     strips: usize,
+    /// Strip width the panel was packed with (a [`Blocking::nr`]).
+    nr: usize,
 }
 
 impl PackedWeights {
-    /// Pack a row-major `(k, n)` i8 matrix. Padding lanes (columns ≥ n,
-    /// the row `k` of an odd-`k` pair) are zero, so they contribute
-    /// nothing to any accumulator.
+    /// Pack with the default strip width ([`NR`]).
     pub fn pack(b: &[i8], k: usize, n: usize) -> PackedWeights {
+        PackedWeights::pack_with(b, k, n, NR)
+    }
+
+    /// Pack a row-major `(k, n)` i8 matrix into `nrw`-column strips.
+    /// Padding lanes (columns ≥ n, the row `k` of an odd-`k` pair) are
+    /// zero, so they contribute nothing to any accumulator.
+    pub fn pack_with(
+        b: &[i8],
+        k: usize,
+        n: usize,
+        nrw: usize,
+    ) -> PackedWeights {
         assert_eq!(b.len(), k * n, "pack: bad weight shape ({k},{n})");
-        let strips = n.div_ceil(NR);
+        assert!(
+            nrw >= 16 && nrw <= NR && nrw % 16 == 0,
+            "pack: bad strip width {nrw}"
+        );
+        let strips = n.div_ceil(nrw);
         let pk = k + (k & 1);
-        let mut data = vec![0i8; strips * pk * NR];
+        let mut data = vec![0i8; strips * pk * nrw];
         for ns in 0..strips {
-            let n0 = ns * NR;
-            let nr = NR.min(n - n0);
-            let sbase = ns * pk * NR;
+            let n0 = ns * nrw;
+            let nc = nrw.min(n - n0);
+            let sbase = ns * pk * nrw;
             for ki in 0..k {
                 let lane = ki & 1;
                 let pair = ki / 2;
-                let src = &b[ki * n + n0..ki * n + n0 + nr];
+                let src = &b[ki * n + n0..ki * n + n0 + nc];
                 for (j, &v) in src.iter().enumerate() {
-                    data[sbase + (pair * NR + j) * 2 + lane] = v;
+                    data[sbase + (pair * nrw + j) * 2 + lane] = v;
                 }
             }
         }
-        PackedWeights { data: data.into(), k, n, pk, strips }
+        PackedWeights { data: data.into(), k, n, pk, strips, nr: nrw }
     }
 
     /// Rehydrate from already-packed panel bytes (the `.fatm` zero-copy
     /// load path). `data` must be exactly the output of
-    /// [`PackedWeights::pack`] for a `(k, n)` matrix; only the length is
-    /// checkable here — byte-level validity is the artifact digest's
-    /// job.
+    /// [`PackedWeights::pack_with`] for a `(k, n)` matrix at strip
+    /// width `nrw`; only the geometry is checkable here — byte-level
+    /// validity is the artifact digest's job.
     pub fn from_packed(
         data: I8Slab,
         k: usize,
         n: usize,
+        nrw: usize,
     ) -> anyhow::Result<PackedWeights> {
-        let strips = n.div_ceil(NR);
+        anyhow::ensure!(
+            nrw >= 16 && nrw <= NR && nrw % 16 == 0,
+            "packed panel for ({k},{n}): bad strip width {nrw}"
+        );
+        let strips = n.div_ceil(nrw);
         let pk = k + (k & 1);
         let want = strips
             .checked_mul(pk)
-            .and_then(|v| v.checked_mul(NR))
+            .and_then(|v| v.checked_mul(nrw))
             .ok_or_else(|| {
                 anyhow::anyhow!("packed shape ({k},{n}) overflows")
             })?;
         anyhow::ensure!(
             data.len() == want,
-            "packed panel for ({k},{n}): {} bytes, want {want}",
+            "packed panel for ({k},{n}) nr={nrw}: {} bytes, want {want}",
             data.len()
         );
-        Ok(PackedWeights { data, k, n, pk, strips })
+        Ok(PackedWeights { data, k, n, pk, strips, nr: nrw })
     }
 
     /// Packed size in bytes (padding included) — for size reports.
@@ -217,16 +329,23 @@ impl PackedWeights {
         self.data.is_mapped()
     }
 
+    /// Strip width the panel was packed with.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
     #[inline]
     fn strip(&self, ns: usize) -> &[i8] {
-        &self.data[ns * self.pk * NR..(ns + 1) * self.pk * NR]
+        &self.data[ns * self.pk * self.nr..(ns + 1) * self.pk * self.nr]
     }
 }
 
 /// Packed-panel GEMM: `out[mi, ni] = Σ_k (a[mi,k] - a_zp) · b[k,ni]`,
 /// single-threaded, with the a_zp term applied via the precomputed
-/// column sums exactly like `gemm::gemm_i8`. Bit-exact with `gemm_ref`
-/// for every [`Isa`].
+/// column sums exactly like `gemm::gemm_i8`. Loop blockings come from
+/// `bk` (the strip width is fixed by how `pw` was packed); every
+/// [`Blocking`] × [`Isa`] is bit-exact with `gemm_ref`.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_packed(
     a: &[i8],
     a_zp: i32,
@@ -235,46 +354,60 @@ pub fn gemm_packed(
     m: usize,
     out: &mut [i32],
     isa: Isa,
+    bk: Blocking,
 ) {
     let (k, n) = (pw.k, pw.n);
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(bk.nr, pw.nr, "blocking/panel strip width mismatch");
     out.fill(0);
     if m == 0 || n == 0 {
         return;
     }
+    // Defensive clamps: `Blocking::validate` runs on every artifact
+    // load, but the unchecked inner loops must stay in bounds even if
+    // an unvalidated value slips through some other path.
+    let kc = (bk.kc.max(2) & !1).min(8192);
+    let mr_b = bk.mr.clamp(1, MR_MAX);
+    let nrw = pw.nr;
     let pairs_total = pw.pk / 2;
     for ns in 0..pw.strips {
-        let n0 = ns * NR;
-        let nr = NR.min(n - n0);
+        let n0 = ns * nrw;
+        let nc = nrw.min(n - n0);
         let strip = pw.strip(ns);
         let mut p0 = 0usize;
         while p0 < pairs_total {
-            // One KC-row cache panel = KC/2 interleaved pairs.
-            let pc = (KC / 2).min(pairs_total - p0);
+            // One kc-row cache panel = kc/2 interleaved pairs.
+            let pc = (kc / 2).min(pairs_total - p0);
             let mut m0 = 0usize;
             while m0 < m {
-                let mr = MR.min(m - m0);
-                let mut acc = [[0i32; NR]; MR];
+                let mr = mr_b.min(m - m0);
+                let mut acc = [[0i32; NR]; MR_MAX];
                 match isa {
+                    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+                    Isa::Avx512Vnni => unsafe {
+                        microtile_avx512vnni(
+                            a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                        )
+                    },
                     #[cfg(target_arch = "x86_64")]
                     Isa::Avx2 => unsafe {
-                        microtile_avx2(a, m0, k, strip, p0, pc, mr, &mut acc)
+                        microtile_avx2(a, m0, k, strip, p0, pc, mr, nrw, &mut acc)
                     },
                     #[cfg(target_arch = "x86_64")]
                     Isa::Sse2 => unsafe {
-                        microtile_sse2(a, m0, k, strip, p0, pc, mr, &mut acc)
+                        microtile_sse2(a, m0, k, strip, p0, pc, mr, nrw, &mut acc)
                     },
-                    _ => microtile_scalar(a, m0, k, strip, p0, pc, mr, &mut acc),
+                    _ => microtile_scalar(a, m0, k, strip, p0, pc, mr, nrw, &mut acc),
                 }
                 for (r, arow) in acc.iter().take(mr).enumerate() {
                     let o0 = (m0 + r) * n + n0;
-                    let orow = &mut out[o0..o0 + nr];
+                    let orow = &mut out[o0..o0 + nc];
                     for (j, o) in orow.iter_mut().enumerate() {
                         *o += arow[j];
                     }
                 }
-                m0 += MR;
+                m0 += mr_b;
             }
             p0 += pc;
         }
@@ -290,8 +423,9 @@ pub fn gemm_packed(
 }
 
 /// Row-sharded [`gemm_packed`] over the persistent worker pool
-/// (`util::threads::pool`). Workers own disjoint `out` slabs, so every
-/// thread count is bit-exact.
+/// (`util::threads::pool`), shard sizes rounded up to `bk.grain` rows.
+/// Workers own disjoint `out` slabs, so every thread count is
+/// bit-exact.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_packed_parallel(
     a: &[i8],
@@ -302,23 +436,26 @@ pub fn gemm_packed_parallel(
     out: &mut [i32],
     threads: usize,
     isa: Isa,
+    bk: Blocking,
 ) {
     let (k, n) = (pw.k, pw.n);
     let t = threads.max(1).min(m.max(1));
     if t <= 1 || n == 0 {
-        return gemm_packed(a, a_zp, pw, bsums, m, out, isa);
+        return gemm_packed(a, a_zp, pw, bsums, m, out, isa, bk);
     }
-    let rows = m.div_ceil(t);
+    let g = bk.grain.clamp(1, 4096);
+    let rows = m.div_ceil(t).div_ceil(g) * g;
     crate::util::threads::pool().run_chunks(out, rows * n, |i, out_slab| {
         let mc = out_slab.len() / n;
         let a_slab = &a[i * rows * k..i * rows * k + mc * k];
-        gemm_packed(a_slab, a_zp, pw, bsums, mc, out_slab, isa);
+        gemm_packed(a_slab, a_zp, pw, bsums, mc, out_slab, isa, bk);
     });
 }
 
 /// Portable reference micro-tile over the packed layout: accumulate
-/// `pc` row-pairs of one strip into the `(mr, NR)` i32 block. The SIMD
-/// paths compute exactly this sum (associative i32 adds).
+/// `pc` row-pairs of one `nr`-wide strip into the first `(mr, nr)` of
+/// the i32 accumulator block. The SIMD paths compute exactly this sum
+/// (associative i32 adds).
 #[allow(clippy::too_many_arguments)]
 fn microtile_scalar(
     a: &[i8],
@@ -328,15 +465,16 @@ fn microtile_scalar(
     p0: usize,
     pc: usize,
     mr: usize,
-    acc: &mut [[i32; NR]; MR],
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
 ) {
     for p in p0..p0 + pc {
-        let prow = &strip[p * 2 * NR..(p + 1) * 2 * NR];
+        let prow = &strip[p * 2 * nr..(p + 1) * 2 * nr];
         for (r, arow) in acc.iter_mut().take(mr).enumerate() {
             let ai = (m0 + r) * k + 2 * p;
             let a0 = a[ai] as i32;
             let a1 = if 2 * p + 1 < k { a[ai + 1] as i32 } else { 0 };
-            for (j, av) in arow.iter_mut().enumerate() {
+            for (j, av) in arow.iter_mut().take(nr).enumerate() {
                 *av += a0 * prow[2 * j] as i32 + a1 * prow[2 * j + 1] as i32;
             }
         }
@@ -350,14 +488,14 @@ fn pair_i32(a0: i32, a1: i32) -> i32 {
     (((a1 as i16 as u16 as u32) << 16) | (a0 as i16 as u16 as u32)) as i32
 }
 
-/// AVX2 micro-tile: per a-row, 8 × 256-bit i32 accumulators cover the
-/// NR=64 strip; each pair iteration does one broadcast + 4×(16-byte load
-/// → sign-extend → `vpmaddwd` → `vpaddd`) per 16 columns.
+/// AVX2 micro-tile: per a-row, `nr/8` 256-bit i32 accumulators cover
+/// the strip; each pair iteration does one broadcast + (16-byte load →
+/// sign-extend → `vpmaddwd` → `vpaddd`) per 8 columns.
 ///
 /// # Safety
 /// Caller must ensure AVX2 is available (guarded by [`Isa::detect`] /
 /// [`Isa::available`]) and the slice geometry invariants of
-/// [`gemm_packed`].
+/// [`gemm_packed`] (in particular `nr % 16 == 0`, `nr ≤ NR`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[allow(clippy::too_many_arguments)]
@@ -369,13 +507,15 @@ unsafe fn microtile_avx2(
     p0: usize,
     pc: usize,
     mr: usize,
-    acc: &mut [[i32; NR]; MR],
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
 ) {
     use std::arch::x86_64::*;
+    let groups = nr / 8;
     for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
         let abase = (m0 + r) * k;
         let mut accv = [_mm256_setzero_si256(); NR / 8];
-        for (i, v) in accv.iter_mut().enumerate() {
+        for (i, v) in accv.iter_mut().take(groups).enumerate() {
             *v = _mm256_loadu_si256(
                 arow_acc.as_ptr().add(i * 8) as *const __m256i
             );
@@ -388,17 +528,77 @@ unsafe fn microtile_avx2(
                 0
             };
             let av = _mm256_set1_epi32(pair_i32(a0, a1));
-            let brow = strip.as_ptr().add(p * 2 * NR);
-            for (i, v) in accv.iter_mut().enumerate() {
+            let brow = strip.as_ptr().add(p * 2 * nr);
+            for (i, v) in accv.iter_mut().take(groups).enumerate() {
                 let b16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
                     brow.add(i * 16) as *const __m128i,
                 ));
                 *v = _mm256_add_epi32(*v, _mm256_madd_epi16(av, b16));
             }
         }
-        for (i, v) in accv.iter().enumerate() {
+        for (i, v) in accv.iter().take(groups).enumerate() {
             _mm256_storeu_si256(
                 arow_acc.as_mut_ptr().add(i * 8) as *mut __m256i,
+                *v,
+            );
+        }
+    }
+}
+
+/// AVX-512 VNNI micro-tile: per a-row, `nr/16` 512-bit i32 accumulators
+/// cover the strip; each pair iteration does one broadcast + (32-byte
+/// load → sign-extend → fused `vpdpwssd`) per 16 columns. It consumes
+/// the **same** pair-interleaved layout as the pmaddwd paths (the
+/// `vpdpbusd` quad layout was rejected — see DESIGN.md §12), so
+/// bit-exactness is inherited, not re-argued.
+///
+/// # Safety
+/// Caller must ensure avx512f/bw/vnni are available (guarded by
+/// [`Isa::detect`] / [`Isa::available`]) and the slice geometry
+/// invariants of [`gemm_packed`] (`nr % 16 == 0`, `nr ≤ NR`).
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn microtile_avx512vnni(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
+) {
+    use std::arch::x86_64::*;
+    let groups = nr / 16;
+    for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
+        let abase = (m0 + r) * k;
+        let mut accv = [_mm512_setzero_si512(); NR / 16];
+        for (i, v) in accv.iter_mut().take(groups).enumerate() {
+            *v = _mm512_loadu_si512(
+                arow_acc.as_ptr().add(i * 16) as *const __m512i
+            );
+        }
+        for p in p0..p0 + pc {
+            let a0 = *a.get_unchecked(abase + 2 * p) as i32;
+            let a1 = if 2 * p + 1 < k {
+                *a.get_unchecked(abase + 2 * p + 1) as i32
+            } else {
+                0
+            };
+            let av = _mm512_set1_epi32(pair_i32(a0, a1));
+            let brow = strip.as_ptr().add(p * 2 * nr);
+            for (i, v) in accv.iter_mut().take(groups).enumerate() {
+                let b16 = _mm512_cvtepi8_epi16(_mm256_loadu_si256(
+                    brow.add(i * 32) as *const __m256i,
+                ));
+                *v = _mm512_dpwssd_epi32(*v, av, b16);
+            }
+        }
+        for (i, v) in accv.iter().take(groups).enumerate() {
+            _mm512_storeu_si512(
+                arow_acc.as_mut_ptr().add(i * 16) as *mut __m512i,
                 *v,
             );
         }
@@ -409,7 +609,8 @@ unsafe fn microtile_avx2(
 /// `pmaddwd` over 4-column groups, sign-extension via compare+unpack.
 ///
 /// # Safety
-/// Caller must uphold the slice geometry invariants of [`gemm_packed`].
+/// Caller must uphold the slice geometry invariants of [`gemm_packed`]
+/// (`nr % 16 == 0`, `nr ≤ NR`).
 #[cfg(target_arch = "x86_64")]
 #[allow(clippy::too_many_arguments)]
 unsafe fn microtile_sse2(
@@ -420,13 +621,14 @@ unsafe fn microtile_sse2(
     p0: usize,
     pc: usize,
     mr: usize,
-    acc: &mut [[i32; NR]; MR],
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
 ) {
     use std::arch::x86_64::*;
     let zero = _mm_setzero_si128();
     for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
         let abase = (m0 + r) * k;
-        for jv in 0..NR / 4 {
+        for jv in 0..nr / 4 {
             let mut accv = _mm_loadu_si128(
                 arow_acc.as_ptr().add(jv * 4) as *const __m128i
             );
@@ -439,7 +641,7 @@ unsafe fn microtile_sse2(
                 };
                 let av = _mm_set1_epi32(pair_i32(a0, a1));
                 let b8 = _mm_loadl_epi64(
-                    strip.as_ptr().add((p * NR + jv * 4) * 2)
+                    strip.as_ptr().add((p * nr + jv * 4) * 2)
                         as *const __m128i,
                 );
                 let b16 = _mm_unpacklo_epi8(b8, _mm_cmpgt_epi8(zero, b8));
@@ -461,8 +663,11 @@ pub fn dw_accum_tap(acc: &mut [i32], x: &[i8], w: &[i8], zp: i32, isa: Isa) {
     debug_assert_eq!(acc.len(), x.len());
     debug_assert_eq!(acc.len(), w.len());
     match isa {
+        // The depthwise tap has no 512-bit variant (it is bandwidth-,
+        // not ALU-bound); VNNI machines take the AVX2 tap, which their
+        // detection gate guarantees is present.
         #[cfg(target_arch = "x86_64")]
-        Isa::Avx2 => unsafe { dw_tap_avx2(acc, x, w, zp) },
+        Isa::Avx2 | Isa::Avx512Vnni => unsafe { dw_tap_avx2(acc, x, w, zp) },
         #[cfg(target_arch = "x86_64")]
         Isa::Sse2 => unsafe { dw_tap_sse2(acc, x, w, zp) },
         _ => dw_tap_scalar(acc, x, w, zp),
@@ -547,7 +752,7 @@ mod tests {
         // strip's tail columns are zero.
         let b = vec![1i8, 2, 3, 4, 5, 6];
         let pw = PackedWeights::pack(&b, 3, 2);
-        assert_eq!((pw.k, pw.n, pw.pk, pw.strips), (3, 2, 4, 1));
+        assert_eq!((pw.k, pw.n, pw.pk, pw.strips, pw.nr), (3, 2, 4, 1, NR));
         assert_eq!(pw.bytes(), 4 * NR);
         let d = &pw.data;
         // pair 0 (rows 0, 1), columns 0 and 1
@@ -564,6 +769,46 @@ mod tests {
     }
 
     #[test]
+    fn pack_with_narrow_strip_golden() {
+        // (2, 20) at nr=16 → two strips; column 16 starts strip 1.
+        let mut b = vec![0i8; 2 * 20];
+        b[16] = 9; // row 0, col 16
+        b[20 + 16] = 7; // row 1, col 16
+        let pw = PackedWeights::pack_with(&b, 2, 20, 16);
+        assert_eq!((pw.pk, pw.strips, pw.nr), (2, 2, 16));
+        assert_eq!(pw.bytes(), 2 * 2 * 16);
+        // strip 1, pair 0, column offset 0: interleaved [row0, row1]
+        assert_eq!(&pw.data[2 * 16..2 * 16 + 2], &[9, 7]);
+    }
+
+    #[test]
+    fn blocking_validate_rejects_hostile_geometries() {
+        assert!(Blocking::default().validate().is_ok());
+        assert!(Blocking { kc: 2, nr: 16, mr: 1, grain: 1 }.validate().is_ok());
+        assert!(
+            Blocking { kc: 8192, nr: 48, mr: MR_MAX, grain: 4096 }
+                .validate()
+                .is_ok()
+        );
+        let bad = [
+            Blocking { kc: 0, ..Blocking::default() },
+            Blocking { kc: 3, ..Blocking::default() },
+            Blocking { kc: 1 << 20, ..Blocking::default() },
+            Blocking { nr: 0, ..Blocking::default() },
+            Blocking { nr: 8, ..Blocking::default() },
+            Blocking { nr: 63, ..Blocking::default() },
+            Blocking { nr: NR + 16, ..Blocking::default() },
+            Blocking { mr: 0, ..Blocking::default() },
+            Blocking { mr: MR_MAX + 1, ..Blocking::default() },
+            Blocking { grain: 0, ..Blocking::default() },
+            Blocking { grain: 1 << 20, ..Blocking::default() },
+        ];
+        for bk in bad {
+            assert!(bk.validate().is_err(), "{bk:?} should be rejected");
+        }
+    }
+
+    #[test]
     fn packed_matches_reference_across_isas() {
         for &(m, k, n, zp) in prop::SHAPES {
             let a = prop::i8s(21, m * k);
@@ -573,7 +818,16 @@ mod tests {
             let want = gemm_ref(&a, zp, &b, m, k, n);
             for isa in Isa::available() {
                 let mut out = vec![i32::MIN; m * n];
-                gemm_packed(&a, zp, &pw, &sums, m, &mut out, isa);
+                gemm_packed(
+                    &a,
+                    zp,
+                    &pw,
+                    &sums,
+                    m,
+                    &mut out,
+                    isa,
+                    Blocking::default(),
+                );
                 assert_eq!(out, want, "({m},{k},{n}) zp={zp} {}", isa.name());
             }
         }
@@ -591,7 +845,15 @@ mod tests {
                 for threads in [1usize, 2, 8] {
                     let mut out = vec![0i32; m * n];
                     gemm_packed_parallel(
-                        &a, zp, &pw, &sums, m, &mut out, threads, isa,
+                        &a,
+                        zp,
+                        &pw,
+                        &sums,
+                        m,
+                        &mut out,
+                        threads,
+                        isa,
+                        Blocking::default(),
                     );
                     assert_eq!(
                         out,
@@ -599,6 +861,44 @@ mod tests {
                         "({m},{k},{n}) t={threads} {}",
                         isa.name()
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_sweep_matches_reference_across_isas() {
+        // Every candidate geometry the tuner may emit must be
+        // bit-exact; strip widths below NR force a repack.
+        let cands = [
+            Blocking { kc: 2, nr: 16, mr: 1, grain: 1 },
+            Blocking { kc: 64, nr: 32, mr: 2, grain: 4 },
+            Blocking { kc: 128, nr: 48, mr: 3, grain: 2 },
+            Blocking { kc: 256, nr: 64, mr: MR_MAX, grain: 8 },
+            Blocking { kc: 8192, nr: 16, mr: 5, grain: 1 },
+        ];
+        for &(m, k, n, zp) in prop::SHAPES {
+            let a = prop::i8s(25, m * k);
+            let b = prop::i8s(26, k * n);
+            let sums = col_sums(&b, k, n);
+            let want = gemm_ref(&a, zp, &b, m, k, n);
+            for bk in cands {
+                bk.validate().unwrap();
+                let pw = PackedWeights::pack_with(&b, k, n, bk.nr);
+                for isa in Isa::available() {
+                    for threads in [1usize, 3] {
+                        let mut out = vec![i32::MIN; m * n];
+                        gemm_packed_parallel(
+                            &a, zp, &pw, &sums, m, &mut out, threads, isa, bk,
+                        );
+                        assert_eq!(
+                            out,
+                            want,
+                            "({m},{k},{n}) {} t={threads} {}",
+                            bk.label(),
+                            isa.name()
+                        );
+                    }
                 }
             }
         }
@@ -647,7 +947,16 @@ mod tests {
         let sums = col_sums(&b, 512, 1);
         for isa in Isa::available() {
             let mut out = vec![0i32; 1];
-            gemm_packed(&a, 0, &pw, &sums, 1, &mut out, isa);
+            gemm_packed(
+                &a,
+                0,
+                &pw,
+                &sums,
+                1,
+                &mut out,
+                isa,
+                Blocking::default(),
+            );
             assert_eq!(out[0], 127 * 127 * 512, "{}", isa.name());
         }
     }
@@ -655,22 +964,49 @@ mod tests {
     #[test]
     fn from_packed_rehydrates_identically() {
         let b = prop::i8s(41, 24 * 70);
+        for nrw in [16usize, 32, 48, 64] {
+            let pw = PackedWeights::pack_with(&b, 24, 70, nrw);
+            let re = PackedWeights::from_packed(
+                pw.raw_data().to_vec().into(),
+                24,
+                70,
+                nrw,
+            )
+            .unwrap();
+            assert_eq!(re.raw_data(), pw.raw_data());
+            assert_eq!(
+                (re.k, re.n, re.pk, re.strips, re.nr),
+                (pw.k, pw.n, pw.pk, pw.strips, pw.nr)
+            );
+        }
+        // wrong byte count / strip width is rejected, not asserted
+        assert!(
+            PackedWeights::from_packed(vec![0i8; 7].into(), 24, 70, NR).is_err()
+        );
         let pw = PackedWeights::pack(&b, 24, 70);
-        let re =
-            PackedWeights::from_packed(pw.raw_data().to_vec().into(), 24, 70)
-                .unwrap();
-        assert_eq!(re.raw_data(), pw.raw_data());
-        assert_eq!((re.k, re.n, re.pk, re.strips), (pw.k, pw.n, pw.pk, pw.strips));
-        // wrong byte count is rejected, not asserted
-        assert!(PackedWeights::from_packed(vec![0i8; 7].into(), 24, 70).is_err());
+        assert!(PackedWeights::from_packed(
+            pw.raw_data().to_vec().into(),
+            24,
+            70,
+            32
+        )
+        .is_err());
+        assert!(PackedWeights::from_packed(
+            pw.raw_data().to_vec().into(),
+            24,
+            70,
+            7
+        )
+        .is_err());
     }
 
     #[test]
     fn isa_parse_inverts_name() {
-        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Avx512Vnni] {
             assert_eq!(Isa::parse(isa.name()), Some(isa));
         }
         assert_eq!(Isa::parse(" avx2 "), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("avx512vnni"), Some(Isa::Avx512Vnni));
         assert_eq!(Isa::parse("neon"), None);
         assert_eq!(Isa::parse(""), None);
     }
@@ -678,7 +1014,10 @@ mod tests {
     #[test]
     fn isa_order_supports_clamping() {
         assert!(Isa::Scalar < Isa::Sse2 && Isa::Sse2 < Isa::Avx2);
+        assert!(Isa::Avx2 < Isa::Avx512Vnni);
         assert_eq!(Isa::Avx2.min(Isa::Sse2), Isa::Sse2);
+        // Requesting VNNI on a non-VNNI build/machine clamps down.
+        assert_eq!(Isa::Avx512Vnni.min(Isa::Avx2), Isa::Avx2);
         let avail = Isa::available();
         assert!(avail.contains(&Isa::Scalar));
         // detect() clamps to best(), and available() lists every level

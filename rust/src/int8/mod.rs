@@ -8,10 +8,12 @@
 //! [`plan::ExecPlan`] once (topological schedule, dense indices,
 //! liveness-based buffer reuse, weights prepacked for the SIMD
 //! microkernels) and [`engine::QModel`] runs it with cache-blocked
-//! int8 GEMM microkernels ([`kernels`]: SSE2/AVX2 with a bit-exact
-//! scalar fallback, DESIGN.md §8) and `FAT_THREADS`-way parallelism on
-//! the persistent worker pool — batch-sharded across images,
-//! row-sharded inside kernels.
+//! int8 GEMM microkernels ([`kernels`]: SSE2/AVX2/AVX-512-VNNI with a
+//! bit-exact scalar fallback, DESIGN.md §8) and `FAT_THREADS`-way
+//! parallelism on the persistent worker pool — batch-sharded across
+//! images, row-sharded inside kernels. Per-layer loop schedules come
+//! from the [`tune`] autotuner (DESIGN.md §12) and persist in `.fatm`
+//! artifacts.
 //!
 //! Serving traffic should go through [`serve::Int8Engine`] — an
 //! `Arc`-clone handle with pooled per-worker execution state — rather
@@ -30,10 +32,11 @@ pub mod ops;
 pub mod plan;
 pub mod qtensor;
 pub mod serve;
+pub mod tune;
 
 pub use batcher::BatchOptions;
 pub use engine::{ExecState, QLayer, QModel};
-pub use kernels::{Isa, PackedWeights};
+pub use kernels::{Blocking, Isa, PackedWeights};
 pub use plan::ExecPlan;
 pub use qtensor::QTensor;
 pub use serve::{EngineOptions, Int8Engine};

@@ -128,7 +128,7 @@ fn gemm_dispatch(
         Some(pw) => {
             debug_assert_eq!((pw.k, pw.n), (k, n), "packed shape mismatch");
             kernels::gemm_packed_parallel(
-                a, a_zp, pw, &l.w_sums, m, acc, threads, isa,
+                a, a_zp, pw, &l.w_sums, m, acc, threads, isa, l.blocking,
             );
         }
         None => {
@@ -347,6 +347,7 @@ mod tests {
             clamp,
             w_scales: vec![1.0],
             packed: None,
+            blocking: Default::default(),
         }
     }
 

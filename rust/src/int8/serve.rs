@@ -185,6 +185,10 @@ impl Drop for Gauge<'_> {
 pub struct EngineStats {
     /// Configured worker count.
     pub threads: usize,
+    /// Kernel ISA the engine executes with ([`Isa::detect`] name).
+    ///
+    /// [`Isa::detect`]: super::kernels::Isa::detect
+    pub isa: &'static str,
     /// Execution states resting in the pool right now.
     pub pooled_states: usize,
     /// Inference calls currently executing.
@@ -284,6 +288,7 @@ impl Int8Engine {
     pub fn stats(&self) -> EngineStats {
         EngineStats {
             threads: self.inner.threads,
+            isa: super::kernels::Isa::detect().name(),
             pooled_states: self.inner.pool.resting(),
             in_flight: self.inner.in_flight.load(Ordering::Relaxed),
             requests: self.inner.requests.load(Ordering::Relaxed),

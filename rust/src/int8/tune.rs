@@ -1,0 +1,339 @@
+//! GEMM blocking autotuner (DESIGN.md §12).
+//!
+//! The packed-panel GEMM takes its loop schedule from a per-layer
+//! [`Blocking`] instead of the historical compile-time
+//! `KC/NR/MR` constants. This module picks that schedule: for every
+//! distinct `(k, n)` weight shape in a [`QModel`] it times a small set
+//! of candidate blockings on a synthetic activation batch and keeps the
+//! fastest, repacking the weight panel when the winning strip width
+//! differs. Because every candidate is bit-exact (kernels module docs),
+//! tuning can never change results — only wall-clock — so the sweep
+//! needs no accuracy re-validation.
+//!
+//! Two sweeps exist:
+//! - **full** — `fat export` time: all `kc × nr × mr (× grain)`
+//!   candidates. The winner is persisted in the `.fatm` PLAN section
+//!   (v2), so cold starts inherit the table for free.
+//! - **capped** — opt-in first-run fallback for models built in-process
+//!   without an artifact (`FAT_TUNE=capped`): strip width stays at the
+//!   packed default (no repack), fewer candidates, tight wall-clock
+//!   budget.
+//!
+//! Timings use `std::time::Instant` minima over a few repetitions;
+//! candidate order is deterministic and ties keep the earlier
+//! (default-first) candidate, so a machine where nothing wins keeps
+//! [`Blocking::default`].
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::engine::{QModel, QNode};
+use super::kernels::{Blocking, Isa, PackedWeights};
+
+/// Tuning configuration. Construct via [`TuneOptions::full`],
+/// [`TuneOptions::capped`] or [`TuneOptions::from_env`].
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Worker count the schedule is tuned for (the serving thread
+    /// count). Grain candidates only matter when > 1.
+    pub threads: usize,
+    /// ISA the schedule is tuned for.
+    pub isa: Isa,
+    /// Synthetic activation rows per timing run (a mid-size conv
+    /// im2col batch; 14×14 spatial = 196 is typical for the builtins).
+    pub rows: usize,
+    /// Timed repetitions per candidate (the minimum is kept).
+    pub iters: usize,
+    /// Wall-clock budget for the whole model sweep; once spent,
+    /// remaining shapes keep their current blocking.
+    pub budget: Duration,
+    /// Whether to sweep non-default strip widths (forces a repack).
+    pub sweep_nr: bool,
+}
+
+impl TuneOptions {
+    /// The `fat export` sweep: all candidates, generous budget.
+    pub fn full() -> TuneOptions {
+        TuneOptions {
+            threads: crate::util::fat_threads(),
+            isa: Isa::detect(),
+            rows: 196,
+            iters: 3,
+            budget: Duration::from_millis(4000),
+            sweep_nr: true,
+        }
+    }
+
+    /// The first-run fallback: default strip width only (no repack),
+    /// fewer candidates, tight budget.
+    pub fn capped() -> TuneOptions {
+        TuneOptions {
+            threads: crate::util::fat_threads(),
+            isa: Isa::detect(),
+            rows: 64,
+            iters: 2,
+            budget: Duration::from_millis(300),
+            sweep_nr: false,
+        }
+    }
+
+    /// `FAT_TUNE=off|capped|full` (aliases: `0`≡`off`, `on`/`1`≡
+    /// `capped`). `None` means tuning is off — the default, so tests
+    /// and library consumers stay deterministic and fast.
+    pub fn from_env() -> Option<TuneOptions> {
+        match std::env::var("FAT_TUNE").ok().as_deref().map(str::trim) {
+            None | Some("") | Some("off") | Some("0") => None,
+            Some("capped") | Some("on") | Some("1") => {
+                Some(TuneOptions::capped())
+            }
+            Some("full") => Some(TuneOptions::full()),
+            Some(other) => {
+                eprintln!(
+                    "FAT_TUNE: unknown value {other:?} \
+                     (want off|capped|full); tuning disabled"
+                );
+                None
+            }
+        }
+    }
+}
+
+/// The candidate schedules a sweep considers, default first (ties keep
+/// it). `sweep_nr=false` restricts to the packed default strip width so
+/// no repack is needed.
+pub fn candidates(opts: &TuneOptions) -> Vec<Blocking> {
+    let mut out = vec![Blocking::default()];
+    let grains: &[usize] =
+        if opts.threads > 1 { &[1, 4] } else { &[1] };
+    let (kcs, nrs, mrs): (&[usize], &[usize], &[usize]) = if opts.sweep_nr {
+        (&[64, 128, 256], &[32, 64], &[2, 4, 8])
+    } else {
+        (&[128, 256], &[64], &[4, 8])
+    };
+    for &kc in kcs {
+        for &nr in nrs {
+            for &mr in mrs {
+                for &grain in grains {
+                    let bk = Blocking { kc, nr, mr, grain };
+                    debug_assert!(bk.validate().is_ok());
+                    if !out.contains(&bk) {
+                        out.push(bk);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Result of tuning one `(k, n)` GEMM shape.
+#[derive(Debug, Clone, Copy)]
+pub struct TunedChoice {
+    pub blocking: Blocking,
+    /// Best observed time of the default schedule, seconds/run.
+    pub default_secs: f64,
+    /// Best observed time of the winning schedule, seconds/run.
+    pub best_secs: f64,
+}
+
+/// Time the candidate schedules for one `(k, n)` weight matrix on a
+/// synthetic `(rows, k)` activation block and return the fastest.
+/// Stops early (keeping the best so far) once `deadline` passes — the
+/// default candidate is always timed first, so a blown budget can only
+/// ever report the default.
+pub fn tune_gemm(
+    w: &[i8],
+    k: usize,
+    n: usize,
+    opts: &TuneOptions,
+    deadline: Option<Instant>,
+) -> TunedChoice {
+    debug_assert_eq!(w.len(), k * n);
+    let m = opts.rows.max(1);
+    let a = crate::util::prop::i8s(97, m * k);
+    let bsums = crate::int8::gemm::col_sums(w, k, n);
+    let mut out = vec![0i32; m * n];
+    let mut packs: HashMap<usize, PackedWeights> = HashMap::new();
+    let mut best: Option<(Blocking, f64)> = None;
+    let mut default_secs = f64::INFINITY;
+    for (ci, bk) in candidates(opts).into_iter().enumerate() {
+        if ci > 0 && deadline.is_some_and(|d| Instant::now() >= d) {
+            break;
+        }
+        let pw = packs
+            .entry(bk.nr)
+            .or_insert_with(|| PackedWeights::pack_with(w, k, n, bk.nr));
+        let mut best_run = f64::INFINITY;
+        for _ in 0..opts.iters.max(1) + 1 {
+            let t0 = Instant::now();
+            super::kernels::gemm_packed_parallel(
+                &a,
+                -3,
+                pw,
+                &bsums,
+                m,
+                &mut out,
+                opts.threads,
+                opts.isa,
+                bk,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            // first rep is warmup for the cold panel/activation cache
+            best_run = best_run.min(dt);
+        }
+        if ci == 0 {
+            default_secs = best_run;
+        }
+        // strict `<`: ties keep the earlier (default-first) candidate
+        let better = match best {
+            None => true,
+            Some((_, t)) => best_run < t,
+        };
+        if better {
+            best = Some((bk, best_run));
+        }
+    }
+    let (blocking, best_secs) =
+        best.unwrap_or((Blocking::default(), default_secs));
+    TunedChoice { blocking, default_secs, best_secs }
+}
+
+/// Summary of a whole-model sweep, for CLI/log reporting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TuneReport {
+    /// GEMM-bearing layers visited.
+    pub layers: usize,
+    /// Distinct `(k, n)` shapes actually timed.
+    pub shapes: usize,
+    /// Layers whose blocking changed from the default.
+    pub tuned: usize,
+    /// Layers whose panel was repacked to a new strip width.
+    pub repacked: usize,
+    /// Σ over shapes of the default schedule's time, seconds/run.
+    pub default_secs: f64,
+    /// Σ over shapes of the winning schedule's time, seconds/run.
+    pub best_secs: f64,
+    /// Wall-clock spent sweeping.
+    pub wall_secs: f64,
+}
+
+impl TuneReport {
+    /// `default/best` over the timed shapes (1.0 = nothing won).
+    pub fn speedup(&self) -> f64 {
+        if self.best_secs > 0.0 {
+            self.default_secs / self.best_secs
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Tune every packed layer of a model in place: choose a blocking per
+/// distinct `(k, n)` shape (cached — builtin nets repeat shapes),
+/// repack panels whose winning strip width differs, and stamp
+/// `QLayer::blocking`. Results are unchanged by construction; only the
+/// schedule moves.
+pub fn tune_model(qm: &mut QModel, opts: &TuneOptions) -> TuneReport {
+    let t0 = Instant::now();
+    let deadline = t0 + opts.budget;
+    let mut cache: HashMap<(usize, usize), TunedChoice> = HashMap::new();
+    let mut report = TuneReport::default();
+    for p in &mut qm.plan.params {
+        let QNode::Layer(l) = p else { continue };
+        let Some(pw) = &l.packed else { continue };
+        let (k, n) = (pw.k, pw.n);
+        report.layers += 1;
+        let choice = match cache.get(&(k, n)) {
+            Some(c) => *c,
+            None => {
+                let c = tune_gemm(&l.w_q, k, n, opts, Some(deadline));
+                report.shapes += 1;
+                report.default_secs += c.default_secs;
+                report.best_secs += c.best_secs;
+                cache.insert((k, n), c);
+                c
+            }
+        };
+        l.blocking = choice.blocking;
+        if choice.blocking != Blocking::default() {
+            report.tuned += 1;
+        }
+        if choice.blocking.nr != pw.nr() {
+            l.packed =
+                Some(PackedWeights::pack_with(&l.w_q, k, n, choice.blocking.nr));
+            report.repacked += 1;
+        }
+    }
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::int8::gemm::{col_sums, gemm_ref};
+    use crate::util::prop;
+
+    #[test]
+    fn candidates_start_with_default_and_all_validate() {
+        for opts in [TuneOptions::full(), TuneOptions::capped()] {
+            let cands = candidates(&opts);
+            assert_eq!(cands[0], Blocking::default());
+            assert!(cands.len() > 1);
+            for bk in &cands {
+                bk.validate().unwrap();
+                if !opts.sweep_nr {
+                    assert_eq!(bk.nr, Blocking::default().nr);
+                }
+            }
+            // no duplicates — each candidate is timed once
+            for (i, a) in cands.iter().enumerate() {
+                assert!(!cands[i + 1..].contains(a));
+            }
+        }
+    }
+
+    #[test]
+    fn every_candidate_is_bit_exact_vs_reference() {
+        let (m, k, n, zp) = (7, 34, 40, -3);
+        let a = prop::i8s(51, m * k);
+        let w = prop::i8s(52, k * n);
+        let sums = col_sums(&w, k, n);
+        let want = gemm_ref(&a, zp, &w, m, k, n);
+        for bk in candidates(&TuneOptions::full()) {
+            let pw = PackedWeights::pack_with(&w, k, n, bk.nr);
+            for isa in Isa::available() {
+                let mut out = vec![0i32; m * n];
+                crate::int8::kernels::gemm_packed_parallel(
+                    &a, zp, &pw, &sums, m, &mut out, 2, isa, bk,
+                );
+                assert_eq!(out, want, "{} {}", bk.label(), isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tune_gemm_returns_a_valid_choice_and_timings() {
+        let (k, n) = (48, 24);
+        let w = prop::i8s(53, k * n);
+        let mut opts = TuneOptions::capped();
+        opts.rows = 8;
+        opts.iters = 1;
+        let c = tune_gemm(&w, k, n, &opts, None);
+        c.blocking.validate().unwrap();
+        assert_eq!(c.blocking.nr, Blocking::default().nr); // capped: no repack
+        assert!(c.default_secs.is_finite() && c.default_secs > 0.0);
+        assert!(c.best_secs <= c.default_secs);
+    }
+
+    #[test]
+    fn blown_deadline_keeps_the_default() {
+        let (k, n) = (32, 16);
+        let w = prop::i8s(54, k * n);
+        let mut opts = TuneOptions::capped();
+        opts.rows = 4;
+        opts.iters = 1;
+        let c = tune_gemm(&w, k, n, &opts, Some(Instant::now()));
+        assert_eq!(c.blocking, Blocking::default());
+    }
+}

@@ -10,7 +10,7 @@
 //!   fat [pipeline] [--config run.toml] [--model M] [--mode MODE]
 //!                [--calibrator C] [--epochs N] [--max-steps N]
 //!                [--val N] [--dws]
-//!   fat info
+//!   fat info [--fatm PATH]
 //!   fat quantize --model mnas_mini_10 --mode asym_vector [--dws]
 //!                [--calibrator max|p9999|kl] [--val N]
 //!   fat eval-int8 --model mnas_mini_10 --mode sym_vector [--val N]
@@ -20,7 +20,12 @@
 //!                 [--threads N] [--json PATH]
 //!                 [--transport thread|socket|both]
 //!   fat export [--models M1,M2] [--out DIR] [--mode MODE]
-//!                 [--calibrator C] [--calib N] [--isa scalar|sse2|avx2]
+//!                 [--calibrator C] [--calib N]
+//!                 [--isa scalar|sse2|avx2|avx512vnni]
+//!                 [--tune off|capped|full]
+//!   fat perf-gate --baseline F --current F [--max-regress-pct F]
+//!                 [--inject-slowdown-pct F]
+//!   fat perf-report --json F
 //!   fat serve [--models M1,M2|path.fatm|artifact-dir]
 //!                 [--addr 127.0.0.1:8080] [--mode MODE]
 //!                 [--threads N] [--max-batch N] [--max-wait-us N]
@@ -45,7 +50,9 @@ Commands (default: pipeline):
   pipeline                     full FAT pipeline (calibrate→finetune→int8)
     [--config F] [--model M] [--mode MODE] [--calibrator C] [--epochs N]
     [--max-steps N] [--val N] [--lr F] [--dws]
-  info                         list models + FP accuracies
+  info                         list models + FP accuracies; with
+    --fatm PATH, inspect a compiled artifact instead (header, etag,
+    packing ISA, tuned per-layer GEMM blocking table)
   quantize                     calibration-only quantization + accuracy
     --model M --mode MODE --calib N --val N [--dws] [--calibrator C]
   eval-int8                    int8 engine vs fake-quant agreement
@@ -61,7 +68,17 @@ Commands (default: pipeline):
     calibrate + quantize once, write the compiled plan + prepacked
     panels to <out>/<model>.fatm for zero-copy mmap serving cold-start
     [--models M1,M2] [--out DIR (default <artifacts>/compiled)]
-    [--mode MODE] [--calibrator C] [--calib N] [--isa scalar|sse2|avx2]
+    [--mode MODE] [--calibrator C] [--calib N]
+    [--isa scalar|sse2|avx2|avx512vnni]
+    [--tune off|capped|full (default full: autotune GEMM blockings per
+    layer shape and persist the table in the .fatm)]
+  perf-gate                    perf-trajectory regression gate: compare
+    a fresh BENCH_*.json against a committed baseline snapshot, exit 1
+    when any metric regresses past the threshold
+    --baseline F --current F [--max-regress-pct F (default 15)]
+    [--inject-slowdown-pct F (CI negative self-test)]
+  perf-report                  render a BENCH_*.json as a markdown table
+    --json F
   serve                        socket server over the int8 engine:
     HTTP/1.1 + binary frame protocol on one port, multi-model routing,
     admission control, /stats + /models, graceful drain on
@@ -80,6 +97,10 @@ Calibrators: max (default) | p99 | p999 | p9999 | kl
 Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
         FAT_BACKEND=auto|native|artifact (float-stage backend)
         FAT_MMAP=off (read .fatm artifacts onto the heap instead of mmap)
+        FAT_ISA=scalar|sse2|avx2|avx512vnni (cap the kernel ISA; clamped
+        to what the host supports)
+        FAT_TUNE=off|capped|full (autotune GEMM blockings when building
+        models in-process; default off — `fat export` tunes regardless)
 
 Without an artifacts/ directory everything runs on the native FP32
 backend over the builtin model zoo (deterministic untrained weights):
@@ -103,6 +124,10 @@ fn main() -> Result<()> {
     // `fat --epochs 1` (no subcommand) runs the full pipeline.
     match args.subcommand.as_deref().unwrap_or("pipeline") {
         "info" => {
+            if let Some(p) = args.get("fatm") {
+                cmd_info_fatm(p)?;
+                return Ok(());
+            }
             let listed = if artifacts.join("models").exists() {
                 let names = ModelStore::list(&artifacts)?;
                 for name in &names {
@@ -255,6 +280,17 @@ fn main() -> Result<()> {
         }
         "export" => {
             cmd_export(&reg, &artifacts, &args)?;
+        }
+        "perf-gate" => {
+            cmd_perf_gate(&args)?;
+        }
+        "perf-report" => {
+            let path = args.get("json").ok_or_else(|| {
+                anyhow::anyhow!("perf-report: --json PATH is required")
+            })?;
+            let doc = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            print!("{}", fat::util::gate::markdown_table(&doc)?);
         }
         "serve" => {
             cmd_serve(&reg, &artifacts, &args)?;
@@ -518,16 +554,51 @@ fn cmd_export(
     let calib = args.usize_or("calib", 16);
     let isa = match args.get("isa") {
         Some(s) => Isa::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("export: --isa must be scalar|sse2|avx2, got {s}")
+            anyhow::anyhow!(
+                "export: --isa must be scalar|sse2|avx2|avx512vnni, got {s}"
+            )
         })?,
         None => Isa::detect(),
     };
+    // Export tunes by default (the whole point of persisting the table
+    // in the artifact); --tune off skips it, --tune capped bounds it.
+    // When FAT_TUNE is set, build_qmodel already tuned inside export()
+    // per that policy, so don't tune a second time here.
+    let tune_opts = match args.get("tune") {
+        Some("off") => None,
+        Some("capped") => Some(fat::int8::tune::TuneOptions::capped()),
+        Some("full") => Some(fat::int8::tune::TuneOptions::full()),
+        Some(other) => anyhow::bail!(
+            "export: --tune must be off|capped|full, got {other}"
+        ),
+        None if std::env::var("FAT_TUNE").is_ok() => None,
+        None => Some(fat::int8::tune::TuneOptions::full()),
+    }
+    .map(|mut t| {
+        // time the schedule on the ISA the panels target, as far as
+        // this host can actually execute it
+        t.isa = isa.min(Isa::detect());
+        t
+    });
     for name in &models {
         let t0 = std::time::Instant::now();
-        let qm = QuantSession::open(reg.clone(), artifacts, name)?
+        let mut qm = QuantSession::open(reg.clone(), artifacts, name)?
             .calibrate(CalibOpts::images(calib))?
             .identity(&spec)?
             .export()?;
+        if let Some(topts) = &tune_opts {
+            let tr = fat::int8::tune::tune_model(&mut qm, topts);
+            println!(
+                "tuned {name}: {}/{} layers off-default ({} shapes timed, \
+                 {} repacked, est {:.2}x GEMM, {:.2}s)",
+                tr.tuned,
+                tr.layers,
+                tr.shapes,
+                tr.repacked,
+                tr.speedup(),
+                tr.wall_secs
+            );
+        }
         let build_secs = t0.elapsed().as_secs_f64();
         let path = fatm_path(&out, name);
         let t1 = std::time::Instant::now();
@@ -542,6 +613,75 @@ fn cmd_export(
             isa.name(),
             t1.elapsed().as_secs_f64()
         );
+    }
+    Ok(())
+}
+
+/// `fat info --fatm PATH`: inspect a compiled artifact — header facts,
+/// packing ISA and the tuned per-layer GEMM blocking table the loader
+/// will serve with on this host.
+fn cmd_info_fatm(path: &str) -> Result<()> {
+    let (qm, rep) =
+        fat::artifact::load(path, fat::artifact::LoadOptions::default())?;
+    println!(
+        "{path}: {} bytes, {}, {}",
+        rep.bytes,
+        rep.etag,
+        if rep.mapped { "mmapped" } else { "heap" }
+    );
+    println!(
+        "  graph {} ({} nodes), {} int8 param bytes",
+        if qm.graph.name.is_empty() { "<unnamed>" } else { &qm.graph.name },
+        qm.graph.nodes.len(),
+        qm.param_bytes
+    );
+    println!(
+        "  packed for {}{}",
+        rep.file_isa.name(),
+        if rep.repacked {
+            format!(", repacked for {}", rep.host_isa.name())
+        } else {
+            String::new()
+        }
+    );
+    println!("  GEMM blocking table (kc/nr/mr/grain):");
+    for (bk, layers) in qm.blocking_summary() {
+        let tag = if bk == fat::int8::Blocking::default() {
+            "default"
+        } else {
+            "tuned"
+        };
+        println!("    {}: {layers} layer(s) ({tag})", bk.label());
+    }
+    Ok(())
+}
+
+/// `fat perf-gate`: compare a fresh bench log against its committed
+/// baseline and exit non-zero on regression (`util::gate`).
+fn cmd_perf_gate(args: &Args) -> Result<()> {
+    use fat::util::gate::{check, GateOptions};
+
+    let baseline = args.get("baseline").ok_or_else(|| {
+        anyhow::anyhow!("perf-gate: --baseline PATH is required")
+    })?;
+    let current = args.get("current").ok_or_else(|| {
+        anyhow::anyhow!("perf-gate: --current PATH is required")
+    })?;
+    let mut opts = GateOptions::default();
+    if let Some(v) = args.get("max-regress-pct") {
+        opts.max_regress_pct = v.parse()?;
+    }
+    if let Some(v) = args.get("inject-slowdown-pct") {
+        opts.inject_slowdown_pct = v.parse()?;
+    }
+    let b = std::fs::read_to_string(baseline)
+        .map_err(|e| anyhow::anyhow!("reading {baseline}: {e}"))?;
+    let c = std::fs::read_to_string(current)
+        .map_err(|e| anyhow::anyhow!("reading {current}: {e}"))?;
+    let rep = check(&b, &c, &opts)?;
+    print!("{}", rep.render());
+    if !rep.pass() {
+        std::process::exit(1);
     }
     Ok(())
 }

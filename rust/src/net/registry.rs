@@ -11,9 +11,11 @@
 //! Every entry carries a [`ModelMeta`] sidecar: the artifact content
 //! digest (`etag`), where the model came from, when it was (re)loaded
 //! and how many times. `/stats` and `GET /models` serialize it, and
-//! [`sync_dir`] uses the etag as the change detector — a rescan calls
-//! the cheap [`crate::artifact::peek_etag`] (one 64-byte header read)
-//! per file and only pays for a full load when the digest moved.
+//! [`sync_dir`] uses the etag as the change detector — a rescan first
+//! compares the file's `(mtime, len)` stat signature against the one
+//! recorded at load time (no read at all when it matches), then falls
+//! back to the cheap [`crate::artifact::peek_etag`] (one 64-byte header
+//! read), and only pays for a full load when the digest moved.
 //!
 //! [`insert`]: ModelRegistry::insert
 //! [`sync_dir`]: ModelRegistry::sync_dir
@@ -36,6 +38,11 @@ pub struct ModelMeta {
     /// Where the model came from: a `.fatm` path for artifact loads,
     /// `None` for in-process exports.
     pub source: Option<String>,
+    /// `(mtime, len)` of the source file when it was last examined —
+    /// [`ModelRegistry::sync_dir`]'s cheap pre-check: a file whose stat
+    /// signature is unchanged skips even the header-peek read. `None`
+    /// when the source was never statted (in-process exports).
+    pub source_stat: Option<(std::time::SystemTime, u64)>,
     /// Unix seconds when this entry was last (re)inserted.
     pub loaded_at_unix: u64,
     /// How many times this name has been (re)loaded since registration.
@@ -55,8 +62,19 @@ pub struct SyncReport {
     pub loaded: Vec<String>,
     /// `.fatm` files whose etag matched the registered entry.
     pub unchanged: usize,
+    /// Subset of `unchanged` settled by the `(mtime, len)` stat
+    /// pre-check alone — no header read at all.
+    pub stat_skipped: usize,
     /// Names removed because their source file under the dir vanished.
     pub removed: Vec<String>,
+}
+
+/// `(mtime, len)` signature used by the sync pre-check. `None` when the
+/// filesystem can't answer (then every pass falls through to the etag
+/// peek, which stays correct, just slower).
+fn file_stat(p: &Path) -> Option<(std::time::SystemTime, u64)> {
+    let md = std::fs::metadata(p).ok()?;
+    Some((md.modified().ok()?, md.len()))
 }
 
 fn now_unix() -> u64 {
@@ -95,11 +113,40 @@ impl ModelRegistry {
         etag: Option<String>,
         source: Option<String>,
     ) -> Option<Int8Engine> {
+        self.insert_entry(name, engine, etag, source, None)
+    }
+
+    fn insert_entry(
+        &self,
+        name: &str,
+        engine: Int8Engine,
+        etag: Option<String>,
+        source: Option<String>,
+        source_stat: Option<(std::time::SystemTime, u64)>,
+    ) -> Option<Int8Engine> {
         let mut m = self.inner.write().unwrap();
         let loads = m.get(name).map_or(1, |e| e.meta.loads + 1);
-        let meta = ModelMeta { etag, source, loaded_at_unix: now_unix(), loads };
+        let meta = ModelMeta {
+            etag,
+            source,
+            source_stat,
+            loaded_at_unix: now_unix(),
+            loads,
+        };
         m.insert(name.to_string(), Entry { engine, meta })
             .map(|e| e.engine)
+    }
+
+    /// Record the stat signature for every entry loaded from `source`,
+    /// so the next [`Self::sync_dir`] pass can skip even the header
+    /// peek for that file.
+    fn set_source_stat(&self, source: &str, stat: (std::time::SystemTime, u64)) {
+        let mut m = self.inner.write().unwrap();
+        for e in m.values_mut() {
+            if e.meta.source.as_deref() == Some(source) {
+                e.meta.source_stat = Some(stat);
+            }
+        }
     }
 
     /// Resolve a model name to a serving handle (an `Arc` clone).
@@ -149,6 +196,10 @@ impl ModelRegistry {
         opts: EngineOptions,
     ) -> Result<(String, LoadReport)> {
         let path = path.as_ref();
+        // Stat *before* the load: if the file is replaced mid-load, the
+        // stale signature just costs one extra header peek next pass —
+        // the safe direction to be wrong in.
+        let stat = file_stat(path);
         let (qm, report) = artifact::load(path, LoadOptions::default())?;
         let name = if qm.graph.name.is_empty() {
             path.file_stem()
@@ -158,11 +209,12 @@ impl ModelRegistry {
             qm.graph.name.clone()
         };
         let engine = Int8Engine::new(qm, opts);
-        self.insert_with_meta(
+        self.insert_entry(
             &name,
             engine,
             Some(report.etag.clone()),
             Some(path.display().to_string()),
+            stat,
         );
         Ok((name, report))
     }
@@ -195,14 +247,31 @@ impl ModelRegistry {
         for p in &files {
             let source = p.display().to_string();
             live_sources.push(source.clone());
+            let stat = file_stat(p);
+            let current = self.entries().into_iter().find_map(|(_, m)| {
+                (m.source.as_deref() == Some(source.as_str())).then_some(m)
+            });
+            // Cheap pre-check: an unchanged (mtime, len) signature on a
+            // file we already digested means the etag can't have moved —
+            // skip even the header read. A matching signature with no
+            // recorded etag proves nothing, so fall through.
+            if let (Some(st), Some(cur)) = (stat, current.as_ref()) {
+                if cur.etag.is_some() && cur.source_stat == Some(st) {
+                    report.unchanged += 1;
+                    report.stat_skipped += 1;
+                    continue;
+                }
+            }
             let on_disk = artifact::peek_etag(p)
                 .with_context(|| format!("peeking {p:?}"))?;
-            let current = self.entries().into_iter().find_map(|(_, m)| {
-                (m.source.as_deref() == Some(source.as_str()))
-                    .then_some(m.etag)
-            });
-            if current.flatten().as_deref() == Some(on_disk.as_str()) {
+            if current.and_then(|m| m.etag).as_deref() == Some(on_disk.as_str()) {
                 report.unchanged += 1;
+                // Same content under a fresh mtime (touch, re-copy):
+                // remember the new signature so the next pass skips
+                // the peek too.
+                if let Some(st) = stat {
+                    self.set_source_stat(&source, st);
+                }
                 continue;
             }
             let (name, _) = self

@@ -589,12 +589,14 @@ fn stats_json(inner: &Inner) -> String {
         let meta = inner.registry.meta(name).unwrap_or_default();
         let _ = write!(
             s,
-            "\"{}\":{{\"threads\":{},\"pooled_states\":{},\
+            "\"{}\":{{\"threads\":{},\"isa\":\"{}\",\
+             \"pooled_states\":{},\
              \"in_flight\":{},\"requests\":{},\"param_bytes\":{},\
              \"etag\":{},\"loaded_at\":{},\"loads\":{},\
-             \"batcher\":",
+             \"blockings\":[",
             esc(name),
             st.threads,
+            st.isa,
             st.pooled_states,
             st.in_flight,
             st.requests,
@@ -603,6 +605,22 @@ fn stats_json(inner: &Inner) -> String {
             meta.loaded_at_unix,
             meta.loads,
         );
+        // Active GEMM blocking table (autotuner output; one entry per
+        // distinct schedule with its layer count).
+        for (j, (bk, layers)) in
+            engine.model().blocking_summary().iter().enumerate()
+        {
+            if j > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"kc\":{},\"nr\":{},\"mr\":{},\"grain\":{},\
+                 \"layers\":{}}}",
+                bk.kc, bk.nr, bk.mr, bk.grain, layers
+            );
+        }
+        s.push_str("],\"batcher\":");
         match st.batcher {
             Some(b) => {
                 let _ = write!(

@@ -317,6 +317,7 @@ pub fn build_qmodel(
                         clamp: clamp_for(g, &n.id, out_qp),
                         w_scales,
                         packed,
+                        blocking: Default::default(),
                     }),
                 );
             }
@@ -372,12 +373,20 @@ pub fn build_qmodel(
     // parameter indices, liveness-based buffer slots (int8::plan).
     let plan = ExecPlan::compile(g, nodes)?;
 
-    Ok(QModel {
+    let mut qm = QModel {
         graph: g.clone(),
         plan,
         input_qp: qp_of("input")?,
         param_bytes,
-    })
+    };
+    // Opt-in first-run tuning for models built in-process without an
+    // artifact (`FAT_TUNE=capped|full`, capped by a wall-clock budget).
+    // `fat export` tunes explicitly with the full sweep regardless of
+    // the env, then persists the table in the `.fatm` PLAN section.
+    if let Some(opts) = crate::int8::tune::TuneOptions::from_env() {
+        crate::int8::tune::tune_model(&mut qm, &opts);
+    }
+    Ok(qm)
 }
 
 /// H*W of the tensor produced by `id` (input 32x32, halved per stride-2).

@@ -1,0 +1,371 @@
+//! Perf-trajectory regression gate over the machine-readable bench logs
+//! (DESIGN.md §12.5).
+//!
+//! Bench runs emit flat JSON arrays ([`crate::util::bench::BenchLog`]) —
+//! `BENCH_int8.json`, `BENCH_serve.json`, `BENCH_load.json` — and a
+//! snapshot per machine class is committed under `bench/baselines/`.
+//! This module compares a fresh run against that snapshot row by row and
+//! fails when any metric regresses past a threshold (default 15%), so a
+//! PR that slows a kernel, the serving path or artifact cold-start shows
+//! up red in CI instead of silently eroding the trajectory.
+//!
+//! Rows are keyed by their identity fields (`name`, `shape`, `mode`,
+//! `clients`, `threads`, `isa` — whichever are present), and only the
+//! metrics both sides report are compared: `ns_per_iter` and `p95_ms`
+//! (lower is better), `rps` (higher is better). Derived duplicates like
+//! `gops` and `p50`/`p99` are deliberately not gated — `gops` is
+//! `ns_per_iter` restated, and median/p99 are too noisy on shared CI
+//! boxes; p95 is the stability/throughput compromise. A baseline row
+//! with no current counterpart fails the gate (a vanished row is how a
+//! regression hides); current rows with no baseline are informational.
+//!
+//! The comparator is pure string → report so it can be unit-tested
+//! without filesystem or bench runs; `fat perf-gate` is a thin CLI shim.
+//! `inject_slowdown_pct` exists for CI's negative self-test: it degrades
+//! every current metric by that much before comparing, proving the gate
+//! actually fails when perf moves.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Gated metrics: `(field, lower_is_better)`.
+const METRICS: &[(&str, bool)] =
+    &[("ns_per_iter", true), ("rps", false), ("p95_ms", true)];
+
+/// Identity fields, in key order. Absent fields are skipped, so GEMM
+/// rows and serving-latency rows key cleanly from the same list.
+const KEY_FIELDS: &[&str] =
+    &["name", "shape", "mode", "clients", "threads", "isa"];
+
+#[derive(Debug, Clone)]
+pub struct GateOptions {
+    /// Fail when a metric is more than this % worse than baseline.
+    pub max_regress_pct: f64,
+    /// Degrade every current metric by this % before comparing —
+    /// the CI negative self-test knob. 0 = off.
+    pub inject_slowdown_pct: f64,
+}
+
+impl Default for GateOptions {
+    fn default() -> Self {
+        GateOptions { max_regress_pct: 15.0, inject_slowdown_pct: 0.0 }
+    }
+}
+
+/// One metric comparison on one row.
+#[derive(Debug, Clone)]
+pub struct GateCheck {
+    pub key: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// Positive = worse than baseline, negative = improvement.
+    pub regress_pct: f64,
+    pub ok: bool,
+}
+
+/// Outcome of one gate run.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    pub checks: Vec<GateCheck>,
+    /// Baseline row keys with no counterpart in the current run.
+    pub missing: Vec<String>,
+    /// Current rows with no baseline counterpart (not a failure: new
+    /// benches seed their baseline on the next snapshot refresh).
+    pub new_rows: usize,
+}
+
+impl GateReport {
+    pub fn pass(&self) -> bool {
+        self.missing.is_empty() && self.checks.iter().all(|c| c.ok)
+    }
+
+    pub fn failures(&self) -> usize {
+        self.checks.iter().filter(|c| !c.ok).count() + self.missing.len()
+    }
+
+    /// Stable, grep-friendly text: one `GATE ok|FAIL` line per check.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.checks {
+            let tag = if c.ok { "ok  " } else { "FAIL" };
+            out.push_str(&format!(
+                "GATE {tag} {} {}: {:.1} -> {:.1} ({:+.1}%)\n",
+                c.key, c.metric, c.baseline, c.current, c.regress_pct
+            ));
+        }
+        for k in &self.missing {
+            out.push_str(&format!(
+                "GATE FAIL {k}: row missing from current run\n"
+            ));
+        }
+        if self.new_rows > 0 {
+            out.push_str(&format!(
+                "GATE note: {} current row(s) have no baseline yet\n",
+                self.new_rows
+            ));
+        }
+        out.push_str(&format!(
+            "GATE {}: {} checks, {} failures\n",
+            if self.pass() { "PASS" } else { "FAIL" },
+            self.checks.len(),
+            self.failures()
+        ));
+        out
+    }
+}
+
+fn row_key(r: &Json) -> String {
+    let mut parts = Vec::new();
+    for f in KEY_FIELDS {
+        if let Some(v) = r.get(f) {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => format!("{n}"),
+                other => format!("{other:?}"),
+            };
+            parts.push(format!("{f}={s}"));
+        }
+    }
+    parts.join(" ")
+}
+
+/// Parse a BenchLog array into `(key, row)` pairs. Later rows win on a
+/// duplicate key (a bench rerun within one log overwrites itself).
+fn rows(doc: &str, label: &str) -> Result<Vec<(String, Json)>> {
+    let j = Json::parse(doc).with_context(|| format!("parsing {label}"))?;
+    let arr = j.as_arr().with_context(|| format!("{label}: want array"))?;
+    let mut out: Vec<(String, Json)> = Vec::new();
+    for r in arr {
+        let key = row_key(r);
+        match out.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, slot)) => *slot = r.clone(),
+            None => out.push((key, r.clone())),
+        }
+    }
+    Ok(out)
+}
+
+/// Compare a current bench log against its committed baseline.
+/// Both arguments are raw JSON documents (arrays of flat records).
+pub fn check(
+    baseline_doc: &str,
+    current_doc: &str,
+    opts: &GateOptions,
+) -> Result<GateReport> {
+    let base = rows(baseline_doc, "baseline")?;
+    let cur = rows(current_doc, "current")?;
+    let inject = 1.0 + opts.inject_slowdown_pct / 100.0;
+
+    let mut report = GateReport::default();
+    for (key, brow) in &base {
+        let Some((_, crow)) = cur.iter().find(|(k, _)| k == key) else {
+            report.missing.push(key.clone());
+            continue;
+        };
+        for &(metric, lower_better) in METRICS {
+            let (Some(bv), Some(cv)) = (brow.get(metric), crow.get(metric))
+            else {
+                continue;
+            };
+            let (bv, cv) = (bv.as_f64()?, cv.as_f64()?);
+            if bv <= 0.0 {
+                continue; // degenerate baseline; nothing to compare against
+            }
+            let cv = if lower_better { cv * inject } else { cv / inject };
+            let regress_pct = if lower_better {
+                (cv - bv) / bv * 100.0
+            } else {
+                (bv - cv) / bv * 100.0
+            };
+            report.checks.push(GateCheck {
+                key: key.clone(),
+                metric,
+                baseline: bv,
+                current: cv,
+                regress_pct,
+                ok: regress_pct <= opts.max_regress_pct,
+            });
+        }
+    }
+    report.new_rows =
+        cur.iter().filter(|(k, _)| !base.iter().any(|(b, _)| b == k)).count();
+    Ok(report)
+}
+
+/// Render a bench log as a GitHub-flavored markdown table for
+/// `fat perf-report` (EXPERIMENTS.md §Perf rows are pasted from this).
+pub fn markdown_table(doc: &str) -> Result<String> {
+    let all = rows(doc, "bench log")?;
+    const COLS: &[&str] = &[
+        "name", "shape", "mode", "clients", "threads", "isa",
+        "ns_per_iter", "gops", "rps", "p50_ms", "p95_ms", "p99_ms",
+    ];
+    let used: Vec<&str> = COLS
+        .iter()
+        .copied()
+        .filter(|c| all.iter().any(|(_, r)| r.get(c).is_some()))
+        .collect();
+    let mut out = String::new();
+    out.push_str(&format!("| {} |\n", used.join(" | ")));
+    out.push_str(&format!(
+        "|{}\n",
+        used.iter().map(|_| "---|").collect::<String>()
+    ));
+    for (_, r) in &all {
+        let cells: Vec<String> = used
+            .iter()
+            .map(|c| match r.get(c) {
+                Some(Json::Str(s)) => s.clone(),
+                Some(Json::Num(n)) if n.fract() == 0.0 => {
+                    format!("{}", *n as i64)
+                }
+                Some(Json::Num(n)) => format!("{n:.3}"),
+                _ => String::new(),
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", cells.join(" | ")));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::{BenchLog, Percentiles};
+
+    fn sample_log() -> String {
+        let mut log = BenchLog::default();
+        log.add("gemm", "196x288x64", 1, "avx2", 0.001, 9_000_000);
+        log.add("gemm", "196x288x64", 8, "avx2", 0.0002, 9_000_000);
+        log.add_latency(
+            "serve_tiny",
+            "batched",
+            16,
+            8,
+            1000,
+            0.5,
+            Percentiles { p50: 0.001, p95: 0.002, p99: 0.004 },
+        );
+        log.to_json()
+    }
+
+    #[test]
+    fn identical_logs_pass_and_cover_all_metrics() {
+        let doc = sample_log();
+        let rep = check(&doc, &doc, &GateOptions::default()).unwrap();
+        assert!(rep.pass(), "{}", rep.render());
+        // 2 gemm rows × ns_per_iter + 1 latency row × (rps, p95)
+        assert_eq!(rep.checks.len(), 4);
+        assert_eq!(rep.failures(), 0);
+        assert_eq!(rep.new_rows, 0);
+        assert!(rep.render().contains("GATE PASS"));
+    }
+
+    #[test]
+    fn injected_slowdown_past_threshold_fails_every_metric() {
+        let doc = sample_log();
+        let opts = GateOptions {
+            inject_slowdown_pct: 30.0,
+            ..GateOptions::default()
+        };
+        let rep = check(&doc, &doc, &opts).unwrap();
+        assert!(!rep.pass());
+        // every gated metric moved by 30% > 15%, in the right direction
+        assert_eq!(rep.failures(), rep.checks.len());
+        for c in &rep.checks {
+            assert!(
+                (c.regress_pct - 30.0).abs() < 1.0,
+                "{} {}: {:.2}%",
+                c.key,
+                c.metric,
+                c.regress_pct
+            );
+        }
+        assert!(rep.render().contains("GATE FAIL"));
+    }
+
+    #[test]
+    fn slowdown_within_threshold_passes() {
+        let doc = sample_log();
+        let opts = GateOptions {
+            inject_slowdown_pct: 10.0,
+            ..GateOptions::default()
+        };
+        assert!(check(&doc, &doc, &opts).unwrap().pass());
+    }
+
+    #[test]
+    fn real_regression_in_one_row_is_pinned_to_that_row() {
+        let base = r#"[
+          {"name": "gemm", "shape": "a", "threads": 1, "isa": "avx2",
+           "ns_per_iter": 1000, "gops": 9.0},
+          {"name": "gemm", "shape": "b", "threads": 1, "isa": "avx2",
+           "ns_per_iter": 1000, "gops": 9.0}
+        ]"#;
+        let cur = r#"[
+          {"name": "gemm", "shape": "a", "threads": 1, "isa": "avx2",
+           "ns_per_iter": 1300, "gops": 7.0},
+          {"name": "gemm", "shape": "b", "threads": 1, "isa": "avx2",
+           "ns_per_iter": 700, "gops": 12.0}
+        ]"#;
+        let rep = check(base, cur, &GateOptions::default()).unwrap();
+        assert!(!rep.pass());
+        assert_eq!(rep.failures(), 1);
+        let bad = rep.checks.iter().find(|c| !c.ok).unwrap();
+        assert!(bad.key.contains("shape=a"));
+        assert!((bad.regress_pct - 30.0).abs() < 1e-9);
+        // the improved row reports a negative regression
+        let good = rep.checks.iter().find(|c| c.ok).unwrap();
+        assert!(good.regress_pct < 0.0);
+    }
+
+    #[test]
+    fn rps_drop_is_a_regression_even_though_smaller_number() {
+        let base = r#"[{"name": "s", "mode": "batched", "clients": 4,
+           "threads": 2, "rps": 1000.0, "p95_ms": 2.0}]"#;
+        let cur = r#"[{"name": "s", "mode": "batched", "clients": 4,
+           "threads": 2, "rps": 800.0, "p95_ms": 2.0}]"#;
+        let rep = check(base, cur, &GateOptions::default()).unwrap();
+        assert!(!rep.pass());
+        let bad = rep.checks.iter().find(|c| !c.ok).unwrap();
+        assert_eq!(bad.metric, "rps");
+        assert!((bad.regress_pct - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vanished_baseline_row_fails_new_rows_do_not() {
+        let base = r#"[{"name": "gemm", "shape": "a", "threads": 1,
+           "isa": "avx2", "ns_per_iter": 1000}]"#;
+        let cur = r#"[{"name": "gemm", "shape": "b", "threads": 1,
+           "isa": "avx2", "ns_per_iter": 1000}]"#;
+        let rep = check(base, cur, &GateOptions::default()).unwrap();
+        assert!(!rep.pass());
+        assert_eq!(rep.missing.len(), 1);
+        assert!(rep.missing[0].contains("shape=a"));
+        assert_eq!(rep.new_rows, 1);
+        // new rows alone never fail
+        let rep = check("[]", cur, &GateOptions::default()).unwrap();
+        assert!(rep.pass());
+        assert_eq!(rep.new_rows, 1);
+    }
+
+    #[test]
+    fn garbage_docs_are_errors_not_panics() {
+        assert!(check("not json", "[]", &GateOptions::default()).is_err());
+        assert!(check("[]", "{\"k\": 1}", &GateOptions::default()).is_err());
+    }
+
+    #[test]
+    fn markdown_table_renders_only_used_columns() {
+        let t = markdown_table(&sample_log()).unwrap();
+        assert!(t.starts_with("| name |"));
+        assert!(t.contains("ns_per_iter"));
+        assert!(t.contains("| gemm |"));
+        assert!(t.contains("serve_tiny"));
+        // no latency-only column header duplication issues: p95 present,
+        // and gemm rows leave latency cells blank rather than erroring
+        assert!(t.contains("p95_ms"));
+    }
+}

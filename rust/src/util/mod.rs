@@ -1,9 +1,11 @@
 //! In-tree utilities replacing unavailable third-party crates on this
 //! offline build box: a JSON parser, a CLI argument parser, a micro-bench
-//! harness and seeded property-testing helpers.
+//! harness with a perf-regression gate over its logs, and seeded
+//! property-testing helpers.
 
 pub mod bench;
 pub mod cli;
+pub mod gate;
 pub mod json;
 pub mod prop;
 pub mod threads;

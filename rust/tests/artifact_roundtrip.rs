@@ -164,6 +164,95 @@ fn foreign_isa_tag_repacks_to_identical_logits() {
 }
 
 #[test]
+fn tuned_blocking_table_round_trips_and_serves_bit_exact() {
+    use fat::int8::engine::QNode;
+    use fat::int8::{Blocking, PackedWeights};
+
+    let mut qm = build("mnas_mini_10");
+    // Stamp a deterministic non-default schedule per packed layer —
+    // same mechanics as `tune::tune_model`, minus its timing
+    // nondeterminism. The first pick changes the strip width, so the
+    // writer must persist nr=32 panels and the loader must parameterize
+    // panel geometry from the table.
+    let picks = [
+        Blocking { kc: 256, nr: 32, mr: 8, grain: 4 },
+        Blocking { kc: 64, nr: 16, mr: 2, grain: 1 },
+    ];
+    let mut stamped = 0;
+    for p in &mut qm.plan.params {
+        let QNode::Layer(l) = p else { continue };
+        let Some(pw) = &l.packed else { continue };
+        let (k, n) = (pw.k, pw.n);
+        let bk = picks[stamped % picks.len()];
+        stamped += 1;
+        l.blocking = bk;
+        l.packed = Some(PackedWeights::pack_with(&l.w_q, k, n, bk.nr));
+    }
+    assert!(stamped >= 2, "model must have packed layers to stamp");
+
+    let dir = tmp_dir("tuned");
+    let path = dir.join("tuned.fatm");
+    artifact::save(&qm, &path, Isa::detect()).unwrap();
+    let (loaded, rep) =
+        artifact::load(&path, LoadOptions::default()).unwrap();
+    assert!(!rep.repacked, "matching isa tag must keep tuned panels");
+    // The per-layer table survives the round trip exactly…
+    assert_eq!(loaded.blocking_summary(), qm.blocking_summary());
+    // …and the tuned schedules serve bit-exact logits everywhere.
+    for isa in Isa::available() {
+        for threads in [1, 8] {
+            let want = logits(&qm, 0, threads, isa);
+            let got = logits(&loaded, 0, threads, isa);
+            assert_same_logits(
+                &want,
+                &got,
+                &format!("tuned {} t{threads}", isa.name()),
+            );
+        }
+    }
+
+    // A foreign packing-ISA tag resets the schedule to defaults: the
+    // table was chosen on the packing host, so it falls back together
+    // with the repack — results still bit-exact, only the schedule moves.
+    let bytes = artifact::to_bytes(&qm, Isa::Avx2);
+    let (fallback, rep) = artifact::load_from_bytes(
+        bytes,
+        LoadOptions { isa: Some(Isa::Scalar), ..Default::default() },
+    )
+    .unwrap();
+    assert!(rep.repacked);
+    for (bk, _) in fallback.blocking_summary() {
+        assert_eq!(bk, Blocking::default(), "foreign host keeps defaults");
+    }
+    let want = logits(&qm, 1, 2, Isa::Scalar);
+    let got = logits(&fallback, 1, 2, Isa::Scalar);
+    assert_same_logits(&want, &got, "foreign-host fallback");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn plan_v1_artifacts_still_load_with_default_blockings() {
+    use fat::int8::Blocking;
+
+    let qm = build("tiny_cnn");
+    // A genuine v1 byte stream (no per-layer blocking table) must keep
+    // loading in this build, with every layer on the default schedule.
+    let v1 = artifact::to_bytes_versioned(&qm, Isa::detect(), 1);
+    let v2 = artifact::to_bytes(&qm, Isa::detect());
+    assert_ne!(v1, v2, "v2 adds the blocking table to the PLAN bytes");
+    let (loaded, _) =
+        artifact::load_from_bytes(v1, LoadOptions::default()).unwrap();
+    for (bk, _) in loaded.blocking_summary() {
+        assert_eq!(bk, Blocking::default());
+    }
+    for threads in [1, 8] {
+        let want = logits(&qm, 0, threads, Isa::detect());
+        let got = logits(&loaded, 0, threads, Isa::detect());
+        assert_same_logits(&want, &got, &format!("v1 t{threads}"));
+    }
+}
+
+#[test]
 fn tampered_artifact_is_rejected() {
     let qm = build("tiny_cnn");
     let bytes = artifact::to_bytes(&qm, Isa::Scalar);
@@ -255,10 +344,23 @@ fn registry_serves_artifact_with_etag_over_live_server() {
     }
     drop(c);
 
-    // Re-saving the same bytes keeps the etag; sync_dir sees no change.
+    // The file is untouched since load_artifact statted it, so sync_dir
+    // settles it on the (mtime, len) pre-check without a header read.
     let sr = registry.sync_dir(&dir, EngineOptions::threads(2)).unwrap();
     assert_eq!(sr.loaded, Vec::<String>::new());
     assert_eq!(sr.unchanged, 1);
+    assert_eq!(sr.stat_skipped, 1);
+    // Re-saving identical content bumps the mtime: the pre-check misses,
+    // the etag peek says unchanged, and the fresh signature is recorded
+    // so the pass after that skips the peek again.
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    artifact::save(&qm, &path, Isa::detect()).unwrap();
+    let sr = registry.sync_dir(&dir, EngineOptions::threads(2)).unwrap();
+    assert_eq!(sr.loaded, Vec::<String>::new());
+    assert_eq!(sr.unchanged, 1);
+    let sr = registry.sync_dir(&dir, EngineOptions::threads(2)).unwrap();
+    assert_eq!(sr.unchanged, 1);
+    assert_eq!(sr.stat_skipped, 1);
     // A different artifact at the same path is a changed etag → reload;
     // the old name the file used to serve under is retired.
     let other = build("mnas_mini_10");

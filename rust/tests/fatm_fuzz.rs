@@ -9,7 +9,12 @@
 //!    so the structural/semantic validators are the only line of
 //!    defense) and random byte soups — any `Ok`/`Err` outcome is fine,
 //!    the property is "returns", and every accepted mutant must also
-//!    *execute* without panicking.
+//!    *execute* without panicking,
+//! 4. hostile PLAN-v2 blocking tables (digest-fixed): zero/huge/odd
+//!    `kc`, misaligned or oversized `nr`, out-of-range `mr`/`grain`,
+//!    and a valid-but-mismatched strip width — all must be rejected
+//!    by `Blocking::validate`/panel-geometry checks before they can
+//!    parameterize `gemm_packed`'s unchecked inner loops.
 
 use std::collections::BTreeMap;
 
@@ -150,6 +155,78 @@ fn digest_fixed_flips_never_panic_and_accepted_mutants_execute() {
         accepted < bytes.len() - 24,
         "every mutant survived — validators are vacuous"
     );
+}
+
+/// Overwrite every occurrence of the default blocking-table quad
+/// (`kc=128, nr=64, mr=4, grain=1` as 4×u32 LE — 16 bytes distinctive
+/// enough to only match the PLAN v2 table entries) with `quad`,
+/// returning how many entries were patched.
+fn patch_blockings(bytes: &mut [u8], quad: [u32; 4]) -> usize {
+    let mut needle = [0u8; 16];
+    for (j, v) in [128u32, 64, 4, 1].iter().enumerate() {
+        needle[4 * j..4 * j + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    let mut patched = 0;
+    let mut i = 24;
+    while i + 16 <= bytes.len() {
+        if bytes[i..i + 16] == needle {
+            for (j, v) in quad.iter().enumerate() {
+                bytes[i + 4 * j..i + 4 * j + 4]
+                    .copy_from_slice(&v.to_le_bytes());
+            }
+            patched += 1;
+            i += 16;
+        } else {
+            i += 1;
+        }
+    }
+    patched
+}
+
+#[test]
+fn hostile_blocking_tables_are_rejected_before_the_kernels() {
+    let bytes = artifact_bytes();
+    artifact::load_from_bytes(bytes.clone(), LoadOptions::default())
+        .expect("pristine artifact loads");
+    // Sanity: the default quad is where we think it is (conv + dense =
+    // at least two table entries).
+    {
+        let mut probe = bytes.clone();
+        assert!(
+            patch_blockings(&mut probe, [128, 64, 4, 1]) >= 2,
+            "blocking-table needle not found — did the layout move?"
+        );
+    }
+    for quad in [
+        // kc: zero, odd, huge
+        [0u32, 64, 4, 1],
+        [3, 64, 4, 1],
+        [1 << 20, 64, 4, 1],
+        // nr: zero, misaligned, over the packed maximum
+        [128, 0, 4, 1],
+        [128, 8, 4, 1],
+        [128, 63, 4, 1],
+        [128, 128, 4, 1],
+        // mr: zero, over MR_MAX
+        [128, 64, 0, 1],
+        [128, 64, 9, 1],
+        // grain: zero, huge
+        [128, 64, 4, 0],
+        [128, 64, 4, 1 << 20],
+        // everything hostile at once
+        [u32::MAX; 4],
+        // valid in isolation, but the strip width contradicts the
+        // panels (packed at nr=64): the length check must catch it
+        [128, 32, 4, 1],
+    ] {
+        let mut m = bytes.clone();
+        assert!(patch_blockings(&mut m, quad) >= 2, "quad {quad:?}");
+        fix_digest(&mut m);
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "hostile blocking {quad:?} accepted"
+        );
+    }
 }
 
 #[test]

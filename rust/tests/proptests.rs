@@ -2,9 +2,9 @@
 //! replaces proptest on this offline box). Each case is deterministic and
 //! reproducible from its printed index.
 
-use fat::int8::kernels::{self, Isa, PackedWeights};
+use fat::int8::kernels::{self, Blocking, Isa, PackedWeights};
 use fat::int8::qtensor::{to_i8_domain, QTensor};
-use fat::int8::{gemm, im2col};
+use fat::int8::{gemm, im2col, tune};
 use fat::quant::scale::{
     apply_multiplier, quantize_multiplier, QParams,
 };
@@ -150,7 +150,15 @@ fn prop_packed_simd_gemm_matches_reference_on_blocking_edges() {
             for threads in [1usize, 2, 8] {
                 let mut out = vec![0i32; m * n];
                 kernels::gemm_packed_parallel(
-                    &a, zp, &pw, &sums, m, &mut out, threads, isa,
+                    &a,
+                    zp,
+                    &pw,
+                    &sums,
+                    m,
+                    &mut out,
+                    threads,
+                    isa,
+                    Blocking::default(),
                 );
                 assert_eq!(
                     out,
@@ -179,7 +187,15 @@ fn prop_packed_simd_gemm_matches_reference_random_shapes() {
             for threads in [1usize, 2, 8] {
                 let mut out = vec![0i32; m * n];
                 kernels::gemm_packed_parallel(
-                    &a, zp, &pw, &sums, m, &mut out, threads, isa,
+                    &a,
+                    zp,
+                    &pw,
+                    &sums,
+                    m,
+                    &mut out,
+                    threads,
+                    isa,
+                    Blocking::default(),
                 );
                 assert_eq!(
                     out,
@@ -187,6 +203,55 @@ fn prop_packed_simd_gemm_matches_reference_random_shapes() {
                     "case {case}: ({m},{k},{n}) t={threads} isa={}",
                     isa.name()
                 );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tuner_candidate_blockings_match_reference() {
+    // Every schedule the autotuner may pick — the full candidate grid
+    // plus hand-picked extremes — must be bit-exact with the naive
+    // oracle across random shapes × every runtime-detected ISA ×
+    // thread counts {1, 2, 8}. This is the property that makes tuning
+    // safe to run without accuracy re-validation.
+    let mut topts = tune::TuneOptions::full();
+    topts.threads = 2;
+    let mut blockings = tune::candidates(&topts);
+    for bk in [
+        Blocking { kc: 2, nr: 16, mr: 1, grain: 1 },
+        Blocking { kc: 8192, nr: 16, mr: 5, grain: 4096 },
+        Blocking { kc: 6, nr: 48, mr: 7, grain: 3 },
+    ] {
+        bk.validate().unwrap();
+        blockings.push(bk);
+    }
+    prop::for_cases(71, 8, |case| {
+        let m = prop::usize_in(case, 0, 1, 21);
+        let k = prop::usize_in(case, 1, 1, 70);
+        let n = prop::usize_in(case, 2, 1, 80);
+        let zp = prop::usize_in(case, 3, 0, 61) as i32 - 30;
+        let a = prop::i8s(case + 700, m * k);
+        let b = prop::i8s(case + 800, k * n);
+        let sums = gemm::col_sums(&b, k, n);
+        let want = gemm::gemm_ref(&a, zp, &b, m, k, n);
+        for bk in &blockings {
+            let pw = PackedWeights::pack_with(&b, k, n, bk.nr);
+            for isa in Isa::available() {
+                for threads in [1usize, 2, 8] {
+                    let mut out = vec![0i32; m * n];
+                    kernels::gemm_packed_parallel(
+                        &a, zp, &pw, &sums, m, &mut out, threads, isa, *bk,
+                    );
+                    assert_eq!(
+                        out,
+                        want,
+                        "case {case}: ({m},{k},{n}) zp={zp} bk={} \
+                         t={threads} isa={}",
+                        bk.label(),
+                        isa.name()
+                    );
+                }
             }
         }
     });
