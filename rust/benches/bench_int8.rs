@@ -160,6 +160,32 @@ fn main() {
         log.add(&name, &shape, 1, &format!("tuned-{}", isa.name()), tuned, macs);
         report_speedup(&format!("{name}_tuned_vs_default_t1"), simd, tuned);
 
+        // int4 nibble panels (half the weight bytes per strip): same
+        // shape, weights narrowed to the int4 range
+        let b4: Vec<i8> = b.iter().map(|&v| v % 8).collect();
+        let sums4 = gemm::col_sums(&b4, k, n);
+        let pw4 = PackedWeights::pack_bits(&b4, k, n, kernels::NR, 4);
+        let int4 = bench_throughput(
+            &format!("{name}_int4_{}_t1_macs", isa.name()),
+            &opts,
+            macs,
+            || {
+                kernels::gemm_packed(
+                    &a,
+                    -3,
+                    &pw4,
+                    &sums4,
+                    m,
+                    &mut out,
+                    isa,
+                    Blocking::default(),
+                );
+                std::hint::black_box(out[0]);
+            },
+        );
+        log.add(&name, &shape, 1, &format!("int4-{}", isa.name()), int4, macs);
+        report_speedup(&format!("{name}_int4_vs_int8_t1"), simd, int4);
+
         // pooled sharding vs the PR-3 per-call spawn baseline
         for t in [2usize, 4, 8] {
             let spawn = bench_throughput(
@@ -228,6 +254,7 @@ fn main() {
         w_sums: vec![],
         bias_q: vec![0i32; 64],
         requant: vec![fat::quant::scale::quantize_multiplier(0.001); 64],
+        requant_shift: None,
         out_qp: qp,
         clamp: (-127, 127),
         w_scales: vec![1.0],
@@ -260,6 +287,62 @@ fn main() {
         if t == 1 {
             report_speedup("dwconv_simd_vs_scalar_t1", dw_scalar, v);
         }
+    }
+
+    // requant epilogue: gemmlowp fixed-point multiplier vs the pow2
+    // shift-only path, over a typical late-conv accumulator slab
+    {
+        let (pix, cout) = (1024usize, 64usize);
+        let acc: Vec<i32> = prop::i8s(6, pix * cout)
+            .into_iter()
+            .map(|v| v as i32 * 513)
+            .collect();
+        let bias = vec![17i32; cout];
+        let shift: Vec<i32> = (0..cout).map(|c| 5 + (c % 4) as i32).collect();
+        let requant: Vec<(i32, i32)> =
+            shift.iter().map(|&s| (1 << 30, s - 1)).collect();
+        let mut out8 = Vec::new();
+        let n = acc.len();
+        let mul = bench_throughput("requant_mul_1024x64", &opts, n, || {
+            ops::requant_store(
+                &acc,
+                &bias,
+                &requant,
+                qp,
+                (-128, 127),
+                cout,
+                &mut out8,
+            );
+            std::hint::black_box(out8[0]);
+        });
+        log.add("requant_epilogue", "1024x64", 1, "mul", mul, n);
+        let sh = bench_throughput(
+            &format!("requant_shift_{}_1024x64", isa.name()),
+            &opts,
+            n,
+            || {
+                ops::requant_store_shift(
+                    &acc,
+                    &bias,
+                    &shift,
+                    qp,
+                    (-128, 127),
+                    cout,
+                    &mut out8,
+                    isa,
+                );
+                std::hint::black_box(out8[0]);
+            },
+        );
+        log.add(
+            "requant_epilogue",
+            "1024x64",
+            1,
+            &format!("shift-{}", isa.name()),
+            sh,
+            n,
+        );
+        report_speedup("requant_shift_vs_mul", mul, sh);
     }
 
     // whole-model throughput (needs the artifact model dir for the

@@ -53,12 +53,15 @@ pub const SECTIONS: [u32; 3] = [SEC_GRAPH, SEC_PLAN, SEC_PANEL];
 
 /// PLAN-section format version (bumped independently of the magic for
 /// additive changes). v2 appends a per-layer GEMM [`Blocking`] table
-/// (autotuner output, DESIGN.md §12); v1 files are still readable and
-/// get [`Blocking::default`] everywhere.
+/// (autotuner output, DESIGN.md §12); v3 appends the shift-only requant
+/// table (`QLayer::requant_shift`, pow2 exports) and a bits tag on each
+/// packed panel record (int4 nibble panels, DESIGN.md §13). Older files
+/// are still readable: v1/v2 layers get [`Blocking::default`] (v1), no
+/// shift table, and 8-bit panels.
 ///
 /// [`Blocking`]: crate::int8::kernels::Blocking
 /// [`Blocking::default`]: crate::int8::kernels::Blocking::default
-pub const PLAN_VERSION: u32 = 2;
+pub const PLAN_VERSION: u32 = 3;
 /// Oldest PLAN version this build still reads.
 pub const PLAN_VERSION_MIN: u32 = 1;
 

@@ -315,8 +315,16 @@ fn load_mapping(
             if let QNode::Layer(l) = p {
                 l.blocking = Blocking::default();
                 if let Some(pw) = &l.packed {
-                    let (k, n) = (pw.k, pw.n);
-                    l.packed = Some(PackedWeights::pack(&l.w_q, k, n));
+                    let (k, n, bits) = (pw.k, pw.n, pw.bits());
+                    // repack preserves the weight width: an int4 file
+                    // stays int4 on the new host
+                    l.packed = Some(PackedWeights::pack_bits(
+                        &l.w_q,
+                        k,
+                        n,
+                        crate::int8::kernels::NR,
+                        bits,
+                    ));
                     repacked = true;
                 }
             }
@@ -374,6 +382,31 @@ fn check_layer(n: &Node, l: &QLayer) -> Result<()> {
         n.id
     );
     ensure!(!l.w_scales.is_empty(), "{}: empty w_scales", n.id);
+    if let Some(sh) = &l.requant_shift {
+        // The shift table is a *redundant* encoding of the multiplier
+        // pairs: each entry must satisfy
+        // `quantize_multiplier(2^-shift[c]) == (1 << 30, shift[c] - 1)`
+        // (the decomposition of a pow2 into a half-range mantissa).
+        // A file whose shift table disagrees with its pairs would make
+        // the shift-only epilogue diverge from `run_quant_ref` — reject.
+        ensure!(
+            sh.len() == l.requant.len(),
+            "{}: shift table {} entries, requant has {}",
+            n.id,
+            sh.len(),
+            l.requant.len()
+        );
+        for (c, &s) in sh.iter().enumerate() {
+            let want = s.checked_sub(1).map(|e| (1 << 30, e));
+            ensure!(
+                Some(l.requant[c]) == want,
+                "{}: shift table entry {c} (shift {s}) disagrees with \
+                 requant pair {:?} — not a pow2 export",
+                n.id,
+                l.requant[c]
+            );
+        }
+    }
     if let Some(pw) = &l.packed {
         ensure!(
             n.op != Op::DwConv,
@@ -393,6 +426,14 @@ fn check_layer(n: &Node, l: &QLayer) -> Result<()> {
             "{}: col-sum table {} entries, want {cout}",
             n.id,
             l.w_sums.len()
+        );
+        // An int4 panel must agree with its unpacked weights: the
+        // foreign-ISA repack re-nibbles from `w_q`, and `pack_bits`
+        // asserts (panics) on out-of-range lanes — reject here instead.
+        ensure!(
+            pw.bits() == 8 || crate::int8::kernels::fits_int4(&l.w_q),
+            "{}: int4 panel but unpacked weights exceed [-8, 7]",
+            n.id
         );
     } else if n.op != Op::DwConv {
         // unpacked GEMM path also consumes the col sums
@@ -435,13 +476,29 @@ fn get_layer(
     } else {
         Blocking::default()
     };
+    // v3: optional shift-only requant table (pow2 exports). Its
+    // consistency with the multiplier pairs is enforced in
+    // `check_layer` — a hostile shift table must never reach the
+    // shift-only epilogue.
+    let requant_shift = if version >= 3 {
+        match r.u32()? {
+            0 => None,
+            1 => Some(r.vec_i32()?),
+            other => bail!("bad has_shift flag {other}"),
+        }
+    } else {
+        None
+    };
     let packed = match r.u32()? {
         0 => None,
         1 => {
             let k = r.u32()? as usize;
             let n = r.u32()? as usize;
+            // v3: bits tag (8 or 4); `from_packed_bits` rejects other
+            // values and validates the int4 panel byte length.
+            let bits = if version >= 3 { r.u32()? as usize } else { 8 };
             let slab = get_blob(r, map, panel)?;
-            Some(PackedWeights::from_packed(slab, k, n, blocking.nr)?)
+            Some(PackedWeights::from_packed_bits(slab, k, n, blocking.nr, bits)?)
         }
         other => bail!("bad has_packed flag {other}"),
     };
@@ -450,6 +507,7 @@ fn get_layer(
         w_sums,
         bias_q,
         requant,
+        requant_shift,
         out_qp,
         clamp,
         w_scales,

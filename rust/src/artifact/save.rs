@@ -41,7 +41,9 @@ fn put_qp(w: &mut Writer, qp: QParams) {
 /// `isa` (the packed layout itself is ISA-independent today; the tag
 /// drives the loader's repack-on-mismatch rule so the format stays
 /// correct if a future packing ever specializes per ISA). Writes PLAN
-/// v2: each layer record carries its GEMM [`Blocking`] table entry.
+/// v3: each layer record carries its GEMM [`Blocking`] table entry,
+/// optional shift-only requant table, and a bits tag on its packed
+/// panel.
 ///
 /// [`Blocking`]: crate::int8::kernels::Blocking
 pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
@@ -49,9 +51,10 @@ pub fn to_bytes(qm: &QModel, isa: Isa) -> Vec<u8> {
 }
 
 /// [`to_bytes`] at an explicit PLAN version — exists so back-compat
-/// tests can produce genuine v1 bytes. A v1 file cannot represent a
-/// tuned blocking table; writing one is only valid when every layer is
-/// at [`Blocking::default`] (debug-asserted in [`put_layer`]).
+/// tests can produce genuine v1/v2 bytes. Older versions cannot
+/// represent the newer features: v1 requires every layer to be at
+/// [`Blocking::default`], and v1/v2 require no shift-only requant table
+/// and 8-bit panels everywhere (debug-asserted in [`put_layer`]).
 ///
 /// [`Blocking::default`]: crate::int8::kernels::Blocking::default
 pub fn to_bytes_versioned(qm: &QModel, isa: Isa, version: u32) -> Vec<u8> {
@@ -180,6 +183,22 @@ fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer, version: u32) {
             "PLAN v1 cannot represent a tuned blocking table"
         );
     }
+    if version >= 3 {
+        // Shift-only requant table (pow2 exports) — present-flag, then
+        // the per-channel shifts.
+        match &l.requant_shift {
+            Some(sh) => {
+                w.u32(1);
+                w.vec_i32(sh);
+            }
+            None => w.u32(0),
+        }
+    } else {
+        debug_assert!(
+            l.requant_shift.is_none(),
+            "PLAN v{version} cannot represent a shift-only requant table"
+        );
+    }
     match &l.packed {
         Some(pw) => {
             debug_assert_eq!(
@@ -190,6 +209,15 @@ fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer, version: u32) {
             w.u32(1);
             w.u32(pw.k as u32);
             w.u32(pw.n as u32);
+            if version >= 3 {
+                w.u32(pw.bits() as u32);
+            } else {
+                debug_assert_eq!(
+                    pw.bits(),
+                    8,
+                    "PLAN v{version} cannot represent an int4 panel"
+                );
+            }
             let (poff, plen) = push_blob(panel, pw.raw_data());
             w.u64(poff);
             w.u64(plen);

@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::model::store::SitesJson;
 use crate::model::{GraphDef, Op};
 use crate::quant::calibrate::CalibStats;
-use crate::quant::export::{self, QuantMode, Trained};
+use crate::quant::export::{self, QuantKnobs, QuantMode, Trained};
 use crate::tensor::Tensor;
 
 use super::program::FpProgram;
@@ -32,6 +32,19 @@ pub fn fq_weights(
     mode: QuantMode,
     tr: &Trained,
 ) -> Result<BTreeMap<String, Tensor>> {
+    fq_weights_with(g, weights, mode, tr, QuantKnobs::default())
+}
+
+/// [`fq_weights`] under explicit export knobs: pow2 snaps the weight
+/// scales and `w_bits = 4` quantizes on the `[-7, 7]` grid, exactly as
+/// [`export::quantize_weights_with`] will at export time.
+pub fn fq_weights_with(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    mode: QuantMode,
+    tr: &Trained,
+    knobs: QuantKnobs,
+) -> Result<BTreeMap<String, Tensor>> {
     let mut out = weights.clone();
     let ones = vec![1.0f32];
     for n in g.conv_like() {
@@ -42,7 +55,8 @@ pub fn fq_weights(
         let cout = n.out_channels();
         let vector = mode.vector() && n.op != Op::Dense;
         let wa = tr.w_a.get(&n.id).unwrap_or(&ones);
-        let (w_q, scales) = export::quantize_weights(w, cout, vector, wa)?;
+        let (w_q, scales) =
+            export::quantize_weights_with(w, cout, vector, wa, knobs)?;
         let deq: Vec<f32> = w_q
             .iter()
             .enumerate()
@@ -62,8 +76,32 @@ pub fn quantized_program(
     mode: QuantMode,
     tr: &Trained,
 ) -> Result<FpProgram> {
-    let site_qp = export::site_qparams(sites, stats, mode, tr);
-    let fqw = fq_weights(g, weights, mode, tr)?;
+    quantized_program_with(
+        g,
+        weights,
+        sites,
+        stats,
+        mode,
+        tr,
+        QuantKnobs::default(),
+    )
+}
+
+/// [`quantized_program`] under explicit export knobs, sharing
+/// [`export::site_qparams_with`] / [`export::quantize_weights_with`]
+/// with the exporter — so the fake-quant forward models the deployed
+/// pow2/int4 numerics bit-for-bit on the float side.
+pub fn quantized_program_with(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    sites: &SitesJson,
+    stats: &CalibStats,
+    mode: QuantMode,
+    tr: &Trained,
+    knobs: QuantKnobs,
+) -> Result<FpProgram> {
+    let site_qp = export::site_qparams_with(sites, stats, mode, tr, knobs);
+    let fqw = fq_weights_with(g, weights, mode, tr, knobs)?;
     FpProgram::compile(g, &fqw, sites, Some(&site_qp))
 }
 
@@ -98,6 +136,61 @@ mod tests {
                 fq[&bkey].as_f32().unwrap()
             );
         }
+    }
+
+    #[test]
+    fn fq_weights_with_knobs_follow_the_export_grid() {
+        let (g, _, w) = builtin::load("tiny_cnn").unwrap();
+        let tr = Trained::identity(&g, QuantMode::SymScalar, 4);
+
+        // int4: per-tensor scale → at most 15 distinct dequantized
+        // levels per layer (q ∈ [-7, 7])
+        let fq4 = fq_weights_with(
+            &g,
+            &w,
+            QuantMode::SymScalar,
+            &tr,
+            QuantKnobs { pow2: false, w_bits: 4 },
+        )
+        .unwrap();
+        for n in g.conv_like() {
+            let q = fq4[&format!("{}.w", n.id)].as_f32().unwrap();
+            let mut vals: Vec<u32> = q.iter().map(|v| v.to_bits()).collect();
+            vals.sort_unstable();
+            vals.dedup();
+            assert!(
+                vals.len() <= 15,
+                "{}: {} distinct int4 levels",
+                n.id,
+                vals.len()
+            );
+        }
+
+        // pow2 snaps the scale, so the dequantized grid moves vs default
+        let fq8 = fq_weights(&g, &w, QuantMode::SymScalar, &tr).unwrap();
+        let fqp = fq_weights_with(
+            &g,
+            &w,
+            QuantMode::SymScalar,
+            &tr,
+            QuantKnobs { pow2: true, w_bits: 8 },
+        )
+        .unwrap();
+        let moved = g.conv_like().any(|n| {
+            let key = format!("{}.w", n.id);
+            fq8[&key].as_f32().unwrap() != fqp[&key].as_f32().unwrap()
+        });
+        assert!(moved, "pow2 snapping changed no weight grid");
+
+        // bad knobs propagate as an error
+        assert!(fq_weights_with(
+            &g,
+            &w,
+            QuantMode::SymScalar,
+            &tr,
+            QuantKnobs { pow2: false, w_bits: 3 },
+        )
+        .is_err());
     }
 
     #[test]

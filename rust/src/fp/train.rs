@@ -33,8 +33,8 @@ use crate::coordinator::finetune::{StepOut, TrainStep};
 use crate::model::store::SitesJson;
 use crate::model::{GraphDef, Op};
 use crate::quant::calibrate::CalibStats;
-use crate::quant::export::QuantMode;
-use crate::quant::scale::QParams;
+use crate::quant::export::{QuantKnobs, QuantMode};
+use crate::quant::scale::{snap_pow2, QParams};
 use crate::quant::thresholds as th;
 use crate::tensor::Tensor;
 
@@ -145,10 +145,16 @@ impl Acc {
     }
 }
 
-/// The native threshold trainer: one per `(model, mode, stats)` triple.
+/// The native threshold trainer: one per `(model, mode, knobs, stats)`
+/// tuple.
 pub struct Trainer {
     prog: FpProgram,
     mode: QuantMode,
+    /// Export-time knobs the student mirrors (pow2 scales, int4 weight
+    /// grid). See [`Trainer::new_with`].
+    knobs: QuantKnobs,
+    /// Weight quantization ceiling as f32: 127 (int8) or 7 (int4).
+    w_qmax: f32,
     site_meta: Vec<SiteMeta>,
     /// Per tape step: weight-trainable info for conv-like steps.
     winfo: Vec<Option<WInfo>>,
@@ -168,6 +174,36 @@ impl Trainer {
         mode: QuantMode,
         threads: usize,
     ) -> Result<Trainer> {
+        Trainer::new_with(
+            g,
+            weights,
+            sites,
+            stats,
+            mode,
+            QuantKnobs::default(),
+            threads,
+        )
+    }
+
+    /// [`Trainer::new`] under explicit export knobs. With `knobs.pow2`
+    /// the student's forward snaps every scale to a power of two (the
+    /// same [`snap_pow2`] the exporter applies), so the thresholds
+    /// fine-tune against the deployed shift-only numerics; the snap is
+    /// a **straight-through rounding in the log2 domain** — the
+    /// analytic backward keeps the unsnapped threshold as divisor
+    /// (∂snap(s)/∂s ≈ 1 between snap points, exactly the TQT treatment
+    /// of the log2 round, DESIGN.md §13). `knobs.w_bits = 4` puts the
+    /// weight student on the `[-7, 7]` grid with scale `t/7`.
+    pub fn new_with(
+        g: &GraphDef,
+        weights: &BTreeMap<String, Tensor>,
+        sites: &SitesJson,
+        stats: &CalibStats,
+        mode: QuantMode,
+        knobs: QuantKnobs,
+        threads: usize,
+    ) -> Result<Trainer> {
+        knobs.validate()?;
         let prog = FpProgram::compile(g, weights, sites, None)?;
         anyhow::ensure!(
             stats.site_minmax.len() == sites.sites.len(),
@@ -225,6 +261,8 @@ impl Trainer {
         Ok(Trainer {
             prog,
             mode,
+            knobs,
+            w_qmax: knobs.w_qmax() as f32,
             site_meta,
             winfo,
             tape,
@@ -265,12 +303,23 @@ impl Trainer {
             .iter()
             .enumerate()
             .map(|(i, sm)| {
+                // Under pow2 knobs the *forward* qp snaps to the scale
+                // grid the exporter ships; the backward keeps the
+                // unsnapped threshold/width (straight-through rounding
+                // in the log2 domain — see `Trainer::new_with`).
+                let snap = |qp: QParams| {
+                    if self.knobs.pow2 {
+                        qp.snap_pow2()
+                    } else {
+                        qp
+                    }
+                };
                 if self.mode.asym() {
                     let (left, width) = th::adjust_asym(
                         act_at[i], act_ar[i], sm.t_l, sm.t_r, sm.unsigned,
                     );
                     SiteQ::Asym {
-                        qp: QParams::asymmetric(left, width),
+                        qp: snap(QParams::asymmetric(left, width)),
                         width: width.max(1e-8),
                         r: sm.t_r - sm.t_l,
                     }
@@ -282,7 +331,7 @@ impl Trainer {
                     } else {
                         QParams::symmetric_signed(t)
                     };
-                    SiteQ::Sym { qp, t: t.max(1e-12), t_cal }
+                    SiteQ::Sym { qp: snap(qp), t: t.max(1e-12), t_cal }
                 }
             })
             .collect()
@@ -318,10 +367,24 @@ impl Trainer {
                 wa.len()
             );
             let n = wa.len();
+            let qmax = self.w_qmax;
             let tw: Vec<f32> = (0..n)
                 .map(|c| th::adjust_sym(wa[c], wi.t_cal[c]).max(1e-12))
                 .collect();
-            let sw: Vec<f32> = tw.iter().map(|t| t / 127.0).collect();
+            // The snapped scale drives the forward (and the backward's
+            // clip test, which must agree with the forward); `tw` stays
+            // unsnapped as the STE divisor.
+            let sw: Vec<f32> = tw
+                .iter()
+                .map(|t| {
+                    let s = t / qmax;
+                    if self.knobs.pow2 {
+                        snap_pow2(s)
+                    } else {
+                        s
+                    }
+                })
+                .collect();
             let what: Vec<f32> = l
                 .w
                 .iter()
@@ -329,7 +392,7 @@ impl Trainer {
                 .map(|(j, &wv)| {
                     let si = if n == 1 { 0 } else { j % l.cout };
                     let s = sw[si];
-                    let q = (wv / s).round_ties_even().clamp(-127.0, 127.0);
+                    let q = (wv / s).round_ties_even().clamp(-qmax, qmax);
                     q * s
                 })
                 .collect();
@@ -454,7 +517,7 @@ impl Trainer {
                 let what = wqi.layer.w[j];
                 let raw = l.w[j];
                 let q = (raw / sw).round_ties_even();
-                let dt = if !(-127.0..=127.0).contains(&q) {
+                let dt = if !(-self.w_qmax..=self.w_qmax).contains(&q) {
                     what / tw
                 } else {
                     (what - raw) / tw
@@ -1177,6 +1240,68 @@ mod tests {
             }
             assert!(any_nonzero, "{mode:?}: all gradients are zero");
         }
+    }
+
+    #[test]
+    fn trainer_with_knobs_trains_the_deployed_numerics() {
+        let (g, sites, w) = builtin::load("tiny_cnn").unwrap();
+        let prog = FpProgram::compile(&g, &w, &sites, None).unwrap();
+        let stats = crate::fp::calibrate::calib_stats(&prog, 25, 2).unwrap();
+        let (x, _) = crate::data::loader::batch(
+            crate::data::Split::Train,
+            &[0, 1, 2],
+        );
+        let base =
+            Trainer::new(&g, &w, &sites, &stats, QuantMode::SymVector, 2)
+                .unwrap();
+        let tr = base.init_trainables();
+        let (loss0, _) = base.loss_and_grads(&tr, &x).unwrap();
+        for knobs in [
+            QuantKnobs { pow2: true, w_bits: 8 },
+            QuantKnobs { pow2: false, w_bits: 4 },
+            QuantKnobs { pow2: true, w_bits: 4 },
+        ] {
+            let t = Trainer::new_with(
+                &g,
+                &w,
+                &sites,
+                &stats,
+                QuantMode::SymVector,
+                knobs,
+                2,
+            )
+            .unwrap();
+            // knobs leave the trainable grammar unchanged
+            assert_eq!(
+                t.init_trainables().keys().collect::<Vec<_>>(),
+                tr.keys().collect::<Vec<_>>(),
+                "{knobs:?}"
+            );
+            let (loss, grads) = t.loss_and_grads(&tr, &x).unwrap();
+            assert!(loss.is_finite() && loss > 0.0, "{knobs:?}: {loss}");
+            // the student actually runs the knob'd numerics: the coarser
+            // / snapped grid shows up in the objective
+            assert_ne!(loss, loss0, "{knobs:?}: same loss as default");
+            let mut any_nonzero = false;
+            for (k, gv) in &grads {
+                assert!(
+                    gv.iter().all(|v| v.is_finite()),
+                    "{knobs:?} {k}: non-finite grad"
+                );
+                any_nonzero |= gv.iter().any(|&v| v != 0.0);
+            }
+            assert!(any_nonzero, "{knobs:?}: all gradients are zero");
+        }
+        assert!(Trainer::new_with(
+            &g,
+            &w,
+            &sites,
+            &stats,
+            QuantMode::SymVector,
+            QuantKnobs { pow2: false, w_bits: 5 },
+            2,
+        )
+        .is_err());
     }
 
     #[test]

@@ -33,6 +33,15 @@ pub struct QLayer {
     pub bias_q: Vec<i32>,
     /// Per output channel (m0, shift): s_in * s_w[c] / s_out.
     pub requant: Vec<(i32, i32)>,
+    /// Per-channel **rounding-shift** requant table — present iff the
+    /// exporter ran in power-of-two mode and every multiplier collapsed
+    /// to an exact `2^-shift[c]` (`quant::scale::shift_table`). When
+    /// set, the kernels take the shift-only epilogue
+    /// (`ops::requant_store_shift`) and `requant` is carried only for
+    /// diagnostics/serialization cross-checks. Note the two epilogues
+    /// round differently (the multiplier path rounds twice), so this is
+    /// a distinct numeric mode, not a fast path.
+    pub requant_shift: Option<Vec<i32>>,
     pub out_qp: QParams,
     pub clamp: (i32, i32),
     /// Per-channel weight scales (len 1 in scalar mode).
@@ -186,6 +195,29 @@ impl QModel {
             }
         }
         out
+    }
+
+    /// Per-layer census of the requant epilogue and packed-weight width:
+    /// `(shift_layers, mul_layers, int4_layers, int8_layers)` —
+    /// surfaced by `/stats` and `fat info --fatm` so a pow2/int4 export
+    /// is visible end to end. Unpacked layers (depthwise) count as
+    /// int8: their weights are stored at a byte per lane.
+    pub fn epilogue_summary(&self) -> (usize, usize, usize, usize) {
+        let (mut sh, mut mu, mut b4, mut b8) = (0usize, 0usize, 0usize, 0usize);
+        for p in &self.plan.params {
+            if let QNode::Layer(l) = p {
+                if l.requant_shift.is_some() {
+                    sh += 1;
+                } else {
+                    mu += 1;
+                }
+                match l.packed.as_ref().map(|pw| pw.bits()) {
+                    Some(4) => b4 += 1,
+                    _ => b8 += 1,
+                }
+            }
+        }
+        (sh, mu, b4, b8)
     }
 
     /// Run a float NHWC batch through the integer engine; returns f32

@@ -30,6 +30,25 @@
 //! load inside a pair yields 8 interleaved columns — the exact operand
 //! layout of a widening multiply-add, with no shuffles on the hot path.
 //!
+//! ## int4 panels (`bits = 4`)
+//!
+//! When every weight fits `[-8, 7]` the panel can be packed at four
+//! bits per weight ([`PackedWeights::pack_bits`]): one byte per
+//! (pair, column) — row `2p` in the low nibble, row `2p+1` in the high
+//! nibble — so a strip shrinks to `pk/2 × nr` bytes, **half** the int8
+//! footprint, and one `kc`-panel holds twice the k-depth in the same
+//! L1 bytes:
+//!
+//! ```text
+//! strip ns, pair p:  lo(b[2p][n0]) | hi(b[2p+1][n0]), …   (nr bytes)
+//! ```
+//!
+//! The micro-tiles widen nibbles in-register (mask, `xor 8`, `sub 8` —
+//! a branch-free 4-bit sign extension) and interleave lo/hi back into
+//! the exact pair-interleaved i8 stream the `pmaddwd` paths consume,
+//! so the multiply-accumulate structure (and therefore bit-exactness
+//! vs `gemm_ref`) is shared with the int8 path, not re-argued.
+//!
 //! ## Bit-exactness
 //!
 //! Products of i8 (and of `(x - zp) · w` in the depthwise tap, with
@@ -183,8 +202,11 @@ impl Isa {
     /// the first plan is built or executed.
     /// `FAT_ISA=scalar|sse2|avx2|avx512vnni` pins a lower level for A/B
     /// runs; asking above the hardware clamps down to the best
-    /// supported level. Tests sweep explicitly via [`Isa::available`]
-    /// instead of mutating the environment.
+    /// supported level. Any other value aborts with an error naming the
+    /// accepted set — an explicit pin the user typo'd must not silently
+    /// turn into "fastest", that would invert A/B runs. Tests sweep
+    /// explicitly via [`Isa::available`] instead of mutating the
+    /// environment.
     pub fn detect() -> Isa {
         static CACHE: OnceLock<Isa> = OnceLock::new();
         *CACHE.get_or_init(|| {
@@ -192,18 +214,10 @@ impl Isa {
             let req = match std::env::var("FAT_ISA").ok().as_deref() {
                 Some(other) => match Isa::parse(other) {
                     Some(r) => Some(r),
-                    None => {
-                        // An explicit pin the user typo'd must not
-                        // silently turn into "fastest": that would
-                        // invert A/B runs.
-                        eprintln!(
-                            "FAT_ISA: unknown value {other:?} \
-                             (want scalar|sse2|avx2|avx512vnni); \
-                             using detected {}",
-                            best.name()
-                        );
-                        None
-                    }
+                    None => panic!(
+                        "FAT_ISA: unknown value {other:?} \
+                         (accepted: scalar, sse2, avx2, avx512vnni)"
+                    ),
                 },
                 None => None,
             };
@@ -242,30 +256,87 @@ pub struct PackedWeights {
     strips: usize,
     /// Strip width the panel was packed with (a [`Blocking::nr`]).
     nr: usize,
+    /// Bits per packed weight: 8 (one byte per lane) or 4 (two weights
+    /// per byte, nibble-packed — module docs).
+    bits: usize,
+}
+
+/// Whether every weight fits the int4 nibble range `[-8, 7]` — the
+/// precondition for [`PackedWeights::pack_bits`] at `bits = 4`. True
+/// by construction for models quantized with 4-bit weights
+/// (`|q| ≤ 7`); checked by the tuner before it tries an int4 repack of
+/// an 8-bit table.
+pub fn fits_int4(b: &[i8]) -> bool {
+    b.iter().all(|&v| (-8..=7).contains(&(v as i32)))
 }
 
 impl PackedWeights {
-    /// Pack with the default strip width ([`NR`]).
+    /// Pack with the default strip width ([`NR`]) at 8 bits.
     pub fn pack(b: &[i8], k: usize, n: usize) -> PackedWeights {
-        PackedWeights::pack_with(b, k, n, NR)
+        PackedWeights::pack_bits(b, k, n, NR, 8)
     }
 
-    /// Pack a row-major `(k, n)` i8 matrix into `nrw`-column strips.
-    /// Padding lanes (columns ≥ n, the row `k` of an odd-`k` pair) are
-    /// zero, so they contribute nothing to any accumulator.
+    /// Pack into `nrw`-column strips at 8 bits.
     pub fn pack_with(
         b: &[i8],
         k: usize,
         n: usize,
         nrw: usize,
     ) -> PackedWeights {
+        PackedWeights::pack_bits(b, k, n, nrw, 8)
+    }
+
+    /// Pack a row-major `(k, n)` i8 matrix into `nrw`-column strips at
+    /// `bits` ∈ {8, 4} per weight. Padding lanes (columns ≥ n, the row
+    /// `k` of an odd-`k` pair) are zero, so they contribute nothing to
+    /// any accumulator. `bits = 4` requires every value in `[-8, 7]`
+    /// ([`fits_int4`]) and stores row `2p` in the low nibble, row
+    /// `2p+1` in the high nibble of one byte per column.
+    pub fn pack_bits(
+        b: &[i8],
+        k: usize,
+        n: usize,
+        nrw: usize,
+        bits: usize,
+    ) -> PackedWeights {
         assert_eq!(b.len(), k * n, "pack: bad weight shape ({k},{n})");
         assert!(
             nrw >= 16 && nrw <= NR && nrw % 16 == 0,
             "pack: bad strip width {nrw}"
         );
+        assert!(bits == 8 || bits == 4, "pack: bad bits {bits}");
         let strips = n.div_ceil(nrw);
         let pk = k + (k & 1);
+        if bits == 4 {
+            assert!(fits_int4(b), "pack: int4 weight out of [-8, 7]");
+            let mut data = vec![0i8; strips * (pk / 2) * nrw];
+            for ns in 0..strips {
+                let n0 = ns * nrw;
+                let nc = nrw.min(n - n0);
+                let sbase = ns * (pk / 2) * nrw;
+                for ki in 0..k {
+                    let hi = ki & 1;
+                    let pair = ki / 2;
+                    let src = &b[ki * n + n0..ki * n + n0 + nc];
+                    for (j, &v) in src.iter().enumerate() {
+                        let cell = &mut data[sbase + pair * nrw + j];
+                        let nib = v as u8 & 0x0F;
+                        let cur = *cell as u8;
+                        *cell = (cur | if hi == 1 { nib << 4 } else { nib })
+                            as i8;
+                    }
+                }
+            }
+            return PackedWeights {
+                data: data.into(),
+                k,
+                n,
+                pk,
+                strips,
+                nr: nrw,
+                bits,
+            };
+        }
         let mut data = vec![0i8; strips * pk * nrw];
         for ns in 0..strips {
             let n0 = ns * nrw;
@@ -280,38 +351,57 @@ impl PackedWeights {
                 }
             }
         }
-        PackedWeights { data: data.into(), k, n, pk, strips, nr: nrw }
+        PackedWeights { data: data.into(), k, n, pk, strips, nr: nrw, bits }
     }
 
-    /// Rehydrate from already-packed panel bytes (the `.fatm` zero-copy
-    /// load path). `data` must be exactly the output of
-    /// [`PackedWeights::pack_with`] for a `(k, n)` matrix at strip
-    /// width `nrw`; only the geometry is checkable here — byte-level
-    /// validity is the artifact digest's job.
+    /// Rehydrate from already-packed 8-bit panel bytes (back-compat
+    /// entry point; see [`PackedWeights::from_packed_bits`]).
     pub fn from_packed(
         data: I8Slab,
         k: usize,
         n: usize,
         nrw: usize,
     ) -> anyhow::Result<PackedWeights> {
+        PackedWeights::from_packed_bits(data, k, n, nrw, 8)
+    }
+
+    /// Rehydrate from already-packed panel bytes (the `.fatm` zero-copy
+    /// load path). `data` must be exactly the output of
+    /// [`PackedWeights::pack_bits`] for a `(k, n)` matrix at strip
+    /// width `nrw` and `bits` per weight; only the geometry is
+    /// checkable here — byte-level validity is the artifact digest's
+    /// job.
+    pub fn from_packed_bits(
+        data: I8Slab,
+        k: usize,
+        n: usize,
+        nrw: usize,
+        bits: usize,
+    ) -> anyhow::Result<PackedWeights> {
         anyhow::ensure!(
             nrw >= 16 && nrw <= NR && nrw % 16 == 0,
             "packed panel for ({k},{n}): bad strip width {nrw}"
         );
+        anyhow::ensure!(
+            bits == 8 || bits == 4,
+            "packed panel for ({k},{n}): bad bits {bits} (want 8 or 4)"
+        );
         let strips = n.div_ceil(nrw);
         let pk = k + (k & 1);
+        let rows = if bits == 4 { pk / 2 } else { pk };
         let want = strips
-            .checked_mul(pk)
+            .checked_mul(rows)
             .and_then(|v| v.checked_mul(nrw))
             .ok_or_else(|| {
                 anyhow::anyhow!("packed shape ({k},{n}) overflows")
             })?;
         anyhow::ensure!(
             data.len() == want,
-            "packed panel for ({k},{n}) nr={nrw}: {} bytes, want {want}",
+            "packed panel for ({k},{n}) nr={nrw} bits={bits}: {} bytes, \
+             want {want}",
             data.len()
         );
-        Ok(PackedWeights { data, k, n, pk, strips, nr: nrw })
+        Ok(PackedWeights { data, k, n, pk, strips, nr: nrw, bits })
     }
 
     /// Packed size in bytes (padding included) — for size reports.
@@ -334,9 +424,25 @@ impl PackedWeights {
         self.nr
     }
 
+    /// Bits per packed weight (8 or 4).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Bytes per strip (layout-dependent: int4 strips are half size).
+    #[inline]
+    fn strip_bytes(&self) -> usize {
+        if self.bits == 4 {
+            self.pk / 2 * self.nr
+        } else {
+            self.pk * self.nr
+        }
+    }
+
     #[inline]
     fn strip(&self, ns: usize) -> &[i8] {
-        &self.data[ns * self.pk * self.nr..(ns + 1) * self.pk * self.nr]
+        let sb = self.strip_bytes();
+        &self.data[ns * sb..(ns + 1) * sb]
     }
 }
 
@@ -383,22 +489,50 @@ pub fn gemm_packed(
             while m0 < m {
                 let mr = mr_b.min(m - m0);
                 let mut acc = [[0i32; NR]; MR_MAX];
-                match isa {
-                    #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
-                    Isa::Avx512Vnni => unsafe {
-                        microtile_avx512vnni(
+                if pw.bits == 4 {
+                    match isa {
+                        // The nibble decode has no 512-bit variant; the
+                        // VNNI detection gate guarantees AVX2 is there.
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Avx2 | Isa::Avx512Vnni => unsafe {
+                            microtile_avx2_i4(
+                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Sse2 => unsafe {
+                            microtile_sse2_i4(
+                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                            )
+                        },
+                        _ => microtile_scalar_i4(
                             a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                        )
-                    },
-                    #[cfg(target_arch = "x86_64")]
-                    Isa::Avx2 => unsafe {
-                        microtile_avx2(a, m0, k, strip, p0, pc, mr, nrw, &mut acc)
-                    },
-                    #[cfg(target_arch = "x86_64")]
-                    Isa::Sse2 => unsafe {
-                        microtile_sse2(a, m0, k, strip, p0, pc, mr, nrw, &mut acc)
-                    },
-                    _ => microtile_scalar(a, m0, k, strip, p0, pc, mr, nrw, &mut acc),
+                        ),
+                    }
+                } else {
+                    match isa {
+                        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+                        Isa::Avx512Vnni => unsafe {
+                            microtile_avx512vnni(
+                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Avx2 => unsafe {
+                            microtile_avx2(
+                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Sse2 => unsafe {
+                            microtile_sse2(
+                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                            )
+                        },
+                        _ => microtile_scalar(
+                            a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
+                        ),
+                    }
                 }
                 for (r, arow) in acc.iter().take(mr).enumerate() {
                     let o0 = (m0 + r) * n + n0;
@@ -477,6 +611,193 @@ fn microtile_scalar(
             for (j, av) in arow.iter_mut().take(nr).enumerate() {
                 *av += a0 * prow[2 * j] as i32 + a1 * prow[2 * j + 1] as i32;
             }
+        }
+    }
+}
+
+/// Sign-extend a 4-bit two's-complement nibble (branch-free xor-sub:
+/// `(v ^ 8) - 8` maps 0..=7 → 0..=7 and 8..=15 → -8..=-1).
+#[inline]
+fn nib_i32(v: u8) -> i32 {
+    ((v & 0x0F) ^ 8) as i32 - 8
+}
+
+/// Portable reference micro-tile over the **int4** packed layout: each
+/// strip byte holds the pair's two rows as nibbles; decode and run the
+/// identical multiply-accumulate as [`microtile_scalar`].
+#[allow(clippy::too_many_arguments)]
+fn microtile_scalar_i4(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
+) {
+    for p in p0..p0 + pc {
+        let prow = &strip[p * nr..(p + 1) * nr];
+        for (r, arow) in acc.iter_mut().take(mr).enumerate() {
+            let ai = (m0 + r) * k + 2 * p;
+            let a0 = a[ai] as i32;
+            let a1 = if 2 * p + 1 < k { a[ai + 1] as i32 } else { 0 };
+            for (j, av) in arow.iter_mut().take(nr).enumerate() {
+                let byte = prow[j] as u8;
+                *av += a0 * nib_i32(byte) + a1 * nib_i32(byte >> 4);
+            }
+        }
+    }
+}
+
+/// AVX2 **int4** micro-tile: per pair iteration, one 16-byte load
+/// covers 16 columns; nibbles widen in-register (mask, `xor 0x08`,
+/// `sub 0x08`) and `unpacklo/hi_epi8` re-interleaves lo/hi rows into
+/// the same pair-interleaved i8 stream [`microtile_avx2`] eats, feeding
+/// the unchanged sign-extend → `vpmaddwd` → `vpaddd` pipeline.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and the slice geometry
+/// invariants of [`gemm_packed`] (`nr % 16 == 0`, `nr ≤ NR`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn microtile_avx2_i4(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
+) {
+    use std::arch::x86_64::*;
+    let groups = nr / 16;
+    let mask = _mm_set1_epi8(0x0F);
+    let eight = _mm_set1_epi8(0x08);
+    for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
+        let abase = (m0 + r) * k;
+        let mut accv = [_mm256_setzero_si256(); NR / 8];
+        for (i, v) in accv.iter_mut().take(2 * groups).enumerate() {
+            *v = _mm256_loadu_si256(
+                arow_acc.as_ptr().add(i * 8) as *const __m256i
+            );
+        }
+        for p in p0..p0 + pc {
+            let a0 = *a.get_unchecked(abase + 2 * p) as i32;
+            let a1 = if 2 * p + 1 < k {
+                *a.get_unchecked(abase + 2 * p + 1) as i32
+            } else {
+                0
+            };
+            let av = _mm256_set1_epi32(pair_i32(a0, a1));
+            let brow = strip.as_ptr().add(p * nr);
+            for i in 0..groups {
+                let b = _mm_loadu_si128(brow.add(i * 16) as *const __m128i);
+                let bl = _mm_sub_epi8(
+                    _mm_xor_si128(_mm_and_si128(b, mask), eight),
+                    eight,
+                );
+                let bh = _mm_sub_epi8(
+                    _mm_xor_si128(
+                        _mm_and_si128(_mm_srli_epi16(b, 4), mask),
+                        eight,
+                    ),
+                    eight,
+                );
+                // columns i·16 .. i·16+8 and i·16+8 .. i·16+16, each as
+                // the pair-interleaved byte stream of the int8 layout
+                let lo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(bl, bh));
+                let hi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(bl, bh));
+                let v0 = &mut accv[2 * i];
+                *v0 = _mm256_add_epi32(*v0, _mm256_madd_epi16(av, lo));
+                let v1 = &mut accv[2 * i + 1];
+                *v1 = _mm256_add_epi32(*v1, _mm256_madd_epi16(av, hi));
+            }
+        }
+        for (i, v) in accv.iter().take(2 * groups).enumerate() {
+            _mm256_storeu_si256(
+                arow_acc.as_mut_ptr().add(i * 8) as *mut __m256i,
+                *v,
+            );
+        }
+    }
+}
+
+/// SSE2 **int4** micro-tile: per pair iteration an 8-byte load covers
+/// 8 columns; nibbles widen via the same xor-sub trick, interleave back
+/// to the pair stream, then take the compare+unpack sign extension and
+/// `pmaddwd` of [`microtile_sse2`].
+///
+/// # Safety
+/// Caller must uphold the slice geometry invariants of [`gemm_packed`]
+/// (`nr % 16 == 0`, `nr ≤ NR`). SSE2 is the x86_64 baseline.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn microtile_sse2_i4(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
+) {
+    use std::arch::x86_64::*;
+    let zero = _mm_setzero_si128();
+    let mask = _mm_set1_epi8(0x0F);
+    let eight = _mm_set1_epi8(0x08);
+    let groups = nr / 8;
+    for (r, arow_acc) in acc.iter_mut().take(mr).enumerate() {
+        let abase = (m0 + r) * k;
+        let mut accv = [_mm_setzero_si128(); NR / 4];
+        for (i, v) in accv.iter_mut().take(2 * groups).enumerate() {
+            *v = _mm_loadu_si128(
+                arow_acc.as_ptr().add(i * 4) as *const __m128i
+            );
+        }
+        for p in p0..p0 + pc {
+            let a0 = *a.get_unchecked(abase + 2 * p) as i32;
+            let a1 = if 2 * p + 1 < k {
+                *a.get_unchecked(abase + 2 * p + 1) as i32
+            } else {
+                0
+            };
+            let av = _mm_set1_epi32(pair_i32(a0, a1));
+            let brow = strip.as_ptr().add(p * nr);
+            for i in 0..groups {
+                let b8 = _mm_loadl_epi64(brow.add(i * 8) as *const __m128i);
+                let bl = _mm_sub_epi8(
+                    _mm_xor_si128(_mm_and_si128(b8, mask), eight),
+                    eight,
+                );
+                let bh = _mm_sub_epi8(
+                    _mm_xor_si128(
+                        _mm_and_si128(_mm_srli_epi16(b8, 4), mask),
+                        eight,
+                    ),
+                    eight,
+                );
+                let inter = _mm_unpacklo_epi8(bl, bh);
+                let sign = _mm_cmpgt_epi8(zero, inter);
+                let b16lo = _mm_unpacklo_epi8(inter, sign);
+                let b16hi = _mm_unpackhi_epi8(inter, sign);
+                let v0 = &mut accv[2 * i];
+                *v0 = _mm_add_epi32(*v0, _mm_madd_epi16(av, b16lo));
+                let v1 = &mut accv[2 * i + 1];
+                *v1 = _mm_add_epi32(*v1, _mm_madd_epi16(av, b16hi));
+            }
+        }
+        for (i, v) in accv.iter().take(2 * groups).enumerate() {
+            _mm_storeu_si128(
+                arow_acc.as_mut_ptr().add(i * 4) as *mut __m128i,
+                *v,
+            );
         }
     }
 }
@@ -998,6 +1319,163 @@ mod tests {
             7
         )
         .is_err());
+    }
+
+    #[test]
+    fn int4_pack_layout_golden() {
+        // (3, 2), k odd → pair 1 is row 2 + zero pad; -8 exercises the
+        // negative nibble boundary.
+        let b = vec![1i8, 2, 3, 4, 5, -8];
+        let pw = PackedWeights::pack_bits(&b, 3, 2, NR, 4);
+        assert_eq!((pw.k, pw.n, pw.pk, pw.strips, pw.nr, pw.bits()),
+                   (3, 2, 4, 1, NR, 4));
+        // half the int8 footprint: (pk/2) rows of NR bytes
+        assert_eq!(pw.bytes(), 2 * NR);
+        let d = &pw.data;
+        // pair 0: lo = row 0, hi = row 1 → 0x31, 0x42
+        assert_eq!(&d[0..2], &[0x31, 0x42]);
+        // pair 1: lo = row 2 (5 and -8 → nibble 0x8), hi = zero pad
+        assert_eq!(&d[NR..NR + 2], &[0x05, 0x08]);
+        for (i, &v) in d.iter().enumerate() {
+            if ![0usize, 1, NR, NR + 1].contains(&i) {
+                assert_eq!(v, 0, "lane {i}");
+            }
+        }
+        // the decode helper inverts the nibble encode exactly
+        for v in -8i32..=7 {
+            assert_eq!(nib_i32(v as i8 as u8), v);
+        }
+    }
+
+    #[test]
+    fn fits_int4_tracks_nibble_range() {
+        assert!(fits_int4(&[]));
+        assert!(fits_int4(&[-8, -1, 0, 7]));
+        assert!(!fits_int4(&[8]));
+        assert!(!fits_int4(&[-9]));
+        assert!(!fits_int4(&[0, 0, 127]));
+    }
+
+    #[test]
+    fn int4_packed_matches_reference_across_isas_and_threads() {
+        for &(m, k, n, zp) in prop::SHAPES {
+            let a = prop::i8s(51, m * k);
+            let mut b: Vec<i8> =
+                prop::i8s(52, k * n).iter().map(|&v| v % 8).collect();
+            b[0] = -8; // boundary nibble
+            let sums = col_sums(&b, k, n);
+            let pw = PackedWeights::pack_bits(&b, k, n, NR, 4);
+            let want = gemm_ref(&a, zp, &b, m, k, n);
+            for isa in Isa::available() {
+                for threads in [1usize, 2, 8] {
+                    let mut out = vec![i32::MIN; m * n];
+                    gemm_packed_parallel(
+                        &a,
+                        zp,
+                        &pw,
+                        &sums,
+                        m,
+                        &mut out,
+                        threads,
+                        isa,
+                        Blocking::default(),
+                    );
+                    assert_eq!(
+                        out,
+                        want,
+                        "int4 ({m},{k},{n}) zp={zp} t={threads} {}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int4_blocking_sweep_matches_reference_across_isas() {
+        let cands = [
+            Blocking { kc: 2, nr: 16, mr: 1, grain: 1 },
+            Blocking { kc: 64, nr: 32, mr: 2, grain: 4 },
+            Blocking { kc: 128, nr: 48, mr: 3, grain: 2 },
+            Blocking { kc: 256, nr: 64, mr: MR_MAX, grain: 8 },
+        ];
+        for &(m, k, n, zp) in prop::SHAPES {
+            let a = prop::i8s(53, m * k);
+            let b: Vec<i8> =
+                prop::i8s(54, k * n).iter().map(|&v| v % 8).collect();
+            let sums = col_sums(&b, k, n);
+            let want = gemm_ref(&a, zp, &b, m, k, n);
+            for bk in cands {
+                let pw = PackedWeights::pack_bits(&b, k, n, bk.nr, 4);
+                for isa in Isa::available() {
+                    let mut out = vec![i32::MIN; m * n];
+                    gemm_packed(&a, zp, &pw, &sums, m, &mut out, isa, bk);
+                    assert_eq!(
+                        out,
+                        want,
+                        "int4 ({m},{k},{n}) {} {}",
+                        bk.label(),
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int4_from_packed_validates_geometry() {
+        let b: Vec<i8> =
+            prop::i8s(55, 24 * 70).iter().map(|&v| v % 8).collect();
+        for nrw in [16usize, 32, 64] {
+            let pw = PackedWeights::pack_bits(&b, 24, 70, nrw, 4);
+            let re = PackedWeights::from_packed_bits(
+                pw.raw_data().to_vec().into(),
+                24,
+                70,
+                nrw,
+                4,
+            )
+            .unwrap();
+            assert_eq!(re.raw_data(), pw.raw_data());
+            assert_eq!(re.bits(), 4);
+        }
+        let pw = PackedWeights::pack_bits(&b, 24, 70, NR, 4);
+        // int8-sized buffer under a bits=4 tag (and vice versa) is
+        // rejected by length, as is a bogus bits value.
+        let i8pw = PackedWeights::pack(&b, 24, 70);
+        assert!(PackedWeights::from_packed_bits(
+            i8pw.raw_data().to_vec().into(),
+            24,
+            70,
+            NR,
+            4
+        )
+        .is_err());
+        assert!(PackedWeights::from_packed_bits(
+            pw.raw_data().to_vec().into(),
+            24,
+            70,
+            NR,
+            8
+        )
+        .is_err());
+        for bits in [0usize, 1, 2, 3, 5, 16] {
+            assert!(PackedWeights::from_packed_bits(
+                pw.raw_data().to_vec().into(),
+                24,
+                70,
+                NR,
+                bits
+            )
+            .is_err());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "int4 weight out of")]
+    fn int4_pack_rejects_out_of_range() {
+        let b = vec![0i8, 8, 0, 0];
+        PackedWeights::pack_bits(&b, 2, 2, 16, 4);
     }
 
     #[test]

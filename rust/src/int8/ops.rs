@@ -11,7 +11,7 @@
 //! `OpCtx::isa` selects the SIMD microkernel level (`int8::kernels`);
 //! every thread count and ISA produces bit-identical activations.
 
-use crate::quant::scale::{apply_multiplier, QParams};
+use crate::quant::scale::{apply_multiplier, rounding_rshift, QParams};
 
 use super::engine::{AddParams, GapParams, QLayer};
 use super::gemm::gemm_i8_parallel;
@@ -70,6 +70,202 @@ pub fn requant_store(
     }
 }
 
+/// Requantize an int32 accumulator row by per-channel **rounding
+/// shifts** — the power-of-two epilogue (DESIGN.md §13). Semantics are
+/// exactly `rounding_rshift(acc + bias[c], shift[c])` per element; the
+/// SIMD paths use the closed form
+/// `(x + (1 << (s-1)) - [x < 0]) >> s` (for `s ≥ 1`), which equals the
+/// scalar remainder/threshold form whenever `x + 2^(s-1)` does not
+/// overflow i32 — guaranteed here because accumulators are bounded by
+/// `k · 255 · 127` plus a bias of similar magnitude, the same headroom
+/// assumption `acc + bias` already makes.
+///
+/// Dispatch: AVX2 handles per-channel shifts via `vpsravd`; SSE2 has no
+/// variable-shift instruction, so it takes a uniform-shift fast path
+/// (common under per-tensor quantization) and otherwise falls back to
+/// scalar. Shifts outside `0..=30` (multiplier > 1, i.e. a left shift)
+/// stay scalar everywhere.
+#[allow(clippy::too_many_arguments)]
+pub fn requant_store_shift(
+    acc: &[i32],
+    bias: &[i32],
+    shift: &[i32],
+    out_qp: QParams,
+    clamp: (i32, i32),
+    cout: usize,
+    out: &mut Vec<i8>,
+    isa: Isa,
+) {
+    out.clear();
+    out.reserve(acc.len());
+    let vector_ok = shift.iter().all(|&s| (0..=30).contains(&s));
+    #[cfg(target_arch = "x86_64")]
+    {
+        if vector_ok && matches!(isa, Isa::Avx2 | Isa::Avx512Vnni) {
+            unsafe {
+                requant_shift_avx2(acc, bias, shift, out_qp, clamp, cout, out)
+            };
+            return;
+        }
+        if vector_ok
+            && isa == Isa::Sse2
+            && shift.windows(2).all(|w| w[0] == w[1])
+        {
+            unsafe {
+                requant_shift_sse2_uniform(
+                    acc, bias, shift[0], out_qp, clamp, cout, out,
+                )
+            };
+            return;
+        }
+    }
+    let _ = (vector_ok, isa);
+    for (i, &a) in acc.iter().enumerate() {
+        let c = i % cout;
+        let v = rounding_rshift(a + bias[c], shift[c]) + out_qp.zero_point;
+        out.push(v.clamp(clamp.0, clamp.1) as i8);
+    }
+}
+
+/// AVX2 shift-only epilogue: 8 channels per iteration inside each
+/// `cout`-row, scalar tail per row.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available, `acc.len() % cout == 0`,
+/// `bias`/`shift` have at least `cout` entries, and every shift is in
+/// `0..=30`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn requant_shift_avx2(
+    acc: &[i32],
+    bias: &[i32],
+    shift: &[i32],
+    out_qp: QParams,
+    clamp: (i32, i32),
+    cout: usize,
+    out: &mut Vec<i8>,
+) {
+    use std::arch::x86_64::*;
+    let zpv = _mm256_set1_epi32(out_qp.zero_point);
+    let lov = _mm256_set1_epi32(clamp.0);
+    let hiv = _mm256_set1_epi32(clamp.1);
+    let one = _mm256_set1_epi32(1);
+    let zero = _mm256_setzero_si256();
+    for row in acc.chunks_exact(cout) {
+        let mut j = 0usize;
+        while j + 8 <= cout {
+            let x = _mm256_add_epi32(
+                _mm256_loadu_si256(row.as_ptr().add(j) as *const __m256i),
+                _mm256_loadu_si256(bias.as_ptr().add(j) as *const __m256i),
+            );
+            let s = _mm256_loadu_si256(
+                shift.as_ptr().add(j) as *const __m256i
+            );
+            // 1 << (s-1) as ((1 << s) >> 1): exactly 0 when s == 0,
+            // matching rounding_rshift's identity at shift 0.
+            let half = _mm256_srli_epi32(_mm256_sllv_epi32(one, s), 1);
+            // subtract [x < 0] only when s >= 1 (shift-0 is identity)
+            let negadj = _mm256_and_si256(
+                _mm256_srli_epi32(x, 31),
+                _mm256_cmpgt_epi32(s, zero),
+            );
+            let t = _mm256_sub_epi32(_mm256_add_epi32(x, half), negadj);
+            let r = _mm256_srav_epi32(t, s);
+            let v = _mm256_add_epi32(r, zpv);
+            let c = _mm256_min_epi32(_mm256_max_epi32(v, lov), hiv);
+            let mut tmp = [0i32; 8];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, c);
+            out.extend_from_slice(&tmp.map(|t| t as i8));
+            j += 8;
+        }
+        for (ji, &a) in row.iter().enumerate().skip(j) {
+            let v = rounding_rshift(a + bias[ji], shift[ji])
+                + out_qp.zero_point;
+            out.push(v.clamp(clamp.0, clamp.1) as i8);
+        }
+    }
+}
+
+/// SSE2 shift-only epilogue for a **uniform** shift: 4 channels per
+/// iteration inside each `cout`-row, scalar tail per row.
+///
+/// # Safety
+/// Caller must ensure `acc.len() % cout == 0`, `bias` has at least
+/// `cout` entries, and `s` is in `0..=30`. SSE2 is the x86_64 baseline.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn requant_shift_sse2_uniform(
+    acc: &[i32],
+    bias: &[i32],
+    s: i32,
+    out_qp: QParams,
+    clamp: (i32, i32),
+    cout: usize,
+    out: &mut Vec<i8>,
+) {
+    use std::arch::x86_64::*;
+    let halfv =
+        _mm_set1_epi32(if s >= 1 { 1i32 << (s - 1) } else { 0 });
+    let adjmask = _mm_set1_epi32(if s >= 1 { -1 } else { 0 });
+    let cnt = _mm_cvtsi32_si128(s);
+    let zpv = _mm_set1_epi32(out_qp.zero_point);
+    let lov = _mm_set1_epi32(clamp.0);
+    let hiv = _mm_set1_epi32(clamp.1);
+    for row in acc.chunks_exact(cout) {
+        let mut j = 0usize;
+        while j + 4 <= cout {
+            let x = _mm_add_epi32(
+                _mm_loadu_si128(row.as_ptr().add(j) as *const __m128i),
+                _mm_loadu_si128(bias.as_ptr().add(j) as *const __m128i),
+            );
+            let negadj = _mm_and_si128(_mm_srli_epi32(x, 31), adjmask);
+            let t = _mm_sub_epi32(_mm_add_epi32(x, halfv), negadj);
+            let r = _mm_sra_epi32(t, cnt);
+            let v = _mm_add_epi32(r, zpv);
+            // SSE2 has no pmin/pmax for i32: clamp via cmpgt blends
+            let too_lo = _mm_cmpgt_epi32(lov, v);
+            let v = _mm_or_si128(
+                _mm_and_si128(too_lo, lov),
+                _mm_andnot_si128(too_lo, v),
+            );
+            let too_hi = _mm_cmpgt_epi32(v, hiv);
+            let c = _mm_or_si128(
+                _mm_and_si128(too_hi, hiv),
+                _mm_andnot_si128(too_hi, v),
+            );
+            let mut tmp = [0i32; 4];
+            _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, c);
+            out.extend_from_slice(&tmp.map(|t| t as i8));
+            j += 4;
+        }
+        for (ji, &a) in row.iter().enumerate().skip(j) {
+            let v = rounding_rshift(a + bias[ji], s) + out_qp.zero_point;
+            out.push(v.clamp(clamp.0, clamp.1) as i8);
+        }
+    }
+}
+
+/// Pick the layer's requant epilogue: the shift-only path when the
+/// exporter proved every multiplier a power of two
+/// (`QLayer::requant_shift`), else the fixed-point multiplier path.
+fn store_epilogue(
+    acc: &[i32],
+    l: &QLayer,
+    cout: usize,
+    isa: Isa,
+    out: &mut Vec<i8>,
+) {
+    match &l.requant_shift {
+        Some(sh) => requant_store_shift(
+            acc, &l.bias_q, sh, l.out_qp, l.clamp, cout, out, isa,
+        ),
+        None => requant_store(
+            acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, out,
+        ),
+    }
+}
+
 /// SAME-padded conv via im2col + int8 GEMM.
 pub fn conv2d(
     x: &QTensor,
@@ -101,9 +297,7 @@ pub fn conv2d(
         patches, x.qp.zero_point, l, m, kk, cout, acc, *threads, *isa,
     );
     let mut data = out;
-    requant_store(
-        acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, &mut data,
-    );
+    store_epilogue(acc, l, cout, *isa, &mut data);
     QTensor { shape: vec![n, oh, ow, cout], data, qp: l.out_qp }
 }
 
@@ -229,11 +423,24 @@ fn dw_rows(
                     );
                 }
             }
-            for (ci, &a) in acc.iter().enumerate() {
-                let (m0, shift) = l.requant[ci];
-                let v = apply_multiplier(a + l.bias_q[ci], m0, shift)
-                    + l.out_qp.zero_point;
-                orow[ox * c + ci] = v.clamp(l.clamp.0, l.clamp.1) as i8;
+            match &l.requant_shift {
+                Some(sh) => {
+                    for (ci, &a) in acc.iter().enumerate() {
+                        let v = rounding_rshift(a + l.bias_q[ci], sh[ci])
+                            + l.out_qp.zero_point;
+                        orow[ox * c + ci] =
+                            v.clamp(l.clamp.0, l.clamp.1) as i8;
+                    }
+                }
+                None => {
+                    for (ci, &a) in acc.iter().enumerate() {
+                        let (m0, shift) = l.requant[ci];
+                        let v = apply_multiplier(a + l.bias_q[ci], m0, shift)
+                            + l.out_qp.zero_point;
+                        orow[ox * c + ci] =
+                            v.clamp(l.clamp.0, l.clamp.1) as i8;
+                    }
+                }
             }
         }
     }
@@ -263,9 +470,7 @@ pub fn dense(
         ctx.isa,
     );
     let mut data = out;
-    requant_store(
-        &ctx.acc, &l.bias_q, &l.requant, l.out_qp, l.clamp, cout, &mut data,
-    );
+    store_epilogue(&ctx.acc, l, cout, ctx.isa, &mut data);
     QTensor { shape: vec![n, cout], data, qp: l.out_qp }
 }
 
@@ -343,6 +548,7 @@ mod tests {
             w_sums,
             bias_q,
             requant,
+            requant_shift: None,
             out_qp,
             clamp,
             w_scales: vec![1.0],
@@ -528,6 +734,168 @@ mod tests {
                 let mut ctx = OpCtx::with_threads(t);
                 ctx.isa = isa;
                 let y = dwconv2d(&x, &l, 3, 2, &mut ctx, Vec::new());
+                assert_eq!(base.data, y.data, "t={t} {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn requant_store_shift_matches_scalar_reference_across_isas() {
+        use crate::quant::scale::rounding_rshift;
+        let qp = qp_sym(1.0);
+        // channel counts straddling both vector widths and their tails;
+        // shift tables: per-channel varied, uniform, zero, and one
+        // negative entry (multiplier > 1 → scalar fallback everywhere)
+        for &cout in &[1usize, 3, 4, 5, 8, 11, 16, 64] {
+            let n_pix = 7usize;
+            let acc: Vec<i32> = crate::util::prop::f32s(61, n_pix * cout, -6e4, 6e4)
+                .iter()
+                .map(|&v| v as i32)
+                .collect();
+            let bias: Vec<i32> = crate::util::prop::f32s(62, cout, -500.0, 500.0)
+                .iter()
+                .map(|&v| v as i32)
+                .collect();
+            let tables: Vec<Vec<i32>> = vec![
+                (0..cout).map(|c| (c % 9) as i32).collect(),
+                vec![5i32; cout],
+                vec![0i32; cout],
+                (0..cout).map(|c| if c == 0 { -2 } else { 3 }).collect(),
+            ];
+            for shift in &tables {
+                let mut want = Vec::new();
+                for (i, &a) in acc.iter().enumerate() {
+                    let c = i % cout;
+                    let v = rounding_rshift(a + bias[c], shift[c])
+                        + qp.zero_point;
+                    want.push(v.clamp(-127, 127) as i8);
+                }
+                for isa in Isa::available() {
+                    let mut got = vec![9i8; 3]; // dirty recycled buffer
+                    requant_store_shift(
+                        &acc,
+                        &bias,
+                        shift,
+                        qp,
+                        (-127, 127),
+                        cout,
+                        &mut got,
+                        isa,
+                    );
+                    assert_eq!(
+                        got,
+                        want,
+                        "cout={cout} shift={shift:?} {}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_epilogue_is_not_the_multiplier_epilogue() {
+        // Why requant_shift is a distinct representation: a pow2
+        // multiplier through apply_multiplier rounds TWICE (once in the
+        // doubling high mul, once in the shift), so it can differ from
+        // the direct rounding shift by 1 — e.g. x=5, m=2^-2:
+        use crate::quant::scale::{
+            apply_multiplier, quantize_multiplier, rounding_rshift,
+        };
+        let (m0, shift) = quantize_multiplier(0.25);
+        assert_eq!((m0, shift), (1 << 30, 1));
+        assert_eq!(apply_multiplier(5, m0, shift), 2);
+        assert_eq!(rounding_rshift(5, 2), 1);
+    }
+
+    #[test]
+    fn conv_shift_epilogue_bit_exact_across_isa_and_threads() {
+        // a packed conv layer with a per-channel shift table: every ISA
+        // and thread count must reproduce the scalar result exactly
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(63, 2 * 6 * 6 * 3, -1.0, 1.0);
+        let x = QTensor::quantize(vec![2, 6, 6, 3], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.6);
+        let w_q: Vec<i8> = crate::util::prop::f32s(64, 9 * 3 * 5, -0.6, 0.6)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 27, 5);
+        let out_qp = qp_sym(2.0);
+        let req = vec![(1 << 30, 6); 5]; // unused when shift is set
+        let mut l = layer(
+            w_q.clone(),
+            sums,
+            vec![1, -2, 3, 0, 7],
+            req,
+            out_qp,
+            (-127, 127),
+        );
+        l.requant_shift = Some(vec![7, 6, 8, 7, 5]);
+        l.packed =
+            Some(crate::int8::kernels::PackedWeights::pack(&w_q, 27, 5));
+        let mut sctx = OpCtx { isa: Isa::Scalar, ..Default::default() };
+        let base = conv2d(&x, &l, 3, 1, &mut sctx, Vec::new());
+        for isa in Isa::available() {
+            for t in [1usize, 2, 8] {
+                let mut ctx = OpCtx::with_threads(t);
+                ctx.isa = isa;
+                let y = conv2d(&x, &l, 3, 1, &mut ctx, Vec::new());
+                assert_eq!(base.data, y.data, "t={t} {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_shift_epilogue_matches_rounding_shift() {
+        use crate::quant::scale::rounding_rshift;
+        let in_qp = qp_sym(2.0);
+        let xs = crate::util::prop::f32s(65, 7 * 7 * 5, -2.0, 2.0);
+        let x = QTensor::quantize(vec![1, 7, 7, 5], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.5);
+        let w_q: Vec<i8> = crate::util::prop::f32s(66, 9 * 5, -0.5, 0.5)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let out_qp = qp_sym(2.0);
+        let mut l = layer(
+            w_q,
+            vec![],
+            vec![3, -2, 0, 1, -1],
+            vec![(1 << 30, 3); 5],
+            out_qp,
+            (-127, 127),
+        );
+        l.requant_shift = Some(vec![4, 3, 5, 4, 6]);
+        let base = dwconv2d(&x, &l, 3, 1, &mut OpCtx::default(), Vec::new());
+        // spot-check the epilogue arithmetic at the centre pixel by
+        // recomputing the taps scalar-side
+        let sh = l.requant_shift.as_ref().unwrap();
+        let c = 5usize;
+        let mut acc = vec![0i32; c];
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let xi = (((1 + ky) * 7) + 1 + kx) * c;
+                let wi = (ky * 3 + kx) * c;
+                for ci in 0..c {
+                    acc[ci] += (x.data[xi + ci] as i32
+                        - x.qp.zero_point)
+                        * l.w_q[wi + ci] as i32;
+                }
+            }
+        }
+        for ci in 0..c {
+            let v = rounding_rshift(acc[ci] + l.bias_q[ci], sh[ci])
+                + out_qp.zero_point;
+            let want = v.clamp(-127, 127) as i8;
+            assert_eq!(base.data[((2 * 7) + 2) * c + ci], want, "ci={ci}");
+        }
+        // and the threaded/ISA sweep stays bit-exact
+        for isa in Isa::available() {
+            for t in [2usize, 8] {
+                let mut ctx = OpCtx::with_threads(t);
+                ctx.isa = isa;
+                let y = dwconv2d(&x, &l, 3, 1, &mut ctx, Vec::new());
                 assert_eq!(base.data, y.data, "t={t} {}", isa.name());
             }
         }

@@ -49,6 +49,11 @@ pub struct TuneOptions {
     pub budget: Duration,
     /// Whether to sweep non-default strip widths (forces a repack).
     pub sweep_nr: bool,
+    /// Whether to sweep the panel bit width (int8 vs int4 nibble
+    /// panels) for layers whose weights fit the int4 range. Like every
+    /// other axis this is bit-exact — the int4 decode reproduces the
+    /// identical i8 lanes — so only wall-clock moves.
+    pub sweep_bits: bool,
 }
 
 impl TuneOptions {
@@ -61,6 +66,7 @@ impl TuneOptions {
             iters: 3,
             budget: Duration::from_millis(4000),
             sweep_nr: true,
+            sweep_bits: true,
         }
     }
 
@@ -74,12 +80,16 @@ impl TuneOptions {
             iters: 2,
             budget: Duration::from_millis(300),
             sweep_nr: false,
+            sweep_bits: false,
         }
     }
 
     /// `FAT_TUNE=off|capped|full` (aliases: `0`≡`off`, `on`/`1`≡
     /// `capped`). `None` means tuning is off — the default, so tests
-    /// and library consumers stay deterministic and fast.
+    /// and library consumers stay deterministic and fast. Unknown
+    /// values are a hard configuration error (mirroring `FAT_ISA`):
+    /// silently disabling tuning would hide the typo until a perf
+    /// regression surfaced much later.
     pub fn from_env() -> Option<TuneOptions> {
         match std::env::var("FAT_TUNE").ok().as_deref().map(str::trim) {
             None | Some("") | Some("off") | Some("0") => None,
@@ -87,13 +97,10 @@ impl TuneOptions {
                 Some(TuneOptions::capped())
             }
             Some("full") => Some(TuneOptions::full()),
-            Some(other) => {
-                eprintln!(
-                    "FAT_TUNE: unknown value {other:?} \
-                     (want off|capped|full); tuning disabled"
-                );
-                None
-            }
+            Some(other) => panic!(
+                "FAT_TUNE: unknown value {other:?} \
+                 (accepted: off, 0, capped, on, 1, full)"
+            ),
         }
     }
 }
@@ -130,17 +137,15 @@ pub fn candidates(opts: &TuneOptions) -> Vec<Blocking> {
 #[derive(Debug, Clone, Copy)]
 pub struct TunedChoice {
     pub blocking: Blocking,
+    /// Winning panel bit width (8, or 4 when the int4 sweep won).
+    pub bits: usize,
     /// Best observed time of the default schedule, seconds/run.
     pub default_secs: f64,
     /// Best observed time of the winning schedule, seconds/run.
     pub best_secs: f64,
 }
 
-/// Time the candidate schedules for one `(k, n)` weight matrix on a
-/// synthetic `(rows, k)` activation block and return the fastest.
-/// Stops early (keeping the best so far) once `deadline` passes — the
-/// default candidate is always timed first, so a blown budget can only
-/// ever report the default.
+/// [`tune_gemm_bits`] for an int8-packed layer.
 pub fn tune_gemm(
     w: &[i8],
     k: usize,
@@ -148,54 +153,85 @@ pub fn tune_gemm(
     opts: &TuneOptions,
     deadline: Option<Instant>,
 ) -> TunedChoice {
+    tune_gemm_bits(w, k, n, 8, opts, deadline)
+}
+
+/// Time the candidate schedules for one `(k, n)` weight matrix on a
+/// synthetic `(rows, k)` activation block and return the fastest.
+/// Stops early (keeping the best so far) once `deadline` passes — the
+/// default candidate (at the layer's current `bits`) is always timed
+/// first, so a blown budget can only ever report the status quo. With
+/// [`TuneOptions::sweep_bits`] set, each blocking is also timed against
+/// the other panel width (int4 only when the weights fit `[-8, 7]`).
+pub fn tune_gemm_bits(
+    w: &[i8],
+    k: usize,
+    n: usize,
+    bits: usize,
+    opts: &TuneOptions,
+    deadline: Option<Instant>,
+) -> TunedChoice {
     debug_assert_eq!(w.len(), k * n);
+    // bit widths to try, the layer's current width first (ties keep it)
+    let mut widths = vec![bits];
+    if opts.sweep_bits {
+        if bits == 8 && super::kernels::fits_int4(w) {
+            widths.push(4);
+        } else if bits == 4 {
+            widths.push(8);
+        }
+    }
     let m = opts.rows.max(1);
     let a = crate::util::prop::i8s(97, m * k);
     let bsums = crate::int8::gemm::col_sums(w, k, n);
     let mut out = vec![0i32; m * n];
-    let mut packs: HashMap<usize, PackedWeights> = HashMap::new();
-    let mut best: Option<(Blocking, f64)> = None;
+    let mut packs: HashMap<(usize, usize), PackedWeights> = HashMap::new();
+    let mut best: Option<(Blocking, usize, f64)> = None;
     let mut default_secs = f64::INFINITY;
-    for (ci, bk) in candidates(opts).into_iter().enumerate() {
-        if ci > 0 && deadline.is_some_and(|d| Instant::now() >= d) {
-            break;
-        }
-        let pw = packs
-            .entry(bk.nr)
-            .or_insert_with(|| PackedWeights::pack_with(w, k, n, bk.nr));
-        let mut best_run = f64::INFINITY;
-        for _ in 0..opts.iters.max(1) + 1 {
-            let t0 = Instant::now();
-            super::kernels::gemm_packed_parallel(
-                &a,
-                -3,
-                pw,
-                &bsums,
-                m,
-                &mut out,
-                opts.threads,
-                opts.isa,
-                bk,
-            );
-            let dt = t0.elapsed().as_secs_f64();
-            // first rep is warmup for the cold panel/activation cache
-            best_run = best_run.min(dt);
-        }
-        if ci == 0 {
-            default_secs = best_run;
-        }
-        // strict `<`: ties keep the earlier (default-first) candidate
-        let better = match best {
-            None => true,
-            Some((_, t)) => best_run < t,
-        };
-        if better {
-            best = Some((bk, best_run));
+    let mut ci = 0usize;
+    'sweep: for bk in candidates(opts) {
+        for &width in &widths {
+            if ci > 0 && deadline.is_some_and(|d| Instant::now() >= d) {
+                break 'sweep;
+            }
+            let pw = packs.entry((bk.nr, width)).or_insert_with(|| {
+                PackedWeights::pack_bits(w, k, n, bk.nr, width)
+            });
+            let mut best_run = f64::INFINITY;
+            for _ in 0..opts.iters.max(1) + 1 {
+                let t0 = Instant::now();
+                super::kernels::gemm_packed_parallel(
+                    &a,
+                    -3,
+                    pw,
+                    &bsums,
+                    m,
+                    &mut out,
+                    opts.threads,
+                    opts.isa,
+                    bk,
+                );
+                let dt = t0.elapsed().as_secs_f64();
+                // first rep is warmup for the cold panel/activation cache
+                best_run = best_run.min(dt);
+            }
+            if ci == 0 {
+                default_secs = best_run;
+            }
+            ci += 1;
+            // strict `<`: ties keep the earlier (default-first) candidate
+            let better = match best {
+                None => true,
+                Some((_, _, t)) => best_run < t,
+            };
+            if better {
+                best = Some((bk, width, best_run));
+            }
         }
     }
-    let (blocking, best_secs) =
-        best.unwrap_or((Blocking::default(), default_secs));
-    TunedChoice { blocking, default_secs, best_secs }
+    let (blocking, bits, best_secs) =
+        best.unwrap_or((Blocking::default(), bits, default_secs));
+    TunedChoice { blocking, bits, default_secs, best_secs }
 }
 
 /// Summary of a whole-model sweep, for CLI/log reporting.
@@ -236,21 +272,21 @@ impl TuneReport {
 pub fn tune_model(qm: &mut QModel, opts: &TuneOptions) -> TuneReport {
     let t0 = Instant::now();
     let deadline = t0 + opts.budget;
-    let mut cache: HashMap<(usize, usize), TunedChoice> = HashMap::new();
+    let mut cache: HashMap<(usize, usize, usize), TunedChoice> = HashMap::new();
     let mut report = TuneReport::default();
     for p in &mut qm.plan.params {
         let QNode::Layer(l) = p else { continue };
         let Some(pw) = &l.packed else { continue };
-        let (k, n) = (pw.k, pw.n);
+        let (k, n, bits) = (pw.k, pw.n, pw.bits());
         report.layers += 1;
-        let choice = match cache.get(&(k, n)) {
+        let choice = match cache.get(&(k, n, bits)) {
             Some(c) => *c,
             None => {
-                let c = tune_gemm(&l.w_q, k, n, opts, Some(deadline));
+                let c = tune_gemm_bits(&l.w_q, k, n, bits, opts, Some(deadline));
                 report.shapes += 1;
                 report.default_secs += c.default_secs;
                 report.best_secs += c.best_secs;
-                cache.insert((k, n), c);
+                cache.insert((k, n, bits), c);
                 c
             }
         };
@@ -258,9 +294,14 @@ pub fn tune_model(qm: &mut QModel, opts: &TuneOptions) -> TuneReport {
         if choice.blocking != Blocking::default() {
             report.tuned += 1;
         }
-        if choice.blocking.nr != pw.nr() {
-            l.packed =
-                Some(PackedWeights::pack_with(&l.w_q, k, n, choice.blocking.nr));
+        if choice.blocking.nr != pw.nr() || choice.bits != pw.bits() {
+            l.packed = Some(PackedWeights::pack_bits(
+                &l.w_q,
+                k,
+                n,
+                choice.blocking.nr,
+                choice.bits,
+            ));
             report.repacked += 1;
         }
     }
@@ -324,6 +365,42 @@ mod tests {
         assert_eq!(c.blocking.nr, Blocking::default().nr); // capped: no repack
         assert!(c.default_secs.is_finite() && c.default_secs > 0.0);
         assert!(c.best_secs <= c.default_secs);
+    }
+
+    #[test]
+    fn bits_sweep_is_gated_and_bit_exact() {
+        let (k, n, m) = (48usize, 32usize, 5usize);
+        let w: Vec<i8> =
+            prop::i8s(55, k * n).into_iter().map(|v| v % 8).collect();
+        assert!(crate::int8::kernels::fits_int4(&w));
+        let mut opts = TuneOptions::full();
+        opts.rows = 8;
+        opts.iters = 1;
+        opts.threads = 1;
+        let c = tune_gemm_bits(&w, k, n, 8, &opts, None);
+        c.blocking.validate().unwrap();
+        assert!(c.bits == 8 || c.bits == 4, "bits {}", c.bits);
+        // whichever width won, the panel it implies is bit-exact
+        let a = prop::i8s(56, m * k);
+        let sums = col_sums(&w, k, n);
+        let want = gemm_ref(&a, -3, &w, m, k, n);
+        let pw = PackedWeights::pack_bits(&w, k, n, c.blocking.nr, c.bits);
+        let mut out = vec![0i32; m * n];
+        crate::int8::kernels::gemm_packed_parallel(
+            &a, -3, &pw, &sums, m, &mut out, 2, Isa::detect(), c.blocking,
+        );
+        assert_eq!(out, want);
+        // out-of-range weights never report an int4 win
+        let w8 = prop::i8s(57, k * n);
+        assert!(!crate::int8::kernels::fits_int4(&w8));
+        let c8 = tune_gemm_bits(&w8, k, n, 8, &opts, None);
+        assert_eq!(c8.bits, 8);
+        // and an int4 layer keeps a valid width with the sweep off
+        let mut capped = TuneOptions::capped();
+        capped.rows = 4;
+        capped.iters = 1;
+        let c4 = tune_gemm_bits(&w, k, n, 4, &capped, None);
+        assert_eq!(c4.bits, 4); // sweep_bits=false: width is pinned
     }
 
     #[test]

@@ -85,14 +85,19 @@ Commands (default: pipeline):
     SIGINT/SIGTERM. --models items may be builtin/artifact model names
     (calibrate + export in-process), paths to compiled .fatm files
     (zero-copy mmap load), or directories of .fatm artifacts (load all;
-    with --reload-secs N, rescan every N seconds and hot-reload entries
-    whose content etag changed)
+    with --reload-secs N, hot-reload entries whose content etag changed —
+    inotify-triggered on Linux with an N-second rescan heartbeat, pure
+    N-second polling elsewhere)
     [--models M1,M2|path.fatm|dir] [--addr 127.0.0.1:8080] [--mode MODE]
     [--threads N] [--max-batch N] [--max-wait-us N] [--max-conns N]
     [--max-inflight N] [--read-timeout-ms N] [--drain-secs N]
     [--reload-secs N]
 
 Modes: sym_scalar | sym_vector | asym_scalar | asym_vector
+  Suffixes (native backend): _pow2 snaps every scale to a power of two
+  and exports shift-only requant tables; _w4 trains against the int4
+  weight grid and exports nibble-packed panels. Compose in any order:
+  sym_vector_pow2_w4
 Calibrators: max (default) | p99 | p999 | p9999 | kl
 Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
         FAT_BACKEND=auto|native|artifact (float-stage backend)
@@ -653,6 +658,14 @@ fn cmd_info_fatm(path: &str) -> Result<()> {
         };
         println!("    {}: {layers} layer(s) ({tag})", bk.label());
     }
+    let (shift, mul, int4, int8) = qm.epilogue_summary();
+    println!(
+        "  requant epilogue: {shift} shift-only layer(s), {mul} \
+         multiplier layer(s)"
+    );
+    println!(
+        "  weight panels: {int4} int4 layer(s), {int8} int8 layer(s)"
+    );
     Ok(())
 }
 
@@ -802,16 +815,26 @@ fn cmd_serve(
     );
     signal::install_drain_handler();
     let reload_secs = args.usize_or("reload-secs", 0) as u64;
-    if reload_secs > 0 && !watch_dirs.is_empty() {
-        println!("hot reload: rescanning artifact dirs every {reload_secs}s");
+    // Kernel change notification where available: a landed/removed
+    // `.fatm` triggers a rescan within ~100 ms, and the `--reload-secs`
+    // timer stays on as the heartbeat (sole driver in poll fallback).
+    let mut watcher = (reload_secs > 0 && !watch_dirs.is_empty())
+        .then(|| fat::net::DirWatcher::new(&watch_dirs));
+    if let Some(w) = &watcher {
+        println!(
+            "hot reload: {}, rescan heartbeat every {reload_secs}s",
+            w.describe()
+        );
     }
     println!("serving; SIGINT/SIGTERM drains");
     let mut last_sync = std::time::Instant::now();
     while !signal::drain_requested() {
         std::thread::sleep(Duration::from_millis(100));
+        let kicked = watcher.as_mut().is_some_and(|w| w.pending());
         if reload_secs > 0
             && !watch_dirs.is_empty()
-            && last_sync.elapsed() >= Duration::from_secs(reload_secs)
+            && (kicked
+                || last_sync.elapsed() >= Duration::from_secs(reload_secs))
         {
             for d in &watch_dirs {
                 match registry.sync_dir(d, opts) {

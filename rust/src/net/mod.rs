@@ -39,9 +39,11 @@ pub mod http;
 pub mod registry;
 pub mod server;
 pub mod signal;
+pub mod watch;
 
 pub use client::{FrameClient, HttpClient};
 pub use registry::{ModelMeta, ModelRegistry, SyncReport};
+pub use watch::DirWatcher;
 pub use server::{Server, ServerOptions, ServerStats};
 
 /// Parser size caps shared by both wire protocols. Every cap answers a

@@ -620,7 +620,16 @@ fn stats_json(inner: &Inner) -> String {
                 bk.kc, bk.nr, bk.mr, bk.grain, layers
             );
         }
-        s.push_str("],\"batcher\":");
+        // Requant-epilogue and weight-panel census (ISSUE-9): how many
+        // layers run the shift-only epilogue vs fixed-point multipliers,
+        // and how many serve nibble-packed int4 panels.
+        let (shift, mul, int4, int8) = engine.model().epilogue_summary();
+        let _ = write!(
+            s,
+            "],\"epilogues\":{{\"shift\":{shift},\"multiplier\":{mul}}},\
+             \"weight_bits\":{{\"int4\":{int4},\"int8\":{int8}}},\
+             \"batcher\":"
+        );
         match st.batcher {
             Some(b) => {
                 let _ = write!(

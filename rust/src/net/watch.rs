@@ -1,0 +1,261 @@
+//! Filesystem change notification for `fat serve --reload-secs`
+//! (DESIGN.md §10): on Linux, an inotify watch over the artifact
+//! directories turns hot reload from "rescan every N seconds" into
+//! "rescan within ~100 ms of a `.fatm` landing", while the timer
+//! rescan stays on as a belt-and-braces heartbeat. Everywhere else —
+//! and whenever inotify setup fails (exotic filesystems, fd
+//! exhaustion) — [`DirWatcher`] degrades to a pure poll-fallback
+//! object whose [`pending`] never fires, leaving the timer alone in
+//! charge, which is exactly the pre-watcher behavior.
+//!
+//! Like [`crate::net::signal`] and [`crate::artifact::mmap`], the
+//! syscalls are declared against the platform libc the Rust std
+//! runtime already links — no new dependency.
+//!
+//! The watcher is an *edge trigger, not a truth source*: it only says
+//! "something happened under these directories, a [`sync_dir`] pass is
+//! worth running now". The registry's etag/stat checks remain the sole
+//! arbiter of what actually reloads, so spurious wakeups (editor
+//! temp files, partial writes) cost one cheap rescan, never a wrong
+//! load.
+//!
+//! [`pending`]: DirWatcher::pending
+//! [`sync_dir`]: crate::net::registry::ModelRegistry::sync_dir
+
+use std::path::Path;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_char, c_int, c_void};
+
+    extern "C" {
+        pub fn inotify_init1(flags: c_int) -> c_int;
+        pub fn inotify_add_watch(
+            fd: c_int,
+            pathname: *const c_char,
+            mask: u32,
+        ) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+    }
+
+    // <sys/inotify.h>: IN_NONBLOCK/IN_CLOEXEC alias O_NONBLOCK/O_CLOEXEC,
+    // whose octal values are uniform across the Linux architectures this
+    // crate supports (x86_64, aarch64).
+    pub const IN_NONBLOCK: c_int = 0o4000;
+    pub const IN_CLOEXEC: c_int = 0o2000000;
+    pub const IN_ATTRIB: u32 = 0x004;
+    pub const IN_CLOSE_WRITE: u32 = 0x008;
+    pub const IN_MOVED_FROM: u32 = 0x040;
+    pub const IN_MOVED_TO: u32 = 0x080;
+    pub const IN_CREATE: u32 = 0x100;
+    pub const IN_DELETE: u32 = 0x200;
+
+    /// Events that can change what a directory scan would find: a file
+    /// finished writing, appeared, vanished, or was renamed in/out.
+    /// Deliberately *not* IN_MODIFY — mid-write torrents would wake the
+    /// rescan loop once per `write(2)`.
+    pub const MASK: u32 = IN_ATTRIB
+        | IN_CLOSE_WRITE
+        | IN_MOVED_FROM
+        | IN_MOVED_TO
+        | IN_CREATE
+        | IN_DELETE;
+}
+
+/// Change detector over a fixed set of directories. Construction never
+/// fails: directories that cannot be watched simply do not contribute
+/// edges, and a watcher with no working inotify fd reports
+/// [`Self::inotify_active`]` == false` so callers know the timer is
+/// doing all the work.
+pub struct DirWatcher {
+    #[cfg(target_os = "linux")]
+    fd: Option<i32>,
+    watches: usize,
+}
+
+impl DirWatcher {
+    pub fn new<P: AsRef<Path>>(dirs: &[P]) -> DirWatcher {
+        #[cfg(target_os = "linux")]
+        {
+            let fd = unsafe {
+                sys::inotify_init1(sys::IN_NONBLOCK | sys::IN_CLOEXEC)
+            };
+            if fd < 0 {
+                return DirWatcher { fd: None, watches: 0 };
+            }
+            let mut watches = 0usize;
+            for d in dirs {
+                use std::os::unix::ffi::OsStrExt as _;
+                let Ok(cpath) = std::ffi::CString::new(
+                    d.as_ref().as_os_str().as_bytes(),
+                ) else {
+                    continue;
+                };
+                let wd = unsafe {
+                    sys::inotify_add_watch(fd, cpath.as_ptr(), sys::MASK)
+                };
+                if wd >= 0 {
+                    watches += 1;
+                }
+            }
+            if watches == 0 {
+                unsafe { sys::close(fd) };
+                return DirWatcher { fd: None, watches: 0 };
+            }
+            DirWatcher { fd: Some(fd), watches }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            let _ = dirs;
+            DirWatcher { watches: 0 }
+        }
+    }
+
+    /// True when kernel change notification is live; false in the
+    /// poll-fallback mode where only the caller's timer drives rescans.
+    pub fn inotify_active(&self) -> bool {
+        #[cfg(target_os = "linux")]
+        {
+            self.fd.is_some()
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            false
+        }
+    }
+
+    /// Number of directories successfully under watch.
+    pub fn watch_count(&self) -> usize {
+        self.watches
+    }
+
+    /// One-line description for the serve banner.
+    pub fn describe(&self) -> String {
+        if self.inotify_active() {
+            format!("inotify on {} dir(s)", self.watches)
+        } else {
+            "poll fallback (timer-driven rescan)".to_string()
+        }
+    }
+
+    /// Drain all queued events; `true` means at least one change
+    /// happened since the last call and a rescan is worth running now.
+    /// In poll-fallback mode this is always `false` — the caller's
+    /// timer owns the cadence. Non-blocking either way.
+    pub fn pending(&mut self) -> bool {
+        #[cfg(target_os = "linux")]
+        {
+            let Some(fd) = self.fd else { return false };
+            // Each inotify_event is 16 bytes + a name up to NAME_MAX;
+            // 4 KiB drains dozens of events per read.
+            let mut buf = [0u8; 4096];
+            let mut saw = false;
+            loop {
+                let n = unsafe {
+                    sys::read(
+                        fd,
+                        buf.as_mut_ptr() as *mut std::os::raw::c_void,
+                        buf.len(),
+                    )
+                };
+                if n > 0 {
+                    saw = true;
+                    continue;
+                }
+                // 0 (never for inotify) or -1: with O_NONBLOCK the only
+                // expected -1 is EAGAIN — queue drained either way.
+                return saw;
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            false
+        }
+    }
+}
+
+impl Drop for DirWatcher {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Some(fd) = self.fd.take() {
+            unsafe { sys::close(fd) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(target_os = "linux")]
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("fat_watch_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn missing_dirs_degrade_to_poll_fallback() {
+        let mut w = DirWatcher::new(&[Path::new(
+            "/definitely/not/a/real/dir/for/fat/watch",
+        )]);
+        assert!(!w.inotify_active());
+        assert_eq!(w.watch_count(), 0);
+        assert!(!w.pending());
+        assert!(w.describe().contains("poll fallback"));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn file_writes_raise_exactly_one_pending_edge() {
+        let d = scratch_dir("edge");
+        let mut w = DirWatcher::new(&[&d]);
+        assert!(w.inotify_active(), "inotify unavailable on this Linux?");
+        assert_eq!(w.watch_count(), 1);
+        assert!(w.describe().contains("inotify"));
+        // quiet directory: no edge
+        assert!(!w.pending());
+        // a completed write raises the edge once, then re-arms
+        std::fs::write(d.join("m.fatm"), b"not-really-an-artifact").unwrap();
+        assert!(w.pending(), "close-write event not observed");
+        assert!(!w.pending(), "edge did not clear after drain");
+        // deletes count too — a vanished .fatm must trigger a rescan
+        // (sync_dir retires the entry)
+        std::fs::remove_file(d.join("m.fatm")).unwrap();
+        assert!(w.pending(), "delete event not observed");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn renames_into_the_dir_are_observed() {
+        // the atomic-publish idiom: write to a temp name, rename over
+        let d = scratch_dir("mv");
+        let mut w = DirWatcher::new(&[&d]);
+        assert!(w.inotify_active());
+        assert!(!w.pending());
+        let tmp = d.join(".m.fatm.tmp");
+        std::fs::write(&tmp, b"bytes").unwrap();
+        let _ = w.pending(); // drain the temp-file events
+        std::fs::rename(&tmp, d.join("m.fatm")).unwrap();
+        assert!(w.pending(), "moved-to event not observed");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn watching_two_dirs_sees_either() {
+        let d1 = scratch_dir("two_a");
+        let d2 = scratch_dir("two_b");
+        let mut w = DirWatcher::new(&[&d1, &d2]);
+        assert_eq!(w.watch_count(), 2);
+        assert!(!w.pending());
+        std::fs::write(d2.join("b.fatm"), b"x").unwrap();
+        assert!(w.pending());
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+}

@@ -34,7 +34,7 @@ use crate::tensor::Tensor;
 use crate::util::threads::fat_threads;
 
 use super::calibrate::CalibStats;
-use super::export::QuantMode;
+use super::export::{QuantKnobs, QuantMode};
 use super::session::ThresholdSet;
 
 /// Borrowed view of a session's model state — everything a backend
@@ -68,20 +68,27 @@ pub trait Executor: Send + Sync {
     fn fp_accuracy(&self, m: &ModelView, val_images: usize) -> Result<f64>;
 
     /// Accuracy of the fake-quant forward under a trainable map.
+    /// `knobs` selects the export-time numerics the student mirrors
+    /// (pow2 scales, int4 weight grid); the artifact backend only
+    /// supports the default knobs (its AOT graphs were lowered without
+    /// them).
     fn quant_accuracy(
         &self,
         m: &ModelView,
         mode: QuantMode,
+        knobs: QuantKnobs,
         stats: &CalibStats,
         trained: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64>;
 
-    /// FAT threshold fine-tuning (RMSE distillation, unlabeled).
+    /// FAT threshold fine-tuning (RMSE distillation, unlabeled). Same
+    /// `knobs` contract as [`Executor::quant_accuracy`].
     fn finetune(
         &self,
         m: &ModelView,
         mode: QuantMode,
+        knobs: QuantKnobs,
         stats: &CalibStats,
         opts: &FinetuneOpts,
         progress: &mut dyn FnMut(usize, f32, f32),
@@ -166,6 +173,19 @@ pub fn resolve(
              auto)"
         ),
     }
+}
+
+/// The AOT artifacts were lowered from the plain fake-quant graph —
+/// they cannot honor pow2/int4 export knobs. Error out loudly instead
+/// of silently evaluating the wrong numerics.
+fn require_default_knobs(knobs: QuantKnobs, stage: &str) -> Result<()> {
+    anyhow::ensure!(
+        knobs == QuantKnobs::default(),
+        "the artifact backend's {stage} graphs were lowered without \
+         pow2/int4 knobs ({knobs:?}) — use FAT_BACKEND=native for \
+         `_pow2` / `_w4` modes"
+    );
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -283,10 +303,12 @@ impl Executor for ArtifactExec {
         &self,
         m: &ModelView,
         mode: QuantMode,
+        knobs: QuantKnobs,
         stats: &CalibStats,
         trained: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64> {
+        require_default_knobs(knobs, "quant_fwd")?;
         let art = self.artifact(&format!("quant_fwd_{}", mode.name()))?;
         let bs = batch_size_of(&art, "3")?;
         let act_t = stats.act_t_tensor();
@@ -308,10 +330,12 @@ impl Executor for ArtifactExec {
         &self,
         m: &ModelView,
         mode: QuantMode,
+        knobs: QuantKnobs,
         stats: &CalibStats,
         opts: &FinetuneOpts,
         progress: &mut dyn FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        require_default_knobs(knobs, "train_step")?;
         let art = self.artifact(&format!("train_step_{}", mode.name()))?;
         finetune::run(&art, m.weights, &stats.act_t_tensor(), opts, progress)
     }
@@ -410,6 +434,7 @@ impl Executor for NativeExec {
         &self,
         m: &ModelView,
         mode: QuantMode,
+        knobs: QuantKnobs,
         stats: &CalibStats,
         trained: &BTreeMap<String, Tensor>,
         val_images: usize,
@@ -421,8 +446,8 @@ impl Executor for NativeExec {
             trained,
         )?
         .into_trained();
-        let prog = fp::fakequant::quantized_program(
-            m.graph, m.weights, m.sites, stats, mode, &tr,
+        let prog = fp::fakequant::quantized_program_with(
+            m.graph, m.weights, m.sites, stats, mode, &tr, knobs,
         )?;
         let threads = fat_threads();
         accuracy_with(NATIVE_EVAL_BATCH, val_images, |x| {
@@ -434,16 +459,18 @@ impl Executor for NativeExec {
         &self,
         m: &ModelView,
         mode: QuantMode,
+        knobs: QuantKnobs,
         stats: &CalibStats,
         opts: &FinetuneOpts,
         progress: &mut dyn FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-        let trainer = fp::Trainer::new(
+        let trainer = fp::Trainer::new_with(
             m.graph,
             m.weights,
             m.sites,
             stats,
             mode,
+            knobs,
             fat_threads(),
         )?;
         finetune::run_loop(
@@ -526,6 +553,19 @@ mod tests {
             } else {
                 assert!(tr.contains_key("act_a"));
             }
+        }
+    }
+
+    #[test]
+    fn artifact_knob_guard_rejects_non_default_knobs() {
+        assert!(require_default_knobs(QuantKnobs::default(), "x").is_ok());
+        for knobs in [
+            QuantKnobs { pow2: true, w_bits: 8 },
+            QuantKnobs { pow2: false, w_bits: 4 },
+        ] {
+            let err =
+                require_default_knobs(knobs, "quant_fwd").unwrap_err();
+            assert!(err.to_string().contains("FAT_BACKEND=native"), "{err}");
         }
     }
 

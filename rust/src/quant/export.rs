@@ -18,7 +18,9 @@ use crate::model::{GraphDef, Op};
 use crate::tensor::Tensor;
 
 use super::calibrate::CalibStats;
-use super::scale::{quantize_bias, quantize_multiplier, QParams};
+use super::scale::{
+    quantize_bias, quantize_multiplier, shift_table, snap_pow2, QParams,
+};
 use super::thresholds as th;
 
 /// Quantization mode grid of Tables 1-2.
@@ -69,6 +71,52 @@ impl QuantMode {
     }
 }
 
+/// Export-time knobs orthogonal to the [`QuantMode`] grid (DESIGN.md
+/// §13): power-of-two scales (shift-only requant) and the packed-weight
+/// bit width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantKnobs {
+    /// Snap every activation and weight **scale** to a power of two
+    /// (TQT, arxiv 1903.08066). Every conv/dwconv/dense requant
+    /// multiplier `s_in·s_w/s_out` is then an exact `2^-s` and those
+    /// layers carry a shift table (`QLayer::requant_shift`), taking the
+    /// shift-only epilogue. Scales are snapped — not thresholds: a
+    /// pow2 *threshold* would still leave the `/127` in the scale and
+    /// the ratio would not collapse. Gap and Add stay multiplier-based
+    /// (their ratios fold non-pow2 factors like `1/(h·w)`).
+    pub pow2: bool,
+    /// Weight bit width: 8 (default), or 4 — weights clamp to `[-7, 7]`
+    /// (scale `t/7`) and conv/dense panels pack two weights per byte
+    /// (`int8::kernels`, int4 panels).
+    pub w_bits: usize,
+}
+
+impl Default for QuantKnobs {
+    fn default() -> Self {
+        QuantKnobs { pow2: false, w_bits: 8 }
+    }
+}
+
+impl QuantKnobs {
+    pub fn validate(self) -> Result<()> {
+        anyhow::ensure!(
+            self.w_bits == 8 || self.w_bits == 4,
+            "w_bits={} (want 8 or 4)",
+            self.w_bits
+        );
+        Ok(())
+    }
+
+    /// The weight-side quantization ceiling: 127 for int8, 7 for int4.
+    pub fn w_qmax(self) -> i32 {
+        if self.w_bits == 4 {
+            7
+        } else {
+            127
+        }
+    }
+}
+
 /// Rounding mode marker (the engine uses round-half-even at quantize time,
 /// gemmlowp rounding in requant — kept for API clarity).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -115,6 +163,20 @@ pub fn site_qparams(
     mode: QuantMode,
     tr: &Trained,
 ) -> BTreeMap<String, QParams> {
+    site_qparams_with(sites, stats, mode, tr, QuantKnobs::default())
+}
+
+/// [`site_qparams`] with export knobs: in pow2 mode every site scale is
+/// snapped to a power of two (zero-point re-nudged) before the i8
+/// domain shift — the domain shift moves only the integer grid, so the
+/// snapped scale survives it unchanged.
+pub fn site_qparams_with(
+    sites: &SitesJson,
+    stats: &CalibStats,
+    mode: QuantMode,
+    tr: &Trained,
+    knobs: QuantKnobs,
+) -> BTreeMap<String, QParams> {
     let mut out = BTreeMap::new();
     for (i, site) in sites.sites.iter().enumerate() {
         let mm = &stats.site_minmax[i];
@@ -138,6 +200,7 @@ pub fn site_qparams(
                 QParams::symmetric_signed(t)
             }
         };
+        let qp = if knobs.pow2 { qp.snap_pow2() } else { qp };
         out.insert(site.id.clone(), to_i8_domain(qp));
     }
     out
@@ -151,14 +214,35 @@ pub fn quantize_weights(
     vector: bool,
     w_alpha: &[f32],
 ) -> Result<(Vec<i8>, Vec<f32>)> {
+    quantize_weights_with(w, cout, vector, w_alpha, QuantKnobs::default())
+}
+
+/// [`quantize_weights`] with export knobs: `w_bits = 4` narrows the
+/// grid to `[-7, 7]` (scale `t/7`, symmetric — the int4 panel's `-8` is
+/// never produced, mirroring the int8 path's `-127`); `pow2` snaps each
+/// scale to a power of two *after* the threshold adjustment, so the
+/// trained α still steers which power is chosen.
+pub fn quantize_weights_with(
+    w: &Tensor,
+    cout: usize,
+    vector: bool,
+    w_alpha: &[f32],
+    knobs: QuantKnobs,
+) -> Result<(Vec<i8>, Vec<f32>)> {
+    knobs.validate()?;
     let data = w.as_f32()?;
+    let qmax = knobs.w_qmax();
+    let snap = |s: f32| if knobs.pow2 { snap_pow2(s) } else { s };
     if vector {
         let t = th::per_channel_w_thresholds(data, cout);
         let scales: Vec<f32> = t
             .iter()
             .enumerate()
             .map(|(c, &tc)| {
-                th::adjust_sym(w_alpha[c.min(w_alpha.len() - 1)], tc) / 127.0
+                snap(
+                    th::adjust_sym(w_alpha[c.min(w_alpha.len() - 1)], tc)
+                        / qmax as f32,
+                )
             })
             .collect();
         let q = data
@@ -166,16 +250,18 @@ pub fn quantize_weights(
             .enumerate()
             .map(|(i, &v)| {
                 let s = scales[i % cout];
-                ((v / s).round_ties_even() as i32).clamp(-127, 127) as i8
+                ((v / s).round_ties_even() as i32).clamp(-qmax, qmax) as i8
             })
             .collect();
         Ok((q, scales))
     } else {
         let t = th::adjust_sym(w_alpha[0], th::per_tensor_w_threshold(data));
-        let s = t / 127.0;
+        let s = snap(t / qmax as f32);
         let q = data
             .iter()
-            .map(|&v| ((v / s).round_ties_even() as i32).clamp(-127, 127) as i8)
+            .map(|&v| {
+                ((v / s).round_ties_even() as i32).clamp(-qmax, qmax) as i8
+            })
             .collect();
         Ok((q, vec![s]))
     }
@@ -236,7 +322,8 @@ fn effective_site_of_tensor(g: &GraphDef, id: &str) -> String {
     effective_site(g, id)
 }
 
-/// Build the full quantized model.
+/// Build the full quantized model (default knobs: multiplier requant,
+/// int8 weights).
 pub fn build_qmodel(
     g: &GraphDef,
     weights: &BTreeMap<String, Tensor>,
@@ -245,7 +332,22 @@ pub fn build_qmodel(
     mode: QuantMode,
     tr: &Trained,
 ) -> Result<QModel> {
-    let site_qp = site_qparams(sites, stats, mode, tr);
+    build_qmodel_with(g, weights, sites, stats, mode, tr, QuantKnobs::default())
+}
+
+/// [`build_qmodel`] with export knobs (pow2 shift-only requant, int4
+/// weight packing).
+pub fn build_qmodel_with(
+    g: &GraphDef,
+    weights: &BTreeMap<String, Tensor>,
+    sites: &SitesJson,
+    stats: &CalibStats,
+    mode: QuantMode,
+    tr: &Trained,
+    knobs: QuantKnobs,
+) -> Result<QModel> {
+    knobs.validate()?;
+    let site_qp = site_qparams_with(sites, stats, mode, tr, knobs);
     let qp_of = |sid: &str| -> Result<QParams> {
         site_qp
             .get(sid)
@@ -269,7 +371,7 @@ pub fn build_qmodel(
                 let wa = tr.w_a.get(&n.id).unwrap_or(&ones);
                 let vector = mode.vector() && n.op != Op::Dense;
                 let (w_q, w_scales) =
-                    quantize_weights(w, cout, vector, wa)?;
+                    quantize_weights_with(w, cout, vector, wa, knobs)?;
                 let bias_q: Vec<i32> = b
                     .iter()
                     .enumerate()
@@ -281,27 +383,51 @@ pub fn build_qmodel(
                         )
                     })
                     .collect();
-                let requant: Vec<(i32, i32)> = (0..cout)
+                let multipliers: Vec<f64> = (0..cout)
                     .map(|c| {
-                        quantize_multiplier(
-                            in_qp.scale as f64
-                                * w_scales[c % w_scales.len()] as f64
-                                / out_qp.scale as f64,
-                        )
+                        in_qp.scale as f64
+                            * w_scales[c % w_scales.len()] as f64
+                            / out_qp.scale as f64
                     })
                     .collect();
+                let requant: Vec<(i32, i32)> = multipliers
+                    .iter()
+                    .map(|&m| quantize_multiplier(m))
+                    .collect();
+                // pow2 mode: every scale in the ratio is an exact power
+                // of two, so the f64 products/quotients are too — the
+                // table collapses to per-channel rounding shifts. Only
+                // the knob opts a model in; a coincidentally-pow2 table
+                // under default knobs stays multiplier-based (the two
+                // epilogues round differently).
+                let requant_shift = if knobs.pow2 {
+                    Some(shift_table(&multipliers).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "{}: pow2 mode produced a non-pow2 multiplier",
+                            n.id
+                        )
+                    })?)
+                } else {
+                    None
+                };
                 // Conv/dense weights are prepacked once here, at plan
                 // build time, into the strip/pair-interleaved layout the
                 // SIMD microkernels consume (int8::kernels; depthwise
                 // weights stay in (k,k,ch) layout — already tap-contiguous).
+                // w_bits = 4 packs two weights per byte (|q| ≤ 7 by
+                // construction of the narrowed grid).
                 let (w_sums, packed) = if n.op == Op::DwConv {
                     (vec![], None)
                 } else {
                     let k = w_q.len() / cout;
                     (
                         crate::int8::gemm::col_sums(&w_q, k, cout),
-                        Some(crate::int8::kernels::PackedWeights::pack(
-                            &w_q, k, cout,
+                        Some(crate::int8::kernels::PackedWeights::pack_bits(
+                            &w_q,
+                            k,
+                            cout,
+                            crate::int8::kernels::NR,
+                            knobs.w_bits,
                         )),
                     )
                 };
@@ -313,6 +439,7 @@ pub fn build_qmodel(
                         w_sums,
                         bias_q,
                         requant,
+                        requant_shift,
                         out_qp,
                         clamp: clamp_for(g, &n.id, out_qp),
                         w_scales,

@@ -56,6 +56,61 @@ impl QParams {
     pub fn range(&self) -> (f32, f32) {
         (self.dequantize(self.qmin), self.dequantize(self.qmax))
     }
+
+    /// Snap the scale to the nearest power of two in log2 space
+    /// (TQT, arxiv 1903.08066): `scale ← 2^round(log2 scale)`. The
+    /// zero-point is re-nudged so the represented range moves as little
+    /// as possible. Powers of two are fixed points, so snapping is
+    /// idempotent. With every scale in a requant ratio
+    /// `s_in·s_w/s_out` a power of two, the ratio itself is one and
+    /// requantization degenerates to a rounding shift.
+    pub fn snap_pow2(self) -> QParams {
+        let s2 = snap_pow2(self.scale);
+        let zp = (self.zero_point as f64 * self.scale as f64 / s2 as f64)
+            .round_ties_even() as i32;
+        QParams {
+            scale: s2,
+            zero_point: zp.clamp(self.qmin, self.qmax),
+            ..self
+        }
+    }
+}
+
+/// `2^round(log2 s)` for a positive scale (log2-domain rounding; exact
+/// powers of two are fixed points).
+pub fn snap_pow2(s: f32) -> f32 {
+    let s = s.max(1e-12);
+    ((s as f64).log2().round()).exp2() as f32
+}
+
+/// The exponent `e` when `m` is *exactly* `2^e`, else `None`. Exactness
+/// is read off the f64 bit pattern (zero mantissa), so no float-compare
+/// tolerance can misclassify a near-power.
+pub fn pow2_exponent(m: f64) -> Option<i32> {
+    if !(m.is_finite() && m > 0.0) {
+        return None;
+    }
+    let bits = m.to_bits();
+    if bits & ((1u64 << 52) - 1) != 0 {
+        return None;
+    }
+    let biased = (bits >> 52) & 0x7ff;
+    if biased == 0 {
+        return None; // subnormal
+    }
+    Some(biased as i32 - 1023)
+}
+
+/// The per-channel rounding-shift table for a requant multiplier table
+/// whose entries are all exact powers of two, else `None`. Entry `c`
+/// satisfies `quantize_multiplier(2^-shift[c]) == (1 << 30,
+/// shift[c] - 1)` — the invariant the `.fatm` loader re-checks before
+/// trusting a serialized shift vector.
+pub fn shift_table(multipliers: &[f64]) -> Option<Vec<i32>> {
+    multipliers
+        .iter()
+        .map(|&m| pow2_exponent(m).map(|e| -e))
+        .collect()
 }
 
 /// Bias quantization (paper eq. 20): int32 at scale `s_in * s_w`,
@@ -188,5 +243,67 @@ mod tests {
         assert_eq!(rounding_rshift(-5, 1), -3); // -2.5 -> -3 (gemmlowp)
         assert_eq!(rounding_rshift(4, 2), 1);
         assert_eq!(rounding_rshift(8, 0), 8);
+    }
+
+    #[test]
+    fn snap_pow2_rounds_in_log2_domain() {
+        assert_eq!(snap_pow2(0.25), 0.25); // fixed point
+        assert_eq!(snap_pow2(0.26), 0.25);
+        assert_eq!(snap_pow2(0.19), 0.25); // log2 0.19 ≈ -2.4 → -2
+        assert_eq!(snap_pow2(0.17), 0.125); // log2 0.17 ≈ -2.56 → -3
+        // idempotent for arbitrary inputs
+        for s in [1e-6f32, 0.003, 0.7, 1.0, 9.0] {
+            let once = snap_pow2(s);
+            assert_eq!(snap_pow2(once), once, "s={s}");
+        }
+    }
+
+    #[test]
+    fn pow2_exponent_is_exact() {
+        assert_eq!(pow2_exponent(1.0), Some(0));
+        assert_eq!(pow2_exponent(0.5), Some(-1));
+        assert_eq!(pow2_exponent(2f64.powi(-9)), Some(-9));
+        assert_eq!(pow2_exponent(2f64.powi(17)), Some(17));
+        assert_eq!(pow2_exponent(0.5000001), None);
+        assert_eq!(pow2_exponent(0.4999999), None);
+        assert_eq!(pow2_exponent(0.0), None);
+        assert_eq!(pow2_exponent(-0.5), None);
+        assert_eq!(pow2_exponent(f64::NAN), None);
+    }
+
+    #[test]
+    fn pow2_multiplier_decomposes_to_half_mantissa() {
+        // The invariant the .fatm loader checks: an exact 2^-e
+        // multiplier always decomposes to (1<<30, e-1), so a serialized
+        // shift vector can be cross-validated against the pair table.
+        for e in -2..=30 {
+            let (m0, shift) = quantize_multiplier(2f64.powi(-e));
+            assert_eq!((m0, shift), (1 << 30, e - 1), "e={e}");
+        }
+    }
+
+    #[test]
+    fn shift_table_requires_all_pow2() {
+        assert_eq!(
+            shift_table(&[0.25, 0.5, 2f64.powi(-7)]),
+            Some(vec![2, 1, 7])
+        );
+        assert_eq!(shift_table(&[0.25, 0.3]), None);
+        assert_eq!(shift_table(&[]), Some(vec![]));
+    }
+
+    #[test]
+    fn snap_pow2_qparams_renudges_zero_point() {
+        let qp = QParams::asymmetric(-1.0, 4.0);
+        let snapped = qp.snap_pow2();
+        assert_eq!(pow2_exponent(snapped.scale as f64), Some(-6));
+        // the represented left edge moves by less than one new step
+        let left0 = qp.dequantize(qp.qmin);
+        let left1 = snapped.dequantize(snapped.qmin);
+        assert!((left0 - left1).abs() <= snapped.scale, "{left0} {left1}");
+        // symmetric params keep zp = 0
+        let s = QParams::symmetric_signed(1.7).snap_pow2();
+        assert_eq!(s.zero_point, 0);
+        assert!(pow2_exponent(s.scale as f64).is_some());
     }
 }

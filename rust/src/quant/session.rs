@@ -47,7 +47,7 @@ use crate::tensor::Tensor;
 use super::backend::{self, Executor, ModelView};
 use super::calibrate::{CalibStats, Calibrator};
 use super::dws::{self, PatternReport};
-use super::export::{self, QuantMode, Rounding, Trained};
+use super::export::{self, QuantKnobs, QuantMode, Rounding, Trained};
 use super::fold;
 
 // ---------------------------------------------------------------------
@@ -75,6 +75,12 @@ pub struct QuantSpec {
     /// Rounding mode marker (the engine rounds ties-to-even at quantize
     /// time and uses gemmlowp rounding in requantization).
     pub rounding: Rounding,
+    /// Snap every scale to a power of two so conv-like requant collapses
+    /// to a shift-only epilogue (DESIGN.md §13; mode suffix `_pow2`).
+    pub pow2: bool,
+    /// Packed-weight bit width: 8, or 4 for nibble panels (mode suffix
+    /// `_w4`). See [`QuantKnobs::w_bits`].
+    pub w_bits: usize,
 }
 
 impl Default for QuantSpec {
@@ -84,6 +90,8 @@ impl Default for QuantSpec {
             per_filter: false,
             calibrator: Calibrator::Max,
             rounding: Rounding::TiesEven,
+            pow2: false,
+            w_bits: 8,
         }
     }
 }
@@ -115,12 +123,51 @@ impl QuantSpec {
         self
     }
 
+    /// Turn on power-of-two scales (shift-only requant).
+    pub fn with_pow2(mut self, pow2: bool) -> Self {
+        self.pow2 = pow2;
+        self
+    }
+
+    /// Set the packed-weight bit width (8 or 4).
+    pub fn with_w_bits(mut self, w_bits: usize) -> Self {
+        self.w_bits = w_bits;
+        self
+    }
+
+    /// The export-time knobs projection of this spec (everything the
+    /// exporter needs beyond the [`QuantMode`]).
+    pub fn knobs(self) -> export::QuantKnobs {
+        export::QuantKnobs { pow2: self.pow2, w_bits: self.w_bits }
+    }
+
     /// Parse a spec from CLI-style strings: a [`QuantMode`] name
-    /// (`sym_scalar` | `sym_vector` | `asym_scalar` | `asym_vector`) and
-    /// a [`Calibrator`] name (`max` | `p99`/`p999`/`p9999` | `kl`).
+    /// (`sym_scalar` | `sym_vector` | `asym_scalar` | `asym_vector`),
+    /// optionally suffixed with knob tokens `_pow2` (power-of-two
+    /// scales) and/or `_w4` (int4 packed weights) in either order —
+    /// e.g. `sym_vector_pow2_w4` — and a [`Calibrator`] name
+    /// (`max` | `p99`/`p999`/`p9999` | `kl`).
     pub fn parse(mode: &str, calibrator: &str) -> Result<Self> {
-        Ok(QuantSpec::from_mode(QuantMode::parse(mode)?)
-            .with_calibrator(Calibrator::parse(calibrator)?))
+        let mut rest = mode;
+        let (mut pow2, mut w_bits) = (false, 8);
+        // Knob suffixes commute; strip until the bare mode remains.
+        loop {
+            if let Some(m) = rest.strip_suffix("_pow2") {
+                anyhow::ensure!(!pow2, "mode `{mode}`: duplicate `_pow2`");
+                pow2 = true;
+                rest = m;
+            } else if let Some(m) = rest.strip_suffix("_w4") {
+                anyhow::ensure!(w_bits == 8, "mode `{mode}`: duplicate `_w4`");
+                w_bits = 4;
+                rest = m;
+            } else {
+                break;
+            }
+        }
+        Ok(QuantSpec::from_mode(QuantMode::parse(rest)?)
+            .with_calibrator(Calibrator::parse(calibrator)?)
+            .with_pow2(pow2)
+            .with_w_bits(w_bits))
     }
 }
 
@@ -377,7 +424,8 @@ impl SessionCore {
         self.exec.fp_accuracy(&self.view(), val_images)
     }
 
-    /// Accuracy of the fake-quant forward under a trainable map.
+    /// Accuracy of the fake-quant forward under a trainable map
+    /// (default export knobs).
     pub fn quant_accuracy(
         &self,
         mode: QuantMode,
@@ -385,7 +433,34 @@ impl SessionCore {
         trained: &BTreeMap<String, Tensor>,
         val_images: usize,
     ) -> Result<f64> {
-        self.exec.quant_accuracy(&self.view(), mode, stats, trained, val_images)
+        self.quant_accuracy_with(
+            mode,
+            QuantKnobs::default(),
+            stats,
+            trained,
+            val_images,
+        )
+    }
+
+    /// [`SessionCore::quant_accuracy`] under explicit export knobs
+    /// (pow2 scales / int4 weights), so the fake-quant accuracy matches
+    /// what the knob-carrying exporter will ship.
+    pub fn quant_accuracy_with(
+        &self,
+        mode: QuantMode,
+        knobs: QuantKnobs,
+        stats: &CalibStats,
+        trained: &BTreeMap<String, Tensor>,
+        val_images: usize,
+    ) -> Result<f64> {
+        self.exec.quant_accuracy(
+            &self.view(),
+            mode,
+            knobs,
+            stats,
+            trained,
+            val_images,
+        )
     }
 
     /// §4.2 point-wise variant (mobilenet only; artifact backend).
@@ -398,15 +473,31 @@ impl SessionCore {
         self.exec.pointwise_accuracy(&self.view(), stats, pw, val_images)
     }
 
-    /// FAT threshold fine-tuning (RMSE distillation, unlabeled).
+    /// FAT threshold fine-tuning (RMSE distillation, unlabeled; default
+    /// export knobs).
     pub fn finetune(
         &self,
         mode: QuantMode,
         stats: &CalibStats,
         opts: &FinetuneOpts,
+        progress: impl FnMut(usize, f32, f32),
+    ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
+        self.finetune_with(mode, QuantKnobs::default(), stats, opts, progress)
+    }
+
+    /// [`SessionCore::finetune`] under explicit export knobs: the
+    /// trainer's fake-quant student then snaps its scales / uses the
+    /// int4 weight grid, so the thresholds adapt to the deployed
+    /// numerics (log2-domain STE, DESIGN.md §13).
+    pub fn finetune_with(
+        &self,
+        mode: QuantMode,
+        knobs: QuantKnobs,
+        stats: &CalibStats,
+        opts: &FinetuneOpts,
         mut progress: impl FnMut(usize, f32, f32),
     ) -> Result<(BTreeMap<String, Tensor>, Vec<f32>)> {
-        self.exec.finetune(&self.view(), mode, stats, opts, &mut progress)
+        self.exec.finetune(&self.view(), mode, knobs, stats, opts, &mut progress)
     }
 
     /// §4.2 point-wise fine-tuning (artifact backend).
@@ -664,7 +755,8 @@ impl Calibrated {
     ) -> Result<Thresholded> {
         let mode = spec.mode();
         let stats = self.adjusted_stats(spec)?;
-        let (tr, losses) = self.core.finetune(mode, &stats, opts, progress)?;
+        let (tr, losses) =
+            self.core.finetune_with(mode, spec.knobs(), &stats, opts, progress)?;
         let thresholds = ThresholdSet::from_trainables(
             &self.core.graph,
             mode,
@@ -766,7 +858,13 @@ impl Thresholded {
     /// through the AOT `quant_fwd_*` artifact).
     pub fn quant_accuracy(&self, val_images: usize) -> Result<f64> {
         let tr = self.trainable_map()?;
-        self.core.quant_accuracy(self.spec.mode(), &self.stats, tr, val_images)
+        self.core.quant_accuracy_with(
+            self.spec.mode(),
+            self.spec.knobs(),
+            &self.stats,
+            tr,
+            val_images,
+        )
     }
 
     /// Stage 3 transition: build the integer-only deployment model.
@@ -825,9 +923,10 @@ impl Thresholded {
 }
 
 /// Build a quantized model from explicit parts — the one path into
-/// [`export::build_qmodel`]. The threshold set's mode must match the
-/// spec (a [`ThresholdSet`] built for another mode is a hard error, not
-/// a silent reinterpretation).
+/// [`export::build_qmodel_with`], carrying the spec's export knobs
+/// (pow2 scales / int4 weights). The threshold set's mode must match
+/// the spec (a [`ThresholdSet`] built for another mode is a hard error,
+/// not a silent reinterpretation).
 pub fn export_with(
     g: &GraphDef,
     weights: &BTreeMap<String, Tensor>,
@@ -842,7 +941,15 @@ pub fn export_with(
         thresholds.mode(),
         spec.mode()
     );
-    export::build_qmodel(g, weights, sites, stats, spec.mode(), thresholds.trained())
+    export::build_qmodel_with(
+        g,
+        weights,
+        sites,
+        stats,
+        spec.mode(),
+        thresholds.trained(),
+        spec.knobs(),
+    )
 }
 
 #[cfg(test)]
@@ -875,8 +982,40 @@ mod tests {
         let s = QuantSpec::parse("asym_vector", "p9999").unwrap();
         assert_eq!(s.mode(), QuantMode::AsymVector);
         assert_eq!(s.calibrator, Calibrator::Percentile(9999));
+        assert!(!s.pow2);
+        assert_eq!(s.w_bits, 8);
         assert!(QuantSpec::parse("nope", "max").is_err());
         assert!(QuantSpec::parse("sym_scalar", "nope").is_err());
+    }
+
+    #[test]
+    fn spec_parse_knob_suffixes() {
+        let s = QuantSpec::parse("sym_vector_pow2", "max").unwrap();
+        assert_eq!(s.mode(), QuantMode::SymVector);
+        assert!(s.pow2);
+        assert_eq!(s.w_bits, 8);
+
+        let s = QuantSpec::parse("sym_scalar_w4", "max").unwrap();
+        assert!(!s.pow2);
+        assert_eq!(s.w_bits, 4);
+
+        // the suffix tokens commute
+        for m in ["asym_scalar_pow2_w4", "asym_scalar_w4_pow2"] {
+            let s = QuantSpec::parse(m, "max").unwrap();
+            assert_eq!(s.mode(), QuantMode::AsymScalar, "{m}");
+            assert!(s.pow2, "{m}");
+            assert_eq!(s.w_bits, 4, "{m}");
+            assert_eq!(
+                s.knobs(),
+                export::QuantKnobs { pow2: true, w_bits: 4 },
+                "{m}"
+            );
+        }
+
+        // duplicates and a bare suffix are hard errors
+        assert!(QuantSpec::parse("sym_scalar_pow2_pow2", "max").is_err());
+        assert!(QuantSpec::parse("sym_scalar_w4_w4", "max").is_err());
+        assert!(QuantSpec::parse("_pow2", "max").is_err());
     }
 
     #[test]

@@ -17,7 +17,9 @@ use fat::int8::{ExecState, Isa, QModel, QTensor};
 use fat::model::builtin;
 use fat::net::{ModelRegistry, Server, ServerOptions};
 use fat::quant::calibrate::CalibStats;
-use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::quant::export::{
+    build_qmodel, build_qmodel_with, QuantKnobs, QuantMode, Trained,
+};
 use fat::util::json::Json;
 
 /// Compile a builtin model with synthetic calibration ranges —
@@ -230,6 +232,89 @@ fn tuned_blocking_table_round_trips_and_serves_bit_exact() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// [`build`] under explicit export knobs (pow2 / int4).
+fn build_knobbed(name: &str, knobs: QuantKnobs) -> QModel {
+    let (g, s, w) = builtin::load(name).unwrap();
+    let mut st = CalibStats::new(s.sites.len());
+    for (i, site) in s.sites.iter().enumerate() {
+        let lo = if site.unsigned { 0.0 } else { -2.0 - 0.1 * i as f32 };
+        st.site_minmax[i].update(lo, 2.5 + 0.2 * i as f32);
+    }
+    st.batches = 1;
+    let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
+    build_qmodel_with(&g, &w, &s, &st, QuantMode::SymVector, &tr, knobs)
+        .unwrap()
+}
+
+#[test]
+fn pow2_int4_artifacts_round_trip_with_shift_and_nibble_panels() {
+    for (knobs, tag) in [
+        (QuantKnobs { pow2: true, w_bits: 8 }, "pow2"),
+        (QuantKnobs { pow2: false, w_bits: 4 }, "w4"),
+        (QuantKnobs { pow2: true, w_bits: 4 }, "pow2_w4"),
+    ] {
+        let qm = build_knobbed("mnas_mini_10", knobs);
+        let summary = qm.epilogue_summary();
+        let (shift, mul, int4, _) = summary;
+        if knobs.pow2 {
+            assert!(shift > 0 && mul == 0, "{tag}: {summary:?}");
+        }
+        if knobs.w_bits == 4 {
+            assert!(int4 > 0, "{tag}: {summary:?}");
+        }
+
+        // PLAN v3 round trip: the shift tables and nibble panels survive
+        // byte-exactly and serve bit-identical logits everywhere.
+        let bytes = artifact::to_bytes(&qm, Isa::detect());
+        let (loaded, rep) =
+            artifact::load_from_bytes(bytes, LoadOptions::default()).unwrap();
+        assert!(!rep.repacked, "{tag}");
+        assert_eq!(loaded.epilogue_summary(), summary, "{tag}");
+        for isa in Isa::available() {
+            for threads in [1, 8] {
+                let want = logits(&qm, 0, threads, isa);
+                let got = logits(&loaded, 0, threads, isa);
+                assert_same_logits(
+                    &want,
+                    &got,
+                    &format!("{tag} {} t{threads}", isa.name()),
+                );
+            }
+        }
+
+        // Foreign packing-ISA tag: the repack must preserve the panel
+        // bit width (an int4 model must not silently widen to int8).
+        let bytes = artifact::to_bytes(&qm, Isa::Avx2);
+        let (repacked, rep) = artifact::load_from_bytes(
+            bytes,
+            LoadOptions { isa: Some(Isa::Scalar), ..Default::default() },
+        )
+        .unwrap();
+        assert!(rep.repacked, "{tag}");
+        assert_eq!(repacked.epilogue_summary(), summary, "{tag}: repack");
+        let want = logits(&qm, 1, 2, Isa::Scalar);
+        let got = logits(&repacked, 1, 2, Isa::Scalar);
+        assert_same_logits(&want, &got, &format!("{tag}: repacked"));
+    }
+}
+
+#[test]
+fn older_plan_versions_cannot_carry_v3_features_but_default_models_can() {
+    // A default-knob model still writes genuine v1/v2 byte streams that
+    // load in this build (the back-compat contract the debug_asserts in
+    // the writer protect: only shift-free, 8-bit models are eligible).
+    let qm = build("tiny_cnn");
+    for version in [1u32, 2] {
+        let bytes = artifact::to_bytes_versioned(&qm, Isa::detect(), version);
+        let (loaded, _) =
+            artifact::load_from_bytes(bytes, LoadOptions::default()).unwrap();
+        assert_eq!(loaded.epilogue_summary(), qm.epilogue_summary());
+        let want = logits(&qm, 0, 2, Isa::detect());
+        let got = logits(&loaded, 0, 2, Isa::detect());
+        assert_same_logits(&want, &got, &format!("v{version}"));
+    }
+}
+
 #[test]
 fn plan_v1_artifacts_still_load_with_default_blockings() {
     use fat::int8::Blocking;
@@ -328,6 +413,14 @@ fn registry_serves_artifact_with_etag_over_live_server() {
         .and_then(|ms| ms.get("tiny_cnn"))
         .expect("per-model stats");
     assert_eq!(pm.req("etag").unwrap().as_str().unwrap(), etag);
+    // ...and the epilogue/weight-panel census: a default-knob model is
+    // all multiplier epilogues over int8 panels.
+    let ep = pm.get("epilogues").expect("epilogues census in /stats");
+    assert_eq!(ep.usize_or("shift", 99), 0);
+    assert!(ep.usize_or("multiplier", 0) > 0);
+    let wb = pm.get("weight_bits").expect("weight_bits census in /stats");
+    assert_eq!(wb.usize_or("int4", 99), 0);
+    assert!(wb.usize_or("int8", 0) > 0);
 
     // The artifact-loaded model answers inference over the wire,
     // bit-exact with the in-memory reference interpreter.

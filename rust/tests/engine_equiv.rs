@@ -7,11 +7,12 @@
 
 use std::collections::BTreeMap;
 
+use fat::int8::engine::QNode;
 use fat::int8::{QModel, QTensor};
 use fat::model::store::{Site, SitesJson};
 use fat::model::{GraphDef, Op};
 use fat::quant::calibrate::CalibStats;
-use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::quant::export::{build_qmodel, build_qmodel_with, QuantKnobs, QuantMode, Trained};
 use fat::tensor::Tensor;
 use fat::util::prop;
 
@@ -100,6 +101,15 @@ fn build(graph: &str, mode: QuantMode) -> QModel {
     build_qmodel(&g, &w, &s, &st, mode, &tr).unwrap()
 }
 
+fn build_knobs(graph: &str, mode: QuantMode, knobs: QuantKnobs) -> QModel {
+    let g = GraphDef::from_json(graph).unwrap();
+    let w = weights_for(&g);
+    let s = sites_for(&g);
+    let st = stats_for(&s);
+    let tr = Trained::identity(&g, mode, s.sites.len());
+    build_qmodel_with(&g, &w, &s, &st, mode, &tr, knobs).unwrap()
+}
+
 fn input_for(g: &GraphDef, batch: usize, seed: u64) -> Tensor {
     let sh = g.node("input").unwrap().input_shape.clone().unwrap();
     let len = batch * sh[0] * sh[1] * sh[2];
@@ -176,6 +186,77 @@ fn run_batch_agrees_with_reference_interpreter() {
     assert_eq!(g.len(), want.len());
     for i in 0..want.len() {
         assert_eq!(g[i].to_bits(), want[i].to_bits(), "logit {i}");
+    }
+}
+
+/// Run the reference interpreter vs the planned engine across threads
+/// {1, 2, 8} and assert bit-exact logits.
+fn assert_engine_matches_ref(qm: &QModel, seed: u64, tag: &str) {
+    let x = input_for(&qm.graph, 5, seed);
+    let q = quantized_input(qm, &x);
+    let want = qm.run_quant_ref(q.clone()).unwrap();
+    for t in [1usize, 2, 8] {
+        let got = qm.run_quant_with(q.clone(), t).unwrap();
+        assert_eq!(got.data, want.data, "{tag} t={t}");
+        assert_eq!(got.qp, want.qp, "{tag} t={t}");
+    }
+}
+
+#[test]
+fn pow2_export_takes_shift_epilogue_everywhere() {
+    for mode in QuantMode::all() {
+        let knobs = QuantKnobs { pow2: true, ..QuantKnobs::default() };
+        let qm = build_knobs(GRAPH, mode, knobs);
+        // all 5 conv-like layers (c0, dw, c1, c2, d) collapse to shifts
+        let (sh, mu, b4, b8) = qm.epilogue_summary();
+        assert_eq!((sh, mu, b4, b8), (5, 0, 0, 5), "{mode:?}");
+        // every serialized (m0, shift) pair must agree with its shift:
+        // quantize_multiplier(2^-s) == (1 << 30, s - 1) exactly.
+        for p in &qm.plan.params {
+            if let QNode::Layer(l) = p {
+                let sh = l.requant_shift.as_ref().expect("pow2 layer shift");
+                assert_eq!(sh.len(), l.requant.len(), "{mode:?}");
+                for (c, &s) in sh.iter().enumerate() {
+                    assert_eq!(l.requant[c], (1 << 30, s - 1), "{mode:?} c={c}");
+                }
+            }
+        }
+        assert_engine_matches_ref(&qm, 7, &format!("pow2 {mode:?}"));
+    }
+}
+
+#[test]
+fn int4_export_packs_nibbles_and_matches_reference() {
+    for mode in QuantMode::all() {
+        let knobs = QuantKnobs { w_bits: 4, ..QuantKnobs::default() };
+        let qm = build_knobs(GRAPH, mode, knobs);
+        // c0, c1, c2, d pack int4; depthwise dw stays unpacked (int8)
+        let (sh, mu, b4, b8) = qm.epilogue_summary();
+        assert_eq!((sh, mu, b4, b8), (0, 5, 4, 1), "{mode:?}");
+        for p in &qm.plan.params {
+            if let QNode::Layer(l) = p {
+                if let Some(pw) = &l.packed {
+                    assert_eq!(pw.bits(), 4, "{mode:?}");
+                }
+                // int4 quantized weights never leave [-7, 7]
+                assert!(
+                    l.w_q.iter().all(|&w| (-7..=7).contains(&w)),
+                    "{mode:?}"
+                );
+            }
+        }
+        assert_engine_matches_ref(&qm, 13, &format!("int4 {mode:?}"));
+    }
+}
+
+#[test]
+fn pow2_int4_combined_matches_reference() {
+    for (graph, layers, packed4) in [(GRAPH, 5usize, 4usize), (GRAPH_ODD, 3, 2)] {
+        let knobs = QuantKnobs { pow2: true, w_bits: 4 };
+        let qm = build_knobs(graph, QuantMode::SymVector, knobs);
+        let (sh, mu, b4, b8) = qm.epilogue_summary();
+        assert_eq!((sh, mu, b4, b8), (layers, 0, packed4, layers - packed4));
+        assert_engine_matches_ref(&qm, 29, "pow2+int4");
     }
 }
 

@@ -14,7 +14,13 @@
 //!    `kc`, misaligned or oversized `nr`, out-of-range `mr`/`grain`,
 //!    and a valid-but-mismatched strip width — all must be rejected
 //!    by `Blocking::validate`/panel-geometry checks before they can
-//!    parameterize `gemm_packed`'s unchecked inner loops.
+//!    parameterize `gemm_packed`'s unchecked inner loops,
+//! 5. hostile PLAN-v3 records (digest-fixed): unknown packed-panel
+//!    bits tags, a bits tag contradicting the stored panel length, a
+//!    claimed shift table on a multiplier model (and the reverse), and
+//!    a shift table disagreeing with the requant pairs — the pow2
+//!    cross-check and `from_packed_bits` geometry must reject all of
+//!    them before the shift/int4 epilogues run.
 
 use std::collections::BTreeMap;
 
@@ -23,7 +29,9 @@ use fat::int8::{QModel, QTensor};
 use fat::model::builtin::sites_of;
 use fat::model::GraphDef;
 use fat::quant::calibrate::CalibStats;
-use fat::quant::export::{build_qmodel, QuantMode, Trained};
+use fat::quant::export::{
+    build_qmodel_with, QuantKnobs, QuantMode, Trained,
+};
 use fat::tensor::Tensor;
 use fat::util::prop;
 
@@ -42,6 +50,10 @@ const GRAPH: &str = r#"{
   ]}"#;
 
 fn model() -> QModel {
+    model_with(QuantKnobs::default())
+}
+
+fn model_with(knobs: QuantKnobs) -> QModel {
     let g = GraphDef::from_json(GRAPH).unwrap();
     let s = sites_of(&g);
     let mut w = BTreeMap::new();
@@ -69,7 +81,8 @@ fn model() -> QModel {
     }
     st.batches = 1;
     let tr = Trained::identity(&g, QuantMode::SymVector, s.sites.len());
-    build_qmodel(&g, &w, &s, &st, QuantMode::SymVector, &tr).unwrap()
+    build_qmodel_with(&g, &w, &s, &st, QuantMode::SymVector, &tr, knobs)
+        .unwrap()
 }
 
 fn artifact_bytes() -> Vec<u8> {
@@ -227,6 +240,160 @@ fn hostile_blocking_tables_are_rejected_before_the_kernels() {
             "hostile blocking {quad:?} accepted"
         );
     }
+}
+
+/// Overwrite every occurrence of `needle` (a u32-LE sequence, scanned
+/// past the header) with `repl`, returning the patch count. The v3
+/// tests pick needles whose u32 runs are distinctive enough to only
+/// match the intended PLAN records.
+fn patch_u32_seq(bytes: &mut [u8], needle: &[u32], repl: &[u32]) -> usize {
+    assert_eq!(needle.len(), repl.len());
+    let nb: Vec<u8> = needle.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let rb: Vec<u8> = repl.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let mut patched = 0;
+    let mut i = 24;
+    while i + nb.len() <= bytes.len() {
+        if bytes[i..i + nb.len()] == nb[..] {
+            bytes[i..i + rb.len()].copy_from_slice(&rb);
+            patched += 1;
+            i += nb.len();
+        } else {
+            i += 1;
+        }
+    }
+    patched
+}
+
+/// The fuzz model's two packed records as (k, n) — conv `c` packs
+/// k·k·cin = 18 rows × cout 4, dense `d` packs 4 × 3. The v3 record is
+/// `(present=1, k, n, bits)` as consecutive u32s.
+const PACKED_KN: [(u32, u32); 2] = [(18, 4), (4, 3)];
+
+#[test]
+fn hostile_bits_tags_are_rejected() {
+    let bytes = artifact_bytes();
+    // Sanity: both packed records are where the needles expect.
+    {
+        let mut probe = bytes.clone();
+        for (k, n) in PACKED_KN {
+            assert_eq!(
+                patch_u32_seq(&mut probe, &[1, k, n, 8], &[1, k, n, 8]),
+                1,
+                "packed record ({k}, {n}) not found — did the layout move?"
+            );
+        }
+    }
+    for hostile in [0u32, 1, 3, 5, 16, 255, u32::MAX] {
+        for (k, n) in PACKED_KN {
+            let mut m = bytes.clone();
+            assert_eq!(
+                patch_u32_seq(&mut m, &[1, k, n, 8], &[1, k, n, hostile]),
+                1
+            );
+            fix_digest(&mut m);
+            assert!(
+                artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+                "bits tag {hostile} on record ({k}, {n}) accepted"
+            );
+        }
+    }
+    // bits=4 is valid in isolation, but contradicts both the stored
+    // int8 panel length and the full-range unpacked weights.
+    for (k, n) in PACKED_KN {
+        let mut m = bytes.clone();
+        assert_eq!(patch_u32_seq(&mut m, &[1, k, n, 8], &[1, k, n, 4]), 1);
+        fix_digest(&mut m);
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "int8-length panel accepted as int4 on record ({k}, {n})"
+        );
+    }
+    // ...and the reverse on a genuine int4 artifact: widening the tag
+    // to 8 makes the nibble panel half the expected length.
+    let b4 = artifact::to_bytes(
+        &model_with(QuantKnobs { pow2: false, w_bits: 4 }),
+        fat::int8::Isa::Scalar,
+    );
+    artifact::load_from_bytes(b4.clone(), LoadOptions::default())
+        .expect("pristine int4 artifact loads");
+    for (k, n) in PACKED_KN {
+        let mut m = b4.clone();
+        assert_eq!(patch_u32_seq(&mut m, &[1, k, n, 4], &[1, k, n, 8]), 1);
+        fix_digest(&mut m);
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "int4-length panel accepted as int8 on record ({k}, {n})"
+        );
+    }
+}
+
+#[test]
+fn hostile_shift_records_are_rejected() {
+    // The v3 layer record is `blocking quad, has_shift, ...`, so the
+    // default-quad needle extended by the flag pins each layer entry.
+    let bytes = artifact_bytes();
+    {
+        let mut probe = bytes.clone();
+        assert!(
+            patch_u32_seq(
+                &mut probe,
+                &[128, 64, 4, 1, 0],
+                &[128, 64, 4, 1, 0]
+            ) >= 2,
+            "has_shift=0 needle not found — did the layout move?"
+        );
+    }
+    // 1) Claim a shift table on a multiplier model: the reader then
+    // misparses the following record — a clean error, never a panic.
+    let mut m = bytes.clone();
+    assert!(patch_u32_seq(&mut m, &[128, 64, 4, 1, 0], &[128, 64, 4, 1, 1]) >= 2);
+    fix_digest(&mut m);
+    assert!(
+        artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+        "claimed shift table on a multiplier model accepted"
+    );
+    // 2) Unknown present-flag values.
+    for flag in [2u32, u32::MAX] {
+        let mut m = bytes.clone();
+        assert!(
+            patch_u32_seq(&mut m, &[128, 64, 4, 1, 0], &[128, 64, 4, 1, flag])
+                >= 2
+        );
+        fix_digest(&mut m);
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "has_shift flag {flag} accepted"
+        );
+    }
+
+    // 3) A genuine pow2 artifact: every conv-like requant pair is
+    // exactly (1<<30, s-1). Nudging the multipliers leaves a shift
+    // table that disagrees with the requant pairs — the load-time
+    // pow2 cross-check must reject it.
+    let pb = artifact::to_bytes(
+        &model_with(QuantKnobs { pow2: true, w_bits: 8 }),
+        fat::int8::Isa::Scalar,
+    );
+    artifact::load_from_bytes(pb.clone(), LoadOptions::default())
+        .expect("pristine pow2 artifact loads");
+    let mut m = pb.clone();
+    let patched =
+        patch_u32_seq(&mut m, &[1u32 << 30], &[(1u32 << 30) + 2]);
+    assert!(patched >= 2, "no pow2 multiplier found in the PLAN bytes");
+    fix_digest(&mut m);
+    assert!(
+        artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+        "shift table disagreeing with the requant pairs accepted"
+    );
+    // 4) Dropping the flag on a pow2 artifact misaligns the reader —
+    // again a clean error.
+    let mut m = pb;
+    assert!(patch_u32_seq(&mut m, &[128, 64, 4, 1, 1], &[128, 64, 4, 1, 0]) >= 2);
+    fix_digest(&mut m);
+    assert!(
+        artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+        "dropped shift flag on a pow2 model accepted"
+    );
 }
 
 #[test]

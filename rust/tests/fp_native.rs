@@ -150,6 +150,40 @@ fn native_finetune_runs_from_fresh_calibration_too() {
 }
 
 #[test]
+fn pow2_int4_spec_flows_through_the_whole_session() {
+    // `_pow2`/`_w4` knobs parsed off the mode string must survive the
+    // staged API end to end: fine-tune trains against the knob'd
+    // student, the fake-quant accuracy uses it, and the export carries
+    // shift tables + int4 panels into the engine.
+    let session = native_session("tiny_cnn");
+    let cal = session.calibrate(CalibOpts::images(25)).unwrap();
+    let spec = QuantSpec::parse("sym_vector_pow2_w4", "max").unwrap();
+    let th = cal.finetune(&spec, &fast_opts(6), |_, _, _| {}).unwrap();
+    assert_eq!(th.losses().len(), 6);
+    assert!(th.losses().iter().all(|l| l.is_finite() && *l >= 0.0));
+    let q = th.quant_accuracy(50).unwrap();
+    assert!((0.0..=1.0).contains(&q));
+
+    let qm = th.export().unwrap();
+    let (shift, mul, int4, int8) = qm.epilogue_summary();
+    assert!(shift > 0, "pow2 export produced no shift-only layers");
+    assert_eq!(mul, 0, "pow2 export left a multiplier epilogue behind");
+    assert!(int4 > 0, "w4 export packed no int4 panels");
+    let _ = int8; // depthwise layers stay unpacked
+
+    // and it still serves
+    let engine = th.serve(EngineOptions::threads(2)).unwrap();
+    let a8 = fat::coordinator::evaluate::int8_accuracy(&engine, 50).unwrap();
+    assert!((0.0..=1.0).contains(&a8));
+    // int4 + shift-only quantization is coarser but must stay sane on
+    // the tame builtin net
+    assert!(
+        (q - a8).abs() <= 0.25,
+        "int8 engine {a8} vs fake-quant student {q}"
+    );
+}
+
+#[test]
 fn native_calibrators_flow_through_hist_pass() {
     let session = native_session("tiny_cnn");
     let cal = session.calibrate(CalibOpts::images(25)).unwrap();

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use fat::coordinator::PipelineConfig;
 use fat::int8::serve::EngineOptions;
 use fat::quant::backend::{ModelView, NativeExec, Executor};
-use fat::quant::export::QuantMode;
+use fat::quant::export::{QuantKnobs, QuantMode};
 use fat::quant::session::{CalibOpts, QuantSession, QuantSpec, SessionCore};
 use fat::runtime::{pjrt_available, Registry, Runtime};
 
@@ -185,8 +185,9 @@ fn native_fake_quant_agrees_with_artifact_fake_quant() {
     for mode in [QuantMode::SymScalar, QuantMode::AsymVector] {
         let tr = native.identity_trainables(&view, mode).unwrap();
         let art_acc = core.quant_accuracy(mode, &stats, &tr, 200).unwrap();
-        let nat_acc =
-            native.quant_accuracy(&view, mode, &stats, &tr, 200).unwrap();
+        let nat_acc = native
+            .quant_accuracy(&view, mode, QuantKnobs::default(), &stats, &tr, 200)
+            .unwrap();
         assert!(
             (art_acc - nat_acc).abs() <= 0.05,
             "{mode:?}: artifact {art_acc} vs native {nat_acc}"

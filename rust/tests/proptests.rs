@@ -4,9 +4,9 @@
 
 use fat::int8::kernels::{self, Blocking, Isa, PackedWeights};
 use fat::int8::qtensor::{to_i8_domain, QTensor};
-use fat::int8::{gemm, im2col, tune};
+use fat::int8::{gemm, im2col, ops, tune};
 use fat::quant::scale::{
-    apply_multiplier, quantize_multiplier, QParams,
+    apply_multiplier, quantize_multiplier, rounding_rshift, QParams,
 };
 use fat::quant::thresholds as th;
 use fat::util::prop;
@@ -201,6 +201,107 @@ fn prop_packed_simd_gemm_matches_reference_random_shapes() {
                     out,
                     want,
                     "case {case}: ({m},{k},{n}) t={threads} isa={}",
+                    isa.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_int4_packed_gemm_matches_reference() {
+    // Nibble-packed weight panels must be bit-exact with the naive
+    // int8 oracle over the *same* (int4-valued) weights — across random
+    // shapes × every runtime-detected ISA × thread counts {1, 2, 8} ×
+    // both tuner-reachable strip widths.
+    prop::for_cases(79, 25, |case| {
+        let m = prop::usize_in(case, 0, 1, 33);
+        let k = prop::usize_in(case, 1, 1, 70);
+        let n = prop::usize_in(case, 2, 1, 80);
+        let zp = prop::usize_in(case, 3, 0, 61) as i32 - 30;
+        let a = prop::i8s(case + 900, m * k);
+        // the export grid is [-7, 7]: fold random i8s into int4 range
+        let b: Vec<i8> =
+            prop::i8s(case + 950, k * n).iter().map(|v| v % 8).collect();
+        assert!(kernels::fits_int4(&b));
+        let sums = gemm::col_sums(&b, k, n);
+        let want = gemm::gemm_ref(&a, zp, &b, m, k, n);
+        for nrw in [16usize, 32] {
+            let pw = PackedWeights::pack_bits(&b, k, n, nrw, 4);
+            let bk = Blocking { nr: nrw, ..Blocking::default() };
+            for isa in Isa::available() {
+                for threads in [1usize, 2, 8] {
+                    let mut out = vec![0i32; m * n];
+                    kernels::gemm_packed_parallel(
+                        &a, zp, &pw, &sums, m, &mut out, threads, isa, bk,
+                    );
+                    assert_eq!(
+                        out,
+                        want,
+                        "case {case}: ({m},{k},{n}) zp={zp} nr={nrw} \
+                         t={threads} isa={}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pow2_int4_pipeline_matches_scalar_oracle() {
+    // The deployed pow2 × int4 combination end to end at the kernel
+    // level: nibble-packed GEMM feeding the shift-only epilogue must be
+    // bit-exact with `gemm_ref` + scalar `rounding_rshift`, across ISA
+    // × threads {1, 2, 8}. This is the ISSUE-9 acceptance property —
+    // the multiplier epilogue double-rounds, so the oracle here is the
+    // shift form itself, not `apply_multiplier`.
+    prop::for_cases(83, 15, |case| {
+        let m = prop::usize_in(case, 0, 1, 17);
+        let k = prop::usize_in(case, 1, 1, 50);
+        let cout = prop::usize_in(case, 2, 1, 40);
+        let zp = prop::usize_in(case, 3, 0, 33) as i32 - 16;
+        let a = prop::i8s(case + 100, m * k);
+        let b: Vec<i8> =
+            prop::i8s(case + 200, k * cout).iter().map(|v| v % 8).collect();
+        let sums = gemm::col_sums(&b, k, cout);
+        let bias: Vec<i32> = prop::f32s(case + 300, cout, -400.0, 400.0)
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let shift: Vec<i32> = (0..cout)
+            .map(|c| prop::usize_in(case, 4 + c as u64, 0, 11) as i32)
+            .collect();
+        let out_qp = to_i8_domain(QParams::asymmetric(-1.0, 2.0));
+        let clamp = (-128i32, 127i32);
+        // scalar oracle over the unpacked reference GEMM
+        let acc_ref = gemm::gemm_ref(&a, zp, &b, m, k, cout);
+        let want: Vec<i8> = acc_ref
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let c = i % cout;
+                (rounding_rshift(v + bias[c], shift[c]) + out_qp.zero_point)
+                    .clamp(clamp.0, clamp.1) as i8
+            })
+            .collect();
+        let pw = PackedWeights::pack_bits(&b, k, cout, 16, 4);
+        let bk = Blocking { nr: 16, ..Blocking::default() };
+        for isa in Isa::available() {
+            for threads in [1usize, 2, 8] {
+                let mut acc = vec![0i32; m * cout];
+                kernels::gemm_packed_parallel(
+                    &a, zp, &pw, &sums, m, &mut acc, threads, isa, bk,
+                );
+                let mut got = Vec::new();
+                ops::requant_store_shift(
+                    &acc, &bias, &shift, out_qp, clamp, cout, &mut got, isa,
+                );
+                assert_eq!(
+                    got,
+                    want,
+                    "case {case}: ({m},{k},{cout}) zp={zp} t={threads} \
+                     isa={}",
                     isa.name()
                 );
             }
