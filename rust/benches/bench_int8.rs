@@ -260,6 +260,7 @@ fn main() {
         w_scales: vec![1.0],
         packed: None,
         blocking: Blocking::default(),
+        fused: false,
     };
     let dw_macs = 32 * 32 * 64 * 9;
     let mut dw_scalar = 0.0;
@@ -286,6 +287,98 @@ fn main() {
         log.add("dwconv_k3", "32x32x64", t, isa.name(), v, dw_macs);
         if t == 1 {
             report_speedup("dwconv_simd_vs_scalar_t1", dw_scalar, v);
+        }
+    }
+
+    // fused implicit-GEMM conv vs the staged im2col pipeline (ISSUE-10):
+    // identical packed panels and epilogue constants — the fused path
+    // skips the patch-matrix materialization and the i32 accumulator
+    // round-trip, so the gap is pure memory traffic
+    {
+        let qp = QParams::symmetric_signed(1.0);
+        for &(h, w, c, cout, k) in &[
+            (32usize, 32usize, 16usize, 32usize, 3usize),
+            (14, 14, 128, 128, 3),
+            (28, 28, 64, 64, 1),
+        ] {
+            let kk = k * k * c;
+            let xq = QTensor {
+                shape: vec![1, h, w, c],
+                data: prop::i8s(7, h * w * c),
+                qp,
+            };
+            let wq = prop::i8s(8, kk * cout);
+            let sums = gemm::col_sums(&wq, kk, cout);
+            let pw = PackedWeights::pack(&wq, kk, cout);
+            let mk = |fused: bool| QLayer {
+                w_q: wq.clone().into(),
+                w_sums: sums.clone(),
+                bias_q: vec![3i32; cout],
+                requant: vec![
+                    fat::quant::scale::quantize_multiplier(0.001);
+                    cout
+                ],
+                requant_shift: None,
+                out_qp: qp,
+                clamp: (-127, 127),
+                w_scales: vec![1.0],
+                packed: Some(pw.clone()),
+                blocking: Blocking::default(),
+                fused,
+            };
+            let staged_l = mk(false);
+            let fused_l = mk(true);
+            let macs = h * w * kk * cout; // stride-1 SAME: m = h·w
+            let name = format!("conv_k{k}_{h}x{w}x{c}to{cout}");
+            let shape = format!("{h}x{w}x{c}->{cout}");
+            for t in [1usize, 4] {
+                let mut ctx = ops::OpCtx::with_threads(t);
+                let staged = bench_throughput(
+                    &format!("{name}_staged_t{t}_macs"),
+                    &opts,
+                    macs,
+                    || {
+                        let y = ops::conv2d(
+                            &xq, &staged_l, k, 1, cout, &mut ctx,
+                            Vec::new(),
+                        );
+                        std::hint::black_box(y.data[0]);
+                    },
+                );
+                log.add(
+                    &name,
+                    &shape,
+                    t,
+                    &format!("staged-{}", isa.name()),
+                    staged,
+                    macs,
+                );
+                let fused = bench_throughput(
+                    &format!("{name}_fused_t{t}_macs"),
+                    &opts,
+                    macs,
+                    || {
+                        let y = ops::conv2d_fused(
+                            &xq, &fused_l, k, 1, cout, &mut ctx,
+                            Vec::new(), None,
+                        );
+                        std::hint::black_box(y.data[0]);
+                    },
+                );
+                log.add(
+                    &name,
+                    &shape,
+                    t,
+                    &format!("fused-{}", isa.name()),
+                    fused,
+                    macs,
+                );
+                report_speedup(
+                    &format!("{name}_fused_vs_staged_t{t}"),
+                    staged,
+                    fused,
+                );
+            }
         }
     }
 

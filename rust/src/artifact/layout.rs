@@ -55,13 +55,17 @@ pub const SECTIONS: [u32; 3] = [SEC_GRAPH, SEC_PLAN, SEC_PANEL];
 /// additive changes). v2 appends a per-layer GEMM [`Blocking`] table
 /// (autotuner output, DESIGN.md §12); v3 appends the shift-only requant
 /// table (`QLayer::requant_shift`, pow2 exports) and a bits tag on each
-/// packed panel record (int4 nibble panels, DESIGN.md §13). Older files
-/// are still readable: v1/v2 layers get [`Blocking::default`] (v1), no
-/// shift table, and 8-bit panels.
+/// packed panel record (int4 nibble panels, DESIGN.md §13); v4 appends
+/// the per-layer fused implicit-GEMM bit (`QLayer::fused`, DESIGN.md
+/// §14) between the shift table and the packed-panel record. Older
+/// files are still readable: v1/v2 layers get [`Blocking::default`]
+/// (v1), no shift table, and 8-bit panels; v1–v3 layers default the
+/// fused bit to "on for every packed layer" so existing tuned
+/// artifacts inherit the fused win without a re-export.
 ///
 /// [`Blocking`]: crate::int8::kernels::Blocking
 /// [`Blocking::default`]: crate::int8::kernels::Blocking::default
-pub const PLAN_VERSION: u32 = 3;
+pub const PLAN_VERSION: u32 = 4;
 /// Oldest PLAN version this build still reads.
 pub const PLAN_VERSION_MIN: u32 = 1;
 

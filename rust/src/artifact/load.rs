@@ -489,6 +489,19 @@ fn get_layer(
     } else {
         None
     };
+    // v4: fused implicit-GEMM bit, between the shift table and the
+    // packed record. None (pre-v4 file) defaults from the packed record
+    // below — the export default — so tuned v2/v3 artifacts inherit the
+    // fused win without a re-export.
+    let fused = if version >= 4 {
+        match r.u32()? {
+            0 => Some(false),
+            1 => Some(true),
+            other => bail!("bad fused flag {other}"),
+        }
+    } else {
+        None
+    };
     let packed = match r.u32()? {
         0 => None,
         1 => {
@@ -502,6 +515,16 @@ fn get_layer(
         }
         other => bail!("bad has_packed flag {other}"),
     };
+    // A fused bit without a panel to drive the micro-tiles is a
+    // contradiction — the engine has no fused unpacked path. Reject
+    // rather than silently clearing: the file is lying about itself.
+    let fused = match fused {
+        Some(true) if packed.is_none() => {
+            bail!("fused flag set on a layer without a packed panel")
+        }
+        Some(f) => f,
+        None => packed.is_some(),
+    };
     Ok(QLayer {
         w_q,
         w_sums,
@@ -513,6 +536,7 @@ fn get_layer(
         w_scales,
         packed,
         blocking,
+        fused,
     })
 }
 

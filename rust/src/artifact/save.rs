@@ -199,6 +199,13 @@ fn put_layer(w: &mut Writer, panel: &mut Vec<u8>, l: &QLayer, version: u32) {
             "PLAN v{version} cannot represent a shift-only requant table"
         );
     }
+    if version >= 4 {
+        // Fused implicit-GEMM bit (DESIGN.md §14). Sits before the
+        // packed record, mirroring the shift flag. v1–v3 writers drop
+        // the bit silently: those readers default it from the packed
+        // record, which is the export default anyway.
+        w.u32(l.fused as u32);
+    }
     match &l.packed {
         Some(pw) => {
             debug_assert_eq!(

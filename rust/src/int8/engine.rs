@@ -55,6 +55,14 @@ pub struct QLayer {
     /// the `.fatm` PLAN section (v2) and validated on load. Its `nr`
     /// always matches the strip width `packed` was packed with.
     pub blocking: super::kernels::Blocking,
+    /// Execute this layer on the fused implicit-GEMM path
+    /// (`ops::conv2d_fused`, DESIGN.md §14): A micro-panels assembled on
+    /// the fly from the NHWC input and requant applied in the
+    /// register-tile epilogue — no patch matrix, no i32 buffer.
+    /// Tuner-assigned (`int8::tune`), persisted in the `.fatm` PLAN
+    /// section (v4); only meaningful with `packed`. The `FAT_FUSED` env
+    /// gate can veto it process-wide at run time.
+    pub fused: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -93,6 +101,31 @@ pub(crate) fn shard_geometry(
     let t = threads.max(1);
     let shards = t.min(batch.max(1));
     (shards, t.div_ceil(shards), batch.div_ceil(shards))
+}
+
+/// Peak scratch footprint of one execution state, in bytes: the staged
+/// conv path's im2col patch matrix and i32 accumulator high-water
+/// marks ([`OpCtx::scratch_bytes`]) plus the activation [`Arena`]'s
+/// pooled-capacity high-water mark. Vec capacities only grow, so these
+/// are true peaks over the state's lifetime. Fused layers bypass the
+/// first two entirely — `/stats` and `fat info --fatm` surface this so
+/// the fused path's memory win is observable, not just timed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    pub patches_bytes: usize,
+    pub acc_bytes: usize,
+    pub arena_bytes: usize,
+}
+
+impl ScratchStats {
+    /// Element-wise max — aggregates peaks across pooled states.
+    pub fn max(self, o: ScratchStats) -> ScratchStats {
+        ScratchStats {
+            patches_bytes: self.patches_bytes.max(o.patches_bytes),
+            acc_bytes: self.acc_bytes.max(o.acc_bytes),
+            arena_bytes: self.arena_bytes.max(o.arena_bytes),
+        }
+    }
 }
 
 /// Reusable per-worker execution state: the plan's slot table, the
@@ -160,6 +193,16 @@ impl ExecState {
     pub fn pooled_buffers(&self) -> usize {
         self.arena.pooled()
     }
+
+    /// Peak scratch/arena footprint of this state ([`ScratchStats`]).
+    pub fn scratch_stats(&self) -> ScratchStats {
+        let (patches_bytes, acc_bytes) = self.ctx.scratch_bytes();
+        ScratchStats {
+            patches_bytes,
+            acc_bytes,
+            arena_bytes: self.arena.hi_bytes(),
+        }
+    }
 }
 
 /// A fully-quantized model, ready for integer-only inference.
@@ -218,6 +261,26 @@ impl QModel {
             }
         }
         (sh, mu, b4, b8)
+    }
+
+    /// Per-layer census of the conv/dense execution path:
+    /// `(fused_layers, staged_layers)` — surfaced by `/stats` and
+    /// `fat info --fatm`. Counts the plan's fused bits (what the tuner
+    /// chose and the artifact persists); the run-time `FAT_FUSED` gate
+    /// can still veto them process-wide. Unpacked layers (depthwise,
+    /// ad-hoc) always count as staged.
+    pub fn fused_summary(&self) -> (usize, usize) {
+        let (mut fu, mut st) = (0usize, 0usize);
+        for p in &self.plan.params {
+            if let QNode::Layer(l) = p {
+                if l.fused && l.packed.is_some() {
+                    fu += 1;
+                } else {
+                    st += 1;
+                }
+            }
+        }
+        (fu, st)
     }
 
     /// Run a float NHWC batch through the integer engine; returns f32
@@ -383,7 +446,77 @@ impl QModel {
         }
         state.slots.resize_with(plan.num_slots, || None);
         state.slots[plan.input_slot] = Some(input);
-        for step in &plan.steps {
+        let steps = &plan.steps;
+        let mut si = 0usize;
+        while si < steps.len() {
+            let step = &steps[si];
+            // Fused conv → add chain (DESIGN.md §14): when this conv runs
+            // the fused epilogue and the next step is a residual add
+            // whose liveness proves it is the sole consumer of the conv
+            // output (the add frees the conv's dst slot), the add's
+            // rescale runs inside the conv's register-tile epilogue and
+            // the intermediate conv activation is never materialized.
+            if step.op == Op::Conv {
+                if let (Some(nx), QNode::Layer(l)) =
+                    (steps.get(si + 1), &plan.params[step.param])
+                {
+                    if let QNode::Add(p) = &plan.params[nx.param] {
+                        let conv_is_a = nx.a == step.dst;
+                        let conv_is_b = nx.b == Some(step.dst);
+                        if ops::takes_fused_path(l)
+                            && (conv_is_a ^ conv_is_b)
+                            && nx.frees.contains(&step.dst)
+                        {
+                            let other =
+                                if conv_is_a { nx.b.unwrap() } else { nx.a };
+                            let out_buf = state.arena.take();
+                            let out = {
+                                let a = state.slots[step.a]
+                                    .as_ref()
+                                    .ok_or_else(|| {
+                                        anyhow::anyhow!(
+                                            "{}: input slot {} empty",
+                                            step.id,
+                                            step.a
+                                        )
+                                    })?;
+                                let b = state.slots[other]
+                                    .as_ref()
+                                    .ok_or_else(|| {
+                                        anyhow::anyhow!(
+                                            "{}: input slot {other} empty",
+                                            nx.id
+                                        )
+                                    })?;
+                                ops::conv2d_fused(
+                                    a,
+                                    l,
+                                    step.k,
+                                    step.stride,
+                                    step.cout,
+                                    &mut state.ctx,
+                                    out_buf,
+                                    Some(ops::ConvResidual {
+                                        b,
+                                        params: p,
+                                        conv_is_a,
+                                    }),
+                                )
+                            };
+                            // both steps' frees; the conv dst was never
+                            // materialized, so its take() is a no-op
+                            for &f in step.frees.iter().chain(&nx.frees) {
+                                if let Some(dead) = state.slots[f].take() {
+                                    state.arena.put(dead.data);
+                                }
+                            }
+                            state.slots[nx.dst] = Some(out);
+                            si += 2;
+                            continue;
+                        }
+                    }
+                }
+            }
             let out_buf = state.arena.take();
             let out = {
                 let a = state.slots[step.a].as_ref().ok_or_else(|| {
@@ -429,6 +562,7 @@ impl QModel {
                 }
             }
             state.slots[step.dst] = Some(out);
+            si += 1;
         }
         state.slots[plan.output_slot]
             .take()

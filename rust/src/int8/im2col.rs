@@ -1,5 +1,102 @@
 //! NHWC im2col for SAME-padded k×k convolutions over i8 activations.
 //! Out-of-image taps are filled with the input zero-point (= real 0.0).
+//!
+//! Two consumers share the index math here: the staged conv path
+//! materializes the whole patch matrix via [`im2col_into`], and the
+//! fused implicit-GEMM path (`kernels::gemm_fused`) assembles a few
+//! rows at a time through [`PatchGeom::fill_rows`] so the matrix never
+//! exists. Both produce byte-identical rows by construction —
+//! `im2col_into` is implemented on top of `fill_rows`.
+
+/// Geometry of the implicit im2col view of one SAME-padded conv input:
+/// the `(n·oh·ow, k·k·c)` patch matrix [`im2col_into`] would produce,
+/// addressable one row range at a time without materializing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PatchGeom {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+    /// Input zero-point — the value of out-of-image taps.
+    pub zp: i8,
+}
+
+impl PatchGeom {
+    /// Resolve the SAME-padding geometry (matches XLA:
+    /// `pad_total = (o-1)*s + k - in`, split top/left-biased).
+    pub fn new(
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        stride: usize,
+        zp: i8,
+    ) -> PatchGeom {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
+        let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
+        PatchGeom { n, h, w, c, k, stride, oh, ow, pad_top, pad_left, zp }
+    }
+
+    /// Rows of the virtual patch matrix (= output pixels, `n·oh·ow`).
+    pub fn rows(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    /// Columns of the virtual patch matrix (= `k·k·c`).
+    pub fn cols(&self) -> usize {
+        self.k * self.k * self.c
+    }
+
+    /// Assemble rows `[row0, row0 + mr)` of the virtual patch matrix
+    /// into the first `mr * cols()` bytes of `dst` (row-major): fill
+    /// each row with the zero-point, then copy the contiguous in-bounds
+    /// `kx` span of every in-bounds kernel row straight from the input
+    /// image (consecutive `kx` taps are consecutive input pixels, so
+    /// one `copy_from_slice` covers the whole span). Byte-identical to
+    /// the same rows of [`im2col_into`]'s output.
+    pub fn fill_rows(&self, x: &[i8], row0: usize, mr: usize, dst: &mut [i8]) {
+        let (k, c, stride) = (self.k, self.c, self.stride);
+        let cols = self.cols();
+        debug_assert!(row0 + mr <= self.rows());
+        for (r, drow) in
+            dst[..mr * cols].chunks_exact_mut(cols).enumerate()
+        {
+            let row = row0 + r;
+            let ni = row / (self.oh * self.ow);
+            let oy = (row / self.ow) % self.oh;
+            let ox = row % self.ow;
+            drow.fill(self.zp);
+            let x0 = ox * stride;
+            // in-bounds kx span: 0 <= x0 + kx - pad_left < w
+            let kx_lo = self.pad_left.saturating_sub(x0).min(k);
+            let kx_hi = (self.w + self.pad_left).saturating_sub(x0).min(k);
+            if kx_lo >= kx_hi {
+                continue; // every tap of every kernel row is padding
+            }
+            let ix0 = x0 + kx_lo - self.pad_left;
+            let span = (kx_hi - kx_lo) * c;
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - self.pad_top as isize;
+                if iy < 0 || iy >= self.h as isize {
+                    continue;
+                }
+                let src = ((ni * self.h + iy as usize) * self.w + ix0) * c;
+                let d0 = (ky * k + kx_lo) * c;
+                drow[d0..d0 + span]
+                    .copy_from_slice(&x[src..src + span]);
+            }
+        }
+    }
+}
 
 /// im2col: input (n, h, w, c) i8 → patches ((n*oh*ow), (k*k*c)) i8.
 /// Returns (patches, oh, ow).
@@ -57,37 +154,11 @@ pub fn im2col_into(
         }
         return (oh, ow);
     }
-    // SAME padding (matches XLA): pad_total = (o-1)*s + k - h
-    let pad_top = (((oh - 1) * stride + k).saturating_sub(h)) / 2;
-    let pad_left = (((ow - 1) * stride + k).saturating_sub(w)) / 2;
-    let cols = k * k * c;
+    let g = PatchGeom::new(n, h, w, c, k, stride, zp);
+    debug_assert_eq!((g.oh, g.ow), (oh, ow));
     out.clear();
-    out.resize(n * oh * ow * cols, zp);
-    for ni in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let dst0 = ((ni * oh + oy) * ow + ox) * cols;
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad_top as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..k {
-                        let ix =
-                            (ox * stride + kx) as isize - pad_left as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let src =
-                            ((ni * h + iy as usize) * w + ix as usize) * c;
-                        let dst = dst0 + (ky * k + kx) * c;
-                        out[dst..dst + c]
-                            .copy_from_slice(&x[src..src + c]);
-                    }
-                }
-            }
-        }
-    }
+    out.resize(g.rows() * g.cols(), zp);
+    g.fill_rows(x, 0, g.rows(), out);
     (oh, ow)
 }
 
@@ -156,6 +227,38 @@ mod tests {
         let (oh, ow) = im2col_into(&x, 1, 3, 3, 1, 1, 1, -5, &mut buf);
         assert_eq!((oh, ow), (3, 3));
         assert_eq!(buf, x);
+    }
+
+    #[test]
+    fn fill_rows_matches_full_im2col_windows() {
+        // every (shape, stride, row window) of the implicit view must
+        // be byte-identical to the materialized patch matrix
+        for &(n, h, w, c, k, stride) in &[
+            (2usize, 5usize, 4usize, 3usize, 3usize, 1usize),
+            (2, 5, 4, 3, 3, 2),
+            (1, 1, 1, 2, 3, 1), // all-padding borders (1×1 image)
+            (1, 4, 4, 1, 5, 2), // window wider than the image
+        ] {
+            let x: Vec<i8> =
+                (0..n * h * w * c).map(|i| (i as i8).wrapping_mul(7)).collect();
+            let (full, oh, ow) = im2col_i8(&x, n, h, w, c, k, stride, -9);
+            let g = PatchGeom::new(n, h, w, c, k, stride, -9);
+            assert_eq!((g.oh, g.ow), (oh, ow));
+            let cols = g.cols();
+            for row0 in 0..g.rows() {
+                let mr_max = 3usize.min(g.rows() - row0);
+                for mr in 1..=mr_max {
+                    let mut dst = vec![55i8; mr * cols + 2]; // stale + slack
+                    g.fill_rows(&x, row0, mr, &mut dst);
+                    assert_eq!(
+                        &dst[..mr * cols],
+                        &full[row0 * cols..(row0 + mr) * cols],
+                        "k{k} s{stride} row0 {row0} mr {mr}"
+                    );
+                    assert_eq!(&dst[mr * cols..], &[55, 55]); // slack untouched
+                }
+            }
+        }
     }
 
     #[test]

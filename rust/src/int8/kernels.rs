@@ -49,6 +49,18 @@
 //! so the multiply-accumulate structure (and therefore bit-exactness
 //! vs `gemm_ref`) is shared with the int8 path, not re-argued.
 //!
+//! ## Fused implicit-GEMM (DESIGN.md §14)
+//!
+//! [`gemm_fused`] drives the same micro-tiles without ever
+//! materializing the im2col patch matrix or the i32 accumulator
+//! buffer: the A micro-panel is assembled per `mr`-row tile straight
+//! from the NHWC input ([`FusedA::Implicit`], or aliased for dense /
+//! 1×1-stride-1 shapes via [`FusedA::Direct`]), one accumulator tile
+//! persists across all k-panels of a strip, and a register-tile
+//! epilogue ([`FusedEpilogue`]) requantizes it directly to i8 — with
+//! an optional fused residual add ([`FusedResidual`]) for
+//! `conv → add` chains.
+//!
 //! ## Bit-exactness
 //!
 //! Products of i8 (and of `(x - zp) · w` in the depthwise tap, with
@@ -489,51 +501,9 @@ pub fn gemm_packed(
             while m0 < m {
                 let mr = mr_b.min(m - m0);
                 let mut acc = [[0i32; NR]; MR_MAX];
-                if pw.bits == 4 {
-                    match isa {
-                        // The nibble decode has no 512-bit variant; the
-                        // VNNI detection gate guarantees AVX2 is there.
-                        #[cfg(target_arch = "x86_64")]
-                        Isa::Avx2 | Isa::Avx512Vnni => unsafe {
-                            microtile_avx2_i4(
-                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                            )
-                        },
-                        #[cfg(target_arch = "x86_64")]
-                        Isa::Sse2 => unsafe {
-                            microtile_sse2_i4(
-                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                            )
-                        },
-                        _ => microtile_scalar_i4(
-                            a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                        ),
-                    }
-                } else {
-                    match isa {
-                        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
-                        Isa::Avx512Vnni => unsafe {
-                            microtile_avx512vnni(
-                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                            )
-                        },
-                        #[cfg(target_arch = "x86_64")]
-                        Isa::Avx2 => unsafe {
-                            microtile_avx2(
-                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                            )
-                        },
-                        #[cfg(target_arch = "x86_64")]
-                        Isa::Sse2 => unsafe {
-                            microtile_sse2(
-                                a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                            )
-                        },
-                        _ => microtile_scalar(
-                            a, m0, k, strip, p0, pc, mr, nrw, &mut acc,
-                        ),
-                    }
-                }
+                microtile_dispatch(
+                    a, m0, k, strip, p0, pc, mr, nrw, &mut acc, isa, pw.bits,
+                );
                 for (r, arow) in acc.iter().take(mr).enumerate() {
                     let o0 = (m0 + r) * n + n0;
                     let orow = &mut out[o0..o0 + nc];
@@ -583,6 +553,316 @@ pub fn gemm_packed_parallel(
         let mc = out_slab.len() / n;
         let a_slab = &a[i * rows * k..i * rows * k + mc * k];
         gemm_packed(a_slab, a_zp, pw, bsums, mc, out_slab, isa, bk);
+    });
+}
+
+/// Route one micro-tile to the ISA / bit-width kernel. Shared by the
+/// staged [`gemm_packed`] and the fused [`gemm_fused`] drivers, so the
+/// fused path's inner loops are *the same code* as the staged path's —
+/// bit-exactness is inherited, not re-argued per driver.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn microtile_dispatch(
+    a: &[i8],
+    m0: usize,
+    k: usize,
+    strip: &[i8],
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+    acc: &mut [[i32; NR]; MR_MAX],
+    isa: Isa,
+    bits: usize,
+) {
+    if bits == 4 {
+        match isa {
+            // The nibble decode has no 512-bit variant; the
+            // VNNI detection gate guarantees AVX2 is there.
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 | Isa::Avx512Vnni => unsafe {
+                microtile_avx2_i4(a, m0, k, strip, p0, pc, mr, nr, acc)
+            },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => unsafe {
+                microtile_sse2_i4(a, m0, k, strip, p0, pc, mr, nr, acc)
+            },
+            _ => microtile_scalar_i4(a, m0, k, strip, p0, pc, mr, nr, acc),
+        }
+    } else {
+        match isa {
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512Vnni => unsafe {
+                microtile_avx512vnni(a, m0, k, strip, p0, pc, mr, nr, acc)
+            },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe {
+                microtile_avx2(a, m0, k, strip, p0, pc, mr, nr, acc)
+            },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => unsafe {
+                microtile_sse2(a, m0, k, strip, p0, pc, mr, nr, acc)
+            },
+            _ => microtile_scalar(a, m0, k, strip, p0, pc, mr, nr, acc),
+        }
+    }
+}
+
+/// The A operand of the fused implicit-GEMM driver ([`gemm_fused`]).
+pub enum FusedA<'a> {
+    /// Already row-major `(rows, k)` over the **global** row space:
+    /// dense layers, and 1×1 stride-1 convs aliasing the input
+    /// activation slab directly (the virtual patch matrix of a
+    /// stride-1 pointwise conv *is* the input — zero copies).
+    Direct(&'a [i8]),
+    /// SAME-padded k×k conv input addressed through its implicit
+    /// im2col view: micro-panel rows are assembled on demand via
+    /// [`PatchGeom::fill_rows`] and the patch matrix never exists.
+    ///
+    /// [`PatchGeom::fill_rows`]: super::im2col::PatchGeom::fill_rows
+    Implicit {
+        /// The NHWC input activation slab.
+        x: &'a [i8],
+        /// Its padded-patch geometry (`cols()` must equal the panel's
+        /// `k`).
+        geom: super::im2col::PatchGeom,
+    },
+}
+
+/// Second operand and rescale parameters of a fused residual add —
+/// numerically identical to running `ops::add` on the conv output as
+/// operand *a* and [`FusedResidual::b`] as operand *b*.
+pub struct FusedResidual<'a> {
+    /// The other add operand, `(rows, n)` row-major over the **global**
+    /// row space (indexed by absolute output row, so row-sharded calls
+    /// read the right slice).
+    pub b: &'a [i8],
+    /// Zero-point of the conv output (the add's *a*-operand domain).
+    pub a_zp: i32,
+    /// Zero-point of `b`.
+    pub b_zp: i32,
+    /// `(multiplier, shift)` rescaling the conv operand into the add's
+    /// fixed-point domain.
+    pub ma: (i32, i32),
+    /// `(multiplier, shift)` rescaling `b` likewise.
+    pub mb: (i32, i32),
+    /// The add's output zero-point.
+    pub out_zp: i32,
+    /// The add's output clamp.
+    pub clamp: (i32, i32),
+}
+
+/// Register-tile epilogue parameters for [`gemm_fused`]: everything
+/// needed to take an i32 accumulator tile to clamped i8 without a
+/// round-trip through a full accumulator buffer — the zero-point
+/// correction (`- a_zp · bsums[c]`), the bias add, one of the two
+/// requant forms, the output zero-point + clamp, and optionally a fused
+/// residual add.
+pub struct FusedEpilogue<'a> {
+    /// A-operand (activation) zero-point.
+    pub a_zp: i32,
+    /// Weight column sums (the gemmlowp zero-point term).
+    pub bsums: &'a [i32],
+    /// Per-channel bias, already in the accumulator domain.
+    pub bias: &'a [i32],
+    /// Per-channel fixed-point `(multiplier, shift)` table — used when
+    /// `shift` is `None` (mirrors `ops::requant_store`).
+    pub requant: &'a [(i32, i32)],
+    /// Per-channel rounding-shift table for pow2 exports (mirrors
+    /// `ops::requant_store_shift`); takes precedence over `requant`.
+    pub shift: Option<&'a [i32]>,
+    /// Output zero-point.
+    pub out_zp: i32,
+    /// Output clamp.
+    pub clamp: (i32, i32),
+    /// `conv → add` chain fusion: requantize, then rescale into the
+    /// add's output domain against [`FusedResidual::b`] — the
+    /// intermediate conv activation never exists.
+    pub residual: Option<FusedResidual<'a>>,
+}
+
+/// Fused implicit-GEMM conv/dense driver: one pass from the input
+/// activation to clamped i8 output. Per `mr`-row tile the A micro-panel
+/// is assembled on the fly (or aliased — [`FusedA::Direct`]), every
+/// `kc`-pair panel of one strip accumulates into a single
+/// stack-resident i32 tile, and [`fused_epilogue_tile`] requantizes
+/// that tile straight into `out` — neither the patch matrix nor the
+/// i32 accumulator buffer is ever materialized. Computes the virtual
+/// output rows `[row0, row0 + m)`; `out` is that shard's `(m, n)` i8
+/// slab.
+///
+/// Bit-exactness vs the staged path: the micro-tiles are the *same
+/// functions* [`gemm_packed`] dispatches to (an `mr × k` row panel with
+/// row stride `k` is indistinguishable from an `mr`-row window of the
+/// full patch matrix, and [`PatchGeom::fill_rows`] produces
+/// byte-identical rows to `im2col_into`); the per-strip accumulation
+/// only regroups associative i32 adds; and the epilogue applies the
+/// identical scalar formulas as `ops::requant_store` /
+/// `ops::requant_store_shift` / `ops::add`. So fused output equals
+/// staged output byte for byte on every ISA, blocking and thread
+/// count.
+///
+/// [`PatchGeom::fill_rows`]: super::im2col::PatchGeom::fill_rows
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused(
+    a: &FusedA,
+    row0: usize,
+    m: usize,
+    pw: &PackedWeights,
+    ep: &FusedEpilogue,
+    out: &mut [i8],
+    isa: Isa,
+    bk: Blocking,
+) {
+    let (k, n) = (pw.k, pw.n);
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(bk.nr, pw.nr, "blocking/panel strip width mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if let FusedA::Implicit { geom, .. } = a {
+        debug_assert_eq!(geom.cols(), k, "patch geometry/panel mismatch");
+        debug_assert!(row0 + m <= geom.rows());
+    }
+    // Defensive clamps, mirroring `gemm_packed`.
+    let kc = (bk.kc.max(2) & !1).min(8192);
+    let mr_b = bk.mr.clamp(1, MR_MAX);
+    let nrw = pw.nr;
+    let pairs_total = pw.pk / 2;
+    // Row-panel scratch for the implicit view: `mr_b` (≤ MR_MAX)
+    // virtual patch rows, filled once per m-tile and reused across
+    // every strip and k-panel — L1/L2-resident for any realistic
+    // `k·k·c`, and a vanishing fraction of the full patch matrix.
+    let mut panel: Vec<i8> = match a {
+        FusedA::Direct(_) => Vec::new(),
+        FusedA::Implicit { .. } => vec![0i8; mr_b * k],
+    };
+    let mut m0 = 0usize;
+    while m0 < m {
+        let mr = mr_b.min(m - m0);
+        let (aref, arow0): (&[i8], usize) = match a {
+            FusedA::Direct(d) => {
+                debug_assert!((row0 + m0 + mr) * k <= d.len());
+                (d, row0 + m0)
+            }
+            FusedA::Implicit { x, geom } => {
+                geom.fill_rows(x, row0 + m0, mr, &mut panel);
+                (panel.as_slice(), 0)
+            }
+        };
+        for ns in 0..pw.strips {
+            let n0 = ns * nrw;
+            let nc = nrw.min(n - n0);
+            let strip = pw.strip(ns);
+            // One accumulator tile persists across *all* k-panels of
+            // this strip (the micro-tiles load-accumulate-store), so
+            // the epilogue runs exactly once per (m-tile, strip).
+            let mut acc = [[0i32; NR]; MR_MAX];
+            let mut p0 = 0usize;
+            while p0 < pairs_total {
+                let pc = (kc / 2).min(pairs_total - p0);
+                microtile_dispatch(
+                    aref, arow0, k, strip, p0, pc, mr, nrw, &mut acc, isa,
+                    pw.bits,
+                );
+                p0 += pc;
+            }
+            fused_epilogue_tile(&acc, ep, row0 + m0, m0, mr, n0, nc, n, out);
+        }
+        m0 += mr_b;
+    }
+}
+
+/// Requantize one `(mr, nc)` accumulator tile into `out` rows while it
+/// is still cache-hot — the scalar formulas of `ops::requant_store`
+/// (multiplier), `ops::requant_store_shift` (pow2 rounding shift) and
+/// `ops::add` (fused residual), verbatim. The epilogue is `O(mr·nc)`
+/// against the tile's `O(mr·nc·k)` multiply work, so this scalar loop
+/// costs ~`1/k` of the kernel and vectorizing it would not move the
+/// total.
+///
+/// `grow0` is the tile's absolute output row (for indexing the
+/// residual's global `b` slab); `m0` its row offset within `out`.
+#[allow(clippy::too_many_arguments)]
+fn fused_epilogue_tile(
+    acc: &[[i32; NR]; MR_MAX],
+    ep: &FusedEpilogue,
+    grow0: usize,
+    m0: usize,
+    mr: usize,
+    n0: usize,
+    nc: usize,
+    n: usize,
+    out: &mut [i8],
+) {
+    use crate::quant::scale::{apply_multiplier, rounding_rshift};
+    for (r, arow) in acc.iter().take(mr).enumerate() {
+        let o0 = (m0 + r) * n + n0;
+        let orow = &mut out[o0..o0 + nc];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let c = n0 + j;
+            let mut v = arow[j];
+            if ep.a_zp != 0 {
+                v -= ep.a_zp * ep.bsums[c];
+            }
+            v += ep.bias[c];
+            let q = match ep.shift {
+                Some(sh) => rounding_rshift(v, sh[c]),
+                None => {
+                    let (mq, s) = ep.requant[c];
+                    apply_multiplier(v, mq, s)
+                }
+            } + ep.out_zp;
+            let q = q.clamp(ep.clamp.0, ep.clamp.1);
+            *o = match &ep.residual {
+                None => q as i8,
+                Some(res) => {
+                    let qb = res.b[(grow0 + r) * n + c] as i32;
+                    let va = apply_multiplier(
+                        (q - res.a_zp) << 20,
+                        res.ma.0,
+                        res.ma.1,
+                    );
+                    let vb = apply_multiplier(
+                        (qb - res.b_zp) << 20,
+                        res.mb.0,
+                        res.mb.1,
+                    );
+                    let y = rounding_rshift(va + vb, 20) + res.out_zp;
+                    y.clamp(res.clamp.0, res.clamp.1) as i8
+                }
+            };
+        }
+    }
+}
+
+/// Row-sharded [`gemm_fused`] over the persistent worker pool, shard
+/// sizes rounded up to `bk.grain` rows exactly like
+/// [`gemm_packed_parallel`]. Workers own disjoint `out` row slabs and
+/// each computes its rows identically to the serial driver, so every
+/// thread count is bit-exact.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_fused_parallel(
+    a: &FusedA,
+    m: usize,
+    pw: &PackedWeights,
+    ep: &FusedEpilogue,
+    out: &mut [i8],
+    threads: usize,
+    isa: Isa,
+    bk: Blocking,
+) {
+    let n = pw.n;
+    debug_assert_eq!(out.len(), m * n);
+    let t = threads.max(1).min(m.max(1));
+    if t <= 1 || n == 0 {
+        return gemm_fused(a, 0, m, pw, ep, out, isa, bk);
+    }
+    let g = bk.grain.clamp(1, 4096);
+    let rows = m.div_ceil(t).div_ceil(g) * g;
+    crate::util::threads::pool().run_chunks(out, rows * n, |i, out_slab| {
+        let mc = out_slab.len() / n;
+        gemm_fused(a, i * rows, mc, pw, ep, out_slab, isa, bk);
     });
 }
 
@@ -1418,6 +1698,326 @@ mod tests {
                         isa.name()
                     );
                 }
+            }
+        }
+    }
+
+    /// The staged store formulas (`ops::requant_store` /
+    /// `ops::requant_store_shift`), inlined as the fused oracle.
+    fn staged_epilogue(
+        acc: &[i32],
+        bias: &[i32],
+        requant: &[(i32, i32)],
+        shift: Option<&[i32]>,
+        out_zp: i32,
+        clamp: (i32, i32),
+        n: usize,
+    ) -> Vec<i8> {
+        use crate::quant::scale::{apply_multiplier, rounding_rshift};
+        acc.iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                let c = i % n;
+                let v = a + bias[c];
+                let q = match shift {
+                    Some(sh) => rounding_rshift(v, sh[c]),
+                    None => {
+                        let (mq, s) = requant[c];
+                        apply_multiplier(v, mq, s)
+                    }
+                } + out_zp;
+                q.clamp(clamp.0, clamp.1) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_direct_matches_staged_epilogue_across_isas_and_threads() {
+        for &(m, k, n, zp) in prop::SHAPES {
+            let a = prop::i8s(61, m * k);
+            let b = prop::i8s(62, k * n);
+            let sums = col_sums(&b, k, n);
+            let pw = PackedWeights::pack(&b, k, n);
+            let bias: Vec<i32> =
+                (0..n).map(|c| (c as i32 % 19) - 9).collect();
+            let requant: Vec<(i32, i32)> =
+                (0..n).map(|c| (1 << 30, (c as i32 % 3) + 4)).collect();
+            let shifts: Vec<i32> =
+                (0..n).map(|c| (c as i32 % 5) + 3).collect();
+            // staged oracle: full i32 GEMM, then the scalar store pass
+            let mut acc = vec![0i32; m * n];
+            gemm_packed(
+                &a,
+                zp,
+                &pw,
+                &sums,
+                m,
+                &mut acc,
+                Isa::Scalar,
+                Blocking::default(),
+            );
+            for use_shift in [false, true] {
+                let sh = use_shift.then_some(shifts.as_slice());
+                let want = staged_epilogue(
+                    &acc, &bias, &requant, sh, -1, (-128, 127), n,
+                );
+                let ep = FusedEpilogue {
+                    a_zp: zp,
+                    bsums: &sums,
+                    bias: &bias,
+                    requant: &requant,
+                    shift: sh,
+                    out_zp: -1,
+                    clamp: (-128, 127),
+                    residual: None,
+                };
+                for isa in Isa::available() {
+                    for threads in [1usize, 2, 8] {
+                        let mut out = vec![77i8; m * n];
+                        gemm_fused_parallel(
+                            &FusedA::Direct(&a),
+                            m,
+                            &pw,
+                            &ep,
+                            &mut out,
+                            threads,
+                            isa,
+                            Blocking::default(),
+                        );
+                        assert_eq!(
+                            out,
+                            want,
+                            "({m},{k},{n}) zp={zp} shift={use_shift} \
+                             t={threads} {}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_implicit_view_matches_direct_on_materialized_patches() {
+        // The implicit im2col A operand must equal Direct fed the
+        // materialized patch matrix — same panels, same epilogue.
+        for &(nb, h, w, c, k, stride) in &[
+            (1usize, 6usize, 6usize, 3usize, 3usize, 1usize),
+            (2, 5, 4, 2, 3, 2),
+            (1, 7, 7, 1, 5, 2),
+        ] {
+            let x = prop::i8s(63, nb * h * w * c);
+            let g = crate::int8::im2col::PatchGeom::new(
+                nb, h, w, c, k, stride, -3,
+            );
+            let (m, kk) = (g.rows(), g.cols());
+            let (full, _, _) = crate::int8::im2col::im2col_i8(
+                &x, nb, h, w, c, k, stride, -3,
+            );
+            let cout = 20usize;
+            for bits in [8usize, 4] {
+                let wts: Vec<i8> = if bits == 4 {
+                    prop::i8s(64, kk * cout).iter().map(|&v| v % 8).collect()
+                } else {
+                    prop::i8s(64, kk * cout)
+                };
+                let sums = col_sums(&wts, kk, cout);
+                let pw = PackedWeights::pack_bits(&wts, kk, cout, NR, bits);
+                let bias: Vec<i32> =
+                    (0..cout).map(|i| i as i32 * 3 - 5).collect();
+                let requant: Vec<(i32, i32)> = vec![(1 << 30, 6); cout];
+                let ep = FusedEpilogue {
+                    a_zp: -3,
+                    bsums: &sums,
+                    bias: &bias,
+                    requant: &requant,
+                    shift: None,
+                    out_zp: 2,
+                    clamp: (-128, 127),
+                    residual: None,
+                };
+                let mut want = vec![0i8; m * cout];
+                gemm_fused(
+                    &FusedA::Direct(&full),
+                    0,
+                    m,
+                    &pw,
+                    &ep,
+                    &mut want,
+                    Isa::Scalar,
+                    Blocking::default(),
+                );
+                for isa in Isa::available() {
+                    for threads in [1usize, 3] {
+                        let mut out = vec![-9i8; m * cout];
+                        gemm_fused_parallel(
+                            &FusedA::Implicit { x: &x, geom: g },
+                            m,
+                            &pw,
+                            &ep,
+                            &mut out,
+                            threads,
+                            isa,
+                            Blocking::default(),
+                        );
+                        assert_eq!(
+                            out,
+                            want,
+                            "k{k} s{stride} bits{bits} t{threads} {}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_blocking_sweep_matches_default_schedule() {
+        // Fused output must be schedule-independent, like the staged
+        // GEMM: every tuner-reachable blocking gives identical bytes.
+        let cands = [
+            Blocking { kc: 2, nr: 16, mr: 1, grain: 1 },
+            Blocking { kc: 64, nr: 32, mr: 2, grain: 4 },
+            Blocking { kc: 256, nr: 64, mr: MR_MAX, grain: 8 },
+        ];
+        let (nb, h, w, c, k, stride) = (2usize, 6, 5, 3, 3, 1);
+        let x = prop::i8s(71, nb * h * w * c);
+        let g = crate::int8::im2col::PatchGeom::new(nb, h, w, c, k, stride, 4);
+        let (m, kk, cout) = (g.rows(), g.cols(), 24usize);
+        let wts = prop::i8s(72, kk * cout);
+        let sums = col_sums(&wts, kk, cout);
+        let bias: Vec<i32> = (0..cout).map(|i| 11 - i as i32).collect();
+        let requant: Vec<(i32, i32)> = vec![((1 << 30) + 333, 5); cout];
+        let ep = |sums: &[i32], bias: &[i32], rq: &[(i32, i32)]| FusedEpilogue {
+            a_zp: 4,
+            bsums: sums,
+            bias,
+            requant: rq,
+            shift: None,
+            out_zp: 0,
+            clamp: (-128, 127),
+            residual: None,
+        };
+        let pw0 = PackedWeights::pack(&wts, kk, cout);
+        let mut want = vec![0i8; m * cout];
+        gemm_fused(
+            &FusedA::Implicit { x: &x, geom: g },
+            0,
+            m,
+            &pw0,
+            &ep(&sums, &bias, &requant),
+            &mut want,
+            Isa::Scalar,
+            Blocking::default(),
+        );
+        for bk in cands {
+            bk.validate().unwrap();
+            let pw = PackedWeights::pack_with(&wts, kk, cout, bk.nr);
+            for isa in Isa::available() {
+                for threads in [1usize, 2] {
+                    let mut out = vec![5i8; m * cout];
+                    gemm_fused_parallel(
+                        &FusedA::Implicit { x: &x, geom: g },
+                        m,
+                        &pw,
+                        &ep(&sums, &bias, &requant),
+                        &mut out,
+                        threads,
+                        isa,
+                        bk,
+                    );
+                    assert_eq!(
+                        out,
+                        want,
+                        "{} t={threads} {}",
+                        bk.label(),
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_residual_epilogue_matches_scalar_add_chain() {
+        use crate::quant::scale::{apply_multiplier, rounding_rshift};
+        let (m, k, n, zp) = (13usize, 18usize, 20usize, -4);
+        let a = prop::i8s(65, m * k);
+        let wts = prop::i8s(66, k * n);
+        let sums = col_sums(&wts, k, n);
+        let pw = PackedWeights::pack(&wts, k, n);
+        let bias: Vec<i32> = (0..n).map(|i| i as i32 - 7).collect();
+        let requant: Vec<(i32, i32)> = vec![(1 << 30, 5); n];
+        let resid = prop::i8s(67, m * n);
+        let (conv_zp, b_zp, add_zp) = (3, -2, 1);
+        let (ma, mb) = ((1 << 30, 2), ((1 << 29) + 1234, 1));
+        // oracle: plain fused conv, then the ops::add scalar formula
+        let base = FusedEpilogue {
+            a_zp: zp,
+            bsums: &sums,
+            bias: &bias,
+            requant: &requant,
+            shift: None,
+            out_zp: conv_zp,
+            clamp: (-100, 100),
+            residual: None,
+        };
+        let mut conv = vec![0i8; m * n];
+        gemm_fused(
+            &FusedA::Direct(&a),
+            0,
+            m,
+            &pw,
+            &base,
+            &mut conv,
+            Isa::Scalar,
+            Blocking::default(),
+        );
+        let want: Vec<i8> = conv
+            .iter()
+            .zip(&resid)
+            .map(|(&qa, &qb)| {
+                let va =
+                    apply_multiplier(((qa as i32) - conv_zp) << 20, ma.0, ma.1);
+                let vb =
+                    apply_multiplier(((qb as i32) - b_zp) << 20, mb.0, mb.1);
+                let v = rounding_rshift(va + vb, 20) + add_zp;
+                v.clamp(-128, 127) as i8
+            })
+            .collect();
+        let ep = FusedEpilogue {
+            a_zp: zp,
+            bsums: &sums,
+            bias: &bias,
+            requant: &requant,
+            shift: None,
+            out_zp: conv_zp,
+            clamp: (-100, 100),
+            residual: Some(FusedResidual {
+                b: &resid,
+                a_zp: conv_zp,
+                b_zp,
+                ma,
+                mb,
+                out_zp: add_zp,
+                clamp: (-128, 127),
+            }),
+        };
+        for isa in Isa::available() {
+            for threads in [1usize, 2, 8] {
+                let mut out = vec![99i8; m * n];
+                gemm_fused_parallel(
+                    &FusedA::Direct(&a),
+                    m,
+                    &pw,
+                    &ep,
+                    &mut out,
+                    threads,
+                    isa,
+                    Blocking::default(),
+                );
+                assert_eq!(out, want, "t={threads} {}", isa.name());
             }
         }
     }

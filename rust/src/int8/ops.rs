@@ -11,11 +11,13 @@
 //! `OpCtx::isa` selects the SIMD microkernel level (`int8::kernels`);
 //! every thread count and ISA produces bit-identical activations.
 
+use std::sync::OnceLock;
+
 use crate::quant::scale::{apply_multiplier, rounding_rshift, QParams};
 
 use super::engine::{AddParams, GapParams, QLayer};
 use super::gemm::gemm_i8_parallel;
-use super::im2col::im2col_into;
+use super::im2col::{im2col_into, PatchGeom};
 use super::kernels::{self, Isa};
 use super::qtensor::QTensor;
 
@@ -44,6 +46,45 @@ impl OpCtx {
     pub fn with_threads(threads: usize) -> Self {
         OpCtx { threads: threads.max(1), ..Default::default() }
     }
+
+    /// Staged-path scratch footprint in bytes, `(patches, acc)`.
+    /// Capacities only grow, so after any sequence of runs these are
+    /// high-water marks of the im2col patch matrix and the i32
+    /// accumulator buffer. Fused layers touch neither — the drop is
+    /// exactly what the `/stats` / `fat info --fatm` scratch census
+    /// makes observable.
+    pub fn scratch_bytes(&self) -> (usize, usize) {
+        (
+            self.patches.capacity(),
+            self.acc.capacity() * std::mem::size_of::<i32>(),
+        )
+    }
+}
+
+/// Process-wide `FAT_FUSED` gate, read once: `off|0|false` pins every
+/// layer to the staged im2col → GEMM → requant pipeline even when its
+/// fused bit is set — the escape hatch for A/B runs and regression
+/// triage. Unknown values abort (mirroring `FAT_ISA` / `FAT_TUNE`): a
+/// typo'd pin must not silently mean "fused".
+pub fn fused_enabled() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        match std::env::var("FAT_FUSED").ok().as_deref().map(str::trim) {
+            None | Some("") | Some("on") | Some("1") | Some("true") => true,
+            Some("off") | Some("0") | Some("false") => false,
+            Some(other) => panic!(
+                "FAT_FUSED: unknown value {other:?} \
+                 (accepted: on, 1, true, off, 0, false)"
+            ),
+        }
+    })
+}
+
+/// Whether `l` executes on the fused implicit-GEMM path: its
+/// tuner-assigned fused bit, a packed panel to drive the micro-tiles,
+/// and the process-wide [`fused_enabled`] gate.
+pub fn takes_fused_path(l: &QLayer) -> bool {
+    l.fused && l.packed.is_some() && fused_enabled()
 }
 
 /// Requantize an int32 accumulator row into the output domain.
@@ -266,7 +307,9 @@ fn store_epilogue(
     }
 }
 
-/// SAME-padded conv via im2col + int8 GEMM.
+/// SAME-padded conv via im2col + int8 GEMM, or the fused implicit-GEMM
+/// path ([`conv2d_fused`]) when the layer's tuner bit and the
+/// `FAT_FUSED` gate select it.
 pub fn conv2d(
     x: &QTensor,
     l: &QLayer,
@@ -276,29 +319,146 @@ pub fn conv2d(
     ctx: &mut OpCtx,
     out: Vec<i8>,
 ) -> QTensor {
+    if takes_fused_path(l) {
+        return conv2d_fused(x, l, k, stride, cout, ctx, out, None);
+    }
     let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let OpCtx { threads, isa, patches, acc } = ctx;
-    let (oh, ow) = im2col_into(
-        &x.data,
-        n,
-        h,
-        w,
-        c,
-        k,
-        stride,
-        x.qp.zero_point as i8,
-        patches,
-    );
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    // Zero-copy 1×1 stride-1: the patch matrix IS the NHWC input slab
+    // (SAME padding is zero, every patch one in-bounds pixel), so alias
+    // it as the GEMM A operand instead of memcpy-ing it into `patches`.
+    let a: &[i8] = if k == 1 && stride == 1 {
+        &x.data
+    } else {
+        let got = im2col_into(
+            &x.data,
+            n,
+            h,
+            w,
+            c,
+            k,
+            stride,
+            x.qp.zero_point as i8,
+            patches,
+        );
+        debug_assert_eq!(got, (oh, ow));
+        patches.as_slice()
+    };
     let m = n * oh * ow;
     let kk = k * k * c;
     acc.clear();
     acc.resize(m * cout, 0);
-    gemm_dispatch(
-        patches, x.qp.zero_point, l, m, kk, cout, acc, *threads, *isa,
-    );
+    gemm_dispatch(a, x.qp.zero_point, l, m, kk, cout, acc, *threads, *isa);
     let mut data = out;
     store_epilogue(acc, l, cout, *isa, &mut data);
     QTensor { shape: vec![n, oh, ow, cout], data, qp: l.out_qp }
+}
+
+/// Residual operand of a fused `conv → add` chain
+/// (`engine::run_quant_state` detects the chain): the add's second
+/// input is consumed inside the conv's epilogue tile.
+pub struct ConvResidual<'a> {
+    /// The add's other operand (same shape as the conv output).
+    pub b: &'a QTensor,
+    /// The add's rescale parameters.
+    pub params: &'a AddParams,
+    /// Whether the conv output is the add's *a* operand ([`add`]
+    /// argument order). Picks which multiplier pairs with which
+    /// operand; the rescaled i32 sum itself is commutative.
+    pub conv_is_a: bool,
+}
+
+/// Build the [`kernels::FusedEpilogue`] for layer `l`: same per-channel
+/// constants the staged `gemm_dispatch` + `store_epilogue` pair uses,
+/// applied per MR×NR register tile instead of per full buffer.
+fn fused_epilogue<'a>(
+    a_zp: i32,
+    l: &'a QLayer,
+    residual: Option<&ConvResidual<'a>>,
+) -> kernels::FusedEpilogue<'a> {
+    let residual = residual.map(|r| {
+        let p = r.params;
+        let (ma, mb) = if r.conv_is_a { (p.ma, p.mb) } else { (p.mb, p.ma) };
+        kernels::FusedResidual {
+            b: &r.b.data,
+            a_zp: l.out_qp.zero_point,
+            b_zp: r.b.qp.zero_point,
+            ma,
+            mb,
+            out_zp: p.out_qp.zero_point,
+            clamp: p.clamp,
+        }
+    });
+    kernels::FusedEpilogue {
+        a_zp,
+        bsums: &l.w_sums,
+        bias: &l.bias_q,
+        requant: &l.requant,
+        shift: l.requant_shift.as_deref(),
+        out_zp: l.out_qp.zero_point,
+        clamp: l.clamp,
+        residual,
+    }
+}
+
+/// Fused implicit-GEMM conv (kernels module docs, DESIGN.md §14): the
+/// micro-panel packer assembles patch rows on the fly from the NHWC
+/// input and the register-tile epilogue stores i8 directly — no patch
+/// matrix, no i32 accumulator buffer. With `residual`, the conv's sole
+/// `add` consumer runs inside the same epilogue and the output lands
+/// directly in the add's quantization domain.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fused(
+    x: &QTensor,
+    l: &QLayer,
+    k: usize,
+    stride: usize,
+    cout: usize,
+    ctx: &mut OpCtx,
+    out: Vec<i8>,
+    residual: Option<ConvResidual>,
+) -> QTensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let geom = PatchGeom::new(n, h, w, c, k, stride, x.qp.zero_point as i8);
+    let (oh, ow) = (geom.oh, geom.ow);
+    let m = geom.rows();
+    let pw = l.packed.as_ref().expect("fused layer without packed weights");
+    debug_assert_eq!(
+        (pw.k, pw.n),
+        (geom.cols(), cout),
+        "packed shape mismatch"
+    );
+    // Zero-copy 1×1 stride-1: the virtual patch matrix IS the input
+    // slab — feed it to the micro-tiles directly, no per-panel packing.
+    let a = if k == 1 && stride == 1 {
+        kernels::FusedA::Direct(&x.data)
+    } else {
+        kernels::FusedA::Implicit { x: &x.data, geom }
+    };
+    if let Some(r) = &residual {
+        debug_assert_eq!(
+            r.b.data.len(),
+            m * cout,
+            "residual operand shape mismatch"
+        );
+    }
+    let out_qp = residual.as_ref().map_or(l.out_qp, |r| r.params.out_qp);
+    let ep = fused_epilogue(x.qp.zero_point, l, residual.as_ref());
+    let mut data = out;
+    data.clear();
+    data.resize(m * cout, 0);
+    kernels::gemm_fused_parallel(
+        &a,
+        m,
+        pw,
+        &ep,
+        &mut data,
+        ctx.threads,
+        ctx.isa,
+        l.blocking,
+    );
+    QTensor { shape: vec![n, oh, ow, cout], data, qp: out_qp }
 }
 
 /// Route the conv/dense GEMM: exported layers carry weights prepacked
@@ -446,7 +606,9 @@ fn dw_rows(
     }
 }
 
-/// Dense layer over (n, cin) input.
+/// Dense layer over (n, cin) input. A dense layer is a 1×1 conv over a
+/// 1×1 "image", so the fused path feeds the input slab straight to the
+/// micro-tiles ([`kernels::FusedA::Direct`]) and skips the i32 buffer.
 pub fn dense(
     x: &QTensor,
     l: &QLayer,
@@ -456,6 +618,25 @@ pub fn dense(
 ) -> QTensor {
     let n = x.shape[0];
     let cin = x.shape[1];
+    if takes_fused_path(l) {
+        let pw = l.packed.as_ref().expect("fused layer without packed weights");
+        debug_assert_eq!((pw.k, pw.n), (cin, cout), "packed shape mismatch");
+        let ep = fused_epilogue(x.qp.zero_point, l, None);
+        let mut data = out;
+        data.clear();
+        data.resize(n * cout, 0);
+        kernels::gemm_fused_parallel(
+            &kernels::FusedA::Direct(&x.data),
+            n,
+            pw,
+            &ep,
+            &mut data,
+            ctx.threads,
+            ctx.isa,
+            l.blocking,
+        );
+        return QTensor { shape: vec![n, cout], data, qp: l.out_qp };
+    }
     ctx.acc.clear();
     ctx.acc.resize(n * cout, 0);
     gemm_dispatch(
@@ -554,6 +735,7 @@ mod tests {
             w_scales: vec![1.0],
             packed: None,
             blocking: Default::default(),
+            fused: false,
         }
     }
 
@@ -701,12 +883,12 @@ mod tests {
         packed.packed =
             Some(crate::int8::kernels::PackedWeights::pack(&w_q, 27, 5));
         let base =
-            conv2d(&x, &plain, 3, 1, &mut OpCtx::default(), Vec::new());
+            conv2d(&x, &plain, 3, 1, 5, &mut OpCtx::default(), Vec::new());
         for isa in Isa::available() {
             for t in [1usize, 2, 8] {
                 let mut ctx = OpCtx::with_threads(t);
                 ctx.isa = isa;
-                let y = conv2d(&x, &packed, 3, 1, &mut ctx, Vec::new());
+                let y = conv2d(&x, &packed, 3, 1, 5, &mut ctx, Vec::new());
                 assert_eq!(base.shape, y.shape, "t={t} {}", isa.name());
                 assert_eq!(base.data, y.data, "t={t} {}", isa.name());
             }
@@ -835,12 +1017,12 @@ mod tests {
         l.packed =
             Some(crate::int8::kernels::PackedWeights::pack(&w_q, 27, 5));
         let mut sctx = OpCtx { isa: Isa::Scalar, ..Default::default() };
-        let base = conv2d(&x, &l, 3, 1, &mut sctx, Vec::new());
+        let base = conv2d(&x, &l, 3, 1, 5, &mut sctx, Vec::new());
         for isa in Isa::available() {
             for t in [1usize, 2, 8] {
                 let mut ctx = OpCtx::with_threads(t);
                 ctx.isa = isa;
-                let y = conv2d(&x, &l, 3, 1, &mut ctx, Vec::new());
+                let y = conv2d(&x, &l, 3, 1, 5, &mut ctx, Vec::new());
                 assert_eq!(base.data, y.data, "t={t} {}", isa.name());
             }
         }
@@ -916,11 +1098,237 @@ mod tests {
         let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 3];
         let l = layer(w_q, sums, vec![1, 2, 3], req, out_qp, (-127, 127));
         let mut ctx = OpCtx::with_threads(2);
-        let first = conv2d(&x, &l, 3, 1, &mut ctx, Vec::new());
+        let first = conv2d(&x, &l, 3, 1, 3, &mut ctx, Vec::new());
         // second call reuses ctx scratch and a dirty recycled buffer
         let dirty = vec![77i8; 3];
-        let second = conv2d(&x, &l, 3, 1, &mut ctx, dirty);
+        let second = conv2d(&x, &l, 3, 1, 3, &mut ctx, dirty);
         assert_eq!(first.shape, second.shape);
         assert_eq!(first.data, second.data);
+    }
+
+    /// A packed 3×3 conv layer over a 2×6×6×3 input, with its staged
+    /// (`fused: false`) result as the oracle.
+    fn fused_fixture(
+        shift: bool,
+    ) -> (QTensor, QLayer, QTensor) {
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(71, 2 * 6 * 6 * 3, -1.0, 1.0);
+        let x = QTensor::quantize(vec![2, 6, 6, 3], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.6);
+        let w_q: Vec<i8> = crate::util::prop::f32s(72, 9 * 3 * 5, -0.6, 0.6)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 27, 5);
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 5];
+        let mut l = layer(
+            w_q.clone(),
+            sums,
+            vec![1, -2, 3, 0, 7],
+            req,
+            out_qp,
+            (-127, 127),
+        );
+        if shift {
+            l.requant_shift = Some(vec![7, 6, 8, 7, 5]);
+        }
+        l.packed =
+            Some(crate::int8::kernels::PackedWeights::pack(&w_q, 27, 5));
+        let base = conv2d(&x, &l, 3, 1, 5, &mut OpCtx::default(), Vec::new());
+        (x, l, base)
+    }
+
+    #[test]
+    fn fused_conv_matches_staged_across_isa_and_threads() {
+        // the fused implicit-GEMM path must be bit-exact with the staged
+        // im2col + GEMM + requant pipeline, both epilogues
+        for use_shift in [false, true] {
+            let (x, mut l, base) = fused_fixture(use_shift);
+            l.fused = true;
+            for isa in Isa::available() {
+                for t in [1usize, 2, 8] {
+                    let mut ctx = OpCtx::with_threads(t);
+                    ctx.isa = isa;
+                    let y = conv2d(&x, &l, 3, 1, 5, &mut ctx, Vec::new());
+                    assert_eq!(base.shape, y.shape);
+                    assert_eq!(
+                        base.data,
+                        y.data,
+                        "shift={use_shift} t={t} {}",
+                        isa.name()
+                    );
+                    // fused layers never touch the staged scratch
+                    if super::fused_enabled() {
+                        assert_eq!(ctx.scratch_bytes(), (0, 0), "t={t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_conv_reuses_stale_scratch_and_out() {
+        // mirror of conv_reuses_stale_scratch_and_out: a ctx whose
+        // scratch is dirty from a staged run, plus a dirty recycled
+        // output buffer, must not perturb the fused result
+        let (x, mut l, base) = fused_fixture(false);
+        l.fused = true;
+        let mut ctx = OpCtx::with_threads(2);
+        // dirty the staged scratch first
+        let staged = layer(
+            l.w_q.to_vec(),
+            l.w_sums.clone(),
+            l.bias_q.clone(),
+            l.requant.clone(),
+            l.out_qp,
+            l.clamp,
+        );
+        let _ = conv2d(&x, &staged, 3, 1, 5, &mut ctx, Vec::new());
+        assert!(ctx.scratch_bytes().0 > 0);
+        let first = conv2d(&x, &l, 3, 1, 5, &mut ctx, Vec::new());
+        let dirty = vec![77i8; 3];
+        let second = conv2d(&x, &l, 3, 1, 5, &mut ctx, dirty);
+        assert_eq!(base.data, first.data);
+        assert_eq!(first.shape, second.shape);
+        assert_eq!(first.data, second.data);
+    }
+
+    #[test]
+    fn pointwise_conv_aliases_input_no_patch_copy() {
+        // 1×1 stride-1 convs alias the input slab as the GEMM A operand
+        // on both paths: the patch scratch stays untouched, and staged
+        // and fused agree
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(83, 2 * 4 * 4 * 6, -1.0, 1.0);
+        let x = QTensor::quantize(vec![2, 4, 4, 6], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.5);
+        let w_q: Vec<i8> = crate::util::prop::f32s(84, 6 * 4, -0.5, 0.5)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 6, 4);
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 4];
+        let mut l =
+            layer(w_q.clone(), sums, vec![0, 1, -1, 2], req, out_qp, (-127, 127));
+        l.packed = Some(crate::int8::kernels::PackedWeights::pack(&w_q, 6, 4));
+        let mut sctx = OpCtx::default();
+        let staged = conv2d(&x, &l, 1, 1, 4, &mut sctx, Vec::new());
+        assert_eq!(
+            sctx.scratch_bytes().0,
+            0,
+            "staged 1×1 stride-1 must not copy patches"
+        );
+        l.fused = true;
+        let mut fctx = OpCtx::with_threads(2);
+        let fused = conv2d(&x, &l, 1, 1, 4, &mut fctx, Vec::new());
+        assert_eq!(staged.shape, fused.shape);
+        assert_eq!(staged.data, fused.data);
+        if super::fused_enabled() {
+            assert_eq!(fctx.scratch_bytes(), (0, 0));
+        }
+    }
+
+    #[test]
+    fn fused_dense_matches_staged() {
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(87, 7 * 10, -1.0, 1.0);
+        let x = QTensor::quantize(vec![7, 10], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.4);
+        let w_q: Vec<i8> = crate::util::prop::f32s(88, 10 * 6, -0.4, 0.4)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 10, 6);
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 6];
+        let mut l = layer(
+            w_q.clone(),
+            sums,
+            vec![4, -3, 0, 2, 1, -5],
+            req,
+            out_qp,
+            (-127, 127),
+        );
+        l.packed = Some(crate::int8::kernels::PackedWeights::pack(&w_q, 10, 6));
+        let base = dense(&x, &l, 6, &mut OpCtx::default(), Vec::new());
+        l.fused = true;
+        for isa in Isa::available() {
+            for t in [1usize, 2, 8] {
+                let mut ctx = OpCtx::with_threads(t);
+                ctx.isa = isa;
+                let y = dense(&x, &l, 6, &mut ctx, Vec::new());
+                assert_eq!(base.shape, y.shape);
+                assert_eq!(base.data, y.data, "t={t} {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_conv_residual_matches_conv_then_add() {
+        // the residual epilogue must reproduce conv2d followed by
+        // ops::add exactly, for both operand orders of the add
+        let in_qp = qp_sym(1.0);
+        let xs = crate::util::prop::f32s(85, 5 * 5 * 3, -1.0, 1.0);
+        let x = QTensor::quantize(vec![1, 5, 5, 3], &xs, in_qp);
+        let w_qp = QParams::symmetric_signed(0.6);
+        let w_q: Vec<i8> = crate::util::prop::f32s(86, 9 * 3 * 4, -0.6, 0.6)
+            .iter()
+            .map(|&v| w_qp.quantize(v) as i8)
+            .collect();
+        let sums = crate::int8::gemm::col_sums(&w_q, 27, 4);
+        let out_qp = qp_sym(2.0);
+        let req = vec![rq(in_qp.scale, w_qp.scale, out_qp.scale); 4];
+        let mut l =
+            layer(w_q.clone(), sums, vec![1, -1, 2, 0], req, out_qp, (-127, 127));
+        l.packed =
+            Some(crate::int8::kernels::PackedWeights::pack(&w_q, 27, 4));
+        l.fused = true;
+        let bq = qp_sym(2.0);
+        let bs = crate::util::prop::f32s(89, 5 * 5 * 4, -2.0, 2.0);
+        let b = QTensor::quantize(vec![1, 5, 5, 4], &bs, bq);
+        let qo = qp_sym(3.0);
+        let p = AddParams {
+            ma: quantize_multiplier(out_qp.scale as f64 / qo.scale as f64),
+            mb: quantize_multiplier(bq.scale as f64 / qo.scale as f64),
+            out_qp: qo,
+            clamp: (-127, 127),
+        };
+        // oracle: the two-step chain (conv may itself run fused here —
+        // it is bit-exact with staged by the tests above)
+        let conv = conv2d(&x, &l, 3, 1, 4, &mut OpCtx::default(), Vec::new());
+        let want_ab = add(&conv, &b, &p, Vec::new());
+        let want_ba = add(&b, &conv, &p, Vec::new());
+        for isa in Isa::available() {
+            for t in [1usize, 2, 8] {
+                let mut ctx = OpCtx::with_threads(t);
+                ctx.isa = isa;
+                let y = conv2d_fused(
+                    &x,
+                    &l,
+                    3,
+                    1,
+                    4,
+                    &mut ctx,
+                    Vec::new(),
+                    Some(ConvResidual { b: &b, params: &p, conv_is_a: true }),
+                );
+                assert_eq!(y.shape, want_ab.shape);
+                assert_eq!(y.data, want_ab.data, "ab t={t} {}", isa.name());
+                assert_eq!(y.qp.zero_point, want_ab.qp.zero_point);
+                let y2 = conv2d_fused(
+                    &x,
+                    &l,
+                    3,
+                    1,
+                    4,
+                    &mut ctx,
+                    Vec::new(),
+                    Some(ConvResidual { b: &b, params: &p, conv_is_a: false }),
+                );
+                assert_eq!(y2.data, want_ba.data, "ba t={t} {}", isa.name());
+            }
+        }
     }
 }

@@ -33,11 +33,18 @@ use super::engine::QNode;
 #[derive(Debug)]
 pub struct Arena<T = i8> {
     free: Vec<Vec<T>>,
+    /// Element capacity pooled right now (sum over `free`).
+    free_elems: usize,
+    /// High-water mark of `free_elems` — the peak activation-buffer
+    /// footprint this arena has held, for the scratch census
+    /// (`engine::ScratchStats`). Peak pooled capacity is the right
+    /// proxy: every buffer cycles through `put` between uses.
+    hi_elems: usize,
 }
 
 impl<T> Default for Arena<T> {
     fn default() -> Self {
-        Arena { free: Vec::new() }
+        Arena { free: Vec::new(), free_elems: 0, hi_elems: 0 }
     }
 }
 
@@ -45,12 +52,20 @@ impl<T> Arena<T> {
     /// Pop a recycled buffer (empty but with retained capacity), or a
     /// fresh one.
     pub fn take(&mut self) -> Vec<T> {
-        self.free.pop().unwrap_or_default()
+        match self.free.pop() {
+            Some(buf) => {
+                self.free_elems -= buf.capacity();
+                buf
+            }
+            None => Vec::new(),
+        }
     }
 
     /// Return a dead activation's buffer to the pool.
     pub fn put(&mut self, mut buf: Vec<T>) {
         buf.clear();
+        self.free_elems += buf.capacity();
+        self.hi_elems = self.hi_elems.max(self.free_elems);
         self.free.push(buf);
     }
 
@@ -71,6 +86,11 @@ impl<T> Arena<T> {
     /// Number of pooled buffers (diagnostics).
     pub fn pooled(&self) -> usize {
         self.free.len()
+    }
+
+    /// Peak pooled capacity in **bytes** (diagnostics; see `hi_elems`).
+    pub fn hi_bytes(&self) -> usize {
+        self.hi_elems * std::mem::size_of::<T>()
     }
 }
 

@@ -149,6 +149,20 @@ impl StatePool {
     fn resting(&self) -> usize {
         self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
     }
+
+    /// Element-wise max of the resting states' scratch peaks — the
+    /// worst per-worker footprint the pool has seen. In-flight states
+    /// are invisible until checked back in; resting peaks are the
+    /// steady-state answer `/stats` wants.
+    fn scratch(&self) -> super::engine::ScratchStats {
+        let mut agg = super::engine::ScratchStats::default();
+        for s in &self.stripes {
+            for st in s.lock().unwrap().iter() {
+                agg = agg.max(st.scratch_stats());
+            }
+        }
+        agg
+    }
 }
 
 struct EngineInner {
@@ -195,6 +209,10 @@ pub struct EngineStats {
     pub in_flight: u64,
     /// Inference calls ever started.
     pub requests: u64,
+    /// Peak per-worker scratch/arena bytes across pooled states
+    /// ([`super::engine::ScratchStats`]) — shows the fused path's
+    /// staged-scratch bypass as zeros.
+    pub scratch: super::engine::ScratchStats,
     /// Micro-batcher counters, when batching is enabled.
     pub batcher: Option<BatcherStats>,
 }
@@ -292,6 +310,7 @@ impl Int8Engine {
             pooled_states: self.inner.pool.resting(),
             in_flight: self.inner.in_flight.load(Ordering::Relaxed),
             requests: self.inner.requests.load(Ordering::Relaxed),
+            scratch: self.inner.pool.scratch(),
             batcher: self.inner.batcher.as_ref().map(|b| b.snapshot()),
         }
     }

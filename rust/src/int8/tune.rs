@@ -54,6 +54,11 @@ pub struct TuneOptions {
     /// other axis this is bit-exact — the int4 decode reproduces the
     /// identical i8 lanes — so only wall-clock moves.
     pub sweep_bits: bool,
+    /// Whether to time the fused implicit-GEMM path (register-tile
+    /// epilogue, `kernels::gemm_fused_parallel`) against the staged
+    /// GEMM + requant pipeline and stamp the per-layer fused bit from
+    /// the verdict. Bit-exact like every other axis.
+    pub sweep_fused: bool,
 }
 
 impl TuneOptions {
@@ -67,6 +72,7 @@ impl TuneOptions {
             budget: Duration::from_millis(4000),
             sweep_nr: true,
             sweep_bits: true,
+            sweep_fused: true,
         }
     }
 
@@ -81,6 +87,7 @@ impl TuneOptions {
             budget: Duration::from_millis(300),
             sweep_nr: false,
             sweep_bits: false,
+            sweep_fused: false,
         }
     }
 
@@ -139,6 +146,11 @@ pub struct TunedChoice {
     pub blocking: Blocking,
     /// Winning panel bit width (8, or 4 when the int4 sweep won).
     pub bits: usize,
+    /// Fused-path verdict at the winning schedule: `Some(true)` when
+    /// the fused implicit-GEMM beat the staged pipeline, `Some(false)`
+    /// when staged won, `None` when the sweep was off or the deadline
+    /// blew first (the layer keeps its current bit).
+    pub fused: Option<bool>,
     /// Best observed time of the default schedule, seconds/run.
     pub default_secs: f64,
     /// Best observed time of the winning schedule, seconds/run.
@@ -231,7 +243,68 @@ pub fn tune_gemm_bits(
     }
     let (blocking, bits, best_secs) =
         best.unwrap_or((Blocking::default(), bits, default_secs));
-    TunedChoice { blocking, bits, default_secs, best_secs }
+    // Fused-path verdict at the winning schedule: staged GEMM + requant
+    // epilogue vs the one-pass fused kernel, same reps/warmup protocol.
+    let mut fused = None;
+    if opts.sweep_fused && !deadline.is_some_and(|d| Instant::now() >= d) {
+        if let Some(pw) = packs.get(&(blocking.nr, bits)) {
+            let bias = vec![0i32; n];
+            let requant = vec![(1i32 << 30, 8i32); n];
+            let ep = super::kernels::FusedEpilogue {
+                a_zp: -3,
+                bsums: &bsums,
+                bias: &bias,
+                requant: &requant,
+                shift: None,
+                out_zp: 0,
+                clamp: (-127, 127),
+                residual: None,
+            };
+            let mut out8 = vec![0i8; m * n];
+            let (mut staged_t, mut fused_t) = (f64::INFINITY, f64::INFINITY);
+            for _ in 0..opts.iters.max(1) + 1 {
+                let t0 = Instant::now();
+                super::kernels::gemm_packed_parallel(
+                    &a,
+                    -3,
+                    pw,
+                    &bsums,
+                    m,
+                    &mut out,
+                    opts.threads,
+                    opts.isa,
+                    blocking,
+                );
+                // the staged path's third pass (the multiplier requant
+                // epilogue is scalar, matching `ops::requant_store`)
+                for (i, &v) in out.iter().enumerate() {
+                    let c = i % n;
+                    let (m0, s) = requant[c];
+                    let q = crate::quant::scale::apply_multiplier(
+                        v + bias[c],
+                        m0,
+                        s,
+                    );
+                    out8[i] = q.clamp(-127, 127) as i8;
+                }
+                staged_t = staged_t.min(t0.elapsed().as_secs_f64());
+                let t1 = Instant::now();
+                super::kernels::gemm_fused_parallel(
+                    &super::kernels::FusedA::Direct(&a),
+                    m,
+                    pw,
+                    &ep,
+                    &mut out8,
+                    opts.threads,
+                    opts.isa,
+                    blocking,
+                );
+                fused_t = fused_t.min(t1.elapsed().as_secs_f64());
+            }
+            fused = Some(fused_t < staged_t);
+        }
+    }
+    TunedChoice { blocking, bits, fused, default_secs, best_secs }
 }
 
 /// Summary of a whole-model sweep, for CLI/log reporting.
@@ -245,6 +318,8 @@ pub struct TuneReport {
     pub tuned: usize,
     /// Layers whose panel was repacked to a new strip width.
     pub repacked: usize,
+    /// Layers left on the fused implicit-GEMM path after the sweep.
+    pub fused: usize,
     /// Σ over shapes of the default schedule's time, seconds/run.
     pub default_secs: f64,
     /// Σ over shapes of the winning schedule's time, seconds/run.
@@ -303,6 +378,12 @@ pub fn tune_model(qm: &mut QModel, opts: &TuneOptions) -> TuneReport {
                 choice.bits,
             ));
             report.repacked += 1;
+        }
+        if let Some(f) = choice.fused {
+            l.fused = f;
+        }
+        if l.fused {
+            report.fused += 1;
         }
     }
     report.wall_secs = t0.elapsed().as_secs_f64();
@@ -412,5 +493,24 @@ mod tests {
         opts.iters = 1;
         let c = tune_gemm(&w, k, n, &opts, Some(Instant::now()));
         assert_eq!(c.blocking, Blocking::default());
+        assert_eq!(c.fused, None); // no verdict past the deadline
+    }
+
+    #[test]
+    fn fused_sweep_is_gated_and_reports_a_verdict() {
+        let (k, n) = (48, 24);
+        let w = prop::i8s(58, k * n);
+        let mut opts = TuneOptions::full();
+        opts.rows = 8;
+        opts.iters = 1;
+        opts.threads = 1;
+        let c = tune_gemm(&w, k, n, &opts, None);
+        assert!(c.fused.is_some());
+        // capped sweep: the fused axis is off, layers keep their bit
+        let mut capped = TuneOptions::capped();
+        capped.rows = 4;
+        capped.iters = 1;
+        let c2 = tune_gemm(&w, k, n, &capped, None);
+        assert_eq!(c2.fused, None);
     }
 }

@@ -106,6 +106,8 @@ Global: --artifacts DIR (default ./artifacts or $FAT_ARTIFACTS)
         to what the host supports)
         FAT_TUNE=off|capped|full (autotune GEMM blockings when building
         models in-process; default off — `fat export` tunes regardless)
+        FAT_FUSED=off (force the staged im2col conv path even on layers
+        whose fused implicit-GEMM bit is set; default on)
 
 Without an artifacts/ directory everything runs on the native FP32
 backend over the builtin model zoo (deterministic untrained weights):
@@ -666,7 +668,35 @@ fn cmd_info_fatm(path: &str) -> Result<()> {
     println!(
         "  weight panels: {int4} int4 layer(s), {int8} int8 layer(s)"
     );
+    let (fused, staged) = qm.fused_summary();
+    println!(
+        "  conv path: {fused} fused layer(s), {staged} staged layer(s)"
+    );
+    // Peak scratch of one forward pass: run the plan once on a zero
+    // input so the staged scratch and arena report real high-water
+    // marks (fused layers leave patches/acc at zero).
+    if let Some(shape) = input_shape(&qm.graph) {
+        let mut st = fat::int8::ExecState::with_threads(1);
+        let zeros = vec![0.0f32; shape.iter().product()];
+        let q = fat::int8::QTensor::quantize(shape, &zeros, qm.input_qp);
+        if qm.run_quant_state(q, &mut st).is_ok() {
+            let sc = st.scratch_stats();
+            println!(
+                "  peak scratch (1 worker): {} patch bytes, {} acc \
+                 bytes, {} arena bytes",
+                sc.patches_bytes, sc.acc_bytes, sc.arena_bytes
+            );
+        }
+    }
     Ok(())
+}
+
+/// Input-node shape of a graph (batch 1), for the scratch probe above.
+fn input_shape(g: &fat::model::GraphDef) -> Option<Vec<usize>> {
+    g.nodes
+        .iter()
+        .find(|n| n.op == fat::model::Op::Input)
+        .and_then(|n| n.input_shape.clone())
 }
 
 /// `fat perf-gate`: compare a fresh bench log against its committed

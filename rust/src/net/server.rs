@@ -624,11 +624,20 @@ fn stats_json(inner: &Inner) -> String {
         // layers run the shift-only epilogue vs fixed-point multipliers,
         // and how many serve nibble-packed int4 panels.
         let (shift, mul, int4, int8) = engine.model().epilogue_summary();
+        // Conv-path census (ISSUE-10: fused implicit GEMM) and the peak
+        // per-worker scratch footprint — fused layers bypass the staged
+        // patches/acc scratch, so the memory win is observable here.
+        let (fused, staged) = engine.model().fused_summary();
         let _ = write!(
             s,
             "],\"epilogues\":{{\"shift\":{shift},\"multiplier\":{mul}}},\
              \"weight_bits\":{{\"int4\":{int4},\"int8\":{int8}}},\
-             \"batcher\":"
+             \"conv_path\":{{\"fused\":{fused},\"staged\":{staged}}},\
+             \"scratch_bytes\":{{\"patches\":{},\"acc\":{},\"arena\":{}}},\
+             \"batcher\":",
+            st.scratch.patches_bytes,
+            st.scratch.acc_bytes,
+            st.scratch.arena_bytes,
         );
         match st.batcher {
             Some(b) => {

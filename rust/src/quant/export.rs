@@ -443,6 +443,7 @@ pub fn build_qmodel_with(
                         out_qp,
                         clamp: clamp_for(g, &n.id, out_qp),
                         w_scales,
+                        fused: packed.is_some(),
                         packed,
                         blocking: Default::default(),
                     }),

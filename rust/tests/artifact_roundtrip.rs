@@ -421,6 +421,17 @@ fn registry_serves_artifact_with_etag_over_live_server() {
     let wb = pm.get("weight_bits").expect("weight_bits census in /stats");
     assert_eq!(wb.usize_or("int4", 99), 0);
     assert!(wb.usize_or("int8", 0) > 0);
+    // ...and the conv-path + scratch census: every packed conv-like
+    // layer of a default export carries the fused bit (tiny_cnn's lone
+    // staged layer is the unpacked dwconv), and no request has run yet,
+    // so the per-worker scratch high-water marks are zero.
+    let cp = pm.get("conv_path").expect("conv_path census in /stats");
+    assert!(cp.usize_or("fused", 0) > 0);
+    assert_eq!(cp.usize_or("staged", 99), 1);
+    let sb = pm.get("scratch_bytes").expect("scratch census in /stats");
+    assert_eq!(sb.usize_or("patches", 99), 0);
+    assert_eq!(sb.usize_or("acc", 99), 0);
+    assert_eq!(sb.usize_or("arena", 99), 0);
 
     // The artifact-loaded model answers inference over the wire,
     // bit-exact with the in-memory reference interpreter.

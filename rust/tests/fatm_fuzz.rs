@@ -20,7 +20,12 @@
 //!    claimed shift table on a multiplier model (and the reverse), and
 //!    a shift table disagreeing with the requant pairs — the pow2
 //!    cross-check and `from_packed_bits` geometry must reject all of
-//!    them before the shift/int4 epilogues run.
+//!    them before the shift/int4 epilogues run,
+//! 6. hostile PLAN-v4 fused bits (digest-fixed): non-boolean flag
+//!    values, a fused bit claimed on a layer with no packed panel (the
+//!    micro-tiles have nothing to run on), and the v3 back-compat
+//!    default (fused follows the packed record) — all checked before
+//!    `conv2d_fused` can dereference a missing panel.
 
 use std::collections::BTreeMap;
 
@@ -394,6 +399,106 @@ fn hostile_shift_records_are_rejected() {
         artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
         "dropped shift flag on a pow2 model accepted"
     );
+}
+
+#[test]
+fn hostile_fused_flags_are_rejected() {
+    // The v4 layer record is `blocking quad, has_shift, fused, packed
+    // present, ...`; on this multiplier model every conv-like layer is
+    // packed, so the per-layer prefix is the distinctive
+    // `[128, 64, 4, 1, 0, 1]` (default quad, no shift table, fused on).
+    let bytes = artifact_bytes();
+    {
+        let mut probe = bytes.clone();
+        assert!(
+            patch_u32_seq(
+                &mut probe,
+                &[128, 64, 4, 1, 0, 1],
+                &[128, 64, 4, 1, 0, 1]
+            ) >= 2,
+            "fused-flag needle not found — did the layout move?"
+        );
+    }
+    // 1) Non-boolean flag values: the reader takes exactly {0, 1}.
+    for flag in [2u32, 255, u32::MAX] {
+        let mut m = bytes.clone();
+        assert!(
+            patch_u32_seq(
+                &mut m,
+                &[128, 64, 4, 1, 0, 1],
+                &[128, 64, 4, 1, 0, flag]
+            ) >= 2
+        );
+        fix_digest(&mut m);
+        assert!(
+            artifact::load_from_bytes(m, LoadOptions::default()).is_err(),
+            "fused flag {flag} accepted"
+        );
+    }
+    // 2) fused=1 with packed present=0 — a well-formed record (present=0
+    // writes no panel geometry) whose fused bit has no panel to run on.
+    // Serialize it for real so the *semantic* cross-check is what
+    // rejects it, not a misaligned parse.
+    let mut qm = model();
+    let mut stripped = false;
+    for p in &mut qm.plan.params {
+        if let fat::int8::engine::QNode::Layer(l) = p {
+            l.packed = None;
+            l.fused = true;
+            stripped = true;
+            break;
+        }
+    }
+    assert!(stripped, "no conv-like layer in the fuzz model");
+    let contradicted = artifact::to_bytes(&qm, fat::int8::Isa::Scalar);
+    let err = artifact::load_from_bytes(contradicted, LoadOptions::default())
+        .expect_err("fused bit without a packed panel accepted");
+    assert!(
+        format!("{err:#}").contains("without a packed panel"),
+        "wrong rejection: {err:#}"
+    );
+    // 3) Flipping a fused bit off (digest-fixed) is legal — staged
+    // execution of a packed layer — and the mutant must still run.
+    let mut m = bytes.clone();
+    assert!(
+        patch_u32_seq(&mut m, &[128, 64, 4, 1, 0, 1], &[128, 64, 4, 1, 0, 0])
+            >= 2
+    );
+    fix_digest(&mut m);
+    let (mutant, _) = artifact::load_from_bytes(m, LoadOptions::default())
+        .expect("staged-bit mutant rejected");
+    let x: Vec<f32> = (0..6 * 6 * 2).map(|i| (i % 7) as f32 / 7.0).collect();
+    let q = QTensor::quantize(vec![1, 6, 6, 2], &x, mutant.input_qp);
+    mutant.run_quant(q).expect("staged-bit mutant fails to run");
+}
+
+#[test]
+fn plan_v3_bytes_default_the_fused_bit_from_the_packed_record() {
+    // Back-compat: a genuine v3 artifact (no fused bit on the wire)
+    // must load with fused following the packed record — on for packed
+    // layers — and execute bit-exactly against the v4 form.
+    let qm = model();
+    let v3 = artifact::to_bytes_versioned(&qm, fat::int8::Isa::Scalar, 3);
+    let v4 = artifact::to_bytes(&qm, fat::int8::Isa::Scalar);
+    let (m3, _) = artifact::load_from_bytes(v3, LoadOptions::default())
+        .expect("pristine v3 artifact loads");
+    let (m4, _) = artifact::load_from_bytes(v4, LoadOptions::default())
+        .expect("pristine v4 artifact loads");
+    for p in &m3.plan.params {
+        if let fat::int8::engine::QNode::Layer(l) = p {
+            assert_eq!(
+                l.fused,
+                l.packed.is_some(),
+                "v3 fused default out of sync with the packed record"
+            );
+        }
+    }
+    let x: Vec<f32> = (0..6 * 6 * 2).map(|i| (i % 5) as f32 / 5.0).collect();
+    let q3 = QTensor::quantize(vec![1, 6, 6, 2], &x, m3.input_qp);
+    let q4 = QTensor::quantize(vec![1, 6, 6, 2], &x, m4.input_qp);
+    let y3 = m3.run_quant(q3).unwrap();
+    let y4 = m4.run_quant(q4).unwrap();
+    assert_eq!(y3.data, y4.data, "v3 and v4 loads disagree");
 }
 
 #[test]

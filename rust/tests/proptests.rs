@@ -416,6 +416,149 @@ fn prop_im2col_patches_contain_input_values_or_zp() {
 }
 
 #[test]
+fn prop_fused_conv_matches_reference() {
+    // ISSUE-10 acceptance property: the fused implicit-GEMM conv (no
+    // materialized patch matrix, no i32 accumulator round-trip) must be
+    // bit-exact with BOTH the staged im2col path and a scalar
+    // `gemm_ref` + epilogue oracle — across random SAME-padded shapes ×
+    // stride {1, 2} × epilogue {multiplier, shift} × weight width
+    // {int8, int4} × every runtime-detected ISA × threads {1, 2, 8}.
+    use fat::int8::QLayer;
+    prop::for_cases(97, 6, |case| {
+        let n = 1 + prop::usize_in(case, 0, 0, 2);
+        let h = prop::usize_in(case, 1, 3, 9);
+        let w = prop::usize_in(case, 2, 3, 9);
+        let c = prop::usize_in(case, 3, 1, 5);
+        let cout = prop::usize_in(case, 4, 1, 20);
+        let k = [1usize, 3, 5][prop::usize_in(case, 5, 0, 3)];
+        let x_qp = to_i8_domain(QParams::asymmetric(-1.0, 2.0));
+        let x = QTensor {
+            shape: vec![n, h, w, c],
+            data: prop::i8s(case + 100, n * h * w * c),
+            qp: x_qp,
+        };
+        let kk = k * k * c;
+        let out_qp = to_i8_domain(QParams::asymmetric(-2.0, 4.0));
+        let clamp = (-128i32, 127i32);
+        let bias: Vec<i32> = prop::f32s(case + 300, cout, -300.0, 300.0)
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let requant: Vec<(i32, i32)> = (0..cout)
+            .map(|ci| {
+                quantize_multiplier(
+                    (2.0f64)
+                        .powi(-(prop::usize_in(case, 40 + ci as u64, 4, 12)
+                            as i32)),
+                )
+            })
+            .collect();
+        let shift: Vec<i32> = (0..cout)
+            .map(|ci| prop::usize_in(case, 80 + ci as u64, 4, 12) as i32)
+            .collect();
+        for bits in [8usize, 4] {
+            let w_q: Vec<i8> = if bits == 4 {
+                prop::i8s(case + 200, kk * cout)
+                    .iter()
+                    .map(|v| v % 8)
+                    .collect()
+            } else {
+                prop::i8s(case + 200, kk * cout)
+            };
+            let sums = gemm::col_sums(&w_q, kk, cout);
+            let (nr, pw) = if bits == 4 {
+                (16, PackedWeights::pack_bits(&w_q, kk, cout, 16, 4))
+            } else {
+                let bk = Blocking::default();
+                (bk.nr, PackedWeights::pack(&w_q, kk, cout))
+            };
+            let bk = Blocking { nr, ..Blocking::default() };
+            for stride in [1usize, 2] {
+                // scalar oracle: explicit im2col + naive GEMM
+                let (patches, oh, ow) = im2col::im2col_i8(
+                    &x.data,
+                    n,
+                    h,
+                    w,
+                    c,
+                    k,
+                    stride,
+                    x_qp.zero_point as i8,
+                );
+                let m = n * oh * ow;
+                let acc_ref = gemm::gemm_ref(
+                    &patches,
+                    x_qp.zero_point,
+                    &w_q,
+                    m,
+                    kk,
+                    cout,
+                );
+                for use_shift in [false, true] {
+                    let want: Vec<i8> = acc_ref
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| {
+                            let ci = i % cout;
+                            let y = if use_shift {
+                                rounding_rshift(v + bias[ci], shift[ci])
+                            } else {
+                                let (m0, s) = requant[ci];
+                                apply_multiplier(v + bias[ci], m0, s)
+                            };
+                            (y + out_qp.zero_point).clamp(clamp.0, clamp.1)
+                                as i8
+                        })
+                        .collect();
+                    let mk_layer = |fused: bool| QLayer {
+                        w_q: w_q.clone().into(),
+                        w_sums: sums.clone(),
+                        bias_q: bias.clone(),
+                        requant: requant.clone(),
+                        requant_shift: use_shift.then(|| shift.clone()),
+                        out_qp,
+                        clamp,
+                        w_scales: vec![1.0],
+                        packed: Some(pw.clone()),
+                        blocking: bk,
+                        fused,
+                    };
+                    let staged_l = mk_layer(false);
+                    let fused_l = mk_layer(true);
+                    for isa in Isa::available() {
+                        for threads in [1usize, 2, 8] {
+                            let mut ctx = ops::OpCtx {
+                                threads,
+                                isa,
+                                ..Default::default()
+                            };
+                            let staged = ops::conv2d(
+                                &x, &staged_l, k, stride, cout, &mut ctx,
+                                Vec::new(),
+                            );
+                            let fused = ops::conv2d_fused(
+                                &x, &fused_l, k, stride, cout, &mut ctx,
+                                Vec::new(), None,
+                            );
+                            let tag = format!(
+                                "case {case}: ({n},{h},{w},{c})→{cout} \
+                                 k={k} s={stride} bits={bits} \
+                                 shift={use_shift} t={threads} isa={}",
+                                isa.name()
+                            );
+                            assert_eq!(staged.shape, vec![n, oh, ow, cout]);
+                            assert_eq!(staged.data, want, "staged {tag}");
+                            assert_eq!(fused.shape, staged.shape, "{tag}");
+                            assert_eq!(fused.data, want, "fused {tag}");
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_quantize_dequantize_within_one_step_under_i8_domain() {
     prop::for_cases(37, 100, |case| {
         let t = 0.2 + prop::f32s(case, 1, 0.0, 5.0)[0];
